@@ -1,0 +1,16 @@
+//! PJRT runtime call-overhead probe (§Perf: runtime layer).
+use std::time::Instant;
+use fshmem::runtime::PjrtRuntime;
+fn main() {
+    let rt = PjrtRuntime::load_subset("artifacts", &["matmul_128", "matmul_512"]).unwrap();
+    let a = vec![0.5f32; 128*128]; let b = vec![0.25f32; 128*128];
+    let t0 = Instant::now();
+    for _ in 0..200 { std::hint::black_box(rt.execute_f32("matmul_128", &[&a, &b]).unwrap()); }
+    let per = t0.elapsed() / 200;
+    println!("matmul_128 via PJRT: {:?}/call ({:.2} GFLOP/s)", per, 2.0*128f64.powi(3)/per.as_secs_f64()/1e9);
+    let a = vec![0.5f32; 512*512]; let b = vec![0.25f32; 512*512];
+    let t0 = Instant::now();
+    for _ in 0..20 { std::hint::black_box(rt.execute_f32("matmul_512", &[&a, &b]).unwrap()); }
+    let per = t0.elapsed() / 20;
+    println!("matmul_512 via PJRT: {:?}/call ({:.2} GFLOP/s)", per, 2.0*512f64.powi(3)/per.as_secs_f64()/1e9);
+}

@@ -1,0 +1,39 @@
+//! Perf probe: DES event throughput on the hot paths (used by the §Perf pass).
+use std::time::Instant;
+use fshmem::config::{Config, Numerics};
+use fshmem::Fshmem;
+
+fn main() {
+    // Hot path 1: packet streaming (2 MiB PUT, 128 B packets = 16k pkts).
+    let cfg = Config::two_node_ring().with_packet(128).with_numerics(Numerics::TimingOnly);
+    let mut f = Fshmem::new(cfg);
+    let t0 = Instant::now();
+    let mut total_events = 0u64;
+    for _ in 0..8 {
+        let h = f.put_from_mem(0, 0x20_0000, 2 << 20, f.global_addr(1, 0));
+        f.wait(h);
+        f.gc_ops();
+    }
+    total_events += f.events_processed();
+    let dt = t0.elapsed();
+    println!("16 MiB @128B pkts: {:?}, {} events, {:.2} M events/s, {:.0} MB/s sim throughput",
+        dt, total_events, total_events as f64 / dt.as_secs_f64() / 1e6,
+        16.0 / dt.as_secs_f64());
+
+    // Hot path 2: case study pair.
+    let cfg = Config::two_node_ring().with_numerics(Numerics::TimingOnly);
+    let t0 = Instant::now();
+    let r = fshmem::workloads::matmul::run_case(&cfg, &fshmem::workloads::matmul::MatmulCase::paper(1024)).unwrap();
+    println!("matmul-1024 pair: {:?} (speedup {:.2})", t0.elapsed(), r.speedup);
+
+    // Hot path 3: tiny ops (latency path) — per-op wallclock.
+    let mut f = Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly));
+    let t0 = Instant::now();
+    for i in 0..10_000 {
+        let h = f.put(0, f.global_addr(1, (i % 64) * 1024), &[0u8; 64]);
+        f.wait(h);
+        if i % 1000 == 0 { f.gc_ops(); }
+    }
+    let dt = t0.elapsed();
+    println!("10k small puts: {:?} ({:.1} us/op wallclock)", dt, dt.as_micros() as f64 / 10_000.0);
+}

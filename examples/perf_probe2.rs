@@ -1,0 +1,29 @@
+//! Finer perf instrumentation for the small-op path.
+use std::time::Instant;
+use fshmem::config::{Config, Numerics};
+use fshmem::Fshmem;
+
+fn main() {
+    let mut f = Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly));
+    let e0 = f.events_processed();
+    let t0 = Instant::now();
+    for i in 0..10_000u64 {
+        let h = f.put(0, f.global_addr(1, (i % 64) * 1024), &[0u8; 64]);
+        f.wait(h);
+    }
+    let dt = t0.elapsed();
+    let ev = f.events_processed() - e0;
+    println!("10k puts: {:?}, {} events ({:.1}/op), {:.0} ns/event",
+        dt, ev, ev as f64 / 10_000.0, dt.as_nanos() as f64 / ev as f64);
+
+    // Issue-only (no wait): measures injection + op issue cost.
+    let mut f = Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly));
+    let t0 = Instant::now();
+    let hs: Vec<_> = (0..10_000u64).map(|i| f.put(0, f.global_addr(1, (i % 64) * 1024), &[0u8; 64])).collect();
+    let t_issue = t0.elapsed();
+    let t0 = Instant::now();
+    f.wait_all(&hs);
+    let t_run = t0.elapsed();
+    println!("issue 10k: {:?} ({:.0} ns/op); drain: {:?} ({} events, {:.0} ns/event)",
+        t_issue, t_issue.as_nanos() as f64 / 1e4, t_run, f.events_processed(), t_run.as_nanos() as f64 / f.events_processed() as f64);
+}

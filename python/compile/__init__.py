@@ -1,0 +1,4 @@
+"""Build-time-only package: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Imported only during `make artifacts` and pytest; never at request time.
+"""

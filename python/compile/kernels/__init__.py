@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the DLA compute core (+ pure-jnp oracles)."""
+
+from compile.kernels.conv import conv2d
+from compile.kernels.matmul import matmul, matmul_acc
+from compile.kernels.ref import conv2d_ref, matmul_acc_ref, matmul_ref
+
+__all__ = [
+    "conv2d",
+    "conv2d_ref",
+    "matmul",
+    "matmul_acc",
+    "matmul_acc_ref",
+    "matmul_ref",
+]

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: direct stride-1 SAME convolution.
+
+The Intel DLA maps convolution onto its 1-D systolic array by streaming
+overlapping input windows against stationary weight kernels. The TPU/Pallas
+adaptation keeps the (padded) feature map resident in VMEM, tiles the grid
+over *output-channel groups* -- the same axis the paper's Fig. 6(b) splits
+across the two FPGA nodes -- and expresses the kxk window as k*k shifted
+(H, W, Cin) x (Cin, bc) contractions that feed the MXU.
+
+The out-channel grid order means output channels become valid group by
+group, which is the availability order the ART mechanism exploits to
+overlap transfers of finished channel groups with remaining compute.
+
+Lowered with ``interpret=True`` (see matmul.py for why).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, h: int, w: int):
+    """One output-channel group: direct conv as k*k shifted contractions.
+
+    x_ref: (H + kh - 1, W + kw - 1, Cin)  -- SAME-padded input, full map
+    w_ref: (kh, kw, Cin, bc)              -- this group's weights
+    o_ref: (H, W, bc)
+    """
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = x_ref[dy : dy + h, dx : dx + w, :]
+            # (H, W, Cin) . (Cin, bc) -> (H, W, bc)
+            acc += lax.dot_general(
+                patch,
+                w_ref[dy, dx],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_cout: int | None = None,
+) -> jax.Array:
+    """Stride-1 SAME conv: ``x`` (H, W, Cin), ``w`` (kh, kw, Cin, Cout).
+
+    ``block_cout`` is the output-channel group size per grid cell (defaults
+    to the largest divisor of Cout that is <= 16 -- a DLA-column-sized
+    group). Cout must tile by it.
+    """
+    h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    if cin != cin2:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    if kh % 2 == 0 or kw % 2 == 0:
+        raise ValueError("SAME padding requires odd kernel sizes")
+    if block_cout is not None:
+        bc = block_cout
+    else:
+        bc = max(d for d in range(1, min(cout, 16) + 1) if cout % d == 0)
+    if cout % bc:
+        raise ValueError(f"Cout={cout} must tile by block_cout={bc}")
+
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((ph, ph), (pw, pw), (0, 0)))
+    hp, wp = h + 2 * ph, wd + 2 * pw
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, kh=kh, kw=kw, h=h, w=wd),
+        grid=(cout // bc,),
+        in_specs=[
+            pl.BlockSpec((hp, wp, cin), lambda j: (0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, bc), lambda j: (0, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((h, wd, bc), lambda j: (0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((h, wd, cout), jnp.float32),
+        interpret=True,
+    )(xp, w)
+    return out.astype(x.dtype)

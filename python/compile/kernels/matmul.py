@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: block-tiled systolic-style matmul.
+
+TPU adaptation of the Intel DLA's 1-D systolic array (16x8 PEs, each a
+16-wide dot-product unit). The DLA keeps weights stationary in stream
+buffers and streams activations from DDR; the Pallas analogue is a
+block-tiled matmul whose BlockSpec schedule stages (bm, bk) / (bk, bn)
+tiles through VMEM while an f32 accumulator is carried across the K grid
+dimension. The K-innermost grid order is the "longer accumulation" the
+paper exploits: output tiles become valid one (i, j) at a time, which is
+exactly the property the ART mechanism (dla/art.rs on the Rust side)
+uses to overlap PUTs of finished tiles with the remaining compute.
+
+All kernels here are lowered with ``interpret=True``: the CPU PJRT client
+(xla_extension 0.5.1) cannot execute Mosaic custom-calls, so interpret
+mode is the correctness path and TPU efficiency is estimated analytically
+(see DESIGN.md section "Perf").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. 128 matches both the MXU systolic dimension and
+# the sub-matrix granularity of the paper's case study (a 256x256 problem
+# splits into 128x128 blocks across two nodes).
+DEFAULT_BLOCK = 128
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """Grid cell body: o[i,j] (+)= x[i,k] @ w[k,j], K innermost."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _mm_acc_kernel(c_ref, x_ref, w_ref, o_ref, *, n_k: int):
+    """Like ``_mm_kernel`` but seeds the accumulator with an existing
+    partial sum ``c`` (the Fig. 6(a) remote partial-sum accumulate)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...].astype(o_ref.dtype)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _check_tiling(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> None:
+    if m % bm or k % bk or n % bn:
+        raise ValueError(
+            f"matmul dims ({m},{k},{n}) must tile by blocks ({bm},{bk},{bn})"
+        )
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """``(M, K) @ (K, N) -> (M, N)`` via the tiled Pallas kernel.
+
+    Accumulates in f32 regardless of input dtype (DLA PEs accumulate wide),
+    casts back to the input dtype at the end.
+    """
+    (m, k), (k2, n) = x.shape, w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    bm, bk, bn = min(block_m, m), min(block_k, k), min(block_n, n)
+    _check_tiling(m, k, n, bm, bk, bn)
+    n_k = k // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return out.astype(x.dtype)
+
+
+def matmul_acc(
+    c: jax.Array,
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """``c + x @ w`` with the accumulator seeded from ``c``.
+
+    This is the hot op of the Fig. 6(a) parallel matmul: each node
+    accumulates its local product onto the partial sum PUT by the peer.
+    """
+    (m, k), (k2, n) = x.shape, w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if c.shape != (m, n):
+        raise ValueError(f"accumulator shape {c.shape} != ({m},{n})")
+    bm, bk, bn = min(block_m, m), min(block_k, k), min(block_n, n)
+    _check_tiling(m, k, n, bm, bk, bn)
+    n_k = k // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_acc_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(c, x, w)
+    return out.astype(c.dtype)

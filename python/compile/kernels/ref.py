@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracles for the DLA kernels.
+
+These are the correctness ground truth for the Pallas kernels in
+``matmul.py`` / ``conv.py``: pytest (and hypothesis sweeps) assert
+``assert_allclose(kernel(...), ref(...))`` at build time, before the
+lowered HLO ever reaches the Rust runtime.
+
+Conventions (match the Intel-DLA-style compute core the paper customizes):
+  * matmul: row-major ``(M, K) @ (K, N) -> (M, N)``, f32 accumulation.
+  * conv:   NHWC activations, HWIO weights, stride 1, SAME padding, so a
+    64x64 feature map stays 64x64 -- which is what makes the Fig. 6(b)
+    out-channel split/concat a pure partition of the output tensor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w`` with f32 accumulation, cast back to ``x.dtype``."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def matmul_acc_ref(c: jax.Array, x: jax.Array, w: jax.Array) -> jax.Array:
+    """``c + x @ w`` -- the Fig. 6(a) partial-sum accumulate step."""
+    out = c.astype(jnp.float32) + jnp.dot(
+        x, w, preferred_element_type=jnp.float32
+    )
+    return out.astype(c.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Stride-1 SAME conv. ``x``: (H, W, Cin); ``w``: (kh, kw, Cin, Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x[None],  # add batch dim
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
+    )[0]
+    return out.astype(x.dtype)

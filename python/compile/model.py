@@ -1,0 +1,92 @@
+"""L2: the DLA compute graph, built on the L1 Pallas kernels.
+
+This module is the build-time-Python half of the DLA compute core: the
+functions here are what ``aot.py`` lowers (once, at `make artifacts`) to
+HLO text that the Rust runtime loads and executes via PJRT. Nothing in
+this package is ever imported on the request path.
+
+Exposed graph functions mirror the operations the paper's case study
+issues to the DLA through GASNet active messages:
+
+  * ``dla_matmul``      -- one sub-matrix product (Fig. 6a inner step)
+  * ``dla_matmul_acc``  -- product accumulated onto a peer's partial sum
+  * ``dla_conv``        -- one out-channel-group convolution (Fig. 6b)
+
+plus ART-tiled variants that return outputs split into the N-result
+chunks the Automatic Result Transfer mechanism ships mid-computation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels
+
+
+def _block_for(n: int) -> int:
+    """Tile size for an (n, n, n) product.
+
+    256 for large problems: still MXU-shaped (multiple of 128) and well
+    inside VMEM (3 x 256^2 x 4 B = 768 KiB), but it quarters the grid-loop
+    trip count — which under interpret-mode lowering also quarters the
+    full-tensor dynamic-update-slice traffic the CPU runtime pays per
+    grid step (measured 4x on matmul_512; see EXPERIMENTS.md §Perf).
+    """
+    return 256 if n % 256 == 0 else kernels.matmul.__globals__["DEFAULT_BLOCK"]
+
+
+def dla_matmul(x: jax.Array, w: jax.Array) -> tuple[jax.Array]:
+    """Sub-matrix product on the DLA: ``(x @ w,)``."""
+    b = _block_for(x.shape[0])
+    return (kernels.matmul(x, w, block_m=b, block_k=b, block_n=b),)
+
+
+def dla_matmul_acc(
+    c: jax.Array, x: jax.Array, w: jax.Array
+) -> tuple[jax.Array]:
+    """Partial-sum accumulate: ``(c + x @ w,)``."""
+    b = _block_for(x.shape[0])
+    return (kernels.matmul_acc(c, x, w, block_m=b, block_k=b, block_n=b),)
+
+
+def dla_conv(x: jax.Array, w: jax.Array) -> tuple[jax.Array]:
+    """Out-channel-group convolution: ``(conv2d(x, w),)``."""
+    return (kernels.conv2d(x, w),)
+
+
+def dla_matmul_art(
+    x: jax.Array, w: jax.Array, *, n_chunks: int
+) -> tuple[jax.Array, ...]:
+    """Matmul with the output pre-split into ART transfer chunks.
+
+    The DLA's ART mechanism issues a PUT every N valid results instead of
+    one big PUT at the end. Row-block chunks match the K-innermost tile
+    completion order of the systolic kernel, so chunk i is genuinely
+    complete before chunk i+1 starts draining.
+    """
+    m = x.shape[0]
+    if m % n_chunks:
+        raise ValueError(f"M={m} must split into {n_chunks} ART chunks")
+    out = kernels.matmul(x, w)
+    rows = m // n_chunks
+    return tuple(
+        jax.lax.slice_in_dim(out, i * rows, (i + 1) * rows, axis=0)
+        for i in range(n_chunks)
+    )
+
+
+def dla_conv_art(
+    x: jax.Array, w: jax.Array, *, n_chunks: int
+) -> tuple[jax.Array, ...]:
+    """Conv with output split into ART chunks along the out-channel axis
+    (the axis Fig. 6(b) partitions, and the kernel's grid-major order)."""
+    cout = w.shape[-1]
+    if cout % n_chunks:
+        raise ValueError(f"Cout={cout} must split into {n_chunks} chunks")
+    out = kernels.conv2d(x, w)
+    ch = cout // n_chunks
+    return tuple(
+        jax.lax.slice_in_dim(out, i * ch, (i + 1) * ch, axis=2)
+        for i in range(n_chunks)
+    )

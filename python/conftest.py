@@ -1,0 +1,7 @@
+"""Make the build-time `compile` package importable when pytest runs from
+the repository root (`pytest python/tests/`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,0 +1,114 @@
+"""Pallas conv kernel vs pure-jnp (lax.conv) oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import kernels
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+class TestConvBasic:
+    def test_1x1_is_channel_matmul(self):
+        x = _rand((8, 8, 4), seed=1)
+        w = _rand((1, 1, 4, 8), seed=2)
+        out = kernels.conv2d(x, w, block_cout=8)
+        ref = jnp.einsum("hwc,cd->hwd", x, w[0, 0])
+        assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+    def test_3x3_matches_ref(self):
+        x = _rand((16, 16, 8), seed=3)
+        w = _rand((3, 3, 8, 16), seed=4)
+        assert_allclose(
+            np.asarray(kernels.conv2d(x, w)),
+            np.asarray(kernels.conv2d_ref(x, w)),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_5x5_matches_ref(self):
+        x = _rand((12, 12, 6), seed=5)
+        w = _rand((5, 5, 6, 4), seed=6)
+        assert_allclose(
+            np.asarray(kernels.conv2d(x, w, block_cout=4)),
+            np.asarray(kernels.conv2d_ref(x, w)),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_7x7_matches_ref(self):
+        x = _rand((10, 10, 4), seed=7)
+        w = _rand((7, 7, 4, 4), seed=8)
+        assert_allclose(
+            np.asarray(kernels.conv2d(x, w, block_cout=4)),
+            np.asarray(kernels.conv2d_ref(x, w)),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_impulse_recovers_kernel(self):
+        # Delta input at the center reproduces the (flipped-index) kernel.
+        x = jnp.zeros((9, 9, 1), jnp.float32).at[4, 4, 0].set(1.0)
+        w = _rand((3, 3, 1, 1), seed=9)
+        out = kernels.conv2d(x, w, block_cout=1)
+        # SAME cross-correlation: out[4-dy+1, 4-dx+1] = w[dy, dx], i.e. the
+        # 3x3 patch around the impulse is the kernel flipped on both axes.
+        patch = out[3:6, 3:6, 0]
+        assert_allclose(
+            np.asarray(patch), np.asarray(w[::-1, ::-1, 0, 0]), rtol=1e-6
+        )
+
+    def test_channel_mismatch_raises(self):
+        with pytest.raises(ValueError, match="channel mismatch"):
+            kernels.conv2d(_rand((8, 8, 4)), _rand((3, 3, 8, 4)))
+
+    def test_even_kernel_raises(self):
+        with pytest.raises(ValueError, match="odd kernel"):
+            kernels.conv2d(_rand((8, 8, 4)), _rand((2, 2, 4, 4)))
+
+    def test_cout_tiling_raises(self):
+        with pytest.raises(ValueError, match="must tile"):
+            kernels.conv2d(_rand((8, 8, 4)), _rand((3, 3, 4, 6)), block_cout=4)
+
+    def test_multi_group_grid(self):
+        # Cout spanning several grid cells exercises the out-channel tiling.
+        x = _rand((8, 8, 4), seed=10)
+        w = _rand((3, 3, 4, 32), seed=11)
+        out = kernels.conv2d(x, w, block_cout=8)
+        assert_allclose(
+            np.asarray(out),
+            np.asarray(kernels.conv2d_ref(x, w)),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    k=st.sampled_from([1, 3, 5, 7]),
+    hw=st.integers(4, 12),
+    cin=st.sampled_from([1, 2, 4, 8]),
+    groups=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_hypothesis(k, hw, cin, groups, seed):
+    """Property: direct Pallas conv == lax.conv for odd k, any channels."""
+    hw = max(hw, k)  # keep the map at least kernel-sized
+    bc = 4
+    x = _rand((hw, hw, cin), seed=seed)
+    w = _rand((k, k, cin, bc * groups), seed=seed + 1)
+    out = kernels.conv2d(x, w, block_cout=bc)
+    assert_allclose(
+        np.asarray(out),
+        np.asarray(kernels.conv2d_ref(x, w)),
+        rtol=1e-3,
+        atol=1e-4,
+    )

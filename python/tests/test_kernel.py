@@ -1,0 +1,153 @@
+"""Pallas matmul kernel vs pure-jnp oracle — the core correctness signal."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import kernels
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+class TestMatmulBasic:
+    def test_identity(self):
+        x = _rand((64, 64))
+        eye = jnp.eye(64, dtype=jnp.float32)
+        assert_allclose(
+            np.asarray(kernels.matmul(x, eye, block_m=32, block_k=32, block_n=32)),
+            np.asarray(x),
+            rtol=1e-6,
+        )
+
+    def test_zeros(self):
+        x = jnp.zeros((32, 32), jnp.float32)
+        w = _rand((32, 32))
+        out = kernels.matmul(x, w, block_m=32, block_k=32, block_n=32)
+        assert not np.any(np.asarray(out))
+
+    def test_matches_ref_square(self):
+        x, w = _rand((128, 128), seed=1), _rand((128, 128), seed=2)
+        assert_allclose(
+            np.asarray(kernels.matmul(x, w)),
+            np.asarray(kernels.matmul_ref(x, w)),
+            rtol=1e-4, atol=1e-5,
+        )
+
+    def test_matches_ref_rect(self):
+        x, w = _rand((64, 96), seed=3), _rand((96, 160), seed=4)
+        out = kernels.matmul(x, w, block_m=32, block_k=32, block_n=32)
+        assert_allclose(
+            np.asarray(out), np.asarray(kernels.matmul_ref(x, w)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_multiblock_k_accumulation(self):
+        # K spanning several grid steps exercises the carried accumulator.
+        x, w = _rand((32, 256), seed=5), _rand((256, 32), seed=6)
+        out = kernels.matmul(x, w, block_m=32, block_k=32, block_n=32)
+        assert_allclose(
+            np.asarray(out), np.asarray(kernels.matmul_ref(x, w)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_bf16_inputs_accumulate_f32(self):
+        x = _rand((64, 64), jnp.bfloat16, seed=7)
+        w = _rand((64, 64), jnp.bfloat16, seed=8)
+        out = kernels.matmul(x, w, block_m=32, block_k=32, block_n=32)
+        assert out.dtype == jnp.bfloat16
+        ref = kernels.matmul_ref(x, w)
+        assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=2e-2
+        )
+
+    def test_contraction_mismatch_raises(self):
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            kernels.matmul(_rand((32, 32)), _rand((64, 32)))
+
+    def test_bad_tiling_raises(self):
+        with pytest.raises(ValueError, match="must tile"):
+            kernels.matmul(_rand((48, 48)), _rand((48, 48)), block_m=32)
+
+
+class TestMatmulAcc:
+    def test_matches_ref(self):
+        c = _rand((64, 64), seed=10)
+        x, w = _rand((64, 64), seed=11), _rand((64, 64), seed=12)
+        out = kernels.matmul_acc(c, x, w, block_m=32, block_k=32, block_n=32)
+        assert_allclose(
+            np.asarray(out),
+            np.asarray(kernels.matmul_acc_ref(c, x, w)),
+            rtol=1e-4, atol=1e-5,
+        )
+
+    def test_zero_seed_equals_plain_matmul(self):
+        x, w = _rand((64, 64), seed=13), _rand((64, 64), seed=14)
+        z = jnp.zeros((64, 64), jnp.float32)
+        a = kernels.matmul_acc(z, x, w, block_m=32, block_k=32, block_n=32)
+        b = kernels.matmul(x, w, block_m=32, block_k=32, block_n=32)
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_two_step_partial_sum_identity(self):
+        # Fig. 6(a): (x @ w0w1) split over K == acc of two half products.
+        x = _rand((32, 64), seed=15)
+        w = _rand((64, 32), seed=16)
+        p0 = kernels.matmul(
+            x[:, :32], w[:32], block_m=32, block_k=32, block_n=32
+        )
+        out = kernels.matmul_acc(
+            p0, x[:, 32:], w[32:], block_m=32, block_k=32, block_n=32
+        )
+        assert_allclose(
+            np.asarray(out), np.asarray(kernels.matmul_ref(x, w)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_acc_shape_mismatch_raises(self):
+        with pytest.raises(ValueError, match="accumulator shape"):
+            kernels.matmul_acc(_rand((32, 64)), _rand((32, 32)), _rand((32, 32)))
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    m=st.integers(1, 4),
+    k=st.integers(1, 4),
+    n=st.integers(1, 4),
+    bm=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, bm, seed):
+    """Property: kernel == oracle for any block-tileable shape."""
+    x = _rand((m * bm, k * bm), seed=seed)
+    w = _rand((k * bm, n * bm), seed=seed + 1)
+    out = kernels.matmul(x, w, block_m=bm, block_k=bm, block_n=bm)
+    assert_allclose(
+        np.asarray(out), np.asarray(kernels.matmul_ref(x, w)), rtol=1e-4, atol=1e-5
+    )
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    k=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_dtypes(dtype, k, seed):
+    dt = jnp.dtype(dtype)
+    x = _rand((32, 32 * k), dt, seed=seed)
+    w = _rand((32 * k, 32), dt, seed=seed + 1)
+    out = kernels.matmul(x, w, block_m=32, block_k=32, block_n=32)
+    assert out.dtype == dt
+    ref = kernels.matmul_ref(x, w)
+    tol = 1e-3 if dtype == "float32" else 3e-2
+    assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref, np.float32),
+        rtol=tol,
+        atol=1e-5,
+    )

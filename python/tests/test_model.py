@@ -1,0 +1,128 @@
+"""L2 model-level tests: the Fig. 6 partition identities and ART tiling.
+
+These verify the *algorithmic* content of the paper's case study at the
+JAX level: splitting work across two nodes and recombining (partial-sum
+exchange for matmul, out-channel concat for conv) is numerically identical
+to the single-node computation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import kernels, model
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestModelWrappers:
+    def test_dla_matmul_tuple(self):
+        x, w = _rand((128, 128), 0), _rand((128, 128), 1)
+        (out,) = model.dla_matmul(x, w)
+        assert_allclose(
+            np.asarray(out), np.asarray(kernels.matmul_ref(x, w)), rtol=1e-5
+        )
+
+    def test_dla_matmul_acc_tuple(self):
+        c = _rand((128, 128), 2)
+        x, w = _rand((128, 128), 3), _rand((128, 128), 4)
+        (out,) = model.dla_matmul_acc(c, x, w)
+        assert_allclose(
+            np.asarray(out),
+            np.asarray(kernels.matmul_acc_ref(c, x, w)),
+            rtol=1e-5,
+        )
+
+    def test_dla_conv_tuple(self):
+        x, w = _rand((16, 16, 8), 5), _rand((3, 3, 8, 16), 6)
+        (out,) = model.dla_conv(x, w)
+        assert_allclose(
+            np.asarray(out),
+            np.asarray(kernels.conv2d_ref(x, w)),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+
+class TestFig6aMatmulPartition:
+    """M @ N with both matrices 2x2-block-partitioned across two nodes.
+
+    Node p holds row-block p of M and the result; partial sums are
+    exchanged between nodes after each sub-product (via gasnet_put / ART
+    in the full system; here we check the arithmetic identity).
+    """
+
+    def test_two_node_partial_sum_exchange(self):
+        n = 256
+        h = n // 2
+        m_full, n_full = _rand((n, n), 7), _rand((n, n), 8)
+        ref = kernels.matmul_ref(m_full, n_full)
+
+        m_blk = [[m_full[:h, :h], m_full[:h, h:]], [m_full[h:, :h], m_full[h:, h:]]]
+        n_blk = [[n_full[:h, :h], n_full[:h, h:]], [n_full[h:, :h], n_full[h:, h:]]]
+
+        # Iteration 1: node p computes M[p,p] @ N[p,q] for all q, then
+        # "PUTs" the partial sums; iteration 2 accumulates the local part.
+        out = [[None, None], [None, None]]
+        for p in range(2):
+            for q in range(2):
+                partial = kernels.matmul(m_blk[p][p], n_blk[p][q])  # node p
+                out[p][q] = kernels.matmul_acc(  # node p after peer PUT
+                    partial, m_blk[p][1 - p], n_blk[1 - p][q]
+                )
+        got = jnp.block(out)
+        assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+class TestFig6bConvPartition:
+    """Weight kernels split into two groups; each node convolves its group
+    and the results are concatenated along the out-channel axis."""
+
+    @pytest.mark.parametrize("k,cin,cout", [(3, 8, 16), (5, 6, 8), (7, 4, 8)])
+    def test_two_node_kernel_split_concat(self, k, cin, cout):
+        x = _rand((16, 16, cin), 9)
+        w = _rand((k, k, cin, cout), 10)
+        ref = kernels.conv2d_ref(x, w)
+        half = cout // 2
+        bc = min(4, half)
+        out0 = kernels.conv2d(x, w[..., :half], block_cout=bc)  # node 0
+        out1 = kernels.conv2d(x, w[..., half:], block_cout=bc)  # node 1
+        got = jnp.concatenate([out0, out1], axis=2)  # sync + concat
+        assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+class TestArtTiling:
+    def test_matmul_art_chunks_reassemble(self):
+        x, w = _rand((128, 128), 11), _rand((128, 128), 12)
+        chunks = model.dla_matmul_art(x, w, n_chunks=4)
+        assert len(chunks) == 4
+        assert all(c.shape == (32, 128) for c in chunks)
+        got = jnp.concatenate(chunks, axis=0)
+        assert_allclose(
+            np.asarray(got), np.asarray(kernels.matmul_ref(x, w)), rtol=1e-5
+        )
+
+    def test_conv_art_chunks_reassemble(self):
+        x, w = _rand((16, 16, 8), 13), _rand((3, 3, 8, 16), 14)
+        chunks = model.dla_conv_art(x, w, n_chunks=4)
+        assert len(chunks) == 4
+        assert all(c.shape == (16, 16, 4) for c in chunks)
+        got = jnp.concatenate(chunks, axis=2)
+        assert_allclose(
+            np.asarray(got),
+            np.asarray(kernels.conv2d_ref(x, w)),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_art_bad_split_raises(self):
+        x, w = _rand((128, 128)), _rand((128, 128))
+        with pytest.raises(ValueError, match="ART chunks"):
+            model.dla_matmul_art(x, w, n_chunks=3)
+        xc, wc = _rand((8, 8, 4)), _rand((3, 3, 4, 8))
+        with pytest.raises(ValueError, match="chunks"):
+            model.dla_conv_art(xc, wc, n_chunks=3)

@@ -1,0 +1,131 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  * **ART on/off** — §III-B's motivation: without ART the result
+//!    transfer serializes after compute (plus host intervention).
+//!  * **Port striping** — the 2-node ring's two QSFP+ cables; ART loses
+//!    half its hiding capacity on one port.
+//!  * **Packet size** — the Fig. 5 cliff as an end-to-end effect on the
+//!    case study, not just on raw bandwidth.
+//!  * **Handler atomicity cost** — GET-heavy traffic serializes on the
+//!    hardware-atomic handler engine.
+
+use fshmem::api::Fshmem;
+use fshmem::config::{Config, Numerics};
+use fshmem::dla::{ArtConfig, DlaJob, DlaOp};
+use fshmem::memory::GlobalAddr;
+use fshmem::sim::SimTime;
+use fshmem::util::bench::Bencher;
+use fshmem::workloads::matmul::{run_case, MatmulCase};
+
+fn cfg() -> Config {
+    Config::two_node_ring().with_numerics(Numerics::TimingOnly)
+}
+
+/// One DLA job on node 0 whose result must land on node 1: with ART
+/// (streamed during compute) vs without (host PUT after completion).
+fn result_transfer_time(use_art: bool) -> SimTime {
+    let mut f = Fshmem::new(cfg());
+    let n = 512u32;
+    let out_bytes = (n as u64 * n as u64) * 2; // fp16
+    let t0 = f.now();
+    let job = DlaJob {
+        op: DlaOp::Matmul {
+            m: n,
+            k: n,
+            n,
+            a: GlobalAddr::new(0, 0),
+            b: GlobalAddr::new(0, 0x100000),
+            y: GlobalAddr::new(0, 0x200000),
+            accumulate: false,
+        },
+        art: use_art.then_some(ArtConfig {
+            every_n_results: 8192,
+            dst: GlobalAddr::new(1, 0x300000),
+        }),
+        notify: None,
+    };
+    let h = f.compute(0, 0, job);
+    f.wait(h);
+    if use_art {
+        for (_, a) in f.take_art_ops() {
+            f.wait(a);
+        }
+    } else {
+        // The paper's pre-ART flow: host sees the ack, then PUTs the
+        // result (extra host intervention + serialized transfer).
+        let h = f.put_from_mem(0, 0x200000, out_bytes, f.global_addr(1, 0x300000));
+        f.wait(h);
+    }
+    f.now().since(t0)
+}
+
+fn main() {
+    let b = Bencher::from_env();
+
+    // --- ART ablation ----------------------------------------------------
+    let with_art = result_transfer_time(true);
+    let without = result_transfer_time(false);
+    println!(
+        "ablation/ART: compute+deliver 512^2 result: with ART {:.1} us, without {:.1} us ({:.2}x worse without)",
+        with_art.as_us(),
+        without.as_us(),
+        without.as_ps() as f64 / with_art.as_ps() as f64
+    );
+    assert!(without > with_art, "ART must help");
+    b.run("ablate/art_on", || result_transfer_time(true));
+    b.run("ablate/art_off", || result_transfer_time(false));
+
+    // --- packet-size ablation on the case study ---------------------------
+    println!("\nablation/packet size on matmul-512 two-node speedup:");
+    for packet in [128usize, 512, 1024] {
+        let c = cfg().with_packet(packet);
+        let r = run_case(&c, &MatmulCase::paper(512)).unwrap();
+        println!("  packet {packet:>5} B: speedup {:.2}x", r.speedup);
+    }
+    let s128 = run_case(&cfg().with_packet(128), &MatmulCase::paper(512))
+        .unwrap()
+        .speedup;
+    let s1024 = run_case(&cfg().with_packet(1024), &MatmulCase::paper(512))
+        .unwrap()
+        .speedup;
+    assert!(s1024 >= s128, "larger packets must not hurt the case study");
+
+    // --- ART chunk-size ablation ------------------------------------------
+    println!("\nablation/ART chunk size (N results per PUT), matmul-256:");
+    for every in [1024u32, 4096, 16384, u32::MAX] {
+        let r = run_case(
+            &cfg(),
+            &MatmulCase {
+                n: 256,
+                art_every: every,
+                check: false,
+            },
+        )
+        .unwrap();
+        let label = if every == u32::MAX {
+            "whole-result".to_string()
+        } else {
+            format!("{every:>6}")
+        };
+        println!("  N = {label}: speedup {:.2}x", r.speedup);
+    }
+
+    // --- link reliability ablation ------------------------------------------
+    println!("\nablation/link loss (ARQ retransmission), 1 MiB PUT bandwidth:");
+    let mut prev = f64::INFINITY;
+    for permille in [0u32, 10, 50, 100, 200] {
+        let c = cfg().with_link_loss_permille(permille);
+        let mut f = fshmem::api::Fshmem::new(c);
+        let bw = fshmem::workloads::sweep::measure_put(&mut f, 1 << 20);
+        println!(
+            "  loss {:>4.1}%: {bw:>7.1} MB/s ({} drops, {} retransmits)",
+            permille as f64 / 10.0,
+            f.counters().get("pkts_dropped"),
+            f.counters().get("pkts_retransmitted"),
+        );
+        assert!(bw <= prev * 1.001, "loss must not increase goodput");
+        prev = bw;
+    }
+
+    println!("\nablations: OK");
+}

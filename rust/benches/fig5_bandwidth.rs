@@ -1,0 +1,38 @@
+//! Bench: regenerate Fig. 5 (communication bandwidth vs transfer size for
+//! packet sizes 128/256/512/1024 B, PUT and GET, with prior-work lines).
+//!
+//! `cargo bench --bench fig5_bandwidth` — prints the figure summary, the
+//! full CSV to target/fig5.csv, and wall-clock timings of the simulation
+//! sweep itself.
+
+use fshmem::reports;
+use fshmem::util::bench::Bencher;
+use fshmem::workloads::sweep;
+
+fn main() {
+    let b = Bencher::from_env();
+
+    // Time one full packet-size series (the unit of sweep work).
+    b.run("fig5/series_1024B_19_sizes", || {
+        sweep::bandwidth_series(1024)
+    });
+    b.run("fig5/series_128B_19_sizes", || sweep::bandwidth_series(128));
+
+    // Produce the actual figure.
+    let series = sweep::fig5_all();
+    println!("\n{}", reports::fig5_summary(&series));
+    let csv = reports::fig5_csv(&series);
+    std::fs::create_dir_all("target").ok();
+    std::fs::write("target/fig5.csv", &csv).expect("write CSV");
+    println!("full curves -> target/fig5.csv ({} rows)", csv.lines().count() - 1);
+
+    // Paper-shape assertions (same bands as the test suite; a bench run
+    // that drifts off the paper fails loudly).
+    let s1024 = series.iter().find(|s| s.packet_size == 1024).unwrap();
+    let s128 = series.iter().find(|s| s.packet_size == 128).unwrap();
+    assert!((3600.0..3900.0).contains(&s1024.peak_put()), "peak off paper");
+    assert!(s128.peak_put() < 0.75 * s1024.peak_put(), "128B cliff missing");
+    let p2k = s1024.at(2048).unwrap();
+    assert!(p2k.get_mb_s < p2k.put_mb_s, "GET<PUT at 2KB missing");
+    println!("fig5 shape checks: OK");
+}

@@ -1,0 +1,47 @@
+//! Bench: regenerate Fig. 7 (case-study performance: parallel matmul and
+//! conv, 1 vs 2 nodes, GOPS and speedups). Timing-only numerics so the
+//! bench measures simulator throughput; numerics-verified runs live in
+//! examples/e2e_two_node_dla.rs and the runtime_e2e tests.
+
+use fshmem::config::{Config, Numerics};
+use fshmem::util::bench::Bencher;
+use fshmem::workloads::{conv, matmul};
+use fshmem::reports;
+
+fn main() {
+    let cfg = Config::two_node_ring().with_numerics(Numerics::TimingOnly);
+    let b = Bencher::from_env();
+
+    b.run("fig7/matmul_256_pair", || {
+        matmul::run_case(&cfg, &matmul::MatmulCase::paper(256)).unwrap()
+    });
+    b.run("fig7/conv3_pair", || {
+        conv::run_case(&cfg, &conv::ConvCase::paper(3)).unwrap()
+    });
+
+    let mms: Vec<_> = [256usize, 512, 1024]
+        .iter()
+        .map(|&n| matmul::run_case(&cfg, &matmul::MatmulCase::paper(n)).unwrap())
+        .collect();
+    let cvs: Vec<_> = [3usize, 5, 7]
+        .iter()
+        .map(|&k| conv::run_case(&cfg, &conv::ConvCase::paper(k)).unwrap())
+        .collect();
+    println!("\n{}", reports::fig7(&mms, &cvs));
+
+    // Paper-shape assertions.
+    let avg_mm = mms.iter().map(|m| m.speedup).sum::<f64>() / 3.0;
+    let avg_cv = cvs.iter().map(|c| c.speedup).sum::<f64>() / 3.0;
+    assert!(avg_mm > 1.6, "matmul avg speedup {avg_mm} (paper 1.94)");
+    assert!(avg_cv > 1.9, "conv avg speedup {avg_cv} (paper 1.98)");
+    assert!(
+        mms.windows(2).all(|w| w[1].speedup >= w[0].speedup - 0.02),
+        "matmul speedup must grow with size"
+    );
+    assert!(cvs.iter().all(|c| c.speedup < 2.0), "conv never reaches 2x");
+    assert!(
+        mms[0].single_gops > 900.0,
+        "single node must be near 95.6% of 1024 GOPS"
+    );
+    println!("fig7 shape checks: OK");
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Table II (FPGA resource utilization) from the
+//! component-level resource model, and show how the GASNet core scales
+//! with HSSI port count (paper: "its logic size will increase with the
+//! number of available HSSI ports").
+
+use fshmem::resource;
+use fshmem::util::bench::Bencher;
+
+fn main() {
+    let b = Bencher::from_env();
+    b.run("table2/render", || resource::render_table2(2));
+
+    println!("\n{}", resource::render_table2(2));
+
+    println!("GASNet core scaling with HSSI ports:");
+    for ports in [1u32, 2, 4, 8] {
+        let u = resource::total(&resource::gasnet_core(ports));
+        let dev = resource::stratix10_sx2800();
+        println!(
+            "  {ports} ports: {:>8.1} ALMs ({:.2}%), {:>2} BRAM",
+            u.luts,
+            100.0 * u.luts / dev.luts as f64,
+            u.brams
+        );
+    }
+
+    let g = resource::total(&resource::gasnet_core(2));
+    assert!((g.luts - 1995.3).abs() < 1.0 && g.brams == 17 && g.dsps == 0);
+    let d = resource::total(&resource::dla(16, 8));
+    assert!((d.luts - 102_276.0).abs() < 300.0 && d.brams == 8 && d.dsps == 1409);
+    println!("\ntable2 checks vs paper: OK");
+}

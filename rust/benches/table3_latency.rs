@@ -1,0 +1,25 @@
+//! Bench: regenerate Table III (PUT/GET latency, FSHMEM vs prior works).
+
+use fshmem::reports;
+use fshmem::util::bench::Bencher;
+use fshmem::workloads::sweep;
+
+fn main() {
+    let b = Bencher::from_env();
+    let lat = b
+        .run("table3/measure_latencies", sweep::measure_latencies)
+        .iters; // timing of the measurement harness itself
+    let _ = lat;
+
+    let l = sweep::measure_latencies();
+    println!("\n{}", reports::table3(&l));
+
+    // Paper-shape assertions (±~15% bands around Table III).
+    assert!((0.17..0.25).contains(&l.put_short_us), "put short {}", l.put_short_us);
+    assert!((0.38..0.52).contains(&l.get_short_us), "get short {}", l.get_short_us);
+    assert!((0.30..0.42).contains(&l.put_long_us), "put long {}", l.put_long_us);
+    assert!((0.50..0.68).contains(&l.get_long_us), "get long {}", l.get_long_us);
+    assert!(l.get_short_us > l.put_short_us, "GET is two-way");
+    assert!(l.get_long_us > l.put_long_us);
+    println!("table3 shape checks: OK");
+}

@@ -1,0 +1,241 @@
+//! System configuration: fabric, GASNet core, DLA, numerics.
+//!
+//! Configs come from presets (`two_node_ring`, …) or from an INI-style
+//! `key = value` file (`Config::from_file` — the offline registry has no
+//! TOML crate; the format is documented in `configs/default.cfg`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dla::DlaParams;
+use crate::fabric::{LinkParams, Topology};
+use crate::gasnet::GasnetTiming;
+use crate::memory::DmaModel;
+
+/// How DLA jobs produce numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Numerics {
+    /// Timing-only (benchmark sweeps — memory still moves, compute
+    /// outputs are not produced).
+    TimingOnly,
+    /// Pure-Rust reference backend.
+    Software,
+    /// AOT Pallas artifacts through PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub topology: Topology,
+    /// Payload bytes per packet (the paper sweeps 128/256/512/1024).
+    pub packet_payload: usize,
+    pub link: LinkParams,
+    pub dma: DmaModel,
+    pub timing: GasnetTiming,
+    pub dla: DlaParams,
+    /// Shared (globally addressable) segment bytes per node.
+    pub segment_bytes: u64,
+    /// Private memory bytes per node.
+    pub private_bytes: u64,
+    pub numerics: Numerics,
+    /// Path to the AOT artifact directory (for `Numerics::Pjrt`).
+    pub artifacts_dir: String,
+    /// Per-packet loss probability in permille (0 = clean links). Lost
+    /// packets are recovered by link-level retransmission (ARQ model) —
+    /// failure-injection for robustness tests and the reliability
+    /// ablation.
+    pub link_loss_permille: u32,
+    pub seed: u64,
+}
+
+impl Config {
+    /// The paper's prototype: two D5005 PACs in a ring over both QSFP+
+    /// ports, 1024 B packets.
+    pub fn two_node_ring() -> Self {
+        Config {
+            topology: Topology::Ring(2),
+            packet_payload: 1024,
+            link: LinkParams::qsfp_d5005(),
+            dma: DmaModel::ddr4_d5005(),
+            timing: GasnetTiming::d5005(),
+            dla: DlaParams::d5005_16x8(),
+            // 64 MiB simulated segment is plenty for every experiment and
+            // keeps host RAM modest (the real card has 32 GiB).
+            segment_bytes: 64 << 20,
+            private_bytes: 1 << 20,
+            numerics: Numerics::Software,
+            artifacts_dir: "artifacts".to_string(),
+            link_loss_permille: 0,
+            seed: 0xF5113,
+        }
+    }
+
+    pub fn ring(n: u32) -> Self {
+        Config {
+            topology: Topology::Ring(n),
+            ..Self::two_node_ring()
+        }
+    }
+
+    pub fn mesh(w: u32, h: u32) -> Self {
+        Config {
+            topology: Topology::Mesh2D { w, h },
+            ..Self::two_node_ring()
+        }
+    }
+
+    pub fn with_packet(mut self, payload: usize) -> Self {
+        self.packet_payload = payload;
+        self
+    }
+
+    pub fn with_numerics(mut self, n: Numerics) -> Self {
+        self.numerics = n;
+        self
+    }
+
+    pub fn with_link_loss_permille(mut self, permille: u32) -> Self {
+        self.link_loss_permille = permille;
+        self
+    }
+
+    /// Parse an INI-style config file. Unknown keys error (catches typos);
+    /// missing keys keep preset defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_str_cfg(&text)
+    }
+
+    pub fn from_str_cfg(text: &str) -> Result<Self> {
+        let mut cfg = Self::two_node_ring();
+        let mut topo_kind = "ring".to_string();
+        let (mut nodes, mut mesh_w, mut mesh_h) = (2u32, 0u32, 0u32);
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got {raw:?}", lineno + 1);
+            };
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "topology" => topo_kind = v.to_string(),
+                "nodes" => nodes = v.parse().context("nodes")?,
+                "mesh_w" => mesh_w = v.parse().context("mesh_w")?,
+                "mesh_h" => mesh_h = v.parse().context("mesh_h")?,
+                "packet_payload" => {
+                    cfg.packet_payload = v.parse().context("packet_payload")?
+                }
+                "segment_mb" => {
+                    cfg.segment_bytes = v.parse::<u64>().context("segment_mb")? << 20
+                }
+                "private_kb" => {
+                    cfg.private_bytes = v.parse::<u64>().context("private_kb")? << 10
+                }
+                "numerics" => {
+                    cfg.numerics = match v {
+                        "timing" => Numerics::TimingOnly,
+                        "software" => Numerics::Software,
+                        "pjrt" => Numerics::Pjrt,
+                        _ => bail!("numerics must be timing|software|pjrt"),
+                    }
+                }
+                "artifacts_dir" => cfg.artifacts_dir = v.to_string(),
+                "link_loss_permille" => {
+                    cfg.link_loss_permille =
+                        v.parse().context("link_loss_permille")?
+                }
+                "seed" => cfg.seed = v.parse().context("seed")?,
+                _ => bail!("line {}: unknown key {k:?}", lineno + 1),
+            }
+        }
+        cfg.topology = match topo_kind.as_str() {
+            "ring" => Topology::Ring(nodes),
+            "mesh" => Topology::Mesh2D {
+                w: mesh_w,
+                h: mesh_h,
+            },
+            "torus" => Topology::Torus2D {
+                w: mesh_w,
+                h: mesh_h,
+            },
+            _ => bail!("topology must be ring|mesh|torus"),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.topology.nodes() == 0 {
+            bail!("fabric needs at least one node");
+        }
+        if self.packet_payload == 0 || self.packet_payload > 8192 {
+            bail!("packet_payload must be in (0, 8192]");
+        }
+        if self.segment_bytes < 4096 {
+            bail!("segment too small");
+        }
+        if !self.dma.outruns(self.link.clock, self.link.width_bytes) {
+            bail!("model assumes DDR bandwidth exceeds link bandwidth");
+        }
+        if self.link_loss_permille >= 1000 {
+            bail!("link_loss_permille must be < 1000");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_is_valid() {
+        Config::two_node_ring().validate().unwrap();
+        Config::ring(8).validate().unwrap();
+        Config::mesh(3, 3).validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_file() {
+        let cfg = Config::from_str_cfg(
+            "# comment\n\
+             topology = ring\n\
+             nodes = 4\n\
+             packet_payload = 512   # bytes\n\
+             segment_mb = 16\n\
+             numerics = timing\n\
+             seed = 99\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology, Topology::Ring(4));
+        assert_eq!(cfg.packet_payload, 512);
+        assert_eq!(cfg.segment_bytes, 16 << 20);
+        assert_eq!(cfg.numerics, Numerics::TimingOnly);
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn parse_mesh() {
+        let cfg = Config::from_str_cfg("topology = mesh\nmesh_w = 2\nmesh_h = 3\n")
+            .unwrap();
+        assert_eq!(cfg.topology, Topology::Mesh2D { w: 2, h: 3 });
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = Config::from_str_cfg("pakcet = 5\n").unwrap_err().to_string();
+        assert!(err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(Config::from_str_cfg("packet_payload = 0\n").is_err());
+        assert!(Config::from_str_cfg("numerics = gpu\n").is_err());
+        assert!(Config::from_str_cfg("topology = star\n").is_err());
+        assert!(Config::from_str_cfg("just a line\n").is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Experiment coordinator: named experiments mapped to the paper's
+//! tables/figures, driven from the CLI (`fshmem bench <name>`) and the
+//! bench harness. This is the launcher layer of the framework.
+
+use anyhow::{bail, Result};
+
+use crate::config::{Config, Numerics};
+use crate::reports;
+use crate::resource;
+use crate::workloads::{conv, matmul, sweep};
+
+/// Registry of named experiments.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("bandwidth", "Fig. 5: PUT/GET bandwidth sweep (4 packet sizes)"),
+    ("latency", "Table III: PUT/GET latency vs prior works"),
+    ("comparison", "Table IV: cross-system comparison"),
+    ("resources", "Table II: FPGA resource utilization model"),
+    ("casestudy", "Fig. 7: matmul + conv, 1 vs 2 nodes"),
+    ("all", "run everything above"),
+];
+
+pub struct RunOptions {
+    /// Fast mode: fewer sweep points, timing-only case study.
+    pub fast: bool,
+    /// Numerics for the case study.
+    pub numerics: Numerics,
+    /// Write fig5 CSV here if set.
+    pub csv_out: Option<String>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            fast: false,
+            numerics: Numerics::TimingOnly,
+            csv_out: None,
+        }
+    }
+}
+
+pub fn run_experiment(name: &str, opts: &RunOptions) -> Result<String> {
+    match name {
+        "bandwidth" => run_bandwidth(opts),
+        "latency" => run_latency(),
+        "comparison" => run_comparison(),
+        "resources" => Ok(resource::render_table2(2)),
+        "casestudy" => run_casestudy(opts),
+        "all" => {
+            let mut out = String::new();
+            for (n, _) in EXPERIMENTS.iter().filter(|(n, _)| *n != "all") {
+                out.push_str(&run_experiment(n, opts)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        _ => bail!(
+            "unknown experiment '{name}'; available: {}",
+            EXPERIMENTS
+                .iter()
+                .map(|(n, _)| *n)
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    }
+}
+
+fn run_bandwidth(opts: &RunOptions) -> Result<String> {
+    let series = if opts.fast {
+        vec![sweep::bandwidth_series(1024), sweep::bandwidth_series(128)]
+    } else {
+        sweep::fig5_all()
+    };
+    if let Some(path) = &opts.csv_out {
+        std::fs::write(path, reports::fig5_csv(&series))?;
+    }
+    Ok(reports::fig5_summary(&series))
+}
+
+fn run_latency() -> Result<String> {
+    Ok(reports::table3(&sweep::measure_latencies()))
+}
+
+fn run_comparison() -> Result<String> {
+    // Measured FSHMEM peak from the DES feeds the comparison row.
+    let s = sweep::bandwidth_series(1024);
+    Ok(reports::table4(s.peak_put()))
+}
+
+fn run_casestudy(opts: &RunOptions) -> Result<String> {
+    let cfg = Config::two_node_ring().with_numerics(opts.numerics);
+    let mm_sizes: &[usize] = if opts.fast {
+        &[256, 512]
+    } else {
+        &[256, 512, 1024]
+    };
+    let mut mms = Vec::new();
+    for &n in mm_sizes {
+        mms.push(matmul::run_case(&cfg, &matmul::MatmulCase::paper(n))?);
+    }
+    let mut cvs = Vec::new();
+    for k in [3usize, 5, 7] {
+        let case = if opts.numerics == Numerics::TimingOnly {
+            conv::ConvCase::paper(k)
+        } else {
+            conv::ConvCase::reduced(k)
+        };
+        cvs.push(conv::run_case(&cfg, &case)?);
+    }
+    Ok(reports::fig7(&mms, &cvs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_lists_options() {
+        let err = run_experiment("nope", &RunOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bandwidth"), "{err}");
+    }
+
+    #[test]
+    fn resources_runs() {
+        let out = run_experiment("resources", &RunOptions::default()).unwrap();
+        assert!(out.contains("GASNet core"));
+    }
+
+    #[test]
+    fn latency_runs() {
+        let out = run_experiment("latency", &RunOptions::default()).unwrap();
+        assert!(out.contains("FSHMEM"), "{out}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Automatic Result Transfer (ART).
+//!
+//! Paper §III-B: the usual host-driven loop (compute command → ack → PUT
+//! of the full result) costs an extra host round-trip and serializes
+//! communication after computation. ART instead has the *DLA* issue a PUT
+//! for every N valid results as they stream out of the array, hiding the
+//! transfer behind the remaining compute and removing host intervention.
+//!
+//! `plan()` turns a job into the chunk schedule: chunk i covers results
+//! `[i*N, min((i+1)*N, total))` and becomes valid at the proportional
+//! point of the streaming phase (results emerge at a constant rate from
+//! the systolic array once filled).
+
+use crate::memory::GlobalAddr;
+use crate::sim::SimTime;
+
+use super::job::DlaOp;
+use super::params::DlaParams;
+
+/// ART configuration carried in the job descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtConfig {
+    /// Issue a PUT after every this-many valid f32 results.
+    pub every_n_results: u32,
+    /// Remote destination of the result stream (peer node's segment).
+    pub dst: GlobalAddr,
+}
+
+/// One planned transfer chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtChunk {
+    /// Offset into the job's output tensor, in bytes.
+    pub src_offset: u64,
+    pub bytes: u64,
+    /// Remote destination of this chunk.
+    pub dst: GlobalAddr,
+    /// When this chunk's results are valid, relative to job start.
+    pub ready_at: SimTime,
+}
+
+/// Compute the chunk schedule for `op` under `cfg`. Offsets and sizes are
+/// in bytes at the DLA's element width (fp16 by default).
+pub fn plan(params: &DlaParams, op: &DlaOp, cfg: &ArtConfig) -> Vec<ArtChunk> {
+    assert!(cfg.every_n_results > 0, "ART chunk must be positive");
+    let eb = params.elem_bytes;
+    let total_results = op.output_elems();
+    let n_chunks = total_results.div_ceil(cfg.every_n_results as u64);
+    let total_cycles = params.job_cycles(op);
+    // Results stream out during the post-fill phase; the command overhead
+    // and fill produce nothing.
+    let lead = params.cmd_overhead_cycles + params.fill_drain_cycles;
+    let stream_cycles = total_cycles - lead;
+    let mut out = Vec::with_capacity(n_chunks as usize);
+    for i in 0..n_chunks {
+        let first = i * cfg.every_n_results as u64;
+        let last = ((i + 1) * cfg.every_n_results as u64).min(total_results);
+        let frac_done = last as f64 / total_results as f64;
+        let ready_cycles = lead + (stream_cycles as f64 * frac_done).ceil() as u64;
+        out.push(ArtChunk {
+            src_offset: first * eb,
+            bytes: (last - first) * eb,
+            dst: cfg.dst.add(first * eb),
+            ready_at: params.clock.cycles(ready_cycles),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm_op() -> DlaOp {
+        DlaOp::Matmul {
+            m: 128,
+            k: 128,
+            n: 128,
+            a: GlobalAddr::new(0, 0),
+            b: GlobalAddr::new(0, 0x10000),
+            y: GlobalAddr::new(0, 0x20000),
+            accumulate: false,
+        }
+    }
+
+    #[test]
+    fn chunks_cover_output_exactly() {
+        let p = DlaParams::d5005_16x8();
+        let cfg = ArtConfig {
+            every_n_results: 4096,
+            dst: GlobalAddr::new(1, 0x40000),
+        };
+        let chunks = plan(&p, &mm_op(), &cfg);
+        assert_eq!(chunks.len(), 4); // 16384 results / 4096
+        let total: u64 = chunks.iter().map(|c| c.bytes).sum();
+        assert_eq!(total, 128 * 128 * 2); // fp16
+        // Contiguous, address-aligned.
+        assert_eq!(chunks[1].src_offset, 4096 * 2);
+        assert_eq!(chunks[1].dst.offset(), 0x40000 + 4096 * 2);
+    }
+
+    #[test]
+    fn ragged_tail_chunk() {
+        let p = DlaParams::d5005_16x8();
+        let cfg = ArtConfig {
+            every_n_results: 5000,
+            dst: GlobalAddr::new(1, 0),
+        };
+        let chunks = plan(&p, &mm_op(), &cfg);
+        assert_eq!(chunks.len(), 4); // ceil(16384/5000)
+        assert_eq!(chunks[3].bytes, (16384 - 3 * 5000) * 2);
+    }
+
+    #[test]
+    fn ready_times_monotonic_and_bounded_by_job() {
+        let p = DlaParams::d5005_16x8();
+        let op = mm_op();
+        let cfg = ArtConfig {
+            every_n_results: 2048,
+            dst: GlobalAddr::new(1, 0),
+        };
+        let chunks = plan(&p, &op, &cfg);
+        for w in chunks.windows(2) {
+            assert!(w[0].ready_at < w[1].ready_at);
+        }
+        let job_t = p.job_time(&op);
+        assert_eq!(
+            chunks.last().unwrap().ready_at,
+            job_t,
+            "last chunk valid exactly at job completion"
+        );
+        // First chunk is ready well before the end — that's the overlap
+        // window ART exploits.
+        assert!(chunks[0].ready_at.as_ps() < job_t.as_ps() / 2);
+    }
+
+    #[test]
+    fn single_chunk_degenerates_to_end_transfer() {
+        let p = DlaParams::d5005_16x8();
+        let cfg = ArtConfig {
+            every_n_results: u32::MAX,
+            dst: GlobalAddr::new(1, 0),
+        };
+        let chunks = plan(&p, &mm_op(), &cfg);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].ready_at, p.job_time(&mm_op()));
+    }
+}

@@ -1,0 +1,234 @@
+//! DLA numerics backends.
+//!
+//! The DES model computes *timing*; a [`ComputeBackend`] computes the
+//! actual numbers. Two implementations:
+//!
+//! * [`SoftwareBackend`] — pure-Rust reference (cache-blocked matmul,
+//!   direct conv). Always available; also serves as the oracle the PJRT
+//!   backend is tested against.
+//! * `runtime::PjrtBackend` — executes the AOT-compiled Pallas kernels
+//!   (HLO artifacts) through the PJRT C API; the production path.
+
+use anyhow::Result;
+
+/// Numerics for the two DLA ops. Tensors are row-major f32 (matmul) and
+/// HWC / HWIO f32 (conv, stride 1, SAME padding).
+///
+/// Not `Send`: the PJRT client wraps `Rc` internals and the DES engine is
+/// single-threaded by design (determinism contract).
+pub trait ComputeBackend {
+    /// `y = a @ b` (+ `y` if `accumulate`), a: (m,k), b: (k,n), y: (m,n).
+    fn matmul(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        y_in: Option<&[f32]>,
+    ) -> Result<Vec<f32>>;
+
+    /// SAME conv: x (h,w,cin), weights (ksize,ksize,cin,cout) -> (h,w,cout).
+    fn conv2d(
+        &mut self,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        ksize: usize,
+        x: &[f32],
+        wts: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend.
+#[derive(Debug, Default)]
+pub struct SoftwareBackend;
+
+impl ComputeBackend for SoftwareBackend {
+    fn matmul(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        y_in: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(a.len() == m * k, "a: {} != {}*{}", a.len(), m, k);
+        anyhow::ensure!(b.len() == k * n, "b: {} != {}*{}", b.len(), k, n);
+        let mut y = match y_in {
+            Some(seed) => {
+                anyhow::ensure!(seed.len() == m * n, "y seed size");
+                seed.to_vec()
+            }
+            None => vec![0.0; m * n],
+        };
+        // i-k-j loop order: streams b rows, vectorizes the inner j loop.
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..kk * n + n];
+                let yrow = &mut y[i * n..i * n + n];
+                for j in 0..n {
+                    yrow[j] += aik * brow[j];
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    fn conv2d(
+        &mut self,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        ksize: usize,
+        x: &[f32],
+        wts: &[f32],
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == h * w * cin, "x size");
+        anyhow::ensure!(wts.len() == ksize * ksize * cin * cout, "w size");
+        anyhow::ensure!(ksize % 2 == 1, "SAME padding requires odd ksize");
+        let pad = ksize / 2;
+        let mut y = vec![0.0f32; h * w * cout];
+        for oy in 0..h {
+            for ox in 0..w {
+                let yo = (oy * w + ox) * cout;
+                for dy in 0..ksize {
+                    let iy = oy as isize + dy as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..ksize {
+                        let ix = ox as isize + dx as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xo = ((iy as usize) * w + ix as usize) * cin;
+                        let wo = (dy * ksize + dx) * cin * cout;
+                        for c in 0..cin {
+                            let xv = x[xo + c];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &wts[wo + c * cout..wo + c * cout + cout];
+                            let yrow = &mut y[yo..yo + cout];
+                            for co in 0..cout {
+                                yrow[co] += xv * wrow[co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    fn name(&self) -> &'static str {
+        "software"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut be = SoftwareBackend;
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let y = be.matmul(2, 2, 2, &a, &eye, None).unwrap();
+        assert_eq!(y, a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let mut be = SoftwareBackend;
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let y = be
+            .matmul(
+                2,
+                2,
+                2,
+                &[1.0, 2.0, 3.0, 4.0],
+                &[5.0, 6.0, 7.0, 8.0],
+                None,
+            )
+            .unwrap();
+        assert_eq!(y, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_accumulate_seeds_output() {
+        let mut be = SoftwareBackend;
+        let seed = vec![100.0, 100.0, 100.0, 100.0];
+        let y = be
+            .matmul(
+                2,
+                2,
+                2,
+                &[1.0, 0.0, 0.0, 1.0],
+                &[1.0, 2.0, 3.0, 4.0],
+                Some(&seed),
+            )
+            .unwrap();
+        assert_eq!(y, vec![101.0, 102.0, 103.0, 104.0]);
+    }
+
+    #[test]
+    fn matmul_rejects_bad_shapes() {
+        let mut be = SoftwareBackend;
+        assert!(be.matmul(2, 2, 2, &[0.0; 3], &[0.0; 4], None).is_err());
+        assert!(be
+            .matmul(2, 2, 2, &[0.0; 4], &[0.0; 4], Some(&[0.0; 3]))
+            .is_err());
+    }
+
+    #[test]
+    fn conv_1x1_is_channel_mix() {
+        let mut be = SoftwareBackend;
+        // 1x1 conv with cin=2, cout=1, w = [0.5, 2.0].
+        let x = vec![1.0, 10.0, 2.0, 20.0]; // 1x2 spatial, 2 ch
+        let wts = vec![0.5, 2.0];
+        let y = be.conv2d(1, 2, 2, 1, 1, &x, &wts).unwrap();
+        assert_eq!(y, vec![20.5, 41.0]);
+    }
+
+    #[test]
+    fn conv_3x3_impulse_recovers_flipped_kernel() {
+        let mut be = SoftwareBackend;
+        let mut x = vec![0.0; 5 * 5];
+        x[2 * 5 + 2] = 1.0; // impulse at center
+        let wts: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let y = be.conv2d(5, 5, 1, 1, 3, &x, &wts).unwrap();
+        // Cross-correlation places w[dy][dx] at (2+1-dy, 2+1-dx).
+        assert_eq!(y[(1) * 5 + 1], 9.0);
+        assert_eq!(y[(2) * 5 + 2], 5.0);
+        assert_eq!(y[(3) * 5 + 3], 1.0);
+    }
+
+    #[test]
+    fn conv_matches_matmul_for_1x1_full_channels() {
+        // 1x1 conv over (h*w, cin) == matmul (h*w, cin) @ (cin, cout).
+        let mut be = SoftwareBackend;
+        let (h, w, cin, cout) = (3usize, 4, 5, 6);
+        let mut rng = crate::sim::Rng::new(5);
+        let mut x = vec![0.0f32; h * w * cin];
+        let mut wts = vec![0.0f32; cin * cout];
+        rng.fill_f32(&mut x);
+        rng.fill_f32(&mut wts);
+        let yc = be.conv2d(h, w, cin, cout, 1, &x, &wts).unwrap();
+        let ym = be.matmul(h * w, cin, cout, &x, &wts, None).unwrap();
+        for (a, b) in yc.iter().zip(&ym) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

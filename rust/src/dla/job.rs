@@ -1,0 +1,285 @@
+//! DLA job descriptors and their active-message encoding.
+//!
+//! The paper instructs the DLA "via its handler interface by passing a
+//! few arguments" (§III-B): computation type, tensor shape, and the
+//! memory locations involved. We carry the descriptor as the payload of
+//! a Medium AM to the COMPUTE handler; 48 bytes encodes everything.
+
+use anyhow::{bail, Result};
+
+use crate::memory::{GlobalAddr, NodeId};
+
+use super::art::ArtConfig;
+
+/// What to compute, on which tensors (addresses are in the owning node's
+/// shared segment; f32 row-major / HWC layouts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DlaOp {
+    Matmul {
+        m: u32,
+        k: u32,
+        n: u32,
+        a: GlobalAddr,
+        b: GlobalAddr,
+        y: GlobalAddr,
+        /// Accumulate onto existing contents of `y` (the Fig. 6a
+        /// partial-sum step) instead of overwriting.
+        accumulate: bool,
+    },
+    Conv {
+        h: u32,
+        w: u32,
+        cin: u32,
+        cout: u32,
+        ksize: u32,
+        x: GlobalAddr,
+        wts: GlobalAddr,
+        y: GlobalAddr,
+    },
+}
+
+impl DlaOp {
+    /// Number of result elements this op produces.
+    pub fn output_elems(&self) -> u64 {
+        match *self {
+            DlaOp::Matmul { m, n, .. } => m as u64 * n as u64,
+            DlaOp::Conv { h, w, cout, .. } => h as u64 * w as u64 * cout as u64,
+        }
+    }
+
+    /// Bytes of result at `elem_bytes` per element (fp16 on the DLA).
+    pub fn output_bytes(&self, elem_bytes: u64) -> u64 {
+        self.output_elems() * elem_bytes
+    }
+
+    pub fn output_addr(&self) -> GlobalAddr {
+        match *self {
+            DlaOp::Matmul { y, .. } | DlaOp::Conv { y, .. } => y,
+        }
+    }
+}
+
+/// A queued unit of DLA work.
+#[derive(Debug, Clone)]
+pub struct DlaJob {
+    pub op: DlaOp,
+    /// ART: stream result chunks to a remote node during compute.
+    pub art: Option<ArtConfig>,
+    /// Notify `(node, token)` with an ACK reply when the job (and its
+    /// final ART chunk hand-off) completes — the host-visible completion.
+    pub notify: Option<(NodeId, u32)>,
+}
+
+const TAG_MATMUL: u8 = 1;
+const TAG_CONV: u8 = 2;
+
+/// Descriptor wire encoding: fixed 56 bytes.
+pub fn encode_job(job: &DlaJob) -> Vec<u8> {
+    let mut v = Vec::with_capacity(56);
+    match job.op {
+        DlaOp::Matmul {
+            m,
+            k,
+            n,
+            a,
+            b,
+            y,
+            accumulate,
+        } => {
+            v.push(TAG_MATMUL);
+            v.push(accumulate as u8);
+            v.extend_from_slice(&m.to_le_bytes());
+            v.extend_from_slice(&k.to_le_bytes());
+            v.extend_from_slice(&n.to_le_bytes());
+            v.extend_from_slice(&a.0.to_le_bytes());
+            v.extend_from_slice(&b.0.to_le_bytes());
+            v.extend_from_slice(&y.0.to_le_bytes());
+        }
+        DlaOp::Conv {
+            h,
+            w,
+            cin,
+            cout,
+            ksize,
+            x,
+            wts,
+            y,
+        } => {
+            v.push(TAG_CONV);
+            v.push(ksize as u8);
+            v.extend_from_slice(&h.to_le_bytes());
+            v.extend_from_slice(&w.to_le_bytes());
+            v.extend_from_slice(&cin.to_le_bytes());
+            v.extend_from_slice(&cout.to_le_bytes());
+            v.extend_from_slice(&x.0.to_le_bytes());
+            v.extend_from_slice(&wts.0.to_le_bytes());
+            v.extend_from_slice(&y.0.to_le_bytes());
+        }
+    }
+    // ART config (0 = none).
+    match &job.art {
+        None => v.extend_from_slice(&[0u8; 13]),
+        Some(art) => {
+            v.push(1);
+            v.extend_from_slice(&art.every_n_results.to_le_bytes());
+            v.extend_from_slice(&art.dst.0.to_le_bytes());
+        }
+    }
+    match job.notify {
+        None => v.extend_from_slice(&[0u8; 9]),
+        Some((node, token)) => {
+            v.push(1);
+            v.extend_from_slice(&node.to_le_bytes());
+            v.extend_from_slice(&token.to_le_bytes());
+        }
+    }
+    v
+}
+
+pub fn decode_job(bytes: &[u8]) -> Result<DlaJob> {
+    let rd_u32 = |b: &[u8], at: usize| -> u32 {
+        u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+    };
+    let rd_u64 = |b: &[u8], at: usize| -> u64 {
+        let mut x = [0u8; 8];
+        x.copy_from_slice(&b[at..at + 8]);
+        u64::from_le_bytes(x)
+    };
+    if bytes.len() < 2 {
+        bail!("job descriptor too short");
+    }
+    let (op, mut at) = match bytes[0] {
+        TAG_MATMUL => {
+            if bytes.len() < 38 {
+                bail!("matmul descriptor truncated");
+            }
+            (
+                DlaOp::Matmul {
+                    accumulate: bytes[1] != 0,
+                    m: rd_u32(bytes, 2),
+                    k: rd_u32(bytes, 6),
+                    n: rd_u32(bytes, 10),
+                    a: GlobalAddr(rd_u64(bytes, 14)),
+                    b: GlobalAddr(rd_u64(bytes, 22)),
+                    y: GlobalAddr(rd_u64(bytes, 30)),
+                },
+                38,
+            )
+        }
+        TAG_CONV => {
+            if bytes.len() < 42 {
+                bail!("conv descriptor truncated");
+            }
+            (
+                DlaOp::Conv {
+                    ksize: bytes[1] as u32,
+                    h: rd_u32(bytes, 2),
+                    w: rd_u32(bytes, 6),
+                    cin: rd_u32(bytes, 10),
+                    cout: rd_u32(bytes, 14),
+                    x: GlobalAddr(rd_u64(bytes, 18)),
+                    wts: GlobalAddr(rd_u64(bytes, 26)),
+                    y: GlobalAddr(rd_u64(bytes, 34)),
+                },
+                42,
+            )
+        }
+        t => bail!("unknown DLA op tag {t}"),
+    };
+    if bytes.len() < at + 13 + 9 {
+        bail!("descriptor tail truncated");
+    }
+    let art = if bytes[at] == 1 {
+        Some(ArtConfig {
+            every_n_results: rd_u32(bytes, at + 1),
+            dst: GlobalAddr(rd_u64(bytes, at + 5)),
+        })
+    } else {
+        None
+    };
+    at += 13;
+    let notify = if bytes[at] == 1 {
+        Some((rd_u32(bytes, at + 1) as NodeId, rd_u32(bytes, at + 5)))
+    } else {
+        None
+    };
+    Ok(DlaJob { op, art, notify })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(job: &DlaJob) -> DlaJob {
+        decode_job(&encode_job(job)).unwrap()
+    }
+
+    #[test]
+    fn matmul_roundtrip() {
+        let job = DlaJob {
+            op: DlaOp::Matmul {
+                m: 128,
+                k: 256,
+                n: 128,
+                a: GlobalAddr::new(0, 0x1000),
+                b: GlobalAddr::new(0, 0x2000),
+                y: GlobalAddr::new(0, 0x3000),
+                accumulate: true,
+            },
+            art: None,
+            notify: Some((0, 42)),
+        };
+        let d = roundtrip(&job);
+        assert_eq!(d.op, job.op);
+        assert_eq!(d.notify, Some((0, 42)));
+        assert!(d.art.is_none());
+    }
+
+    #[test]
+    fn conv_with_art_roundtrip() {
+        let job = DlaJob {
+            op: DlaOp::Conv {
+                h: 64,
+                w: 64,
+                cin: 256,
+                cout: 128,
+                ksize: 5,
+                x: GlobalAddr::new(1, 0),
+                wts: GlobalAddr::new(1, 0x8000),
+                y: GlobalAddr::new(1, 0x10000),
+            },
+            art: Some(ArtConfig {
+                every_n_results: 4096,
+                dst: GlobalAddr::new(0, 0x10000),
+            }),
+            notify: None,
+        };
+        let d = roundtrip(&job);
+        assert_eq!(d.op, job.op);
+        assert_eq!(d.art.unwrap().every_n_results, 4096);
+        assert!(d.notify.is_none());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(decode_job(&[]).is_err());
+        assert!(decode_job(&[9, 0, 0]).is_err());
+        assert!(decode_job(&[TAG_MATMUL, 0, 1]).is_err(), "truncated");
+    }
+
+    #[test]
+    fn output_accounting() {
+        let op = DlaOp::Matmul {
+            m: 128,
+            k: 128,
+            n: 64,
+            a: GlobalAddr::new(0, 0),
+            b: GlobalAddr::new(0, 0),
+            y: GlobalAddr::new(0, 0x100),
+            accumulate: false,
+        };
+        assert_eq!(op.output_elems(), 128 * 64);
+        assert_eq!(op.output_bytes(2), 128 * 64 * 2);
+        assert_eq!(op.output_addr(), GlobalAddr::new(0, 0x100));
+    }
+}

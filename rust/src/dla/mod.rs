@@ -1,0 +1,44 @@
+//! The compute core: a model of the customized Intel DLA the paper
+//! integrates (§III-B) — a 1-D systolic array of 16x8 processing
+//! elements (each a 16-wide dot-product unit) at 250 MHz, giving
+//! 16*8*16*2 ops/cycle = 1024.5 GOPS theoretical peak, which is exactly
+//! the denominator behind the paper's "979.4 GOPS = 95.6% of theoretical
+//! maximum" (Fig. 7).
+//!
+//! * [`params`] — array geometry and the cycle model for matmul/conv.
+//! * [`job`] — job descriptors (what a COMPUTE active message carries)
+//!   and their wire encoding.
+//! * [`art`] — Automatic Result Transfer: split the result into chunks
+//!   PUT mid-computation so communication hides behind compute.
+//! * [`backend`] — numerics: the pure-Rust reference backend (always
+//!   available) and the trait the PJRT runtime backend implements.
+
+pub mod art;
+pub mod backend;
+pub mod job;
+pub mod params;
+
+pub use art::{ArtConfig, ArtChunk};
+pub use backend::{ComputeBackend, SoftwareBackend};
+pub use job::{DlaJob, DlaOp};
+pub use params::DlaParams;
+
+use std::collections::VecDeque;
+
+/// Per-node DLA state driven by the DES model.
+#[derive(Debug, Default)]
+pub struct DlaState {
+    pub queue: VecDeque<DlaJob>,
+    pub busy: bool,
+    /// Total MACs executed (perf counter feed for GOPS reporting).
+    pub macs_done: u64,
+}
+
+impl DlaState {
+    /// Enqueue a job; returns true if the core was idle (caller schedules
+    /// a DlaStart event).
+    pub fn enqueue(&mut self, job: DlaJob) -> bool {
+        self.queue.push_back(job);
+        !self.busy
+    }
+}

@@ -1,0 +1,155 @@
+//! One QSFP+ serial link: serialization, line coding, propagation.
+//!
+//! Datapath calibration (DESIGN.md "Calibration targets"): the GASNet
+//! core's High-Speed Serial Interface presents a 128-bit @ 250 MHz
+//! datapath = 4000 MB/s raw. The physical lane applies 64b/66b line
+//! coding (x66/64 time inflation), capping effective throughput at
+//! 3878 MB/s; per-packet header and sequencer occupancy (gasnet::timing)
+//! bring the measured peak to ~3813 MB/s — 95% of theoretical, matching
+//! Fig. 5 / Table IV. Propagation = SerDes TX + cable + SerDes RX.
+
+use crate::sim::{ClockDomain, SimTime};
+
+/// Physical parameters of one serial link direction.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkParams {
+    /// Core-side datapath clock (250 MHz on the D5005).
+    pub clock: ClockDomain,
+    /// Datapath width in bytes per cycle (128 bit = 16 B).
+    pub width_bytes: u64,
+    /// Line-coding overhead as a ratio (66, 64) for 64b/66b.
+    pub coding_num: u64,
+    pub coding_den: u64,
+    /// SerDes TX+RX latency plus cable flight time.
+    pub propagation: SimTime,
+}
+
+impl LinkParams {
+    /// The paper's QSFP+ setup. Propagation 130 ns: ~60 ns SerDes each
+    /// side + ~10 ns for a 2 m DAC cable — consistent with the 0.21 µs
+    /// short-PUT end-to-end latency decomposition (Table III).
+    pub fn qsfp_d5005() -> Self {
+        LinkParams {
+            clock: ClockDomain::from_mhz(250.0),
+            width_bytes: 16,
+            coding_num: 66,
+            coding_den: 64,
+            propagation: SimTime::from_ns(130),
+        }
+    }
+
+    /// Raw datapath bandwidth in MB/s (no coding, no headers).
+    pub fn raw_mb_s(&self) -> f64 {
+        self.width_bytes as f64 * self.clock.freq_mhz()
+    }
+
+    /// Time to serialize `bytes` onto the wire (whole flits, then line
+    /// coding inflation).
+    pub fn serialize(&self, bytes: u64) -> SimTime {
+        let flit_time = self.clock.transfer(bytes, self.width_bytes);
+        SimTime::from_ps(flit_time.as_ps() * self.coding_num / self.coding_den)
+    }
+}
+
+/// One direction of a link: tracks wire occupancy so back-to-back packets
+/// queue behind each other (this is what creates the bandwidth roll-off
+/// for small packets in Fig. 5).
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub params: LinkParams,
+    busy_until: SimTime,
+    /// Total bytes ever serialized (perf counter feed).
+    pub bytes_sent: u64,
+    pub packets_sent: u64,
+}
+
+impl Link {
+    pub fn new(params: LinkParams) -> Self {
+        Link {
+            params,
+            busy_until: SimTime::ZERO,
+            bytes_sent: 0,
+            packets_sent: 0,
+        }
+    }
+
+    /// Enqueue `bytes` for transmission at `now` (earliest). Returns
+    /// `(tx_done, rx_at)`: when the wire frees up, and when the last byte
+    /// arrives at the far end.
+    pub fn send(&mut self, now: SimTime, bytes: u64) -> (SimTime, SimTime) {
+        let start = now.max(self.busy_until);
+        let tx_done = start + self.params.serialize(bytes);
+        self.busy_until = tx_done;
+        self.bytes_sent += bytes;
+        self.packets_sent += 1;
+        (tx_done, tx_done + self.params.propagation)
+    }
+
+    pub fn busy_until(&self) -> SimTime {
+        self.busy_until
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until = SimTime::ZERO;
+        self.bytes_sent = 0;
+        self.packets_sent = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_bandwidth_is_4000() {
+        let p = LinkParams::qsfp_d5005();
+        assert!((p.raw_mb_s() - 4000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn serialization_includes_line_coding() {
+        let p = LinkParams::qsfp_d5005();
+        // 1024 B = 64 flits = 256 ns raw; x66/64 = 264 ns.
+        assert_eq!(p.serialize(1024).as_ps(), 264_000);
+        // Partial flit rounds up: 17 B = 2 flits.
+        assert_eq!(p.serialize(17), p.serialize(32));
+    }
+
+    #[test]
+    fn back_to_back_packets_queue() {
+        let mut link = Link::new(LinkParams::qsfp_d5005());
+        let (tx1, rx1) = link.send(SimTime::ZERO, 1024);
+        let (tx2, rx2) = link.send(SimTime::ZERO, 1024);
+        assert_eq!(tx2, tx1 + link.params.serialize(1024));
+        assert_eq!(rx2 - rx1, tx2 - tx1);
+        assert!(rx1 > tx1, "propagation adds latency");
+    }
+
+    #[test]
+    fn idle_wire_starts_immediately() {
+        let mut link = Link::new(LinkParams::qsfp_d5005());
+        link.send(SimTime::ZERO, 64);
+        let late = SimTime::from_us(5);
+        let (tx, _) = link.send(late, 64);
+        assert_eq!(tx, late + link.params.serialize(64));
+    }
+
+    #[test]
+    fn effective_peak_below_raw() {
+        // Long stream of 1024+16B packets: goodput must land near
+        // 1024/1040 / 1.03125 * 4000 ≈ 3820 MB/s.
+        let mut link = Link::new(LinkParams::qsfp_d5005());
+        let mut last_rx = SimTime::ZERO;
+        let n = 1000u64;
+        for _ in 0..n {
+            let (_, rx) = link.send(SimTime::ZERO, 1024 + 16);
+            last_rx = rx;
+        }
+        let goodput_mb_s =
+            (n * 1024) as f64 / last_rx.as_secs() / 1e6;
+        assert!(
+            (3700.0..3900.0).contains(&goodput_mb_s),
+            "goodput {goodput_mb_s}"
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Inter-FPGA fabric: link PHY timing, topology wiring, routing.
+//!
+//! The paper connects its two D5005 PACs "via QSFP+ cables in a ring
+//! fashion" (each card has 2 QSFP+ ports) and notes the GASNet core is
+//! topology-agnostic but "may need a router for an extensive network
+//! setting". This module provides: the serialization/propagation model of
+//! one QSFP+ link ([`link`]), the port-wiring for ring / 2-D mesh / torus
+//! topologies ([`topology`]), and a store-and-forward router for
+//! multi-hop fabrics ([`router`]).
+
+pub mod link;
+pub mod router;
+pub mod topology;
+
+pub use link::{Link, LinkParams};
+pub use router::Router;
+pub use topology::{PortId, Topology, Wiring};

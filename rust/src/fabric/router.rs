@@ -1,0 +1,95 @@
+//! Store-and-forward router.
+//!
+//! The paper's prototype is point-to-point (2 nodes), but §III-A notes the
+//! GASNet core "may need a router for an extensive network setting". This
+//! router supplies that: packets whose destination is not the local node
+//! are re-emitted on the topology's next-hop port after a fixed routing
+//! delay (header inspection + crossbar traversal).
+
+use crate::memory::NodeId;
+use crate::sim::{ClockDomain, SimTime};
+
+use super::topology::{PortId, Topology};
+
+/// Forwarding decision for an arriving packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Packet is for this node: hand to the AM receive handler.
+    Local,
+    /// Re-emit on `port` after `delay`.
+    Forward { port: PortId, delay: SimTime },
+}
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    topology: Topology,
+    /// Cycles to inspect the header and traverse the crossbar.
+    forward_cycles: u64,
+    clock: ClockDomain,
+}
+
+impl Router {
+    pub fn new(topology: Topology, clock: ClockDomain, forward_cycles: u64) -> Self {
+        Router {
+            topology,
+            forward_cycles,
+            clock,
+        }
+    }
+
+    /// Default: 6-cycle store-and-forward decision at the core clock.
+    pub fn d5005(topology: Topology) -> Self {
+        Router::new(topology, ClockDomain::from_mhz(250.0), 6)
+    }
+
+    pub fn decide(&self, here: NodeId, dst: NodeId) -> Route {
+        if here == dst {
+            return Route::Local;
+        }
+        let port = self
+            .topology
+            .route(here, dst)
+            .expect("dst != here implies a route");
+        Route::Forward {
+            port,
+            delay: self.clock.cycles(self.forward_cycles),
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::{PORT_E, PORT_W};
+
+    #[test]
+    fn local_delivery() {
+        let r = Router::d5005(Topology::Ring(4));
+        assert_eq!(r.decide(2, 2), Route::Local);
+    }
+
+    #[test]
+    fn forwards_with_delay() {
+        let r = Router::d5005(Topology::Ring(4));
+        match r.decide(0, 2) {
+            Route::Forward { port, delay } => {
+                assert_eq!(port, PORT_E);
+                assert_eq!(delay, SimTime::from_ns(24)); // 6 cy @ 4 ns
+            }
+            other => panic!("expected forward, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ring_forwarding_direction() {
+        let r = Router::d5005(Topology::Ring(8));
+        match r.decide(1, 0) {
+            Route::Forward { port, .. } => assert_eq!(port, PORT_W),
+            other => panic!("{other:?}"),
+        }
+    }
+}

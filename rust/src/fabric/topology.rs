@@ -1,0 +1,277 @@
+//! Fabric topologies and port wiring.
+//!
+//! The GASNet core is topology-agnostic (paper §III-A); the infrastructure
+//! diagram (Fig. 2) shows a mesh as one example and the prototype uses a
+//! 2-node ring over the two QSFP+ ports. We support:
+//!
+//! * `Ring(n)` — port 0 toward `(i+1) % n`, port 1 toward `(i-1) % n`.
+//!   For n = 2 this degenerates into *two parallel links* between the two
+//!   nodes, which is exactly the paper's prototype ("interconnected via
+//!   QSFP+ cables in a ring fashion") and what lets the case study stripe
+//!   transfers across both ports.
+//! * `Mesh2D { w, h }` / `Torus2D { w, h }` — 4 ports (E, W, N, S) with
+//!   dimension-ordered (X-then-Y) routing; the scale-out projection for
+//!   the paper's future 8-card server.
+
+use crate::memory::NodeId;
+
+pub type PortId = u8;
+
+pub const PORT_E: PortId = 0;
+pub const PORT_W: PortId = 1;
+pub const PORT_N: PortId = 2;
+pub const PORT_S: PortId = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    Ring(u32),
+    Mesh2D { w: u32, h: u32 },
+    Torus2D { w: u32, h: u32 },
+}
+
+impl Topology {
+    pub fn nodes(&self) -> u32 {
+        match *self {
+            Topology::Ring(n) => n,
+            Topology::Mesh2D { w, h } | Topology::Torus2D { w, h } => w * h,
+        }
+    }
+
+    pub fn ports_per_node(&self) -> u8 {
+        match self {
+            Topology::Ring(_) => 2,
+            Topology::Mesh2D { .. } | Topology::Torus2D { .. } => 4,
+        }
+    }
+
+    /// The neighbor reached from `(node, port)`, if that port is wired.
+    pub fn neighbor(&self, node: NodeId, port: PortId) -> Option<(NodeId, PortId)> {
+        match *self {
+            Topology::Ring(n) => {
+                if n < 2 {
+                    return None;
+                }
+                match port {
+                    PORT_E => Some(((node + 1) % n, PORT_W)),
+                    PORT_W => Some(((node + n - 1) % n, PORT_E)),
+                    _ => None,
+                }
+            }
+            Topology::Mesh2D { w, h } => {
+                let (x, y) = (node % w, node / w);
+                let to = |x: u32, y: u32| y * w + x;
+                match port {
+                    PORT_E if x + 1 < w => Some((to(x + 1, y), PORT_W)),
+                    PORT_W if x > 0 => Some((to(x - 1, y), PORT_E)),
+                    PORT_S if y + 1 < h => Some((to(x, y + 1), PORT_N)),
+                    PORT_N if y > 0 => Some((to(x, y - 1), PORT_S)),
+                    _ => None,
+                }
+            }
+            Topology::Torus2D { w, h } => {
+                let (x, y) = (node % w, node / w);
+                let to = |x: u32, y: u32| y * w + x;
+                match port {
+                    PORT_E => Some((to((x + 1) % w, y), PORT_W)),
+                    PORT_W => Some((to((x + w - 1) % w, y), PORT_E)),
+                    PORT_S => Some((to(x, (y + 1) % h), PORT_N)),
+                    PORT_N => Some((to(x, (y + h - 1) % h), PORT_S)),
+                    _ => None,
+                }
+            }
+        }
+    }
+
+    /// First-hop output port from `src` toward `dst` (dimension-ordered
+    /// for mesh/torus, shorter way round for ring). `None` if src == dst.
+    pub fn route(&self, src: NodeId, dst: NodeId) -> Option<PortId> {
+        if src == dst {
+            return None;
+        }
+        match *self {
+            Topology::Ring(n) => {
+                let fwd = (dst + n - src) % n; // hops going E
+                let bwd = (src + n - dst) % n; // hops going W
+                Some(if fwd <= bwd { PORT_E } else { PORT_W })
+            }
+            Topology::Mesh2D { w, .. } => {
+                let (sx, sy) = (src % w, src / w);
+                let (dx, dy) = (dst % w, dst / w);
+                Some(if sx < dx {
+                    PORT_E
+                } else if sx > dx {
+                    PORT_W
+                } else if sy < dy {
+                    PORT_S
+                } else {
+                    PORT_N
+                })
+            }
+            Topology::Torus2D { w, h } => {
+                let (sx, sy) = (src % w, src / w);
+                let (dx, dy) = (dst % w, dst / w);
+                if sx != dx {
+                    let fwd = (dx + w - sx) % w;
+                    let bwd = (sx + w - dx) % w;
+                    Some(if fwd <= bwd { PORT_E } else { PORT_W })
+                } else {
+                    let fwd = (dy + h - sy) % h;
+                    let bwd = (sy + h - dy) % h;
+                    Some(if fwd <= bwd { PORT_S } else { PORT_N })
+                }
+            }
+        }
+    }
+
+    /// Hop count from src to dst under this topology's routing.
+    pub fn hops(&self, src: NodeId, dst: NodeId) -> u32 {
+        let mut cur = src;
+        let mut hops = 0;
+        while cur != dst {
+            let port = self.route(cur, dst).expect("route exists");
+            cur = self.neighbor(cur, port).expect("wired port").0;
+            hops += 1;
+            assert!(hops <= self.nodes() * 2, "routing loop");
+        }
+        hops
+    }
+}
+
+/// Materialized wiring: unidirectional link indices per (node, port).
+/// Each wired (node, port) owns one *outgoing* link direction.
+#[derive(Debug, Clone)]
+pub struct Wiring {
+    pub topology: Topology,
+    /// `link_of[node][port]` = Some(link index) if wired.
+    link_of: Vec<Vec<Option<usize>>>,
+    /// For each link: (src node, src port, dst node, dst port).
+    pub links: Vec<(NodeId, PortId, NodeId, PortId)>,
+}
+
+impl Wiring {
+    pub fn new(topology: Topology) -> Self {
+        let n = topology.nodes();
+        let p = topology.ports_per_node();
+        let mut link_of = vec![vec![None; p as usize]; n as usize];
+        let mut links = Vec::new();
+        for node in 0..n {
+            for port in 0..p {
+                if let Some((peer, peer_port)) = topology.neighbor(node, port) {
+                    link_of[node as usize][port as usize] = Some(links.len());
+                    links.push((node, port, peer, peer_port));
+                }
+            }
+        }
+        Wiring {
+            topology,
+            link_of,
+            links,
+        }
+    }
+
+    pub fn link(&self, node: NodeId, port: PortId) -> Option<usize> {
+        self.link_of
+            .get(node as usize)?
+            .get(port as usize)
+            .copied()
+            .flatten()
+    }
+
+    /// The link that *delivers into* `(node, port)` — i.e. the reverse
+    /// lookup used by the ARQ model to find the wire a corrupted packet
+    /// must be replayed on.
+    pub fn link_into(&self, node: NodeId, port: PortId) -> Option<usize> {
+        self.links
+            .iter()
+            .position(|&(_, _, dst, dport)| dst == node && dport == port)
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_node_ring_is_two_parallel_links() {
+        let t = Topology::Ring(2);
+        assert_eq!(t.neighbor(0, PORT_E), Some((1, PORT_W)));
+        assert_eq!(t.neighbor(0, PORT_W), Some((1, PORT_E)));
+        assert_eq!(t.neighbor(1, PORT_E), Some((0, PORT_W)));
+        let w = Wiring::new(t);
+        assert_eq!(w.n_links(), 4, "2 nodes x 2 ports, unidirectional");
+    }
+
+    #[test]
+    fn ring_routes_shorter_way() {
+        let t = Topology::Ring(8);
+        assert_eq!(t.route(0, 1), Some(PORT_E));
+        assert_eq!(t.route(0, 7), Some(PORT_W));
+        assert_eq!(t.route(0, 4), Some(PORT_E), "tie goes east");
+        assert_eq!(t.hops(0, 4), 4);
+        assert_eq!(t.hops(0, 7), 1);
+        assert_eq!(t.hops(3, 3), 0);
+    }
+
+    #[test]
+    fn mesh_dimension_ordered() {
+        let t = Topology::Mesh2D { w: 3, h: 3 };
+        // node 0 = (0,0), node 8 = (2,2): go E, E, S, S.
+        assert_eq!(t.route(0, 8), Some(PORT_E));
+        assert_eq!(t.hops(0, 8), 4);
+        // Edge has no wraparound.
+        assert_eq!(t.neighbor(2, PORT_E), None);
+        assert_eq!(t.neighbor(0, PORT_N), None);
+    }
+
+    #[test]
+    fn torus_wraps() {
+        let t = Topology::Torus2D { w: 4, h: 2 };
+        assert_eq!(t.neighbor(0, PORT_W), Some((3, PORT_E)));
+        assert_eq!(t.hops(0, 3), 1, "wraparound shortcut");
+    }
+
+    #[test]
+    fn all_wired_ports_reciprocal() {
+        for t in [
+            Topology::Ring(4),
+            Topology::Mesh2D { w: 3, h: 2 },
+            Topology::Torus2D { w: 3, h: 3 },
+        ] {
+            for node in 0..t.nodes() {
+                for port in 0..t.ports_per_node() {
+                    if let Some((peer, pport)) = t.neighbor(node, port) {
+                        assert_eq!(
+                            t.neighbor(peer, pport),
+                            Some((node, port)),
+                            "{t:?} {node}:{port}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routing_reaches_everywhere() {
+        for t in [
+            Topology::Ring(5),
+            Topology::Mesh2D { w: 4, h: 3 },
+            Topology::Torus2D { w: 3, h: 4 },
+        ] {
+            for s in 0..t.nodes() {
+                for d in 0..t.nodes() {
+                    let h = t.hops(s, d);
+                    if s == d {
+                        assert_eq!(h, 0);
+                    } else {
+                        assert!(h >= 1);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! The AM handler table.
+//!
+//! GASNet software passes handler *function pointers*; the FSHMEM core
+//! passes an *opcode* that indexes a hardware handler table (paper
+//! §III-A). Built-in opcodes implement the extended-API PUT/GET (and the
+//! ACK used for initiator-side completion), the compute-core dispatch,
+//! and the software barrier; the remaining opcode space is available for
+//! user handlers registered through the API.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub type HandlerId = u8;
+
+/// Built-in handler opcodes (stable wire values).
+pub const H_PUT: HandlerId = 0;
+pub const H_GET: HandlerId = 1;
+pub const H_ACK: HandlerId = 2;
+pub const H_PUT_REPLY: HandlerId = 3;
+pub const H_COMPUTE: HandlerId = 4;
+pub const H_BARRIER_ARRIVE: HandlerId = 5;
+pub const H_BARRIER_RELEASE: HandlerId = 6;
+/// First opcode available for user registration.
+pub const H_USER_BASE: HandlerId = 16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandlerKind {
+    /// Store payload at the packet's destination address.
+    Put,
+    /// Issue a PUT reply carrying the requested bytes.
+    Get,
+    /// Completion acknowledgment for the initiator's op tracker.
+    Ack,
+    /// The data leg of a GET (a PUT restricted to reply semantics).
+    PutReply,
+    /// Forward arguments/payload to the compute command scheduler (DLA).
+    Compute,
+    BarrierArrive,
+    BarrierRelease,
+    /// User handler: identified by its registration slot; semantics are
+    /// provided by the API layer (a Rust closure on the host side).
+    User(u8),
+}
+
+/// Per-node handler table. Hardware analogy: a small opcode-indexed ROM
+/// plus user-writable slots.
+#[derive(Debug, Clone)]
+pub struct HandlerTable {
+    user: BTreeMap<HandlerId, u8>,
+}
+
+impl Default for HandlerTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HandlerTable {
+    pub fn new() -> Self {
+        HandlerTable {
+            user: BTreeMap::new(),
+        }
+    }
+
+    /// Register a user handler at the next free slot; returns its opcode.
+    pub fn register_user(&mut self, slot_tag: u8) -> Result<HandlerId> {
+        let id = (H_USER_BASE..=HandlerId::MAX)
+            .find(|id| !self.user.contains_key(id));
+        match id {
+            Some(id) => {
+                self.user.insert(id, slot_tag);
+                Ok(id)
+            }
+            None => bail!("handler table full"),
+        }
+    }
+
+    pub fn lookup(&self, id: HandlerId) -> Result<HandlerKind> {
+        Ok(match id {
+            H_PUT => HandlerKind::Put,
+            H_GET => HandlerKind::Get,
+            H_ACK => HandlerKind::Ack,
+            H_PUT_REPLY => HandlerKind::PutReply,
+            H_COMPUTE => HandlerKind::Compute,
+            H_BARRIER_ARRIVE => HandlerKind::BarrierArrive,
+            H_BARRIER_RELEASE => HandlerKind::BarrierRelease,
+            _ => match self.user.get(&id) {
+                Some(&tag) => HandlerKind::User(tag),
+                None => bail!("unknown handler opcode {id}"),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve() {
+        let t = HandlerTable::new();
+        assert_eq!(t.lookup(H_PUT).unwrap(), HandlerKind::Put);
+        assert_eq!(t.lookup(H_GET).unwrap(), HandlerKind::Get);
+        assert_eq!(t.lookup(H_ACK).unwrap(), HandlerKind::Ack);
+        assert_eq!(t.lookup(H_COMPUTE).unwrap(), HandlerKind::Compute);
+    }
+
+    #[test]
+    fn unknown_opcode_errors() {
+        let t = HandlerTable::new();
+        assert!(t.lookup(200).is_err());
+        assert!(t.lookup(H_USER_BASE).is_err());
+    }
+
+    #[test]
+    fn user_registration_allocates_slots() {
+        let mut t = HandlerTable::new();
+        let a = t.register_user(10).unwrap();
+        let b = t.register_user(20).unwrap();
+        assert_eq!(a, H_USER_BASE);
+        assert_eq!(b, H_USER_BASE + 1);
+        assert_eq!(t.lookup(a).unwrap(), HandlerKind::User(10));
+        assert_eq!(t.lookup(b).unwrap(), HandlerKind::User(20));
+    }
+
+    #[test]
+    fn table_fills_up() {
+        let mut t = HandlerTable::new();
+        let capacity = HandlerId::MAX as usize - H_USER_BASE as usize + 1;
+        for i in 0..capacity {
+            t.register_user(i as u8).unwrap();
+        }
+        assert!(t.register_user(0).is_err());
+    }
+}

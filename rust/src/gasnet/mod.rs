@@ -1,0 +1,27 @@
+//! The GASNet core: the paper's hardware implementation of the GASNet
+//! Active-Message protocol (Table I / Fig. 3).
+//!
+//! * [`wire`] — AM categories (Short/Medium/Long, Request/Reply), the
+//!   16-byte wire header, packetization of long payloads.
+//! * [`timing`] — the cycle costs of each pipeline stage (calibrated to
+//!   Table III / Fig. 5; see DESIGN.md "Calibration targets").
+//! * [`handlers`] — the handler table: opcode -> built-in (PUT / GET /
+//!   ACK / COMPUTE / BARRIER) or user handler, with hardware-atomic
+//!   dispatch semantics.
+//! * [`core`] — per-node state: per-port TX schedulers (host / compute /
+//!   reply classes, round-robin), AM sequencer occupancy, RX handler
+//!   engine.
+//! * [`ops`] — initiator-side operation tracking (the hardware perf
+//!   counter of §IV-A: command-issue to header-arrival / data-complete).
+
+pub mod core;
+pub mod handlers;
+pub mod ops;
+pub mod timing;
+pub mod wire;
+
+pub use core::{GasnetCore, MsgClass};
+pub use handlers::{HandlerId, HandlerKind, HandlerTable};
+pub use ops::{OpId, OpKind, OpTracker};
+pub use timing::GasnetTiming;
+pub use wire::{AmCategory, AmKind, AmMessage, Packet, Payload, WIRE_HEADER_BYTES};

@@ -1,0 +1,183 @@
+//! Initiator-side operation tracking.
+//!
+//! Models the hardware performance counter of §IV-A plus the completion
+//! state `gasnet_put/get` need: for each outstanding op we record command
+//! issue, remote header arrival (the paper's PUT latency end-point),
+//! data completion, and ack receipt (what a blocking `wait` observes).
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+
+pub type OpId = u32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Put,
+    Get,
+    AmRequest,
+    Barrier,
+    Compute,
+}
+
+#[derive(Debug, Clone)]
+pub struct OpState {
+    pub kind: OpKind,
+    pub issued: SimTime,
+    pub bytes: u64,
+    /// Payload bytes that have completed the data leg so far.
+    pub bytes_done: u64,
+    /// First header of the request observed at the destination (PUT
+    /// latency endpoint) or first reply header back at the initiator
+    /// (GET latency endpoint).
+    pub header_at: Option<SimTime>,
+    /// All payload bytes landed.
+    pub data_done_at: Option<SimTime>,
+    /// Initiator received the completion ack / reply completion.
+    pub completed_at: Option<SimTime>,
+}
+
+impl OpState {
+    pub fn is_complete(&self) -> bool {
+        self.completed_at.is_some()
+    }
+}
+
+/// Token-indexed table of outstanding and finished operations.
+#[derive(Debug, Default)]
+pub struct OpTracker {
+    next: OpId,
+    ops: BTreeMap<OpId, OpState>,
+}
+
+impl OpTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn issue(&mut self, kind: OpKind, now: SimTime, bytes: u64) -> OpId {
+        let id = self.next;
+        self.next += 1;
+        self.ops.insert(
+            id,
+            OpState {
+                kind,
+                issued: now,
+                bytes,
+                bytes_done: 0,
+                header_at: None,
+                data_done_at: None,
+                completed_at: None,
+            },
+        );
+        id
+    }
+
+    pub fn get(&self, id: OpId) -> Option<&OpState> {
+        self.ops.get(&id)
+    }
+
+    pub fn header_arrived(&mut self, id: OpId, now: SimTime) {
+        if let Some(op) = self.ops.get_mut(&id) {
+            op.header_at.get_or_insert(now);
+        }
+    }
+
+    /// Account `bytes` of completed payload; marks data-done when all
+    /// bytes have landed. Returns true if this call completed the data.
+    pub fn data_progress(&mut self, id: OpId, now: SimTime, bytes: u64) -> bool {
+        if let Some(op) = self.ops.get_mut(&id) {
+            op.bytes_done += bytes;
+            debug_assert!(op.bytes_done <= op.bytes, "over-delivery on op {id}");
+            if op.bytes_done >= op.bytes && op.data_done_at.is_none() {
+                op.data_done_at = Some(now);
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn complete(&mut self, id: OpId, now: SimTime) {
+        if let Some(op) = self.ops.get_mut(&id) {
+            op.completed_at.get_or_insert(now);
+            if op.data_done_at.is_none() && op.bytes == 0 {
+                op.data_done_at = Some(now);
+            }
+        }
+    }
+
+    pub fn is_complete(&self, id: OpId) -> bool {
+        self.ops.get(&id).map(|o| o.is_complete()).unwrap_or(false)
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.ops.values().filter(|o| !o.is_complete()).count()
+    }
+
+    /// Forget finished ops (bandwidth sweeps issue thousands).
+    pub fn gc(&mut self) {
+        self.ops.retain(|_, o| !o.is_complete());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut t = OpTracker::new();
+        let id = t.issue(OpKind::Put, SimTime::from_ns(100), 1024);
+        assert!(!t.is_complete(id));
+        t.header_arrived(id, SimTime::from_ns(300));
+        assert!(!t.data_progress(id, SimTime::from_ns(350), 512));
+        assert!(t.data_progress(id, SimTime::from_ns(400), 512));
+        t.complete(id, SimTime::from_ns(500));
+        let op = t.get(id).unwrap();
+        assert_eq!(op.header_at, Some(SimTime::from_ns(300)));
+        assert_eq!(op.data_done_at, Some(SimTime::from_ns(400)));
+        assert_eq!(op.completed_at, Some(SimTime::from_ns(500)));
+    }
+
+    #[test]
+    fn header_records_first_only() {
+        let mut t = OpTracker::new();
+        let id = t.issue(OpKind::Get, SimTime::ZERO, 64);
+        t.header_arrived(id, SimTime::from_ns(10));
+        t.header_arrived(id, SimTime::from_ns(20));
+        assert_eq!(t.get(id).unwrap().header_at, Some(SimTime::from_ns(10)));
+    }
+
+    #[test]
+    fn zero_byte_op_data_done_on_complete() {
+        let mut t = OpTracker::new();
+        let id = t.issue(OpKind::AmRequest, SimTime::ZERO, 0);
+        t.complete(id, SimTime::from_ns(5));
+        assert_eq!(t.get(id).unwrap().data_done_at, Some(SimTime::from_ns(5)));
+    }
+
+    #[test]
+    fn outstanding_and_gc() {
+        let mut t = OpTracker::new();
+        let a = t.issue(OpKind::Put, SimTime::ZERO, 1);
+        let _b = t.issue(OpKind::Put, SimTime::ZERO, 1);
+        assert_eq!(t.outstanding(), 2);
+        t.complete(a, SimTime::from_ns(1));
+        assert_eq!(t.outstanding(), 1);
+        t.gc();
+        assert!(t.get(a).is_none());
+        assert_eq!(t.outstanding(), 1);
+    }
+
+    #[test]
+    fn ids_are_unique_and_monotonic() {
+        let mut t = OpTracker::new();
+        let ids: Vec<_> = (0..10)
+            .map(|_| t.issue(OpKind::Put, SimTime::ZERO, 0))
+            .collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+    }
+}

@@ -1,0 +1,131 @@
+//! Cycle costs of the GASNet core pipeline stages.
+//!
+//! These constants are the *model inputs* calibrated against the paper's
+//! Table III latencies and Fig. 5 efficiency curve (see DESIGN.md
+//! "Calibration targets"). The figures/tables themselves are *measured in
+//! simulation* — nothing below is a table lookup of a result.
+//!
+//! Latency decomposition of a short PUT (0.21 µs in Table III):
+//!
+//! ```text
+//!   host cmd ingress (PCIe/MMIO)    6 cy   24 ns
+//!   tx scheduler + FIFO             3 cy   12 ns
+//!   sequencer header formation      4 cy   16 ns
+//!   serialization (1 flit, coded)   ~1 cy    4 ns
+//!   SerDes TX + cable + SerDes RX         130 ns
+//!   rx decode + header match        4 cy   16 ns
+//!                                  -------------
+//!                                         ~202 ns  -> 0.21 µs  (paper 0.21)
+//! ```
+//!
+//! A long PUT adds the read-DMA descriptor + first-data latency
+//! (`DmaModel::setup`, 140 ns) ⇒ ~0.34 µs (paper 0.35). GET = short
+//! request + receive-handler reply issue + PUT-like reply (paper 0.45 /
+//! 0.59 µs — reproduced in `table3_latency`).
+
+use crate::sim::{ClockDomain, SimTime};
+
+#[derive(Debug, Clone, Copy)]
+pub struct GasnetTiming {
+    pub clock: ClockDomain,
+    /// Host command ingress: MMIO write through PCIe into the cmd FIFO.
+    pub cmd_ingress_cycles: u64,
+    /// TX scheduler arbitration + FIFO traversal.
+    pub tx_sched_cycles: u64,
+    /// Sequencer: header formation for a new message.
+    pub seq_header_cycles: u64,
+    /// Sequencer: per-packet occupancy (fragment bookkeeping + DMA
+    /// descriptor update). Pipelined against serialization: binds only
+    /// when serialization is faster — the source of the 128/256 B
+    /// efficiency cliff in Fig. 5.
+    pub seq_packet_cycles: u64,
+    /// Sequencer occupancy for header-only packets (no DMA descriptor to
+    /// program) — keeps short-message latency at the paper's 0.21 µs.
+    pub seq_packet_hdr_cycles: u64,
+    /// RX: header decode + dispatch match.
+    pub rx_decode_cycles: u64,
+    /// Receive-handler execution for built-in PUT/ACK bookkeeping.
+    pub handler_put_cycles: u64,
+    /// Receive-handler execution to turn a GET request into a PUT reply.
+    pub handler_get_cycles: u64,
+    /// Compute-command scheduler enqueue (AM -> DLA queue).
+    pub handler_compute_cycles: u64,
+}
+
+impl GasnetTiming {
+    pub fn d5005() -> Self {
+        GasnetTiming {
+            clock: ClockDomain::from_mhz(250.0),
+            cmd_ingress_cycles: 6,
+            tx_sched_cycles: 3,
+            seq_header_cycles: 4,
+            seq_packet_cycles: 12,
+            seq_packet_hdr_cycles: 2,
+            rx_decode_cycles: 4,
+            handler_put_cycles: 2,
+            handler_get_cycles: 7,
+            handler_compute_cycles: 4,
+        }
+    }
+
+    pub fn cmd_ingress(&self) -> SimTime {
+        self.clock.cycles(self.cmd_ingress_cycles)
+    }
+    pub fn tx_sched(&self) -> SimTime {
+        self.clock.cycles(self.tx_sched_cycles)
+    }
+    pub fn seq_header(&self) -> SimTime {
+        self.clock.cycles(self.seq_header_cycles)
+    }
+    pub fn seq_packet(&self) -> SimTime {
+        self.clock.cycles(self.seq_packet_cycles)
+    }
+    pub fn seq_packet_hdr(&self) -> SimTime {
+        self.clock.cycles(self.seq_packet_hdr_cycles)
+    }
+    pub fn rx_decode(&self) -> SimTime {
+        self.clock.cycles(self.rx_decode_cycles)
+    }
+    pub fn handler_put(&self) -> SimTime {
+        self.clock.cycles(self.handler_put_cycles)
+    }
+    pub fn handler_get(&self) -> SimTime {
+        self.clock.cycles(self.handler_get_cycles)
+    }
+    pub fn handler_compute(&self) -> SimTime {
+        self.clock.cycles(self.handler_compute_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::LinkParams;
+
+    #[test]
+    fn short_put_decomposition_near_paper() {
+        let t = GasnetTiming::d5005();
+        let link = LinkParams::qsfp_d5005();
+        let total = t.cmd_ingress()
+            + t.tx_sched()
+            + t.seq_header()
+            + link.serialize(crate::gasnet::WIRE_HEADER_BYTES)
+            + link.propagation
+            + t.rx_decode();
+        let us = total.as_us();
+        assert!(
+            (0.19..0.23).contains(&us),
+            "short PUT path {us} µs, paper 0.21"
+        );
+    }
+
+    #[test]
+    fn sequencer_binds_only_small_packets() {
+        let t = GasnetTiming::d5005();
+        let link = LinkParams::qsfp_d5005();
+        // 128 B payload: wire = 9 flits ≈ 9.3 cy coded < 12 cy sequencer.
+        assert!(link.serialize(128 + 16) < t.seq_packet());
+        // 256 B payload: wire = 17 flits > 12 cy sequencer.
+        assert!(link.serialize(256 + 16) > t.seq_packet());
+    }
+}

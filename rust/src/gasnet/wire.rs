@@ -1,0 +1,358 @@
+//! AM wire format and packetization.
+//!
+//! GASNet AMs come in three categories (paper §III-A): **Short** (no
+//! payload — configuration/control), **Medium** (payload to the remote
+//! node's *private* memory), and **Long** (payload to the globally shared
+//! segment). Requests and Replies are symmetric except replies may only
+//! target the requesting node.
+//!
+//! On the wire each packet carries a 16-byte (one 128-bit flit) header.
+//! Long transfers larger than the configured packet payload size are
+//! fragmented; every fragment carries its own absolute destination
+//! address so the receiver's write DMA needs no reassembly state — this
+//! per-packet header is the overhead that separates the 128 B curve from
+//! the 1024 B curve in Fig. 5.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::memory::{GlobalAddr, NodeId};
+
+/// Bytes of header per packet on the wire (one 128-bit flit).
+pub const WIRE_HEADER_BYTES: u64 = 16;
+
+/// Short messages carry up to 4 32-bit handler arguments (GASNet spec
+/// allows more; 4 matches what the FSHMEM core packs into header flits).
+pub const MAX_ARGS: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AmCategory {
+    Short,
+    Medium,
+    Long,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AmKind {
+    Request,
+    Reply,
+}
+
+/// Payload source for an outgoing message. `MemRead` defers the copy to
+/// the AM sequencer's read DMA at transmission time (zero-copy through
+/// the event queue, like hardware).
+#[derive(Debug, Clone)]
+pub enum Payload {
+    None,
+    /// Literal bytes handed over by the host (small control payloads).
+    Bytes(Arc<Vec<u8>>),
+    /// Read `len` bytes from the local node's memory at send time.
+    MemRead { shared: bool, offset: u64, len: u64 },
+}
+
+impl Payload {
+    pub fn len(&self) -> u64 {
+        match self {
+            Payload::None => 0,
+            Payload::Bytes(b) => b.len() as u64,
+            Payload::MemRead { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A fully-specified active message, pre-packetization.
+#[derive(Debug, Clone)]
+pub struct AmMessage {
+    pub kind: AmKind,
+    pub category: AmCategory,
+    /// Handler opcode — the hardware replacement for GASNet's handler
+    /// function pointer (paper §III-A bullet 1).
+    pub handler: u8,
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Initiator-side operation token, echoed by replies/acks.
+    pub token: u32,
+    /// Destination address for Long payloads (shared segment) or Medium
+    /// payloads (private-memory offset, node-local).
+    pub dst_addr: GlobalAddr,
+    pub args: [u32; MAX_ARGS],
+    pub payload: Payload,
+}
+
+impl AmMessage {
+    pub fn validate(&self) -> Result<()> {
+        match self.category {
+            AmCategory::Short => {
+                if !self.payload.is_empty() {
+                    bail!("short AM cannot carry a payload");
+                }
+            }
+            AmCategory::Medium | AmCategory::Long => {
+                if self.payload.is_empty() {
+                    bail!("{:?} AM requires a payload", self.category);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One packet: a 16-byte header flit plus up to `packet_payload` bytes.
+///
+/// Fragments of one message *share* the message buffer (`buf`) and carry
+/// their byte range — one allocation per message, not per packet (the
+/// DES moves hundreds of thousands of these per simulated second).
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub kind: AmKind,
+    pub category: AmCategory,
+    pub handler: u8,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub token: u32,
+    /// Absolute destination of this fragment's payload.
+    pub dst_addr: GlobalAddr,
+    pub args: [u32; MAX_ARGS],
+    /// Whole-message payload buffer, shared by all fragments.
+    buf: Arc<Vec<u8>>,
+    /// This fragment's slice of `buf`.
+    lo: u32,
+    hi: u32,
+    /// Fragment position flags.
+    pub first: bool,
+    pub last: bool,
+    /// Total payload bytes of the whole message (for op accounting).
+    pub msg_payload_len: u64,
+}
+
+impl Packet {
+    pub fn payload(&self) -> &[u8] {
+        &self.buf[self.lo as usize..self.hi as usize]
+    }
+
+    pub fn payload_len(&self) -> u64 {
+        (self.hi - self.lo) as u64
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        WIRE_HEADER_BYTES + self.payload_len()
+    }
+
+    /// Encode the header into its 16-byte wire image. The simulator
+    /// carries the struct; this exists to *prove the header fits one
+    /// flit* and for wire-format tests.
+    pub fn encode_header(&self) -> [u8; WIRE_HEADER_BYTES as usize] {
+        let mut h = [0u8; WIRE_HEADER_BYTES as usize];
+        let kind_bits = match self.kind {
+            AmKind::Request => 0u8,
+            AmKind::Reply => 1,
+        };
+        let cat_bits = match self.category {
+            AmCategory::Short => 0u8,
+            AmCategory::Medium => 1,
+            AmCategory::Long => 2,
+        };
+        h[0] = kind_bits | (cat_bits << 1) | ((self.first as u8) << 3) | ((self.last as u8) << 4);
+        h[1] = self.handler;
+        h[2..4].copy_from_slice(&(self.src as u16).to_le_bytes());
+        h[4..6].copy_from_slice(&(self.dst as u16).to_le_bytes());
+        h[6..8].copy_from_slice(&(self.token as u16).to_le_bytes());
+        // 40-bit address: node(16) folded into src/dst; offset 40 bits.
+        let off = self.dst_addr.offset();
+        h[8..13].copy_from_slice(&off.to_le_bytes()[..5]);
+        let plen = self.payload_len() as u16;
+        h[13..15].copy_from_slice(&plen.to_le_bytes());
+        h[15] = (self.dst_addr.node() & 0xFF) as u8;
+        h
+    }
+
+    /// Decode the fields we encode (used by wire-format round-trip tests).
+    pub fn decode_header(h: &[u8; 16]) -> (AmKind, AmCategory, u8, NodeId, NodeId, u16, u64, bool, bool, u16) {
+        let kind = if h[0] & 1 == 0 {
+            AmKind::Request
+        } else {
+            AmKind::Reply
+        };
+        let category = match (h[0] >> 1) & 0b11 {
+            0 => AmCategory::Short,
+            1 => AmCategory::Medium,
+            _ => AmCategory::Long,
+        };
+        let first = h[0] & (1 << 3) != 0;
+        let last = h[0] & (1 << 4) != 0;
+        let handler = h[1];
+        let src = u16::from_le_bytes([h[2], h[3]]) as NodeId;
+        let dst = u16::from_le_bytes([h[4], h[5]]) as NodeId;
+        let token = u16::from_le_bytes([h[6], h[7]]);
+        let mut off_bytes = [0u8; 8];
+        off_bytes[..5].copy_from_slice(&h[8..13]);
+        let offset = u64::from_le_bytes(off_bytes);
+        let plen = u16::from_le_bytes([h[13], h[14]]);
+        (kind, category, handler, src, dst, token, offset, first, last, plen)
+    }
+}
+
+/// Split a message's payload into packets of at most `packet_payload`
+/// bytes. All fragments share `payload_buf` (zero-copy); short messages
+/// produce exactly one header-only packet.
+pub fn packetize(
+    msg: &AmMessage,
+    payload_buf: Arc<Vec<u8>>,
+    packet_payload: usize,
+) -> Vec<Packet> {
+    assert!(packet_payload > 0);
+    assert_eq!(payload_buf.len() as u64, msg.payload.len());
+    let total = payload_buf.len();
+    let base = Packet {
+        kind: msg.kind,
+        category: msg.category,
+        handler: msg.handler,
+        src: msg.src,
+        dst: msg.dst,
+        token: msg.token,
+        dst_addr: msg.dst_addr,
+        args: msg.args,
+        buf: payload_buf,
+        lo: 0,
+        hi: 0,
+        first: true,
+        last: true,
+        msg_payload_len: total as u64,
+    };
+    if total == 0 {
+        return vec![base];
+    }
+    let n = total.div_ceil(packet_payload);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let lo = i * packet_payload;
+        let hi = ((i + 1) * packet_payload).min(total);
+        let mut p = base.clone();
+        p.lo = lo as u32;
+        p.hi = hi as u32;
+        p.dst_addr = msg.dst_addr.add(lo as u64);
+        p.first = i == 0;
+        p.last = i == n - 1;
+        out.push(p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(category: AmCategory, payload: Payload) -> AmMessage {
+        AmMessage {
+            kind: AmKind::Request,
+            category,
+            handler: 3,
+            src: 0,
+            dst: 1,
+            token: 77,
+            dst_addr: GlobalAddr::new(1, 0x4000),
+            args: [1, 2, 3, 4],
+            payload,
+        }
+    }
+
+    #[test]
+    fn validate_category_payload_rules() {
+        assert!(msg(AmCategory::Short, Payload::None).validate().is_ok());
+        assert!(msg(AmCategory::Short, Payload::Bytes(Arc::new(vec![1])))
+            .validate()
+            .is_err());
+        assert!(msg(AmCategory::Long, Payload::None).validate().is_err());
+        assert!(msg(
+            AmCategory::Long,
+            Payload::MemRead {
+                shared: true,
+                offset: 0,
+                len: 64
+            }
+        )
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn short_is_single_header_packet() {
+        let m = msg(AmCategory::Short, Payload::None);
+        let pkts = packetize(&m, Arc::new(Vec::new()), 512);
+        assert_eq!(pkts.len(), 1);
+        assert!(pkts[0].first && pkts[0].last);
+        assert_eq!(pkts[0].wire_bytes(), WIRE_HEADER_BYTES);
+    }
+
+    #[test]
+    fn long_fragments_with_absolute_addresses() {
+        let data: Vec<u8> = (0..1000u32).map(|i| i as u8).collect();
+        let m = msg(
+            AmCategory::Long,
+            Payload::Bytes(Arc::new(data.clone())),
+        );
+        let pkts = packetize(&m, Arc::new(data.clone()), 256);
+        assert_eq!(pkts.len(), 4);
+        assert_eq!(pkts[0].payload_len(), 256);
+        assert_eq!(pkts[3].payload_len(), 232, "tail fragment");
+        assert!(pkts[0].first && !pkts[0].last);
+        assert!(!pkts[3].first && pkts[3].last);
+        assert_eq!(pkts[1].dst_addr.offset(), 0x4000 + 256);
+        assert_eq!(pkts[3].dst_addr.offset(), 0x4000 + 768);
+        // Reassembly = concatenation by address.
+        let mut rebuilt = Vec::new();
+        for p in &pkts {
+            rebuilt.extend_from_slice(p.payload());
+        }
+        assert_eq!(rebuilt, data);
+    }
+
+    #[test]
+    fn exact_multiple_has_full_tail() {
+        let data = vec![7u8; 512];
+        let m = msg(AmCategory::Long, Payload::Bytes(Arc::new(data.clone())));
+        let pkts = packetize(&m, Arc::new(data.clone()), 256);
+        assert_eq!(pkts.len(), 2);
+        assert_eq!(pkts[1].payload_len(), 256);
+    }
+
+    #[test]
+    fn header_encodes_in_one_flit_and_roundtrips() {
+        let data = vec![1u8; 100];
+        let m = msg(AmCategory::Long, Payload::Bytes(Arc::new(data.clone())));
+        let p = &packetize(&m, Arc::new(data.clone()), 128)[0];
+        let h = p.encode_header();
+        assert_eq!(h.len() as u64, WIRE_HEADER_BYTES);
+        let (kind, cat, handler, src, dst, token, off, first, last, plen) =
+            Packet::decode_header(&h);
+        assert_eq!(kind, AmKind::Request);
+        assert_eq!(cat, AmCategory::Long);
+        assert_eq!(handler, 3);
+        assert_eq!(src, 0);
+        assert_eq!(dst, 1);
+        assert_eq!(token, 77);
+        assert_eq!(off, 0x4000);
+        assert!(first && last);
+        assert_eq!(plen, 100);
+    }
+
+    #[test]
+    fn payload_len_helpers() {
+        assert_eq!(Payload::None.len(), 0);
+        assert!(Payload::None.is_empty());
+        assert_eq!(
+            Payload::MemRead {
+                shared: true,
+                offset: 0,
+                len: 42
+            }
+            .len(),
+            42
+        );
+    }
+}

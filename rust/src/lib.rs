@@ -1,0 +1,52 @@
+//! # FSHMEM — PGAS on (simulated) FPGAs
+//!
+//! Reproduction of *FSHMEM: Supporting Partitioned Global Address Space on
+//! FPGAs for Large-Scale Hardware Acceleration Infrastructure* (Arthanto,
+//! Ojika, Kim — CS.DC 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the FSHMEM system itself: GASNet core (active
+//!   messages, one-sided PUT/GET, handler table), partitioned global
+//!   address space, inter-FPGA fabric, DLA compute core with Automatic
+//!   Result Transfer, host API, baselines, and the experiment harness.
+//!   Because real Stratix-10 hardware is unavailable, the hardware is a
+//!   cycle-level discrete-event simulation calibrated to the paper's
+//!   datapath (128 bit @ 250 MHz, QSFP+ links); see `DESIGN.md`.
+//! * **L2/L1 (python/, build-time only)** — the DLA's numerics: JAX graph
+//!   over Pallas kernels, AOT-lowered to HLO text artifacts.
+//! * **runtime** — loads those artifacts through the PJRT C API (`xla`
+//!   crate) so the Rust request path executes real compiled kernels with
+//!   Python never in the loop.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use fshmem::api::Fshmem;
+//! use fshmem::config::Config;
+//!
+//! let mut f = Fshmem::new(Config::two_node_ring());
+//! let src = vec![0xAB; 4096];
+//! f.write_local(0, 0x1000, &src);
+//! let h = f.put(0, f.global_addr(1, 0x2000), &src);
+//! f.wait(h);
+//! assert_eq!(f.read_shared(1, 0x2000, 4096), src);
+//! ```
+
+pub mod api;
+pub mod baselines;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod dla;
+pub mod fabric;
+pub mod gasnet;
+pub mod memory;
+pub mod model;
+pub mod reports;
+pub mod resource;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+pub use api::Fshmem;
+pub use config::Config;

@@ -1,0 +1,126 @@
+//! `fshmem` — CLI launcher for the FSHMEM framework.
+//!
+//! ```text
+//! fshmem info                         system + artifact status
+//! fshmem bench <experiment> [--fast] [--numerics timing|software|pjrt]
+//!                           [--csv out.csv]
+//! fshmem run [--config file.cfg]      demo put/get/AM round trip
+//! fshmem list                         available experiments
+//! ```
+
+use anyhow::{Context, Result};
+
+use fshmem::config::{Config, Numerics};
+use fshmem::coordinator::{run_experiment, RunOptions, EXPERIMENTS};
+use fshmem::util::cli::Args;
+use fshmem::Fshmem;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("info") => info(),
+        Some("list") => {
+            for (name, desc) in EXPERIMENTS {
+                println!("{name:<12} {desc}");
+            }
+            Ok(())
+        }
+        Some("bench") => {
+            let name = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let numerics = match args.opt("numerics") {
+                None | Some("timing") => Numerics::TimingOnly,
+                Some("software") => Numerics::Software,
+                Some("pjrt") => Numerics::Pjrt,
+                Some(other) => anyhow::bail!("unknown numerics '{other}'"),
+            };
+            let opts = RunOptions {
+                fast: args.flag("fast"),
+                numerics,
+                csv_out: args.opt("csv").map(String::from),
+            };
+            let report = run_experiment(name, &opts)?;
+            println!("{report}");
+            Ok(())
+        }
+        Some("run") => {
+            let cfg = match args.opt("config") {
+                Some(path) => Config::from_file(path).context("loading config")?,
+                None => Config::two_node_ring(),
+            };
+            demo(cfg)
+        }
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "fshmem — PGAS on (simulated) FPGAs
+usage: fshmem <info|list|bench|run> [options]
+  info                      system + artifact status
+  list                      available experiments
+  bench <name> [--fast] [--numerics timing|software|pjrt] [--csv f.csv]
+  run [--config file.cfg]   demo put/get/AM round trip";
+
+fn info() -> Result<()> {
+    let cfg = Config::two_node_ring();
+    println!("FSHMEM reproduction — paper prototype configuration:");
+    println!(
+        "  fabric: {:?}, {} ports/node, packet {} B",
+        cfg.topology,
+        cfg.topology.ports_per_node(),
+        cfg.packet_payload
+    );
+    println!(
+        "  link: {:.0} MB/s raw (128 bit @ 250 MHz), DLA peak {:.1} GOPS",
+        cfg.link.raw_mb_s(),
+        cfg.dla.peak_gops()
+    );
+    match fshmem::runtime::Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => {
+            let names: Vec<&str> = m.names().collect();
+            println!("  artifacts: {} compiled kernels: {}", names.len(), names.join(", "));
+        }
+        Err(e) => println!("  artifacts: not built ({e:#})"),
+    }
+    Ok(())
+}
+
+/// A put/get/AM round trip on the two-node prototype (what `run` does).
+fn demo(cfg: Config) -> Result<()> {
+    let mut f = Fshmem::try_new(cfg)?;
+    println!("fabric up: {} nodes", f.nodes());
+
+    let data: Vec<u8> = (0..4096u32).map(|i| i as u8).collect();
+    let h = f.put(0, f.global_addr(1, 0x1000), &data);
+    f.wait(h);
+    let (iss, hdr, done, acked) = f.op_times(h);
+    println!(
+        "put 4 KiB: header {:.3} us, data {:.3} us, acked {:.3} us",
+        hdr.unwrap().since(iss).as_us(),
+        done.unwrap().since(iss).as_us(),
+        acked.unwrap().since(iss).as_us()
+    );
+    assert_eq!(f.read_shared(1, 0x1000, 4096), data);
+
+    let h = f.get(0, f.global_addr(1, 0x1000), 0x8000, 4096);
+    f.wait(h);
+    let (iss, hdr, _, _) = f.op_times(h);
+    println!("get 4 KiB: reply header {:.3} us", hdr.unwrap().since(iss).as_us());
+
+    let opcode = f.register_handler(1, 7);
+    let h = f.am_short(0, 1, opcode, [1, 2, 3, 4]);
+    f.wait(h);
+    println!("am_short delivered: {:?}", f.drain_user_ams()[0].args);
+
+    let hs = f.barrier_all();
+    f.wait_all(&hs);
+    println!("barrier complete at t={}", f.now());
+    println!("events processed: {}", f.events_processed());
+    Ok(())
+}

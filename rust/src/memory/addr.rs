@@ -1,0 +1,147 @@
+//! Global address layout and translation.
+//!
+//! A [`GlobalAddr`] packs `(node, offset)` into a u64:
+//! bits 63..40 = node id, bits 39..0 = byte offset into that node's shared
+//! segment. 40 offset bits cover up to 1 TiB per node — comfortably above
+//! the D5005's 32 GiB DDR — while allowing 16 M nodes.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Index of a node (FPGA) in the fabric.
+pub type NodeId = u32;
+
+const OFFSET_BITS: u32 = 40;
+const OFFSET_MASK: u64 = (1 << OFFSET_BITS) - 1;
+
+/// An address in the partitioned global address space.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GlobalAddr(pub u64);
+
+impl GlobalAddr {
+    pub fn new(node: NodeId, offset: u64) -> Self {
+        debug_assert!(offset <= OFFSET_MASK, "offset {offset:#x} too large");
+        GlobalAddr(((node as u64) << OFFSET_BITS) | (offset & OFFSET_MASK))
+    }
+
+    pub fn node(self) -> NodeId {
+        (self.0 >> OFFSET_BITS) as NodeId
+    }
+
+    pub fn offset(self) -> u64 {
+        self.0 & OFFSET_MASK
+    }
+
+    /// Address `bytes` further into the same node's segment.
+    pub fn add(self, bytes: u64) -> Self {
+        GlobalAddr::new(self.node(), self.offset() + bytes)
+    }
+}
+
+impl fmt::Debug for GlobalAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "g{}:{:#x}", self.node(), self.offset())
+    }
+}
+
+/// The fabric-wide segment map: which nodes exist and how big each node's
+/// shared segment is. Validates translations.
+#[derive(Debug, Clone)]
+pub struct AddressMap {
+    pub nodes: u32,
+    pub segment_bytes: u64,
+}
+
+impl AddressMap {
+    pub fn new(nodes: u32, segment_bytes: u64) -> Self {
+        assert!(nodes > 0);
+        assert!(segment_bytes > 0 && segment_bytes <= OFFSET_MASK + 1);
+        AddressMap {
+            nodes,
+            segment_bytes,
+        }
+    }
+
+    /// Translate, checking that the access `[addr, addr+len)` stays inside
+    /// the owning node's shared segment (no cross-node spills: GASNet long
+    /// messages target a single node's segment).
+    pub fn translate(&self, addr: GlobalAddr, len: u64) -> Result<(NodeId, u64)> {
+        let node = addr.node();
+        let off = addr.offset();
+        if node >= self.nodes {
+            bail!("address {addr:?}: node {node} out of range (fabric has {})", self.nodes);
+        }
+        if off + len > self.segment_bytes {
+            bail!(
+                "access {addr:?}+{len} overruns shared segment ({} bytes)",
+                self.segment_bytes
+            );
+        }
+        Ok((node, off))
+    }
+
+    /// Compose a global address; errors if out of range (public API path —
+    /// the debug_assert in `GlobalAddr::new` guards internal use).
+    pub fn compose(&self, node: NodeId, offset: u64) -> Result<GlobalAddr> {
+        if node >= self.nodes {
+            bail!("node {node} out of range ({} nodes)", self.nodes);
+        }
+        if offset >= self.segment_bytes {
+            bail!(
+                "offset {offset:#x} outside shared segment ({} bytes)",
+                self.segment_bytes
+            );
+        }
+        Ok(GlobalAddr::new(node, offset))
+    }
+
+    pub fn total_shared_bytes(&self) -> u64 {
+        self.nodes as u64 * self.segment_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let a = GlobalAddr::new(3, 0xDEAD_BEEF);
+        assert_eq!(a.node(), 3);
+        assert_eq!(a.offset(), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn add_stays_on_node() {
+        let a = GlobalAddr::new(7, 0x100).add(0x50);
+        assert_eq!(a.node(), 7);
+        assert_eq!(a.offset(), 0x150);
+    }
+
+    #[test]
+    fn translate_validates_node_and_bounds() {
+        let map = AddressMap::new(2, 1 << 20);
+        assert!(map.translate(GlobalAddr::new(0, 0), 16).is_ok());
+        assert!(map.translate(GlobalAddr::new(1, (1 << 20) - 16), 16).is_ok());
+        assert!(map.translate(GlobalAddr::new(2, 0), 1).is_err(), "bad node");
+        assert!(
+            map.translate(GlobalAddr::new(0, (1 << 20) - 8), 16).is_err(),
+            "overrun"
+        );
+    }
+
+    #[test]
+    fn compose_validates() {
+        let map = AddressMap::new(4, 4096);
+        assert_eq!(map.compose(2, 100).unwrap(), GlobalAddr::new(2, 100));
+        assert!(map.compose(4, 0).is_err());
+        assert!(map.compose(0, 4096).is_err());
+    }
+
+    #[test]
+    fn total_shared() {
+        let map = AddressMap::new(8, 1 << 30);
+        assert_eq!(map.total_shared_bytes(), 8 << 30);
+    }
+}

@@ -1,0 +1,156 @@
+//! Per-node memory: the shared (globally addressable) segment and the
+//! private local memory. Plain byte arrays with bounds-checked access —
+//! the *semantics* substrate; timing lives in [`super::dma`].
+
+use anyhow::{bail, Result};
+
+/// One node's DDR: `shared` is its partition of the global address space,
+/// `private` is local-only scratch (GASNet medium messages land here).
+#[derive(Debug)]
+pub struct NodeMemory {
+    shared: Vec<u8>,
+    private: Vec<u8>,
+}
+
+impl NodeMemory {
+    pub fn new(shared_bytes: usize, private_bytes: usize) -> Self {
+        NodeMemory {
+            shared: vec![0; shared_bytes],
+            private: vec![0; private_bytes],
+        }
+    }
+
+    pub fn shared_len(&self) -> usize {
+        self.shared.len()
+    }
+
+    pub fn private_len(&self) -> usize {
+        self.private.len()
+    }
+
+    pub fn read_shared(&self, offset: u64, len: usize) -> Result<&[u8]> {
+        range_of(&self.shared, offset, len, "shared")
+    }
+
+    pub fn write_shared(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        let dst = range_of_mut(&mut self.shared, offset, data.len(), "shared")?;
+        dst.copy_from_slice(data);
+        Ok(())
+    }
+
+    pub fn read_private(&self, offset: u64, len: usize) -> Result<&[u8]> {
+        range_of(&self.private, offset, len, "private")
+    }
+
+    pub fn write_private(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        let dst = range_of_mut(&mut self.private, offset, data.len(), "private")?;
+        dst.copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Typed views used by the DLA (f32 tensors in the shared segment).
+    pub fn read_shared_f32(&self, offset: u64, count: usize) -> Result<Vec<f32>> {
+        let bytes = self.read_shared(offset, count * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn write_shared_f32(&mut self, offset: u64, data: &[f32]) -> Result<()> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write_shared(offset, &bytes)
+    }
+
+    /// fp16 tensor views — the DLA's native format (2 bytes/element);
+    /// values are converted to/from f32 at the boundary.
+    pub fn read_shared_f16(&self, offset: u64, count: usize) -> Result<Vec<f32>> {
+        let bytes = self.read_shared(offset, count * 2)?;
+        Ok(crate::util::f16::decode_f16_slice(bytes))
+    }
+
+    pub fn write_shared_f16(&mut self, offset: u64, data: &[f32]) -> Result<()> {
+        let mut bytes = Vec::with_capacity(data.len() * 2);
+        crate::util::f16::encode_f16_slice(data, &mut bytes);
+        self.write_shared(offset, &bytes)
+    }
+}
+
+fn range_of<'a>(buf: &'a [u8], offset: u64, len: usize, kind: &str) -> Result<&'a [u8]> {
+    let off = offset as usize;
+    if off.checked_add(len).map(|end| end > buf.len()).unwrap_or(true) {
+        bail!(
+            "{kind} access [{off:#x}, +{len}) out of bounds (size {:#x})",
+            buf.len()
+        );
+    }
+    Ok(&buf[off..off + len])
+}
+
+fn range_of_mut<'a>(
+    buf: &'a mut [u8],
+    offset: u64,
+    len: usize,
+    kind: &str,
+) -> Result<&'a mut [u8]> {
+    let off = offset as usize;
+    if off.checked_add(len).map(|end| end > buf.len()).unwrap_or(true) {
+        bail!(
+            "{kind} access [{off:#x}, +{len}) out of bounds (size {:#x})",
+            buf.len()
+        );
+    }
+    Ok(&mut buf[off..off + len])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_roundtrip() {
+        let mut m = NodeMemory::new(4096, 1024);
+        m.write_shared(16, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(m.read_shared(16, 4).unwrap(), &[1, 2, 3, 4]);
+        assert_eq!(m.read_shared(20, 2).unwrap(), &[0, 0]);
+    }
+
+    #[test]
+    fn private_roundtrip_independent_of_shared() {
+        let mut m = NodeMemory::new(64, 64);
+        m.write_private(0, &[9; 8]).unwrap();
+        assert_eq!(m.read_shared(0, 8).unwrap(), &[0; 8]);
+        assert_eq!(m.read_private(0, 8).unwrap(), &[9; 8]);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut m = NodeMemory::new(32, 16);
+        assert!(m.write_shared(30, &[0; 4]).is_err());
+        assert!(m.read_shared(32, 1).is_err());
+        assert!(m.write_private(15, &[0; 2]).is_err());
+        assert!(m.read_shared(u64::MAX, 1).is_err(), "offset overflow");
+    }
+
+    #[test]
+    fn f32_views_roundtrip() {
+        let mut m = NodeMemory::new(1024, 0);
+        let data = [1.5f32, -2.25, 0.0, 1e10];
+        m.write_shared_f32(64, &data).unwrap();
+        assert_eq!(m.read_shared_f32(64, 4).unwrap(), data);
+    }
+
+    #[test]
+    fn f16_views_roundtrip_exact_values() {
+        let mut m = NodeMemory::new(1024, 0);
+        let data = [1.5f32, -2.25, 0.0, 128.0];
+        m.write_shared_f16(32, &data).unwrap();
+        assert_eq!(m.read_shared_f16(32, 4).unwrap(), data);
+        // Half the footprint of f32.
+        m.write_shared_f16(1024 - 8, &data).unwrap(); // 4 elems = 8 bytes
+        assert!(m.write_shared_f32(1024 - 8, &data).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Partitioned Global Address Space: the memory substrate.
+//!
+//! Every node contributes a *shared segment* to a single global address
+//! space (any node can PUT/GET it one-sidedly) and keeps a *private
+//! memory* for local processing — the defining split of the PGAS model
+//! (paper Fig. 1c). `addr` does the global<->(node, offset) translation,
+//! `mem` holds the actual bytes, `dma` models the DDR/DMA timing of the
+//! paper's read/write DMA engines.
+
+pub mod addr;
+pub mod dma;
+pub mod mem;
+
+pub use addr::{AddressMap, GlobalAddr, NodeId};
+pub use dma::DmaModel;
+pub use mem::NodeMemory;

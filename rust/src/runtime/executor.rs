@@ -1,0 +1,136 @@
+//! PJRT executor: compile HLO-text artifacts once, execute many times.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{ArtifactEntry, Manifest};
+
+/// A compiled artifact set on the PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Executable cache: compile once at load (AOT), hit thereafter.
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Load every artifact in the manifest and compile it. This is the
+    /// startup cost; the request path only executes.
+    pub fn load(dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for (name, entry) in &manifest.entries {
+            let exe = Self::compile_one(&client, entry)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            exes,
+        })
+    }
+
+    /// Load only the named artifacts (examples that need one kernel).
+    pub fn load_subset(dir: &str, names: &[&str]) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for &name in names {
+            let entry = manifest.get(name)?;
+            let exe = Self::compile_one(&client, entry)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            exes,
+        })
+    }
+
+    fn compile_one(
+        client: &xla::PjRtClient,
+        entry: &ArtifactEntry,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = entry
+            .file
+            .to_str()
+            .context("artifact path not valid UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute artifact `name` on f32 tensors (shapes validated against
+    /// the manifest). Returns the output tensors flattened to `Vec<f32>`.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.get(name)?;
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not compiled"))?;
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "'{name}' expects {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&entry.inputs) {
+            anyhow::ensure!(
+                data.len() == spec.elements(),
+                "'{name}' input expects {} elements ({:?}), got {}",
+                spec.elements(),
+                spec.shape,
+                data.len()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "'{name}' produced {} outputs, manifest says {}",
+            parts.len(),
+            entry.outputs.len()
+        );
+        parts
+            .iter()
+            .map(|lit| Ok(lit.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Real-PJRT tests live in rust/tests/runtime_e2e.rs (they need
+    //! `make artifacts` to have run). Here: error-path checks only.
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let msg = match PjrtRuntime::load("/nonexistent-dir") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("load of missing dir must fail"),
+        };
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

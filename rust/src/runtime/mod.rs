@@ -1,0 +1,20 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the production numerics path of the three-layer stack: Python
+//! lowers the L2 model (which calls the L1 Pallas kernels) to HLO *text*
+//! once at build time (`make artifacts`); this module loads the text
+//! through `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+//! client, and executes it from the Rust request path. Python never runs
+//! at request time.
+//!
+//! Interchange is HLO text because jax >= 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md and python/compile/aot.py).
+
+pub mod artifacts;
+pub mod backend;
+pub mod executor;
+
+pub use artifacts::{ArtifactEntry, Manifest, TensorSpec};
+pub use backend::PjrtBackend;
+pub use executor::PjrtRuntime;

@@ -1,0 +1,175 @@
+//! Performance counters — the simulated analogue of the hardware
+//! performance counter the paper adds for its measurements (§IV-A): "we
+//! add a hardware performance counter to measure the time taken from when
+//! a command is given until the corresponding message is returned."
+//!
+//! Two kinds:
+//! * named monotonic counters (`incr`/`add`) — packets sent, bytes moved,
+//!   handler invocations, scheduler stalls ...
+//! * named latency series (`record_latency`) — per-operation durations,
+//!   with streaming min/max/mean and retained samples for percentiles.
+
+use std::collections::BTreeMap;
+
+use super::time::SimTime;
+
+#[derive(Debug, Default, Clone)]
+pub struct LatencySeries {
+    samples_ps: Vec<u64>,
+}
+
+impl LatencySeries {
+    pub fn record(&mut self, d: SimTime) {
+        self.samples_ps.push(d.as_ps());
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ps.len()
+    }
+
+    pub fn min(&self) -> SimTime {
+        SimTime(self.samples_ps.iter().copied().min().unwrap_or(0))
+    }
+
+    pub fn max(&self) -> SimTime {
+        SimTime(self.samples_ps.iter().copied().max().unwrap_or(0))
+    }
+
+    pub fn mean(&self) -> SimTime {
+        if self.samples_ps.is_empty() {
+            return SimTime::ZERO;
+        }
+        let sum: u128 = self.samples_ps.iter().map(|&x| x as u128).sum();
+        SimTime((sum / self.samples_ps.len() as u128) as u64)
+    }
+
+    /// p in [0, 100]; nearest-rank percentile.
+    pub fn percentile(&self, p: f64) -> SimTime {
+        if self.samples_ps.is_empty() {
+            return SimTime::ZERO;
+        }
+        let mut sorted = self.samples_ps.clone();
+        sorted.sort_unstable();
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        SimTime(sorted[rank.min(sorted.len() - 1)])
+    }
+
+    pub fn samples(&self) -> &[u64] {
+        &self.samples_ps
+    }
+}
+
+/// Counter registry. Keys are static strings.
+///
+/// Monotonic counters live in a small linear-scan Vec with a
+/// pointer-equality fast path: `incr`/`add` sit on the per-packet hot
+/// path of the DES, and the same `&'static str` literal from the same
+/// call site compares by address in one instruction. Reports sort on
+/// read, so output stays deterministic.
+#[derive(Debug, Default)]
+pub struct Counters {
+    counts: Vec<(&'static str, u64)>,
+    latencies: BTreeMap<&'static str, LatencySeries>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&mut self, key: &'static str) {
+        self.add(key, 1);
+    }
+
+    pub fn add(&mut self, key: &'static str, n: u64) {
+        for (k, v) in self.counts.iter_mut() {
+            if std::ptr::eq(*k as *const str, key as *const str) || *k == key {
+                *v += n;
+                return;
+            }
+        }
+        self.counts.push((key, n));
+    }
+
+    pub fn get(&self, key: &'static str) -> u64 {
+        self.counts
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+
+    pub fn record_latency(&mut self, key: &'static str, d: SimTime) {
+        self.latencies.entry(key).or_default().record(d);
+    }
+
+    pub fn latency(&self, key: &'static str) -> Option<&LatencySeries> {
+        self.latencies.get(key)
+    }
+
+    /// Counters in deterministic (sorted) order for reports.
+    pub fn counts(&self) -> impl Iterator<Item = (&'static str, u64)> {
+        let mut v = self.counts.clone();
+        v.sort_unstable_by_key(|&(k, _)| k);
+        v.into_iter()
+    }
+
+    pub fn latencies(
+        &self,
+    ) -> impl Iterator<Item = (&'static str, &LatencySeries)> + '_ {
+        self.latencies.iter().map(|(&k, v)| (k, v))
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.clear();
+        self.latencies.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let mut c = Counters::new();
+        c.incr("pkt");
+        c.add("pkt", 4);
+        c.add("bytes", 1024);
+        assert_eq!(c.get("pkt"), 5);
+        assert_eq!(c.get("bytes"), 1024);
+        assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn latency_stats() {
+        let mut c = Counters::new();
+        for ns in [10, 20, 30, 40] {
+            c.record_latency("put", SimTime::from_ns(ns));
+        }
+        let s = c.latency("put").unwrap();
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.min(), SimTime::from_ns(10));
+        assert_eq!(s.max(), SimTime::from_ns(40));
+        assert_eq!(s.mean(), SimTime::from_ns(25));
+        assert_eq!(s.percentile(100.0), SimTime::from_ns(40));
+        assert_eq!(s.percentile(0.0), SimTime::from_ns(10));
+    }
+
+    #[test]
+    fn empty_series_is_zero() {
+        let s = LatencySeries::default();
+        assert_eq!(s.mean(), SimTime::ZERO);
+        assert_eq!(s.percentile(50.0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut c = Counters::new();
+        c.incr("x");
+        c.record_latency("y", SimTime::from_ns(1));
+        c.reset();
+        assert_eq!(c.get("x"), 0);
+        assert!(c.latency("y").is_none());
+    }
+}

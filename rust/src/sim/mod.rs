@@ -1,0 +1,23 @@
+//! Discrete-event simulation engine.
+//!
+//! Generic, deterministic DES substrate: everything timed in FSHMEM (links,
+//! DMA, sequencers, the DLA) runs on this engine. The engine is generic
+//! over the event type so it is reusable and unit-testable independently of
+//! the FSHMEM model (`crate::model` provides the concrete [`Model`] impl).
+//!
+//! Determinism contract: given the same initial model state and the same
+//! injected events, the processed event sequence is identical — ties in
+//! time are broken by schedule order (a monotonically increasing sequence
+//! number). The property test suite asserts trace equality across runs.
+
+pub mod counters;
+pub mod engine;
+pub mod queue;
+pub mod rng;
+pub mod time;
+
+pub use counters::Counters;
+pub use engine::{Engine, Model};
+pub use queue::EventQueue;
+pub use rng::Rng;
+pub use time::{ClockDomain, SimTime};

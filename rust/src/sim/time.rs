@@ -1,0 +1,184 @@
+//! Simulated time and clock domains.
+//!
+//! Time is kept in integer **picoseconds** so that heterogeneous clock
+//! domains (the paper's systems span 50 MHz to 250 MHz) compose without
+//! rounding drift: one 250 MHz cycle is exactly 4_000 ps, one 133.33 MHz
+//! TMD-MPI cycle is 7_500 ps.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time (picoseconds since simulation start).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_ps(ps: u64) -> Self {
+        SimTime(ps)
+    }
+    pub fn from_ns(ns: u64) -> Self {
+        SimTime(ns * 1_000)
+    }
+    pub fn from_us(us: u64) -> Self {
+        SimTime(us * 1_000_000)
+    }
+
+    pub fn as_ps(self) -> u64 {
+        self.0
+    }
+    pub fn as_ns(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / 1e12
+    }
+
+    /// Duration from `earlier` to `self`; saturates at zero.
+    pub fn since(self, earlier: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(earlier.0))
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000 {
+            write!(f, "{:.3}us", self.as_us())
+        } else {
+            write!(f, "{}ps", self.0)
+        }
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+/// A clock domain: converts cycle counts to durations exactly.
+///
+/// Stored as the period in picoseconds. 250 MHz -> 4000 ps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClockDomain {
+    period_ps: u64,
+}
+
+impl ClockDomain {
+    /// From a frequency in MHz. Periods that do not divide 1e6 ps evenly
+    /// (e.g. 133.33 MHz) round to the nearest picosecond.
+    pub fn from_mhz(mhz: f64) -> Self {
+        assert!(mhz > 0.0, "clock must be positive");
+        ClockDomain {
+            period_ps: (1e6 / mhz).round() as u64,
+        }
+    }
+
+    pub fn period(&self) -> SimTime {
+        SimTime(self.period_ps)
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        1e6 / self.period_ps as f64
+    }
+
+    /// Duration of `n` cycles.
+    pub fn cycles(&self, n: u64) -> SimTime {
+        SimTime(self.period_ps * n)
+    }
+
+    /// Number of whole cycles elapsed in `t` (floor).
+    pub fn cycles_in(&self, t: SimTime) -> u64 {
+        t.0 / self.period_ps
+    }
+
+    /// Duration to move `bytes` across a datapath of `width_bytes` per
+    /// cycle (ceil to whole cycles — hardware cannot send fractional
+    /// flits).
+    pub fn transfer(&self, bytes: u64, width_bytes: u64) -> SimTime {
+        self.cycles(bytes.div_ceil(width_bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_units_convert() {
+        assert_eq!(SimTime::from_ns(1).as_ps(), 1_000);
+        assert_eq!(SimTime::from_us(1).as_ps(), 1_000_000);
+        assert!((SimTime::from_us(3).as_us() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_arithmetic() {
+        let a = SimTime::from_ns(10);
+        let b = SimTime::from_ns(4);
+        assert_eq!((a + b).as_ps(), 14_000);
+        assert_eq!((a - b).as_ps(), 6_000);
+        assert_eq!((b - a).as_ps(), 0, "subtraction saturates");
+        assert_eq!(b.since(a).as_ps(), 0);
+        assert_eq!(a.since(b).as_ps(), 6_000);
+    }
+
+    #[test]
+    fn clock_250mhz_cycle_is_4ns() {
+        let clk = ClockDomain::from_mhz(250.0);
+        assert_eq!(clk.period().as_ps(), 4_000);
+        assert_eq!(clk.cycles(52).as_ps(), 208_000); // ~0.21us PUT path
+    }
+
+    #[test]
+    fn clock_tmd_mpi_133mhz() {
+        let clk = ClockDomain::from_mhz(133.33);
+        assert_eq!(clk.period().as_ps(), 7_500);
+    }
+
+    #[test]
+    fn transfer_ceils_to_flits() {
+        let clk = ClockDomain::from_mhz(250.0);
+        // 128-bit datapath = 16 B/cycle; 17 bytes needs 2 cycles.
+        assert_eq!(clk.transfer(17, 16), clk.cycles(2));
+        assert_eq!(clk.transfer(16, 16), clk.cycles(1));
+        assert_eq!(clk.transfer(0, 16), SimTime::ZERO);
+    }
+
+    #[test]
+    fn cycles_in_floors() {
+        let clk = ClockDomain::from_mhz(250.0);
+        assert_eq!(clk.cycles_in(SimTime::from_ps(7_999)), 1);
+        assert_eq!(clk.cycles_in(SimTime::from_ps(8_000)), 2);
+    }
+}

@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (in-crate `criterion` substitute).
+//!
+//! Used by every `cargo bench` target (`harness = false`): warmup, timed
+//! iterations, mean / stddev / min, and a one-line report compatible with
+//! grep-based tooling. Simulated-metric reporting (the paper's tables and
+//! figures) is separate — benches print those via `reports::*` after the
+//! timing loop.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>12.3?}/iter  (±{:.3?}, min {:.3?}, max {:.3?}, n={})",
+            self.name, self.mean, self.stddev, self.min, self.max, self.iters
+        );
+    }
+}
+
+pub struct Bencher {
+    warmup_iters: u32,
+    iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: u32, iters: u32) -> Self {
+        assert!(iters > 0);
+        Bencher {
+            warmup_iters,
+            iters,
+        }
+    }
+
+    /// Quick-mode bencher honoring `FSHMEM_BENCH_FAST=1` (used in CI and
+    /// the final smoke run to bound wallclock).
+    pub fn from_env() -> Self {
+        if std::env::var("FSHMEM_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher::new(1, 3)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f`, which must re-run the full workload each call. The return
+    /// value of `f` is passed to a sink to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            sink(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            sink(f());
+            samples.push(t0.elapsed());
+        }
+        let mean_ns =
+            samples.iter().map(|d| d.as_nanos()).sum::<u128>() / samples.len() as u128;
+        let var_ns2 = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as i128 - mean_ns as i128;
+                (x * x) as u128
+            })
+            .sum::<u128>()
+            / samples.len() as u128;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos((var_ns2 as f64).sqrt() as u64),
+            min: *samples.iter().min().unwrap(),
+            max: *samples.iter().max().unwrap(),
+        };
+        result.report();
+        result
+    }
+}
+
+/// Opaque sink: prevents the optimizer from deleting the benched work.
+#[inline]
+pub fn sink<T>(value: T) -> T {
+    std::hint::black_box(value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let b = Bencher::new(1, 5);
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.mean);
+        assert!(r.mean <= r.max);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn fast_env_reduces_iters() {
+        std::env::set_var("FSHMEM_BENCH_FAST", "1");
+        let b = Bencher::from_env();
+        std::env::remove_var("FSHMEM_BENCH_FAST");
+        assert_eq!(b.iters, 3);
+    }
+}

@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (in-crate `clap` substitute): subcommands,
+//! `--key value` / `--key=value` options, `--flag` booleans.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-option token is the subcommand;
+    /// later non-option tokens are positional arguments.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => bail!("--{key}={s}: {e}"),
+            },
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("bench bandwidth extra");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["bandwidth", "extra"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse("run --nodes 4 --packet=512");
+        assert_eq!(a.opt("nodes"), Some("4"));
+        assert_eq!(a.opt("packet"), Some("512"));
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("run --verbose --seed 9 --fast");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        assert_eq!(a.opt_parse::<u64>("seed").unwrap(), Some(9));
+    }
+
+    #[test]
+    fn opt_parse_error_mentions_key() {
+        let a = parse("run --seed abc");
+        let err = a.opt_parse::<u64>("seed").unwrap_err().to_string();
+        assert!(err.contains("--seed=abc"), "{err}");
+    }
+
+    #[test]
+    fn missing_is_none_and_default() {
+        let a = parse("run");
+        assert_eq!(a.opt("x"), None);
+        assert_eq!(a.opt_or("x", "7"), "7");
+        assert_eq!(a.opt_parse::<u32>("x").unwrap(), None);
+    }
+}

@@ -1,0 +1,174 @@
+//! IEEE 754 binary16 conversion (the Intel DLA's native tensor format —
+//! activations/weights stream as fp16; accumulation is wide on-chip).
+//! No `half` crate in the offline registry, so: bit-exact software
+//! conversion with round-to-nearest-even.
+
+/// f32 -> f16 bits, round-to-nearest-even, with overflow to infinity and
+/// flush of sub-f16-subnormal magnitudes toward zero (via rounding).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let nan_bit = if mant != 0 { 0x200 } else { 0 };
+        return sign | 0x7C00 | nan_bit | ((mant >> 13) as u16 & 0x3FF);
+    }
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // Normal f16. Round mantissa from 23 to 10 bits (RNE).
+        let mut m = mant >> 13;
+        let rem = mant & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e >= -24 {
+        // Subnormal f16.
+        let full = mant | 0x80_0000; // implicit leading 1
+        let shift = (-14 - e) as u32 + 13;
+        let m = full >> shift;
+        let rem_mask = (1u32 << shift) - 1;
+        let rem = full & rem_mask;
+        let half = 1u32 << (shift - 1);
+        let mut m = m;
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | (m as u16);
+    }
+    sign // underflow to signed zero
+}
+
+/// f16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: value = m * 2^-24 (exactly representable in f32).
+            let v = m as f32 * (-24f32).exp2();
+            return if sign != 0 { -v } else { v };
+        }
+        (31, 0) => sign | 0x7F80_0000,
+        (31, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (what a store+load through the
+/// DLA's fp16 tensors does).
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+pub fn encode_f16_slice(src: &[f32], dst: &mut Vec<u8>) {
+    dst.reserve(src.len() * 2);
+    for &v in src {
+        dst.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+    }
+}
+
+pub fn decode_f16_slice(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values_roundtrip() {
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 0.25, 0.125, 2.0, 1024.0, 0.1 as f32,
+        ] {
+            let r = round_f16(v);
+            if v == 0.1 {
+                assert!((r - v).abs() < 1e-4, "{v} -> {r}");
+            } else {
+                assert_eq!(r, v, "{v} should be f16-exact");
+            }
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8); // min subnormal
+    }
+
+    #[test]
+    fn overflow_to_inf_underflow_to_zero() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e6)), f32::NEG_INFINITY);
+        assert_eq!(round_f16(1e-9), 0.0);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(round_f16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn rne_rounding() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: RNE keeps
+        // the even mantissa (1.0).
+        let halfway = 1.0 + 2f32.powi(-11);
+        assert_eq!(round_f16(halfway), 1.0);
+        // Slightly above halfway rounds up.
+        assert_eq!(round_f16(1.0 + 2f32.powi(-11) * 1.01), 1.0 + 2f32.powi(-10));
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = crate::sim::Rng::new(17);
+        for _ in 0..10_000 {
+            let v = (rng.f64() as f32 - 0.5) * 100.0;
+            let r = round_f16(v);
+            let rel = ((r - v) / v.abs().max(1e-3)).abs();
+            assert!(rel < 1e-3, "{v} -> {r} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn slice_encode_decode_roundtrip() {
+        let vals = [1.0f32, -0.5, 3.25, 100.0];
+        let mut bytes = Vec::new();
+        encode_f16_slice(&vals, &mut bytes);
+        assert_eq!(bytes.len(), 8);
+        assert_eq!(decode_f16_slice(&bytes), vals);
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        for bits in [0x0001u16, 0x0200, 0x03FF, 0x8001] {
+            let f = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(f), bits, "bits {bits:#x} -> {f}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Small in-crate substitutes for crates unavailable in this offline
+//! environment (see Cargo.toml "Dependency policy"): a JSON parser (for
+//! `artifacts/manifest.json`), a property-test runner, a micro-benchmark
+//! harness used by `cargo bench` targets, and a tiny CLI argument parser.
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod prop;
+pub mod table;
+
+pub use json::Json;

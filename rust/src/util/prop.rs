@@ -1,0 +1,101 @@
+//! Mini property-test runner (in-crate `proptest` substitute — the offline
+//! registry has no proptest; see Cargo.toml "Dependency policy").
+//!
+//! Deterministic: case `i` of a run with seed `s` derives its RNG from
+//! `(s, i)`, so failures print a `(seed, case)` pair that reproduces
+//! exactly. No shrinking — generators are written to produce small cases
+//! with reasonable probability instead.
+
+use crate::sim::Rng;
+
+pub const DEFAULT_CASES: u32 = 256;
+
+/// Run `body` for `cases` deterministic random cases. On panic, re-raises
+/// with the failing `(seed, case)` in the message.
+pub fn forall(name: &str, seed: u64, cases: u32, mut body: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at seed={seed} case={case}: {msg}"
+            );
+        }
+    }
+}
+
+/// `forall` with the default case count.
+pub fn check(name: &str, seed: u64, body: impl FnMut(&mut Rng)) {
+    forall(name, seed, DEFAULT_CASES, body);
+}
+
+/// Generator helpers over [`Rng`] for common shapes.
+pub mod gen {
+    use crate::sim::Rng;
+
+    /// A transfer size in [1, 2 MiB], biased toward small values (log-
+    /// uniform) — matches the Fig. 5 sweep domain.
+    pub fn transfer_size(rng: &mut Rng) -> usize {
+        let exp = rng.range(0, 21); // 2^0 .. 2^21
+        let base = 1u64 << exp;
+        rng.range(base, (base * 2 - 1).min(2 * 1024 * 1024)) as usize
+    }
+
+    /// A payload buffer with random contents.
+    pub fn payload(rng: &mut Rng, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    /// One of the paper's packet sizes.
+    pub fn packet_size(rng: &mut Rng) -> usize {
+        *rng.choose(&[128usize, 256, 512, 1024])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall("count", 1, 50, |_| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn forall_reports_seed_and_case() {
+        let err = std::panic::catch_unwind(|| {
+            forall("boom", 7, 10, |rng| {
+                let v = rng.below(100);
+                assert!(v < 101); // never fails
+                if v % 1 == 0 && rng.below(2) == 1 {
+                    panic!("synthetic failure v={v}");
+                }
+            })
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed=7"), "{msg}");
+        assert!(msg.contains("case="), "{msg}");
+    }
+
+    #[test]
+    fn generators_in_domain() {
+        let mut rng = crate::sim::Rng::new(3);
+        for _ in 0..500 {
+            let t = gen::transfer_size(&mut rng);
+            assert!((1..=2 * 1024 * 1024).contains(&t));
+            assert!([128, 256, 512, 1024].contains(&gen::packet_size(&mut rng)));
+        }
+    }
+}

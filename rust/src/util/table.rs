@@ -1,0 +1,81 @@
+//! ASCII table renderer for the paper-reproduction reports.
+
+/// Render rows as a fixed-width ASCII table with a header rule.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (cell, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {:<w$} |", cell, w = w));
+        }
+        line.push('\n');
+        line
+    };
+    let rule: String = {
+        let mut r = String::from("+");
+        for w in &widths {
+            r.push_str(&"-".repeat(w + 2));
+            r.push('+');
+        }
+        r.push('\n');
+        r
+    };
+    out.push_str(&rule);
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&rule);
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out.push_str(&rule);
+    out
+}
+
+/// Convenience: format a float with fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            &["name", "value"],
+            &[
+                vec!["x".into(), "1".into()],
+                vec!["longer".into(), "22".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 6);
+        assert!(lines[1].contains("name"));
+        assert!(lines[4].contains("longer"));
+        // all lines same width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn mismatched_row_panics() {
+        render(&["a", "b"], &[vec!["only-one".into()]]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f(3813.456, 0), "3813");
+        assert_eq!(f(0.3456, 2), "0.35");
+    }
+}

@@ -1,0 +1,317 @@
+//! Fig. 6(b): parallel convolution on two FPGA nodes.
+//!
+//! The weight kernels split into two out-channel groups; each node
+//! convolves the (replicated) input feature map with its group, then the
+//! nodes exchange their half-results and concatenate along the channel
+//! axis so *both* nodes hold the complete output ("after each
+//! convolution, both nodes must synchronize their results and concatenate
+//! them"). ART streams each node's half to the peer during compute; the
+//! final barrier is the end-of-convolution synchronization the paper
+//! blames for conv never quite reaching 2x.
+
+use anyhow::Result;
+
+use crate::api::Fshmem;
+use crate::config::{Config, Numerics};
+use crate::dla::{ArtConfig, ComputeBackend, DlaJob, DlaOp, SoftwareBackend};
+use crate::memory::GlobalAddr;
+use crate::sim::{Rng, SimTime};
+
+use super::SegmentAlloc;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ConvCase {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub ksize: usize,
+    pub art_every: u32,
+    pub check: bool,
+}
+
+impl ConvCase {
+    /// The paper's three workloads: 64x64 feature maps with
+    /// (256, 3x3x256), (192, 5x5x192), (128, 7x7x128).
+    pub fn paper(ksize: usize) -> Self {
+        let c = match ksize {
+            3 => 256,
+            5 => 192,
+            7 => 128,
+            _ => panic!("paper uses k in {{3,5,7}}"),
+        };
+        ConvCase {
+            h: 64,
+            w: 64,
+            cin: c,
+            cout: c,
+            ksize,
+            art_every: 16 * 1024,
+            check: false,
+        }
+    }
+
+    /// Reduced-channel variant matching the AOT artifact catalogue
+    /// (numerics through PJRT; see DESIGN.md on the substitution).
+    pub fn reduced(ksize: usize) -> Self {
+        let c = match ksize {
+            3 => 32,
+            5 => 24,
+            7 => 16,
+            _ => panic!("k in {{3,5,7}}"),
+        };
+        ConvCase {
+            h: 64,
+            w: 64,
+            cin: c,
+            cout: c,
+            ksize,
+            art_every: 4096,
+            check: true,
+        }
+    }
+
+    pub fn total_ops(&self) -> f64 {
+        2.0 * (self.h * self.w * self.ksize * self.ksize * self.cin * self.cout) as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ConvResult {
+    pub case: ConvCase,
+    pub single_node: SimTime,
+    pub two_node: SimTime,
+    pub speedup: f64,
+    pub single_gops: f64,
+    pub two_node_gops: f64,
+    pub verified: bool,
+}
+
+pub struct ConvData {
+    pub x: Vec<f32>,
+    pub w: Vec<f32>,
+}
+
+impl ConvData {
+    pub fn random(case: &ConvCase, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; case.h * case.w * case.cin];
+        let mut w = vec![0.0f32; case.ksize * case.ksize * case.cin * case.cout];
+        rng.fill_f32(&mut x);
+        rng.fill_f32(&mut w);
+        ConvData { x, w }
+    }
+
+    /// Split HWIO weights into out-channel halves.
+    fn weight_half(&self, case: &ConvCase, half: usize) -> Vec<f32> {
+        let co = case.cout;
+        let hc = co / 2;
+        let mut out = Vec::with_capacity(self.w.len() / 2);
+        for chunk in self.w.chunks(co) {
+            out.extend_from_slice(&chunk[half * hc..(half + 1) * hc]);
+        }
+        out
+    }
+}
+
+struct Layout {
+    x: u64,
+    w: u64,
+    /// This node's half of the output (contiguous HW x cout/2).
+    y_local: u64,
+    /// The peer's half, ART-delivered here.
+    y_peer: u64,
+}
+
+fn layout(cfg: &Config, case: &ConvCase) -> Layout {
+    let mut alloc = SegmentAlloc::new(cfg.segment_bytes);
+    Layout {
+        x: alloc.alloc_f16(case.h * case.w * case.cin),
+        w: alloc.alloc_f16(case.ksize * case.ksize * case.cin * case.cout / 2),
+        y_local: alloc.alloc_f16(case.h * case.w * case.cout / 2),
+        y_peer: alloc.alloc_f16(case.h * case.w * case.cout / 2),
+    }
+}
+
+pub fn run_single_node(cfg: &Config, case: &ConvCase, data: &ConvData) -> SimTime {
+    let mut f = Fshmem::new(cfg.clone());
+    let mut alloc = SegmentAlloc::new(cfg.segment_bytes);
+    let x = alloc.alloc_f16(case.h * case.w * case.cin);
+    let w = alloc.alloc_f16(case.ksize * case.ksize * case.cin * case.cout);
+    let y = alloc.alloc_f16(case.h * case.w * case.cout);
+    if cfg.numerics != Numerics::TimingOnly {
+        f.write_local_f16(0, x, &data.x);
+        f.write_local_f16(0, w, &data.w);
+    }
+    let t0 = f.now();
+    let job = DlaJob {
+        op: DlaOp::Conv {
+            h: case.h as u32,
+            w: case.w as u32,
+            cin: case.cin as u32,
+            cout: case.cout as u32,
+            ksize: case.ksize as u32,
+            x: GlobalAddr::new(0, x),
+            wts: GlobalAddr::new(0, w),
+            y: GlobalAddr::new(0, y),
+        },
+        art: None,
+        notify: None,
+    };
+    let h = f.compute(0, 0, job);
+    f.wait(h);
+    f.now().since(t0)
+}
+
+pub fn run_two_node(
+    cfg: &Config,
+    case: &ConvCase,
+    data: &ConvData,
+) -> Result<(SimTime, bool)> {
+    let mut f = Fshmem::new(cfg.clone());
+    let lay = [layout(cfg, case), layout(cfg, case)];
+    if cfg.numerics != Numerics::TimingOnly {
+        for p in 0..2usize {
+            f.write_local_f16(p as u32, lay[p].x, &data.x);
+            f.write_local_f16(p as u32, lay[p].w, &data.weight_half(case, p));
+        }
+    }
+
+    let t0 = f.now();
+    // Each node convolves its kernel group, ART-streaming the half-result
+    // into the peer's y_peer buffer.
+    let mut jobs = Vec::new();
+    for p in 0..2u32 {
+        let q = 1 - p;
+        let job = DlaJob {
+            op: DlaOp::Conv {
+                h: case.h as u32,
+                w: case.w as u32,
+                cin: case.cin as u32,
+                cout: (case.cout / 2) as u32,
+                ksize: case.ksize as u32,
+                x: GlobalAddr::new(p, lay[p as usize].x),
+                wts: GlobalAddr::new(p, lay[p as usize].w),
+                y: GlobalAddr::new(p, lay[p as usize].y_local),
+            },
+            art: Some(ArtConfig {
+                every_n_results: case.art_every,
+                dst: GlobalAddr::new(q, lay[q as usize].y_peer),
+            }),
+            notify: None,
+        };
+        jobs.push(f.compute(p, p, job));
+    }
+    f.wait_all(&jobs);
+    for (_, h) in f.take_art_ops() {
+        f.wait(h);
+    }
+    // End-of-conv synchronization (the exposed latency the paper notes).
+    let barrier = f.barrier_all();
+    f.wait_all(&barrier);
+    let elapsed = f.now().since(t0);
+
+    let mut verified = false;
+    if case.check && cfg.numerics != Numerics::TimingOnly {
+        // Reference on fp16-rounded inputs (what actually reached the
+        // DLA); tolerance covers fp16 rounding of the stored results.
+        let round = |v: &[f32]| -> Vec<f32> {
+            v.iter().map(|&x| crate::util::f16::round_f16(x)).collect()
+        };
+        let mut be = SoftwareBackend;
+        let full = be.conv2d(
+            case.h,
+            case.w,
+            case.cin,
+            case.cout,
+            case.ksize,
+            &round(&data.x),
+            &round(&data.w),
+        )?;
+        let hc = case.cout / 2;
+        // Node p computed channels [p*hc, (p+1)*hc) into y_local and
+        // received the peer's half into y_peer. Per pixel, the two halves
+        // concatenated (in channel order) must equal the full conv.
+        for p in 0..2usize {
+            let own = f.read_shared_f16(p as u32, lay[p].y_local, case.h * case.w * hc);
+            let peer =
+                f.read_shared_f16(p as u32, lay[p].y_peer, case.h * case.w * hc);
+            // halves[h] = data for channels [h*hc, (h+1)*hc).
+            let halves = if p == 0 { [&own, &peer] } else { [&peer, &own] };
+            for px in 0..case.h * case.w {
+                for c in 0..case.cout {
+                    let got = halves[c / hc][px * hc + c % hc];
+                    let want = full[px * case.cout + c];
+                    anyhow::ensure!(
+                        (got - want).abs() <= 2e-2 * want.abs().max(1.0),
+                        "node {p} px {px} ch {c}: {got} != {want}"
+                    );
+                }
+            }
+        }
+        verified = true;
+    }
+    Ok((elapsed, verified))
+}
+
+pub fn run_case(cfg: &Config, case: &ConvCase) -> Result<ConvResult> {
+    let data = if cfg.numerics == Numerics::TimingOnly {
+        ConvData {
+            x: Vec::new(),
+            w: Vec::new(),
+        }
+    } else {
+        ConvData::random(case, 7)
+    };
+    let single = run_single_node(cfg, case, &data);
+    let (two, verified) = run_two_node(cfg, case, &data)?;
+    let ops = case.total_ops();
+    Ok(ConvResult {
+        case: *case,
+        single_node: single,
+        two_node: two,
+        speedup: single.as_ps() as f64 / two.as_ps() as f64,
+        single_gops: ops / single.as_ps() as f64 * 1000.0,
+        two_node_gops: ops / two.as_ps() as f64 * 1000.0,
+        verified,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing_cfg() -> Config {
+        Config::two_node_ring().with_numerics(Numerics::TimingOnly)
+    }
+
+    #[test]
+    fn conv_speedup_near_2x_timing() {
+        let r = run_case(&timing_cfg(), &ConvCase::paper(3)).unwrap();
+        assert!(
+            (1.85..2.0).contains(&r.speedup),
+            "conv3 speedup {} (paper ~1.98, never reaching 2.0)",
+            r.speedup
+        );
+        assert!(r.speedup < 2.0, "sync at the end must cost something");
+    }
+
+    #[test]
+    fn all_paper_kernels_run() {
+        for k in [3usize, 5, 7] {
+            let r = run_case(&timing_cfg(), &ConvCase::paper(k)).unwrap();
+            assert!(r.speedup > 1.8, "k={k} speedup {}", r.speedup);
+            assert!(r.two_node_gops > 1800.0, "k={k} {}", r.two_node_gops);
+        }
+    }
+
+    #[test]
+    fn numerics_verified_reduced() {
+        let cfg = Config::two_node_ring().with_numerics(Numerics::Software);
+        let mut case = ConvCase::reduced(3);
+        case.h = 16;
+        case.w = 16; // keep the software backend fast in tests
+        let r = run_case(&cfg, &case).unwrap();
+        assert!(r.verified);
+    }
+}

@@ -1,0 +1,72 @@
+//! Experiment workloads: the paper's measurement sweeps (Fig. 5,
+//! Table III) and case studies (Fig. 6/7).
+
+pub mod conv;
+pub mod matmul;
+pub mod sweep;
+
+pub use conv::{ConvCase, ConvResult};
+pub use matmul::{MatmulCase, MatmulResult};
+pub use sweep::{BandwidthSeries, LatencyResults};
+
+/// A simple bump allocator over a node's shared segment — how the
+/// workloads lay out tensors (the real system would use gasnet_attach
+/// segment allocation).
+#[derive(Debug, Clone)]
+pub struct SegmentAlloc {
+    next: u64,
+    limit: u64,
+}
+
+impl SegmentAlloc {
+    pub fn new(limit: u64) -> Self {
+        SegmentAlloc { next: 0, limit }
+    }
+
+    /// Allocate `bytes`, 64-byte aligned (DMA burst alignment).
+    pub fn alloc(&mut self, bytes: u64) -> u64 {
+        let at = (self.next + 63) & !63;
+        assert!(
+            at + bytes <= self.limit,
+            "segment exhausted: need {bytes} at {at:#x}, limit {:#x}",
+            self.limit
+        );
+        self.next = at + bytes;
+        at
+    }
+
+    pub fn alloc_f32(&mut self, count: usize) -> u64 {
+        self.alloc(count as u64 * 4)
+    }
+
+    /// DLA tensors are fp16 in memory: 2 bytes per element.
+    pub fn alloc_f16(&mut self, count: usize) -> u64 {
+        self.alloc(count as u64 * 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_aligned_and_disjoint() {
+        let mut a = SegmentAlloc::new(1 << 20);
+        let x = a.alloc(100);
+        let y = a.alloc(1);
+        let z = a.alloc_f32(16);
+        assert_eq!(x % 64, 0);
+        assert_eq!(y % 64, 0);
+        assert_eq!(z % 64, 0);
+        assert!(y >= x + 100);
+        assert!(z >= y + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "segment exhausted")]
+    fn alloc_overflow_panics() {
+        let mut a = SegmentAlloc::new(128);
+        a.alloc(100);
+        a.alloc(100);
+    }
+}

@@ -1,0 +1,330 @@
+//! Integration tests: multi-module flows over the public API — the
+//! GASNet protocol semantics (Table I), multi-node fabrics, the DLA
+//! command path, failure handling, and the experiment coordinator.
+
+use fshmem::config::{Config, Numerics};
+use fshmem::coordinator::{run_experiment, RunOptions};
+use fshmem::dla::{ArtConfig, DlaJob, DlaOp};
+use fshmem::fabric::Topology;
+use fshmem::memory::GlobalAddr;
+use fshmem::sim::Rng;
+use fshmem::Fshmem;
+
+fn two_node() -> Fshmem {
+    Fshmem::new(Config::two_node_ring().with_numerics(Numerics::Software))
+}
+
+// ---- Table I: the implemented GASNet functions ---------------------------
+
+#[test]
+fn gasnet_put_short_medium_long() {
+    let mut f = two_node();
+    // Short (no payload): completes via ack, no data.
+    let h = f.put(0, f.global_addr(1, 0x10), &[]);
+    f.wait(h);
+    // "Medium": payload to private memory through AMRequestMedium.
+    let opcode = f.register_handler(1, 3);
+    let h = f.am_medium(0, 1, opcode, [9, 8, 7, 6], &[0xCC; 300], 0x40);
+    f.wait(h);
+    let am = f.drain_user_ams().pop().unwrap();
+    assert_eq!(am.payload.len(), 300);
+    assert_eq!(
+        f.world().nodes[1].mem.read_private(0x40, 300).unwrap(),
+        &[0xCC; 300][..]
+    );
+    // Long: payload to the shared segment.
+    let h = f.put(0, f.global_addr(1, 0x2000), &[0xDD; 5000]);
+    f.wait(h);
+    assert_eq!(f.read_shared(1, 0x2000, 5000), vec![0xDD; 5000]);
+}
+
+#[test]
+fn gasnet_get_zero_and_bulk() {
+    let mut f = two_node();
+    let h = f.get(0, f.global_addr(1, 0), 0, 0); // zero-byte GET
+    f.wait(h);
+    let payload: Vec<u8> = (0..20000u32).map(|i| (i % 13) as u8).collect();
+    f.write_local(1, 0x8000, &payload);
+    let h = f.get(0, f.global_addr(1, 0x8000), 0x4000, payload.len() as u64);
+    f.wait(h);
+    assert_eq!(f.read_shared(0, 0x4000, payload.len()), payload);
+}
+
+#[test]
+fn concurrent_bidirectional_puts_do_not_interfere() {
+    let mut f = two_node();
+    let a: Vec<u8> = (0..50_000).map(|i| (i % 101) as u8).collect();
+    let b: Vec<u8> = (0..50_000).map(|i| (i % 89) as u8).collect();
+    let h0 = f.put(0, f.global_addr(1, 0), &a);
+    let h1 = f.put(1, f.global_addr(0, 0), &b);
+    f.wait_all(&[h0, h1]);
+    assert_eq!(f.read_shared(1, 0, a.len()), a);
+    assert_eq!(f.read_shared(0, 0, b.len()), b);
+}
+
+#[test]
+fn many_outstanding_ops_complete_in_any_order() {
+    let mut f = two_node();
+    let mut hs = Vec::new();
+    for i in 0..64u64 {
+        let data = vec![i as u8; 512 + (i as usize) * 7];
+        hs.push((i, f.put(0, f.global_addr(1, i * 0x1000), &data)));
+    }
+    // Wait in reverse order.
+    for &(_, h) in hs.iter().rev() {
+        f.wait(h);
+    }
+    for (i, _) in hs {
+        let len = 512 + i as usize * 7;
+        assert_eq!(f.read_shared(1, i * 0x1000, len), vec![i as u8; len]);
+    }
+}
+
+// ---- multi-node fabrics ---------------------------------------------------
+
+#[test]
+fn ring8_put_get_everywhere() {
+    let mut f = Fshmem::new(Config::ring(8).with_numerics(Numerics::TimingOnly));
+    for dst in 1..8u32 {
+        let data = vec![dst as u8; 1000];
+        let h = f.put(0, f.global_addr(dst, 0x100), &data);
+        f.wait(h);
+        assert_eq!(f.read_shared(dst, 0x100, 1000), data);
+    }
+    // GET from the farthest node.
+    f.write_local(4, 0x900, &[0x77; 64]);
+    let h = f.get(0, f.global_addr(4, 0x900), 0, 64);
+    f.wait(h);
+    assert_eq!(f.read_shared(0, 0, 64), vec![0x77; 64]);
+}
+
+#[test]
+fn mesh_barrier_all_nodes() {
+    let mut f = Fshmem::new(Config::mesh(3, 3).with_numerics(Numerics::TimingOnly));
+    let hs = f.barrier_all();
+    f.wait_all(&hs);
+    // Barrier releases monotonically after all arrivals.
+    assert!(f.now().as_us() > 0.0);
+}
+
+#[test]
+fn torus_multihop_latency_below_mesh() {
+    // Wraparound shortens worst-case paths.
+    let put_far = |topo: Topology| -> f64 {
+        let cfg = Config {
+            topology: topo,
+            ..Config::two_node_ring()
+        }
+        .with_numerics(Numerics::TimingOnly);
+        let mut f = Fshmem::new(cfg);
+        let far = topo.nodes() - 1;
+        let h = f.put(0, f.global_addr(far, 0), &[0; 64]);
+        f.wait(h);
+        let (iss, hdr, _, _) = f.op_times(h);
+        hdr.unwrap().since(iss).as_us()
+    };
+    let mesh = put_far(Topology::Mesh2D { w: 4, h: 4 });
+    let torus = put_far(Topology::Torus2D { w: 4, h: 4 });
+    assert!(torus < mesh, "torus {torus} vs mesh {mesh}");
+}
+
+// ---- DLA command path -------------------------------------------------------
+
+#[test]
+fn dla_queue_serializes_jobs() {
+    let mut f = two_node();
+    let n = 64u32;
+    let elems = (n * n) as usize;
+    let mut rng = Rng::new(3);
+    let mut a = vec![0.0f32; elems];
+    rng.fill_f32(&mut a);
+    f.write_local_f16(1, 0, &a);
+    f.write_local_f16(1, 0x10000, &a);
+    // Two jobs to the same DLA: must run back-to-back, both notify.
+    let j = |y: u64| DlaJob {
+        op: DlaOp::Matmul {
+            m: n,
+            k: n,
+            n,
+            a: GlobalAddr::new(1, 0),
+            b: GlobalAddr::new(1, 0x10000),
+            y: GlobalAddr::new(1, y),
+            accumulate: false,
+        },
+        art: None,
+        notify: None,
+    };
+    let h1 = f.compute(0, 1, j(0x20000));
+    let h2 = f.compute(0, 1, j(0x30000));
+    f.wait_all(&[h1, h2]);
+    assert_eq!(f.counters().get("dla_jobs_done"), 2);
+    let y1 = f.read_shared_f16(1, 0x20000, elems);
+    let y2 = f.read_shared_f16(1, 0x30000, elems);
+    assert_eq!(y1, y2, "same inputs, same outputs");
+}
+
+#[test]
+fn art_delivers_during_compute_not_after() {
+    let mut f = two_node();
+    let n = 256u32;
+    let h = f.compute(
+        0,
+        0,
+        DlaJob {
+            op: DlaOp::Matmul {
+                m: n,
+                k: n,
+                n,
+                a: GlobalAddr::new(0, 0),
+                b: GlobalAddr::new(0, 0x100000),
+                y: GlobalAddr::new(0, 0x200000),
+                accumulate: false,
+            },
+            art: Some(ArtConfig {
+                every_n_results: 4096,
+                dst: GlobalAddr::new(1, 0x300000),
+            }),
+            notify: None,
+        },
+    );
+    f.wait(h);
+    let job_done = f.now();
+    for (_, a) in f.take_art_ops() {
+        f.wait(a);
+    }
+    let art_done = f.now();
+    // The ART tail past job completion must be far smaller than the
+    // transfer's serialized duration (128 KiB / link ≈ 17 us+).
+    let tail = art_done.since(job_done).as_us();
+    assert!(tail < 10.0, "ART tail {tail} us — not overlapped?");
+}
+
+// ---- failure injection: lossy links + ARQ -----------------------------------
+
+#[test]
+fn lossy_link_still_delivers_intact() {
+    let cfg = Config::two_node_ring()
+        .with_numerics(Numerics::TimingOnly)
+        .with_link_loss_permille(50); // 5% packet loss
+    let mut f = Fshmem::new(cfg);
+    let data: Vec<u8> = (0..200_000u32).map(|i| (i % 241) as u8).collect();
+    let h = f.put(0, f.global_addr(1, 0), &data);
+    f.wait(h);
+    assert_eq!(f.read_shared(1, 0, data.len()), data, "ARQ must preserve bytes");
+    assert!(
+        f.counters().get("pkts_dropped") > 0,
+        "5% loss on ~200 packets must drop some"
+    );
+}
+
+#[test]
+fn loss_degrades_bandwidth_monotonically() {
+    let bw_at = |permille: u32| -> f64 {
+        let cfg = Config::two_node_ring()
+            .with_numerics(Numerics::TimingOnly)
+            .with_link_loss_permille(permille);
+        let mut f = Fshmem::new(cfg);
+        fshmem::workloads::sweep::measure_put(&mut f, 1 << 20)
+    };
+    let clean = bw_at(0);
+    let low = bw_at(20);
+    let high = bw_at(200);
+    assert!(clean > low, "{clean} vs {low}");
+    assert!(low > high, "{low} vs {high}");
+    assert!(high > 0.3 * clean, "20% loss shouldn't collapse the link");
+}
+
+#[test]
+fn lossy_fabric_case_study_still_verifies() {
+    let cfg = Config::two_node_ring()
+        .with_numerics(Numerics::Software)
+        .with_link_loss_permille(20);
+    let case = fshmem::workloads::matmul::MatmulCase {
+        n: 256,
+        art_every: 4096,
+        check: true,
+    };
+    let r = fshmem::workloads::matmul::run_case(&cfg, &case).unwrap();
+    assert!(r.verified, "numerics must survive retransmissions");
+}
+
+#[test]
+fn striped_put_uses_both_ports_and_delivers() {
+    let mut f = Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly));
+    let data: Vec<u8> = (0..300_000u32).map(|i| (i % 199) as u8).collect();
+    let t0 = f.now();
+    let hs = f.put_striped(0, f.global_addr(1, 0), &data);
+    assert_eq!(hs.len(), 2, "2-node ring has two equal-cost ports");
+    f.wait_all(&hs);
+    let striped = f.now().since(t0);
+    assert_eq!(f.read_shared(1, 0, data.len()), data);
+
+    let mut g = Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly));
+    let t0 = g.now();
+    let h = g.put(0, g.global_addr(1, 0), &data);
+    g.wait(h);
+    let single = g.now().since(t0);
+    assert!(
+        (striped.as_ps() as f64) < 0.65 * single.as_ps() as f64,
+        "striping must roughly halve transfer time: {striped} vs {single}"
+    );
+}
+
+// ---- failure / error handling ----------------------------------------------
+
+#[test]
+#[should_panic(expected = "put destination out of range")]
+fn put_beyond_segment_panics() {
+    let mut f = two_node();
+    let far = Config::two_node_ring().segment_bytes - 16;
+    f.put(0, f.global_addr(1, far), &[0; 64]);
+}
+
+#[test]
+#[should_panic(expected = "address out of range")]
+fn global_addr_bad_node_panics() {
+    let f = two_node();
+    let _ = f.global_addr(7, 0);
+}
+
+#[test]
+fn config_rejects_nonsense() {
+    assert!(Config::from_str_cfg("topology = blorp\n").is_err());
+    assert!(Config::from_str_cfg("packet_payload = 0\n").is_err());
+    assert!(Config::from_str_cfg("nodes = 0\n").is_err());
+}
+
+// ---- coordinator / experiment registry --------------------------------------
+
+#[test]
+fn coordinator_fast_experiments_run() {
+    let opts = RunOptions {
+        fast: true,
+        numerics: Numerics::TimingOnly,
+        csv_out: None,
+    };
+    for name in ["latency", "resources", "comparison"] {
+        let out = run_experiment(name, &opts).unwrap();
+        assert!(!out.is_empty(), "{name} produced no report");
+    }
+}
+
+#[test]
+fn user_handlers_roundtrip_across_nodes() {
+    // A tiny "application": node 0 scatters AMs carrying sequence
+    // numbers; handlers on both nodes log them; the host reassembles.
+    let mut f = two_node();
+    let op1 = f.register_handler(1, 1);
+    let mut hs = Vec::new();
+    for i in 0..32u32 {
+        hs.push(f.am_short(0, 1, op1, [i, i * 2, 0, 0]));
+    }
+    f.wait_all(&hs);
+    let ams = f.drain_user_ams();
+    assert_eq!(ams.len(), 32);
+    // Delivered in issue order (same class, same FIFO).
+    for (i, am) in ams.iter().enumerate() {
+        assert_eq!(am.args[0], i as u32);
+        assert_eq!(am.args[1], 2 * i as u32);
+    }
+}

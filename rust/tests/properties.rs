@@ -1,0 +1,271 @@
+//! Property-based tests over the system's invariants (in-crate runner —
+//! see util::prop; the offline registry carries no proptest).
+//!
+//! Invariants:
+//!  * PGAS memory consistency: any random sequence of puts/gets leaves
+//!    the global memory equal to a flat reference model.
+//!  * Packet encode/decode and packetization round-trip for all sizes.
+//!  * Address translation round-trips and rejects out-of-range.
+//!  * DES determinism: same seed => identical trace.
+//!  * Bandwidth monotonicity in transfer size; GET <= PUT.
+//!  * ART delivers exactly the job output regardless of chunking.
+//!  * f16 conversion: total order preserved, round-trip stable.
+
+use std::collections::HashMap;
+
+use fshmem::config::{Config, Numerics};
+use fshmem::gasnet::wire::{packetize, AmCategory, AmKind, AmMessage, Payload};
+use fshmem::memory::{AddressMap, GlobalAddr};
+use fshmem::sim::Rng;
+use fshmem::util::prop::{check, forall, gen};
+use fshmem::util::f16;
+use fshmem::Fshmem;
+
+#[test]
+fn prop_pgas_memory_consistency() {
+    forall("pgas-consistency", 0xC0FFEE, 24, |rng| {
+        let mut f = Fshmem::new(
+            Config::two_node_ring().with_numerics(Numerics::TimingOnly),
+        );
+        // Flat reference: (node, offset) -> byte.
+        let mut reference: HashMap<(u32, u64), u8> = HashMap::new();
+        let region = 1u64 << 16;
+        for _ in 0..rng.range(5, 25) {
+            let src = rng.below(2) as u32;
+            let dst = rng.below(2) as u32;
+            let off = rng.below(region - 4096);
+            let len = rng.range(1, 4096) as usize;
+            let data = gen::payload(rng, len);
+            let h = f.put(src, f.global_addr(dst, off), &data);
+            f.wait(h);
+            for (i, &b) in data.iter().enumerate() {
+                reference.insert((dst, off + i as u64), b);
+            }
+        }
+        // Every recorded byte must match; and gets must read them back.
+        for (&(node, off), &b) in reference.iter() {
+            assert_eq!(f.read_shared(node, off, 1)[0], b, "byte at {node}:{off:#x}");
+        }
+        // Random GET cross-check.
+        let node = rng.below(2) as u32;
+        let off = rng.below(region - 512);
+        let h = f.get(1 - node, f.global_addr(node, off), 0x70_0000, 256);
+        f.wait(h);
+        let got = f.read_shared(1 - node, 0x70_0000, 256);
+        let direct = f.read_shared(node, off, 256);
+        assert_eq!(got, direct);
+    });
+}
+
+#[test]
+fn prop_packetize_roundtrip() {
+    check("packetize-roundtrip", 0xBEEF, |rng| {
+        let len = rng.range(0, 100_000) as usize;
+        let packet = gen::packet_size(rng);
+        let data = gen::payload(rng, len);
+        let msg = AmMessage {
+            kind: AmKind::Request,
+            category: if len == 0 {
+                AmCategory::Short
+            } else {
+                AmCategory::Long
+            },
+            handler: rng.below(7) as u8,
+            src: 0,
+            dst: 1,
+            token: rng.next_u32(),
+            dst_addr: GlobalAddr::new(1, rng.below(1 << 30)),
+            args: [rng.next_u32(), 0, 0, 0],
+            payload: if len == 0 {
+                Payload::None
+            } else {
+                Payload::Bytes(std::sync::Arc::new(data.clone()))
+            },
+        };
+        let pkts = packetize(&msg, std::sync::Arc::new(data.clone()), packet);
+        // Exactly one first, one last; addresses contiguous; bytes cover.
+        assert_eq!(pkts.iter().filter(|p| p.first).count(), 1);
+        assert_eq!(pkts.iter().filter(|p| p.last).count(), 1);
+        assert!(pkts[0].first && pkts[pkts.len() - 1].last);
+        let mut rebuilt = Vec::with_capacity(len);
+        let mut expect_off = msg.dst_addr.offset();
+        for p in &pkts {
+            assert_eq!(p.dst_addr.offset(), expect_off);
+            assert!(p.payload().len() <= packet);
+            expect_off += p.payload_len();
+            rebuilt.extend_from_slice(p.payload());
+        }
+        assert_eq!(rebuilt, data);
+        // Wire headers stay one flit.
+        for p in &pkts {
+            assert_eq!(p.encode_header().len(), 16);
+        }
+    });
+}
+
+#[test]
+fn prop_address_translation() {
+    check("addr-roundtrip", 0xA11, |rng| {
+        let nodes = rng.range(1, 64) as u32;
+        let seg = 1u64 << rng.range(12, 38);
+        let map = AddressMap::new(nodes, seg);
+        let node = rng.below(nodes as u64) as u32;
+        let off = rng.below(seg);
+        let addr = map.compose(node, off).unwrap();
+        let (n2, o2) = map.translate(addr, 0).unwrap();
+        assert_eq!((n2, o2), (node, off));
+        // Out-of-range rejections.
+        assert!(map.compose(nodes, 0).is_err());
+        assert!(map.compose(0, seg).is_err());
+        assert!(map.translate(GlobalAddr::new(node, seg - 1), 2).is_err());
+    });
+}
+
+#[test]
+fn prop_des_determinism() {
+    forall("des-determinism", 0xD5, 8, |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| {
+            let mut f = Fshmem::new(
+                Config::two_node_ring().with_numerics(Numerics::TimingOnly),
+            );
+            let mut r = Rng::new(seed);
+            let mut hs = Vec::new();
+            for _ in 0..12 {
+                let src = r.below(2) as u32;
+                let len = r.range(1, 50_000) as usize;
+                let off = r.below(1 << 20);
+                hs.push(f.put(
+                    src,
+                    f.global_addr(1 - src, off),
+                    &vec![0xAB; len],
+                ));
+            }
+            f.wait_all(&hs);
+            (
+                f.now(),
+                f.events_processed(),
+                f.counters().get("pkts_sent"),
+                f.counters().get("wire_bytes"),
+            )
+        };
+        assert_eq!(run(seed), run(seed), "trace must replay identically");
+    });
+}
+
+#[test]
+fn prop_bandwidth_monotone_and_get_below_put() {
+    forall("bandwidth-monotone", 0xBA4D, 6, |rng| {
+        let packet = gen::packet_size(rng);
+        let cfg = Config::two_node_ring()
+            .with_packet(packet)
+            .with_numerics(Numerics::TimingOnly);
+        let mut f = Fshmem::new(cfg);
+        let mut last_put = 0.0f64;
+        for exp in [6u32, 10, 14, 18, 21] {
+            let size = 1u64 << exp;
+            let put = fshmem::workloads::sweep::measure_put(&mut f, size);
+            let get = fshmem::workloads::sweep::measure_get(&mut f, size);
+            assert!(
+                put >= last_put * 0.999,
+                "PUT bandwidth not monotone at {size} (packet {packet})"
+            );
+            assert!(
+                get <= put * 1.001,
+                "GET {get} above PUT {put} at {size} (packet {packet})"
+            );
+            last_put = put;
+        }
+    });
+}
+
+#[test]
+fn prop_art_chunking_invariant() {
+    use fshmem::dla::{art, ArtConfig, DlaOp, DlaParams};
+    check("art-chunking", 0xA47, |rng| {
+        let params = DlaParams::d5005_16x8();
+        let m = rng.range(1, 64) as u32 * 8;
+        let n = rng.range(1, 64) as u32 * 8;
+        let op = DlaOp::Matmul {
+            m,
+            k: 64,
+            n,
+            a: GlobalAddr::new(0, 0),
+            b: GlobalAddr::new(0, 0),
+            y: GlobalAddr::new(0, 0),
+            accumulate: false,
+        };
+        let every = rng.range(1, (m as u64 * n as u64) * 2) as u32;
+        let cfg = ArtConfig {
+            every_n_results: every,
+            dst: GlobalAddr::new(1, rng.below(1 << 20) * 2),
+        };
+        let chunks = art::plan(&params, &op, &cfg);
+        // Coverage: chunks tile the output exactly, in order.
+        let total: u64 = chunks.iter().map(|c| c.bytes).sum();
+        assert_eq!(total, op.output_bytes(params.elem_bytes));
+        let mut off = 0;
+        for c in &chunks {
+            assert_eq!(c.src_offset, off);
+            assert_eq!(c.dst.offset(), cfg.dst.offset() + off);
+            off += c.bytes;
+        }
+        // Ready times are nondecreasing and end exactly at job end.
+        for w in chunks.windows(2) {
+            assert!(w[0].ready_at <= w[1].ready_at);
+        }
+        assert_eq!(chunks.last().unwrap().ready_at, params.job_time(&op));
+    });
+}
+
+#[test]
+fn prop_f16_roundtrip_and_order() {
+    check("f16-order", 0xF16, |rng| {
+        let a = (rng.f64() as f32 - 0.5) * 2e4;
+        let b = (rng.f64() as f32 - 0.5) * 2e4;
+        let (ra, rb) = (f16::round_f16(a), f16::round_f16(b));
+        // Rounding is monotone: order never inverts.
+        if a <= b {
+            assert!(ra <= rb, "{a} <= {b} but {ra} > {rb}");
+        }
+        // Idempotent.
+        assert_eq!(f16::round_f16(ra), ra);
+        // Relative error bounded (normal range).
+        if a.abs() > 1e-2 {
+            assert!(((ra - a) / a).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_random_topology_reachability() {
+    use fshmem::fabric::Topology;
+    check("topo-reach", 0x70B0, |rng| {
+        let topo = match rng.below(3) {
+            0 => Topology::Ring(rng.range(2, 12) as u32),
+            1 => Topology::Mesh2D {
+                w: rng.range(2, 5) as u32,
+                h: rng.range(2, 5) as u32,
+            },
+            _ => Topology::Torus2D {
+                w: rng.range(2, 5) as u32,
+                h: rng.range(2, 5) as u32,
+            },
+        };
+        let n = topo.nodes();
+        let s = rng.below(n as u64) as u32;
+        let d = rng.below(n as u64) as u32;
+        let hops = topo.hops(s, d);
+        if s == d {
+            assert_eq!(hops, 0);
+        } else {
+            assert!(hops >= 1 && hops <= n);
+            // Routing must make progress: first hop strictly reduces
+            // remaining distance.
+            let port = topo.route(s, d).unwrap();
+            let (next, _) = topo.neighbor(s, port).unwrap();
+            let rest = if next == d { 0 } else { topo.hops(next, d) };
+            assert_eq!(rest + 1, hops);
+        }
+    });
+}

@@ -1,0 +1,159 @@
+//! End-to-end tests of the three-layer stack: AOT Pallas artifacts (L1/L2)
+//! loaded and executed through PJRT from the Rust coordinator (L3).
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a notice) when `artifacts/` is absent so `cargo test` stays
+//! usable on a fresh checkout.
+
+use fshmem::config::{Config, Numerics};
+use fshmem::dla::{ComputeBackend, SoftwareBackend};
+use fshmem::runtime::{Manifest, PjrtBackend, PjrtRuntime};
+use fshmem::sim::Rng;
+
+fn artifacts_available() -> bool {
+    if Manifest::load("artifacts").is_ok() {
+        true
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        false
+    }
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v);
+    v
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * y.abs().max(1.0),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn manifest_covers_case_study_variants() {
+    if !artifacts_available() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    for name in [
+        "matmul_128",
+        "matmul_256",
+        "matmul_512",
+        "matmul_acc_128",
+        "matmul_acc_256",
+        "matmul_acc_512",
+        "conv3_64x64x32_32",
+        "conv5_64x64x24_24",
+        "conv7_64x64x16_16",
+        "matmul_art_256x4",
+    ] {
+        assert!(m.get(name).is_ok(), "artifact {name} missing");
+    }
+}
+
+#[test]
+fn pjrt_matmul_matches_software_backend() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut pjrt = PjrtBackend::load("artifacts").unwrap();
+    let mut sw = SoftwareBackend;
+    let a = rand_vec(128 * 128, 1);
+    let b = rand_vec(128 * 128, 2);
+    let y_pjrt = pjrt.matmul(128, 128, 128, &a, &b, None).unwrap();
+    let y_sw = sw.matmul(128, 128, 128, &a, &b, None).unwrap();
+    assert_close(&y_pjrt, &y_sw, 1e-3, "matmul_128");
+    assert_eq!(pjrt.pjrt_calls, 1, "must hit the compiled artifact");
+    assert_eq!(pjrt.fallback_calls, 0);
+}
+
+#[test]
+fn pjrt_matmul_acc_seeds_accumulator() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut pjrt = PjrtBackend::load("artifacts").unwrap();
+    let mut sw = SoftwareBackend;
+    let c = rand_vec(128 * 128, 3);
+    let a = rand_vec(128 * 128, 4);
+    let b = rand_vec(128 * 128, 5);
+    let y_pjrt = pjrt.matmul(128, 128, 128, &a, &b, Some(&c)).unwrap();
+    let y_sw = sw.matmul(128, 128, 128, &a, &b, Some(&c)).unwrap();
+    assert_close(&y_pjrt, &y_sw, 1e-3, "matmul_acc_128");
+    assert_eq!(pjrt.pjrt_calls, 1);
+}
+
+#[test]
+fn pjrt_conv_matches_software_backend() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut pjrt = PjrtBackend::load("artifacts").unwrap();
+    let mut sw = SoftwareBackend;
+    let x = rand_vec(64 * 64 * 32, 6);
+    let w = rand_vec(3 * 3 * 32 * 32, 7);
+    let y_pjrt = pjrt.conv2d(64, 64, 32, 32, 3, &x, &w).unwrap();
+    let y_sw = sw.conv2d(64, 64, 32, 32, 3, &x, &w).unwrap();
+    assert_close(&y_pjrt, &y_sw, 1e-3, "conv3");
+    assert_eq!(pjrt.pjrt_calls, 1);
+}
+
+#[test]
+fn pjrt_unmatched_shape_falls_back() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut pjrt = PjrtBackend::load("artifacts").unwrap();
+    let a = rand_vec(32 * 32, 8);
+    let b = rand_vec(32 * 32, 9);
+    let _ = pjrt.matmul(32, 32, 32, &a, &b, None).unwrap();
+    assert_eq!(pjrt.pjrt_calls, 0);
+    assert_eq!(pjrt.fallback_calls, 1, "no 32x32 artifact -> software");
+}
+
+#[test]
+fn art_variant_multi_output_chunks_concatenate() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = PjrtRuntime::load_subset("artifacts", &["matmul_art_256x4", "matmul_256"])
+        .unwrap();
+    let a = rand_vec(256 * 256, 10);
+    let b = rand_vec(256 * 256, 11);
+    let chunks = rt.execute_f32("matmul_art_256x4", &[&a, &b]).unwrap();
+    assert_eq!(chunks.len(), 4);
+    let full = rt.execute_f32("matmul_256", &[&a, &b]).unwrap().remove(0);
+    let glued: Vec<f32> = chunks.concat();
+    assert_close(&glued, &full, 1e-4, "ART chunks == full matmul");
+}
+
+#[test]
+fn full_system_case_study_with_pjrt_numerics() {
+    // The headline integration test: 2-node FSHMEM simulation where DLA
+    // numerics run through the AOT Pallas kernels, verified against the
+    // reference backend. (The end-to-end *driver* with reporting is
+    // examples/e2e_two_node_dla.rs.)
+    if !artifacts_available() {
+        return;
+    }
+    let cfg = Config::two_node_ring().with_numerics(Numerics::Pjrt);
+    let case = fshmem::workloads::matmul::MatmulCase {
+        n: 256,
+        art_every: 4096,
+        check: true,
+    };
+    let r = fshmem::workloads::matmul::run_case(&cfg, &case).unwrap();
+    assert!(r.verified, "PJRT-backed case study must verify");
+    assert!(r.speedup > 1.3, "speedup {}", r.speedup);
+
+    let conv_case = fshmem::workloads::conv::ConvCase::reduced(3);
+    let rc = fshmem::workloads::conv::run_case(&cfg, &conv_case).unwrap();
+    assert!(rc.verified);
+}
