@@ -9,6 +9,21 @@
 //! exposes untimed host-side memory access (the OPAE/PCIe preload path
 //! used to stage test data, outside the measured windows — like the
 //! paper's testing methodology).
+//!
+//! Two completion disciplines are offered, mirroring GASNet's extended
+//! API:
+//!
+//! * **Explicit handles** — `put`/`get`/... return an [`OpHandle`];
+//!   `wait`/`test` synchronize on it (`gasnet_put_nb` + `gasnet_wait_syncnb`).
+//! * **NBI access regions** — `nbi_begin()`, then any number of
+//!   `put_nbi`/`get_nbi`/`put_from_mem_nbi`, then `nbi_sync()` to drain
+//!   them all (`gasnet_begin_nbi_accessregion` + `gasnet_wait_syncnbi_all`).
+//!   Collectives issue through NBI regions so independent tree edges
+//!   overlap in simulated time instead of serializing on per-round waits.
+//!
+//! Large PUTs (>= `Config::stripe_threshold`) are striped across every
+//! equal-cost port by the model's host layer — transparent here: one
+//! handle, completing when the last stripe is acked.
 
 use std::sync::Arc;
 
@@ -30,6 +45,10 @@ pub struct OpHandle(pub(crate) OpId);
 pub struct Fshmem {
     eng: Engine<FshmemWorld>,
     addr_map: AddressMap,
+    /// Handles issued inside the open NBI access region (implicit-handle
+    /// ops awaiting `nbi_sync`).
+    nbi: Vec<OpHandle>,
+    nbi_open: bool,
 }
 
 impl Fshmem {
@@ -44,6 +63,8 @@ impl Fshmem {
         Fshmem {
             eng: Engine::new(world),
             addr_map,
+            nbi: Vec::new(),
+            nbi_open: false,
         }
     }
 
@@ -167,15 +188,20 @@ impl Fshmem {
     }
 
     /// Bulk `put` striped across every minimal-hop port toward the
-    /// destination (the prototype's two QSFP+ cables) — how the case
-    /// study moves its largest transfers. Returns one handle per stripe.
+    /// destination (the prototype's two QSFP+ cables), with one explicit
+    /// handle per stripe. Plain `put` already stripes transparently above
+    /// `Config::stripe_threshold`; this variant exists for callers that
+    /// want to observe or wait on individual stripes.
     pub fn put_striped(
         &mut self,
         src_node: NodeId,
         dst: GlobalAddr,
         data: &[u8],
     ) -> Vec<OpHandle> {
-        let ports = self.world().equal_cost_ports_pub(src_node, dst.node());
+        let ports = self
+            .world()
+            .topology()
+            .equal_cost_ports(src_node, dst.node());
         if ports.len() <= 1 || data.len() < 2 * self.world().cfg.packet_payload {
             return vec![self.put(src_node, dst, data)];
         }
@@ -202,6 +228,31 @@ impl Fshmem {
         len: u64,
         dst: GlobalAddr,
     ) -> OpHandle {
+        self.put_from_mem_opt(src_node, src_offset, len, dst, None)
+    }
+
+    /// `put_from_mem` pinned to one egress port — exempt from automatic
+    /// striping. Single-link measurements (the Fig. 5 sweep) use this to
+    /// match the paper's one-cable methodology.
+    pub fn put_from_mem_on_port(
+        &mut self,
+        src_node: NodeId,
+        src_offset: u64,
+        len: u64,
+        dst: GlobalAddr,
+        port: PortId,
+    ) -> OpHandle {
+        self.put_from_mem_opt(src_node, src_offset, len, dst, Some(port))
+    }
+
+    fn put_from_mem_opt(
+        &mut self,
+        src_node: NodeId,
+        src_offset: u64,
+        len: u64,
+        dst: GlobalAddr,
+        port: Option<PortId>,
+    ) -> OpHandle {
         self.addr_map
             .translate(dst, len)
             .expect("put destination out of range");
@@ -220,7 +271,7 @@ impl Fshmem {
                         len,
                     }
                 },
-                port: None,
+                port,
             },
         });
         OpHandle(op)
@@ -343,6 +394,69 @@ impl Fshmem {
             },
         });
         OpHandle(op)
+    }
+
+    // ---- NBI access regions (gasnet_begin/end_nbi_accessregion) ----------
+
+    /// Open a non-blocking implicit (NBI) access region. Every `*_nbi`
+    /// operation issued until the matching [`Self::nbi_sync`] is tracked
+    /// implicitly — no handle bookkeeping for the caller. Regions do not
+    /// nest (GASNet semantics).
+    pub fn nbi_begin(&mut self) {
+        assert!(!self.nbi_open, "NBI access regions do not nest");
+        debug_assert!(self.nbi.is_empty());
+        self.nbi_open = true;
+    }
+
+    /// Drain the open NBI region: advance simulated time until every
+    /// implicit operation issued since [`Self::nbi_begin`] has completed,
+    /// then close the region.
+    pub fn nbi_sync(&mut self) {
+        assert!(self.nbi_open, "nbi_sync without nbi_begin");
+        let hs = std::mem::take(&mut self.nbi);
+        self.wait_all(&hs);
+        self.nbi_open = false;
+    }
+
+    fn nbi_record(&mut self, h: OpHandle) -> OpHandle {
+        assert!(
+            self.nbi_open,
+            "*_nbi operation outside an NBI access region (call nbi_begin first)"
+        );
+        self.nbi.push(h);
+        h
+    }
+
+    /// `put` into the open NBI region. The returned handle may be used
+    /// for finer-grained waits (e.g. a dependency edge in a collective
+    /// tree); `nbi_sync` covers it either way.
+    pub fn put_nbi(&mut self, src_node: NodeId, dst: GlobalAddr, data: &[u8]) -> OpHandle {
+        let h = self.put(src_node, dst, data);
+        self.nbi_record(h)
+    }
+
+    /// `put_from_mem` into the open NBI region.
+    pub fn put_from_mem_nbi(
+        &mut self,
+        src_node: NodeId,
+        src_offset: u64,
+        len: u64,
+        dst: GlobalAddr,
+    ) -> OpHandle {
+        let h = self.put_from_mem(src_node, src_offset, len, dst);
+        self.nbi_record(h)
+    }
+
+    /// `get` into the open NBI region.
+    pub fn get_nbi(
+        &mut self,
+        node: NodeId,
+        src: GlobalAddr,
+        local_offset: u64,
+        len: u64,
+    ) -> OpHandle {
+        let h = self.get(node, src, local_offset, len);
+        self.nbi_record(h)
     }
 
     // ---- synchronization --------------------------------------------------
@@ -498,6 +612,56 @@ mod tests {
         let ams = f.drain_user_ams();
         assert_eq!(ams.len(), 1);
         assert_eq!(ams[0].tag, 42);
+    }
+
+    #[test]
+    fn nbi_region_drains_all_ops() {
+        let mut f = Fshmem::new(Config::two_node_ring());
+        let data = vec![0x42u8; 2000];
+        f.write_local(1, 0x5000, &[7u8; 64]);
+        f.nbi_begin();
+        f.put_nbi(0, f.global_addr(1, 0x100), &data);
+        f.put_nbi(1, f.global_addr(0, 0x200), &data);
+        f.get_nbi(0, f.global_addr(1, 0x5000), 0x8000, 64);
+        f.nbi_sync();
+        // Everything implicit in the region is complete after the sync.
+        assert_eq!(f.read_shared(1, 0x100, 2000), data);
+        assert_eq!(f.read_shared(0, 0x200, 2000), data);
+        assert_eq!(f.read_shared(0, 0x8000, 64), vec![7u8; 64]);
+        assert_eq!(f.world().ops.outstanding(), 0);
+        // Region is closed: a fresh one can open.
+        f.nbi_begin();
+        f.nbi_sync();
+    }
+
+    #[test]
+    #[should_panic(expected = "NBI access regions do not nest")]
+    fn nbi_regions_do_not_nest() {
+        let mut f = Fshmem::new(Config::two_node_ring());
+        f.nbi_begin();
+        f.nbi_begin();
+    }
+
+    #[test]
+    #[should_panic(expected = "outside an NBI access region")]
+    fn nbi_put_requires_open_region() {
+        let mut f = Fshmem::new(Config::two_node_ring());
+        let addr = f.global_addr(1, 0);
+        f.put_nbi(0, addr, &[1, 2, 3]);
+    }
+
+    #[test]
+    fn auto_striping_is_transparent_to_handles() {
+        // One handle, one completion — even when the model fans the
+        // payload out across both ports.
+        let mut f = Fshmem::new(Config::two_node_ring());
+        let data: Vec<u8> = (0..(256 << 10)).map(|i| (i % 251) as u8).collect();
+        let h = f.put(0, f.global_addr(1, 0), &data);
+        assert!(!f.test(h));
+        f.wait(h);
+        assert!(f.test(h));
+        assert_eq!(f.read_shared(1, 0, data.len()), data);
+        assert_eq!(f.counters().get("puts_striped"), 1);
     }
 
     #[test]

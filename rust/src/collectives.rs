@@ -8,47 +8,67 @@
 //! through the simulated GASNet cores (these are *timed* operations, not
 //! host shortcuts).
 //!
+//! All collectives issue through **NBI access regions** (`nbi_begin` /
+//! `*_nbi` / `nbi_sync`): transfers with no data dependency between them
+//! are in flight simultaneously, and the only blocking waits are true
+//! dependency edges (a tree node must *hold* the data before forwarding
+//! it). The pre-NBI implementation synchronized whole tree rounds with
+//! `wait_all`, serializing independent edges on the slowest one.
+//!
 //! Algorithms are the standard O(log n) trees/rings used on small FPGA
-//! fabrics; the point here is protocol realism over asymptotics.
+//! fabrics; the point here is protocol realism over asymptotics. Large
+//! payloads additionally stripe across every equal-cost port (see
+//! `Config::stripe_threshold`) — the collectives inherit that for free.
 
 use crate::api::{Fshmem, OpHandle};
 use crate::memory::NodeId;
 
 /// Broadcast `data` from `root`'s shared segment at `offset` to the same
-/// offset on every node (binomial tree of PUTs).
+/// offset on every node.
+///
+/// Binomial tree on root-relative ranks: relative rank `r` receives from
+/// `r - 2^k` (where `2^k <= r < 2^(k+1)`) and sends to every `r + 2^d`
+/// with `2^d > r`. Each rank's sends wait only on *its own* receive —
+/// independent edges of the tree overlap, and `nbi_sync` drains the
+/// leaves.
 pub fn broadcast(f: &mut Fshmem, root: NodeId, offset: u64, len: u64) {
     let n = f.nodes();
     if n == 1 || len == 0 {
         return;
     }
-    // Rank-rotate so the tree works for any root.
-    let rel = |node: NodeId| (node + n - root) % n;
+    // Rank-rotate so the tree works for any root: relative rank r lives
+    // on node unrel(r).
     let unrel = |r: u32| (r + root) % n;
-    // Binomial tree on relative ranks: in round k, ranks < 2^k send to
-    // rank + 2^k.
-    let mut dist = 1u32;
-    while dist < n {
-        let mut hs: Vec<OpHandle> = Vec::new();
-        for r in 0..dist.min(n) {
-            let peer = r + dist;
-            if peer < n {
-                let src = unrel(r);
-                let dst = unrel(peer);
-                let addr = f.global_addr(dst, offset);
-                hs.push(f.put_from_mem(src, offset, len, addr));
-            }
+    let mut recv: Vec<Option<OpHandle>> = vec![None; n as usize];
+    f.nbi_begin();
+    for r in 0..n {
+        if r > 0 {
+            // Dependency edge: this rank must hold the payload before
+            // forwarding it down the tree.
+            let h = recv[r as usize].expect("binomial tree covers every rank");
+            f.wait(h);
         }
-        // Tree rounds are dependent: wait before fanning out further.
-        f.wait_all(&hs);
-        let _ = rel; // (rel kept for clarity of the scheme)
-        dist *= 2;
+        // Smallest power of two strictly above r (1 for the root).
+        let mut dist = 1u32;
+        while dist <= r {
+            dist <<= 1;
+        }
+        while r + dist < n {
+            let (src, dst) = (unrel(r), unrel(r + dist));
+            let addr = f.global_addr(dst, offset);
+            recv[(r + dist) as usize] =
+                Some(f.put_from_mem_nbi(src, offset, len, addr));
+            dist <<= 1;
+        }
     }
+    f.nbi_sync();
 }
 
 /// Sum-reduce f32 vectors: every node contributes `count` floats at
 /// `offset` (fp16 in memory, like all DLA-adjacent tensors); the result
 /// lands on `root` at `dst_offset`. Flat gather-then-add (fabric sizes
-/// here are <= dozens of nodes).
+/// here are <= dozens of nodes); the gather GETs are independent and run
+/// as one NBI region.
 pub fn reduce_sum_f16(
     f: &mut Fshmem,
     root: NodeId,
@@ -61,15 +81,15 @@ pub fn reduce_sum_f16(
     // Gather all contributions into a scratch strip on root, via the
     // fabric (GETs issued by root — one-sided, no peer involvement).
     let scratch = dst_offset + bytes;
-    let mut hs = Vec::new();
+    f.nbi_begin();
     for node in 0..n {
         if node == root {
             continue;
         }
         let src = f.global_addr(node, offset);
-        hs.push(f.get(root, src, scratch + node as u64 * bytes, bytes));
+        f.get_nbi(root, src, scratch + node as u64 * bytes, bytes);
     }
-    f.wait_all(&hs);
+    f.nbi_sync();
     // Host-side add on root's memory (the software half of the collective;
     // a production build would offload this to the DLA's accumulate mode).
     let mut acc = f.read_shared_f16(root, offset, count);
@@ -94,20 +114,20 @@ pub fn allreduce_sum_f16(f: &mut Fshmem, offset: u64, count: usize, dst_offset: 
 }
 
 /// Gather `len` bytes at `offset` from every node into a contiguous strip
-/// at `dst_offset` on `root` (one-sided GETs).
+/// at `dst_offset` on `root` (one-sided GETs, one NBI region).
 pub fn gather(f: &mut Fshmem, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
     let n = f.nodes();
-    let mut hs = Vec::new();
+    f.nbi_begin();
     for node in 0..n {
         if node == root {
             let data = f.read_shared(root, offset, len as usize);
             f.write_local(root, dst_offset + node as u64 * len, &data);
         } else {
             let src = f.global_addr(node, offset);
-            hs.push(f.get(root, src, dst_offset + node as u64 * len, len));
+            f.get_nbi(root, src, dst_offset + node as u64 * len, len);
         }
     }
-    f.wait_all(&hs);
+    f.nbi_sync();
 }
 
 /// All-gather: gather at node 0, then broadcast the strip.
@@ -119,20 +139,20 @@ pub fn all_gather(f: &mut Fshmem, offset: u64, len: u64, dst_offset: u64) {
 }
 
 /// Scatter: root holds `n` strips of `len` bytes at `offset`; strip `i`
-/// lands at `dst_offset` on node `i`.
+/// lands at `dst_offset` on node `i` (independent PUTs, one NBI region).
 pub fn scatter(f: &mut Fshmem, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
     let n = f.nodes();
-    let mut hs = Vec::new();
+    f.nbi_begin();
     for node in 0..n {
         if node == root {
             let data = f.read_shared(root, offset + node as u64 * len, len as usize);
             f.write_local(root, dst_offset, &data);
         } else {
             let addr = f.global_addr(node, dst_offset);
-            hs.push(f.put_from_mem(root, offset + node as u64 * len, len, addr));
+            f.put_from_mem_nbi(root, offset + node as u64 * len, len, addr);
         }
     }
-    f.wait_all(&hs);
+    f.nbi_sync();
 }
 
 #[cfg(test)]
@@ -202,6 +222,21 @@ mod tests {
         for (i, g) in got.iter().enumerate() {
             let want = (0..4).map(|n| (n * 100 + i) as f32).sum::<f32>();
             assert!((g - want).abs() < 1.0, "elem {i}: {g} vs {want}");
+        }
+    }
+
+    #[test]
+    fn reduce_works_for_nonzero_root() {
+        let mut f = fabric(5);
+        for node in 0..5u32 {
+            let v: Vec<f32> = (0..16).map(|i| (node + i) as f32).collect();
+            f.write_local_f16(node, 0, &v);
+        }
+        reduce_sum_f16(&mut f, 3, 0, 16, 0x4000);
+        let got = f.read_shared_f16(3, 0x4000, 16);
+        for (i, g) in got.iter().enumerate() {
+            let want = (0..5).map(|n| (n + i) as f32).sum::<f32>();
+            assert!((g - want).abs() < 0.5, "elem {i}: {g} vs {want}");
         }
     }
 

@@ -46,6 +46,10 @@ pub struct Config {
     /// failure-injection for robustness tests and the reliability
     /// ablation.
     pub link_loss_permille: u32,
+    /// PUTs of at least this many payload bytes fan out across every
+    /// equal-cost port toward the destination (multi-port striping — the
+    /// fast path for large transfers). `u64::MAX` disables striping.
+    pub stripe_threshold: u64,
     pub seed: u64,
 }
 
@@ -67,6 +71,10 @@ impl Config {
             numerics: Numerics::Software,
             artifacts_dir: "artifacts".to_string(),
             link_loss_permille: 0,
+            // 64 KiB: far above the Fig. 5 half-max point, so latency-
+            // sensitive transfers stay single-message while bulk
+            // transfers use both QSFP+ cables.
+            stripe_threshold: 64 << 10,
             seed: 0xF5113,
         }
     }
@@ -97,6 +105,12 @@ impl Config {
 
     pub fn with_link_loss_permille(mut self, permille: u32) -> Self {
         self.link_loss_permille = permille;
+        self
+    }
+
+    /// Set the multi-port striping threshold (`u64::MAX` disables).
+    pub fn with_stripe_threshold(mut self, bytes: u64) -> Self {
+        self.stripe_threshold = bytes;
         self
     }
 
@@ -148,6 +162,13 @@ impl Config {
                     cfg.link_loss_permille =
                         v.parse().context("link_loss_permille")?
                 }
+                "stripe_threshold" => {
+                    cfg.stripe_threshold = if v == "off" {
+                        u64::MAX
+                    } else {
+                        v.parse().context("stripe_threshold")?
+                    }
+                }
                 "seed" => cfg.seed = v.parse().context("seed")?,
                 _ => bail!("line {}: unknown key {k:?}", lineno + 1),
             }
@@ -183,6 +204,9 @@ impl Config {
         }
         if self.link_loss_permille >= 1000 {
             bail!("link_loss_permille must be < 1000");
+        }
+        if self.stripe_threshold == 0 {
+            bail!("stripe_threshold must be positive (use u64::MAX to disable)");
         }
         Ok(())
     }
@@ -237,5 +261,15 @@ mod tests {
         assert!(Config::from_str_cfg("numerics = gpu\n").is_err());
         assert!(Config::from_str_cfg("topology = star\n").is_err());
         assert!(Config::from_str_cfg("just a line\n").is_err());
+        assert!(Config::from_str_cfg("stripe_threshold = 0\n").is_err());
+    }
+
+    #[test]
+    fn stripe_threshold_parses_and_disables() {
+        let cfg = Config::from_str_cfg("stripe_threshold = 131072\n").unwrap();
+        assert_eq!(cfg.stripe_threshold, 128 << 10);
+        let cfg = Config::from_str_cfg("stripe_threshold = off\n").unwrap();
+        assert_eq!(cfg.stripe_threshold, u64::MAX);
+        assert_eq!(Config::two_node_ring().stripe_threshold, 64 << 10);
     }
 }

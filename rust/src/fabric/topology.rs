@@ -123,6 +123,40 @@ impl Topology {
         }
     }
 
+    /// First-hop port toward `dst`, honoring an explicit preference (how
+    /// the model resolves `HostCmd::Put { port: Some(_) }` pinning).
+    /// Self-sends report port 0 (loopback never touches a wire).
+    pub fn out_port(&self, src: NodeId, dst: NodeId, pref: Option<PortId>) -> PortId {
+        if let Some(p) = pref {
+            return p;
+        }
+        self.route(src, dst).unwrap_or(0)
+    }
+
+    /// Ports from `src` that reach `dst` in the minimal hop count —
+    /// parallel paths that striped transfers and the DLA's ART stream fan
+    /// out across (the paper's prototype: two QSFP+ cables both connect
+    /// the two nodes, so a 2-node ring reports both ports).
+    pub fn equal_cost_ports(&self, src: NodeId, dst: NodeId) -> Vec<PortId> {
+        if src == dst {
+            return vec![0];
+        }
+        let best = self.hops(src, dst);
+        let mut out = Vec::new();
+        for port in 0..self.ports_per_node() {
+            if let Some((peer, _)) = self.neighbor(src, port) {
+                let h = if peer == dst { 0 } else { self.hops(peer, dst) };
+                if h + 1 == best {
+                    out.push(port);
+                }
+            }
+        }
+        if out.is_empty() {
+            out.push(self.out_port(src, dst, None));
+        }
+        out
+    }
+
     /// Hop count from src to dst under this topology's routing.
     pub fn hops(&self, src: NodeId, dst: NodeId) -> u32 {
         let mut cur = src;
@@ -249,6 +283,64 @@ mod tests {
                             Some((node, port)),
                             "{t:?} {node}:{port}"
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_node_ring_has_two_equal_cost_ports() {
+        let t = Topology::Ring(2);
+        assert_eq!(t.equal_cost_ports(0, 1), vec![PORT_E, PORT_W]);
+        assert_eq!(t.equal_cost_ports(1, 0), vec![PORT_E, PORT_W]);
+        assert_eq!(t.equal_cost_ports(0, 0), vec![0], "loopback");
+    }
+
+    #[test]
+    fn ring_tie_distance_has_two_equal_cost_ports() {
+        let t = Topology::Ring(8);
+        // Antipodal node: both ways round are 4 hops.
+        assert_eq!(t.equal_cost_ports(0, 4), vec![PORT_E, PORT_W]);
+        // Neighbor: only one minimal path.
+        assert_eq!(t.equal_cost_ports(0, 1), vec![PORT_E]);
+        assert_eq!(t.equal_cost_ports(0, 7), vec![PORT_W]);
+    }
+
+    #[test]
+    fn mesh_diagonal_has_two_equal_cost_ports() {
+        let t = Topology::Mesh2D { w: 3, h: 3 };
+        // (0,0) -> (1,1): E-then-S and S-then-E are both 2 hops.
+        assert_eq!(t.equal_cost_ports(0, 4), vec![PORT_E, PORT_S]);
+        // Same row: only E.
+        assert_eq!(t.equal_cost_ports(0, 2), vec![PORT_E]);
+    }
+
+    #[test]
+    fn out_port_prefers_pin_then_route() {
+        let t = Topology::Ring(4);
+        assert_eq!(t.out_port(0, 1, None), PORT_E);
+        assert_eq!(t.out_port(0, 1, Some(PORT_W)), PORT_W);
+        assert_eq!(t.out_port(2, 2, None), 0, "self-send");
+    }
+
+    #[test]
+    fn equal_cost_ports_all_advance_toward_dst() {
+        for t in [
+            Topology::Ring(6),
+            Topology::Mesh2D { w: 4, h: 3 },
+            Topology::Torus2D { w: 4, h: 4 },
+        ] {
+            for s in 0..t.nodes() {
+                for d in 0..t.nodes() {
+                    if s == d {
+                        continue;
+                    }
+                    let best = t.hops(s, d);
+                    for port in t.equal_cost_ports(s, d) {
+                        let (peer, _) = t.neighbor(s, port).expect("wired");
+                        let rest = if peer == d { 0 } else { t.hops(peer, d) };
+                        assert_eq!(rest + 1, best, "{t:?} {s}->{d} port {port}");
                     }
                 }
             }

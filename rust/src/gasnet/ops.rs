@@ -35,6 +35,10 @@ pub struct OpState {
     pub data_done_at: Option<SimTime>,
     /// Initiator received the completion ack / reply completion.
     pub completed_at: Option<SimTime>,
+    /// Completion events still outstanding. 1 for ordinary ops; a PUT
+    /// striped over k ports carries k wire messages sharing this token
+    /// and completes on its k-th ACK.
+    pub parts: u32,
 }
 
 impl OpState {
@@ -68,9 +72,20 @@ impl OpTracker {
                 header_at: None,
                 data_done_at: None,
                 completed_at: None,
+                parts: 1,
             },
         );
         id
+    }
+
+    /// Declare that `id` completes only after `parts` completion events
+    /// (set by the model when it stripes one op across several ports).
+    pub fn set_parts(&mut self, id: OpId, parts: u32) {
+        debug_assert!(parts >= 1);
+        if let Some(op) = self.ops.get_mut(&id) {
+            debug_assert!(op.completed_at.is_none(), "op {id} already complete");
+            op.parts = parts;
+        }
     }
 
     pub fn get(&self, id: OpId) -> Option<&OpState> {
@@ -99,6 +114,10 @@ impl OpTracker {
 
     pub fn complete(&mut self, id: OpId, now: SimTime) {
         if let Some(op) = self.ops.get_mut(&id) {
+            if op.parts > 1 {
+                op.parts -= 1;
+                return;
+            }
             op.completed_at.get_or_insert(now);
             if op.data_done_at.is_none() && op.bytes == 0 {
                 op.data_done_at = Some(now);
@@ -167,6 +186,19 @@ mod tests {
         t.gc();
         assert!(t.get(a).is_none());
         assert_eq!(t.outstanding(), 1);
+    }
+
+    #[test]
+    fn multipart_completes_on_last_ack() {
+        let mut t = OpTracker::new();
+        let id = t.issue(OpKind::Put, SimTime::ZERO, 2048);
+        t.set_parts(id, 3);
+        t.complete(id, SimTime::from_ns(10));
+        t.complete(id, SimTime::from_ns(20));
+        assert!(!t.is_complete(id), "2 of 3 parts acked");
+        t.complete(id, SimTime::from_ns(30));
+        assert!(t.is_complete(id));
+        assert_eq!(t.get(id).unwrap().completed_at, Some(SimTime::from_ns(30)));
     }
 
     #[test]

@@ -63,6 +63,25 @@ impl Payload {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Sub-range of this payload, for striping one transfer across
+    /// multiple ports. `MemRead` just narrows the read-DMA window
+    /// (zero-copy); `Bytes` copies the sub-range once, matching the one
+    /// pass the sequencer's read DMA makes over a host buffer.
+    pub fn slice(&self, offset: u64, len: u64) -> Payload {
+        debug_assert!(offset + len <= self.len(), "slice out of range");
+        match self {
+            Payload::None => Payload::None,
+            Payload::Bytes(b) => Payload::Bytes(Arc::new(
+                b[offset as usize..(offset + len) as usize].to_vec(),
+            )),
+            Payload::MemRead { shared, offset: base, .. } => Payload::MemRead {
+                shared: *shared,
+                offset: base + offset,
+                len,
+            },
+        }
+    }
 }
 
 /// A fully-specified active message, pre-packetization.
@@ -339,6 +358,34 @@ mod tests {
         assert_eq!(off, 0x4000);
         assert!(first && last);
         assert_eq!(plen, 100);
+    }
+
+    #[test]
+    fn payload_slice_narrows_both_variants() {
+        let bytes = Payload::Bytes(Arc::new((0u8..100).collect()));
+        match bytes.slice(10, 20) {
+            Payload::Bytes(b) => {
+                assert_eq!(&b[..], &(10u8..30).collect::<Vec<_>>()[..])
+            }
+            other => panic!("{other:?}"),
+        }
+        let mem = Payload::MemRead {
+            shared: true,
+            offset: 0x1000,
+            len: 100,
+        };
+        match mem.slice(64, 36) {
+            Payload::MemRead {
+                shared,
+                offset,
+                len,
+            } => {
+                assert!(shared);
+                assert_eq!(offset, 0x1040);
+                assert_eq!(len, 36);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Compute layer: the DLA core and Automatic Result Transfer.
+//!
+//! Jobs arrive through the rx layer's COMPUTE handler; this layer runs
+//! them (numerics up-front, timing by the cycle model) and plans the ART
+//! chunk PUTs that stream partial results to a peer *during* the
+//! computation — striped round-robin across all equal-cost ports, which
+//! is how the paper's case study keeps both QSFP+ cables busy.
+
+use crate::dla::{self, DlaJob, DlaOp};
+use crate::gasnet::handlers::{H_ACK, H_PUT};
+use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, OpKind, Payload};
+use crate::memory::{GlobalAddr, NodeId};
+use crate::sim::{Counters, EventQueue, SimTime};
+
+use super::{Event, FshmemWorld};
+
+impl FshmemWorld {
+    /// Execute job numerics immediately (timing handled by DlaDone/ART
+    /// events; doing the arithmetic up-front means ART chunk reads see
+    /// final data — safe because nothing may read the output region
+    /// before completion).
+    ///
+    /// Tensors live in memory as **fp16** (the DLA's native format);
+    /// numerics run in f32 (the PE accumulators are wide) and results
+    /// round back through fp16 on store.
+    fn run_numerics(&mut self, node: NodeId, op: &DlaOp) {
+        let Some(backend) = self.backend.as_mut() else {
+            return;
+        };
+        let mem = &mut self.nodes[node as usize].mem;
+        match *op {
+            DlaOp::Matmul {
+                m,
+                k,
+                n,
+                a,
+                b,
+                y,
+                accumulate,
+            } => {
+                let (m, k, n) = (m as usize, k as usize, n as usize);
+                let av = mem.read_shared_f16(a.offset(), m * k).expect("A tensor");
+                let bv = mem.read_shared_f16(b.offset(), k * n).expect("B tensor");
+                let seed = if accumulate {
+                    Some(mem.read_shared_f16(y.offset(), m * n).expect("Y seed"))
+                } else {
+                    None
+                };
+                let yv = backend
+                    .matmul(m, k, n, &av, &bv, seed.as_deref())
+                    .expect("matmul numerics");
+                mem.write_shared_f16(y.offset(), &yv).expect("Y write");
+            }
+            DlaOp::Conv {
+                h,
+                w,
+                cin,
+                cout,
+                ksize,
+                x,
+                wts,
+                y,
+            } => {
+                let (h, w, cin, cout, ksize) = (
+                    h as usize,
+                    w as usize,
+                    cin as usize,
+                    cout as usize,
+                    ksize as usize,
+                );
+                let xv = mem
+                    .read_shared_f16(x.offset(), h * w * cin)
+                    .expect("X tensor");
+                let wv = mem
+                    .read_shared_f16(wts.offset(), ksize * ksize * cin * cout)
+                    .expect("W tensor");
+                let yv = backend
+                    .conv2d(h, w, cin, cout, ksize, &xv, &wv)
+                    .expect("conv numerics");
+                mem.write_shared_f16(y.offset(), &yv).expect("Y write");
+            }
+        }
+    }
+
+    pub(super) fn on_dla_start(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        let dla = &mut self.nodes[node as usize].dla;
+        if dla.busy {
+            return;
+        }
+        let Some(job) = dla.queue.pop_front() else {
+            return;
+        };
+        dla.busy = true;
+        c.incr("dla_jobs_started");
+
+        // Numerics now (see run_numerics doc for why this is safe).
+        self.run_numerics(node, &job.op);
+
+        // ART: plan chunk PUTs entering the Compute class as results
+        // become valid.
+        if let Some(art) = &job.art {
+            let chunks = dla::art::plan(&self.cfg.dla, &job.op, art);
+            let y = job.op.output_addr();
+            // Stripe chunks round-robin over all minimal-hop ports (both
+            // QSFP+ cables of the 2-node ring).
+            let ports = self.cfg.topology.equal_cost_ports(node, art.dst.node());
+            for (ci, ch) in chunks.into_iter().enumerate() {
+                let op = self.ops.issue(OpKind::Compute, now + ch.ready_at, ch.bytes);
+                self.art_ops.push((node, op));
+                let msg = AmMessage {
+                    kind: AmKind::Request,
+                    category: AmCategory::Long,
+                    handler: H_PUT,
+                    src: node,
+                    dst: ch.dst.node(),
+                    token: op,
+                    dst_addr: ch.dst,
+                    args: [0; 4],
+                    payload: Payload::MemRead {
+                        shared: true,
+                        offset: y.offset() + ch.src_offset,
+                        len: ch.bytes,
+                    },
+                };
+                let port = ports[ci % ports.len()];
+                c.incr("art_chunks");
+                q.schedule_at(
+                    now + ch.ready_at,
+                    Event::TxEnqueue {
+                        node,
+                        port,
+                        class: MsgClass::Compute,
+                        msg,
+                    },
+                );
+            }
+        }
+
+        let dur = self.cfg.dla.job_time(&job.op);
+        q.schedule_at(now + dur, Event::DlaDone { node, job });
+    }
+
+    pub(super) fn on_dla_done(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        job: DlaJob,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        {
+            let dla = &mut self.nodes[node as usize].dla;
+            dla.busy = false;
+            dla.macs_done += self.cfg.dla.macs(&job.op);
+        }
+        c.incr("dla_jobs_done");
+        if let Some((notify_node, token)) = job.notify {
+            let ack = AmMessage {
+                kind: AmKind::Reply,
+                category: AmCategory::Short,
+                handler: H_ACK,
+                src: node,
+                dst: notify_node,
+                token,
+                dst_addr: GlobalAddr::new(notify_node, 0),
+                args: [0; 4],
+                payload: Payload::None,
+            };
+            let port = self.cfg.topology.out_port(node, notify_node, None);
+            q.schedule_at(
+                now,
+                Event::TxEnqueue {
+                    node,
+                    port,
+                    class: MsgClass::Reply,
+                    msg: ack,
+                },
+            );
+        }
+        if !self.nodes[node as usize].dla.queue.is_empty() {
+            q.schedule_at(now, Event::DlaStart { node });
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Host layer: the HostCmd issue path.
+//!
+//! Every API call lands here as a [`HostCmd`] event after the PCIe/MMIO
+//! ingress delay. This layer translates commands into [`AmMessage`]s and
+//! hands them to the tx layer's scheduler FIFOs. It also implements the
+//! multi-port striping fast path: a PUT whose payload reaches
+//! `Config::stripe_threshold` fans out across every equal-cost port
+//! toward the destination as independent wire messages sharing the op
+//! token (the op completes on the last stripe's ACK — `OpState::parts`).
+
+use std::sync::Arc;
+
+use crate::dla;
+use crate::gasnet::handlers::{H_BARRIER_ARRIVE, H_COMPUTE, H_GET, H_PUT};
+use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, OpId, Payload};
+use crate::memory::{GlobalAddr, NodeId};
+use crate::sim::{Counters, EventQueue, SimTime};
+
+use super::{Event, FshmemWorld, HostCmd};
+
+impl FshmemWorld {
+    pub(super) fn on_host_cmd(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        cmd: HostCmd,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        let t = &self.cfg.timing;
+        let at = now + t.cmd_ingress() + t.tx_sched();
+        c.incr("host_cmds");
+        let topo = self.cfg.topology;
+        let (port, class, msg) = match cmd {
+            HostCmd::Put {
+                op,
+                dst,
+                payload,
+                port,
+            } => {
+                if port.is_none() && self.stripe_eligible(node, dst, &payload) {
+                    self.issue_striped_put(at, node, op, dst, payload, q, c);
+                    return;
+                }
+                let category = if payload.is_empty() {
+                    AmCategory::Short
+                } else {
+                    AmCategory::Long
+                };
+                let msg = AmMessage {
+                    kind: AmKind::Request,
+                    category,
+                    handler: H_PUT,
+                    src: node,
+                    dst: dst.node(),
+                    token: op,
+                    dst_addr: dst,
+                    args: [0; 4],
+                    payload,
+                };
+                (topo.out_port(node, dst.node(), port), MsgClass::Host, msg)
+            }
+            HostCmd::Get {
+                op,
+                src,
+                local_offset,
+                len,
+            } => {
+                let msg = AmMessage {
+                    kind: AmKind::Request,
+                    category: AmCategory::Short,
+                    handler: H_GET,
+                    src: node,
+                    dst: src.node(),
+                    token: op,
+                    // Carries the *requester-local* landing address.
+                    dst_addr: GlobalAddr::new(node, local_offset),
+                    args: [
+                        src.offset() as u32,
+                        (src.offset() >> 32) as u32,
+                        len as u32,
+                        0,
+                    ],
+                    payload: Payload::None,
+                };
+                (topo.out_port(node, src.node(), None), MsgClass::Host, msg)
+            }
+            HostCmd::AmShort {
+                op,
+                dst,
+                handler,
+                args,
+            } => {
+                let msg = AmMessage {
+                    kind: AmKind::Request,
+                    category: AmCategory::Short,
+                    handler,
+                    src: node,
+                    dst,
+                    token: op,
+                    dst_addr: GlobalAddr::new(dst, 0),
+                    args,
+                    payload: Payload::None,
+                };
+                (topo.out_port(node, dst, None), MsgClass::Host, msg)
+            }
+            HostCmd::AmMedium {
+                op,
+                dst,
+                handler,
+                args,
+                payload,
+                private_offset,
+            } => {
+                let msg = AmMessage {
+                    kind: AmKind::Request,
+                    category: AmCategory::Medium,
+                    handler,
+                    src: node,
+                    dst,
+                    token: op,
+                    dst_addr: GlobalAddr::new(dst, private_offset),
+                    args,
+                    payload,
+                };
+                (topo.out_port(node, dst, None), MsgClass::Host, msg)
+            }
+            HostCmd::Compute { op, target, job } => {
+                let desc = dla::job::encode_job(&job);
+                let msg = AmMessage {
+                    kind: AmKind::Request,
+                    category: AmCategory::Medium,
+                    handler: H_COMPUTE,
+                    src: node,
+                    dst: target,
+                    token: op,
+                    dst_addr: GlobalAddr::new(target, 0),
+                    args: [0; 4],
+                    payload: Payload::Bytes(Arc::new(desc)),
+                };
+                (topo.out_port(node, target, None), MsgClass::Host, msg)
+            }
+            HostCmd::Barrier { op } => {
+                let msg = AmMessage {
+                    kind: AmKind::Request,
+                    category: AmCategory::Short,
+                    handler: H_BARRIER_ARRIVE,
+                    src: node,
+                    dst: 0,
+                    token: op,
+                    dst_addr: GlobalAddr::new(0, 0),
+                    args: [0; 4],
+                    payload: Payload::None,
+                };
+                (topo.out_port(node, 0, None), MsgClass::Host, msg)
+            }
+        };
+        q.schedule_at(
+            at,
+            Event::TxEnqueue {
+                node,
+                port,
+                class,
+                msg,
+            },
+        );
+    }
+
+    /// A PUT stripes when it is big enough, remote, and more than one
+    /// minimal-hop port reaches the destination. Payloads of at most one
+    /// packet can't split into two packet-aligned stripes (possible with
+    /// a tiny configured threshold), so they stay single-message.
+    fn stripe_eligible(&self, node: NodeId, dst: GlobalAddr, payload: &Payload) -> bool {
+        payload.len() >= self.cfg.stripe_threshold
+            && payload.len() > self.cfg.packet_payload as u64
+            && dst.node() != node
+            && self.cfg.topology.equal_cost_ports(node, dst.node()).len() > 1
+    }
+
+    /// Fan one PUT out across every equal-cost port as contiguous,
+    /// packet-aligned stripes. Each stripe is an independent wire message
+    /// (own fragment tracking, own handler run, own ACK) sharing the op
+    /// token; `OpTracker` counts bytes across stripes for the data leg
+    /// and ACKs via `parts` for completion.
+    fn issue_striped_put(
+        &mut self,
+        at: SimTime,
+        node: NodeId,
+        op: OpId,
+        dst: GlobalAddr,
+        payload: Payload,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        let ports = self.cfg.topology.equal_cost_ports(node, dst.node());
+        let total = payload.len();
+        let pp = self.cfg.packet_payload as u64;
+        // Packet-aligned stripe size, so no stripe ends mid-packet.
+        let stripe = total
+            .div_ceil(ports.len() as u64)
+            .div_ceil(pp)
+            .max(1)
+            * pp;
+        let n_stripes = total.div_ceil(stripe) as u32;
+        debug_assert!(n_stripes >= 2, "stripe_eligible admits >= 2 stripes");
+        debug_assert!(n_stripes as usize <= ports.len());
+        self.ops.set_parts(op, n_stripes);
+        c.incr("puts_striped");
+        let mut off = 0u64;
+        for (i, &port) in ports.iter().enumerate() {
+            if off >= total {
+                break;
+            }
+            let len = stripe.min(total - off);
+            let msg = AmMessage {
+                kind: AmKind::Request,
+                category: AmCategory::Long,
+                handler: H_PUT,
+                src: node,
+                dst: dst.node(),
+                token: op,
+                dst_addr: dst.add(off),
+                // args[3] = stripe id: disambiguates the per-message
+                // receive-progress tracking on the rx side.
+                args: [0, 0, 0, i as u32],
+                payload: payload.slice(off, len),
+            };
+            q.schedule_at(
+                at,
+                Event::TxEnqueue {
+                    node,
+                    port,
+                    class: MsgClass::Host,
+                    msg,
+                },
+            );
+            off += len;
+        }
+        debug_assert_eq!(off, total, "stripes must tile the payload");
+    }
+}

@@ -1,0 +1,316 @@
+//! The FSHMEM world: every node (GASNet core + memories + DLA), the
+//! fabric links, and the event-level protocol state machine (Fig. 3's
+//! dataflows — `gasnet_put` red, `gasnet_get` blue, `gasnet_AMRequest*`
+//! orange — as DES event chains).
+//!
+//! The model is organized as one module per pipeline layer, in the order
+//! a byte traverses them; keeping every stage concurrently busy across
+//! these layers is what produces the paper's >95%-of-peak bandwidth:
+//!
+//! ```text
+//!  host.rs     HostCmd issue path (PCIe ingress, striping fan-out)
+//!   └─ tx.rs       scheduler FIFOs + AM sequencer (class round-robin,
+//!    │             header gen, read-DMA pipelining, wire backpressure)
+//!    └─ transit.rs   packet flight: serialization, propagation, ARQ
+//!     │              replay, multihop store-and-forward, header-front
+//!     │              observation (the paper's latency endpoint)
+//!     └─ rx.rs        write-DMA landing + the hardware-atomic handler
+//!      │              engine (PUT ack, GET reply synthesis, barriers)
+//!      └─ compute.rs    DLA job execution + ART chunk streaming
+//! ```
+//!
+//! Protocol walk-through (PUT, node S -> node D):
+//!
+//! ```text
+//! HostCmd{Put}            host issues command (PCIe ingress delay)
+//!  └─ TxEnqueue           scheduler class FIFO (host/compute/reply RR)
+//!      └─ SeqStart        AM sequencer: header gen, read-DMA fetch,
+//!                         per-packet occupancy vs wire pipelining
+//!          ├─ PacketArrive(D)  per packet, after serialize+propagation
+//!          │    └─ PacketLocal  rx decode; write-DMA payload to segment;
+//!          │                    first pkt -> header-latency counter
+//!          │        └─ HandlerStart/Done (last pkt): PUT handler -> ACK
+//!          │             └─ ... ACK travels back, completes the op
+//!          └─ SeqFree     sequencer takes next message
+//! ```
+//!
+//! A PUT at or above `Config::stripe_threshold` fans out in `host.rs`
+//! across every equal-cost port as independent wire messages sharing one
+//! op token; the op completes on its last stripe's ACK (`OpState::parts`).
+//!
+//! GET is a Short request whose handler synthesizes a `PutReply` carrying
+//! the data; COMPUTE is a Medium request whose payload is a DLA job
+//! descriptor; ART chunks are sequencer messages entering the `Compute`
+//! class directly (no host involvement — that is the point of ART).
+
+mod compute;
+mod host;
+mod rx;
+mod transit;
+mod tx;
+
+#[cfg(test)]
+mod tests;
+
+use crate::config::{Config, Numerics};
+use crate::dla::{ComputeBackend, DlaJob, DlaState, SoftwareBackend};
+use crate::fabric::{Link, Router, Wiring, {PortId, Topology}};
+use crate::gasnet::{
+    AmCategory, AmKind, AmMessage, GasnetCore, MsgClass, OpId, OpTracker,
+    Packet, Payload,
+};
+use crate::memory::{GlobalAddr, NodeId, NodeMemory};
+use crate::sim::{Counters, EventQueue, Model, SimTime};
+
+/// Host-issued commands (the FSHMEM API surface, post-PCIe).
+#[derive(Debug, Clone)]
+pub enum HostCmd {
+    Put {
+        op: OpId,
+        dst: GlobalAddr,
+        payload: Payload,
+        /// Force a specific egress port (case-study striping); default
+        /// routes by topology (striping across all equal-cost ports when
+        /// the payload reaches `Config::stripe_threshold`).
+        port: Option<PortId>,
+    },
+    Get {
+        op: OpId,
+        /// Remote source in the global address space.
+        src: GlobalAddr,
+        /// Local destination offset in this node's shared segment.
+        local_offset: u64,
+        len: u64,
+    },
+    AmShort {
+        op: OpId,
+        dst: NodeId,
+        handler: u8,
+        args: [u32; 4],
+    },
+    AmMedium {
+        op: OpId,
+        dst: NodeId,
+        handler: u8,
+        args: [u32; 4],
+        payload: Payload,
+        /// Destination offset in the remote node's *private* memory.
+        private_offset: u64,
+    },
+    Compute {
+        op: OpId,
+        target: NodeId,
+        job: DlaJob,
+    },
+    Barrier {
+        op: OpId,
+    },
+}
+
+/// DES events (see module docs for the protocol chains).
+#[derive(Debug)]
+pub enum Event {
+    HostCmd {
+        node: NodeId,
+        cmd: HostCmd,
+    },
+    TxEnqueue {
+        node: NodeId,
+        port: PortId,
+        class: MsgClass,
+        msg: AmMessage,
+    },
+    SeqStart {
+        node: NodeId,
+        port: PortId,
+    },
+    SeqFree {
+        node: NodeId,
+        port: PortId,
+    },
+    PacketArrive {
+        node: NodeId,
+        port: PortId,
+        pkt: Packet,
+    },
+    PacketLocal {
+        node: NodeId,
+        pkt: Packet,
+    },
+    /// Cut-through header observation: the *front* of a message's first
+    /// packet reaching the destination's rx decoder — the paper's latency
+    /// measurement point ("until the message header is received"). Fires
+    /// one serialization-time earlier than the full packet body.
+    HeaderArrive {
+        node: NodeId,
+        token: OpId,
+        handler: u8,
+        kind: AmKind,
+        category: AmCategory,
+    },
+    HandlerStart {
+        node: NodeId,
+    },
+    HandlerDone {
+        node: NodeId,
+        pkt: Packet,
+    },
+    DlaStart {
+        node: NodeId,
+    },
+    DlaDone {
+        node: NodeId,
+        job: DlaJob,
+    },
+    /// ARQ: replay a corrupted packet on its link (consumes wire time).
+    Retransmit {
+        link: usize,
+        pkt: Packet,
+    },
+}
+
+/// A user AM delivered to its handler (drained by the API layer).
+#[derive(Debug, Clone)]
+pub struct UserAm {
+    pub at: SimTime,
+    pub node: NodeId,
+    pub tag: u8,
+    pub args: [u32; 4],
+    pub payload: Vec<u8>,
+}
+
+/// One FPGA node.
+pub struct Node {
+    pub core: GasnetCore,
+    pub mem: NodeMemory,
+    pub dla: DlaState,
+}
+
+/// The whole simulated system.
+pub struct FshmemWorld {
+    pub cfg: Config,
+    pub nodes: Vec<Node>,
+    pub links: Vec<Link>,
+    pub wiring: Wiring,
+    pub router: Router,
+    pub ops: OpTracker,
+    pub user_am_log: Vec<UserAm>,
+    /// Ops issued autonomously by DLA ART transfers: (producer node, op).
+    /// Workloads use these to wait for partial-result delivery.
+    pub art_ops: Vec<(NodeId, OpId)>,
+    backend: Option<Box<dyn ComputeBackend>>,
+    /// Barrier arrivals collected at node 0: (src, token).
+    barrier_arrivals: Vec<(NodeId, u32)>,
+    /// Deterministic fault source for the link-loss ARQ model.
+    fault_rng: crate::sim::Rng,
+    /// Per-message receive progress: (rx node, token, stripe) -> payload
+    /// bytes landed. Stripes of one striped PUT share a token but carry
+    /// distinct stripe ids, so each wire message completes (and runs its
+    /// handler) independently. The AM handler fires only when the whole
+    /// message has arrived (retransmissions can reorder fragments). A
+    /// linear-scan Vec beats hashing here: the per-node set of partially-
+    /// received messages is tiny (hot path: one entry).
+    rx_progress: Vec<(NodeId, u32, u32, u64)>,
+}
+
+impl FshmemWorld {
+    pub fn new(cfg: Config) -> Self {
+        cfg.validate().expect("invalid config");
+        let wiring = Wiring::new(cfg.topology);
+        let links = wiring
+            .links
+            .iter()
+            .map(|_| Link::new(cfg.link))
+            .collect();
+        let nodes = (0..cfg.topology.nodes())
+            .map(|_| Node {
+                core: GasnetCore::new(cfg.topology.ports_per_node()),
+                mem: NodeMemory::new(
+                    cfg.segment_bytes as usize,
+                    cfg.private_bytes as usize,
+                ),
+                dla: DlaState::default(),
+            })
+            .collect();
+        let backend: Option<Box<dyn ComputeBackend>> = match cfg.numerics {
+            Numerics::TimingOnly => None,
+            Numerics::Software => Some(Box::new(SoftwareBackend)),
+            Numerics::Pjrt => None, // installed via set_backend by the API
+        };
+        FshmemWorld {
+            router: Router::d5005(cfg.topology),
+            wiring,
+            links,
+            nodes,
+            ops: OpTracker::new(),
+            user_am_log: Vec::new(),
+            art_ops: Vec::new(),
+            backend,
+            barrier_arrivals: Vec::new(),
+            fault_rng: crate::sim::Rng::new(cfg.seed ^ 0xFA01),
+            rx_progress: Vec::new(),
+            cfg,
+        }
+    }
+
+    pub fn set_backend(&mut self, backend: Box<dyn ComputeBackend>) {
+        self.backend = Some(backend);
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.as_ref().map(|b| b.name()).unwrap_or("none")
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.cfg.topology
+    }
+}
+
+impl Model for FshmemWorld {
+    type Event = Event;
+
+    fn handle(
+        &mut self,
+        now: SimTime,
+        event: Event,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        match event {
+            // -- host layer --------------------------------------------
+            Event::HostCmd { node, cmd } => self.on_host_cmd(now, node, cmd, q, c),
+            // -- tx layer ----------------------------------------------
+            Event::TxEnqueue {
+                node,
+                port,
+                class,
+                msg,
+            } => self.on_tx_enqueue(now, node, port, class, msg, q, c),
+            Event::SeqStart { node, port } => self.on_seq_start(now, node, port, q, c),
+            Event::SeqFree { node, port } => self.on_seq_free(now, node, port, q),
+            // -- transit layer -----------------------------------------
+            Event::PacketArrive { node, port, pkt } => {
+                self.on_packet_arrive(now, node, port, pkt, q, c)
+            }
+            Event::PacketLocal { node, pkt } => {
+                self.on_packet_local(now, node, pkt, q, c)
+            }
+            Event::HeaderArrive {
+                node,
+                token,
+                handler,
+                kind,
+                category,
+            } => self.on_header_arrive(now, node, token, handler, kind, category, c),
+            Event::Retransmit { link, pkt } => self.on_retransmit(now, link, pkt, q, c),
+            // -- rx layer ----------------------------------------------
+            Event::HandlerStart { node } => self.on_handler_start(now, node, q),
+            Event::HandlerDone { node, pkt } => {
+                self.on_handler_done(now, node, pkt, q, c)
+            }
+            // -- compute layer -----------------------------------------
+            Event::DlaStart { node } => self.on_dla_start(now, node, q, c),
+            Event::DlaDone { node, job } => self.on_dla_done(now, node, job, q, c),
+        }
+    }
+}

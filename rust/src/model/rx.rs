@@ -1,0 +1,210 @@
+//! Rx layer: the hardware-atomic AM handler engine.
+//!
+//! One handler runs at a time per node (paper §III-A: "atomicity control
+//! ... natively supported by hardware"). Built-in handlers implement the
+//! extended API: PUT acknowledges to the initiator, GET synthesizes a
+//! PutReply carrying the requested bytes, COMPUTE enqueues a DLA job,
+//! and the barrier pair collects arrivals at node 0 and releases.
+
+use crate::dla;
+use crate::gasnet::handlers::{
+    HandlerKind, H_ACK, H_BARRIER_RELEASE, H_PUT_REPLY,
+};
+use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, Packet, Payload};
+use crate::memory::{GlobalAddr, NodeId};
+use crate::sim::{Counters, EventQueue, SimTime};
+
+use super::{Event, FshmemWorld, UserAm};
+
+impl FshmemWorld {
+    fn handler_duration(&self, kind: &HandlerKind) -> SimTime {
+        let t = &self.cfg.timing;
+        match kind {
+            HandlerKind::Put | HandlerKind::PutReply | HandlerKind::Ack => {
+                t.handler_put()
+            }
+            HandlerKind::Get => t.handler_get(),
+            HandlerKind::Compute => t.handler_compute(),
+            HandlerKind::BarrierArrive
+            | HandlerKind::BarrierRelease
+            | HandlerKind::User(_) => t.handler_put(),
+        }
+    }
+
+    /// Build the reply an arriving GET request demands.
+    fn make_get_reply(&self, pkt: &Packet) -> AmMessage {
+        let src_off = (pkt.args[0] as u64) | ((pkt.args[1] as u64) << 32);
+        let len = pkt.args[2] as u64;
+        AmMessage {
+            kind: AmKind::Reply,
+            category: if len == 0 {
+                AmCategory::Short
+            } else {
+                AmCategory::Long
+            },
+            handler: H_PUT_REPLY,
+            src: pkt.dst,
+            dst: pkt.src,
+            token: pkt.token,
+            // The request's dst_addr carried the *requester-local*
+            // destination for the data.
+            dst_addr: pkt.dst_addr,
+            args: [0; 4],
+            payload: if len == 0 {
+                Payload::None
+            } else {
+                Payload::MemRead {
+                    shared: true,
+                    offset: src_off,
+                    len,
+                }
+            },
+        }
+    }
+
+    pub(super) fn on_handler_start(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        q: &mut EventQueue<Event>,
+    ) {
+        let core = &mut self.nodes[node as usize].core;
+        if core.handler_busy {
+            return;
+        }
+        if let Some(pkt) = core.handler_queue.pop_front() {
+            core.handler_busy = true;
+            let kind = core
+                .handlers
+                .lookup(pkt.handler)
+                .expect("handler opcode valid");
+            let dur = self.handler_duration(&kind);
+            q.schedule_at(now + dur, Event::HandlerDone { node, pkt });
+        }
+    }
+
+    pub(super) fn on_handler_done(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        pkt: Packet,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        let kind = self.nodes[node as usize]
+            .core
+            .handlers
+            .lookup(pkt.handler)
+            .expect("handler opcode valid");
+        c.incr("handlers_run");
+        match kind {
+            HandlerKind::Put => {
+                // Request fully received: acknowledge to the initiator.
+                // Each stripe of a striped PUT is its own message and
+                // acknowledges separately; the initiator-side tracker
+                // completes the op on the last ACK.
+                if pkt.kind == AmKind::Request {
+                    let ack = AmMessage {
+                        kind: AmKind::Reply,
+                        category: AmCategory::Short,
+                        handler: H_ACK,
+                        src: node,
+                        dst: pkt.src,
+                        token: pkt.token,
+                        dst_addr: GlobalAddr::new(pkt.src, 0),
+                        args: [0; 4],
+                        payload: Payload::None,
+                    };
+                    let port = self.cfg.topology.out_port(node, pkt.src, None);
+                    q.schedule_at(
+                        now,
+                        Event::TxEnqueue {
+                            node,
+                            port,
+                            class: MsgClass::Reply,
+                            msg: ack,
+                        },
+                    );
+                }
+            }
+            HandlerKind::PutReply => {
+                // Completion already tracked at data arrival.
+            }
+            HandlerKind::Ack => {
+                self.ops.complete(pkt.token, now);
+            }
+            HandlerKind::Get => {
+                let reply = self.make_get_reply(&pkt);
+                let port = self.cfg.topology.out_port(node, pkt.src, None);
+                q.schedule_at(
+                    now,
+                    Event::TxEnqueue {
+                        node,
+                        port,
+                        class: MsgClass::Reply,
+                        msg: reply,
+                    },
+                );
+            }
+            HandlerKind::Compute => {
+                let job = dla::job::decode_job(pkt.payload())
+                    .expect("valid DLA job descriptor");
+                c.incr("dla_jobs_queued");
+                if self.nodes[node as usize].dla.enqueue(job) {
+                    q.schedule_at(now, Event::DlaStart { node });
+                }
+            }
+            HandlerKind::BarrierArrive => {
+                debug_assert_eq!(node, 0, "barrier coordinator is node 0");
+                self.barrier_arrivals.push((pkt.src, pkt.token));
+                if self.barrier_arrivals.len() as u32 == self.cfg.topology.nodes() {
+                    for (src, token) in std::mem::take(&mut self.barrier_arrivals) {
+                        let release = AmMessage {
+                            kind: AmKind::Reply,
+                            category: AmCategory::Short,
+                            handler: H_BARRIER_RELEASE,
+                            src: node,
+                            dst: src,
+                            token,
+                            dst_addr: GlobalAddr::new(src, 0),
+                            args: [0; 4],
+                            payload: Payload::None,
+                        };
+                        let port = self.cfg.topology.out_port(node, src, None);
+                        q.schedule_at(
+                            now,
+                            Event::TxEnqueue {
+                                node,
+                                port,
+                                class: MsgClass::Reply,
+                                msg: release,
+                            },
+                        );
+                    }
+                }
+            }
+            HandlerKind::BarrierRelease => {
+                self.ops.complete(pkt.token, now);
+            }
+            HandlerKind::User(tag) => {
+                self.user_am_log.push(UserAm {
+                    at: now,
+                    node,
+                    tag,
+                    args: pkt.args,
+                    payload: pkt.payload().to_vec(),
+                });
+                // AMRequest handles complete on remote delivery (GASNet's
+                // own semantics are fire-and-forget; delivery-completion
+                // makes `wait` usable as a flush in tests/examples).
+                self.ops.complete(pkt.token, now);
+            }
+        }
+        // Handler engine: next in queue.
+        let core = &mut self.nodes[node as usize].core;
+        core.handler_busy = false;
+        if !core.handler_queue.is_empty() {
+            q.schedule_at(now, Event::HandlerStart { node });
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! Model-level tests driving the event pipeline directly (no API layer):
+//! protocol correctness, the paper-pinned latency points, determinism,
+//! and the striping fast path.
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::dla::{ArtConfig, ComputeBackend, DlaJob, DlaOp, SoftwareBackend};
+use crate::gasnet::{OpId, OpKind, Payload};
+use crate::memory::{GlobalAddr, NodeId};
+use crate::sim::Engine;
+
+use super::{Event, FshmemWorld, HostCmd};
+
+fn engine() -> Engine<FshmemWorld> {
+    Engine::new(FshmemWorld::new(Config::two_node_ring()))
+}
+
+fn put(
+    eng: &mut Engine<FshmemWorld>,
+    src: NodeId,
+    dst: GlobalAddr,
+    data: Vec<u8>,
+) -> OpId {
+    let op = eng
+        .model
+        .ops
+        .issue(OpKind::Put, eng.now(), data.len() as u64);
+    eng.inject_now(Event::HostCmd {
+        node: src,
+        cmd: HostCmd::Put {
+            op,
+            dst,
+            payload: Payload::Bytes(Arc::new(data)),
+            port: None,
+        },
+    });
+    op
+}
+
+#[test]
+fn put_delivers_bytes_and_completes() {
+    let mut eng = engine();
+    let data: Vec<u8> = (0..=255).collect();
+    let op = put(&mut eng, 0, GlobalAddr::new(1, 0x2000), data.clone());
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    assert_eq!(
+        eng.model.nodes[1].mem.read_shared(0x2000, 256).unwrap(),
+        &data[..]
+    );
+    let st = eng.model.ops.get(op).unwrap();
+    assert!(st.header_at.unwrap() < st.data_done_at.unwrap() || data.len() <= 1024);
+    assert!(st.completed_at.unwrap() >= st.data_done_at.unwrap());
+}
+
+#[test]
+fn put_latency_matches_paper_long_message() {
+    let mut eng = engine();
+    let op = put(&mut eng, 0, GlobalAddr::new(1, 0), vec![7u8; 64]);
+    eng.run_to_quiescence();
+    let st = eng.model.ops.get(op).unwrap();
+    let lat = st.header_at.unwrap().since(st.issued).as_us();
+    assert!(
+        (0.30..0.40).contains(&lat),
+        "long PUT header latency {lat} µs (paper 0.35)"
+    );
+}
+
+#[test]
+fn short_put_latency_near_021us() {
+    let mut eng = engine();
+    let op = put(&mut eng, 0, GlobalAddr::new(1, 0), vec![]);
+    eng.run_to_quiescence();
+    let st = eng.model.ops.get(op).unwrap();
+    let lat = st.header_at.unwrap().since(st.issued).as_us();
+    assert!(
+        (0.18..0.24).contains(&lat),
+        "short PUT header latency {lat} µs (paper 0.21)"
+    );
+}
+
+#[test]
+fn get_fetches_remote_bytes() {
+    let mut eng = engine();
+    let payload: Vec<u8> = (0..128).map(|i| (i * 3) as u8).collect();
+    eng.model.nodes[1]
+        .mem
+        .write_shared(0x500, &payload)
+        .unwrap();
+    let op = eng.model.ops.issue(OpKind::Get, eng.now(), 128);
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::Get {
+            op,
+            src: GlobalAddr::new(1, 0x500),
+            local_offset: 0x9000,
+            len: 128,
+        },
+    });
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    assert_eq!(
+        eng.model.nodes[0].mem.read_shared(0x9000, 128).unwrap(),
+        &payload[..]
+    );
+    // GET latency: header of reply back at requester, paper 0.59 µs.
+    let st = eng.model.ops.get(op).unwrap();
+    let lat = st.header_at.unwrap().since(st.issued).as_us();
+    assert!(
+        (0.50..0.68).contains(&lat),
+        "GET long latency {lat} µs (paper 0.59)"
+    );
+}
+
+#[test]
+fn fragmented_put_reassembles() {
+    let mut eng = engine();
+    let data: Vec<u8> = (0..5000u32).map(|i| (i % 251) as u8).collect();
+    let op = put(&mut eng, 0, GlobalAddr::new(1, 0x1000), data.clone());
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    assert_eq!(
+        eng.model.nodes[1].mem.read_shared(0x1000, 5000).unwrap(),
+        &data[..]
+    );
+    // 5000 B at 1024 B/packet = 5 packets (+1 ACK back).
+    assert!(eng.counters.get("pkts_sent") >= 6);
+}
+
+#[test]
+fn striped_put_fans_out_and_completes_on_last_ack() {
+    // Above the stripe threshold, a single op token rides two wire
+    // messages (one per equal-cost port) and completes only after both
+    // stripes are acked.
+    let mut eng = engine();
+    let len = (128 << 10) as usize; // 2x the 64 KiB default threshold
+    let data: Vec<u8> = (0..len).map(|i| (i % 241) as u8).collect();
+    let op = put(&mut eng, 0, GlobalAddr::new(1, 0x4000), data.clone());
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    assert_eq!(eng.counters.get("puts_striped"), 1);
+    assert_eq!(
+        eng.model.nodes[1].mem.read_shared(0x4000, len).unwrap(),
+        &data[..]
+    );
+    // Both directions of the ring carried payload.
+    let tx0 = eng.model.links[0].bytes_sent;
+    let tx1 = eng.model.links[1].bytes_sent;
+    assert!(tx0 > (len / 3) as u64, "port 0 carried {tx0} B");
+    assert!(tx1 > (len / 3) as u64, "port 1 carried {tx1} B");
+    let st = eng.model.ops.get(op).unwrap();
+    assert_eq!(st.bytes_done, len as u64);
+    assert!(st.completed_at.unwrap() >= st.data_done_at.unwrap());
+}
+
+#[test]
+fn striping_halves_large_put_time() {
+    let timed = |threshold: u64| {
+        let cfg = Config::two_node_ring().with_stripe_threshold(threshold);
+        let mut eng = Engine::new(FshmemWorld::new(cfg));
+        let op = put(
+            &mut eng,
+            0,
+            GlobalAddr::new(1, 0),
+            vec![0x5A; 1 << 20],
+        );
+        eng.run_to_quiescence();
+        let st = eng.model.ops.get(op).unwrap();
+        st.data_done_at.unwrap().since(st.issued)
+    };
+    let striped = timed(64 << 10);
+    let single = timed(u64::MAX);
+    assert!(
+        (striped.as_ps() as f64) < 0.6 * single.as_ps() as f64,
+        "striped {striped} vs single-port {single}"
+    );
+}
+
+#[test]
+fn pinned_port_put_never_stripes() {
+    let mut eng = engine();
+    let op = eng.model.ops.issue(OpKind::Put, eng.now(), 1 << 20);
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::Put {
+            op,
+            dst: GlobalAddr::new(1, 0),
+            payload: Payload::Bytes(Arc::new(vec![1u8; 1 << 20])),
+            port: Some(0),
+        },
+    });
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    assert_eq!(eng.counters.get("puts_striped"), 0);
+    assert_eq!(eng.model.links[1].bytes_sent, 0, "port 1 (E->W link) idle");
+}
+
+#[test]
+fn barrier_releases_all_nodes() {
+    let mut eng = engine();
+    let mut ops = vec![];
+    for node in 0..2 {
+        let op = eng.model.ops.issue(OpKind::Barrier, eng.now(), 0);
+        eng.inject_now(Event::HostCmd {
+            node,
+            cmd: HostCmd::Barrier { op },
+        });
+        ops.push(op);
+    }
+    eng.run_to_quiescence();
+    for op in ops {
+        assert!(eng.model.ops.is_complete(op), "barrier op {op}");
+    }
+}
+
+#[test]
+fn barrier_waits_for_stragglers() {
+    let mut eng = engine();
+    let op0 = eng.model.ops.issue(OpKind::Barrier, eng.now(), 0);
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::Barrier { op: op0 },
+    });
+    // Run: node 1 never arrives, so op0 must not complete.
+    eng.run_to_quiescence();
+    assert!(!eng.model.ops.is_complete(op0));
+    // Late arrival releases everyone.
+    let op1 = eng.model.ops.issue(OpKind::Barrier, eng.now(), 0);
+    eng.inject_now(Event::HostCmd {
+        node: 1,
+        cmd: HostCmd::Barrier { op: op1 },
+    });
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op0));
+    assert!(eng.model.ops.is_complete(op1));
+}
+
+#[test]
+fn compute_job_runs_and_notifies() {
+    let mut eng = engine();
+    // A = I(16), B = arbitrary; Y = A @ B must equal B.
+    let n = 16usize;
+    let mut a = vec![0.0f32; n * n];
+    for i in 0..n {
+        a[i * n + i] = 1.0;
+    }
+    let b: Vec<f32> = (0..n * n).map(|i| i as f32 * 0.5).collect();
+    eng.model.nodes[1].mem.write_shared_f16(0, &a).unwrap();
+    eng.model.nodes[1]
+        .mem
+        .write_shared_f16(0x4000, &b)
+        .unwrap();
+    let op = eng.model.ops.issue(OpKind::Compute, eng.now(), 0);
+    let job = DlaJob {
+        op: DlaOp::Matmul {
+            m: n as u32,
+            k: n as u32,
+            n: n as u32,
+            a: GlobalAddr::new(1, 0),
+            b: GlobalAddr::new(1, 0x4000),
+            y: GlobalAddr::new(1, 0x8000),
+            accumulate: false,
+        },
+        art: None,
+        notify: Some((0, op)),
+    };
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::Compute {
+            op,
+            target: 1,
+            job,
+        },
+    });
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    let y = eng.model.nodes[1].mem.read_shared_f16(0x8000, n * n).unwrap();
+    // Values are 0.5-steps <= 127.5: exactly representable in fp16.
+    assert_eq!(y, b);
+    assert_eq!(eng.counters.get("dla_jobs_done"), 1);
+}
+
+#[test]
+fn compute_with_art_streams_results_to_peer() {
+    let mut eng = engine();
+    let n = 64usize;
+    let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32) * 0.25).collect();
+    let b: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32) * 0.5).collect();
+    eng.model.nodes[1].mem.write_shared_f16(0, &a).unwrap();
+    eng.model.nodes[1]
+        .mem
+        .write_shared_f16(0x10000, &b)
+        .unwrap();
+    let op = eng.model.ops.issue(OpKind::Compute, eng.now(), 0);
+    let job = DlaJob {
+        op: DlaOp::Matmul {
+            m: n as u32,
+            k: n as u32,
+            n: n as u32,
+            a: GlobalAddr::new(1, 0),
+            b: GlobalAddr::new(1, 0x10000),
+            y: GlobalAddr::new(1, 0x20000),
+            accumulate: false,
+        },
+        art: Some(ArtConfig {
+            every_n_results: 1024,
+            dst: GlobalAddr::new(0, 0x30000),
+        }),
+        notify: Some((0, op)),
+    };
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::Compute {
+            op,
+            target: 1,
+            job,
+        },
+    });
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    assert_eq!(eng.counters.get("art_chunks"), 4); // 4096 results / 1024
+    // ART delivered the full result into node 0's segment.
+    let y_remote = eng.model.nodes[0]
+        .mem
+        .read_shared_f16(0x30000, n * n)
+        .unwrap();
+    let y_local = eng.model.nodes[1]
+        .mem
+        .read_shared_f16(0x20000, n * n)
+        .unwrap();
+    assert_eq!(y_remote, y_local, "ART must deliver identical bytes");
+    // Spot-check numerics against the software backend (inputs are
+    // fp16-exact; the output rounds through fp16 on store).
+    let mut be = SoftwareBackend;
+    let expect = be.matmul(n, n, n, &a, &b, None).unwrap();
+    for (idx, (got, want)) in y_local.iter().zip(&expect).enumerate() {
+        assert!(
+            (got - want).abs() <= 0.25,
+            "y[{idx}]: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn user_am_logged() {
+    let mut eng = engine();
+    let tag_opcode = eng.model.nodes[1]
+        .core
+        .handlers
+        .register_user(9)
+        .unwrap();
+    let op = eng.model.ops.issue(OpKind::AmRequest, eng.now(), 0);
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::AmShort {
+            op,
+            dst: 1,
+            handler: tag_opcode,
+            args: [11, 22, 33, 44],
+        },
+    });
+    eng.run_to_quiescence();
+    assert_eq!(eng.model.user_am_log.len(), 1);
+    let am = &eng.model.user_am_log[0];
+    assert_eq!(am.node, 1);
+    assert_eq!(am.tag, 9);
+    assert_eq!(am.args, [11, 22, 33, 44]);
+}
+
+#[test]
+fn multihop_ring_forwards() {
+    let mut eng = Engine::new(FshmemWorld::new(Config::ring(4)));
+    let data = vec![0x5A; 700];
+    let op = put(&mut eng, 0, GlobalAddr::new(2, 0x100), data.clone());
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    assert_eq!(
+        eng.model.nodes[2].mem.read_shared(0x100, 700).unwrap(),
+        &data[..]
+    );
+    assert!(eng.counters.get("pkts_forwarded") >= 1, "2 hops needed");
+}
+
+#[test]
+fn loopback_put_to_self() {
+    let mut eng = engine();
+    let data = vec![3u8; 2048];
+    let op = put(&mut eng, 0, GlobalAddr::new(0, 0x7000), data.clone());
+    eng.run_to_quiescence();
+    assert!(eng.model.ops.is_complete(op));
+    assert_eq!(
+        eng.model.nodes[0].mem.read_shared(0x7000, 2048).unwrap(),
+        &data[..]
+    );
+}
+
+#[test]
+fn deterministic_replay() {
+    let run = || {
+        let mut eng = engine();
+        for i in 0..10 {
+            put(
+                &mut eng,
+                (i % 2) as NodeId,
+                GlobalAddr::new(((i + 1) % 2) as NodeId, 0x1000 * i as u64),
+                vec![i as u8; 100 * (i as usize + 1)],
+            );
+        }
+        let end = eng.run_to_quiescence();
+        (end, eng.events_processed(), eng.counters.get("pkts_sent"))
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,249 @@
+//! Transit layer: packets in flight between sequencer and handler.
+//!
+//! Covers multihop store-and-forward routing, ARQ retransmission of
+//! corrupted packets, the write-DMA landing of payload fragments at the
+//! destination, and the cut-through header-front observation that is the
+//! paper's latency measurement endpoint.
+
+use crate::fabric::router::Route;
+use crate::fabric::PortId;
+use crate::gasnet::handlers::{H_GET, H_PUT, H_PUT_REPLY};
+use crate::gasnet::{AmCategory, AmKind, OpId, OpKind, Packet};
+use crate::memory::NodeId;
+use crate::sim::{Counters, EventQueue, SimTime};
+
+use super::{Event, FshmemWorld};
+
+impl FshmemWorld {
+    /// ARQ: replay a corrupted packet on its link (consumes wire time and
+    /// delays subsequent traffic — goodput loss is physical).
+    pub(super) fn on_retransmit(
+        &mut self,
+        now: SimTime,
+        link: usize,
+        pkt: Packet,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        c.incr("pkts_retransmitted");
+        let (_, _, peer, peer_port) = self.wiring.links[link];
+        let (_tx, rx_at) = self.links[link].send(now, pkt.wire_bytes());
+        q.schedule_at(
+            rx_at,
+            Event::PacketArrive {
+                node: peer,
+                port: peer_port,
+                pkt,
+            },
+        );
+    }
+
+    pub(super) fn on_packet_arrive(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        port: PortId,
+        pkt: Packet,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        // Link-level ARQ (failure injection): a corrupted packet fails its
+        // CRC at the PHY; the receiver NACKs and the sender replays it
+        // from the retransmit buffer. The replay goes back *through the
+        // link* (after a NACK round trip), so it consumes wire time and
+        // delays subsequent traffic — goodput loss is physical.
+        if self.cfg.link_loss_permille > 0
+            && self.fault_rng.below(1000) < self.cfg.link_loss_permille as u64
+        {
+            if let Some(link) = self.wiring.link_into(node, port) {
+                c.incr("pkts_dropped");
+                let p = &self.cfg.link;
+                let nack_rtt = p.propagation
+                    + p.serialize(crate::gasnet::WIRE_HEADER_BYTES); // NACK back
+                q.schedule_at(now + nack_rtt, Event::Retransmit { link, pkt });
+                return;
+            }
+        }
+        match self.router.decide(node, pkt.dst) {
+            Route::Local => {
+                let at = now + self.cfg.timing.rx_decode();
+                // Multi-hop arrivals: the cut-through header event was
+                // only scheduled for direct neighbors; fire it here at
+                // store-and-forward granularity.
+                if pkt.first && self.cfg.topology.hops(pkt.src, node) > 1 {
+                    q.schedule_at(
+                        at,
+                        Event::HeaderArrive {
+                            node,
+                            token: pkt.token,
+                            handler: pkt.handler,
+                            kind: pkt.kind,
+                            category: pkt.category,
+                        },
+                    );
+                }
+                q.schedule_at(at, Event::PacketLocal { node, pkt });
+            }
+            Route::Forward { port, delay } => {
+                c.incr("pkts_forwarded");
+                let li = self
+                    .wiring
+                    .link(node, port)
+                    .expect("router chose an unwired port");
+                let (_tx, rx_at) = self.links[li].send(now + delay, pkt.wire_bytes());
+                let (_, _, peer, peer_port) = self.wiring.links[li];
+                q.schedule_at(
+                    rx_at,
+                    Event::PacketArrive {
+                        node: peer,
+                        port: peer_port,
+                        pkt,
+                    },
+                );
+            }
+        }
+    }
+
+    pub(super) fn on_packet_local(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        pkt: Packet,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        debug_assert_eq!(pkt.dst, node);
+        c.incr("pkts_rx");
+
+        // Write-DMA the payload (per packet, no reassembly needed: each
+        // fragment carries an absolute address).
+        if pkt.payload_len() > 0 {
+            let mem = &mut self.nodes[node as usize].mem;
+            match pkt.category {
+                AmCategory::Long => {
+                    debug_assert_eq!(pkt.dst_addr.node(), node);
+                    mem.write_shared(pkt.dst_addr.offset(), pkt.payload())
+                        .expect("write-DMA long payload");
+                }
+                AmCategory::Medium => {
+                    mem.write_private(pkt.dst_addr.offset(), pkt.payload())
+                        .expect("write-DMA medium payload");
+                }
+                AmCategory::Short => unreachable!("short AM has no payload"),
+            }
+            c.add("bytes_delivered", pkt.payload_len());
+            // Data-leg progress for PUT requests and GET replies. Striped
+            // PUTs share the token, so this accumulates across stripes.
+            if matches!(pkt.handler, H_PUT | H_PUT_REPLY) {
+                let done =
+                    self.ops
+                        .data_progress(pkt.token, now, pkt.payload_len());
+                if done && pkt.handler == H_PUT_REPLY {
+                    // A GET completes when its reply data has landed.
+                    self.ops.complete(pkt.token, now);
+                }
+            }
+        } else if pkt.handler == H_PUT_REPLY && pkt.last {
+            // Zero-byte GET: reply completes it.
+            self.ops.complete(pkt.token, now);
+        }
+
+        // Handler invocation once the *entire* message has arrived
+        // (fragments can reorder under ARQ retransmission; hardware
+        // tracks arrival bytes, not fragment order). Stripes of one
+        // striped PUT are distinct messages — keyed by (token, stripe id
+        // in args[3]) — and each runs the handler (and is ACKed) on its
+        // own.
+        let complete = if pkt.msg_payload_len == pkt.payload_len() {
+            // Single-fragment message (the hot path): no tracking needed.
+            true
+        } else {
+            let stripe = pkt.args[3];
+            let idx = self
+                .rx_progress
+                .iter()
+                .position(|&(n, t, s, _)| n == node && t == pkt.token && s == stripe);
+            let got = match idx {
+                Some(i) => {
+                    self.rx_progress[i].3 += pkt.payload_len();
+                    self.rx_progress[i].3
+                }
+                None => {
+                    self.rx_progress
+                        .push((node, pkt.token, stripe, pkt.payload_len()));
+                    pkt.payload_len()
+                }
+            };
+            debug_assert!(got <= pkt.msg_payload_len, "over-delivery");
+            if got >= pkt.msg_payload_len {
+                if let Some(i) = idx {
+                    self.rx_progress.swap_remove(i);
+                }
+                true
+            } else {
+                false
+            }
+        };
+        if complete {
+            let core = &mut self.nodes[node as usize].core;
+            if core.handler_enqueue(pkt) {
+                q.schedule_at(now, Event::HandlerStart { node });
+            }
+        }
+    }
+
+    /// Header-front accounting (the paper's latency endpoints).
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn on_header_arrive(
+        &mut self,
+        now: SimTime,
+        _node: NodeId,
+        token: OpId,
+        handler: u8,
+        kind: AmKind,
+        category: AmCategory,
+        c: &mut Counters,
+    ) {
+        let Some((issued, op_kind, op_bytes, seen)) = self
+            .ops
+            .get(token)
+            .map(|op| (op.issued, op.kind, op.bytes, op.header_at.is_some()))
+        else {
+            return;
+        };
+        let lat = now.since(issued);
+        match (handler, kind) {
+            (H_PUT, AmKind::Request) => {
+                self.ops.header_arrived(token, now);
+                // Striped PUTs fire one HeaderArrive per stripe for the
+                // same op token; sample the latency series once per op
+                // (matching header_at's first-only semantics).
+                if seen {
+                    return;
+                }
+                match (op_kind, op_bytes) {
+                    (OpKind::Put, 0) => c.record_latency("lat_put_hdr_short", lat),
+                    (OpKind::Put, _) => c.record_latency("lat_put_hdr_long", lat),
+                    (OpKind::Compute, _) => c.record_latency("lat_art_put_hdr", lat),
+                    _ => {}
+                }
+            }
+            (H_PUT_REPLY, AmKind::Reply) => {
+                self.ops.header_arrived(token, now);
+                if seen {
+                    return;
+                }
+                if op_bytes == 0 {
+                    c.record_latency("lat_get_hdr_short", lat);
+                } else {
+                    c.record_latency("lat_get_hdr_long", lat);
+                }
+            }
+            (H_GET, AmKind::Request) => c.record_latency("lat_get_req_hdr", lat),
+            (_, AmKind::Request) if category == AmCategory::Short => {
+                c.record_latency("lat_am_short_hdr", lat)
+            }
+            _ => {}
+        }
+    }
+}

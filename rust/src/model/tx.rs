@@ -1,0 +1,219 @@
+//! Tx layer: scheduler FIFO arbitration and the AM sequencer.
+//!
+//! Each HSSI port has three message-class FIFOs (host / compute / reply)
+//! with round-robin arbitration (state in `gasnet::core::PortTx`); this
+//! layer drives them from the DES and models the sequencer streaming a
+//! message's packets: header formation, read-DMA fetch pipelining,
+//! per-packet occupancy, and wire backpressure (1-packet skid buffer).
+
+use std::sync::Arc;
+
+use crate::fabric::PortId;
+use crate::gasnet::{AmMessage, MsgClass, Payload};
+use crate::memory::NodeId;
+use crate::sim::{Counters, EventQueue, SimTime};
+
+use super::{Event, FshmemWorld};
+
+impl FshmemWorld {
+    pub(super) fn on_tx_enqueue(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        port: PortId,
+        class: MsgClass,
+        msg: AmMessage,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        let kick = self.nodes[node as usize]
+            .core
+            .port_mut(port)
+            .enqueue(class, msg);
+        c.incr("tx_enqueued");
+        if kick {
+            q.schedule_at(now, Event::SeqStart { node, port });
+        }
+    }
+
+    pub(super) fn on_seq_free(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        port: PortId,
+        q: &mut EventQueue<Event>,
+    ) {
+        let ptx = self.nodes[node as usize].core.port_mut(port);
+        ptx.seq_busy = false;
+        if ptx.pending() > 0 {
+            q.schedule_at(now, Event::SeqStart { node, port });
+        }
+    }
+
+    /// Resolve a payload to a concrete buffer at send time (the read-DMA
+    /// snapshot semantics of the AM sequencer). Host-provided `Bytes`
+    /// share their Arc (zero copy); `MemRead` copies once out of node
+    /// memory — matching the single pass the hardware's read DMA makes.
+    fn resolve_payload(&self, node: NodeId, payload: &Payload) -> Arc<Vec<u8>> {
+        match payload {
+            Payload::None => Arc::new(Vec::new()),
+            Payload::Bytes(b) => Arc::clone(b),
+            Payload::MemRead {
+                shared,
+                offset,
+                len,
+            } => {
+                let mem = &self.nodes[node as usize].mem;
+                let data = if *shared {
+                    mem.read_shared(*offset, *len as usize)
+                } else {
+                    mem.read_private(*offset, *len as usize)
+                };
+                Arc::new(data.expect("sequencer read-DMA out of bounds").to_vec())
+            }
+        }
+    }
+
+    /// The AM sequencer: dequeue one message and stream its packets,
+    /// modeling header formation, read-DMA pipelining, per-packet
+    /// sequencer occupancy, and wire backpressure (1-packet skid buffer).
+    pub(super) fn on_seq_start(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        port: PortId,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) {
+        let ptx = self.nodes[node as usize].core.port_mut(port);
+        if ptx.seq_busy {
+            return;
+        }
+        let Some((_class, msg)) = ptx.dequeue() else {
+            return;
+        };
+        ptx.seq_busy = true;
+        msg.validate().expect("malformed AM");
+
+        let payload_buf = self.resolve_payload(node, &msg.payload);
+        let has_payload = !payload_buf.is_empty();
+        let pkts =
+            crate::gasnet::wire::packetize(&msg, payload_buf, self.cfg.packet_payload);
+        let timing = self.cfg.timing;
+        let dma = self.cfg.dma.clone();
+        let loopback = msg.dst == node;
+        let link_idx = if loopback {
+            None
+        } else {
+            Some(
+                self.wiring
+                    .link(node, port)
+                    .unwrap_or_else(|| panic!("port {port} of node {node} unwired")),
+            )
+        };
+
+        // Pipelining: the sequencer prepares packet i+1 while packet i
+        // serializes (1-packet skid buffer toward the PHY), so the
+        // steady-state inter-packet interval is max(seq_packet, wire
+        // time) — the mechanism behind the Fig. 5 efficiency cliff for
+        // small packets.
+        let mut seq_free = now + timing.seq_header();
+        let mut dma_avail = if has_payload { now + dma.setup } else { now };
+        let n_pkts = pkts.len() as u64;
+        let mut wire_bytes = 0u64;
+        for pkt in pkts {
+            dma_avail = dma_avail + dma.stream_time(pkt.payload_len());
+            let start = seq_free.max(dma_avail);
+            // Header-only packets program no DMA descriptor.
+            let occupancy = if pkt.payload_len() == 0 {
+                timing.seq_packet_hdr()
+            } else {
+                timing.seq_packet()
+            };
+            let ready = start + occupancy;
+            wire_bytes += pkt.wire_bytes();
+            match link_idx {
+                None => {
+                    // Self-delivery: skip the PHY, straight to rx decode.
+                    let at = ready + timing.rx_decode();
+                    if pkt.first {
+                        q.schedule_at(
+                            at,
+                            Event::HeaderArrive {
+                                node,
+                                token: pkt.token,
+                                handler: pkt.handler,
+                                kind: pkt.kind,
+                                category: pkt.category,
+                            },
+                        );
+                    }
+                    q.schedule_at(at, Event::PacketLocal { node, pkt });
+                    seq_free = ready;
+                }
+                Some(li) => {
+                    let ser = self.links[li].params.serialize(pkt.wire_bytes());
+                    let ser_hdr = self.links[li]
+                        .params
+                        .serialize(crate::gasnet::WIRE_HEADER_BYTES);
+                    let prop = self.links[li].params.propagation;
+                    let (tx_done, rx_at) =
+                        self.links[li].send(ready, pkt.wire_bytes());
+                    let (_, _, peer, peer_port) = self.wiring.links[li];
+                    if pkt.first && pkt.dst == peer {
+                        // Cut-through header observation: the header flit
+                        // reaches the peer's decoder one body-serialization
+                        // earlier than the full packet.
+                        let hdr_at =
+                            (tx_done - ser) + ser_hdr + prop + timing.rx_decode();
+                        q.schedule_at(
+                            hdr_at,
+                            Event::HeaderArrive {
+                                node: peer,
+                                token: pkt.token,
+                                handler: pkt.handler,
+                                kind: pkt.kind,
+                                category: pkt.category,
+                            },
+                        );
+                    }
+                    // ARQ roll at send time (equivalent to the receiver's
+                    // CRC check, one heap event earlier).
+                    let lost = self.cfg.link_loss_permille > 0
+                        && self.fault_rng.below(1000)
+                            < self.cfg.link_loss_permille as u64;
+                    if lost {
+                        c.incr("pkts_dropped");
+                        q.schedule_at(
+                            rx_at + prop + ser_hdr, // NACK back to sender
+                            Event::Retransmit { link: li, pkt },
+                        );
+                    } else if pkt.dst == peer {
+                        // Direct delivery (the 2-node hot path): skip the
+                        // router hop, straight to rx decode.
+                        q.schedule_at(
+                            rx_at + timing.rx_decode(),
+                            Event::PacketLocal { node: peer, pkt },
+                        );
+                    } else {
+                        q.schedule_at(
+                            rx_at,
+                            Event::PacketArrive {
+                                node: peer,
+                                port: peer_port,
+                                pkt,
+                            },
+                        );
+                    }
+                    // Backpressure: don't run more than one packet ahead
+                    // of the wire (next prep may start when this packet
+                    // begins serializing).
+                    seq_free = ready.max(tx_done - ser);
+                }
+            }
+        }
+        c.add("pkts_sent", n_pkts);
+        c.add("wire_bytes", wire_bytes);
+        q.schedule_at(seq_free, Event::SeqFree { node, port });
+    }
+}

@@ -1,11 +1,27 @@
 //! PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! The real implementation needs the external `xla` crate (xla_extension
+//! native library), which the offline build environment does not carry —
+//! so it is gated behind the `pjrt` cargo feature (see Cargo.toml
+//! "Dependency policy"). Without the feature, a stub with the same API
+//! still parses manifests but returns an actionable error from `load`,
+//! keeping `Numerics::Pjrt` configurations diagnosable instead of
+//! unbuildable.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 
-use anyhow::{Context, Result};
+#[cfg(not(feature = "pjrt"))]
+use anyhow::bail;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::Result;
 
-use super::artifacts::{ArtifactEntry, Manifest};
+#[cfg(feature = "pjrt")]
+use super::artifacts::ArtifactEntry;
+use super::artifacts::Manifest;
 
+#[cfg(feature = "pjrt")]
 /// A compiled artifact set on the PJRT CPU client.
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
@@ -14,6 +30,7 @@ pub struct PjrtRuntime {
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Load every artifact in the manifest and compile it. This is the
     /// startup cost; the request path only executes.
@@ -116,6 +133,48 @@ impl PjrtRuntime {
             .iter()
             .map(|lit| Ok(lit.to_vec::<f32>()?))
             .collect()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+/// Stub runtime: same API, but `load` fails with an actionable message.
+/// Manifest parsing still runs first so a *missing* artifact directory
+/// reports the real cause (`run make artifacts`) rather than the feature
+/// gap.
+pub struct PjrtRuntime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    pub fn load(dir: &str) -> Result<Self> {
+        let _manifest = Manifest::load(dir)?;
+        bail!(
+            "artifacts present at '{dir}' but this build has no PJRT support: \
+             rebuild with `--features pjrt` (requires the `xla` crate; see \
+             Cargo.toml \"Dependency policy\") or use `numerics = software`"
+        )
+    }
+
+    pub fn load_subset(dir: &str, _names: &[&str]) -> Result<Self> {
+        Self::load(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn execute_f32(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let _ = self.manifest.get(name)?;
+        bail!("'{name}': PJRT support not compiled in (enable the `pjrt` feature)")
     }
 }
 

@@ -54,14 +54,33 @@ fn sweep_config(packet: usize) -> Config {
         .with_numerics(Numerics::TimingOnly)
 }
 
-/// Measure one PUT: returns achieved MB/s (payload/(issue→data done)).
-pub fn measure_put(f: &mut Fshmem, transfer: u64) -> f64 {
+fn measure_put_opt(f: &mut Fshmem, transfer: u64, port: Option<crate::fabric::PortId>) -> f64 {
     let dst = f.global_addr(1, 0);
-    let h = f.put_from_mem(0, 0x20_0000, transfer, dst);
+    let h = match port {
+        Some(p) => f.put_from_mem_on_port(0, 0x20_0000, transfer, dst, p),
+        None => f.put_from_mem(0, 0x20_0000, transfer, dst),
+    };
     f.wait(h);
     let (issued, _hdr, data_done, _done) = f.op_times(h);
     let dt = data_done.expect("data done").since(issued);
     transfer as f64 / dt.as_us() // B/µs == MB/s
+}
+
+/// Measure one PUT: returns achieved MB/s (payload/(issue→data done)).
+///
+/// Pinned to port 0 — Fig. 5 is a *single-link* bandwidth curve, like
+/// the paper's one-cable measurement. The multi-port striping fast path
+/// is measured separately by [`measure_put_striped`] / the striping
+/// ablation in `benches/fig5_bandwidth.rs`.
+pub fn measure_put(f: &mut Fshmem, transfer: u64) -> f64 {
+    measure_put_opt(f, transfer, Some(0))
+}
+
+/// Measure one PUT through the default (striping-eligible) path: above
+/// the config's stripe threshold the payload fans out across every
+/// equal-cost port.
+pub fn measure_put_striped(f: &mut Fshmem, transfer: u64) -> f64 {
+    measure_put_opt(f, transfer, None)
 }
 
 /// Measure one GET: remote bytes land at the requester.
@@ -97,6 +116,49 @@ pub fn bandwidth_series(packet: usize) -> BandwidthSeries {
 /// All four packet-size series (the complete Fig. 5).
 pub fn fig5_all() -> Vec<BandwidthSeries> {
     PACKET_SIZES.iter().map(|&p| bandwidth_series(p)).collect()
+}
+
+/// One row of the ports x stripe-threshold ablation: bandwidth of a
+/// large PUT with striping configured at `threshold` (`u64::MAX` = off,
+/// i.e. single-port), against the pinned single-port reference.
+#[derive(Debug, Clone)]
+pub struct StripeSweepRow {
+    /// Stripe threshold in bytes (`u64::MAX` disables striping).
+    pub threshold: u64,
+    pub transfer: u64,
+    /// Ports the transfer actually used.
+    pub ports_used: u32,
+    pub single_port_mb_s: f64,
+    pub mb_s: f64,
+}
+
+/// Sweep transfer sizes against stripe thresholds on the 2-node ring
+/// (1024 B packets). Each cell is measured in a fresh world so link
+/// occupancy never leaks between cells.
+pub fn striping_sweep(thresholds: &[u64], transfers: &[u64]) -> Vec<StripeSweepRow> {
+    let mut rows = Vec::new();
+    for &threshold in thresholds {
+        for &transfer in transfers {
+            let mut f = Fshmem::new(
+                sweep_config(1024).with_stripe_threshold(threshold),
+            );
+            let single_port_mb_s = measure_put(&mut f, transfer);
+            let mb_s = measure_put_striped(&mut f, transfer);
+            let ports_used = if f.counters().get("puts_striped") > 0 {
+                f.world().topology().equal_cost_ports(0, 1).len() as u32
+            } else {
+                1
+            };
+            rows.push(StripeSweepRow {
+                threshold,
+                transfer,
+                ports_used,
+                single_port_mb_s,
+                mb_s,
+            });
+        }
+    }
+    rows
 }
 
 /// Table III measurements from the DES.
@@ -202,6 +264,23 @@ mod tests {
         // Saturation by 32 KB: ≥90% of peak (paper: 95%).
         let at_32k = s.at(32768).unwrap().put_mb_s;
         assert!(at_32k / peak > 0.88, "{}", at_32k / peak);
+    }
+
+    #[test]
+    fn striping_beats_single_port_for_large_transfers() {
+        let rows = striping_sweep(&[64 << 10, u64::MAX], &[1 << 20]);
+        let striped = rows.iter().find(|r| r.threshold == 64 << 10).unwrap();
+        let off = rows.iter().find(|r| r.threshold == u64::MAX).unwrap();
+        assert_eq!(striped.ports_used, 2);
+        assert_eq!(off.ports_used, 1);
+        assert!(
+            striped.mb_s > 1.7 * striped.single_port_mb_s,
+            "striped {} vs single {}",
+            striped.mb_s,
+            striped.single_port_mb_s
+        );
+        // Striping off: default path == pinned path, same bandwidth.
+        assert!((off.mb_s / off.single_port_mb_s - 1.0).abs() < 0.05);
     }
 
     #[test]

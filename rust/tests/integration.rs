@@ -259,14 +259,46 @@ fn striped_put_uses_both_ports_and_delivers() {
     let striped = f.now().since(t0);
     assert_eq!(f.read_shared(1, 0, data.len()), data);
 
+    // Single-port baseline must be pinned: a plain `put` of this size
+    // takes the striping fast path itself now.
     let mut g = Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly));
     let t0 = g.now();
-    let h = g.put(0, g.global_addr(1, 0), &data);
+    let h = g.put_on_port(0, g.global_addr(1, 0), &data, 0);
     g.wait(h);
     let single = g.now().since(t0);
     assert!(
         (striped.as_ps() as f64) < 0.65 * single.as_ps() as f64,
         "striping must roughly halve transfer time: {striped} vs {single}"
+    );
+}
+
+#[test]
+fn default_put_matches_explicit_striping_for_large_transfers() {
+    // The fast path: plain `put` above the stripe threshold performs like
+    // the explicit per-stripe API and delivers identical bytes.
+    let data: Vec<u8> = (0..300_000u32).map(|i| (i % 197) as u8).collect();
+
+    let mut auto = Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly));
+    let t0 = auto.now();
+    let h = auto.put(0, auto.global_addr(1, 0), &data);
+    auto.wait(h);
+    let auto_t = auto.now().since(t0);
+    assert_eq!(auto.counters().get("puts_striped"), 1);
+
+    let mut exp = Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly));
+    let t0 = exp.now();
+    let hs = exp.put_striped(0, exp.global_addr(1, 0), &data);
+    exp.wait_all(&hs);
+    let exp_t = exp.now().since(t0);
+
+    assert_eq!(
+        auto.read_shared(1, 0, data.len()),
+        exp.read_shared(1, 0, data.len())
+    );
+    let ratio = auto_t.as_ps() as f64 / exp_t.as_ps() as f64;
+    assert!(
+        (0.9..1.1).contains(&ratio),
+        "auto {auto_t} vs explicit {exp_t}"
     );
 }
 

@@ -1,0 +1,232 @@
+//! Equivalence tests for the two fast paths this refactor introduced:
+//! multi-port striping as the default large-PUT path, and NBI access
+//! regions as the collectives' issue discipline.
+//!
+//! Strategy: every fast path must be *byte-equivalent* to its slow/simple
+//! reference (pinned single-port PUT, per-round blocking collectives,
+//! host-side arithmetic), and never slower where the reference is
+//! available on the same hardware.
+
+use fshmem::collectives::{broadcast, reduce_sum_f16};
+use fshmem::config::{Config, Numerics};
+use fshmem::memory::NodeId;
+use fshmem::util::prop::forall;
+use fshmem::Fshmem;
+
+fn two_node() -> Fshmem {
+    Fshmem::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly))
+}
+
+// ---- striping equivalence -------------------------------------------------
+
+#[test]
+fn striped_put_equals_pinned_put_bytes() {
+    // Same payload through the striping fast path and through a pinned
+    // single port: identical destination bytes.
+    let data: Vec<u8> = (0..200_000u32).map(|i| (i.wrapping_mul(2654435761) % 256) as u8).collect();
+
+    let mut striped = two_node();
+    let h = striped.put(0, striped.global_addr(1, 0x100), &data);
+    striped.wait(h);
+    assert_eq!(striped.counters().get("puts_striped"), 1, "must stripe");
+
+    let mut pinned = two_node();
+    let h = pinned.put_on_port(0, pinned.global_addr(1, 0x100), &data, 0);
+    pinned.wait(h);
+    assert_eq!(pinned.counters().get("puts_striped"), 0, "must not stripe");
+
+    assert_eq!(
+        striped.read_shared(1, 0x100, data.len()),
+        pinned.read_shared(1, 0x100, data.len())
+    );
+}
+
+#[test]
+fn striped_put_from_mem_equals_source() {
+    let mut f = two_node();
+    let data: Vec<u8> = (0..128 * 1024u32).map(|i| (i % 253) as u8).collect();
+    f.write_local(0, 0x10_0000, &data);
+    let h = f.put_from_mem(0, 0x10_0000, data.len() as u64, f.global_addr(1, 0x2000));
+    f.wait(h);
+    assert_eq!(f.counters().get("puts_striped"), 1);
+    assert_eq!(f.read_shared(1, 0x2000, data.len()), data);
+}
+
+#[test]
+fn striped_put_survives_lossy_links() {
+    // ARQ + multi-part completion: stripes on both ports, 5% loss, still
+    // byte-perfect and the handle still completes exactly once.
+    let cfg = Config::two_node_ring()
+        .with_numerics(Numerics::TimingOnly)
+        .with_link_loss_permille(50);
+    let mut f = Fshmem::new(cfg);
+    let data: Vec<u8> = (0..250_000u32).map(|i| (i % 239) as u8).collect();
+    let h = f.put(0, f.global_addr(1, 0), &data);
+    f.wait(h);
+    assert_eq!(f.counters().get("puts_striped"), 1);
+    assert!(f.counters().get("pkts_dropped") > 0, "loss must trigger");
+    assert_eq!(f.read_shared(1, 0, data.len()), data);
+}
+
+#[test]
+fn small_puts_never_stripe() {
+    let mut f = two_node();
+    let data = vec![1u8; 63 << 10];
+    let h = f.put(0, f.global_addr(1, 0), &data);
+    f.wait(h);
+    assert_eq!(
+        f.counters().get("puts_striped"),
+        0,
+        "below the 64 KiB threshold"
+    );
+}
+
+// ---- NBI vs blocking collectives ------------------------------------------
+
+/// The pre-NBI broadcast: binomial tree with a blocking `wait_all`
+/// between rounds — the reference the NBI implementation must match.
+fn broadcast_blocking(f: &mut Fshmem, root: NodeId, offset: u64, len: u64) {
+    let n = f.nodes();
+    if n == 1 || len == 0 {
+        return;
+    }
+    let unrel = |r: u32| (r + root) % n;
+    let mut dist = 1u32;
+    while dist < n {
+        let mut hs = Vec::new();
+        for r in 0..dist.min(n) {
+            let peer = r + dist;
+            if peer < n {
+                let (src, dst) = (unrel(r), unrel(peer));
+                let addr = f.global_addr(dst, offset);
+                hs.push(f.put_from_mem(src, offset, len, addr));
+            }
+        }
+        f.wait_all(&hs);
+        dist *= 2;
+    }
+}
+
+#[test]
+fn nbi_broadcast_equals_blocking_broadcast() {
+    for n in [2u32, 5, 8] {
+        let data: Vec<u8> = (0..150_000).map(|i| (i % 251) as u8).collect();
+        let root = n - 1;
+
+        let mut nbi = Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+        nbi.write_local(root, 0x40, &data);
+        let t0 = nbi.now();
+        broadcast(&mut nbi, root, 0x40, data.len() as u64);
+        let nbi_t = nbi.now().since(t0);
+
+        let mut blk = Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+        blk.write_local(root, 0x40, &data);
+        let t0 = blk.now();
+        broadcast_blocking(&mut blk, root, 0x40, data.len() as u64);
+        let blk_t = blk.now().since(t0);
+
+        for node in 0..n {
+            assert_eq!(
+                nbi.read_shared(node, 0x40, data.len()),
+                blk.read_shared(node, 0x40, data.len()),
+                "node {node} of {n}"
+            );
+            assert_eq!(nbi.read_shared(node, 0x40, data.len()), data);
+        }
+        // Same tree edges, but per-edge dependencies instead of round
+        // barriers: NBI must not lose time (small tolerance — earlier
+        // non-critical traffic can shift link-contention patterns).
+        assert!(
+            nbi_t.as_ps() as f64 <= blk_t.as_ps() as f64 * 1.05,
+            "n={n}: NBI {nbi_t} vs blocking {blk_t}"
+        );
+    }
+}
+
+#[test]
+fn nbi_broadcast_overlaps_independent_edges() {
+    // The overlap claim, measured on the op timeline: with NBI regions
+    // the root's round-2 send (op 1, 0->2) is issued while the round-1
+    // edge (op 0, 0->1) is still in flight; the blocking reference only
+    // issues it after op 0 has completed. (The tree's *critical path* is
+    // the same either way — what NBI removes is the round barrier that
+    // serialized independent edges on it.)
+    let n = 8u32;
+    let data = vec![0xA5u8; 48 << 10];
+
+    let mut nbi = Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+    nbi.write_local(0, 0, &data);
+    broadcast(&mut nbi, 0, 0, data.len() as u64);
+    let op0 = nbi.world().ops.get(0).expect("first tree edge");
+    let op1 = nbi.world().ops.get(1).expect("second tree edge");
+    assert!(
+        op1.issued < op0.completed_at.unwrap(),
+        "NBI: round-2 edge must be issued while round 1 is in flight \
+         ({:?} vs {:?})",
+        op1.issued,
+        op0.completed_at
+    );
+
+    let mut blk = Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+    blk.write_local(0, 0, &data);
+    broadcast_blocking(&mut blk, 0, 0, data.len() as u64);
+    let op0 = blk.world().ops.get(0).expect("first tree edge");
+    let op1 = blk.world().ops.get(1).expect("second tree edge");
+    assert!(
+        op1.issued >= op0.completed_at.unwrap(),
+        "blocking reference serializes rounds"
+    );
+}
+
+// ---- property tests: collectives vs host-side reference -------------------
+
+#[test]
+fn prop_broadcast_matches_reference_for_random_sizes_and_roots() {
+    forall("broadcast-vs-reference", 0xB40ADCA5, 12, |rng| {
+        let n = rng.range(2, 9) as u32;
+        let root = rng.below(n as u64) as u32;
+        let len = rng.range(1, 12_000) as usize;
+        let mut data = vec![0u8; len];
+        rng.fill_bytes(&mut data);
+
+        let mut f = Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+        f.write_local(root, 0x80, &data);
+        broadcast(&mut f, root, 0x80, len as u64);
+        for node in 0..n {
+            assert_eq!(
+                f.read_shared(node, 0x80, len),
+                data,
+                "n={n} root={root} len={len} node={node}"
+            );
+        }
+        assert_eq!(f.world().ops.outstanding(), 0, "region fully drained");
+    });
+}
+
+#[test]
+fn prop_reduce_sum_matches_host_reference() {
+    forall("reduce-vs-reference", 0xEED5CE ^ 0xF00D, 12, |rng| {
+        let n = rng.range(2, 9) as u32;
+        let root = rng.below(n as u64) as u32;
+        let count = rng.range(1, 400) as usize;
+
+        let mut f = Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+        // Small integers: exactly representable in fp16, and their sums
+        // (< 2048) too — the reference must match bit-for-bit.
+        let mut inputs: Vec<Vec<f32>> = Vec::new();
+        for node in 0..n {
+            let v: Vec<f32> = (0..count).map(|_| rng.below(100) as f32).collect();
+            f.write_local_f16(node, 0, &v);
+            inputs.push(v);
+        }
+        reduce_sum_f16(&mut f, root, 0, count, 0x20000);
+        let got = f.read_shared_f16(root, 0x20000, count);
+        for i in 0..count {
+            let want: f32 = inputs.iter().map(|v| v[i]).sum();
+            assert_eq!(
+                got[i], want,
+                "n={n} root={root} count={count} elem {i}"
+            );
+        }
+    });
+}
