@@ -10,7 +10,16 @@
 //! used to stage test data, outside the measured windows — like the
 //! paper's testing methodology).
 //!
-//! Two completion disciplines are offered, mirroring GASNet's extended
+//! `Fshmem` is the **synchronous single-issuer special case** of the
+//! [`crate::program`] subsystem: one host program drives every node, and
+//! each `wait` advances *global* simulated time, so commands issued after
+//! a wait are issued after it in simulated time too — from any node.
+//! That is faithful for one controlling host (and for calibration
+//! sweeps), but it serializes multi-node workloads; SPMD programs with
+//! per-node issue timelines run through [`crate::program::Spmd`]
+//! instead, over the same [`IssueCore`].
+//!
+//! Three completion disciplines are offered, mirroring GASNet's extended
 //! API:
 //!
 //! * **Explicit handles** — `put`/`get`/... return an [`OpHandle`];
@@ -20,22 +29,23 @@
 //!   them all (`gasnet_begin_nbi_accessregion` + `gasnet_wait_syncnbi_all`).
 //!   Collectives issue through NBI regions so independent tree edges
 //!   overlap in simulated time instead of serializing on per-round waits.
+//! * **SPMD host programs** — see [`crate::program`].
 //!
 //! Large PUTs (>= `Config::stripe_threshold`) are striped across every
 //! equal-cost port by the model's host layer — transparent here: one
-//! handle, completing when the last stripe is acked.
-
-use std::sync::Arc;
+//! handle, completing when the last stripe is acked. GET replies stripe
+//! the same way on the data holder's side.
 
 use anyhow::{Context, Result};
 
 use crate::config::{Config, Numerics};
 use crate::dla::DlaJob;
 use crate::fabric::PortId;
-use crate::gasnet::{OpId, OpKind, Payload};
-use crate::memory::{AddressMap, GlobalAddr, NodeId};
-use crate::model::{Event, FshmemWorld, HostCmd, UserAm};
-use crate::sim::{Counters, Engine, SimTime};
+use crate::gasnet::OpId;
+use crate::memory::{GlobalAddr, NodeId};
+use crate::model::{FshmemWorld, UserAm};
+use crate::program::{IssueCore, NbiRegion};
+use crate::sim::{Counters, SimTime};
 
 /// Handle to an outstanding one-sided operation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,28 +53,16 @@ pub struct OpHandle(pub(crate) OpId);
 
 /// The FSHMEM instance: a simulated fabric plus its host-side driver.
 pub struct Fshmem {
-    eng: Engine<FshmemWorld>,
-    addr_map: AddressMap,
-    /// Handles issued inside the open NBI access region (implicit-handle
-    /// ops awaiting `nbi_sync`).
-    nbi: Vec<OpHandle>,
-    nbi_open: bool,
+    core: IssueCore,
+    /// Implicit-handle ops awaiting `nbi_sync`.
+    nbi: NbiRegion,
 }
 
 impl Fshmem {
     pub fn new(cfg: Config) -> Self {
-        let addr_map = AddressMap::new(cfg.topology.nodes(), cfg.segment_bytes);
-        let mut world = FshmemWorld::new(cfg.clone());
-        if cfg.numerics == Numerics::Pjrt {
-            let backend = crate::runtime::PjrtBackend::load(&cfg.artifacts_dir)
-                .expect("loading PJRT backend (run `make artifacts` first)");
-            world.set_backend(Box::new(backend));
-        }
         Fshmem {
-            eng: Engine::new(world),
-            addr_map,
-            nbi: Vec::new(),
-            nbi_open: false,
+            core: IssueCore::new(cfg),
+            nbi: NbiRegion::default(),
         }
     }
 
@@ -81,59 +79,38 @@ impl Fshmem {
     // ---- address helpers ------------------------------------------------
 
     pub fn nodes(&self) -> u32 {
-        self.addr_map.nodes
+        self.core.nodes()
     }
 
     pub fn global_addr(&self, node: NodeId, offset: u64) -> GlobalAddr {
-        self.addr_map
-            .compose(node, offset)
-            .expect("address out of range")
+        self.core.global_addr(node, offset)
     }
 
     // ---- untimed host memory staging (PCIe preload path) ----------------
 
     pub fn write_local(&mut self, node: NodeId, offset: u64, data: &[u8]) {
-        self.eng.model.nodes[node as usize]
-            .mem
-            .write_shared(offset, data)
-            .expect("host preload out of bounds");
+        self.core.write_local(node, offset, data);
     }
 
     pub fn read_shared(&self, node: NodeId, offset: u64, len: usize) -> Vec<u8> {
-        self.eng.model.nodes[node as usize]
-            .mem
-            .read_shared(offset, len)
-            .expect("host read out of bounds")
-            .to_vec()
+        self.core.read_shared(node, offset, len)
     }
 
     pub fn write_local_f32(&mut self, node: NodeId, offset: u64, data: &[f32]) {
-        self.eng.model.nodes[node as usize]
-            .mem
-            .write_shared_f32(offset, data)
-            .expect("host preload out of bounds");
+        self.core.write_local_f32(node, offset, data);
     }
 
     pub fn read_shared_f32(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
-        self.eng.model.nodes[node as usize]
-            .mem
-            .read_shared_f32(offset, count)
-            .expect("host read out of bounds")
+        self.core.read_shared_f32(node, offset, count)
     }
 
     /// fp16 tensor staging (the DLA's native format).
     pub fn write_local_f16(&mut self, node: NodeId, offset: u64, data: &[f32]) {
-        self.eng.model.nodes[node as usize]
-            .mem
-            .write_shared_f16(offset, data)
-            .expect("host preload out of bounds");
+        self.core.write_local_f16(node, offset, data);
     }
 
     pub fn read_shared_f16(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
-        self.eng.model.nodes[node as usize]
-            .mem
-            .read_shared_f16(offset, count)
-            .expect("host read out of bounds")
+        self.core.read_shared_f16(node, offset, count)
     }
 
     // ---- one-sided operations (gasnet_put / gasnet_get) ------------------
@@ -141,7 +118,8 @@ impl Fshmem {
     /// `gasnet_put`: store `data` at `dst`, initiated by `src_node`'s host
     /// command path. Non-blocking; returns a handle.
     pub fn put(&mut self, src_node: NodeId, dst: GlobalAddr, data: &[u8]) -> OpHandle {
-        self.put_opt(src_node, dst, data, None)
+        let at = self.core.now();
+        self.core.put_at(at, src_node, dst, data, None)
     }
 
     /// `put` pinned to an egress port (case-study striping across the two
@@ -153,38 +131,8 @@ impl Fshmem {
         data: &[u8],
         port: PortId,
     ) -> OpHandle {
-        self.put_opt(src_node, dst, data, Some(port))
-    }
-
-    fn put_opt(
-        &mut self,
-        src_node: NodeId,
-        dst: GlobalAddr,
-        data: &[u8],
-        port: Option<PortId>,
-    ) -> OpHandle {
-        self.addr_map
-            .translate(dst, data.len() as u64)
-            .expect("put destination out of range");
-        let op = self
-            .eng
-            .model
-            .ops
-            .issue(OpKind::Put, self.eng.now(), data.len() as u64);
-        self.eng.inject_now(Event::HostCmd {
-            node: src_node,
-            cmd: HostCmd::Put {
-                op,
-                dst,
-                payload: if data.is_empty() {
-                    Payload::None
-                } else {
-                    Payload::Bytes(Arc::new(data.to_vec()))
-                },
-                port,
-            },
-        });
-        OpHandle(op)
+        let at = self.core.now();
+        self.core.put_at(at, src_node, dst, data, Some(port))
     }
 
     /// Bulk `put` striped across every minimal-hop port toward the
@@ -206,10 +154,12 @@ impl Fshmem {
             return vec![self.put(src_node, dst, data)];
         }
         let stripe = data.len().div_ceil(ports.len());
+        let at = self.core.now();
         data.chunks(stripe)
             .enumerate()
             .map(|(i, chunk)| {
-                self.put_opt(
+                self.core.put_at(
+                    at,
                     src_node,
                     dst.add((i * stripe) as u64),
                     chunk,
@@ -228,7 +178,9 @@ impl Fshmem {
         len: u64,
         dst: GlobalAddr,
     ) -> OpHandle {
-        self.put_from_mem_opt(src_node, src_offset, len, dst, None)
+        let at = self.core.now();
+        self.core
+            .put_from_mem_at(at, src_node, src_offset, len, dst, None)
     }
 
     /// `put_from_mem` pinned to one egress port — exempt from automatic
@@ -242,39 +194,9 @@ impl Fshmem {
         dst: GlobalAddr,
         port: PortId,
     ) -> OpHandle {
-        self.put_from_mem_opt(src_node, src_offset, len, dst, Some(port))
-    }
-
-    fn put_from_mem_opt(
-        &mut self,
-        src_node: NodeId,
-        src_offset: u64,
-        len: u64,
-        dst: GlobalAddr,
-        port: Option<PortId>,
-    ) -> OpHandle {
-        self.addr_map
-            .translate(dst, len)
-            .expect("put destination out of range");
-        let op = self.eng.model.ops.issue(OpKind::Put, self.eng.now(), len);
-        self.eng.inject_now(Event::HostCmd {
-            node: src_node,
-            cmd: HostCmd::Put {
-                op,
-                dst,
-                payload: if len == 0 {
-                    Payload::None
-                } else {
-                    Payload::MemRead {
-                        shared: true,
-                        offset: src_offset,
-                        len,
-                    }
-                },
-                port,
-            },
-        });
-        OpHandle(op)
+        let at = self.core.now();
+        self.core
+            .put_from_mem_at(at, src_node, src_offset, len, dst, Some(port))
     }
 
     /// `gasnet_get`: fetch `len` bytes from remote `src` into the
@@ -286,31 +208,15 @@ impl Fshmem {
         local_offset: u64,
         len: u64,
     ) -> OpHandle {
-        self.addr_map
-            .translate(src, len)
-            .expect("get source out of range");
-        let op = self.eng.model.ops.issue(OpKind::Get, self.eng.now(), len);
-        self.eng.inject_now(Event::HostCmd {
-            node,
-            cmd: HostCmd::Get {
-                op,
-                src,
-                local_offset,
-                len,
-            },
-        });
-        OpHandle(op)
+        let at = self.core.now();
+        self.core.get_at(at, node, src, local_offset, len)
     }
 
     // ---- active messages (gasnet_AMRequest*) -----------------------------
 
     /// Register a user handler tag on `node`; returns the AM opcode.
     pub fn register_handler(&mut self, node: NodeId, tag: u8) -> u8 {
-        self.eng.model.nodes[node as usize]
-            .core
-            .handlers
-            .register_user(tag)
-            .expect("handler table full")
+        self.core.register_handler(node, tag)
     }
 
     /// `gasnet_AMRequestShort`: opcode + 4 args, no payload.
@@ -321,21 +227,8 @@ impl Fshmem {
         handler: u8,
         args: [u32; 4],
     ) -> OpHandle {
-        let op = self
-            .eng
-            .model
-            .ops
-            .issue(OpKind::AmRequest, self.eng.now(), 0);
-        self.eng.inject_now(Event::HostCmd {
-            node: src_node,
-            cmd: HostCmd::AmShort {
-                op,
-                dst,
-                handler,
-                args,
-            },
-        });
-        OpHandle(op)
+        let at = self.core.now();
+        self.core.am_short_at(at, src_node, dst, handler, args)
     }
 
     /// `gasnet_AMRequestMedium`: payload lands in the destination node's
@@ -349,28 +242,14 @@ impl Fshmem {
         data: &[u8],
         private_offset: u64,
     ) -> OpHandle {
-        let op = self
-            .eng
-            .model
-            .ops
-            .issue(OpKind::AmRequest, self.eng.now(), data.len() as u64);
-        self.eng.inject_now(Event::HostCmd {
-            node: src_node,
-            cmd: HostCmd::AmMedium {
-                op,
-                dst,
-                handler,
-                args,
-                payload: Payload::Bytes(Arc::new(data.to_vec())),
-                private_offset,
-            },
-        });
-        OpHandle(op)
+        let at = self.core.now();
+        self.core
+            .am_medium_at(at, src_node, dst, handler, args, data, private_offset)
     }
 
     /// Drain user AMs delivered so far (API-level handler dispatch).
     pub fn drain_user_ams(&mut self) -> Vec<UserAm> {
-        std::mem::take(&mut self.eng.model.user_am_log)
+        std::mem::take(&mut self.core.eng.model.user_am_log)
     }
 
     // ---- compute (DLA via COMPUTE AM) ------------------------------------
@@ -378,22 +257,9 @@ impl Fshmem {
     /// Issue a DLA job to `target` from `host_node`'s command path. The
     /// handle completes when the DLA acks (compute finished; ART chunks
     /// tracked separately).
-    pub fn compute(&mut self, host_node: NodeId, target: NodeId, mut job: DlaJob) -> OpHandle {
-        let op = self
-            .eng
-            .model
-            .ops
-            .issue(OpKind::Compute, self.eng.now(), 0);
-        job.notify = Some((host_node, op));
-        self.eng.inject_now(Event::HostCmd {
-            node: host_node,
-            cmd: HostCmd::Compute {
-                op,
-                target,
-                job,
-            },
-        });
-        OpHandle(op)
+    pub fn compute(&mut self, host_node: NodeId, target: NodeId, job: DlaJob) -> OpHandle {
+        let at = self.core.now();
+        self.core.compute_at(at, host_node, target, job)
     }
 
     // ---- NBI access regions (gasnet_begin/end_nbi_accessregion) ----------
@@ -403,28 +269,15 @@ impl Fshmem {
     /// implicitly — no handle bookkeeping for the caller. Regions do not
     /// nest (GASNet semantics).
     pub fn nbi_begin(&mut self) {
-        assert!(!self.nbi_open, "NBI access regions do not nest");
-        debug_assert!(self.nbi.is_empty());
-        self.nbi_open = true;
+        self.nbi.begin();
     }
 
     /// Drain the open NBI region: advance simulated time until every
     /// implicit operation issued since [`Self::nbi_begin`] has completed,
     /// then close the region.
     pub fn nbi_sync(&mut self) {
-        assert!(self.nbi_open, "nbi_sync without nbi_begin");
-        let hs = std::mem::take(&mut self.nbi);
+        let hs = self.nbi.take();
         self.wait_all(&hs);
-        self.nbi_open = false;
-    }
-
-    fn nbi_record(&mut self, h: OpHandle) -> OpHandle {
-        assert!(
-            self.nbi_open,
-            "*_nbi operation outside an NBI access region (call nbi_begin first)"
-        );
-        self.nbi.push(h);
-        h
     }
 
     /// `put` into the open NBI region. The returned handle may be used
@@ -432,7 +285,7 @@ impl Fshmem {
     /// tree); `nbi_sync` covers it either way.
     pub fn put_nbi(&mut self, src_node: NodeId, dst: GlobalAddr, data: &[u8]) -> OpHandle {
         let h = self.put(src_node, dst, data);
-        self.nbi_record(h)
+        self.nbi.record(h)
     }
 
     /// `put_from_mem` into the open NBI region.
@@ -444,7 +297,7 @@ impl Fshmem {
         dst: GlobalAddr,
     ) -> OpHandle {
         let h = self.put_from_mem(src_node, src_offset, len, dst);
-        self.nbi_record(h)
+        self.nbi.record(h)
     }
 
     /// `get` into the open NBI region.
@@ -456,32 +309,22 @@ impl Fshmem {
         len: u64,
     ) -> OpHandle {
         let h = self.get(node, src, local_offset, len);
-        self.nbi_record(h)
+        self.nbi.record(h)
     }
 
     // ---- synchronization --------------------------------------------------
 
     /// Enter the barrier from every node; returns one handle per node.
     pub fn barrier_all(&mut self) -> Vec<OpHandle> {
+        let at = self.core.now();
         (0..self.nodes())
-            .map(|node| {
-                let op = self
-                    .eng
-                    .model
-                    .ops
-                    .issue(OpKind::Barrier, self.eng.now(), 0);
-                self.eng.inject_now(Event::HostCmd {
-                    node,
-                    cmd: HostCmd::Barrier { op },
-                });
-                OpHandle(op)
-            })
+            .map(|node| self.core.barrier_at(at, node))
             .collect()
     }
 
     /// Block (advance simulated time) until `h` completes.
     pub fn wait(&mut self, h: OpHandle) {
-        let done = self.eng.run_until(|m| m.ops.is_complete(h.0));
+        let done = self.core.eng.run_until(|m| m.ops.is_complete(h.0));
         assert!(done, "op {:?} cannot complete (deadlock?)", h);
     }
 
@@ -493,30 +336,30 @@ impl Fshmem {
 
     /// True if `h` has completed (no time advance).
     pub fn test(&self, h: OpHandle) -> bool {
-        self.eng.model.ops.is_complete(h.0)
+        self.core.is_complete(h)
     }
 
     /// Run until the event queue drains; returns final simulated time.
     pub fn run_all(&mut self) -> SimTime {
-        self.eng.run_to_quiescence()
+        self.core.eng.run_to_quiescence()
     }
 
     // ---- introspection ----------------------------------------------------
 
     pub fn now(&self) -> SimTime {
-        self.eng.now()
+        self.core.now()
     }
 
     pub fn counters(&self) -> &Counters {
-        &self.eng.counters
+        &self.core.eng.counters
     }
 
     pub fn counters_mut(&mut self) -> &mut Counters {
-        &mut self.eng.counters
+        &mut self.core.eng.counters
     }
 
     pub fn events_processed(&self) -> u64 {
-        self.eng.events_processed()
+        self.core.eng.events_processed()
     }
 
     /// Timestamps of an op: (issued, header_at, data_done, completed).
@@ -524,28 +367,27 @@ impl Fshmem {
         &self,
         h: OpHandle,
     ) -> (SimTime, Option<SimTime>, Option<SimTime>, Option<SimTime>) {
-        let st = self.eng.model.ops.get(h.0).expect("unknown op");
-        (st.issued, st.header_at, st.data_done_at, st.completed_at)
+        self.core.op_times(h)
     }
 
     pub fn world(&self) -> &FshmemWorld {
-        &self.eng.model
+        &self.core.eng.model
     }
 
     pub fn world_mut(&mut self) -> &mut FshmemWorld {
-        &mut self.eng.model
+        &mut self.core.eng.model
     }
 
     /// Drop finished-op bookkeeping (long sweeps).
     pub fn gc_ops(&mut self) {
-        self.eng.model.ops.gc();
+        self.core.eng.model.ops.gc();
     }
 
     /// Handles for ART transfers issued by DLA jobs since the last call
     /// (producer node, handle). Waiting on these = "check if the partial
     /// sum is transferred" in the Fig. 6(a) pseudo-code.
     pub fn take_art_ops(&mut self) -> Vec<(NodeId, OpHandle)> {
-        std::mem::take(&mut self.eng.model.art_ops)
+        std::mem::take(&mut self.core.eng.model.art_ops)
             .into_iter()
             .map(|(n, op)| (n, OpHandle(op)))
             .collect()

@@ -19,6 +19,17 @@
 //! fabrics; the point here is protocol realism over asymptotics. Large
 //! payloads additionally stripe across every equal-cost port (see
 //! `Config::stripe_threshold`) — the collectives inherit that for free.
+//!
+//! Two issue disciplines are provided:
+//!
+//! * The functions below drive the synchronous [`Fshmem`] front end (one
+//!   host program controls every node — fine for calibration, but waits
+//!   advance global time, so independent edges can only overlap within
+//!   one NBI region).
+//! * [`spmd`] holds the SPMD ports: each rank calls the collective from
+//!   its own program, per-edge dependencies are carried by signal AMs
+//!   resolved at *simulated* time, and overlap across ranks is measured,
+//!   not assumed. These are the primary implementations going forward.
 
 use crate::api::{Fshmem, OpHandle};
 use crate::memory::NodeId;
@@ -153,6 +164,153 @@ pub fn scatter(f: &mut Fshmem, root: NodeId, offset: u64, len: u64, dst_offset: 
         }
     }
     f.nbi_sync();
+}
+
+/// SPMD collectives: every rank calls the same function from its own
+/// program (OpenSHMEM-style collective calls). Cross-rank dependencies —
+/// "my parent's data has landed" — travel as signal AMs
+/// ([`crate::program::Rank::wait_signal`]) and resolve at simulated
+/// time, so independent tree edges overlap exactly as far as the fabric
+/// allows. Each collective ends at a well-defined local point; callers
+/// needing global completion (e.g. before reusing buffers) barrier, as
+/// real PGAS programs do. `allreduce_sum_f16` already ends on a barrier.
+pub mod spmd {
+    use crate::memory::{GlobalAddr, NodeId};
+    use crate::program::{AmTag, Rank};
+
+    /// Broadcast `len` bytes at `offset` from `root` to the same offset
+    /// everywhere. Binomial tree on root-relative ranks; a rank forwards
+    /// only after its own receive (signaled by its parent *after* the
+    /// parent's put was acked, so the payload is in memory before the
+    /// signal can arrive). On return, this rank holds the payload and
+    /// has signaled its children.
+    pub fn broadcast(r: &mut Rank, sig: AmTag, root: NodeId, offset: u64, len: u64) {
+        let n = r.nodes();
+        if n == 1 || len == 0 {
+            return;
+        }
+        let unrel = |x: u32| (x + root) % n;
+        let rel = (r.id() + n - root) % n;
+        if rel > 0 {
+            // Dependency edge: block (in simulated time) until the
+            // parent's "data landed" signal.
+            r.wait_signal(sig);
+        }
+        // Smallest power of two strictly above rel (1 for the root).
+        let mut dist = 1u32;
+        while dist <= rel {
+            dist <<= 1;
+        }
+        // Issue every child put first (they overlap on the fabric), then
+        // signal each child as its put completes.
+        let mut sends = Vec::new();
+        let mut d = dist;
+        while rel + d < n {
+            let child = unrel(rel + d);
+            let h = r.put_from_mem(offset, len, GlobalAddr::new(child, offset));
+            sends.push((child, h));
+            d <<= 1;
+        }
+        for (child, h) in sends {
+            r.wait(h);
+            r.signal(child, sig);
+        }
+    }
+
+    /// Sum-reduce fp16 vectors onto `root` at `dst_offset` (gather via
+    /// one-sided GETs issued by root, host-side add — the software half
+    /// of the collective, as in the synchronous version). Ends on a
+    /// barrier so every rank knows the result is in place.
+    pub fn reduce_sum_f16(
+        r: &mut Rank,
+        root: NodeId,
+        offset: u64,
+        count: usize,
+        dst_offset: u64,
+    ) {
+        let n = r.nodes();
+        let bytes = count as u64 * 2;
+        if r.id() == root {
+            let scratch = dst_offset + bytes;
+            r.nbi_begin();
+            for node in 0..n {
+                if node == root {
+                    continue;
+                }
+                let src = GlobalAddr::new(node, offset);
+                r.get_nbi(src, scratch + node as u64 * bytes, bytes);
+            }
+            r.nbi_sync();
+            let mut acc = r.read_shared_f16(offset, count);
+            for node in 0..n {
+                if node == root {
+                    continue;
+                }
+                let v = r.read_shared_f16(scratch + node as u64 * bytes, count);
+                for (a, b) in acc.iter_mut().zip(&v) {
+                    *a += b;
+                }
+            }
+            r.write_local_f16(dst_offset, &acc);
+        }
+        r.barrier();
+    }
+
+    /// All-reduce = reduce to rank 0 + broadcast + closing barrier
+    /// (global completion, like the synchronous version).
+    pub fn allreduce_sum_f16(
+        r: &mut Rank,
+        sig: AmTag,
+        offset: u64,
+        count: usize,
+        dst_offset: u64,
+    ) {
+        reduce_sum_f16(r, 0, offset, count, dst_offset);
+        broadcast(r, sig, 0, dst_offset, count as u64 * 2);
+        r.barrier();
+    }
+
+    /// Gather `len` bytes at `offset` from every rank into a contiguous
+    /// strip at `dst_offset` on `root` (root-issued one-sided GETs).
+    /// Ends on a barrier.
+    pub fn gather(r: &mut Rank, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
+        let n = r.nodes();
+        if r.id() == root {
+            r.nbi_begin();
+            for node in 0..n {
+                if node == root {
+                    let data = r.read_shared(offset, len as usize);
+                    r.write_local(dst_offset + node as u64 * len, &data);
+                } else {
+                    let src = GlobalAddr::new(node, offset);
+                    r.get_nbi(src, dst_offset + node as u64 * len, len);
+                }
+            }
+            r.nbi_sync();
+        }
+        r.barrier();
+    }
+
+    /// Scatter: root holds `n` strips of `len` bytes at `offset`; strip
+    /// `i` lands at `dst_offset` on rank `i`. Ends on a barrier (every
+    /// rank returns with its strip in place).
+    pub fn scatter(r: &mut Rank, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
+        let n = r.nodes();
+        if r.id() == root {
+            r.nbi_begin();
+            for node in 0..n {
+                if node == root {
+                    let data = r.read_shared(offset + node as u64 * len, len as usize);
+                    r.write_local(dst_offset, &data);
+                } else {
+                    let addr = GlobalAddr::new(node, dst_offset);
+                    r.put_from_mem_nbi(offset + node as u64 * len, len, addr);
+                }
+            }
+            r.nbi_sync();
+        }
+        r.barrier();
+    }
 }
 
 #[cfg(test)]
@@ -299,5 +457,88 @@ mod tests {
         f.write_local(0, 0, &[9; 16]);
         broadcast(&mut f, 0, 0, 16);
         assert_eq!(f.read_shared(0, 0, 16), vec![9; 16]);
+    }
+
+    // ---- SPMD ports -------------------------------------------------------
+
+    fn spmd_fabric(n: u32) -> crate::program::Spmd {
+        crate::program::Spmd::new(Config::ring(n).with_numerics(Numerics::TimingOnly))
+    }
+
+    #[test]
+    fn spmd_broadcast_reaches_all_nodes() {
+        for n in [2u32, 4, 7] {
+            let mut s = spmd_fabric(n);
+            let sig = s.register_signal(1);
+            let data: Vec<u8> = (0..999).map(|i| (i % 251) as u8).collect();
+            let root = 2 % n;
+            s.write_local(root, 0x100, &data);
+            s.run(move |r| {
+                spmd::broadcast(r, sig, root, 0x100, 999);
+                r.barrier();
+            });
+            for node in 0..n {
+                assert_eq!(s.read_shared(node, 0x100, 999), data, "node {node} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmd_allreduce_matches_synchronous() {
+        // Same inputs, same reduction order: the SPMD port must produce
+        // bit-identical results to the synchronous collective.
+        let n = 4u32;
+        let count = 64usize;
+        let mut legacy = fabric(n);
+        let mut s = spmd_fabric(n);
+        let sig = s.register_signal(2);
+        for node in 0..n {
+            let v: Vec<f32> = (0..count)
+                .map(|i| (node as usize * 10 + i) as f32 * 0.25)
+                .collect();
+            legacy.write_local_f16(node, 0, &v);
+            s.write_local_f16(node, 0, &v);
+        }
+        allreduce_sum_f16(&mut legacy, 0, count, 0x8000);
+        s.run(move |r| spmd::allreduce_sum_f16(r, sig, 0, count, 0x8000));
+        for node in 0..n {
+            assert_eq!(
+                s.read_shared_f16(node, 0x8000, count),
+                legacy.read_shared_f16(node, 0x8000, count),
+                "node {node}"
+            );
+        }
+    }
+
+    #[test]
+    fn spmd_gather_scatter_roundtrip() {
+        let mut s = spmd_fabric(4);
+        for node in 0..4u32 {
+            s.write_local(node, 0, &[node as u8 + 1; 128]);
+        }
+        s.run(|r| {
+            spmd::gather(r, 0, 0, 128, 0x20000);
+            spmd::scatter(r, 0, 0x20000, 128, 0x40000);
+        });
+        for node in 0..4u64 {
+            assert_eq!(
+                s.read_shared(0, 0x20000 + node * 128, 128),
+                vec![node as u8 + 1; 128]
+            );
+        }
+        for node in 0..4u32 {
+            assert_eq!(s.read_shared(node, 0x40000, 128), vec![node as u8 + 1; 128]);
+        }
+    }
+
+    #[test]
+    fn spmd_broadcast_single_node_is_noop() {
+        // (Nonzero roots are covered by spmd_broadcast_reaches_all_nodes,
+        // whose root is 2 % n.)
+        let mut s = spmd_fabric(1);
+        let sig = s.register_signal(3);
+        s.write_local(0, 0, &[9; 16]);
+        s.run(move |r| spmd::broadcast(r, sig, 0, 0, 16));
+        assert_eq!(s.read_shared(0, 0, 16), vec![9; 16]);
     }
 }

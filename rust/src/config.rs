@@ -47,11 +47,26 @@ pub struct Config {
     /// ablation.
     pub link_loss_permille: u32,
     /// PUTs of at least this many payload bytes fan out across every
-    /// equal-cost port toward the destination (multi-port striping — the
-    /// fast path for large transfers). `u64::MAX` disables striping.
+    /// equal-cost port toward the destination, and GETs of at least this
+    /// many bytes stripe their reply legs the same way (multi-port
+    /// striping — the fast path for large transfers). `u64::MAX` disables
+    /// striping; [`STRIPE_AUTO`] (0) derives the crossover from the link/
+    /// DMA/timing parameters during [`Config::validate`].
     pub stripe_threshold: u64,
     pub seed: u64,
 }
+
+/// Sentinel for `Config::stripe_threshold`: derive the threshold from the
+/// physical parameters (see [`Config::derived_stripe_threshold`]).
+pub const STRIPE_AUTO: u64 = 0;
+
+/// Striping pays once wire time dominates the fixed per-message cost by
+/// this factor: below it, a transfer is still latency-bound and splitting
+/// it would spend a second message's fixed costs to save little wire
+/// time. The fig5_bandwidth ports x threshold ablation puts the measured
+/// break-even well below this point; 40x keeps a comfortable hysteresis
+/// so latency-sensitive mid-size transfers stay single-message.
+const STRIPE_WIRE_DOMINANCE: u64 = 40;
 
 impl Config {
     /// The paper's prototype: two D5005 PACs in a ring over both QSFP+
@@ -71,10 +86,14 @@ impl Config {
             numerics: Numerics::Software,
             artifacts_dir: "artifacts".to_string(),
             link_loss_permille: 0,
-            // 64 KiB: far above the Fig. 5 half-max point, so latency-
-            // sensitive transfers stay single-message while bulk
+            // Resolved by `validate` from the link/DMA timing parameters
+            // *as configured at that point* (64 KiB for the D5005
+            // numbers) — kept AUTO here so presets customized via struct
+            // update or field mutation re-derive against their own
+            // physical params: far above the Fig. 5 half-max point, so
+            // latency-sensitive transfers stay single-message while bulk
             // transfers use both QSFP+ cables.
-            stripe_threshold: 64 << 10,
+            stripe_threshold: STRIPE_AUTO,
             seed: 0xF5113,
         }
     }
@@ -108,10 +127,34 @@ impl Config {
         self
     }
 
-    /// Set the multi-port striping threshold (`u64::MAX` disables).
+    /// Set the multi-port striping threshold explicitly (`u64::MAX`
+    /// disables, [`STRIPE_AUTO`] re-derives from the physical params).
     pub fn with_stripe_threshold(mut self, bytes: u64) -> Self {
         self.stripe_threshold = bytes;
         self
+    }
+
+    /// Derive the striping crossover from the physical parameters instead
+    /// of a magic constant. A transfer should stripe once its single-link
+    /// wire time dominates the fixed per-message pipeline cost (command
+    /// ingress + scheduler + sequencer header + read-DMA descriptor +
+    /// propagation) by [`STRIPE_WIRE_DOMINANCE`]; below that it is
+    /// latency-bound and a second message's fixed costs outweigh the
+    /// halved wire time. Rounded up to a power of two (stable, readable
+    /// defaults); floored at two packets, the smallest splittable
+    /// payload. The D5005 preset lands on 64 KiB — matching the measured
+    /// crossover region in the fig5_bandwidth striping ablation.
+    pub fn derived_stripe_threshold(&self) -> u64 {
+        let t = &self.timing;
+        let fixed =
+            t.cmd_ingress() + t.tx_sched() + t.seq_header() + self.dma.setup + self.link.propagation;
+        let target_ps = fixed.as_ps().saturating_mul(STRIPE_WIRE_DOMINANCE);
+        let floor = (2 * self.packet_payload as u64).max(4096).next_power_of_two();
+        let mut l = floor;
+        while self.link.serialize(l).as_ps() < target_ps && l < (1 << 30) {
+            l <<= 1;
+        }
+        l
     }
 
     /// Parse an INI-style config file. Unknown keys error (catches typos);
@@ -163,10 +206,19 @@ impl Config {
                         v.parse().context("link_loss_permille")?
                 }
                 "stripe_threshold" => {
-                    cfg.stripe_threshold = if v == "off" {
-                        u64::MAX
-                    } else {
-                        v.parse().context("stripe_threshold")?
+                    cfg.stripe_threshold = match v {
+                        "off" => u64::MAX,
+                        "auto" => STRIPE_AUTO,
+                        _ => {
+                            let n: u64 = v.parse().context("stripe_threshold")?;
+                            if n == 0 {
+                                bail!(
+                                    "stripe_threshold must be positive \
+                                     (use 'auto' to derive, 'off' to disable)"
+                                );
+                            }
+                            n
+                        }
                     }
                 }
                 "seed" => cfg.seed = v.parse().context("seed")?,
@@ -189,7 +241,11 @@ impl Config {
         Ok(cfg)
     }
 
-    pub fn validate(&self) -> Result<()> {
+    /// Validate, and resolve derived defaults: a `stripe_threshold` of
+    /// [`STRIPE_AUTO`] is replaced with the value derived from the link/
+    /// DMA/timing parameters (keeping the explicit-override path: any
+    /// nonzero threshold set by hand or by file is left alone).
+    pub fn validate(&mut self) -> Result<()> {
         if self.topology.nodes() == 0 {
             bail!("fabric needs at least one node");
         }
@@ -205,8 +261,8 @@ impl Config {
         if self.link_loss_permille >= 1000 {
             bail!("link_loss_permille must be < 1000");
         }
-        if self.stripe_threshold == 0 {
-            bail!("stripe_threshold must be positive (use u64::MAX to disable)");
+        if self.stripe_threshold == STRIPE_AUTO {
+            self.stripe_threshold = self.derived_stripe_threshold();
         }
         Ok(())
     }
@@ -270,6 +326,40 @@ mod tests {
         assert_eq!(cfg.stripe_threshold, 128 << 10);
         let cfg = Config::from_str_cfg("stripe_threshold = off\n").unwrap();
         assert_eq!(cfg.stripe_threshold, u64::MAX);
-        assert_eq!(Config::two_node_ring().stripe_threshold, 64 << 10);
+        let mut preset = Config::two_node_ring();
+        preset.validate().unwrap();
+        assert_eq!(preset.stripe_threshold, 64 << 10);
+    }
+
+    #[test]
+    fn stripe_threshold_derives_from_physical_params() {
+        // The D5005 derivation lands exactly on the historical 64 KiB
+        // default — the constant is now a consequence, not an input.
+        let cfg = Config::two_node_ring();
+        assert_eq!(cfg.derived_stripe_threshold(), 64 << 10);
+        // 'auto' in a config file resolves during validate.
+        let auto = Config::from_str_cfg("stripe_threshold = auto\n").unwrap();
+        assert_eq!(auto.stripe_threshold, 64 << 10);
+        // A slower link serializes longer, so wire time dominates the
+        // fixed costs sooner and the crossover drops; struct-updated /
+        // mutated presets keep the AUTO sentinel, so validate re-derives
+        // against *their* physical params.
+        let mut slow = Config::two_node_ring();
+        slow.link.clock = crate::sim::ClockDomain::from_mhz(125.0);
+        assert!(slow.derived_stripe_threshold() < cfg.derived_stripe_threshold());
+        slow.validate().unwrap();
+        assert_eq!(slow.stripe_threshold, slow.derived_stripe_threshold());
+        // A longer cable raises the fixed per-message cost, pushing the
+        // crossover up.
+        let mut far = Config::two_node_ring();
+        far.link.propagation = crate::sim::SimTime::from_ns(1300);
+        assert!(far.derived_stripe_threshold() > cfg.derived_stripe_threshold());
+        // The sentinel resolves on validate; explicit values are kept.
+        let mut cfg = Config::two_node_ring().with_stripe_threshold(STRIPE_AUTO);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.stripe_threshold, 64 << 10);
+        let mut cfg = Config::two_node_ring().with_stripe_threshold(12345);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.stripe_threshold, 12345);
     }
 }

@@ -7,7 +7,7 @@ use anyhow::{bail, Result};
 use crate::config::{Config, Numerics};
 use crate::reports;
 use crate::resource;
-use crate::workloads::{conv, matmul, sweep};
+use crate::workloads::{conv, matmul, scaleout, sweep};
 
 /// Registry of named experiments.
 pub const EXPERIMENTS: &[(&str, &str)] = &[
@@ -15,7 +15,11 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("latency", "Table III: PUT/GET latency vs prior works"),
     ("comparison", "Table IV: cross-system comparison"),
     ("resources", "Table II: FPGA resource utilization model"),
-    ("casestudy", "Fig. 7: matmul + conv, 1 vs 2 nodes"),
+    ("casestudy", "Fig. 7: matmul + conv, 1 vs 2 nodes (SPMD issue)"),
+    (
+        "scaleout",
+        "Speedup vs node count under concurrent SPMD issue (1..8 nodes)",
+    ),
     ("all", "run everything above"),
 ];
 
@@ -45,6 +49,7 @@ pub fn run_experiment(name: &str, opts: &RunOptions) -> Result<String> {
         "comparison" => run_comparison(),
         "resources" => Ok(resource::render_table2(2)),
         "casestudy" => run_casestudy(opts),
+        "scaleout" => run_scaleout(opts),
         "all" => {
             let mut out = String::new();
             for (n, _) in EXPERIMENTS.iter().filter(|(n, _)| *n != "all") {
@@ -109,6 +114,16 @@ fn run_casestudy(opts: &RunOptions) -> Result<String> {
     Ok(reports::fig7(&mms, &cvs))
 }
 
+fn run_scaleout(opts: &RunOptions) -> Result<String> {
+    let (counts, case): (&[u32], _) = if opts.fast {
+        (&[1, 2, 4], scaleout::ScaleoutCase::fast())
+    } else {
+        (&[1, 2, 4, 8], scaleout::ScaleoutCase::paper())
+    };
+    let rows = scaleout::run_sweep(counts, &case);
+    Ok(reports::scaleout(&case, &rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +146,16 @@ mod tests {
     fn latency_runs() {
         let out = run_experiment("latency", &RunOptions::default()).unwrap();
         assert!(out.contains("FSHMEM"), "{out}");
+    }
+
+    #[test]
+    fn scaleout_runs_fast() {
+        let opts = RunOptions {
+            fast: true,
+            ..Default::default()
+        };
+        let out = run_experiment("scaleout", &opts).unwrap();
+        assert!(out.contains("Speedup"), "{out}");
+        assert!(out.contains("per-node issue timelines"), "{out}");
     }
 }

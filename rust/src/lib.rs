@@ -7,7 +7,9 @@
 //! * **L3 (this crate)** — the FSHMEM system itself: GASNet core (active
 //!   messages, one-sided PUT/GET, handler table), partitioned global
 //!   address space, inter-FPGA fabric, DLA compute core with Automatic
-//!   Result Transfer, host API, baselines, and the experiment harness.
+//!   Result Transfer, host API (synchronous [`Fshmem`] plus the SPMD
+//!   host-program subsystem in [`program`]), baselines, and the
+//!   experiment harness.
 //!   Because real Stratix-10 hardware is unavailable, the hardware is a
 //!   cycle-level discrete-event simulation calibrated to the paper's
 //!   datapath (128 bit @ 250 MHz, QSFP+ links); see `DESIGN.md`.
@@ -41,6 +43,7 @@ pub mod fabric;
 pub mod gasnet;
 pub mod memory;
 pub mod model;
+pub mod program;
 pub mod reports;
 pub mod resource;
 pub mod runtime;
@@ -50,3 +53,4 @@ pub mod workloads;
 
 pub use api::Fshmem;
 pub use config::Config;
+pub use program::{Rank, Spmd};

@@ -194,13 +194,8 @@ impl FshmemWorld {
     ) {
         let ports = self.cfg.topology.equal_cost_ports(node, dst.node());
         let total = payload.len();
-        let pp = self.cfg.packet_payload as u64;
-        // Packet-aligned stripe size, so no stripe ends mid-packet.
-        let stripe = total
-            .div_ceil(ports.len() as u64)
-            .div_ceil(pp)
-            .max(1)
-            * pp;
+        let stripe =
+            super::stripe_size(total, self.cfg.packet_payload as u64, ports.len());
         let n_stripes = total.div_ceil(stripe) as u32;
         debug_assert!(n_stripes >= 2, "stripe_eligible admits >= 2 stripes");
         debug_assert!(n_stripes as usize <= ports.len());

@@ -5,7 +5,10 @@
 //!
 //! The model is organized as one module per pipeline layer, in the order
 //! a byte traverses them; keeping every stage concurrently busy across
-//! these layers is what produces the paper's >95%-of-peak bandwidth:
+//! these layers is what produces the paper's >95%-of-peak bandwidth.
+//! Above the pipeline sits `crate::program` (host programs / SPMD issue),
+//! which decides *when* each `HostCmd` enters; everything below is
+//! issue-discipline-agnostic:
 //!
 //! ```text
 //!  host.rs     HostCmd issue path (PCIe ingress, striping fan-out)
@@ -39,9 +42,13 @@
 //! op token; the op completes on its last stripe's ACK (`OpState::parts`).
 //!
 //! GET is a Short request whose handler synthesizes a `PutReply` carrying
-//! the data; COMPUTE is a Medium request whose payload is a DLA job
-//! descriptor; ART chunks are sequencer messages entering the `Compute`
-//! class directly (no host involvement — that is the point of ART).
+//! the data — striped across every equal-cost port on the data holder's
+//! side when the requested length reaches `Config::stripe_threshold`
+//! (the reply-side mirror of PUT striping; the GET op completes on its
+//! last reply leg via `OpState::parts`). COMPUTE is a Medium request
+//! whose payload is a DLA job descriptor; ART chunks are sequencer
+//! messages entering the `Compute` class directly (no host involvement —
+//! that is the point of ART).
 
 mod compute;
 mod host;
@@ -213,8 +220,19 @@ pub struct FshmemWorld {
     rx_progress: Vec<(NodeId, u32, u32, u64)>,
 }
 
+/// Packet-aligned stripe size for fanning `total` payload bytes across
+/// `ports` equal-cost ports: no stripe ends mid-packet. Shared by the
+/// host layer's PUT fan-out and the rx layer's GET-reply fan-out.
+pub(crate) fn stripe_size(total: u64, packet_payload: u64, ports: usize) -> u64 {
+    total
+        .div_ceil(ports as u64)
+        .div_ceil(packet_payload)
+        .max(1)
+        * packet_payload
+}
+
 impl FshmemWorld {
-    pub fn new(cfg: Config) -> Self {
+    pub fn new(mut cfg: Config) -> Self {
         cfg.validate().expect("invalid config");
         let wiring = Wiring::new(cfg.topology);
         let links = wiring

@@ -5,6 +5,14 @@
 //! extended API: PUT acknowledges to the initiator, GET synthesizes a
 //! PutReply carrying the requested bytes, COMPUTE enqueues a DLA job,
 //! and the barrier pair collects arrivals at node 0 and releases.
+//!
+//! **Striped GET fast path**: a GET whose requested length reaches
+//! `Config::stripe_threshold` synthesizes one reply leg per equal-cost
+//! port back toward the requester — the reply-side mirror of the host
+//! layer's PUT striping. The legs share the GET's op token (distinct
+//! stripe ids in `args[3]` keep their fragment tracking apart) and the
+//! op completes on the last leg's fully-received reply via
+//! `OpState::parts`, exactly how striped PUTs complete on their last ACK.
 
 use crate::dla;
 use crate::gasnet::handlers::{
@@ -60,6 +68,73 @@ impl FshmemWorld {
                 }
             },
         }
+    }
+
+    /// Striped GET fast path: fan the reply data out across every
+    /// equal-cost port toward the requester as independent reply legs
+    /// sharing the GET's op token (see module docs). Returns false when
+    /// the request does not qualify (small, local, or single-path) and
+    /// the single-message reply should be used.
+    fn try_striped_get_reply(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        pkt: &Packet,
+        q: &mut EventQueue<Event>,
+        c: &mut Counters,
+    ) -> bool {
+        let src_off = (pkt.args[0] as u64) | ((pkt.args[1] as u64) << 32);
+        let len = pkt.args[2] as u64;
+        let ports = self.cfg.topology.equal_cost_ports(node, pkt.src);
+        if len < self.cfg.stripe_threshold
+            || len <= self.cfg.packet_payload as u64
+            || pkt.src == node
+            || ports.len() <= 1
+        {
+            return false;
+        }
+        let stripe = super::stripe_size(len, self.cfg.packet_payload as u64, ports.len());
+        let n_legs = len.div_ceil(stripe) as u32;
+        debug_assert!(n_legs >= 2, "eligibility admits >= 2 reply legs");
+        debug_assert!(n_legs as usize <= ports.len());
+        self.ops.set_parts(pkt.token, n_legs);
+        c.incr("gets_striped");
+        let mut off = 0u64;
+        for (i, &port) in ports.iter().enumerate() {
+            if off >= len {
+                break;
+            }
+            let leg = stripe.min(len - off);
+            let msg = AmMessage {
+                kind: AmKind::Reply,
+                category: AmCategory::Long,
+                handler: H_PUT_REPLY,
+                src: node,
+                dst: pkt.src,
+                token: pkt.token,
+                dst_addr: pkt.dst_addr.add(off),
+                // args[3] = stripe id: keeps each leg's receive-progress
+                // tracking separate on the requester side.
+                args: [0, 0, 0, i as u32],
+                payload: Payload::MemRead {
+                    shared: true,
+                    offset: src_off + off,
+                    len: leg,
+                },
+            };
+            q.schedule_at(
+                now,
+                Event::TxEnqueue {
+                    node,
+                    port,
+                    class: MsgClass::Reply,
+                    msg,
+                },
+            );
+            off += leg;
+        }
+        debug_assert_eq!(off, len, "reply legs must tile the payload");
+        true
     }
 
     pub(super) fn on_handler_start(
@@ -128,23 +203,30 @@ impl FshmemWorld {
                 }
             }
             HandlerKind::PutReply => {
-                // Completion already tracked at data arrival.
+                // The data leg of a GET, fully received (the handler only
+                // runs once the whole message has arrived). Each reply
+                // leg of a striped GET completes one part; the op
+                // completes on the last leg (`OpState::parts`), mirroring
+                // how striped PUTs complete on their last ACK.
+                self.ops.complete(pkt.token, now);
             }
             HandlerKind::Ack => {
                 self.ops.complete(pkt.token, now);
             }
             HandlerKind::Get => {
-                let reply = self.make_get_reply(&pkt);
-                let port = self.cfg.topology.out_port(node, pkt.src, None);
-                q.schedule_at(
-                    now,
-                    Event::TxEnqueue {
-                        node,
-                        port,
-                        class: MsgClass::Reply,
-                        msg: reply,
-                    },
-                );
+                if !self.try_striped_get_reply(now, node, &pkt, q, c) {
+                    let reply = self.make_get_reply(&pkt);
+                    let port = self.cfg.topology.out_port(node, pkt.src, None);
+                    q.schedule_at(
+                        now,
+                        Event::TxEnqueue {
+                            node,
+                            port,
+                            class: MsgClass::Reply,
+                            msg: reply,
+                        },
+                    );
+                }
             }
             HandlerKind::Compute => {
                 let job = dla::job::decode_job(pkt.payload())

@@ -133,19 +133,13 @@ impl FshmemWorld {
             }
             c.add("bytes_delivered", pkt.payload_len());
             // Data-leg progress for PUT requests and GET replies. Striped
-            // PUTs share the token, so this accumulates across stripes.
+            // PUTs (and striped GET reply legs) share the token, so this
+            // accumulates across stripes; completion is the handler
+            // engine's job (PUT: ack path; GET: PutReply handler runs
+            // once per fully-received leg — `OpState::parts`).
             if matches!(pkt.handler, H_PUT | H_PUT_REPLY) {
-                let done =
-                    self.ops
-                        .data_progress(pkt.token, now, pkt.payload_len());
-                if done && pkt.handler == H_PUT_REPLY {
-                    // A GET completes when its reply data has landed.
-                    self.ops.complete(pkt.token, now);
-                }
+                self.ops.data_progress(pkt.token, now, pkt.payload_len());
             }
-        } else if pkt.handler == H_PUT_REPLY && pkt.last {
-            // Zero-byte GET: reply completes it.
-            self.ops.complete(pkt.token, now);
         }
 
         // Handler invocation once the *entire* message has arrived

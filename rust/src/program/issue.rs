@@ -1,0 +1,368 @@
+//! The timestamped command-issue core.
+//!
+//! One `IssueCore` owns the DES engine plus the fabric-wide address map
+//! and turns API-level operations into `HostCmd` events injected at an
+//! explicit issue time. Both front ends sit on top of it:
+//!
+//! * `api::Fshmem` issues everything at the engine's current global time
+//!   (the legacy synchronous single-issuer discipline), and
+//! * `program::Spmd` issues each rank's commands at that rank's local
+//!   virtual clock, which is how independent hosts overlap.
+//!
+//! Nothing here advances time; running the engine (and deciding *when*
+//! it may advance) is the front end's job.
+
+use std::sync::Arc;
+
+use crate::api::OpHandle;
+use crate::config::{Config, Numerics};
+use crate::dla::DlaJob;
+use crate::fabric::PortId;
+use crate::gasnet::{OpKind, Payload};
+use crate::memory::{AddressMap, GlobalAddr, NodeId};
+use crate::model::{Event, FshmemWorld, HostCmd, UserAm};
+use crate::sim::{Engine, SimTime};
+
+/// Engine + address map: the shared substrate of every host front end.
+pub struct IssueCore {
+    pub(crate) eng: Engine<FshmemWorld>,
+    pub(crate) addr_map: AddressMap,
+}
+
+impl IssueCore {
+    pub fn new(cfg: Config) -> Self {
+        let addr_map = AddressMap::new(cfg.topology.nodes(), cfg.segment_bytes);
+        let mut world = FshmemWorld::new(cfg.clone());
+        if cfg.numerics == Numerics::Pjrt {
+            let backend = crate::runtime::PjrtBackend::load(&cfg.artifacts_dir)
+                .expect("loading PJRT backend (run `make artifacts` first)");
+            world.set_backend(Box::new(backend));
+        }
+        IssueCore {
+            eng: Engine::new(world),
+            addr_map,
+        }
+    }
+
+    pub fn nodes(&self) -> u32 {
+        self.addr_map.nodes
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.eng.now()
+    }
+
+    pub fn global_addr(&self, node: NodeId, offset: u64) -> GlobalAddr {
+        self.addr_map
+            .compose(node, offset)
+            .expect("address out of range")
+    }
+
+    // ---- untimed host memory staging (PCIe preload path) ----------------
+
+    pub fn write_local(&mut self, node: NodeId, offset: u64, data: &[u8]) {
+        self.eng.model.nodes[node as usize]
+            .mem
+            .write_shared(offset, data)
+            .expect("host preload out of bounds");
+    }
+
+    pub fn read_shared(&self, node: NodeId, offset: u64, len: usize) -> Vec<u8> {
+        self.eng.model.nodes[node as usize]
+            .mem
+            .read_shared(offset, len)
+            .expect("host read out of bounds")
+            .to_vec()
+    }
+
+    pub fn write_local_f32(&mut self, node: NodeId, offset: u64, data: &[f32]) {
+        self.eng.model.nodes[node as usize]
+            .mem
+            .write_shared_f32(offset, data)
+            .expect("host preload out of bounds");
+    }
+
+    pub fn read_shared_f32(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
+        self.eng.model.nodes[node as usize]
+            .mem
+            .read_shared_f32(offset, count)
+            .expect("host read out of bounds")
+    }
+
+    pub fn write_local_f16(&mut self, node: NodeId, offset: u64, data: &[f32]) {
+        self.eng.model.nodes[node as usize]
+            .mem
+            .write_shared_f16(offset, data)
+            .expect("host preload out of bounds");
+    }
+
+    pub fn read_shared_f16(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
+        self.eng.model.nodes[node as usize]
+            .mem
+            .read_shared_f16(offset, count)
+            .expect("host read out of bounds")
+    }
+
+    // ---- timestamped one-sided issue -------------------------------------
+
+    /// `gasnet_put` issued at `at` from `src_node`'s command path.
+    pub fn put_at(
+        &mut self,
+        at: SimTime,
+        src_node: NodeId,
+        dst: GlobalAddr,
+        data: &[u8],
+        port: Option<PortId>,
+    ) -> OpHandle {
+        self.put_vec_at(at, src_node, dst, data.to_vec(), port)
+    }
+
+    /// [`Self::put_at`] taking ownership of the payload buffer (no extra
+    /// copy — the SPMD driver moves each rank's channel buffer straight
+    /// into the wire payload).
+    pub fn put_vec_at(
+        &mut self,
+        at: SimTime,
+        src_node: NodeId,
+        dst: GlobalAddr,
+        data: Vec<u8>,
+        port: Option<PortId>,
+    ) -> OpHandle {
+        self.addr_map
+            .translate(dst, data.len() as u64)
+            .expect("put destination out of range");
+        let op = self.eng.model.ops.issue(OpKind::Put, at, data.len() as u64);
+        self.eng.inject_at(
+            at,
+            Event::HostCmd {
+                node: src_node,
+                cmd: HostCmd::Put {
+                    op,
+                    dst,
+                    payload: if data.is_empty() {
+                        Payload::None
+                    } else {
+                        Payload::Bytes(Arc::new(data))
+                    },
+                    port,
+                },
+            },
+        );
+        OpHandle(op)
+    }
+
+    /// `gasnet_put` sourcing from the initiator's own segment (zero-copy
+    /// read-DMA at transmit time).
+    pub fn put_from_mem_at(
+        &mut self,
+        at: SimTime,
+        src_node: NodeId,
+        src_offset: u64,
+        len: u64,
+        dst: GlobalAddr,
+        port: Option<PortId>,
+    ) -> OpHandle {
+        self.addr_map
+            .translate(dst, len)
+            .expect("put destination out of range");
+        let op = self.eng.model.ops.issue(OpKind::Put, at, len);
+        self.eng.inject_at(
+            at,
+            Event::HostCmd {
+                node: src_node,
+                cmd: HostCmd::Put {
+                    op,
+                    dst,
+                    payload: if len == 0 {
+                        Payload::None
+                    } else {
+                        Payload::MemRead {
+                            shared: true,
+                            offset: src_offset,
+                            len,
+                        }
+                    },
+                    port,
+                },
+            },
+        );
+        OpHandle(op)
+    }
+
+    /// `gasnet_get` issued at `at`: fetch `len` bytes from remote `src`
+    /// into `node`'s shared segment at `local_offset`.
+    pub fn get_at(
+        &mut self,
+        at: SimTime,
+        node: NodeId,
+        src: GlobalAddr,
+        local_offset: u64,
+        len: u64,
+    ) -> OpHandle {
+        self.addr_map
+            .translate(src, len)
+            .expect("get source out of range");
+        let op = self.eng.model.ops.issue(OpKind::Get, at, len);
+        self.eng.inject_at(
+            at,
+            Event::HostCmd {
+                node,
+                cmd: HostCmd::Get {
+                    op,
+                    src,
+                    local_offset,
+                    len,
+                },
+            },
+        );
+        OpHandle(op)
+    }
+
+    // ---- active messages -------------------------------------------------
+
+    pub fn am_short_at(
+        &mut self,
+        at: SimTime,
+        src_node: NodeId,
+        dst: NodeId,
+        handler: u8,
+        args: [u32; 4],
+    ) -> OpHandle {
+        let op = self.eng.model.ops.issue(OpKind::AmRequest, at, 0);
+        self.eng.inject_at(
+            at,
+            Event::HostCmd {
+                node: src_node,
+                cmd: HostCmd::AmShort {
+                    op,
+                    dst,
+                    handler,
+                    args,
+                },
+            },
+        );
+        OpHandle(op)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn am_medium_at(
+        &mut self,
+        at: SimTime,
+        src_node: NodeId,
+        dst: NodeId,
+        handler: u8,
+        args: [u32; 4],
+        data: &[u8],
+        private_offset: u64,
+    ) -> OpHandle {
+        let op = self
+            .eng
+            .model
+            .ops
+            .issue(OpKind::AmRequest, at, data.len() as u64);
+        self.eng.inject_at(
+            at,
+            Event::HostCmd {
+                node: src_node,
+                cmd: HostCmd::AmMedium {
+                    op,
+                    dst,
+                    handler,
+                    args,
+                    payload: Payload::Bytes(Arc::new(data.to_vec())),
+                    private_offset,
+                },
+            },
+        );
+        OpHandle(op)
+    }
+
+    // ---- compute + synchronization ---------------------------------------
+
+    pub fn compute_at(
+        &mut self,
+        at: SimTime,
+        host_node: NodeId,
+        target: NodeId,
+        mut job: DlaJob,
+    ) -> OpHandle {
+        let op = self.eng.model.ops.issue(OpKind::Compute, at, 0);
+        job.notify = Some((host_node, op));
+        self.eng.inject_at(
+            at,
+            Event::HostCmd {
+                node: host_node,
+                cmd: HostCmd::Compute { op, target, job },
+            },
+        );
+        OpHandle(op)
+    }
+
+    /// Enter the barrier from `node` at `at`; the handle completes on the
+    /// barrier release reaching `node`.
+    pub fn barrier_at(&mut self, at: SimTime, node: NodeId) -> OpHandle {
+        let op = self.eng.model.ops.issue(OpKind::Barrier, at, 0);
+        self.eng.inject_at(
+            at,
+            Event::HostCmd {
+                node,
+                cmd: HostCmd::Barrier { op },
+            },
+        );
+        OpHandle(op)
+    }
+
+    /// Register a user handler tag on `node`; returns the AM opcode.
+    pub fn register_handler(&mut self, node: NodeId, tag: u8) -> u8 {
+        self.eng.model.nodes[node as usize]
+            .core
+            .handlers
+            .register_user(tag)
+            .expect("handler table full")
+    }
+
+    // ---- completion state ------------------------------------------------
+
+    pub fn is_complete(&self, h: OpHandle) -> bool {
+        self.eng.model.ops.is_complete(h.0)
+    }
+
+    /// Completion time of `h`, if it has completed.
+    pub fn completed_at(&self, h: OpHandle) -> Option<SimTime> {
+        self.eng.model.ops.get(h.0).and_then(|st| st.completed_at)
+    }
+
+    /// Timestamps of an op: (issued, header_at, data_done, completed).
+    pub fn op_times(
+        &self,
+        h: OpHandle,
+    ) -> (SimTime, Option<SimTime>, Option<SimTime>, Option<SimTime>) {
+        let st = self.eng.model.ops.get(h.0).expect("unknown op");
+        (st.issued, st.header_at, st.data_done_at, st.completed_at)
+    }
+
+    // ---- delivered-AM and ART bookkeeping --------------------------------
+
+    /// Remove and return the earliest-delivered user AM matching
+    /// `(node, tag)`, if one has been delivered.
+    pub fn take_am_for(&mut self, node: NodeId, tag: u8) -> Option<UserAm> {
+        let log = &mut self.eng.model.user_am_log;
+        let idx = log.iter().position(|am| am.node == node && am.tag == tag)?;
+        Some(log.remove(idx))
+    }
+
+    /// Drain ART-transfer handles produced by `node`'s DLA jobs.
+    pub fn take_art_ops_for(&mut self, node: NodeId) -> Vec<OpHandle> {
+        let ops = &mut self.eng.model.art_ops;
+        let mut taken = Vec::new();
+        let mut i = 0;
+        while i < ops.len() {
+            if ops[i].0 == node {
+                taken.push(OpHandle(ops.remove(i).1));
+            } else {
+                i += 1;
+            }
+        }
+        taken
+    }
+}

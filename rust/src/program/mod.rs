@@ -1,0 +1,95 @@
+//! SPMD host programs: per-node command queues with true concurrent issue.
+//!
+//! The synchronous [`crate::api::Fshmem`] interface has a single issuer:
+//! every `wait` advances *global* simulated time, so a "multi-node"
+//! workload written against it serializes in ways no real PGAS program
+//! does. Real PGAS runtimes (GASNet underneath; SPMD systems like
+//! DART-MPI or OpenSHMEM) run one program image per node, each with its
+//! own issue timeline; commands from independent hosts interleave on the
+//! fabric by *simulated* time, not by host-call order.
+//!
+//! This module is that runtime layer:
+//!
+//! * [`IssueCore`] — the timestamped command-issue core shared by every
+//!   front end: each API call becomes a `HostCmd` event injected at an
+//!   explicit issue time. `Fshmem` is the thin single-issuer special
+//!   case (issue time == global now); the SPMD driver below is the
+//!   general case.
+//! * [`Rank`] — the per-node host-program handle. A program calls
+//!   `put`/`get`/`compute`/`barrier`/`wait` on its rank exactly like an
+//!   OpenSHMEM PE; each rank carries its own **local virtual clock**
+//!   that only its own waits advance.
+//! * [`Spmd`] — the driver. `Spmd::run` launches one copy of the
+//!   program closure per node (one OS thread each, scheduled
+//!   cooperatively and deterministically), merges their issue streams
+//!   into the shared event queue through `model/host.rs`, and resolves
+//!   cross-node dependencies — barrier releases, AM arrivals
+//!   ([`Rank::wait_signal`]), op completions — at simulated time.
+//!
+//! ```text
+//!  rank 0 program ──┐            issue @ local clock        ┌─ node 0
+//!  rank 1 program ──┤→ Spmd driver ─────────────────────────┤─ node 1   model/
+//!  rank n program ──┘   (deterministic min-clock scheduling, │  ...      host.rs →
+//!                        time advances only when all ranks   └─ node n   tx → ...
+//!                        block on simulated-time conditions)
+//! ```
+//!
+//! Determinism: rank threads run *cooperatively* — the driver serves one
+//! request at a time, picks the runnable rank with the smallest
+//! `(local clock, rank id)`, and advances the event queue only when every
+//! rank is blocked on a wait. Program behavior therefore depends only on
+//! the programs and the seed, never on OS thread scheduling; the same
+//! inputs replay the same event trace, counters, and timelines.
+
+mod issue;
+mod rank;
+mod spmd;
+
+pub use issue::IssueCore;
+pub use rank::Rank;
+pub use spmd::{RankTimeline, Spmd, SpmdReport, TimelineEntry};
+
+/// Shared NBI access-region bookkeeping (GASNet
+/// `begin/end_nbi_accessregion` semantics: regions do not nest; every
+/// implicit op is drained by the matching sync). Used by both the
+/// synchronous `Fshmem` front end and per-node [`Rank`]s so the
+/// invariants live in exactly one place.
+#[derive(Debug, Default)]
+pub(crate) struct NbiRegion {
+    handles: Vec<crate::api::OpHandle>,
+    open: bool,
+}
+
+impl NbiRegion {
+    pub(crate) fn begin(&mut self) {
+        assert!(!self.open, "NBI access regions do not nest");
+        debug_assert!(self.handles.is_empty());
+        self.open = true;
+    }
+
+    pub(crate) fn record(&mut self, h: crate::api::OpHandle) -> crate::api::OpHandle {
+        assert!(
+            self.open,
+            "*_nbi operation outside an NBI access region (call nbi_begin first)"
+        );
+        self.handles.push(h);
+        h
+    }
+
+    /// Close the region, handing back every implicit handle for the
+    /// caller to drain.
+    pub(crate) fn take(&mut self) -> Vec<crate::api::OpHandle> {
+        assert!(self.open, "nbi_sync without nbi_begin");
+        self.open = false;
+        std::mem::take(&mut self.handles)
+    }
+}
+
+/// A user-AM signal registered on every node: the `tag` is what
+/// [`Rank::wait_signal`] matches on; the `opcode` is what goes on the
+/// wire. Obtained from [`Spmd::register_signal`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AmTag {
+    pub tag: u8,
+    pub opcode: u8,
+}

@@ -1,0 +1,335 @@
+//! The per-node host-program handle and its driver protocol.
+//!
+//! A [`Rank`] is what an SPMD program closure receives: the FSHMEM API
+//! scoped to one node, backed by a request/response channel pair to the
+//! [`super::Spmd`] driver. Every call sends one request and blocks until
+//! the driver responds — the driver therefore regains control at every
+//! API call, which is what makes the cooperative schedule deterministic.
+//!
+//! Calls that only *issue* (`put`, `get`, `compute`, signals) return
+//! immediately with a handle and do not advance the rank's local clock:
+//! host command issue is a posted MMIO write, pipelined by the hardware
+//! (the model charges the per-command ingress cost on the simulated
+//! side). Calls that *synchronize* (`wait`, `barrier`, `wait_signal`,
+//! `nbi_sync`) advance the local clock to the simulated time at which
+//! their condition resolved.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::api::OpHandle;
+use crate::dla::DlaJob;
+use crate::memory::{GlobalAddr, NodeId};
+use crate::model::UserAm;
+use crate::sim::SimTime;
+
+use super::{AmTag, NbiRegion};
+
+/// Requests a rank sends to the driver (one in flight per rank).
+#[derive(Debug)]
+pub(crate) enum Req {
+    Put {
+        dst: GlobalAddr,
+        data: Vec<u8>,
+    },
+    PutFromMem {
+        src_offset: u64,
+        len: u64,
+        dst: GlobalAddr,
+    },
+    Get {
+        src: GlobalAddr,
+        local_offset: u64,
+        len: u64,
+    },
+    AmShort {
+        dst: NodeId,
+        handler: u8,
+        args: [u32; 4],
+    },
+    Compute {
+        target: NodeId,
+        job: DlaJob,
+    },
+    Barrier,
+    Wait(OpHandle),
+    Test(OpHandle),
+    WaitAm {
+        tag: u8,
+    },
+    TakeArtOps,
+    WriteLocal {
+        offset: u64,
+        data: Vec<u8>,
+    },
+    WriteLocalF16 {
+        offset: u64,
+        data: Vec<f32>,
+    },
+    ReadShared {
+        offset: u64,
+        len: usize,
+    },
+    ReadSharedF16 {
+        offset: u64,
+        count: usize,
+    },
+    Now,
+    /// The program closure returned; carries no payload (the value
+    /// travels back through the thread join).
+    Finished,
+}
+
+/// Driver responses.
+#[derive(Debug)]
+pub(crate) enum Resp {
+    Handle(OpHandle),
+    Handles(Vec<OpHandle>),
+    Done,
+    Bool(bool),
+    Time(SimTime),
+    Bytes(Vec<u8>),
+    Floats(Vec<f32>),
+    Am(UserAm),
+}
+
+/// One node's host program interface (an OpenSHMEM-style PE handle).
+pub struct Rank {
+    id: NodeId,
+    nodes: u32,
+    req_tx: Sender<(u32, Req)>,
+    resp_rx: Receiver<Resp>,
+    /// Handles issued inside the open NBI access region.
+    nbi: NbiRegion,
+}
+
+impl Rank {
+    pub(crate) fn new(
+        id: NodeId,
+        nodes: u32,
+        req_tx: Sender<(u32, Req)>,
+        resp_rx: Receiver<Resp>,
+    ) -> Self {
+        Rank {
+            id,
+            nodes,
+            req_tx,
+            resp_rx,
+            nbi: NbiRegion::default(),
+        }
+    }
+
+    /// This rank's node id (its "PE number").
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    pub fn nodes(&self) -> u32 {
+        self.nodes
+    }
+
+    pub fn global_addr(&self, node: NodeId, offset: u64) -> GlobalAddr {
+        GlobalAddr::new(node, offset)
+    }
+
+    fn request(&mut self, req: Req) -> Resp {
+        self.req_tx
+            .send((self.id, req))
+            .expect("SPMD driver hung up");
+        self.resp_rx.recv().expect("SPMD driver hung up")
+    }
+
+    // ---- one-sided operations (issue from this node) ---------------------
+
+    /// `gasnet_put` from this node; non-blocking, returns a handle.
+    pub fn put(&mut self, dst: GlobalAddr, data: &[u8]) -> OpHandle {
+        match self.request(Req::Put {
+            dst,
+            data: data.to_vec(),
+        }) {
+            Resp::Handle(h) => h,
+            other => unreachable!("put: {other:?}"),
+        }
+    }
+
+    /// `gasnet_put` sourcing from this node's own segment.
+    pub fn put_from_mem(&mut self, src_offset: u64, len: u64, dst: GlobalAddr) -> OpHandle {
+        match self.request(Req::PutFromMem {
+            src_offset,
+            len,
+            dst,
+        }) {
+            Resp::Handle(h) => h,
+            other => unreachable!("put_from_mem: {other:?}"),
+        }
+    }
+
+    /// `gasnet_get` into this node's segment at `local_offset`.
+    pub fn get(&mut self, src: GlobalAddr, local_offset: u64, len: u64) -> OpHandle {
+        match self.request(Req::Get {
+            src,
+            local_offset,
+            len,
+        }) {
+            Resp::Handle(h) => h,
+            other => unreachable!("get: {other:?}"),
+        }
+    }
+
+    /// `gasnet_AMRequestShort` from this node.
+    pub fn am_short(&mut self, dst: NodeId, handler: u8, args: [u32; 4]) -> OpHandle {
+        match self.request(Req::AmShort { dst, handler, args }) {
+            Resp::Handle(h) => h,
+            other => unreachable!("am_short: {other:?}"),
+        }
+    }
+
+    /// Fire a pre-registered signal AM at `dst` (see
+    /// [`super::Spmd::register_signal`]). Fire-and-forget; the receiver
+    /// observes it with [`Self::wait_signal`].
+    pub fn signal(&mut self, dst: NodeId, sig: AmTag) -> OpHandle {
+        self.am_short(dst, sig.opcode, [0; 4])
+    }
+
+    /// Issue a DLA job to `target` from this node's command path.
+    pub fn compute(&mut self, target: NodeId, job: DlaJob) -> OpHandle {
+        match self.request(Req::Compute { target, job }) {
+            Resp::Handle(h) => h,
+            other => unreachable!("compute: {other:?}"),
+        }
+    }
+
+    // ---- synchronization (advances this rank's local clock) --------------
+
+    /// Block this rank (in simulated time) until `h` completes.
+    pub fn wait(&mut self, h: OpHandle) {
+        match self.request(Req::Wait(h)) {
+            Resp::Done => {}
+            other => unreachable!("wait: {other:?}"),
+        }
+    }
+
+    pub fn wait_all(&mut self, hs: &[OpHandle]) {
+        for &h in hs {
+            self.wait(h);
+        }
+    }
+
+    /// Non-blocking completion check (does not advance time; spinning on
+    /// `test` never lets simulated time progress — use `wait`).
+    pub fn test(&mut self, h: OpHandle) -> bool {
+        match self.request(Req::Test(h)) {
+            Resp::Bool(b) => b,
+            other => unreachable!("test: {other:?}"),
+        }
+    }
+
+    /// Enter the fabric barrier and block until released. The release
+    /// arrives at simulated time >= every rank's arrival — the
+    /// cross-node dependency is resolved by the event pipeline, not by
+    /// host-call order.
+    pub fn barrier(&mut self) {
+        match self.request(Req::Barrier) {
+            Resp::Done => {}
+            other => unreachable!("barrier: {other:?}"),
+        }
+    }
+
+    /// Block until a signal AM with `sig`'s tag is delivered to this
+    /// node; consumes and returns it. The per-edge dependency primitive
+    /// the SPMD collectives are built on.
+    pub fn wait_signal(&mut self, sig: AmTag) -> UserAm {
+        match self.request(Req::WaitAm { tag: sig.tag }) {
+            Resp::Am(am) => am,
+            other => unreachable!("wait_signal: {other:?}"),
+        }
+    }
+
+    /// Handles for ART transfers issued by this node's DLA jobs since the
+    /// last call.
+    pub fn take_art_ops(&mut self) -> Vec<OpHandle> {
+        match self.request(Req::TakeArtOps) {
+            Resp::Handles(hs) => hs,
+            other => unreachable!("take_art_ops: {other:?}"),
+        }
+    }
+
+    /// This rank's local virtual time.
+    pub fn now(&mut self) -> SimTime {
+        match self.request(Req::Now) {
+            Resp::Time(t) => t,
+            other => unreachable!("now: {other:?}"),
+        }
+    }
+
+    // ---- NBI access regions ----------------------------------------------
+
+    /// Open a non-blocking implicit access region (GASNet semantics:
+    /// regions do not nest).
+    pub fn nbi_begin(&mut self) {
+        self.nbi.begin();
+    }
+
+    /// Drain the open NBI region: block until every implicit operation
+    /// issued since `nbi_begin` has completed.
+    pub fn nbi_sync(&mut self) {
+        let hs = self.nbi.take();
+        self.wait_all(&hs);
+    }
+
+    pub fn put_nbi(&mut self, dst: GlobalAddr, data: &[u8]) -> OpHandle {
+        let h = self.put(dst, data);
+        self.nbi.record(h)
+    }
+
+    pub fn put_from_mem_nbi(&mut self, src_offset: u64, len: u64, dst: GlobalAddr) -> OpHandle {
+        let h = self.put_from_mem(src_offset, len, dst);
+        self.nbi.record(h)
+    }
+
+    pub fn get_nbi(&mut self, src: GlobalAddr, local_offset: u64, len: u64) -> OpHandle {
+        let h = self.get(src, local_offset, len);
+        self.nbi.record(h)
+    }
+
+    // ---- untimed host memory access (own node only) ----------------------
+
+    pub fn write_local(&mut self, offset: u64, data: &[u8]) {
+        match self.request(Req::WriteLocal {
+            offset,
+            data: data.to_vec(),
+        }) {
+            Resp::Done => {}
+            other => unreachable!("write_local: {other:?}"),
+        }
+    }
+
+    pub fn write_local_f16(&mut self, offset: u64, data: &[f32]) {
+        match self.request(Req::WriteLocalF16 {
+            offset,
+            data: data.to_vec(),
+        }) {
+            Resp::Done => {}
+            other => unreachable!("write_local_f16: {other:?}"),
+        }
+    }
+
+    pub fn read_shared(&mut self, offset: u64, len: usize) -> Vec<u8> {
+        match self.request(Req::ReadShared { offset, len }) {
+            Resp::Bytes(b) => b,
+            other => unreachable!("read_shared: {other:?}"),
+        }
+    }
+
+    pub fn read_shared_f16(&mut self, offset: u64, count: usize) -> Vec<f32> {
+        match self.request(Req::ReadSharedF16 { offset, count }) {
+            Resp::Floats(v) => v,
+            other => unreachable!("read_shared_f16: {other:?}"),
+        }
+    }
+
+    /// A sender handle for the driver-side thread wrapper's finish
+    /// guard (sends `Req::Finished` even if the program unwinds).
+    pub(crate) fn finish_sender(&self) -> Sender<(u32, Req)> {
+        self.req_tx.clone()
+    }
+}

@@ -1,0 +1,613 @@
+//! The SPMD driver: one program image per node, cooperatively scheduled,
+//! deterministically interleaved by local virtual time.
+//!
+//! Each rank's program runs on its own OS thread but never concurrently
+//! with the driver or another rank: every `Rank` API call hands control
+//! to the driver and blocks for the response. The driver serves the
+//! runnable rank with the smallest `(local clock, rank id)` and advances
+//! the shared event queue only when *every* rank is blocked on a
+//! simulated-time condition (op completion or signal-AM arrival) — so
+//! commands enter the fabric at their issue timestamps, independent
+//! hosts overlap, and the whole schedule is a pure function of the
+//! programs and the seed (OS thread scheduling never matters).
+//!
+//! Invariant that keeps event injection causal: the engine's clock only
+//! advances while all ranks are blocked, and a rank resumes with its
+//! local clock set to the simulated time its condition resolved — so a
+//! runnable rank's clock is always >= the engine's current time, and
+//! every `HostCmd` it issues lands in the queue's future.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::time::Duration;
+
+use crate::config::Config;
+use crate::memory::{GlobalAddr, NodeId};
+use crate::model::FshmemWorld;
+use crate::sim::{Counters, SimTime};
+
+use super::issue::IssueCore;
+use super::rank::{Rank, Req, Resp};
+use super::AmTag;
+
+/// One entry of a rank's issue timeline: what it issued, at its local
+/// virtual time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimelineEntry {
+    pub at: SimTime,
+    pub what: String,
+}
+
+/// Per-rank summary of an SPMD run (the scale-out report's raw material).
+#[derive(Debug, Clone)]
+pub struct RankTimeline {
+    pub rank: u32,
+    /// Commands issued (puts, gets, computes, barriers, signals).
+    pub cmds: usize,
+    pub first_issue: Option<SimTime>,
+    pub last_issue: Option<SimTime>,
+    /// Local virtual time when the rank's program returned.
+    pub finish: SimTime,
+}
+
+/// Result of one [`Spmd::run`].
+#[derive(Debug)]
+pub struct SpmdReport<R> {
+    /// Per-rank program return values, indexed by rank id.
+    pub results: Vec<R>,
+    /// Per-rank local virtual time at program return.
+    pub finish: Vec<SimTime>,
+    /// Simulated time once all in-flight traffic drained.
+    pub end: SimTime,
+    /// Per-rank issue timelines.
+    pub timelines: Vec<Vec<TimelineEntry>>,
+}
+
+impl<R> SpmdReport<R> {
+    /// The slowest rank's finish time — the run's makespan endpoint.
+    pub fn max_finish(&self) -> SimTime {
+        self.finish.iter().copied().max().unwrap_or(SimTime::ZERO)
+    }
+
+    pub fn rank_timelines(&self) -> Vec<RankTimeline> {
+        self.timelines
+            .iter()
+            .enumerate()
+            .map(|(i, tl)| RankTimeline {
+                rank: i as u32,
+                cmds: tl.len(),
+                first_issue: tl.first().map(|e| e.at),
+                last_issue: tl.last().map(|e| e.at),
+                finish: self.finish[i],
+            })
+            .collect()
+    }
+}
+
+/// What a blocked rank is waiting for.
+#[derive(Debug, Clone, Copy)]
+enum WaitCond {
+    /// Completion of an operation (put/get/compute ack, barrier release).
+    Op(crate::api::OpHandle),
+    /// Delivery of a user AM with this tag to the rank's node.
+    Am(u8),
+}
+
+#[derive(Debug)]
+enum State {
+    /// Running host code; its next request has not arrived yet.
+    Computing,
+    /// Sent a request the driver has not served yet.
+    Ready(Req),
+    /// Blocked on a simulated-time condition (no response sent yet).
+    Blocked(WaitCond),
+    Finished,
+}
+
+/// Driver-side per-rank state.
+struct Ctl {
+    state: State,
+    clock: SimTime,
+    timeline: Vec<TimelineEntry>,
+}
+
+/// Sends `Req::Finished` when dropped — on normal program return *and*
+/// on unwind, so a panicking rank program reaches the driver as
+/// "finished" immediately (its real panic then surfaces at join) instead
+/// of stalling the request loop until its timeout fires.
+struct FinishGuard {
+    id: u32,
+    tx: Sender<(u32, Req)>,
+}
+
+impl Drop for FinishGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send((self.id, Req::Finished));
+    }
+}
+
+impl Ctl {
+    fn note(&mut self, at: SimTime, what: String) {
+        self.timeline.push(TimelineEntry { at, what });
+    }
+}
+
+/// The SPMD host-program driver. Owns the fabric (engine + address map)
+/// across runs; `run` may be called repeatedly and the simulated
+/// timeline continues.
+pub struct Spmd {
+    core: IssueCore,
+}
+
+impl Spmd {
+    pub fn new(cfg: Config) -> Self {
+        Spmd {
+            core: IssueCore::new(cfg),
+        }
+    }
+
+    pub fn nodes(&self) -> u32 {
+        self.core.nodes()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.core.now()
+    }
+
+    pub fn counters(&self) -> &Counters {
+        &self.core.eng.counters
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.core.eng.events_processed()
+    }
+
+    pub fn world(&self) -> &FshmemWorld {
+        &self.core.eng.model
+    }
+
+    pub fn global_addr(&self, node: NodeId, offset: u64) -> GlobalAddr {
+        self.core.global_addr(node, offset)
+    }
+
+    /// Timestamps of an op: (issued, header_at, data_done, completed).
+    pub fn op_times(
+        &self,
+        h: crate::api::OpHandle,
+    ) -> (SimTime, Option<SimTime>, Option<SimTime>, Option<SimTime>) {
+        self.core.op_times(h)
+    }
+
+    // ---- untimed staging (outside the measured window) -------------------
+
+    pub fn write_local(&mut self, node: NodeId, offset: u64, data: &[u8]) {
+        self.core.write_local(node, offset, data);
+    }
+
+    pub fn read_shared(&self, node: NodeId, offset: u64, len: usize) -> Vec<u8> {
+        self.core.read_shared(node, offset, len)
+    }
+
+    pub fn write_local_f32(&mut self, node: NodeId, offset: u64, data: &[f32]) {
+        self.core.write_local_f32(node, offset, data);
+    }
+
+    pub fn read_shared_f32(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
+        self.core.read_shared_f32(node, offset, count)
+    }
+
+    pub fn write_local_f16(&mut self, node: NodeId, offset: u64, data: &[f32]) {
+        self.core.write_local_f16(node, offset, data);
+    }
+
+    pub fn read_shared_f16(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
+        self.core.read_shared_f16(node, offset, count)
+    }
+
+    /// Register a user-AM signal tag on every node; returns the
+    /// `(tag, opcode)` pair ranks use with `signal`/`wait_signal`.
+    /// Call before `run` so every rank sees the same handler table.
+    pub fn register_signal(&mut self, tag: u8) -> AmTag {
+        let n = self.core.nodes();
+        let mut opcode = None;
+        for node in 0..n {
+            let op = self.core.register_handler(node, tag);
+            match opcode {
+                None => opcode = Some(op),
+                Some(prev) => assert_eq!(prev, op, "handler tables out of sync"),
+            }
+        }
+        AmTag {
+            tag,
+            opcode: opcode.expect("fabric has at least one node"),
+        }
+    }
+
+    /// Launch one copy of `program` per node (SPMD: the closure reads its
+    /// rank id from [`Rank::id`]) and run them to completion under the
+    /// deterministic cooperative schedule. Returns per-rank results,
+    /// finish times, and issue timelines; the engine is then drained to
+    /// quiescence so trailing acks settle.
+    pub fn run<R, F>(&mut self, program: F) -> SpmdReport<R>
+    where
+        F: Fn(&mut Rank) -> R + Sync,
+        R: Send,
+    {
+        let n = self.core.nodes() as usize;
+        let start = self.core.now();
+        let mut ctls: Vec<Ctl> = (0..n)
+            .map(|_| Ctl {
+                state: State::Computing,
+                clock: start,
+                timeline: Vec::new(),
+            })
+            .collect();
+        let core = &mut self.core;
+        let results: Vec<R> = std::thread::scope(|s| {
+            let (req_tx, req_rx) = mpsc::channel::<(u32, Req)>();
+            let program = &program;
+            let mut resp_txs = Vec::with_capacity(n);
+            let mut joins = Vec::with_capacity(n);
+            for id in 0..n {
+                let (tx, rx) = mpsc::channel::<Resp>();
+                resp_txs.push(tx);
+                let mut rank = Rank::new(id as u32, n as u32, req_tx.clone(), rx);
+                let guard = FinishGuard {
+                    id: id as u32,
+                    tx: rank.finish_sender(),
+                };
+                joins.push(s.spawn(move || {
+                    let _guard = guard;
+                    program(&mut rank)
+                }));
+            }
+            // The driver holds no request sender: if every rank thread
+            // dies, recv errors instead of hanging.
+            drop(req_tx);
+            drive(core, &mut ctls, &resp_txs, &req_rx);
+            joins
+                .into_iter()
+                .map(|j| match j.join() {
+                    Ok(r) => r,
+                    Err(_) => panic!("SPMD rank program panicked"),
+                })
+                .collect()
+        });
+        let end = self.core.eng.run_to_quiescence();
+        SpmdReport {
+            results,
+            finish: ctls.iter().map(|c| c.clock).collect(),
+            end,
+            timelines: ctls.into_iter().map(|c| c.timeline).collect(),
+        }
+    }
+}
+
+/// The cooperative scheduler (see module docs for the invariants).
+fn drive(
+    core: &mut IssueCore,
+    ctls: &mut [Ctl],
+    resp: &[Sender<Resp>],
+    req_rx: &Receiver<(u32, Req)>,
+) {
+    loop {
+        // Phase 1: collect until no rank is mid-computation. Arrival
+        // order does not matter — every computing rank is waited for, and
+        // serving order below is by (clock, id). The timeout turns a
+        // panicked/stalled rank program into a loud failure instead of a
+        // silent hang (other ranks' senders keep the channel open).
+        while ctls.iter().any(|c| matches!(c.state, State::Computing)) {
+            let (id, req) = match req_rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(m) => m,
+                Err(e) => panic!("SPMD rank program stalled or died: {e:?}"),
+            };
+            let ctl = &mut ctls[id as usize];
+            debug_assert!(matches!(ctl.state, State::Computing));
+            ctl.state = match req {
+                Req::Finished => State::Finished,
+                other => State::Ready(other),
+            };
+        }
+        if ctls.iter().all(|c| matches!(c.state, State::Finished)) {
+            return;
+        }
+        // Phase 2: serve the pending request of the earliest rank.
+        let next = ctls
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| matches!(c.state, State::Ready(_)))
+            .min_by_key(|&(i, c)| (c.clock, i))
+            .map(|(i, _)| i);
+        if let Some(i) = next {
+            serve(core, ctls, resp, i);
+            continue;
+        }
+        // Phase 3: every live rank is blocked on simulated time — advance
+        // the event queue until at least one condition resolves.
+        advance(core, ctls, resp);
+    }
+}
+
+/// Serve rank `i`'s pending request at its local clock.
+fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize) {
+    let node = i as NodeId;
+    let req = match std::mem::replace(&mut ctls[i].state, State::Computing) {
+        State::Ready(r) => r,
+        other => unreachable!("serve on rank in state {other:?}"),
+    };
+    let at = ctls[i].clock;
+    let answer = match req {
+        Req::Put { dst, data } => {
+            ctls[i].note(
+                at,
+                format!("put {}B -> n{}@{:#x}", data.len(), dst.node(), dst.offset()),
+            );
+            Resp::Handle(core.put_vec_at(at, node, dst, data, None))
+        }
+        Req::PutFromMem {
+            src_offset,
+            len,
+            dst,
+        } => {
+            ctls[i].note(
+                at,
+                format!("put_from_mem {len}B -> n{}@{:#x}", dst.node(), dst.offset()),
+            );
+            Resp::Handle(core.put_from_mem_at(at, node, src_offset, len, dst, None))
+        }
+        Req::Get {
+            src,
+            local_offset,
+            len,
+        } => {
+            ctls[i].note(
+                at,
+                format!("get {len}B <- n{}@{:#x}", src.node(), src.offset()),
+            );
+            Resp::Handle(core.get_at(at, node, src, local_offset, len))
+        }
+        Req::AmShort { dst, handler, args } => {
+            ctls[i].note(at, format!("am_short -> n{dst} op{handler}"));
+            Resp::Handle(core.am_short_at(at, node, dst, handler, args))
+        }
+        Req::Compute { target, job } => {
+            ctls[i].note(at, format!("compute -> n{target}"));
+            Resp::Handle(core.compute_at(at, node, target, job))
+        }
+        Req::Barrier => {
+            ctls[i].note(at, "barrier".to_string());
+            let h = core.barrier_at(at, node);
+            // The release is always in the simulated future.
+            ctls[i].state = State::Blocked(WaitCond::Op(h));
+            return;
+        }
+        Req::Wait(h) => match core.completed_at(h) {
+            Some(t) => {
+                ctls[i].clock = ctls[i].clock.max(t);
+                Resp::Done
+            }
+            None => {
+                ctls[i].state = State::Blocked(WaitCond::Op(h));
+                return;
+            }
+        },
+        Req::Test(h) => Resp::Bool(core.is_complete(h)),
+        Req::WaitAm { tag } => match core.take_am_for(node, tag) {
+            Some(am) => {
+                ctls[i].clock = ctls[i].clock.max(am.at);
+                Resp::Am(am)
+            }
+            None => {
+                ctls[i].state = State::Blocked(WaitCond::Am(tag));
+                return;
+            }
+        },
+        Req::TakeArtOps => Resp::Handles(core.take_art_ops_for(node)),
+        Req::WriteLocal { offset, data } => {
+            core.write_local(node, offset, &data);
+            Resp::Done
+        }
+        Req::WriteLocalF16 { offset, data } => {
+            core.write_local_f16(node, offset, &data);
+            Resp::Done
+        }
+        Req::ReadShared { offset, len } => Resp::Bytes(core.read_shared(node, offset, len)),
+        Req::ReadSharedF16 { offset, count } => {
+            Resp::Floats(core.read_shared_f16(node, offset, count))
+        }
+        Req::Now => Resp::Time(ctls[i].clock),
+        Req::Finished => unreachable!("Finished is absorbed by the recv loop"),
+    };
+    resp[i].send(answer).expect("SPMD rank thread died");
+}
+
+/// Step the engine until at least one blocked rank's condition resolves;
+/// resume every rank whose condition holds, stamping its local clock
+/// with the resolution time.
+fn advance(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>]) {
+    loop {
+        if !core.eng.step() {
+            let stuck: Vec<String> = ctls
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| match &c.state {
+                    State::Blocked(cond) => {
+                        Some(format!("rank {i} blocked on {cond:?} at t={}", c.clock))
+                    }
+                    _ => None,
+                })
+                .collect();
+            panic!(
+                "SPMD deadlock: event queue drained with ranks still blocked: [{}]",
+                stuck.join("; ")
+            );
+        }
+        let mut resumed = false;
+        for i in 0..ctls.len() {
+            let cond = match &ctls[i].state {
+                State::Blocked(c) => *c,
+                _ => continue,
+            };
+            match cond {
+                WaitCond::Op(h) => {
+                    if let Some(t) = core.completed_at(h) {
+                        ctls[i].clock = ctls[i].clock.max(t);
+                        ctls[i].state = State::Computing;
+                        resp[i].send(Resp::Done).expect("SPMD rank thread died");
+                        resumed = true;
+                    }
+                }
+                WaitCond::Am(tag) => {
+                    if let Some(am) = core.take_am_for(i as NodeId, tag) {
+                        ctls[i].clock = ctls[i].clock.max(am.at);
+                        ctls[i].state = State::Computing;
+                        resp[i].send(Resp::Am(am)).expect("SPMD rank thread died");
+                        resumed = true;
+                    }
+                }
+            }
+        }
+        if resumed {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, Numerics};
+
+    fn two_node() -> Spmd {
+        Spmd::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly))
+    }
+
+    #[test]
+    fn ranks_issue_and_wait_independently() {
+        let mut spmd = two_node();
+        let report = spmd.run(|r| {
+            let peer = 1 - r.id();
+            let data = vec![r.id() as u8 + 1; 4096];
+            let h = r.put(r.global_addr(peer, 0x1000), &data);
+            r.wait(h);
+            r.now()
+        });
+        assert_eq!(spmd.read_shared(1, 0x1000, 4096), vec![1u8; 4096]);
+        assert_eq!(spmd.read_shared(0, 0x1000, 4096), vec![2u8; 4096]);
+        // Both ranks really waited (their clocks moved off zero).
+        assert!(report.results.iter().all(|&t| t > SimTime::ZERO));
+        assert_eq!(report.finish, report.results);
+    }
+
+    #[test]
+    fn concurrent_issue_overlaps_transfers() {
+        // Two ranks each push 256 KiB to the other. Under SPMD issue the
+        // transfers overlap in simulated time; the same two transfers
+        // serialized through the synchronous API (issue, wait, issue,
+        // wait) take nearly twice as long.
+        let data = vec![0xA5u8; 256 << 10];
+        let mut spmd = two_node();
+        let d = &data;
+        let report = spmd.run(|r| {
+            let peer = 1 - r.id();
+            let h = r.put(r.global_addr(peer, 0), d);
+            r.wait(h);
+        });
+        let overlapped = report.max_finish();
+
+        let mut f = crate::api::Fshmem::new(
+            Config::two_node_ring().with_numerics(Numerics::TimingOnly),
+        );
+        let h = f.put(0, f.global_addr(1, 0), &data);
+        f.wait(h);
+        let h = f.put(1, f.global_addr(0, 0), &data);
+        f.wait(h);
+        let serialized = f.now();
+        assert!(
+            overlapped.as_ps() < (serialized.as_ps() * 3) / 4,
+            "overlapped {overlapped} vs serialized {serialized}"
+        );
+    }
+
+    #[test]
+    fn barrier_resolves_at_simulated_time() {
+        // Rank 0 does a bulk transfer before entering the barrier; rank 1
+        // enters immediately. Rank 1's release must wait for rank 0's
+        // late arrival in *simulated* time.
+        let mut spmd = two_node();
+        let big = vec![7u8; 128 << 10];
+        let big = &big;
+        let report = spmd.run(|r| {
+            if r.id() == 0 {
+                let h = r.put(r.global_addr(1, 0), big);
+                r.wait(h);
+            }
+            let before = r.now();
+            r.barrier();
+            (before, r.now())
+        });
+        let (r0_arrive, r0_done) = report.results[0];
+        let (r1_arrive, r1_done) = report.results[1];
+        assert!(r1_arrive < r0_arrive, "rank 1 reaches the barrier first");
+        assert!(r1_done >= r0_arrive, "rank 1 held until rank 0 arrived");
+        assert!(r0_done >= r0_arrive && r1_done >= r1_arrive);
+    }
+
+    #[test]
+    fn signals_deliver_and_order_cross_rank_dependencies() {
+        let mut spmd = two_node();
+        let sig = spmd.register_signal(7);
+        let report = spmd.run(move |r| {
+            if r.id() == 0 {
+                let h = r.put(r.global_addr(1, 0x2000), &[9u8; 512]);
+                r.wait(h);
+                r.signal(1, sig);
+                SimTime::ZERO
+            } else {
+                let am = r.wait_signal(sig);
+                // Data was acked before the signal was sent, so it is in
+                // memory by the time the signal arrives.
+                assert_eq!(r.read_shared(0x2000, 512), vec![9u8; 512]);
+                am.at
+            }
+        });
+        assert!(report.results[1] > SimTime::ZERO);
+        assert_eq!(report.timelines[0].len(), 2, "put + signal");
+    }
+
+    #[test]
+    fn single_node_fabric_runs() {
+        let mut spmd = Spmd::new(Config::ring(1).with_numerics(Numerics::TimingOnly));
+        let report = spmd.run(|r| {
+            let h = r.put(r.global_addr(0, 0x100), &[1u8; 64]);
+            r.wait(h);
+            r.barrier();
+        });
+        assert_eq!(spmd.read_shared(0, 0x100, 64), vec![1u8; 64]);
+        assert!(report.max_finish() > SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPMD deadlock")]
+    fn missing_barrier_partner_is_a_deadlock() {
+        let mut spmd = two_node();
+        spmd.run(|r| {
+            if r.id() == 0 {
+                r.barrier();
+            }
+        });
+    }
+
+    #[test]
+    fn repeated_runs_continue_the_timeline() {
+        let mut spmd = two_node();
+        let first = spmd.run(|r| {
+            r.barrier();
+            r.now()
+        });
+        let second = spmd.run(|r| {
+            r.barrier();
+            r.now()
+        });
+        assert!(second.results[0] > first.results[0]);
+    }
+}

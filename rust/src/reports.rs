@@ -5,7 +5,8 @@
 use crate::baselines;
 use crate::util::table::{self, f};
 use crate::workloads::{
-    conv::ConvResult, matmul::MatmulResult, sweep::LatencyResults, BandwidthSeries,
+    conv::ConvResult, matmul::MatmulResult, scaleout::ScaleoutCase,
+    scaleout::ScaleoutRow, sweep::LatencyResults, BandwidthSeries,
 };
 
 /// Fig. 5 as CSV (one row per transfer size; PUT/GET column pairs per
@@ -185,6 +186,50 @@ pub fn fig7(matmuls: &[MatmulResult], convs: &[ConvResult]) -> String {
     )
 }
 
+/// Scale-out under concurrent SPMD issue: speedup vs node count, plus
+/// the per-node issue timelines of the largest fabric (the evidence that
+/// ranks issued concurrently rather than in host-call order).
+pub fn scaleout(case: &ScaleoutCase, rows: &[ScaleoutRow]) -> String {
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.nodes.to_string(),
+                f(r.elapsed.as_us(), 1),
+                f(r.speedup, 2),
+                format!("{:.0}%", 100.0 * r.efficiency),
+            ]
+        })
+        .collect();
+    let mut out = format!(
+        "Scale-out (SPMD concurrent issue): {} x {}^3 matmul jobs, {} KiB ring halo/iter\n{}",
+        case.total_jobs,
+        case.mm,
+        case.exchange_bytes >> 10,
+        table::render(
+            &["Nodes", "T (us)", "Speedup", "Efficiency"],
+            &table_rows
+        )
+    );
+    if let Some(last) = rows.last() {
+        out.push_str(&format!(
+            "\nper-node issue timelines ({} nodes):\n",
+            last.nodes
+        ));
+        for rt in &last.ranks {
+            out.push_str(&format!(
+                "  rank {}: {} cmds, first issue {} us, last issue {} us, finish {} us\n",
+                rt.rank,
+                rt.cmds,
+                f(rt.first_issue.unwrap_or_default().as_us(), 2),
+                f(rt.last_issue.unwrap_or_default().as_us(), 2),
+                f(rt.finish.as_us(), 2),
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,5 +287,16 @@ mod tests {
         let t = table4(3813.0);
         assert!(t.contains("3813 MB/s"));
         assert!(t.contains("QSFP+"));
+    }
+
+    #[test]
+    fn scaleout_report_shows_speedups_and_timelines() {
+        use crate::workloads::scaleout as so;
+        let case = so::ScaleoutCase::fast();
+        let rows = so::run_sweep(&[1, 2], &case);
+        let t = scaleout(&case, &rows);
+        assert!(t.contains("Speedup"), "{t}");
+        assert!(t.contains("per-node issue timelines (2 nodes)"), "{t}");
+        assert!(t.contains("rank 0:") && t.contains("rank 1:"), "{t}");
     }
 }

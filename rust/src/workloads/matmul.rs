@@ -5,13 +5,16 @@
 //! N[p][1]); the result lives column-partitioned (node p owns C[0][p],
 //! C[1][p]) — "each FPGA holds sub-matrices of the same column".
 //!
-//! Schedule per node p (all through GASNet AMs + the DLA):
+//! Schedule per node p — run as a true **SPMD program**: each rank
+//! drives its own node through [`crate::program::Spmd`], so the two
+//! hosts issue concurrently and the overlap is *measured*, not assumed:
 //!   1. *Cross partials with ART*: P[i][q] = M[i][p] @ N[p][q] for the
 //!      peer's columns (q = 1-p), ART-streaming the partial sums into the
 //!      peer's C buffers *during* the computation ("the command to
 //!      transfer the partial sum is expressed by setting up the ART").
-//!   2. Wait for the peer's partials to land ("checks if the first
-//!      partial sum is transferred").
+//!   2. Wait for this rank's partials to be delivered ("checks if the
+//!      first partial sum is transferred"), then barrier — the release
+//!      proves the *peer's* partials have landed here too.
 //!   3. *Local accumulate*: C[i][p] = recv_partial + M[i][p] @ N[p][p]
 //!      using the DLA's accumulate mode.
 //!
@@ -23,6 +26,7 @@ use crate::api::Fshmem;
 use crate::config::{Config, Numerics};
 use crate::dla::{ArtConfig, DlaJob, DlaOp, SoftwareBackend, ComputeBackend};
 use crate::memory::GlobalAddr;
+use crate::program::Spmd;
 use crate::sim::{Rng, SimTime};
 
 use super::SegmentAlloc;
@@ -142,24 +146,27 @@ fn layout(cfg: &Config, n: usize) -> NodeLayout {
     }
 }
 
-/// Two-node run. Returns (elapsed, verified).
+/// Two-node run under SPMD issue: one host program per node, both
+/// issuing concurrently through the [`Spmd`] driver. Returns
+/// (elapsed, verified) with elapsed = the slower rank's finish.
 pub fn run_two_node(
     cfg: &Config,
     case: &MatmulCase,
     data: &MatmulData,
 ) -> Result<(SimTime, bool)> {
-    let mut f = Fshmem::new(cfg.clone());
+    let mut spmd = Spmd::new(cfg.clone());
+    assert_eq!(spmd.nodes(), 2, "run_two_node needs a two-node fabric");
     let n = case.n;
     let h32 = (n / 2) as u32;
     let lay = [layout(cfg, n), layout(cfg, n)];
     // Scratch for cross partials P[i][q!=p], before ART ships them.
     let mut scratch = [layout(cfg, n), layout(cfg, n)];
-    for p in 0..2 {
+    for s in scratch.iter_mut() {
         let mut alloc = SegmentAlloc::new(cfg.segment_bytes);
         // Re-allocate past the layout region for scratch.
         let used = 6 * (n / 2) * (n / 2) * 4;
         alloc.alloc(used as u64);
-        scratch[p] = NodeLayout {
+        *s = NodeLayout {
             m_blocks: [0, 0],
             n_blocks: [0, 0],
             c_blocks: [alloc.alloc_f16(n / 2 * n / 2), alloc.alloc_f16(n / 2 * n / 2)],
@@ -170,14 +177,14 @@ pub fn run_two_node(
     if cfg.numerics != Numerics::TimingOnly {
         for p in 0..2usize {
             for i in 0..2usize {
-                f.write_local_f16(
+                spmd.write_local_f16(
                     p as u32,
                     lay[p].m_blocks[i],
                     &MatmulData::block(&data.m, n, i, p),
                 );
             }
             for q in 0..2usize {
-                f.write_local_f16(
+                spmd.write_local_f16(
                     p as u32,
                     lay[p].n_blocks[q],
                     &MatmulData::block(&data.n, n, p, q),
@@ -186,60 +193,64 @@ pub fn run_two_node(
         }
     }
 
-    let t0 = f.now();
-    // Phase 1: cross partials with ART streaming into the peer's C.
-    let mut phase1 = Vec::new();
-    for p in 0..2u32 {
+    let t0 = spmd.now();
+    let case = *case;
+    let lay_ref = &lay;
+    let scratch_ref = &scratch;
+    let report = spmd.run(move |r| {
+        let p = r.id();
         let q = 1 - p; // peer column
+        // Phase 1: cross partials with ART streaming into the peer's C.
+        let mut phase1 = Vec::new();
         for i in 0..2usize {
             let job = DlaJob {
                 op: DlaOp::Matmul {
                     m: h32,
                     k: h32,
                     n: h32,
-                    a: GlobalAddr::new(p, lay[p as usize].m_blocks[i]),
-                    b: GlobalAddr::new(p, lay[p as usize].n_blocks[q as usize]),
-                    y: GlobalAddr::new(p, scratch[p as usize].c_blocks[i]),
+                    a: GlobalAddr::new(p, lay_ref[p as usize].m_blocks[i]),
+                    b: GlobalAddr::new(p, lay_ref[p as usize].n_blocks[q as usize]),
+                    y: GlobalAddr::new(p, scratch_ref[p as usize].c_blocks[i]),
                     accumulate: false,
                 },
                 art: Some(ArtConfig {
                     every_n_results: case.art_every,
-                    dst: GlobalAddr::new(q, lay[q as usize].c_blocks[i]),
+                    dst: GlobalAddr::new(q, lay_ref[q as usize].c_blocks[i]),
                 }),
                 notify: None,
             };
-            phase1.push(f.compute(p, p, job));
+            phase1.push(r.compute(p, job));
         }
-    }
-    f.wait_all(&phase1);
-    // "Check if the partial sum is transferred": wait for ART delivery.
-    let art = f.take_art_ops();
-    for (_, h) in art {
-        f.wait(h);
-    }
+        r.wait_all(&phase1);
+        // "Check if the partial sum is transferred": wait for this
+        // rank's ART deliveries to be acked, then barrier — the release
+        // implies the peer got that far too, so the partials this rank
+        // accumulates onto in phase 2 are in its memory.
+        let art = r.take_art_ops();
+        r.wait_all(&art);
+        r.barrier();
 
-    // Phase 2: local accumulate C[i][p] = recv + M[i][p] @ N[p][p].
-    let mut phase2 = Vec::new();
-    for p in 0..2u32 {
+        // Phase 2: local accumulate C[i][p] = recv + M[i][p] @ N[p][p].
+        let mut phase2 = Vec::new();
         for i in 0..2usize {
             let job = DlaJob {
                 op: DlaOp::Matmul {
                     m: h32,
                     k: h32,
                     n: h32,
-                    a: GlobalAddr::new(p, lay[p as usize].m_blocks[i]),
-                    b: GlobalAddr::new(p, lay[p as usize].n_blocks[p as usize]),
-                    y: GlobalAddr::new(p, lay[p as usize].c_blocks[i]),
+                    a: GlobalAddr::new(p, lay_ref[p as usize].m_blocks[i]),
+                    b: GlobalAddr::new(p, lay_ref[p as usize].n_blocks[p as usize]),
+                    y: GlobalAddr::new(p, lay_ref[p as usize].c_blocks[i]),
                     accumulate: true,
                 },
                 art: None,
                 notify: None,
             };
-            phase2.push(f.compute(p, p, job));
+            phase2.push(r.compute(p, job));
         }
-    }
-    f.wait_all(&phase2);
-    let elapsed = f.now().since(t0);
+        r.wait_all(&phase2);
+    });
+    let elapsed = report.max_finish().since(t0);
 
     // Verification: C[i][p] on node p equals the reference product.
     // Reference inputs are rounded through fp16 (what actually reached
@@ -255,7 +266,7 @@ pub fn run_two_node(
         let hb = n / 2;
         for p in 0..2usize {
             for i in 0..2usize {
-                let got = f.read_shared_f16(p as u32, lay[p].c_blocks[i], hb * hb);
+                let got = spmd.read_shared_f16(p as u32, lay[p].c_blocks[i], hb * hb);
                 let want = MatmulData::block(&expect, n, i, p);
                 for (idx, (a, b)) in got.iter().zip(&want).enumerate() {
                     anyhow::ensure!(

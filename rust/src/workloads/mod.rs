@@ -1,12 +1,14 @@
 //! Experiment workloads: the paper's measurement sweeps (Fig. 5,
-//! Table III) and case studies (Fig. 6/7).
+//! Table III), case studies (Fig. 6/7), and the SPMD scale-out sweep.
 
 pub mod conv;
 pub mod matmul;
+pub mod scaleout;
 pub mod sweep;
 
 pub use conv::{ConvCase, ConvResult};
 pub use matmul::{MatmulCase, MatmulResult};
+pub use scaleout::{ScaleoutCase, ScaleoutRow};
 pub use sweep::{BandwidthSeries, LatencyResults};
 
 /// A simple bump allocator over a node's shared segment — how the

@@ -1,0 +1,170 @@
+//! Scale-out under concurrent issue: speedup vs node count for a
+//! bulk-synchronous PGAS compute+exchange kernel, run as a true SPMD
+//! program (the paper's future-work direction: "a scaled-up server that
+//! contains up to 8 FPGA acceleration cards").
+//!
+//! A fixed amount of DLA work (`total_jobs` equal matmul jobs) is
+//! divided across the fabric; each rank iterates *compute → neighbor
+//! exchange → barrier* on its own issue timeline through
+//! [`crate::program::Spmd`]. T(n) is the slowest rank's finish, so the
+//! reported speedup includes every exposed synchronization and
+//! communication cost — measured under concurrent issue, not projected
+//! from serialized waits.
+
+use crate::config::{Config, Numerics};
+use crate::dla::{DlaJob, DlaOp};
+use crate::memory::GlobalAddr;
+use crate::program::{RankTimeline, Spmd};
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleoutCase {
+    /// Total DLA jobs across the fabric (fixed work — strong scaling).
+    /// Must be divisible by every swept node count.
+    pub total_jobs: u32,
+    /// Matmul dimension of each job (mm x mm x mm).
+    pub mm: u32,
+    /// Bytes each rank pushes to its ring neighbor per iteration.
+    pub exchange_bytes: u64,
+}
+
+impl ScaleoutCase {
+    /// Full sweep: 8 x 512^3 matmul jobs, 32 KiB halo per iteration.
+    pub fn paper() -> Self {
+        ScaleoutCase {
+            total_jobs: 8,
+            mm: 512,
+            exchange_bytes: 32 << 10,
+        }
+    }
+
+    /// Reduced variant for `--fast` runs.
+    pub fn fast() -> Self {
+        ScaleoutCase {
+            total_jobs: 4,
+            mm: 256,
+            exchange_bytes: 16 << 10,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ScaleoutRow {
+    pub nodes: u32,
+    pub elapsed: SimTime,
+    /// T(smallest swept fabric) / T(n), rebased so the 1-node row is 1.0.
+    pub speedup: f64,
+    /// speedup / nodes.
+    pub efficiency: f64,
+    /// Per-rank issue timelines (first/last issue, command count,
+    /// finish) — the concurrent-issue evidence in the report.
+    pub ranks: Vec<RankTimeline>,
+}
+
+/// Run the kernel on an n-node ring; returns (elapsed, rank timelines).
+pub fn run_one(n: u32, case: &ScaleoutCase) -> (SimTime, Vec<RankTimeline>) {
+    assert!(
+        case.total_jobs % n == 0,
+        "total_jobs {} not divisible by {n} nodes",
+        case.total_jobs
+    );
+    let mut spmd = Spmd::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+    let t0 = spmd.now();
+    let case = *case;
+    let report = spmd.run(move |r| {
+        let p = r.id();
+        let n = r.nodes();
+        let jobs_per = case.total_jobs / n;
+        // Per-node tensor strip: A, B, Y, and the neighbor's halo.
+        let elem = case.mm as u64 * case.mm as u64 * 2; // fp16 bytes
+        let (a_off, b_off, y_off, recv_off) = (0, elem, 2 * elem, 3 * elem);
+        for _ in 0..jobs_per {
+            let job = DlaJob {
+                op: DlaOp::Matmul {
+                    m: case.mm,
+                    k: case.mm,
+                    n: case.mm,
+                    a: GlobalAddr::new(p, a_off),
+                    b: GlobalAddr::new(p, b_off),
+                    y: GlobalAddr::new(p, y_off),
+                    accumulate: false,
+                },
+                art: None,
+                notify: None,
+            };
+            let h = r.compute(p, job);
+            r.wait(h);
+            if n > 1 {
+                // Ring halo: push a slab of the result to the right
+                // neighbor (one-sided, overlaps with the peer's own
+                // exchange in the opposite ring direction).
+                let right = (p + 1) % n;
+                let h = r.put_from_mem(
+                    y_off,
+                    case.exchange_bytes,
+                    GlobalAddr::new(right, recv_off),
+                );
+                r.wait(h);
+            }
+            // Bulk-synchronous step boundary.
+            r.barrier();
+        }
+    });
+    (report.max_finish().since(t0), report.rank_timelines())
+}
+
+/// Sweep node counts; speedups are relative to the first (smallest)
+/// count, which callers should make 1 for absolute speedup.
+pub fn run_sweep(node_counts: &[u32], case: &ScaleoutCase) -> Vec<ScaleoutRow> {
+    let mut rows = Vec::new();
+    let mut base: Option<f64> = None;
+    for &n in node_counts {
+        let (elapsed, ranks) = run_one(n, case);
+        let t = elapsed.as_ps() as f64;
+        let b = *base.get_or_insert(t);
+        let speedup = b / t;
+        rows.push(ScaleoutRow {
+            nodes: n,
+            elapsed,
+            speedup,
+            efficiency: speedup / n as f64,
+            ranks,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strong_scaling_improves_with_nodes() {
+        let rows = run_sweep(&[1, 2, 4], &ScaleoutCase::fast());
+        assert_eq!(rows[0].speedup, 1.0);
+        assert!(
+            rows[1].speedup > 1.5,
+            "2-node speedup {} — exchange should mostly hide",
+            rows[1].speedup
+        );
+        assert!(
+            rows[2].speedup > rows[1].speedup,
+            "speedup must grow: {:?}",
+            rows.iter().map(|r| r.speedup).collect::<Vec<_>>()
+        );
+        assert!(rows[2].speedup < 4.0, "sync costs must be exposed");
+    }
+
+    #[test]
+    fn rank_timelines_show_concurrent_issue() {
+        let (_, ranks) = run_one(4, &ScaleoutCase::fast());
+        assert_eq!(ranks.len(), 4);
+        // Symmetric program: every rank issues the same command count.
+        assert!(ranks.iter().all(|r| r.cmds == ranks[0].cmds));
+        // Every rank starts issuing at t=0 (concurrent, not serialized).
+        assert!(ranks
+            .iter()
+            .all(|r| r.first_issue == Some(SimTime::ZERO)));
+        assert!(ranks.iter().all(|r| r.finish > SimTime::ZERO));
+    }
+}

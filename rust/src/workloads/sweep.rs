@@ -48,10 +48,15 @@ impl BandwidthSeries {
 
 fn sweep_config(packet: usize) -> Config {
     // Timing-only: the sweep moves real bytes through the PGAS but does
-    // not run DLA numerics.
+    // not run DLA numerics. Striping is disabled to preserve the paper's
+    // single-cable methodology for the Fig. 5 / Table III curves (PUTs
+    // are pinned to port 0 anyway; GET replies would otherwise stripe
+    // above the threshold). The multi-port fast paths are measured
+    // explicitly by `striping_sweep` and the striped-GET test below.
     Config::two_node_ring()
         .with_packet(packet)
         .with_numerics(Numerics::TimingOnly)
+        .with_stripe_threshold(u64::MAX)
 }
 
 fn measure_put_opt(f: &mut Fshmem, transfer: u64, port: Option<crate::fabric::PortId>) -> f64 {
@@ -264,6 +269,27 @@ mod tests {
         // Saturation by 32 KB: ≥90% of peak (paper: 95%).
         let at_32k = s.at(32768).unwrap().put_mb_s;
         assert!(at_32k / peak > 0.88, "{}", at_32k / peak);
+    }
+
+    #[test]
+    fn striped_get_replies_beat_single_reply() {
+        // Default config: GET replies above the stripe threshold fan out
+        // across both QSFP+ ports on the data holder's side.
+        let mut auto = Fshmem::new(
+            Config::two_node_ring().with_numerics(Numerics::TimingOnly),
+        );
+        let mut off = Fshmem::new(sweep_config(1024)); // striping disabled
+        let fast = measure_get(&mut auto, 1 << 20);
+        let slow = measure_get(&mut off, 1 << 20);
+        assert_eq!(auto.counters().get("gets_striped"), 1, "must stripe");
+        assert_eq!(off.counters().get("gets_striped"), 0);
+        assert!(
+            fast > 1.6 * slow,
+            "striped GET {fast} MB/s vs single-reply {slow} MB/s"
+        );
+        // Below the threshold the default path stays single-message.
+        measure_get(&mut auto, 4096);
+        assert_eq!(auto.counters().get("gets_striped"), 1);
     }
 
     #[test]
