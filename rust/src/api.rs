@@ -362,6 +362,12 @@ impl Fshmem {
         self.core.eng.events_processed()
     }
 
+    /// Per-shard advance statistics when running on the sharded engine
+    /// (`Config::shards != off`); `None` on the monolithic engine.
+    pub fn sharding(&self) -> Option<crate::sim::ShardingReport> {
+        self.core.sharding()
+    }
+
     /// Timestamps of an op: (issued, header_at, data_done, completed).
     pub fn op_times(
         &self,

@@ -12,6 +12,7 @@ use crate::dla::DlaParams;
 use crate::fabric::{LinkParams, Topology};
 use crate::gasnet::GasnetTiming;
 use crate::memory::DmaModel;
+use crate::sim::{ShardPlan, SimTime};
 
 /// How DLA jobs produce numbers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,6 +24,83 @@ pub enum Numerics {
     Software,
     /// AOT Pallas artifacts through PJRT (requires `make artifacts`).
     Pjrt,
+}
+
+/// How the DES engine is partitioned (`shards = auto|N|off` in config
+/// files). `Off` runs the classic monolithic event loop; `Auto` picks
+/// one shard per node up to [`MAX_AUTO_SHARDS`]; `Count(n)` forces
+/// exactly `n` shards (contiguous node groups). The sharded engine is
+/// bit-identical to the monolithic one (`rust/tests/sharded.rs`); the
+/// conservative lookahead is the link propagation delay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSpec {
+    Off,
+    Auto,
+    Count(u32),
+}
+
+/// `Auto` shard-count cap: beyond one shard per node up to this many
+/// shards, window bookkeeping grows without adding partition value for
+/// the fabric sizes the experiments sweep.
+pub const MAX_AUTO_SHARDS: u32 = 8;
+
+impl ShardSpec {
+    /// Parse the `shards = auto|N|off` config value.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "off" => ShardSpec::Off,
+            "auto" => ShardSpec::Auto,
+            _ => {
+                let n: u32 = v
+                    .parse()
+                    .context("shards must be 'auto', 'off', or a positive count")?;
+                if n == 0 {
+                    bail!("shards must be positive (use 'off' to disable sharding)");
+                }
+                ShardSpec::Count(n)
+            }
+        })
+    }
+
+    fn as_cfg_value(&self) -> String {
+        match self {
+            ShardSpec::Off => "off".to_string(),
+            ShardSpec::Auto => "auto".to_string(),
+            ShardSpec::Count(n) => n.to_string(),
+        }
+    }
+}
+
+/// What the user configured for `stripe_threshold`, kept alongside the
+/// resolved byte value so sentinels (`auto`/`off`) survive a
+/// serialize → parse → validate round trip instead of freezing into
+/// whatever bytes they resolved to under the current physical params.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StripeSpec {
+    /// Derive from the link/DMA/timing parameters during validate.
+    Auto,
+    /// Striping disabled (`stripe_threshold == u64::MAX`).
+    Off,
+    /// Explicit threshold in bytes.
+    Bytes(u64),
+}
+
+impl StripeSpec {
+    fn of(bytes: u64) -> Self {
+        match bytes {
+            STRIPE_AUTO => StripeSpec::Auto,
+            u64::MAX => StripeSpec::Off,
+            n => StripeSpec::Bytes(n),
+        }
+    }
+
+    fn as_cfg_value(&self) -> String {
+        match self {
+            StripeSpec::Auto => "auto".to_string(),
+            StripeSpec::Off => "off".to_string(),
+            StripeSpec::Bytes(n) => n.to_string(),
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -53,6 +131,13 @@ pub struct Config {
     /// striping; [`STRIPE_AUTO`] (0) derives the crossover from the link/
     /// DMA/timing parameters during [`Config::validate`].
     pub stripe_threshold: u64,
+    /// What was *configured* for `stripe_threshold` (sentinel-preserving
+    /// record for [`Config::to_cfg_string`]); kept in sync by
+    /// [`Config::with_stripe_threshold`] and the file parser.
+    pub stripe_spec: StripeSpec,
+    /// DES engine partitioning: `off` (monolithic), `auto`, or an
+    /// explicit shard count — see [`ShardSpec`] and [`Config::shard_plan`].
+    pub shards: ShardSpec,
     pub seed: u64,
 }
 
@@ -94,6 +179,10 @@ impl Config {
             // latency-sensitive transfers stay single-message while bulk
             // transfers use both QSFP+ cables.
             stripe_threshold: STRIPE_AUTO,
+            stripe_spec: StripeSpec::Auto,
+            // Monolithic by default: experiments opt into the sharded
+            // engine (equivalence-pinned) via `with_shards` / config.
+            shards: ShardSpec::Off,
             seed: 0xF5113,
         }
     }
@@ -131,7 +220,33 @@ impl Config {
     /// disables, [`STRIPE_AUTO`] re-derives from the physical params).
     pub fn with_stripe_threshold(mut self, bytes: u64) -> Self {
         self.stripe_threshold = bytes;
+        self.stripe_spec = StripeSpec::of(bytes);
         self
+    }
+
+    /// Select the DES engine partitioning (see [`ShardSpec`]).
+    pub fn with_shards(mut self, shards: ShardSpec) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Number of per-shard engines this config resolves to
+    /// (`None` = monolithic).
+    pub fn shard_count(&self) -> Option<u32> {
+        match self.shards {
+            ShardSpec::Off => None,
+            ShardSpec::Auto => Some(self.topology.nodes().clamp(1, MAX_AUTO_SHARDS)),
+            ShardSpec::Count(n) => Some(n),
+        }
+    }
+
+    /// The sharded engine's execution plan: shard count plus the
+    /// conservative lookahead, which is the link propagation delay — no
+    /// event can cross between nodes faster than the wire's flight time
+    /// (serialization, decode, and handler costs only add to it).
+    pub fn shard_plan(&self) -> Option<ShardPlan> {
+        self.shard_count()
+            .map(|s| ShardPlan::new(s, self.topology.nodes(), self.link.propagation))
     }
 
     /// Derive the striping crossover from the physical parameters instead
@@ -219,8 +334,10 @@ impl Config {
                             }
                             n
                         }
-                    }
+                    };
+                    cfg.stripe_spec = StripeSpec::of(cfg.stripe_threshold);
                 }
+                "shards" => cfg.shards = ShardSpec::parse(v)?,
                 "seed" => cfg.seed = v.parse().context("seed")?,
                 _ => bail!("line {}: unknown key {k:?}", lineno + 1),
             }
@@ -261,10 +378,83 @@ impl Config {
         if self.link_loss_permille >= 1000 {
             bail!("link_loss_permille must be < 1000");
         }
+        // Re-sync the sentinel record with a directly-written threshold
+        // field (the builder and the parser keep the pair aligned; raw
+        // field writes are legal and must not make the serializer lie).
+        // An Auto spec stays Auto while the threshold is the sentinel or
+        // its own derived value — the already-validated state.
+        self.stripe_spec = match self.stripe_spec {
+            _ if self.stripe_threshold == STRIPE_AUTO => StripeSpec::Auto,
+            StripeSpec::Auto
+                if self.stripe_threshold == self.derived_stripe_threshold() =>
+            {
+                StripeSpec::Auto
+            }
+            StripeSpec::Bytes(n) if n == self.stripe_threshold => self.stripe_spec,
+            StripeSpec::Off if self.stripe_threshold == u64::MAX => StripeSpec::Off,
+            _ => StripeSpec::of(self.stripe_threshold),
+        };
         if self.stripe_threshold == STRIPE_AUTO {
             self.stripe_threshold = self.derived_stripe_threshold();
         }
+        if let ShardSpec::Count(n) = self.shards {
+            if n == 0 || n > self.topology.nodes() {
+                bail!(
+                    "shards must be in 1..={} for this topology (got {n})",
+                    self.topology.nodes()
+                );
+            }
+        }
+        if self.shards != ShardSpec::Off && self.link.propagation == SimTime::ZERO {
+            bail!(
+                "sharded engine needs positive link propagation \
+                 (it is the conservative lookahead window)"
+            );
+        }
         Ok(())
+    }
+
+    /// Serialize to the INI format [`Config::from_str_cfg`] parses.
+    ///
+    /// Sentinel settings (`stripe_threshold` / `shards` = `auto` / `off`)
+    /// are emitted as their sentinels, not their resolved values, so a
+    /// config survives serialize → parse → validate unchanged — an
+    /// `auto` threshold re-derives against the target's physical params
+    /// instead of freezing the source's bytes. Note the format's
+    /// granularity: the segment is whole MiB and private memory whole
+    /// KiB, matching what the parser can express.
+    pub fn to_cfg_string(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        match self.topology {
+            Topology::Ring(n) => {
+                out.push_str("topology = ring\n");
+                let _ = writeln!(out, "nodes = {n}");
+            }
+            Topology::Mesh2D { w, h } => {
+                out.push_str("topology = mesh\n");
+                let _ = writeln!(out, "mesh_w = {w}\nmesh_h = {h}");
+            }
+            Topology::Torus2D { w, h } => {
+                out.push_str("topology = torus\n");
+                let _ = writeln!(out, "mesh_w = {w}\nmesh_h = {h}");
+            }
+        }
+        let _ = writeln!(out, "packet_payload = {}", self.packet_payload);
+        let _ = writeln!(out, "segment_mb = {}", self.segment_bytes >> 20);
+        let _ = writeln!(out, "private_kb = {}", self.private_bytes >> 10);
+        let numerics = match self.numerics {
+            Numerics::TimingOnly => "timing",
+            Numerics::Software => "software",
+            Numerics::Pjrt => "pjrt",
+        };
+        let _ = writeln!(out, "numerics = {numerics}");
+        let _ = writeln!(out, "artifacts_dir = {}", self.artifacts_dir);
+        let _ = writeln!(out, "link_loss_permille = {}", self.link_loss_permille);
+        let _ = writeln!(out, "stripe_threshold = {}", self.stripe_spec.as_cfg_value());
+        let _ = writeln!(out, "shards = {}", self.shards.as_cfg_value());
+        let _ = writeln!(out, "seed = {}", self.seed);
+        out
     }
 }
 
@@ -329,6 +519,118 @@ mod tests {
         let mut preset = Config::two_node_ring();
         preset.validate().unwrap();
         assert_eq!(preset.stripe_threshold, 64 << 10);
+    }
+
+    #[test]
+    fn shards_parse_and_validate() {
+        let cfg = Config::from_str_cfg("shards = auto\n").unwrap();
+        assert_eq!(cfg.shards, ShardSpec::Auto);
+        assert_eq!(cfg.shard_count(), Some(2), "2-node preset: 1 shard/node");
+        let cfg = Config::from_str_cfg("shards = off\n").unwrap();
+        assert_eq!(cfg.shards, ShardSpec::Off);
+        assert_eq!(cfg.shard_count(), None);
+        let cfg = Config::from_str_cfg("nodes = 4\nshards = 2\n").unwrap();
+        assert_eq!(cfg.shards, ShardSpec::Count(2));
+        assert_eq!(cfg.shard_count(), Some(2));
+        // Auto caps at MAX_AUTO_SHARDS.
+        let mut big = Config::ring(32).with_shards(ShardSpec::Auto);
+        big.validate().unwrap();
+        assert_eq!(big.shard_count(), Some(MAX_AUTO_SHARDS));
+        // Bad values.
+        assert!(Config::from_str_cfg("shards = 0\n").is_err());
+        assert!(Config::from_str_cfg("shards = sideways\n").is_err());
+        assert!(
+            Config::from_str_cfg("nodes = 2\nshards = 3\n").is_err(),
+            "more shards than nodes"
+        );
+        // Sharding leans on the wire's flight time for its lookahead.
+        let mut flat = Config::two_node_ring().with_shards(ShardSpec::Auto);
+        flat.link.propagation = crate::sim::SimTime::ZERO;
+        assert!(flat.validate().is_err());
+    }
+
+    #[test]
+    fn config_round_trips_through_serializer() {
+        // Sentinels survive serialize → parse → validate unchanged: the
+        // emitted file says 'auto'/'off', not the resolved bytes.
+        let mut cfg = Config::mesh(2, 3)
+            .with_packet(512)
+            .with_numerics(Numerics::TimingOnly)
+            .with_link_loss_permille(7)
+            .with_stripe_threshold(STRIPE_AUTO)
+            .with_shards(ShardSpec::Auto);
+        cfg.seed = 4242;
+        cfg.validate().unwrap();
+        let text = cfg.to_cfg_string();
+        assert!(text.contains("stripe_threshold = auto"), "{text}");
+        assert!(text.contains("shards = auto"), "{text}");
+        let back = Config::from_str_cfg(&text).unwrap();
+        assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.packet_payload, cfg.packet_payload);
+        assert_eq!(back.segment_bytes, cfg.segment_bytes);
+        assert_eq!(back.private_bytes, cfg.private_bytes);
+        assert_eq!(back.numerics, cfg.numerics);
+        assert_eq!(back.link_loss_permille, cfg.link_loss_permille);
+        assert_eq!(back.stripe_spec, StripeSpec::Auto);
+        assert_eq!(back.stripe_threshold, cfg.stripe_threshold);
+        assert_eq!(back.shards, ShardSpec::Auto);
+        assert_eq!(back.seed, cfg.seed);
+        // Serialization is a fixed point.
+        assert_eq!(back.to_cfg_string(), text);
+
+        // 'off' sentinels and explicit values survive too.
+        for (stripe, shards) in [
+            (u64::MAX, ShardSpec::Off),
+            (12345, ShardSpec::Count(2)),
+        ] {
+            let mut cfg = Config::two_node_ring()
+                .with_stripe_threshold(stripe)
+                .with_shards(shards);
+            cfg.validate().unwrap();
+            let text = cfg.to_cfg_string();
+            let back = Config::from_str_cfg(&text).unwrap();
+            assert_eq!(back.stripe_threshold, cfg.stripe_threshold);
+            assert_eq!(back.stripe_spec, cfg.stripe_spec);
+            assert_eq!(back.shards, cfg.shards);
+            assert_eq!(back.to_cfg_string(), text);
+        }
+    }
+
+    #[test]
+    fn direct_threshold_writes_resync_the_spec_on_validate() {
+        // Raw field writes (no builder) must not leave the serializer
+        // emitting a stale sentinel.
+        let mut cfg = Config::two_node_ring();
+        cfg.stripe_threshold = 12345; // direct write; spec still Auto
+        cfg.validate().unwrap();
+        assert_eq!(cfg.stripe_spec, StripeSpec::Bytes(12345));
+        assert!(cfg.to_cfg_string().contains("stripe_threshold = 12345"));
+        cfg.stripe_threshold = u64::MAX;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.stripe_spec, StripeSpec::Off);
+        // The resolved-Auto state survives repeated validation.
+        let mut auto = Config::two_node_ring();
+        auto.validate().unwrap();
+        auto.validate().unwrap();
+        assert_eq!(auto.stripe_spec, StripeSpec::Auto);
+        assert!(auto.to_cfg_string().contains("stripe_threshold = auto"));
+    }
+
+    #[test]
+    fn round_trip_rederives_auto_threshold_against_new_params() {
+        // The point of keeping the sentinel: a file written from a
+        // validated config still says 'auto', so parsing it under
+        // different physical parameters re-derives rather than
+        // inheriting stale bytes.
+        let mut cfg = Config::two_node_ring();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.stripe_threshold, 64 << 10, "resolved for D5005");
+        let text = cfg.to_cfg_string();
+        let mut back = Config::from_str_cfg(&text).unwrap();
+        back.link.clock = crate::sim::ClockDomain::from_mhz(125.0);
+        back.stripe_threshold = STRIPE_AUTO; // sentinel spec re-arms
+        back.validate().unwrap();
+        assert!(back.stripe_threshold < 64 << 10, "slower link, lower crossover");
     }
 
     #[test]

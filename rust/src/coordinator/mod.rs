@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::{Config, Numerics};
+use crate::config::{Config, Numerics, ShardSpec};
 use crate::reports;
 use crate::resource;
 use crate::workloads::{conv, matmul, scaleout, sweep};
@@ -30,6 +30,10 @@ pub struct RunOptions {
     pub numerics: Numerics,
     /// Write fig5 CSV here if set.
     pub csv_out: Option<String>,
+    /// DES engine partitioning for the SPMD experiments (case study +
+    /// scale-out). Bit-identical to `off`; `auto` additionally surfaces
+    /// per-shard advance statistics in the scale-out report.
+    pub shards: ShardSpec,
 }
 
 impl Default for RunOptions {
@@ -38,6 +42,7 @@ impl Default for RunOptions {
             fast: false,
             numerics: Numerics::TimingOnly,
             csv_out: None,
+            shards: ShardSpec::Off,
         }
     }
 }
@@ -92,7 +97,15 @@ fn run_comparison() -> Result<String> {
 }
 
 fn run_casestudy(opts: &RunOptions) -> Result<String> {
-    let cfg = Config::two_node_ring().with_numerics(opts.numerics);
+    // The case study runs on the paper's 2-node prototype; cap an
+    // explicit shard count at the fabric size (like the scaleout sweep).
+    let shards = match opts.shards {
+        ShardSpec::Count(c) => ShardSpec::Count(c.min(2)),
+        s => s,
+    };
+    let cfg = Config::two_node_ring()
+        .with_numerics(opts.numerics)
+        .with_shards(shards);
     let mm_sizes: &[usize] = if opts.fast {
         &[256, 512]
     } else {
@@ -120,7 +133,7 @@ fn run_scaleout(opts: &RunOptions) -> Result<String> {
     } else {
         (&[1, 2, 4, 8], scaleout::ScaleoutCase::paper())
     };
-    let rows = scaleout::run_sweep(counts, &case);
+    let rows = scaleout::run_sweep(counts, &case, opts.shards);
     Ok(reports::scaleout(&case, &rows))
 }
 
@@ -157,5 +170,16 @@ mod tests {
         let out = run_experiment("scaleout", &opts).unwrap();
         assert!(out.contains("Speedup"), "{out}");
         assert!(out.contains("per-node issue timelines"), "{out}");
+    }
+
+    #[test]
+    fn scaleout_sharded_reports_advance_stats() {
+        let opts = RunOptions {
+            fast: true,
+            shards: ShardSpec::Auto,
+            ..Default::default()
+        };
+        let out = run_experiment("scaleout", &opts).unwrap();
+        assert!(out.contains("per-shard advance"), "{out}");
     }
 }

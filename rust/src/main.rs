@@ -3,14 +3,14 @@
 //! ```text
 //! fshmem info                         system + artifact status
 //! fshmem bench <experiment> [--fast] [--numerics timing|software|pjrt]
-//!                           [--csv out.csv]
+//!                           [--csv out.csv] [--shards auto|N|off]
 //! fshmem run [--config file.cfg]      demo put/get/AM round trip
 //! fshmem list                         available experiments
 //! ```
 
 use anyhow::{Context, Result};
 
-use fshmem::config::{Config, Numerics};
+use fshmem::config::{Config, Numerics, ShardSpec};
 use fshmem::coordinator::{run_experiment, RunOptions, EXPERIMENTS};
 use fshmem::util::cli::Args;
 use fshmem::Fshmem;
@@ -37,10 +37,15 @@ fn main() -> Result<()> {
                 Some("pjrt") => Numerics::Pjrt,
                 Some(other) => anyhow::bail!("unknown numerics '{other}'"),
             };
+            let shards = match args.opt("shards") {
+                None => ShardSpec::Off,
+                Some(v) => ShardSpec::parse(v)?,
+            };
             let opts = RunOptions {
                 fast: args.flag("fast"),
                 numerics,
                 csv_out: args.opt("csv").map(String::from),
+                shards,
             };
             let report = run_experiment(name, &opts)?;
             println!("{report}");
@@ -65,6 +70,7 @@ usage: fshmem <info|list|bench|run> [options]
   info                      system + artifact status
   list                      available experiments
   bench <name> [--fast] [--numerics timing|software|pjrt] [--csv f.csv]
+               [--shards auto|N|off]   (sharded DES for SPMD experiments)
   run [--config file.cfg]   demo put/get/AM round trip";
 
 fn info() -> Result<()> {

@@ -10,7 +10,7 @@ use crate::dla::{self, DlaJob, DlaOp};
 use crate::gasnet::handlers::{H_ACK, H_PUT};
 use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, OpKind, Payload};
 use crate::memory::{GlobalAddr, NodeId};
-use crate::sim::{Counters, EventQueue, SimTime};
+use crate::sim::{Counters, Sched, SimTime};
 
 use super::{Event, FshmemWorld};
 
@@ -86,7 +86,7 @@ impl FshmemWorld {
         &mut self,
         now: SimTime,
         node: NodeId,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         let dla = &mut self.nodes[node as usize].dla;
@@ -151,7 +151,7 @@ impl FshmemWorld {
         now: SimTime,
         node: NodeId,
         job: DlaJob,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         {

@@ -14,7 +14,7 @@ use crate::dla;
 use crate::gasnet::handlers::{H_BARRIER_ARRIVE, H_COMPUTE, H_GET, H_PUT};
 use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, OpId, Payload};
 use crate::memory::{GlobalAddr, NodeId};
-use crate::sim::{Counters, EventQueue, SimTime};
+use crate::sim::{Counters, Sched, SimTime};
 
 use super::{Event, FshmemWorld, HostCmd};
 
@@ -24,7 +24,7 @@ impl FshmemWorld {
         now: SimTime,
         node: NodeId,
         cmd: HostCmd,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         let t = &self.cfg.timing;
@@ -189,7 +189,7 @@ impl FshmemWorld {
         op: OpId,
         dst: GlobalAddr,
         payload: Payload,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         let ports = self.cfg.topology.equal_cost_ports(node, dst.node());

@@ -67,7 +67,7 @@ use crate::gasnet::{
     Packet, Payload,
 };
 use crate::memory::{GlobalAddr, NodeId, NodeMemory};
-use crate::sim::{Counters, EventQueue, Model, SimTime};
+use crate::sim::{Counters, Model, Sched, SimTime};
 
 /// Host-issued commands (the FSHMEM API surface, post-PCIe).
 #[derive(Debug, Clone)]
@@ -291,7 +291,7 @@ impl Model for FshmemWorld {
         &mut self,
         now: SimTime,
         event: Event,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         match event {
@@ -329,6 +329,31 @@ impl Model for FshmemWorld {
             // -- compute layer -----------------------------------------
             Event::DlaStart { node } => self.on_dla_start(now, node, q, c),
             Event::DlaDone { node, job } => self.on_dla_done(now, node, job, q, c),
+        }
+    }
+
+    /// Shard routing: every event touches exactly one node's component
+    /// state (queues, sequencers, handler engine, memory, DLA, *outgoing*
+    /// link occupancy — links are unidirectional and owned by their
+    /// sending side). The sharded engine partitions the event set by
+    /// this key; cross-node events always ride a wire, so the link
+    /// propagation delay is a sound conservative lookahead.
+    fn shard_node(&self, event: &Event) -> u32 {
+        match *event {
+            Event::HostCmd { node, .. }
+            | Event::TxEnqueue { node, .. }
+            | Event::SeqStart { node, .. }
+            | Event::SeqFree { node, .. }
+            | Event::PacketArrive { node, .. }
+            | Event::PacketLocal { node, .. }
+            | Event::HeaderArrive { node, .. }
+            | Event::HandlerStart { node }
+            | Event::HandlerDone { node, .. }
+            | Event::DlaStart { node }
+            | Event::DlaDone { node, .. } => node,
+            // A replayed packet re-enters the wire at the link's sending
+            // side; the sender's shard owns that link's occupancy state.
+            Event::Retransmit { link, .. } => self.wiring.links[link].0,
         }
     }
 }

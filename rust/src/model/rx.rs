@@ -20,7 +20,7 @@ use crate::gasnet::handlers::{
 };
 use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, Packet, Payload};
 use crate::memory::{GlobalAddr, NodeId};
-use crate::sim::{Counters, EventQueue, SimTime};
+use crate::sim::{Counters, Sched, SimTime};
 
 use super::{Event, FshmemWorld, UserAm};
 
@@ -80,7 +80,7 @@ impl FshmemWorld {
         now: SimTime,
         node: NodeId,
         pkt: &Packet,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) -> bool {
         let src_off = (pkt.args[0] as u64) | ((pkt.args[1] as u64) << 32);
@@ -141,7 +141,7 @@ impl FshmemWorld {
         &mut self,
         now: SimTime,
         node: NodeId,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
     ) {
         let core = &mut self.nodes[node as usize].core;
         if core.handler_busy {
@@ -163,7 +163,7 @@ impl FshmemWorld {
         now: SimTime,
         node: NodeId,
         pkt: Packet,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         let kind = self.nodes[node as usize]

@@ -10,7 +10,7 @@ use crate::fabric::PortId;
 use crate::gasnet::handlers::{H_GET, H_PUT, H_PUT_REPLY};
 use crate::gasnet::{AmCategory, AmKind, OpId, OpKind, Packet};
 use crate::memory::NodeId;
-use crate::sim::{Counters, EventQueue, SimTime};
+use crate::sim::{Counters, Sched, SimTime};
 
 use super::{Event, FshmemWorld};
 
@@ -22,7 +22,7 @@ impl FshmemWorld {
         now: SimTime,
         link: usize,
         pkt: Packet,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         c.incr("pkts_retransmitted");
@@ -44,7 +44,7 @@ impl FshmemWorld {
         node: NodeId,
         port: PortId,
         pkt: Packet,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         // Link-level ARQ (failure injection): a corrupted packet fails its
@@ -109,7 +109,7 @@ impl FshmemWorld {
         now: SimTime,
         node: NodeId,
         pkt: Packet,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         debug_assert_eq!(pkt.dst, node);

@@ -11,7 +11,7 @@ use std::sync::Arc;
 use crate::fabric::PortId;
 use crate::gasnet::{AmMessage, MsgClass, Payload};
 use crate::memory::NodeId;
-use crate::sim::{Counters, EventQueue, SimTime};
+use crate::sim::{Counters, Sched, SimTime};
 
 use super::{Event, FshmemWorld};
 
@@ -23,7 +23,7 @@ impl FshmemWorld {
         port: PortId,
         class: MsgClass,
         msg: AmMessage,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         let kick = self.nodes[node as usize]
@@ -41,7 +41,7 @@ impl FshmemWorld {
         now: SimTime,
         node: NodeId,
         port: PortId,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
     ) {
         let ptx = self.nodes[node as usize].core.port_mut(port);
         ptx.seq_busy = false;
@@ -82,7 +82,7 @@ impl FshmemWorld {
         now: SimTime,
         node: NodeId,
         port: PortId,
-        q: &mut EventQueue<Event>,
+        q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
         let ptx = self.nodes[node as usize].core.port_mut(port);

@@ -30,7 +30,8 @@ pub struct IssueCore {
 }
 
 impl IssueCore {
-    pub fn new(cfg: Config) -> Self {
+    pub fn new(mut cfg: Config) -> Self {
+        cfg.validate().expect("invalid config");
         let addr_map = AddressMap::new(cfg.topology.nodes(), cfg.segment_bytes);
         let mut world = FshmemWorld::new(cfg.clone());
         if cfg.numerics == Numerics::Pjrt {
@@ -38,10 +39,18 @@ impl IssueCore {
                 .expect("loading PJRT backend (run `make artifacts` first)");
             world.set_backend(Box::new(backend));
         }
-        IssueCore {
-            eng: Engine::new(world),
-            addr_map,
-        }
+        // `Config::shards` picks the execution backend; both are
+        // bit-identical (rust/tests/sharded.rs), so front ends never care.
+        let eng = match cfg.shard_plan() {
+            Some(plan) => Engine::new_sharded(world, plan),
+            None => Engine::new(world),
+        };
+        IssueCore { eng, addr_map }
+    }
+
+    /// Per-shard advance statistics (sharded engine only).
+    pub fn sharding(&self) -> Option<crate::sim::ShardingReport> {
+        self.eng.sharding()
     }
 
     pub fn nodes(&self) -> u32 {

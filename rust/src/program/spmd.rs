@@ -16,6 +16,17 @@
 //! local clock set to the simulated time its condition resolved — so a
 //! runnable rank's clock is always >= the engine's current time, and
 //! every `HostCmd` it issues lands in the queue's future.
+//!
+//! Under the sharded engine (`Config::shards`), the advance loop is
+//! where the shard barrier lives: each `eng.step()` runs one event under
+//! the conservative-window discipline (`sim::shard`), and window
+//! boundaries — channel drains + horizon advances — happen inside the
+//! step, between the driver's condition checks. The invariant above
+//! still holds shard-locally: a rank's conditions resolve on events in
+//! its own node's shard (op completions at the initiator, AM deliveries
+//! at the receiver), the engine pauses at that exact event, and the
+//! rank's follow-up commands target its own shard — so they always land
+//! at or after that shard's local clock.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::time::Duration;
@@ -38,7 +49,7 @@ pub struct TimelineEntry {
 }
 
 /// Per-rank summary of an SPMD run (the scale-out report's raw material).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RankTimeline {
     pub rank: u32,
     /// Commands issued (puts, gets, computes, barriers, signals).
@@ -60,6 +71,10 @@ pub struct SpmdReport<R> {
     pub end: SimTime,
     /// Per-rank issue timelines.
     pub timelines: Vec<Vec<TimelineEntry>>,
+    /// Per-shard advance statistics when the fabric runs on the sharded
+    /// engine (`Config::shards != off`); cumulative over the engine's
+    /// lifetime, so repeated `run`s keep accumulating.
+    pub shards: Option<crate::sim::ShardingReport>,
 }
 
 impl<R> SpmdReport<R> {
@@ -278,7 +293,13 @@ impl Spmd {
             finish: ctls.iter().map(|c| c.clock).collect(),
             end,
             timelines: ctls.into_iter().map(|c| c.timeline).collect(),
+            shards: self.core.sharding(),
         }
+    }
+
+    /// Per-shard advance statistics (sharded engine only).
+    pub fn sharding(&self) -> Option<crate::sim::ShardingReport> {
+        self.core.sharding()
     }
 }
 

@@ -226,6 +226,25 @@ pub fn scaleout(case: &ScaleoutCase, rows: &[ScaleoutRow]) -> String {
                 f(rt.finish.as_us(), 2),
             ));
         }
+        if let Some(sh) = &last.shards {
+            out.push_str(&format!(
+                "\nper-shard advance ({} shards, lookahead {}, {} windows):\n",
+                sh.shards.len(),
+                sh.lookahead,
+                sh.windows
+            ));
+            for s in &sh.shards {
+                out.push_str(&format!(
+                    "  shard {} (nodes {}-{}): {} events, {} cross-sent, {} cross-recv\n",
+                    s.shard,
+                    s.first_node,
+                    s.last_node,
+                    s.events,
+                    s.sent_cross,
+                    s.recv_cross,
+                ));
+            }
+        }
     }
     out
 }
@@ -293,10 +312,23 @@ mod tests {
     fn scaleout_report_shows_speedups_and_timelines() {
         use crate::workloads::scaleout as so;
         let case = so::ScaleoutCase::fast();
-        let rows = so::run_sweep(&[1, 2], &case);
+        let rows = so::run_sweep(&[1, 2], &case, crate::config::ShardSpec::Off);
         let t = scaleout(&case, &rows);
         assert!(t.contains("Speedup"), "{t}");
         assert!(t.contains("per-node issue timelines (2 nodes)"), "{t}");
         assert!(t.contains("rank 0:") && t.contains("rank 1:"), "{t}");
+        assert!(!t.contains("per-shard advance"), "{t}");
+    }
+
+    #[test]
+    fn scaleout_report_shows_per_shard_advance_stats() {
+        use crate::workloads::scaleout as so;
+        let case = so::ScaleoutCase::fast();
+        let rows = so::run_sweep(&[2], &case, crate::config::ShardSpec::Auto);
+        let t = scaleout(&case, &rows);
+        assert!(t.contains("per-shard advance (2 shards"), "{t}");
+        assert!(t.contains("shard 0 (nodes 0-0):"), "{t}");
+        assert!(t.contains("shard 1 (nodes 1-1):"), "{t}");
+        assert!(t.contains("windows"), "{t}");
     }
 }

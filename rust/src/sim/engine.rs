@@ -1,14 +1,72 @@
 //! The event loop: pops events in time order and hands them to the model.
+//!
+//! Two execution backends behind one `Engine` interface:
+//!
+//! * **monolithic** — a single fabric-wide [`EventQueue`] (the classic
+//!   sequential DES);
+//! * **sharded** — per-shard queues synchronized by conservative time
+//!   windows ([`super::shard`]), bit-identical to the monolithic backend
+//!   by construction (see that module's docs for the argument and
+//!   `rust/tests/sharded.rs` for the pin).
+//!
+//! Handlers never touch a queue directly: they schedule follow-ups
+//! through a [`Sched`], and the engine routes the batch afterwards —
+//! into the single queue, or across shard queues and inter-shard
+//! channels. Scheduling order assigns the deterministic tie-break
+//! sequence either way, so the two backends order same-instant events
+//! identically.
 
 use super::counters::Counters;
 use super::queue::EventQueue;
+use super::shard::{ShardPlan, ShardingReport, Shards};
 use super::time::SimTime;
+
+/// Deferred scheduler handed to [`Model::handle`]: follow-up events are
+/// buffered in call order and routed by the engine once the handler
+/// returns. Call order is commitment order — ties at one instant pop in
+/// the order they were scheduled, exactly like scheduling straight into
+/// the queue.
+pub struct Sched<E> {
+    now: SimTime,
+    buf: Vec<(SimTime, E)>,
+}
+
+impl<E> Sched<E> {
+    fn new() -> Self {
+        Sched {
+            now: SimTime::ZERO,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Timestamp of the event being handled.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at`. Scheduling in the past is
+    /// a model bug; panics (events must be causally ordered).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        assert!(
+            at >= self.now,
+            "event scheduled in the past: {:?} < {:?}",
+            at,
+            self.now
+        );
+        self.buf.push((at, event));
+    }
+
+    /// Schedule `event` after a delay relative to now.
+    pub fn schedule_after(&mut self, delay: SimTime, event: E) {
+        self.schedule_at(self.now + delay, event);
+    }
+}
 
 /// A simulated system: holds all component state and reacts to events.
 ///
-/// `handle` receives the event plus mutable access to the queue (to
-/// schedule follow-ups) and the counters (to record measurements). The
-/// engine owns the loop; the model owns the semantics.
+/// `handle` receives the event plus a [`Sched`] (to schedule follow-ups)
+/// and the counters (to record measurements). The engine owns the loop;
+/// the model owns the semantics.
 pub trait Model {
     type Event;
 
@@ -16,57 +74,111 @@ pub trait Model {
         &mut self,
         now: SimTime,
         event: Self::Event,
-        queue: &mut EventQueue<Self::Event>,
+        sched: &mut Sched<Self::Event>,
         counters: &mut Counters,
     );
+
+    /// The node whose component state `event` touches — the sharded
+    /// backend's partition key. Models that only ever run monolithic
+    /// keep the default (everything on one shard).
+    fn shard_node(&self, _event: &Self::Event) -> u32 {
+        0
+    }
 }
 
-/// DES engine: an [`EventQueue`] + a [`Model`] + [`Counters`].
+enum Exec<E> {
+    Mono(EventQueue<E>),
+    Sharded(Shards<E>),
+}
+
+/// DES engine: an execution backend + a [`Model`] + [`Counters`].
 pub struct Engine<M: Model> {
     pub model: M,
-    pub queue: EventQueue<M::Event>,
     pub counters: Counters,
+    exec: Exec<M::Event>,
+    sched: Sched<M::Event>,
     events_processed: u64,
 }
 
 impl<M: Model> Engine<M> {
+    /// Monolithic engine: one fabric-wide event queue.
     pub fn new(model: M) -> Self {
         Engine {
             model,
-            queue: EventQueue::new(),
             counters: Counters::new(),
+            exec: Exec::Mono(EventQueue::new()),
+            sched: Sched::new(),
+            events_processed: 0,
+        }
+    }
+
+    /// Sharded engine: per-shard queues under conservative time windows
+    /// (see [`super::shard`]). Bit-identical to [`Engine::new`].
+    pub fn new_sharded(model: M, plan: ShardPlan) -> Self {
+        Engine {
+            model,
+            counters: Counters::new(),
+            exec: Exec::Sharded(Shards::new(plan)),
+            sched: Sched::new(),
             events_processed: 0,
         }
     }
 
     pub fn now(&self) -> SimTime {
-        self.queue.now()
+        match &self.exec {
+            Exec::Mono(q) => q.now(),
+            Exec::Sharded(s) => s.now(),
+        }
     }
 
     pub fn events_processed(&self) -> u64 {
         self.events_processed
     }
 
+    /// Per-shard advance statistics; `None` on the monolithic backend.
+    pub fn sharding(&self) -> Option<ShardingReport> {
+        match &self.exec {
+            Exec::Mono(_) => None,
+            Exec::Sharded(s) => Some(s.report()),
+        }
+    }
+
     /// Inject an event at an absolute time (e.g. a host command arrival).
     pub fn inject_at(&mut self, at: SimTime, event: M::Event) {
-        self.queue.schedule_at(at, event);
+        match &mut self.exec {
+            Exec::Mono(q) => q.schedule_at(at, event),
+            Exec::Sharded(s) => s.inject(&self.model, at, event),
+        }
     }
 
     pub fn inject_now(&mut self, event: M::Event) {
-        self.queue.schedule_at(self.queue.now(), event);
+        let at = self.now();
+        self.inject_at(at, event);
     }
 
     /// Process one event. Returns false when the queue is empty.
     pub fn step(&mut self) -> bool {
-        match self.queue.pop() {
-            Some((now, ev)) => {
-                self.events_processed += 1;
-                self.model
-                    .handle(now, ev, &mut self.queue, &mut self.counters);
-                true
+        let popped = match &mut self.exec {
+            Exec::Mono(q) => q.pop(),
+            Exec::Sharded(s) => s.pop(),
+        };
+        let Some((now, event)) = popped else {
+            return false;
+        };
+        self.events_processed += 1;
+        debug_assert!(self.sched.buf.is_empty());
+        self.sched.now = now;
+        self.model
+            .handle(now, event, &mut self.sched, &mut self.counters);
+        match &mut self.exec {
+            Exec::Mono(q) => {
+                for (at, ev) in self.sched.buf.drain(..) {
+                    q.schedule_at(at, ev);
+                }
             }
-            None => false,
+            Exec::Sharded(s) => s.route(&self.model, self.sched.buf.drain(..)),
         }
+        true
     }
 
     /// Run until the event queue drains. Returns the final simulated time.
@@ -96,7 +208,10 @@ impl<M: Model> Engine<M> {
                 return true;
             }
         }
-        self.queue.is_empty()
+        match &self.exec {
+            Exec::Mono(q) => q.is_empty(),
+            Exec::Sharded(s) => s.is_empty(),
+        }
     }
 }
 
@@ -116,14 +231,14 @@ mod tests {
             &mut self,
             _now: SimTime,
             ev: u32,
-            q: &mut EventQueue<u32>,
+            sched: &mut Sched<u32>,
             c: &mut Counters,
         ) {
             self.fired.push(ev);
             c.incr("fired");
             if self.remaining > 0 {
                 self.remaining -= 1;
-                q.schedule_after(SimTime::from_ns(1), ev + 1);
+                sched.schedule_after(SimTime::from_ns(1), ev + 1);
             }
         }
     }
@@ -140,6 +255,7 @@ mod tests {
         assert_eq!(end, SimTime::from_ns(9));
         assert_eq!(eng.events_processed(), 10);
         assert_eq!(eng.counters.get("fired"), 10);
+        assert!(eng.sharding().is_none(), "monolithic engine");
     }
 
     #[test]
@@ -164,5 +280,35 @@ mod tests {
         let drained = eng.run_bounded(50);
         assert!(!drained);
         assert_eq!(eng.events_processed(), 50);
+    }
+
+    #[test]
+    fn sched_orders_same_instant_by_call_order() {
+        // Two follow-ups at the same instant pop in schedule order —
+        // the deterministic-replay contract both backends share.
+        struct Fan {
+            fired: Vec<u32>,
+        }
+        impl Model for Fan {
+            type Event = u32;
+            fn handle(
+                &mut self,
+                _now: SimTime,
+                ev: u32,
+                sched: &mut Sched<u32>,
+                _c: &mut Counters,
+            ) {
+                self.fired.push(ev);
+                if ev == 0 {
+                    for k in [10, 11, 12] {
+                        sched.schedule_after(SimTime::from_ns(5), k);
+                    }
+                }
+            }
+        }
+        let mut eng = Engine::new(Fan { fired: vec![] });
+        eng.inject_at(SimTime::ZERO, 0);
+        eng.run_to_quiescence();
+        assert_eq!(eng.model.fired, vec![0, 10, 11, 12]);
     }
 }

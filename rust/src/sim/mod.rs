@@ -9,15 +9,23 @@
 //! injected events, the processed event sequence is identical — ties in
 //! time are broken by schedule order (a monotonically increasing sequence
 //! number). The property test suite asserts trace equality across runs.
+//!
+//! Two execution backends share that contract: the monolithic queue and
+//! the sharded backend (`shard` — per-shard queues synchronized by
+//! conservative time windows), which is bit-identical to the monolith
+//! and pinned so by the cross-engine equivalence suite
+//! (`rust/tests/sharded.rs`).
 
 pub mod counters;
 pub mod engine;
 pub mod queue;
 pub mod rng;
+pub mod shard;
 pub mod time;
 
 pub use counters::Counters;
-pub use engine::{Engine, Model};
+pub use engine::{Engine, Model, Sched};
 pub use queue::EventQueue;
 pub use rng::Rng;
+pub use shard::{ShardAdvance, ShardPlan, ShardingReport};
 pub use time::{ClockDomain, SimTime};

@@ -80,6 +80,29 @@ impl<E> EventQueue<E> {
         self.schedule_at(self.now + delay, event);
     }
 
+    /// Schedule with an externally-assigned tie-break sequence number.
+    ///
+    /// The sharded engine (`sim::shard`) assigns sequence numbers from
+    /// one fabric-wide counter *at scheduling time* — even for events
+    /// that sit in an inter-shard channel until the next window boundary
+    /// — so same-instant ties across shard queues break exactly as the
+    /// monolithic queue would break them. A queue must not mix internal
+    /// and external sequence numbers (the engine uses one or the other).
+    pub(crate) fn schedule_at_seq(&mut self, at: SimTime, seq: u64, event: E) {
+        assert!(
+            at >= self.now,
+            "event scheduled in the past: {:?} < {:?}",
+            at,
+            self.now
+        );
+        self.heap.push(Reverse(Scheduled { at, seq, event }));
+    }
+
+    /// Ordering key of the next event without popping: `(time, seq)`.
+    pub(crate) fn peek_key(&self) -> Option<(SimTime, u64)> {
+        self.heap.peek().map(|Reverse(s)| (s.at, s.seq))
+    }
+
     /// Pop the next event, advancing simulated time.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         self.heap.pop().map(|Reverse(s)| {

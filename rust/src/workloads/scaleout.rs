@@ -11,11 +11,11 @@
 //! communication cost — measured under concurrent issue, not projected
 //! from serialized waits.
 
-use crate::config::{Config, Numerics};
+use crate::config::{Config, Numerics, ShardSpec};
 use crate::dla::{DlaJob, DlaOp};
 use crate::memory::GlobalAddr;
 use crate::program::{RankTimeline, Spmd};
-use crate::sim::SimTime;
+use crate::sim::{ShardingReport, SimTime};
 
 #[derive(Debug, Clone, Copy)]
 pub struct ScaleoutCase {
@@ -59,16 +59,36 @@ pub struct ScaleoutRow {
     /// Per-rank issue timelines (first/last issue, command count,
     /// finish) — the concurrent-issue evidence in the report.
     pub ranks: Vec<RankTimeline>,
+    /// Per-shard advance statistics when the sweep ran on the sharded
+    /// engine (`shards != off`).
+    pub shards: Option<ShardingReport>,
 }
 
-/// Run the kernel on an n-node ring; returns (elapsed, rank timelines).
-pub fn run_one(n: u32, case: &ScaleoutCase) -> (SimTime, Vec<RankTimeline>) {
+/// Run the kernel on an n-node ring under the given engine partitioning;
+/// returns (elapsed, rank timelines, per-shard advance stats).
+pub fn run_one(
+    n: u32,
+    case: &ScaleoutCase,
+    shards: ShardSpec,
+) -> (SimTime, Vec<RankTimeline>, Option<ShardingReport>) {
     assert!(
         case.total_jobs % n == 0,
         "total_jobs {} not divisible by {n} nodes",
         case.total_jobs
     );
-    let mut spmd = Spmd::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+    // An explicit shard count is capped by the fabric size, and the
+    // sweep visits fabrics smaller than the largest: clamp per point so
+    // `--shards 4` means "up to 4 shards" instead of panicking on the
+    // 1-node baseline.
+    let shards = match shards {
+        ShardSpec::Count(c) => ShardSpec::Count(c.min(n)),
+        s => s,
+    };
+    let mut spmd = Spmd::new(
+        Config::ring(n)
+            .with_numerics(Numerics::TimingOnly)
+            .with_shards(shards),
+    );
     let t0 = spmd.now();
     let case = *case;
     let report = spmd.run(move |r| {
@@ -110,16 +130,24 @@ pub fn run_one(n: u32, case: &ScaleoutCase) -> (SimTime, Vec<RankTimeline>) {
             r.barrier();
         }
     });
-    (report.max_finish().since(t0), report.rank_timelines())
+    (
+        report.max_finish().since(t0),
+        report.rank_timelines(),
+        report.shards,
+    )
 }
 
 /// Sweep node counts; speedups are relative to the first (smallest)
 /// count, which callers should make 1 for absolute speedup.
-pub fn run_sweep(node_counts: &[u32], case: &ScaleoutCase) -> Vec<ScaleoutRow> {
+pub fn run_sweep(
+    node_counts: &[u32],
+    case: &ScaleoutCase,
+    shards: ShardSpec,
+) -> Vec<ScaleoutRow> {
     let mut rows = Vec::new();
     let mut base: Option<f64> = None;
     for &n in node_counts {
-        let (elapsed, ranks) = run_one(n, case);
+        let (elapsed, ranks, shard_stats) = run_one(n, case, shards);
         let t = elapsed.as_ps() as f64;
         let b = *base.get_or_insert(t);
         let speedup = b / t;
@@ -129,6 +157,7 @@ pub fn run_sweep(node_counts: &[u32], case: &ScaleoutCase) -> Vec<ScaleoutRow> {
             speedup,
             efficiency: speedup / n as f64,
             ranks,
+            shards: shard_stats,
         });
     }
     rows
@@ -140,7 +169,7 @@ mod tests {
 
     #[test]
     fn strong_scaling_improves_with_nodes() {
-        let rows = run_sweep(&[1, 2, 4], &ScaleoutCase::fast());
+        let rows = run_sweep(&[1, 2, 4], &ScaleoutCase::fast(), ShardSpec::Off);
         assert_eq!(rows[0].speedup, 1.0);
         assert!(
             rows[1].speedup > 1.5,
@@ -157,7 +186,8 @@ mod tests {
 
     #[test]
     fn rank_timelines_show_concurrent_issue() {
-        let (_, ranks) = run_one(4, &ScaleoutCase::fast());
+        let (_, ranks, shards) = run_one(4, &ScaleoutCase::fast(), ShardSpec::Off);
+        assert!(shards.is_none(), "monolithic run has no shard stats");
         assert_eq!(ranks.len(), 4);
         // Symmetric program: every rank issues the same command count.
         assert!(ranks.iter().all(|r| r.cmds == ranks[0].cmds));
@@ -166,5 +196,36 @@ mod tests {
             .iter()
             .all(|r| r.first_issue == Some(SimTime::ZERO)));
         assert!(ranks.iter().all(|r| r.finish > SimTime::ZERO));
+    }
+
+    #[test]
+    fn sharded_sweep_is_bit_identical_and_reports_advance_stats() {
+        let case = ScaleoutCase::fast();
+        let (t_off, ranks_off, none) = run_one(4, &case, ShardSpec::Off);
+        let (t_auto, ranks_auto, stats) = run_one(4, &case, ShardSpec::Auto);
+        assert!(none.is_none());
+        assert_eq!(t_off, t_auto, "sharded engine must be bit-identical");
+        assert_eq!(ranks_off, ranks_auto, "per-rank timelines identical");
+        let rep = stats.expect("sharded run reports advance stats");
+        assert_eq!(rep.shards.len(), 4, "auto: one shard per node");
+        assert!(rep.windows > 0, "windows advanced");
+        assert!(rep.shards.iter().all(|s| s.events > 0));
+        let sent: u64 = rep.shards.iter().map(|s| s.sent_cross).sum();
+        let recv: u64 = rep.shards.iter().map(|s| s.recv_cross).sum();
+        assert_eq!(sent, recv, "every channel crossing is drained");
+        assert!(sent > 0, "ring halo + barrier traffic crosses shards");
+    }
+
+    #[test]
+    fn explicit_shard_count_clamps_to_small_sweep_points() {
+        // `--shards 2` must not panic on the 1-node baseline of the
+        // sweep: the count caps at the fabric size per point.
+        let case = ScaleoutCase::fast();
+        let rows = run_sweep(&[1, 2], &case, ShardSpec::Count(2));
+        assert_eq!(rows[0].shards.as_ref().unwrap().shards.len(), 1);
+        assert_eq!(rows[1].shards.as_ref().unwrap().shards.len(), 2);
+        let mono = run_sweep(&[1, 2], &case, ShardSpec::Off);
+        assert_eq!(rows[0].elapsed, mono[0].elapsed);
+        assert_eq!(rows[1].elapsed, mono[1].elapsed);
     }
 }

@@ -333,7 +333,7 @@ fn coordinator_fast_experiments_run() {
     let opts = RunOptions {
         fast: true,
         numerics: Numerics::TimingOnly,
-        csv_out: None,
+        ..Default::default()
     };
     for name in ["latency", "resources", "comparison"] {
         let out = run_experiment(name, &opts).unwrap();

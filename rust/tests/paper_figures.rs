@@ -1,0 +1,107 @@
+//! Paper-figure regression pins on the D5005 preset.
+//!
+//! The reproduction's headline numbers are *measured in simulation* from
+//! calibrated physical parameters — which means a refactor can silently
+//! drift them. These tests pin the paper's published figures as hard
+//! assertions so a drift fails `cargo test` instead of shipping:
+//!
+//! * Fig. 4 / Table III — one-sided operation latency: 0.35 µs remote
+//!   write, 0.59 µs remote read (long messages), pinned at ±5%;
+//! * Fig. 5 — peak communication bandwidth ≥ 95% of the 4000 MB/s
+//!   theoretical datapath maximum (paper: 3813 MB/s = 95.3%), and below
+//!   the 64b/66b line-coding ceiling.
+//!
+//! Every measurement runs on both engines (`shards=off` / `shards=auto`)
+//! and must agree exactly — the calibration path itself is part of the
+//! cross-engine equivalence contract.
+
+use fshmem::config::{Config, Numerics, ShardSpec};
+use fshmem::workloads::sweep;
+use fshmem::Fshmem;
+
+/// The paper's prototype configuration (two D5005 PACs, 1024 B packets),
+/// timing-only numerics.
+fn d5005(shards: ShardSpec) -> Config {
+    Config::two_node_ring()
+        .with_numerics(Numerics::TimingOnly)
+        .with_shards(shards)
+}
+
+/// Measured header latency in µs of a long-message PUT (64 B payload:
+/// long path — read-DMA descriptor + data fetch — without wire-time
+/// domination; the paper's remote-write measurement point).
+fn remote_write_us(shards: ShardSpec) -> f64 {
+    let mut f = Fshmem::new(d5005(shards));
+    let h = f.put(0, f.global_addr(1, 0), &[7u8; 64]);
+    f.wait(h);
+    let (issued, header, _, _) = f.op_times(h);
+    header.expect("header observed").since(issued).as_us()
+}
+
+/// Measured reply-header latency in µs of a long-message GET (128 B).
+fn remote_read_us(shards: ShardSpec) -> f64 {
+    let mut f = Fshmem::new(d5005(shards));
+    let h = f.get(0, f.global_addr(1, 0), 0, 128);
+    f.wait(h);
+    let (issued, header, _, _) = f.op_times(h);
+    header.expect("reply header observed").since(issued).as_us()
+}
+
+#[test]
+fn fig4_remote_write_latency_within_5pct_of_paper() {
+    let paper = 0.35;
+    let off = remote_write_us(ShardSpec::Off);
+    assert!(
+        (off - paper).abs() <= paper * 0.05,
+        "remote write {off:.4} µs drifted beyond ±5% of the paper's {paper} µs"
+    );
+    let auto = remote_write_us(ShardSpec::Auto);
+    assert_eq!(
+        off.to_bits(),
+        auto.to_bits(),
+        "sharded engine changed the calibration measurement"
+    );
+}
+
+#[test]
+fn fig4_remote_read_latency_within_5pct_of_paper() {
+    let paper = 0.59;
+    let off = remote_read_us(ShardSpec::Off);
+    assert!(
+        (off - paper).abs() <= paper * 0.05,
+        "remote read {off:.4} µs drifted beyond ±5% of the paper's {paper} µs"
+    );
+    let auto = remote_read_us(ShardSpec::Auto);
+    assert_eq!(off.to_bits(), auto.to_bits());
+}
+
+#[test]
+fn fig5_peak_bandwidth_at_least_95pct_of_theoretical() {
+    // Single-cable methodology like the paper's Fig. 5: PUTs pinned to
+    // port 0 (measure_put does), GET reply striping disabled.
+    let theoretical = 4000.0; // 128 bit @ 250 MHz
+    let coding_ceiling = theoretical * 64.0 / 66.0; // 64b/66b line coding
+    let run = |shards: ShardSpec| {
+        let mut f = Fshmem::new(d5005(shards).with_stripe_threshold(u64::MAX));
+        let put = sweep::measure_put(&mut f, 2 << 20);
+        let get = sweep::measure_get(&mut f, 2 << 20);
+        (put, get)
+    };
+    let (put, get) = run(ShardSpec::Off);
+    assert!(
+        put >= 0.95 * theoretical,
+        "peak PUT {put:.0} MB/s below 95% of theoretical {theoretical} (paper: 3813)"
+    );
+    assert!(
+        get >= 0.95 * theoretical,
+        "peak GET {get:.0} MB/s below 95% of theoretical {theoretical}"
+    );
+    assert!(
+        put <= coding_ceiling && get <= coding_ceiling,
+        "measured peak exceeds the 64b/66b physical ceiling {coding_ceiling:.0}: \
+         put {put:.0}, get {get:.0}"
+    );
+    let (put_sharded, get_sharded) = run(ShardSpec::Auto);
+    assert_eq!(put.to_bits(), put_sharded.to_bits());
+    assert_eq!(get.to_bits(), get_sharded.to_bits());
+}

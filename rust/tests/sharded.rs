@@ -1,0 +1,390 @@
+//! Cross-engine equivalence: the sharded DES (`shards = auto|N`) must be
+//! **bit-identical** to the monolithic engine (`shards = off`).
+//!
+//! The sharded engine partitions the event set into per-shard queues
+//! synchronized by conservative time windows (`sim::shard`); its
+//! determinism anchor — fabric-wide scheduling seqs + smallest
+//! `(time, seq)` first — makes the executed event sequence provably
+//! equal to the monolith's. These tests pin that equality end to end,
+//! over randomized seeds × topologies (ring/mesh/torus) × programs
+//! (random one-sided traffic, collectives, matmul/conv workloads, ARQ
+//! failure injection): identical traces (every counter and latency
+//! sample, in order), identical per-rank timelines and finish clocks,
+//! identical op timestamps, identical memory, identical completion
+//! times.
+//!
+//! The CI seed matrix re-runs this suite with extra seeds via the
+//! `FSHMEM_EQ_SEED` environment variable.
+
+use fshmem::api::OpHandle;
+use fshmem::collectives;
+use fshmem::config::{Config, Numerics, ShardSpec};
+use fshmem::dla::{DlaJob, DlaOp};
+use fshmem::memory::GlobalAddr;
+use fshmem::program::{Rank, Spmd, TimelineEntry};
+use fshmem::sim::{Rng, SimTime};
+use fshmem::workloads::{conv, matmul};
+use fshmem::Fshmem;
+
+/// Seeds under test: two baked in, plus the CI matrix seed if set.
+fn seeds() -> Vec<u64> {
+    let mut s = vec![0xA11CE, 0x5EED5];
+    if let Ok(v) = std::env::var("FSHMEM_EQ_SEED") {
+        s.push(v.parse().expect("FSHMEM_EQ_SEED must be a u64"));
+    }
+    s
+}
+
+fn timing(cfg: Config) -> Config {
+    cfg.with_numerics(Numerics::TimingOnly)
+}
+
+// ---- the full-trace observable --------------------------------------------
+
+/// Everything observable about a run. `PartialEq` equality here *is* the
+/// bit-identity contract: same counters (including every latency sample,
+/// in series order), same event count, same end time, same per-rank
+/// clocks/timelines, same memory bytes.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    end: SimTime,
+    events: u64,
+    counts: Vec<(&'static str, u64)>,
+    latencies: Vec<(&'static str, Vec<u64>)>,
+    finish: Vec<SimTime>,
+    timelines: Vec<Vec<TimelineEntry>>,
+    mem: Vec<Vec<u8>>,
+}
+
+fn capture<F>(cfg: Config, program: F) -> Trace
+where
+    F: Fn(&mut Rank) + Sync,
+{
+    let mut s = Spmd::new(cfg);
+    let report = s.run(|r| program(r));
+    let n = s.nodes();
+    let mem = (0..n)
+        .map(|node| {
+            let mut m = s.read_shared(node, 0, 0x48_000);
+            m.extend(s.read_shared(node, 0x100_000, 0x30_000));
+            m
+        })
+        .collect();
+    Trace {
+        end: report.end,
+        events: s.events_processed(),
+        counts: s.counters().counts().collect(),
+        latencies: s
+            .counters()
+            .latencies()
+            .map(|(k, v)| (k, v.samples().to_vec()))
+            .collect(),
+        finish: report.finish,
+        timelines: report.timelines,
+        mem,
+    }
+}
+
+fn assert_trace_eq(mono: &Trace, sharded: &Trace, label: &str) {
+    // Field-by-field first for readable failures, then the whole thing.
+    assert_eq!(mono.end, sharded.end, "{label}: final simulated time");
+    assert_eq!(mono.events, sharded.events, "{label}: events processed");
+    assert_eq!(mono.counts, sharded.counts, "{label}: counters");
+    assert_eq!(
+        mono.latencies, sharded.latencies,
+        "{label}: latency series (every sample, in order)"
+    );
+    assert_eq!(mono.finish, sharded.finish, "{label}: per-rank finish clocks");
+    assert_eq!(mono.timelines, sharded.timelines, "{label}: issue timelines");
+    assert_eq!(mono.mem, sharded.mem, "{label}: memory contents");
+    assert_eq!(mono, sharded, "{label}: full trace");
+}
+
+/// Run `program` under `shards=off`, `shards=auto`, and a 2-shard
+/// partition, asserting bit-identical traces.
+fn assert_equivalent<F>(mk_cfg: impl Fn() -> Config, program: F, label: &str)
+where
+    F: Fn(&mut Rank) + Sync,
+{
+    let mono = capture(mk_cfg().with_shards(ShardSpec::Off), &program);
+    let auto = capture(mk_cfg().with_shards(ShardSpec::Auto), &program);
+    assert_trace_eq(&mono, &auto, &format!("{label} [auto]"));
+    // A coarser partition exercises multi-node shards + fewer channels.
+    let nodes = mk_cfg().topology.nodes();
+    if nodes >= 2 {
+        let two = capture(mk_cfg().with_shards(ShardSpec::Count(2)), &program);
+        assert_trace_eq(&mono, &two, &format!("{label} [2 shards]"));
+    }
+}
+
+// ---- randomized SPMD programs ---------------------------------------------
+
+/// A deterministic pseudo-random SPMD program: rounds of mixed one-sided
+/// traffic (puts, zero-copy puts, gets, striping-eligible bulk puts, DLA
+/// jobs, early waits) separated by barriers (lockstep, so random
+/// per-rank op mixes can never deadlock the barrier).
+fn random_program(r: &mut Rank, seed: u64, rounds: u32, ops_per_round: u32) {
+    let me = r.id();
+    let n = r.nodes();
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(me as u64 + 1));
+    let mut pending: Vec<OpHandle> = Vec::new();
+    for _ in 0..rounds {
+        for _ in 0..ops_per_round {
+            let peer = rng.below(n as u64) as u32;
+            match rng.below(6) {
+                0 | 1 => {
+                    // Small-to-medium put into a rank-flavored region
+                    // (overlaps between ranks are fine: bit-identical
+                    // execution implies bit-identical write order).
+                    let len = (64 + rng.below(6 * 1024)) as usize;
+                    let data = vec![(me as u8).wrapping_add(len as u8); len];
+                    let dst = r.global_addr(peer, 0x1000 * (me as u64 + 1) + rng.below(0x800));
+                    pending.push(r.put(dst, &data));
+                }
+                2 => {
+                    // Zero-copy put out of this rank's own segment.
+                    let len = 128 + rng.below(2048);
+                    let dst = r.global_addr(peer, 0x2_0000 + rng.below(0x1000));
+                    pending.push(r.put_from_mem(rng.below(0x4000), len, dst));
+                }
+                3 => {
+                    let len = 64 + rng.below(2048);
+                    let src = r.global_addr(peer, rng.below(0x2000));
+                    pending.push(r.get(src, 0x4_0000 + rng.below(0x1000), len));
+                }
+                4 => {
+                    if rng.below(4) == 0 {
+                        // Striping-eligible bulk put (crosses the 64 KiB
+                        // threshold; fans out over equal-cost ports).
+                        let dst = r.global_addr(peer, 0x10_0000);
+                        pending.push(r.put_from_mem(0, 160 << 10, dst));
+                    } else if let Some(h) = pending.pop() {
+                        r.wait(h);
+                    }
+                }
+                5 => {
+                    if rng.below(4) == 0 {
+                        // A DLA job on a (possibly remote) target; the
+                        // completion ack crosses back over the wire.
+                        let job = DlaJob {
+                            op: DlaOp::Matmul {
+                                m: 32,
+                                k: 32,
+                                n: 32,
+                                a: GlobalAddr::new(peer, 0x20_0000),
+                                b: GlobalAddr::new(peer, 0x20_8000),
+                                y: GlobalAddr::new(peer, 0x21_0000),
+                                accumulate: false,
+                            },
+                            art: None,
+                            notify: None,
+                        };
+                        pending.push(r.compute(peer, job));
+                    } else if let Some(&h) = pending.first() {
+                        r.test(h);
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        r.wait_all(&pending);
+        pending.clear();
+        r.barrier();
+    }
+}
+
+#[test]
+fn equivalence_ring4_random_traffic() {
+    for seed in seeds() {
+        assert_equivalent(
+            || timing(Config::ring(4)),
+            |r| random_program(r, seed, 3, 5),
+            &format!("ring(4) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn equivalence_ring8_random_traffic() {
+    for seed in seeds() {
+        assert_equivalent(
+            || timing(Config::ring(8)),
+            |r| random_program(r, seed, 2, 4),
+            &format!("ring(8) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn equivalence_mesh_random_traffic() {
+    for seed in seeds() {
+        assert_equivalent(
+            || timing(Config::mesh(2, 3)),
+            |r| random_program(r, seed, 2, 4),
+            &format!("mesh(2x3) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn equivalence_torus_random_traffic() {
+    // Torus routing has wraparound + multihop forwarding: the densest
+    // cross-shard channel traffic of the matrix.
+    for seed in seeds() {
+        let mk = || {
+            let mut cfg = timing(Config::mesh(3, 3));
+            cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
+            cfg
+        };
+        assert_equivalent(
+            mk,
+            |r| random_program(r, seed, 2, 3),
+            &format!("torus(3x3) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn equivalence_under_arq_failure_injection() {
+    // Link loss consumes the fault RNG on the wire paths; identical
+    // execution order must reproduce the exact retransmission schedule.
+    for seed in seeds() {
+        assert_equivalent(
+            || timing(Config::ring(4)).with_link_loss_permille(20),
+            |r| random_program(r, seed, 2, 4),
+            &format!("ring(4)+ARQ seed {seed:#x}"),
+        );
+    }
+}
+
+// ---- structured programs ---------------------------------------------------
+
+#[test]
+fn equivalence_collectives_broadcast_allreduce() {
+    let run = |shards: ShardSpec| {
+        let mut s = Spmd::new(timing(Config::ring(5)).with_shards(shards));
+        let sig = s.register_signal(9);
+        for node in 0..5u32 {
+            let v: Vec<f32> = (0..32).map(|i| (node + i) as f32).collect();
+            s.write_local_f16(node, 0, &v);
+        }
+        let report = s.run(move |r| {
+            collectives::spmd::broadcast(r, sig, 0, 0x100, 999);
+            r.barrier();
+            collectives::spmd::allreduce_sum_f16(r, sig, 0, 32, 0x8000);
+            r.now()
+        });
+        let reduced: Vec<Vec<f32>> = (0..5)
+            .map(|node| s.read_shared_f16(node, 0x8000, 32))
+            .collect();
+        (
+            report.results,
+            report.end,
+            s.events_processed(),
+            s.counters().counts().collect::<Vec<_>>(),
+            reduced,
+        )
+    };
+    assert_eq!(run(ShardSpec::Off), run(ShardSpec::Auto));
+    assert_eq!(run(ShardSpec::Off), run(ShardSpec::Count(2)));
+}
+
+#[test]
+fn equivalence_matmul_conv_workloads() {
+    let cfg = |shards| timing(Config::two_node_ring()).with_shards(shards);
+    let case = matmul::MatmulCase::paper(256);
+    let m_off = matmul::run_case(&cfg(ShardSpec::Off), &case).unwrap();
+    let m_auto = matmul::run_case(&cfg(ShardSpec::Auto), &case).unwrap();
+    assert_eq!(m_off.single_node, m_auto.single_node, "matmul 1-node time");
+    assert_eq!(m_off.two_node, m_auto.two_node, "matmul 2-node time");
+    assert_eq!(m_off.speedup.to_bits(), m_auto.speedup.to_bits());
+
+    let case = conv::ConvCase::paper(3);
+    let c_off = conv::run_case(&cfg(ShardSpec::Off), &case).unwrap();
+    let c_auto = conv::run_case(&cfg(ShardSpec::Auto), &case).unwrap();
+    assert_eq!(c_off.single_node, c_auto.single_node, "conv 1-node time");
+    assert_eq!(c_off.two_node, c_auto.two_node, "conv 2-node time");
+    assert_eq!(c_off.speedup.to_bits(), c_auto.speedup.to_bits());
+}
+
+#[test]
+fn equivalence_synchronous_api_op_times() {
+    // The legacy single-issuer front end runs on the same engines; op
+    // timestamp tuples (issued/header/data/completed) must match bit-
+    // for-bit, including the striped fast path.
+    let run = |shards: ShardSpec| {
+        let mut f = Fshmem::new(timing(Config::two_node_ring()).with_shards(shards));
+        let small = f.put(0, f.global_addr(1, 0x100), &[7u8; 512]);
+        f.wait(small);
+        let bulk_data = vec![3u8; 256 << 10];
+        let bulk = f.put(0, f.global_addr(1, 0x1000), &bulk_data);
+        f.wait(bulk);
+        let get = f.get(1, f.global_addr(0, 0x100), 0x8000, 256);
+        f.wait(get);
+        // Striping-eligible GET: the reply legs fan out on the holder's
+        // side and the op completes on the last leg.
+        let big_get = f.get(0, f.global_addr(1, 0x1000), 0x10_0000, 256 << 10);
+        f.wait(big_get);
+        let end = f.run_all();
+        (
+            f.op_times(small),
+            f.op_times(bulk),
+            f.op_times(get),
+            f.op_times(big_get),
+            end,
+            f.events_processed(),
+            f.counters().get("puts_striped"),
+            f.counters().get("gets_striped"),
+        )
+    };
+    assert_eq!(run(ShardSpec::Off), run(ShardSpec::Auto));
+}
+
+// ---- sharded-engine structure ----------------------------------------------
+
+#[test]
+fn every_shard_count_is_equivalent() {
+    let seed = 0xC0FFEE;
+    let mono = capture(timing(Config::ring(6)).with_shards(ShardSpec::Off), |r| {
+        random_program(r, seed, 2, 4)
+    });
+    for count in 1..=6 {
+        let sharded = capture(
+            timing(Config::ring(6)).with_shards(ShardSpec::Count(count)),
+            |r| random_program(r, seed, 2, 4),
+        );
+        assert_trace_eq(&mono, &sharded, &format!("ring(6) {count} shards"));
+    }
+}
+
+#[test]
+fn sharded_run_reports_advance_statistics() {
+    let mut s = Spmd::new(timing(Config::ring(4)).with_shards(ShardSpec::Auto));
+    let report = s.run(|r| {
+        let peer = (r.id() + 1) % r.nodes();
+        let h = r.put(r.global_addr(peer, 0), &[1u8; 4096]);
+        r.wait(h);
+        r.barrier();
+    });
+    let sh = report.shards.expect("sharded engine reports advance stats");
+    assert_eq!(sh.shards.len(), 4, "auto on 4 nodes: one shard per node");
+    assert!(sh.windows > 0, "windows advanced");
+    assert_eq!(
+        sh.lookahead,
+        Config::two_node_ring().link.propagation,
+        "lookahead is the link propagation delay"
+    );
+    assert_eq!(
+        sh.shards.iter().map(|x| x.events).sum::<u64>(),
+        s.events_processed(),
+        "shard event counts partition the run"
+    );
+    let sent: u64 = sh.shards.iter().map(|x| x.sent_cross).sum();
+    let recv: u64 = sh.shards.iter().map(|x| x.recv_cross).sum();
+    assert_eq!(sent, recv, "every channel crossing drained");
+    assert!(sent > 0, "neighbor puts + barrier cross shards");
+    // Monolithic runs report nothing.
+    let mut m = Spmd::new(timing(Config::ring(4)));
+    let rep = m.run(|r| r.barrier());
+    assert!(rep.shards.is_none());
+}
