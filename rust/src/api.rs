@@ -56,13 +56,22 @@ pub struct Fshmem {
     core: IssueCore,
     /// Implicit-handle ops awaiting `nbi_sync`.
     nbi: NbiRegion,
+    /// The single host program's virtual clock: every command issues at
+    /// this time; `wait`/`run_all` advance it to the observed completion
+    /// (plus `Config::host_wake`). Tracking the clock explicitly — not
+    /// reading the engine's cursor — keeps issue timestamps identical
+    /// across engine backends (the threaded backend overshoots its
+    /// cursor to window boundaries).
+    clock: SimTime,
 }
 
 impl Fshmem {
+    /// Build a fabric + synchronous driver from `cfg`.
     pub fn new(cfg: Config) -> Self {
         Fshmem {
             core: IssueCore::new(cfg),
             nbi: NbiRegion::default(),
+            clock: SimTime::ZERO,
         }
     }
 
@@ -78,28 +87,34 @@ impl Fshmem {
 
     // ---- address helpers ------------------------------------------------
 
+    /// Number of fabric nodes.
     pub fn nodes(&self) -> u32 {
         self.core.nodes()
     }
 
+    /// Compose a global address from `(node, offset)`.
     pub fn global_addr(&self, node: NodeId, offset: u64) -> GlobalAddr {
         self.core.global_addr(node, offset)
     }
 
     // ---- untimed host memory staging (PCIe preload path) ----------------
 
+    /// Stage bytes into `node`'s shared segment (untimed preload).
     pub fn write_local(&mut self, node: NodeId, offset: u64, data: &[u8]) {
         self.core.write_local(node, offset, data);
     }
 
+    /// Read bytes from `node`'s shared segment (untimed).
     pub fn read_shared(&self, node: NodeId, offset: u64, len: usize) -> Vec<u8> {
         self.core.read_shared(node, offset, len)
     }
 
+    /// Stage f32 values into `node`'s shared segment (untimed).
     pub fn write_local_f32(&mut self, node: NodeId, offset: u64, data: &[f32]) {
         self.core.write_local_f32(node, offset, data);
     }
 
+    /// Read f32 values from `node`'s shared segment (untimed).
     pub fn read_shared_f32(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
         self.core.read_shared_f32(node, offset, count)
     }
@@ -109,6 +124,7 @@ impl Fshmem {
         self.core.write_local_f16(node, offset, data);
     }
 
+    /// Read fp16 tensor values from `node`'s shared segment (untimed).
     pub fn read_shared_f16(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
         self.core.read_shared_f16(node, offset, count)
     }
@@ -118,7 +134,7 @@ impl Fshmem {
     /// `gasnet_put`: store `data` at `dst`, initiated by `src_node`'s host
     /// command path. Non-blocking; returns a handle.
     pub fn put(&mut self, src_node: NodeId, dst: GlobalAddr, data: &[u8]) -> OpHandle {
-        let at = self.core.now();
+        let at = self.clock;
         self.core.put_at(at, src_node, dst, data, None)
     }
 
@@ -131,7 +147,7 @@ impl Fshmem {
         data: &[u8],
         port: PortId,
     ) -> OpHandle {
-        let at = self.core.now();
+        let at = self.clock;
         self.core.put_at(at, src_node, dst, data, Some(port))
     }
 
@@ -150,11 +166,11 @@ impl Fshmem {
             .world()
             .topology()
             .equal_cost_ports(src_node, dst.node());
-        if ports.len() <= 1 || data.len() < 2 * self.world().cfg.packet_payload {
+        if ports.len() <= 1 || data.len() < 2 * self.world().cfg().packet_payload {
             return vec![self.put(src_node, dst, data)];
         }
         let stripe = data.len().div_ceil(ports.len());
-        let at = self.core.now();
+        let at = self.clock;
         data.chunks(stripe)
             .enumerate()
             .map(|(i, chunk)| {
@@ -178,7 +194,7 @@ impl Fshmem {
         len: u64,
         dst: GlobalAddr,
     ) -> OpHandle {
-        let at = self.core.now();
+        let at = self.clock;
         self.core
             .put_from_mem_at(at, src_node, src_offset, len, dst, None)
     }
@@ -194,7 +210,7 @@ impl Fshmem {
         dst: GlobalAddr,
         port: PortId,
     ) -> OpHandle {
-        let at = self.core.now();
+        let at = self.clock;
         self.core
             .put_from_mem_at(at, src_node, src_offset, len, dst, Some(port))
     }
@@ -208,7 +224,7 @@ impl Fshmem {
         local_offset: u64,
         len: u64,
     ) -> OpHandle {
-        let at = self.core.now();
+        let at = self.clock;
         self.core.get_at(at, node, src, local_offset, len)
     }
 
@@ -227,7 +243,7 @@ impl Fshmem {
         handler: u8,
         args: [u32; 4],
     ) -> OpHandle {
-        let at = self.core.now();
+        let at = self.clock;
         self.core.am_short_at(at, src_node, dst, handler, args)
     }
 
@@ -242,14 +258,15 @@ impl Fshmem {
         data: &[u8],
         private_offset: u64,
     ) -> OpHandle {
-        let at = self.core.now();
+        let at = self.clock;
         self.core
             .am_medium_at(at, src_node, dst, handler, args, data, private_offset)
     }
 
-    /// Drain user AMs delivered so far (API-level handler dispatch).
+    /// Drain user AMs delivered so far (API-level handler dispatch), in
+    /// deterministic (time, node) order.
     pub fn drain_user_ams(&mut self) -> Vec<UserAm> {
-        std::mem::take(&mut self.core.eng.model.user_am_log)
+        self.core.world_mut().drain_user_ams()
     }
 
     // ---- compute (DLA via COMPUTE AM) ------------------------------------
@@ -258,7 +275,7 @@ impl Fshmem {
     /// handle completes when the DLA acks (compute finished; ART chunks
     /// tracked separately).
     pub fn compute(&mut self, host_node: NodeId, target: NodeId, job: DlaJob) -> OpHandle {
-        let at = self.core.now();
+        let at = self.clock;
         self.core.compute_at(at, host_node, target, job)
     }
 
@@ -316,18 +333,26 @@ impl Fshmem {
 
     /// Enter the barrier from every node; returns one handle per node.
     pub fn barrier_all(&mut self) -> Vec<OpHandle> {
-        let at = self.core.now();
+        let at = self.clock;
         (0..self.nodes())
             .map(|node| self.core.barrier_at(at, node))
             .collect()
     }
 
-    /// Block (advance simulated time) until `h` completes.
+    /// Block (advance simulated time) until `h` completes, then advance
+    /// the program clock to the completion time plus `Config::host_wake`
+    /// (the host's completion-observation latency).
     pub fn wait(&mut self, h: OpHandle) {
-        let done = self.core.eng.run_until(|m| m.ops.is_complete(h.0));
+        let done = self.core.run_until(|m| m.op_is_complete(h.0));
         assert!(done, "op {:?} cannot complete (deadlock?)", h);
+        let t = self
+            .core
+            .completed_at(h)
+            .expect("completed op records its time");
+        self.clock = self.clock.max(t + self.core.host_wake());
     }
 
+    /// [`Fshmem::wait`] on every handle, in order.
     pub fn wait_all(&mut self, hs: &[OpHandle]) {
         for &h in hs {
             self.wait(h);
@@ -339,27 +364,34 @@ impl Fshmem {
         self.core.is_complete(h)
     }
 
-    /// Run until the event queue drains; returns final simulated time.
+    /// Run until the event queue drains; returns final simulated time
+    /// (and advances the program clock to it).
     pub fn run_all(&mut self) -> SimTime {
-        self.core.eng.run_to_quiescence()
+        let end = self.core.run_to_quiescence();
+        self.clock = self.clock.max(end);
+        end
     }
 
     // ---- introspection ----------------------------------------------------
 
+    /// Current simulated time (the engine's cursor; see `run_all`).
     pub fn now(&self) -> SimTime {
         self.core.now()
     }
 
+    /// The engine's measurement counters.
     pub fn counters(&self) -> &Counters {
-        &self.core.eng.counters
+        self.core.counters()
     }
 
+    /// The engine's counters, mutably (reset between sweep phases).
     pub fn counters_mut(&mut self) -> &mut Counters {
-        &mut self.core.eng.counters
+        self.core.counters_mut()
     }
 
+    /// Total events handled so far.
     pub fn events_processed(&self) -> u64 {
-        self.core.eng.events_processed()
+        self.core.events_processed()
     }
 
     /// Per-shard advance statistics when running on the sharded engine
@@ -376,24 +408,28 @@ impl Fshmem {
         self.core.op_times(h)
     }
 
+    /// The simulated world (read access).
     pub fn world(&self) -> &FshmemWorld {
-        &self.core.eng.model
+        self.core.world()
     }
 
+    /// The simulated world, mutably.
     pub fn world_mut(&mut self) -> &mut FshmemWorld {
-        &mut self.core.eng.model
+        self.core.world_mut()
     }
 
     /// Drop finished-op bookkeeping (long sweeps).
     pub fn gc_ops(&mut self) {
-        self.core.eng.model.ops.gc();
+        self.core.world_mut().gc_ops();
     }
 
     /// Handles for ART transfers issued by DLA jobs since the last call
     /// (producer node, handle). Waiting on these = "check if the partial
     /// sum is transferred" in the Fig. 6(a) pseudo-code.
     pub fn take_art_ops(&mut self) -> Vec<(NodeId, OpHandle)> {
-        std::mem::take(&mut self.core.eng.model.art_ops)
+        self.core
+            .world_mut()
+            .take_art_ops_all()
             .into_iter()
             .map(|(n, op)| (n, OpHandle(op)))
             .collect()
@@ -476,7 +512,7 @@ mod tests {
         assert_eq!(f.read_shared(1, 0x100, 2000), data);
         assert_eq!(f.read_shared(0, 0x200, 2000), data);
         assert_eq!(f.read_shared(0, 0x8000, 64), vec![7u8; 64]);
-        assert_eq!(f.world().ops.outstanding(), 0);
+        assert_eq!(f.world().ops_outstanding(), 0);
         // Region is closed: a fresh one can open.
         f.nbi_begin();
         f.nbi_sync();

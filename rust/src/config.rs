@@ -44,6 +44,55 @@ pub enum ShardSpec {
 /// the fabric sizes the experiments sweep.
 pub const MAX_AUTO_SHARDS: u32 = 8;
 
+/// Worker threads for the sharded DES (`engine_threads = auto|N|off` in
+/// config files). `Off` keeps the sequential backends (monolithic or
+/// sharded per [`ShardSpec`]); `Auto` uses one worker per shard up to
+/// the machine's available parallelism; `Count(n)` forces up to `n`
+/// workers (clamped to the shard count). Requires `shards != off` and
+/// `host_wake >= link.propagation` (see [`Config::validate`]); the
+/// result is **trace-compatible** with `off` — identical counters, op
+/// timestamps, latency samples, and memory bytes (`rust/tests/parallel.rs`)
+/// — while relaxing only internal event-pop interleavings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThreadSpec {
+    /// Sequential execution (the default).
+    Off,
+    /// One worker per shard, capped at the machine's parallelism.
+    Auto,
+    /// Up to this many workers (clamped to the shard count).
+    Count(u32),
+}
+
+impl ThreadSpec {
+    /// Parse the `engine_threads = auto|N|off` config value.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "off" => ThreadSpec::Off,
+            "auto" => ThreadSpec::Auto,
+            _ => {
+                let n: u32 = v.parse().context(
+                    "engine_threads must be 'auto', 'off', or a positive count",
+                )?;
+                if n == 0 {
+                    bail!(
+                        "engine_threads must be positive \
+                         (use 'off' for sequential execution)"
+                    );
+                }
+                ThreadSpec::Count(n)
+            }
+        })
+    }
+
+    fn as_cfg_value(&self) -> String {
+        match self {
+            ThreadSpec::Off => "off".to_string(),
+            ThreadSpec::Auto => "auto".to_string(),
+            ThreadSpec::Count(n) => n.to_string(),
+        }
+    }
+}
+
 impl ShardSpec {
     /// Parse the `shards = auto|N|off` config value.
     pub fn parse(v: &str) -> Result<Self> {
@@ -138,6 +187,20 @@ pub struct Config {
     /// DES engine partitioning: `off` (monolithic), `auto`, or an
     /// explicit shard count — see [`ShardSpec`] and [`Config::shard_plan`].
     pub shards: ShardSpec,
+    /// Worker threads for the sharded DES: `off` (sequential), `auto`,
+    /// or an explicit count — see [`ThreadSpec`] and
+    /// [`Config::engine_thread_count`]. Requires sharding and
+    /// `host_wake >= link.propagation`.
+    pub engine_threads: ThreadSpec,
+    /// Host completion-observation latency: how long after an op
+    /// completes (or a signal AM is delivered) the waiting host program
+    /// resumes — polling/interrupt cost on the PCIe side. Part of the
+    /// *model* (applied identically by every engine backend). The
+    /// threaded backend requires `host_wake >= link.propagation` so
+    /// resumed programs always inject beyond the open window's horizon
+    /// (`host_wake_ns` in config files; default 0).
+    pub host_wake: SimTime,
+    /// Deterministic seed for every randomized model component.
     pub seed: u64,
 }
 
@@ -183,6 +246,10 @@ impl Config {
             // Monolithic by default: experiments opt into the sharded
             // engine (equivalence-pinned) via `with_shards` / config.
             shards: ShardSpec::Off,
+            // Sequential by default: threaded execution is opt-in (and
+            // requires host_wake >= propagation; see validate).
+            engine_threads: ThreadSpec::Off,
+            host_wake: SimTime::ZERO,
             seed: 0xF5113,
         }
     }
@@ -230,6 +297,20 @@ impl Config {
         self
     }
 
+    /// Select the threaded-execution worker count (see [`ThreadSpec`]).
+    /// Requires sharding and `host_wake >= link.propagation` to
+    /// validate; see [`Config::with_host_wake`].
+    pub fn with_engine_threads(mut self, threads: ThreadSpec) -> Self {
+        self.engine_threads = threads;
+        self
+    }
+
+    /// Set the host completion-observation latency (see the field docs).
+    pub fn with_host_wake(mut self, host_wake: SimTime) -> Self {
+        self.host_wake = host_wake;
+        self
+    }
+
     /// Number of per-shard engines this config resolves to
     /// (`None` = monolithic).
     pub fn shard_count(&self) -> Option<u32> {
@@ -247,6 +328,26 @@ impl Config {
     pub fn shard_plan(&self) -> Option<ShardPlan> {
         self.shard_count()
             .map(|s| ShardPlan::new(s, self.topology.nodes(), self.link.propagation))
+    }
+
+    /// Worker threads the threaded backend will use (`None` =
+    /// sequential execution). `auto` resolves to one worker per shard,
+    /// capped at the machine's available parallelism; an explicit count
+    /// clamps to the shard count (a worker with no shard would idle).
+    /// On a 1-shard fabric `auto` resolves to 1 — a degenerate but valid
+    /// threaded run.
+    pub fn engine_thread_count(&self) -> Option<u32> {
+        let shards = self.shard_count()?;
+        match self.engine_threads {
+            ThreadSpec::Off => None,
+            ThreadSpec::Auto => {
+                let avail = std::thread::available_parallelism()
+                    .map(|n| n.get() as u32)
+                    .unwrap_or(1);
+                Some(shards.min(avail).max(1))
+            }
+            ThreadSpec::Count(n) => Some(n.min(shards).max(1)),
+        }
     }
 
     /// Derive the striping crossover from the physical parameters instead
@@ -338,6 +439,11 @@ impl Config {
                     cfg.stripe_spec = StripeSpec::of(cfg.stripe_threshold);
                 }
                 "shards" => cfg.shards = ShardSpec::parse(v)?,
+                "engine_threads" => cfg.engine_threads = ThreadSpec::parse(v)?,
+                "host_wake_ns" => {
+                    cfg.host_wake =
+                        SimTime::from_ns(v.parse().context("host_wake_ns")?)
+                }
                 "seed" => cfg.seed = v.parse().context("seed")?,
                 _ => bail!("line {}: unknown key {k:?}", lineno + 1),
             }
@@ -411,6 +517,39 @@ impl Config {
                  (it is the conservative lookahead window)"
             );
         }
+        if self.topology.nodes() > 256 {
+            bail!(
+                "fabrics are limited to 256 nodes (op tokens encode the \
+                 owning node in 8 bits)"
+            );
+        }
+        if self.host_wake.as_ps() % 1000 != 0 {
+            bail!(
+                "host_wake must be whole nanoseconds (the config-file key \
+                 host_wake_ns cannot express sub-ns values, and a value \
+                 that changes across serialize -> parse would break the \
+                 round-trip guarantee)"
+            );
+        }
+        if self.engine_threads != ThreadSpec::Off {
+            if self.shards == ShardSpec::Off {
+                bail!(
+                    "engine_threads requires the sharded engine \
+                     (set shards = auto or a count; threads free-run \
+                     per shard)"
+                );
+            }
+            if self.host_wake < self.link.propagation {
+                bail!(
+                    "engine_threads requires host_wake >= link propagation \
+                     ({}): a resumed host program must inject beyond the \
+                     open window's horizon. Set host_wake_ns (identical \
+                     timing under engine_threads = off, so runs stay \
+                     comparable)",
+                    self.link.propagation
+                );
+            }
+        }
         Ok(())
     }
 
@@ -453,6 +592,12 @@ impl Config {
         let _ = writeln!(out, "link_loss_permille = {}", self.link_loss_permille);
         let _ = writeln!(out, "stripe_threshold = {}", self.stripe_spec.as_cfg_value());
         let _ = writeln!(out, "shards = {}", self.shards.as_cfg_value());
+        let _ = writeln!(
+            out,
+            "engine_threads = {}",
+            self.engine_threads.as_cfg_value()
+        );
+        let _ = writeln!(out, "host_wake_ns = {}", self.host_wake.as_ps() / 1000);
         let _ = writeln!(out, "seed = {}", self.seed);
         out
     }
@@ -547,6 +692,91 @@ mod tests {
         let mut flat = Config::two_node_ring().with_shards(ShardSpec::Auto);
         flat.link.propagation = crate::sim::SimTime::ZERO;
         assert!(flat.validate().is_err());
+    }
+
+    #[test]
+    fn engine_threads_parse_and_validate() {
+        // Parsing accepts the three spellings.
+        assert_eq!(ThreadSpec::parse("off").unwrap(), ThreadSpec::Off);
+        assert_eq!(ThreadSpec::parse("auto").unwrap(), ThreadSpec::Auto);
+        assert_eq!(ThreadSpec::parse("3").unwrap(), ThreadSpec::Count(3));
+        assert!(ThreadSpec::parse("0").is_err());
+        assert!(ThreadSpec::parse("many").is_err());
+
+        // engine_threads without sharding is rejected.
+        let mut cfg = Config::ring(4).with_engine_threads(ThreadSpec::Auto);
+        cfg.host_wake = cfg.link.propagation;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("requires the sharded engine"), "{err}");
+
+        // engine_threads without host_wake >= propagation is rejected,
+        // with an actionable message.
+        let mut cfg = Config::ring(4)
+            .with_shards(ShardSpec::Auto)
+            .with_engine_threads(ThreadSpec::Auto);
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("host_wake"), "{err}");
+
+        // The full combination validates.
+        let mut cfg = Config::ring(4)
+            .with_shards(ShardSpec::Auto)
+            .with_engine_threads(ThreadSpec::Auto);
+        cfg.host_wake = cfg.link.propagation;
+        cfg.validate().unwrap();
+        assert!(cfg.engine_thread_count().unwrap() >= 1);
+    }
+
+    #[test]
+    fn engine_thread_count_clamps_and_resolves() {
+        // An explicit count clamps to the shard count.
+        let mut cfg = Config::ring(4)
+            .with_shards(ShardSpec::Count(2))
+            .with_engine_threads(ThreadSpec::Count(16));
+        cfg.host_wake = cfg.link.propagation;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.engine_thread_count(), Some(2), "clamped to shards");
+
+        // Auto on a 1-shard fabric resolves to exactly 1 worker.
+        let mut one = Config::ring(1)
+            .with_shards(ShardSpec::Count(1))
+            .with_engine_threads(ThreadSpec::Auto);
+        one.host_wake = one.link.propagation;
+        one.validate().unwrap();
+        assert_eq!(one.engine_thread_count(), Some(1));
+
+        // Off resolves to None regardless of sharding.
+        let mut off = Config::ring(4).with_shards(ShardSpec::Auto);
+        off.validate().unwrap();
+        assert_eq!(off.engine_thread_count(), None);
+    }
+
+    #[test]
+    fn engine_threads_and_host_wake_round_trip() {
+        let mut cfg = Config::ring(4)
+            .with_shards(ShardSpec::Auto)
+            .with_engine_threads(ThreadSpec::Count(2));
+        cfg.host_wake = crate::sim::SimTime::from_ns(200);
+        cfg.validate().unwrap();
+        let text = cfg.to_cfg_string();
+        assert!(text.contains("engine_threads = 2"), "{text}");
+        assert!(text.contains("host_wake_ns = 200"), "{text}");
+        let back = Config::from_str_cfg(&text).unwrap();
+        assert_eq!(back.engine_threads, ThreadSpec::Count(2));
+        assert_eq!(back.host_wake, cfg.host_wake);
+        assert_eq!(back.to_cfg_string(), text);
+
+        // The 'auto' and 'off' sentinels survive too.
+        let mut auto = Config::ring(4)
+            .with_shards(ShardSpec::Auto)
+            .with_engine_threads(ThreadSpec::Auto);
+        auto.host_wake = auto.link.propagation;
+        auto.validate().unwrap();
+        let text = auto.to_cfg_string();
+        assert!(text.contains("engine_threads = auto"), "{text}");
+        assert_eq!(
+            Config::from_str_cfg(&text).unwrap().engine_threads,
+            ThreadSpec::Auto
+        );
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::{Config, Numerics, ShardSpec};
+use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::reports;
 use crate::resource;
 use crate::workloads::{conv, matmul, scaleout, sweep};
@@ -26,23 +26,30 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
 pub struct RunOptions {
     /// Fast mode: fewer sweep points, timing-only case study.
     pub fast: bool,
-    /// Numerics for the case study.
-    pub numerics: Numerics,
+    /// Numerics override (`None` = each experiment's default: timing
+    /// for the case study and the sequential scale-out sweep, software
+    /// for the threaded scale-out comparison).
+    pub numerics: Option<Numerics>,
     /// Write fig5 CSV here if set.
     pub csv_out: Option<String>,
     /// DES engine partitioning for the SPMD experiments (case study +
     /// scale-out). Bit-identical to `off`; `auto` additionally surfaces
     /// per-shard advance statistics in the scale-out report.
     pub shards: ShardSpec,
+    /// Threaded DES execution for the scale-out experiment: each sweep
+    /// point runs sequential-vs-threaded and reports both wall-clocks
+    /// (trace-compatible — simulated results asserted identical).
+    pub engine_threads: ThreadSpec,
 }
 
 impl Default for RunOptions {
     fn default() -> Self {
         RunOptions {
             fast: false,
-            numerics: Numerics::TimingOnly,
+            numerics: None,
             csv_out: None,
             shards: ShardSpec::Off,
+            engine_threads: ThreadSpec::Off,
         }
     }
 }
@@ -103,8 +110,9 @@ fn run_casestudy(opts: &RunOptions) -> Result<String> {
         ShardSpec::Count(c) => ShardSpec::Count(c.min(2)),
         s => s,
     };
+    let numerics = opts.numerics.unwrap_or(Numerics::TimingOnly);
     let cfg = Config::two_node_ring()
-        .with_numerics(opts.numerics)
+        .with_numerics(numerics)
         .with_shards(shards);
     let mm_sizes: &[usize] = if opts.fast {
         &[256, 512]
@@ -117,7 +125,7 @@ fn run_casestudy(opts: &RunOptions) -> Result<String> {
     }
     let mut cvs = Vec::new();
     for k in [3usize, 5, 7] {
-        let case = if opts.numerics == Numerics::TimingOnly {
+        let case = if numerics == Numerics::TimingOnly {
             conv::ConvCase::paper(k)
         } else {
             conv::ConvCase::reduced(k)
@@ -133,7 +141,18 @@ fn run_scaleout(opts: &RunOptions) -> Result<String> {
     } else {
         (&[1, 2, 4, 8], scaleout::ScaleoutCase::paper())
     };
-    let rows = scaleout::run_sweep(counts, &case, opts.shards);
+    // Numerics default differs by mode: the sequential sweep has always
+    // run timing-only (numerics change nothing about the fabric timing
+    // it measures), while the threaded comparison defaults to software
+    // numerics — on timing-only event streams it would mostly measure
+    // per-window spawn overhead. An explicit --numerics always wins.
+    let numerics = opts.numerics.unwrap_or(if opts.engine_threads != ThreadSpec::Off {
+        Numerics::Software
+    } else {
+        Numerics::TimingOnly
+    });
+    let rows =
+        scaleout::run_sweep(counts, &case, opts.shards, opts.engine_threads, numerics);
     Ok(reports::scaleout(&case, &rows))
 }
 

@@ -14,12 +14,16 @@ use anyhow::Result;
 /// Numerics for the two DLA ops. Tensors are row-major f32 (matmul) and
 /// HWC / HWIO f32 (conv, stride 1, SAME padding).
 ///
-/// Not `Send`: the PJRT client wraps `Rc` internals and the DES engine is
-/// single-threaded by design (determinism contract).
-pub trait ComputeBackend {
+/// Methods take `&self` and implementations must be `Send + Sync`: the
+/// threaded DES backend (`sim::parallel`) calls the backend concurrently
+/// from worker threads (one DLA job per node at a time, each touching
+/// only its own node's memory), so numerics must be pure functions of
+/// their inputs. Backends needing interior state must synchronize it
+/// themselves.
+pub trait ComputeBackend: Send + Sync {
     /// `y = a @ b` (+ `y` if `accumulate`), a: (m,k), b: (k,n), y: (m,n).
     fn matmul(
-        &mut self,
+        &self,
         m: usize,
         k: usize,
         n: usize,
@@ -30,7 +34,7 @@ pub trait ComputeBackend {
 
     /// SAME conv: x (h,w,cin), weights (ksize,ksize,cin,cout) -> (h,w,cout).
     fn conv2d(
-        &mut self,
+        &self,
         h: usize,
         w: usize,
         cin: usize,
@@ -49,7 +53,7 @@ pub struct SoftwareBackend;
 
 impl ComputeBackend for SoftwareBackend {
     fn matmul(
-        &mut self,
+        &self,
         m: usize,
         k: usize,
         n: usize,
@@ -84,7 +88,7 @@ impl ComputeBackend for SoftwareBackend {
     }
 
     fn conv2d(
-        &mut self,
+        &self,
         h: usize,
         w: usize,
         cin: usize,
@@ -142,7 +146,7 @@ mod tests {
 
     #[test]
     fn matmul_identity() {
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
         let eye = vec![1.0, 0.0, 0.0, 1.0];
         let y = be.matmul(2, 2, 2, &a, &eye, None).unwrap();
@@ -151,7 +155,7 @@ mod tests {
 
     #[test]
     fn matmul_known_values() {
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
         let y = be
             .matmul(
@@ -168,7 +172,7 @@ mod tests {
 
     #[test]
     fn matmul_accumulate_seeds_output() {
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         let seed = vec![100.0, 100.0, 100.0, 100.0];
         let y = be
             .matmul(
@@ -185,7 +189,7 @@ mod tests {
 
     #[test]
     fn matmul_rejects_bad_shapes() {
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         assert!(be.matmul(2, 2, 2, &[0.0; 3], &[0.0; 4], None).is_err());
         assert!(be
             .matmul(2, 2, 2, &[0.0; 4], &[0.0; 4], Some(&[0.0; 3]))
@@ -194,7 +198,7 @@ mod tests {
 
     #[test]
     fn conv_1x1_is_channel_mix() {
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         // 1x1 conv with cin=2, cout=1, w = [0.5, 2.0].
         let x = vec![1.0, 10.0, 2.0, 20.0]; // 1x2 spatial, 2 ch
         let wts = vec![0.5, 2.0];
@@ -204,7 +208,7 @@ mod tests {
 
     #[test]
     fn conv_3x3_impulse_recovers_flipped_kernel() {
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         let mut x = vec![0.0; 5 * 5];
         x[2 * 5 + 2] = 1.0; // impulse at center
         let wts: Vec<f32> = (1..=9).map(|v| v as f32).collect();
@@ -218,7 +222,7 @@ mod tests {
     #[test]
     fn conv_matches_matmul_for_1x1_full_channels() {
         // 1x1 conv over (h*w, cin) == matmul (h*w, cin) @ (cin, cout).
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         let (h, w, cin, cout) = (3usize, 4, 5, 6);
         let mut rng = crate::sim::Rng::new(5);
         let mut x = vec![0.0f32; h * w * cin];

@@ -22,6 +22,6 @@ pub mod wire;
 
 pub use core::{GasnetCore, MsgClass};
 pub use handlers::{HandlerId, HandlerKind, HandlerTable};
-pub use ops::{OpId, OpKind, OpTracker};
+pub use ops::{op_owner, OpId, OpKind, OpState, OpTracker};
 pub use timing::GasnetTiming;
 pub use wire::{AmCategory, AmKind, AmMessage, Packet, Payload, WIRE_HEADER_BYTES};

@@ -4,26 +4,77 @@
 //! state `gasnet_put/get` need: for each outstanding op we record command
 //! issue, remote header arrival (the paper's PUT latency end-point),
 //! data completion, and ack receipt (what a blocking `wait` observes).
+//!
+//! ## Ownership and id layout
+//!
+//! Each node owns one `OpTracker` (it lives in the node's model state):
+//! an op belongs to the node that issued it, and every mutation of an
+//! op's state happens either in that node's own event handlers (ACKs,
+//! reply legs, barrier releases all arrive back at the initiator) or via
+//! an `OpSignal` event routed to the owner (remote-side observations:
+//! PUT data landing, header fronts, striped-GET part counts). That
+//! single-owner rule is what lets the threaded engine mutate op state
+//! without locks.
+//!
+//! An [`OpId`] encodes its owner so any layer can route by token alone:
+//!
+//! ```text
+//!   bit 31      origin: 0 = host-issued, 1 = autonomous (handler-issued,
+//!               e.g. ART chunk transfers) — separate counter spaces, so
+//!               driver issue order and handler issue order never race
+//!   bits 30-23  owner node (fabrics up to 256 nodes)
+//!   bits 22-0   per-(node, origin) counter
+//! ```
+//!
+//! Ids assigned this way are identical across execution backends: the
+//! driver issues per node in program order, and handlers issue per node
+//! in that node's (deterministic) event order.
 
 use std::collections::BTreeMap;
 
 use crate::sim::SimTime;
 
+/// Operation token; see the module docs for the bit layout.
 pub type OpId = u32;
 
+const ORIGIN_BIT: u32 = 1 << 31;
+const NODE_SHIFT: u32 = 23;
+const CTR_MASK: u32 = (1 << NODE_SHIFT) - 1;
+
+/// The node that issued (and owns) `id`.
+pub fn op_owner(id: OpId) -> u32 {
+    (id & !ORIGIN_BIT) >> NODE_SHIFT
+}
+
+fn compose(auto: bool, node: u32, ctr: u32) -> OpId {
+    debug_assert!(node < 256, "OpId encodes 8 node bits");
+    assert!(ctr <= CTR_MASK, "node {node} exhausted its op-id space");
+    (if auto { ORIGIN_BIT } else { 0 }) | (node << NODE_SHIFT) | ctr
+}
+
+/// What kind of operation a token tracks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpKind {
+    /// One-sided `gasnet_put`.
     Put,
+    /// One-sided `gasnet_get`.
     Get,
+    /// `gasnet_AMRequest*` (completes on remote delivery).
     AmRequest,
+    /// Fabric barrier (completes on the release reaching the issuer).
     Barrier,
+    /// DLA job dispatch (completes on the job-done ack).
     Compute,
 }
 
+/// Lifecycle record of one operation.
 #[derive(Debug, Clone)]
 pub struct OpState {
+    /// What kind of operation this is.
     pub kind: OpKind,
+    /// When the host issued the command.
     pub issued: SimTime,
+    /// Total payload bytes the op moves.
     pub bytes: u64,
     /// Payload bytes that have completed the data leg so far.
     pub bytes_done: u64,
@@ -42,26 +93,31 @@ pub struct OpState {
 }
 
 impl OpState {
+    /// True once the initiator observed completion.
     pub fn is_complete(&self) -> bool {
         self.completed_at.is_some()
     }
 }
 
-/// Token-indexed table of outstanding and finished operations.
+/// Token-indexed table of one node's outstanding and finished operations.
 #[derive(Debug, Default)]
 pub struct OpTracker {
-    next: OpId,
+    node: u32,
+    next_host: u32,
+    next_auto: u32,
     ops: BTreeMap<OpId, OpState>,
 }
 
 impl OpTracker {
-    pub fn new() -> Self {
-        Self::default()
+    /// The tracker for `node`'s operations.
+    pub fn new(node: u32) -> Self {
+        OpTracker {
+            node,
+            ..Self::default()
+        }
     }
 
-    pub fn issue(&mut self, kind: OpKind, now: SimTime, bytes: u64) -> OpId {
-        let id = self.next;
-        self.next += 1;
+    fn insert(&mut self, id: OpId, kind: OpKind, now: SimTime, bytes: u64) -> OpId {
         self.ops.insert(
             id,
             OpState {
@@ -78,6 +134,22 @@ impl OpTracker {
         id
     }
 
+    /// Issue a host-originated op (driver context).
+    pub fn issue(&mut self, kind: OpKind, now: SimTime, bytes: u64) -> OpId {
+        let id = compose(false, self.node, self.next_host);
+        self.next_host += 1;
+        self.insert(id, kind, now, bytes)
+    }
+
+    /// Issue an autonomously-originated op (handler context — ART chunk
+    /// transfers). A separate counter space from [`OpTracker::issue`], so
+    /// driver and handler issue orders never interleave on one counter.
+    pub fn issue_auto(&mut self, kind: OpKind, now: SimTime, bytes: u64) -> OpId {
+        let id = compose(true, self.node, self.next_auto);
+        self.next_auto += 1;
+        self.insert(id, kind, now, bytes)
+    }
+
     /// Declare that `id` completes only after `parts` completion events
     /// (set by the model when it stripes one op across several ports).
     pub fn set_parts(&mut self, id: OpId, parts: u32) {
@@ -88,10 +160,12 @@ impl OpTracker {
         }
     }
 
+    /// The state of `id`, if tracked (and not yet garbage-collected).
     pub fn get(&self, id: OpId) -> Option<&OpState> {
         self.ops.get(&id)
     }
 
+    /// Record the first header-front observation for `id`.
     pub fn header_arrived(&mut self, id: OpId, now: SimTime) {
         if let Some(op) = self.ops.get_mut(&id) {
             op.header_at.get_or_insert(now);
@@ -112,6 +186,7 @@ impl OpTracker {
         false
     }
 
+    /// Deliver one completion event for `id` (the last one completes it).
     pub fn complete(&mut self, id: OpId, now: SimTime) {
         if let Some(op) = self.ops.get_mut(&id) {
             if op.parts > 1 {
@@ -125,10 +200,12 @@ impl OpTracker {
         }
     }
 
+    /// True once `id` completed (false for unknown/gc'ed ids).
     pub fn is_complete(&self, id: OpId) -> bool {
         self.ops.get(&id).map(|o| o.is_complete()).unwrap_or(false)
     }
 
+    /// Number of tracked-but-incomplete ops.
     pub fn outstanding(&self) -> usize {
         self.ops.values().filter(|o| !o.is_complete()).count()
     }
@@ -145,7 +222,7 @@ mod tests {
 
     #[test]
     fn lifecycle() {
-        let mut t = OpTracker::new();
+        let mut t = OpTracker::new(0);
         let id = t.issue(OpKind::Put, SimTime::from_ns(100), 1024);
         assert!(!t.is_complete(id));
         t.header_arrived(id, SimTime::from_ns(300));
@@ -160,7 +237,7 @@ mod tests {
 
     #[test]
     fn header_records_first_only() {
-        let mut t = OpTracker::new();
+        let mut t = OpTracker::new(0);
         let id = t.issue(OpKind::Get, SimTime::ZERO, 64);
         t.header_arrived(id, SimTime::from_ns(10));
         t.header_arrived(id, SimTime::from_ns(20));
@@ -169,7 +246,7 @@ mod tests {
 
     #[test]
     fn zero_byte_op_data_done_on_complete() {
-        let mut t = OpTracker::new();
+        let mut t = OpTracker::new(0);
         let id = t.issue(OpKind::AmRequest, SimTime::ZERO, 0);
         t.complete(id, SimTime::from_ns(5));
         assert_eq!(t.get(id).unwrap().data_done_at, Some(SimTime::from_ns(5)));
@@ -177,7 +254,7 @@ mod tests {
 
     #[test]
     fn outstanding_and_gc() {
-        let mut t = OpTracker::new();
+        let mut t = OpTracker::new(0);
         let a = t.issue(OpKind::Put, SimTime::ZERO, 1);
         let _b = t.issue(OpKind::Put, SimTime::ZERO, 1);
         assert_eq!(t.outstanding(), 2);
@@ -190,7 +267,7 @@ mod tests {
 
     #[test]
     fn multipart_completes_on_last_ack() {
-        let mut t = OpTracker::new();
+        let mut t = OpTracker::new(0);
         let id = t.issue(OpKind::Put, SimTime::ZERO, 2048);
         t.set_parts(id, 3);
         t.complete(id, SimTime::from_ns(10));
@@ -202,14 +279,24 @@ mod tests {
     }
 
     #[test]
-    fn ids_are_unique_and_monotonic() {
-        let mut t = OpTracker::new();
-        let ids: Vec<_> = (0..10)
-            .map(|_| t.issue(OpKind::Put, SimTime::ZERO, 0))
-            .collect();
+    fn ids_encode_owner_and_origin() {
+        let mut t3 = OpTracker::new(3);
+        let host = t3.issue(OpKind::Put, SimTime::ZERO, 0);
+        let auto = t3.issue_auto(OpKind::Compute, SimTime::ZERO, 0);
+        assert_eq!(op_owner(host), 3);
+        assert_eq!(op_owner(auto), 3);
+        assert_ne!(host, auto, "separate counter spaces");
+        // Ids are unique per tracker across both origins.
+        let mut ids: Vec<OpId> = (0..10).map(|_| t3.issue(OpKind::Put, SimTime::ZERO, 0)).collect();
+        ids.extend((0..10).map(|_| t3.issue_auto(OpKind::Put, SimTime::ZERO, 0)));
+        ids.push(host);
+        ids.push(auto);
         let mut sorted = ids.clone();
         sorted.sort_unstable();
         sorted.dedup();
-        assert_eq!(sorted.len(), 10);
+        assert_eq!(sorted.len(), ids.len());
+        // Different nodes never collide.
+        let mut t4 = OpTracker::new(4);
+        assert_ne!(t4.issue(OpKind::Put, SimTime::ZERO, 0), host);
     }
 }

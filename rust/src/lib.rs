@@ -33,6 +33,11 @@
 //! assert_eq!(f.read_shared(1, 0x2000, 4096), src);
 //! ```
 
+// The user-facing layers carry a documentation guarantee: every public
+// item in `sim`, `program`, and `api` is documented, and CI runs
+// `cargo doc --no-deps` with warnings denied to keep it that way (see
+// rust/docs/config.md for the configuration reference).
+#[warn(missing_docs)]
 pub mod api;
 pub mod baselines;
 pub mod collectives;
@@ -43,10 +48,12 @@ pub mod fabric;
 pub mod gasnet;
 pub mod memory;
 pub mod model;
+#[warn(missing_docs)]
 pub mod program;
 pub mod reports;
 pub mod resource;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod sim;
 pub mod util;
 pub mod workloads;

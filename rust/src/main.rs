@@ -4,13 +4,14 @@
 //! fshmem info                         system + artifact status
 //! fshmem bench <experiment> [--fast] [--numerics timing|software|pjrt]
 //!                           [--csv out.csv] [--shards auto|N|off]
+//!                           [--engine-threads auto|N|off]
 //! fshmem run [--config file.cfg]      demo put/get/AM round trip
 //! fshmem list                         available experiments
 //! ```
 
 use anyhow::{Context, Result};
 
-use fshmem::config::{Config, Numerics, ShardSpec};
+use fshmem::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use fshmem::coordinator::{run_experiment, RunOptions, EXPERIMENTS};
 use fshmem::util::cli::Args;
 use fshmem::Fshmem;
@@ -32,20 +33,26 @@ fn main() -> Result<()> {
                 .map(|s| s.as_str())
                 .unwrap_or("all");
             let numerics = match args.opt("numerics") {
-                None | Some("timing") => Numerics::TimingOnly,
-                Some("software") => Numerics::Software,
-                Some("pjrt") => Numerics::Pjrt,
+                None => None,
+                Some("timing") => Some(Numerics::TimingOnly),
+                Some("software") => Some(Numerics::Software),
+                Some("pjrt") => Some(Numerics::Pjrt),
                 Some(other) => anyhow::bail!("unknown numerics '{other}'"),
             };
             let shards = match args.opt("shards") {
                 None => ShardSpec::Off,
                 Some(v) => ShardSpec::parse(v)?,
             };
+            let engine_threads = match args.opt("engine-threads") {
+                None => ThreadSpec::Off,
+                Some(v) => ThreadSpec::parse(v)?,
+            };
             let opts = RunOptions {
                 fast: args.flag("fast"),
                 numerics,
                 csv_out: args.opt("csv").map(String::from),
                 shards,
+                engine_threads,
             };
             let report = run_experiment(name, &opts)?;
             println!("{report}");
@@ -70,7 +77,9 @@ usage: fshmem <info|list|bench|run> [options]
   info                      system + artifact status
   list                      available experiments
   bench <name> [--fast] [--numerics timing|software|pjrt] [--csv f.csv]
-               [--shards auto|N|off]   (sharded DES for SPMD experiments)
+               [--shards auto|N|off]          (sharded DES for SPMD experiments)
+               [--engine-threads auto|N|off]  (scaleout: run the threaded DES
+                                               and report seq-vs-par wall-clock)
   run [--config file.cfg]   demo put/get/AM round trip";
 
 fn info() -> Result<()> {

@@ -5,6 +5,11 @@
 //! chunk PUTs that stream partial results to a peer *during* the
 //! computation — striped round-robin across all equal-cost ports, which
 //! is how the paper's case study keeps both QSFP+ cables busy.
+//!
+//! Numerics run through the shared [`crate::dla::ComputeBackend`] — a
+//! pure function of its inputs, callable concurrently from worker
+//! threads under the threaded engine (each job reads and writes only its
+//! own node's memory).
 
 use crate::dla::{self, DlaJob, DlaOp};
 use crate::gasnet::handlers::{H_ACK, H_PUT};
@@ -12,9 +17,9 @@ use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, OpKind, Payload};
 use crate::memory::{GlobalAddr, NodeId};
 use crate::sim::{Counters, Sched, SimTime};
 
-use super::{Event, FshmemWorld};
+use super::{Event, Wv};
 
-impl FshmemWorld {
+impl Wv<'_> {
     /// Execute job numerics immediately (timing handled by DlaDone/ART
     /// events; doing the arithmetic up-front means ART chunk reads see
     /// final data — safe because nothing may read the output region
@@ -24,10 +29,13 @@ impl FshmemWorld {
     /// numerics run in f32 (the PE accumulators are wide) and results
     /// round back through fp16 on store.
     fn run_numerics(&mut self, node: NodeId, op: &DlaOp) {
-        let Some(backend) = self.backend.as_mut() else {
+        // Copy the shared reference out first: the backend's lifetime is
+        // the world's, independent of the &mut self borrow below.
+        let sh = self.sh;
+        let Some(backend) = sh.backend.as_deref() else {
             return;
         };
-        let mem = &mut self.nodes[node as usize].mem;
+        let mem = &mut self.node_mut(node).mem;
         match *op {
             DlaOp::Matmul {
                 m,
@@ -89,14 +97,17 @@ impl FshmemWorld {
         q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
-        let dla = &mut self.nodes[node as usize].dla;
-        if dla.busy {
-            return;
-        }
-        let Some(job) = dla.queue.pop_front() else {
-            return;
+        let job = {
+            let dla = &mut self.node_mut(node).dla;
+            if dla.busy {
+                return;
+            }
+            let Some(job) = dla.queue.pop_front() else {
+                return;
+            };
+            dla.busy = true;
+            job
         };
-        dla.busy = true;
         c.incr("dla_jobs_started");
 
         // Numerics now (see run_numerics doc for why this is safe).
@@ -105,14 +116,25 @@ impl FshmemWorld {
         // ART: plan chunk PUTs entering the Compute class as results
         // become valid.
         if let Some(art) = &job.art {
-            let chunks = dla::art::plan(&self.cfg.dla, &job.op, art);
+            let chunks = dla::art::plan(&self.cfg().dla, &job.op, art);
             let y = job.op.output_addr();
             // Stripe chunks round-robin over all minimal-hop ports (both
             // QSFP+ cables of the 2-node ring).
-            let ports = self.cfg.topology.equal_cost_ports(node, art.dst.node());
+            let ports = self.cfg().topology.equal_cost_ports(node, art.dst.node());
             for (ci, ch) in chunks.into_iter().enumerate() {
-                let op = self.ops.issue(OpKind::Compute, now + ch.ready_at, ch.bytes);
-                self.art_ops.push((node, op));
+                // ART transfers issue autonomously from handler context:
+                // the producing node owns the op (separate id space from
+                // driver-issued ops — see gasnet::ops).
+                let op = {
+                    let owner = self.node_mut(node);
+                    let op = owner.ops.issue_auto(
+                        OpKind::Compute,
+                        now + ch.ready_at,
+                        ch.bytes,
+                    );
+                    owner.art_ops.push(op);
+                    op
+                };
                 let msg = AmMessage {
                     kind: AmKind::Request,
                     category: AmCategory::Long,
@@ -142,7 +164,7 @@ impl FshmemWorld {
             }
         }
 
-        let dur = self.cfg.dla.job_time(&job.op);
+        let dur = self.cfg().dla.job_time(&job.op);
         q.schedule_at(now + dur, Event::DlaDone { node, job });
     }
 
@@ -154,10 +176,11 @@ impl FshmemWorld {
         q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
+        let macs = self.cfg().dla.macs(&job.op);
         {
-            let dla = &mut self.nodes[node as usize].dla;
+            let dla = &mut self.node_mut(node).dla;
             dla.busy = false;
-            dla.macs_done += self.cfg.dla.macs(&job.op);
+            dla.macs_done += macs;
         }
         c.incr("dla_jobs_done");
         if let Some((notify_node, token)) = job.notify {
@@ -172,7 +195,7 @@ impl FshmemWorld {
                 args: [0; 4],
                 payload: Payload::None,
             };
-            let port = self.cfg.topology.out_port(node, notify_node, None);
+            let port = self.cfg().topology.out_port(node, notify_node, None);
             q.schedule_at(
                 now,
                 Event::TxEnqueue {
@@ -183,7 +206,7 @@ impl FshmemWorld {
                 },
             );
         }
-        if !self.nodes[node as usize].dla.queue.is_empty() {
+        if !self.node(node).dla.queue.is_empty() {
             q.schedule_at(now, Event::DlaStart { node });
         }
     }

@@ -16,9 +16,9 @@ use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, OpId, Payload};
 use crate::memory::{GlobalAddr, NodeId};
 use crate::sim::{Counters, Sched, SimTime};
 
-use super::{Event, FshmemWorld, HostCmd};
+use super::{Event, HostCmd, Wv};
 
-impl FshmemWorld {
+impl Wv<'_> {
     pub(super) fn on_host_cmd(
         &mut self,
         now: SimTime,
@@ -27,10 +27,10 @@ impl FshmemWorld {
         q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
-        let t = &self.cfg.timing;
+        let t = &self.cfg().timing;
         let at = now + t.cmd_ingress() + t.tx_sched();
         c.incr("host_cmds");
-        let topo = self.cfg.topology;
+        let topo = self.cfg().topology;
         let (port, class, msg) = match cmd {
             HostCmd::Put {
                 op,
@@ -171,10 +171,10 @@ impl FshmemWorld {
     /// packet can't split into two packet-aligned stripes (possible with
     /// a tiny configured threshold), so they stay single-message.
     fn stripe_eligible(&self, node: NodeId, dst: GlobalAddr, payload: &Payload) -> bool {
-        payload.len() >= self.cfg.stripe_threshold
-            && payload.len() > self.cfg.packet_payload as u64
+        payload.len() >= self.cfg().stripe_threshold
+            && payload.len() > self.cfg().packet_payload as u64
             && dst.node() != node
-            && self.cfg.topology.equal_cost_ports(node, dst.node()).len() > 1
+            && self.cfg().topology.equal_cost_ports(node, dst.node()).len() > 1
     }
 
     /// Fan one PUT out across every equal-cost port as contiguous,
@@ -182,6 +182,7 @@ impl FshmemWorld {
     /// (own fragment tracking, own handler run, own ACK) sharing the op
     /// token; `OpTracker` counts bytes across stripes for the data leg
     /// and ACKs via `parts` for completion.
+    #[allow(clippy::too_many_arguments)]
     fn issue_striped_put(
         &mut self,
         at: SimTime,
@@ -192,14 +193,15 @@ impl FshmemWorld {
         q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
-        let ports = self.cfg.topology.equal_cost_ports(node, dst.node());
+        let ports = self.cfg().topology.equal_cost_ports(node, dst.node());
         let total = payload.len();
         let stripe =
-            super::stripe_size(total, self.cfg.packet_payload as u64, ports.len());
+            super::stripe_size(total, self.cfg().packet_payload as u64, ports.len());
         let n_stripes = total.div_ceil(stripe) as u32;
         debug_assert!(n_stripes >= 2, "stripe_eligible admits >= 2 stripes");
         debug_assert!(n_stripes as usize <= ports.len());
-        self.ops.set_parts(op, n_stripes);
+        // The issuing node owns the op: set the part count inline.
+        self.node_mut(node).ops.set_parts(op, n_stripes);
         c.incr("puts_striped");
         let mut off = 0u64;
         for (i, &port) in ports.iter().enumerate() {

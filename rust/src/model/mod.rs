@@ -22,6 +22,30 @@
 //!      └─ compute.rs    DLA job execution + ART chunk streaming
 //! ```
 //!
+//! ## State ownership (the partition invariant)
+//!
+//! Every event touches exactly one node's component state, and every
+//! piece of mutable state belongs to exactly one node (or to one link,
+//! owned by its sending node): scheduler FIFOs, sequencers, the handler
+//! engine, memories, the DLA, the op tracker (an op belongs to its
+//! issuing node — see `gasnet::ops`), receive-progress tracking, the
+//! user-AM log, ART handles, barrier arrivals (node 0), and the per-node
+//! ARQ fault RNG. Nodes group into [`ShardPart`]s (the engine's shard
+//! layout); handlers run against exactly one part plus the read-only
+//! [`WorldShared`] context — which is what makes the model executable by
+//! the threaded backend (`sim::parallel`) without locks or `unsafe`,
+//! and what makes any cross-node state touch a loud compile- or
+//! run-time error instead of a silent race.
+//!
+//! Remote observations of an op (a PUT's payload landing at the
+//! destination, header fronts, a striped GET's part count) cannot write
+//! the owner's tracker directly; they travel back as [`Event::OpSignal`]
+//! / [`Event::HeaderArrive`] events routed to the owner, delayed by the
+//! link propagation when they cross nodes — the same conservative
+//! lookahead the engine's windows rely on. The *observed* timestamp is
+//! carried in the event, so recorded values are exactly what an inline
+//! update would have recorded.
+//!
 //! Protocol walk-through (PUT, node S -> node D):
 //!
 //! ```text
@@ -63,115 +87,213 @@ use crate::config::{Config, Numerics};
 use crate::dla::{ComputeBackend, DlaJob, DlaState, SoftwareBackend};
 use crate::fabric::{Link, Router, Wiring, {PortId, Topology}};
 use crate::gasnet::{
-    AmCategory, AmKind, AmMessage, GasnetCore, MsgClass, OpId, OpTracker,
-    Packet, Payload,
+    op_owner, AmCategory, AmKind, AmMessage, GasnetCore, MsgClass, OpId,
+    OpKind, OpState, OpTracker, Packet, Payload,
 };
 use crate::memory::{GlobalAddr, NodeId, NodeMemory};
-use crate::sim::{Counters, Model, Sched, SimTime};
+use crate::sim::{
+    Counters, Model, ParallelModel, Rng, Sched, ShardPlan, SimTime,
+};
 
 /// Host-issued commands (the FSHMEM API surface, post-PCIe).
 #[derive(Debug, Clone)]
 pub enum HostCmd {
+    /// One-sided store into the global address space.
     Put {
+        /// Initiator-side op token.
         op: OpId,
+        /// Destination in the global address space.
         dst: GlobalAddr,
+        /// The payload (bytes, or a read-DMA descriptor).
         payload: Payload,
         /// Force a specific egress port (case-study striping); default
         /// routes by topology (striping across all equal-cost ports when
         /// the payload reaches `Config::stripe_threshold`).
         port: Option<PortId>,
     },
+    /// One-sided fetch from the global address space.
     Get {
+        /// Initiator-side op token.
         op: OpId,
         /// Remote source in the global address space.
         src: GlobalAddr,
         /// Local destination offset in this node's shared segment.
         local_offset: u64,
+        /// Bytes to fetch.
         len: u64,
     },
+    /// `gasnet_AMRequestShort`.
     AmShort {
+        /// Initiator-side op token.
         op: OpId,
+        /// Destination node.
         dst: NodeId,
+        /// Handler opcode.
         handler: u8,
+        /// Handler arguments.
         args: [u32; 4],
     },
+    /// `gasnet_AMRequestMedium`.
     AmMedium {
+        /// Initiator-side op token.
         op: OpId,
+        /// Destination node.
         dst: NodeId,
+        /// Handler opcode.
         handler: u8,
+        /// Handler arguments.
         args: [u32; 4],
+        /// The payload delivered to private memory.
         payload: Payload,
         /// Destination offset in the remote node's *private* memory.
         private_offset: u64,
     },
+    /// Dispatch a DLA job to `target`.
     Compute {
+        /// Initiator-side op token (completes on the job-done ack).
         op: OpId,
+        /// Node whose DLA runs the job.
         target: NodeId,
+        /// The job descriptor.
         job: DlaJob,
     },
+    /// Enter the fabric barrier.
     Barrier {
+        /// Initiator-side op token (completes on the release).
         op: OpId,
+    },
+}
+
+/// A remote observation about an op, routed back to its owner (see the
+/// module docs on state ownership).
+#[derive(Debug, Clone, Copy)]
+pub enum OpSig {
+    /// Payload bytes landed at the destination (PUT data leg).
+    Data {
+        /// Bytes that landed.
+        bytes: u64,
+    },
+    /// The request was delivered and handled remotely (user AMs complete
+    /// on delivery; the owner learns of it one wire flight later).
+    Delivered,
+    /// The op will complete in `parts` completion events (striped GET
+    /// reply legs, declared by the data holder).
+    Parts {
+        /// Number of completion events to expect.
+        parts: u32,
     },
 }
 
 /// DES events (see module docs for the protocol chains).
 #[derive(Debug)]
 pub enum Event {
+    /// A host command entering `node`'s command path.
     HostCmd {
+        /// The issuing node.
         node: NodeId,
+        /// The command.
         cmd: HostCmd,
     },
+    /// A message entering `node`'s per-port scheduler FIFO.
     TxEnqueue {
+        /// The sending node.
         node: NodeId,
+        /// Egress port.
         port: PortId,
+        /// Scheduler class.
         class: MsgClass,
+        /// The message.
         msg: AmMessage,
     },
+    /// The AM sequencer of (`node`, `port`) may start a message.
     SeqStart {
+        /// The sending node.
         node: NodeId,
+        /// Egress port.
         port: PortId,
     },
+    /// The AM sequencer of (`node`, `port`) finished a message.
     SeqFree {
+        /// The sending node.
         node: NodeId,
+        /// Egress port.
         port: PortId,
     },
+    /// A packet arrived at `node` on `port` (router input).
     PacketArrive {
+        /// The receiving node.
         node: NodeId,
+        /// Ingress port.
         port: PortId,
+        /// The packet.
         pkt: Packet,
     },
+    /// A packet addressed to `node` reached its rx decoder.
     PacketLocal {
+        /// The destination node.
         node: NodeId,
+        /// The packet.
         pkt: Packet,
     },
     /// Cut-through header observation: the *front* of a message's first
     /// packet reaching the destination's rx decoder — the paper's latency
     /// measurement point ("until the message header is received"). Fires
-    /// one serialization-time earlier than the full packet body.
+    /// one serialization-time earlier than the full packet body. Routed
+    /// to the op's **owner** (`node`), carrying the observation time.
     HeaderArrive {
+        /// The op's owner (the issuing node — not the observer).
         node: NodeId,
+        /// When the header front was observed at the destination.
+        observed: SimTime,
+        /// The op token.
         token: OpId,
+        /// Handler opcode of the message.
         handler: u8,
+        /// Request or reply.
         kind: AmKind,
+        /// AM category of the message.
         category: AmCategory,
     },
+    /// A remote observation routed back to the op owner `node`.
+    OpSignal {
+        /// The op's owner.
+        node: NodeId,
+        /// The op token.
+        token: OpId,
+        /// When the observation was made.
+        observed: SimTime,
+        /// What was observed.
+        sig: OpSig,
+    },
+    /// `node`'s handler engine may start the next queued handler.
     HandlerStart {
+        /// The handling node.
         node: NodeId,
     },
+    /// `node`'s handler engine finished running `pkt`'s handler.
     HandlerDone {
+        /// The handling node.
         node: NodeId,
+        /// The packet whose handler ran.
         pkt: Packet,
     },
+    /// `node`'s DLA may start the next queued job.
     DlaStart {
+        /// The computing node.
         node: NodeId,
     },
+    /// `node`'s DLA finished `job`.
     DlaDone {
+        /// The computing node.
         node: NodeId,
+        /// The finished job.
         job: DlaJob,
     },
     /// ARQ: replay a corrupted packet on its link (consumes wire time).
     Retransmit {
+        /// Global link index (owned by its sending node).
         link: usize,
+        /// The packet to replay.
         pkt: Packet,
     },
 }
@@ -179,45 +301,112 @@ pub enum Event {
 /// A user AM delivered to its handler (drained by the API layer).
 #[derive(Debug, Clone)]
 pub struct UserAm {
+    /// Delivery time.
     pub at: SimTime,
+    /// Node it was delivered to.
     pub node: NodeId,
+    /// User tag it was registered under.
     pub tag: u8,
+    /// Handler arguments.
     pub args: [u32; 4],
+    /// Medium payload bytes (empty for short AMs).
     pub payload: Vec<u8>,
 }
 
-/// One FPGA node.
+/// One FPGA node: hardware state plus everything this node owns in the
+/// partitioned model (see the module docs on state ownership).
 pub struct Node {
+    /// GASNet core: per-port TX schedulers + the RX handler engine.
     pub core: GasnetCore,
+    /// Shared-segment + private memory.
     pub mem: NodeMemory,
+    /// DLA job queue + occupancy.
     pub dla: DlaState,
+    /// This node's operations (it is the initiator; see `gasnet::ops`).
+    pub ops: OpTracker,
+    /// User AMs delivered to this node, in delivery order.
+    pub user_am_log: Vec<UserAm>,
+    /// Ops issued autonomously by this node's DLA ART transfers.
+    /// Workloads drain these to wait for partial-result delivery.
+    pub art_ops: Vec<OpId>,
+    /// Per-message receive progress: (token, stripe) -> payload bytes
+    /// landed at this node. Stripes of one striped PUT share a token but
+    /// carry distinct stripe ids, so each wire message completes (and
+    /// runs its handler) independently. A linear-scan Vec beats hashing:
+    /// the per-node set of partially-received messages is tiny.
+    pub(crate) rx_progress: Vec<(u32, u32, u64)>,
+    /// Barrier arrivals collected here (only node 0 coordinates).
+    pub(crate) barrier_arrivals: Vec<(NodeId, OpId)>,
+    /// Deterministic fault source for this node's ARQ rolls (send-side
+    /// and receive-side CRC checks both roll on the node doing them).
+    pub(crate) arq_rng: Rng,
 }
 
-/// The whole simulated system.
-pub struct FshmemWorld {
+/// The read-only context every handler may use: configuration, wiring,
+/// routing tables, and the numerics backend (pure functions).
+pub struct WorldShared {
+    /// The validated system configuration.
     pub cfg: Config,
-    pub nodes: Vec<Node>,
-    pub links: Vec<Link>,
+    /// Physical link endpoints.
     pub wiring: Wiring,
+    /// Static routing tables.
     pub router: Router,
-    pub ops: OpTracker,
-    pub user_am_log: Vec<UserAm>,
-    /// Ops issued autonomously by DLA ART transfers: (producer node, op).
-    /// Workloads use these to wait for partial-result delivery.
-    pub art_ops: Vec<(NodeId, OpId)>,
+    /// Global link id -> (owning part, index within the part).
+    link_loc: Vec<(u32, u32)>,
     backend: Option<Box<dyn ComputeBackend>>,
-    /// Barrier arrivals collected at node 0: (src, token).
-    barrier_arrivals: Vec<(NodeId, u32)>,
-    /// Deterministic fault source for the link-loss ARQ model.
-    fault_rng: crate::sim::Rng,
-    /// Per-message receive progress: (rx node, token, stripe) -> payload
-    /// bytes landed. Stripes of one striped PUT share a token but carry
-    /// distinct stripe ids, so each wire message completes (and runs its
-    /// handler) independently. The AM handler fires only when the whole
-    /// message has arrived (retransmissions can reorder fragments). A
-    /// linear-scan Vec beats hashing here: the per-node set of partially-
-    /// received messages is tiny (hot path: one entry).
-    rx_progress: Vec<(NodeId, u32, u32, u64)>,
+}
+
+/// One shard's worth of world state: a contiguous node range plus the
+/// links those nodes send on.
+pub struct ShardPart {
+    id: u32,
+    first_node: u32,
+    nodes: Vec<Node>,
+    links: Vec<Link>,
+}
+
+impl ShardPart {
+    /// This part's node, by global id. Panics if `n` belongs to another
+    /// part — which would be a partition-invariant violation in the
+    /// model, not a user error.
+    pub fn node_mut(&mut self, n: NodeId) -> &mut Node {
+        assert!(
+            n >= self.first_node
+                && ((n - self.first_node) as usize) < self.nodes.len(),
+            "partition invariant violated: node {n} is not owned by part {}",
+            self.id
+        );
+        &mut self.nodes[(n - self.first_node) as usize]
+    }
+
+    /// Immutable sibling of [`ShardPart::node_mut`].
+    pub fn node(&self, n: NodeId) -> &Node {
+        assert!(
+            n >= self.first_node
+                && ((n - self.first_node) as usize) < self.nodes.len(),
+            "partition invariant violated: node {n} is not owned by part {}",
+            self.id
+        );
+        &self.nodes[(n - self.first_node) as usize]
+    }
+}
+
+/// The whole simulated system: shared context + per-shard parts. The
+/// partition follows `Config::shards` (a single part when sharding is
+/// off); behavior is identical for every layout — only the threaded
+/// engine exploits it.
+pub struct FshmemWorld {
+    shared: WorldShared,
+    parts: Vec<ShardPart>,
+    plan: ShardPlan,
+}
+
+/// The per-shard working view handlers run against: one mutable part +
+/// the shared read-only context. All five pipeline-layer modules
+/// implement their handlers on this type.
+pub(crate) struct Wv<'a> {
+    pub(crate) sh: &'a WorldShared,
+    pub(crate) part: &'a mut ShardPart,
 }
 
 /// Packet-aligned stripe size for fanning `total` payload bytes across
@@ -232,62 +421,344 @@ pub(crate) fn stripe_size(total: u64, packet_payload: u64, ports: usize) -> u64 
 }
 
 impl FshmemWorld {
+    /// Build the world from a configuration (validated on entry).
     pub fn new(mut cfg: Config) -> Self {
         cfg.validate().expect("invalid config");
+        let n_nodes = cfg.topology.nodes();
         let wiring = Wiring::new(cfg.topology);
-        let links = wiring
-            .links
-            .iter()
-            .map(|_| Link::new(cfg.link))
-            .collect();
-        let nodes = (0..cfg.topology.nodes())
-            .map(|_| Node {
-                core: GasnetCore::new(cfg.topology.ports_per_node()),
-                mem: NodeMemory::new(
-                    cfg.segment_bytes as usize,
-                    cfg.private_bytes as usize,
-                ),
-                dla: DlaState::default(),
-            })
-            .collect();
+        let n_parts = cfg.shard_count().unwrap_or(1);
+        let plan = ShardPlan::partition(n_parts, n_nodes, cfg.link.propagation);
         let backend: Option<Box<dyn ComputeBackend>> = match cfg.numerics {
             Numerics::TimingOnly => None,
             Numerics::Software => Some(Box::new(SoftwareBackend)),
             Numerics::Pjrt => None, // installed via set_backend by the API
         };
+        let mut parts: Vec<ShardPart> = (0..n_parts)
+            .map(|p| {
+                let (first, last) = plan.node_range(p);
+                ShardPart {
+                    id: p,
+                    first_node: first,
+                    nodes: (first..=last)
+                        .map(|node| Node {
+                            core: GasnetCore::new(cfg.topology.ports_per_node()),
+                            mem: NodeMemory::new(
+                                cfg.segment_bytes as usize,
+                                cfg.private_bytes as usize,
+                            ),
+                            dla: DlaState::default(),
+                            ops: OpTracker::new(node),
+                            user_am_log: Vec::new(),
+                            art_ops: Vec::new(),
+                            rx_progress: Vec::new(),
+                            barrier_arrivals: Vec::new(),
+                            arq_rng: Rng::new(
+                                cfg.seed
+                                    ^ 0xFA01
+                                    ^ (node as u64)
+                                        .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                            ),
+                        })
+                        .collect(),
+                    links: Vec::new(),
+                }
+            })
+            .collect();
+        let mut link_loc = Vec::with_capacity(wiring.links.len());
+        for &(src, _, _, _) in &wiring.links {
+            let p = plan.shard_of(src);
+            link_loc.push((p as u32, parts[p].links.len() as u32));
+            parts[p].links.push(Link::new(cfg.link));
+        }
         FshmemWorld {
-            router: Router::d5005(cfg.topology),
-            wiring,
-            links,
-            nodes,
-            ops: OpTracker::new(),
-            user_am_log: Vec::new(),
-            art_ops: Vec::new(),
-            backend,
-            barrier_arrivals: Vec::new(),
-            fault_rng: crate::sim::Rng::new(cfg.seed ^ 0xFA01),
-            rx_progress: Vec::new(),
-            cfg,
+            shared: WorldShared {
+                router: Router::d5005(cfg.topology),
+                wiring,
+                link_loc,
+                backend,
+                cfg,
+            },
+            parts,
+            plan,
         }
     }
 
+    /// Install a numerics backend (the PJRT path).
     pub fn set_backend(&mut self, backend: Box<dyn ComputeBackend>) {
-        self.backend = Some(backend);
+        self.shared.backend = Some(backend);
     }
 
+    /// Name of the installed numerics backend.
     pub fn backend_name(&self) -> &'static str {
-        self.backend.as_ref().map(|b| b.name()).unwrap_or("none")
+        self.shared
+            .backend
+            .as_ref()
+            .map(|b| b.name())
+            .unwrap_or("none")
     }
 
+    /// The validated configuration.
+    pub fn cfg(&self) -> &Config {
+        &self.shared.cfg
+    }
+
+    /// The fabric topology.
     pub fn topology(&self) -> Topology {
-        self.cfg.topology
+        self.shared.cfg.topology
+    }
+
+    /// A node by global id.
+    pub fn node(&self, n: NodeId) -> &Node {
+        self.parts[self.plan.shard_of(n)].node(n)
+    }
+
+    /// A node by global id, mutably (driver-side staging access).
+    pub fn node_mut(&mut self, n: NodeId) -> &mut Node {
+        let p = self.plan.shard_of(n);
+        self.parts[p].node_mut(n)
+    }
+
+    /// Iterate all nodes in global id order.
+    pub fn nodes_iter(&self) -> impl Iterator<Item = &Node> {
+        self.parts.iter().flat_map(|p| p.nodes.iter())
+    }
+
+    /// A link's state by global link id (see `fabric::Wiring`).
+    pub fn link(&self, li: usize) -> &Link {
+        let (p, i) = self.shared.link_loc[li];
+        &self.parts[p as usize].links[i as usize]
+    }
+
+    /// Issue a host-originated op from `node`'s tracker (driver context).
+    pub fn issue_op(
+        &mut self,
+        node: NodeId,
+        kind: OpKind,
+        now: SimTime,
+        bytes: u64,
+    ) -> OpId {
+        self.node_mut(node).ops.issue(kind, now, bytes)
+    }
+
+    /// The state of op `id`, routed to its owner's tracker.
+    pub fn op(&self, id: OpId) -> Option<&OpState> {
+        self.node(op_owner(id)).ops.get(id)
+    }
+
+    /// True once op `id` completed.
+    pub fn op_is_complete(&self, id: OpId) -> bool {
+        self.node(op_owner(id)).ops.is_complete(id)
+    }
+
+    /// Tracked-but-incomplete ops across the fabric.
+    pub fn ops_outstanding(&self) -> usize {
+        self.nodes_iter().map(|n| n.ops.outstanding()).sum()
+    }
+
+    /// Forget finished ops on every node (long sweeps).
+    pub fn gc_ops(&mut self) {
+        for p in &mut self.parts {
+            for n in &mut p.nodes {
+                n.ops.gc();
+            }
+        }
+    }
+
+    /// All delivered user AMs in global order (time, then node, keeping
+    /// per-node delivery order) — a backend-independent observable.
+    pub fn user_ams(&self) -> Vec<&UserAm> {
+        let mut all: Vec<&UserAm> = self
+            .nodes_iter()
+            .flat_map(|n| n.user_am_log.iter())
+            .collect();
+        all.sort_by_key(|am| (am.at, am.node));
+        all
+    }
+
+    /// Drain every delivered user AM, in the same order as
+    /// [`FshmemWorld::user_ams`].
+    pub fn drain_user_ams(&mut self) -> Vec<UserAm> {
+        let mut all: Vec<UserAm> = Vec::new();
+        for p in &mut self.parts {
+            for n in &mut p.nodes {
+                all.append(&mut n.user_am_log);
+            }
+        }
+        all.sort_by_key(|am| (am.at, am.node));
+        all
+    }
+
+    /// Remove and return the earliest-delivered user AM matching
+    /// `(node, tag)`, if one has been delivered.
+    pub fn take_am_for(&mut self, node: NodeId, tag: u8) -> Option<UserAm> {
+        let log = &mut self.node_mut(node).user_am_log;
+        let idx = log.iter().position(|am| am.tag == tag)?;
+        Some(log.remove(idx))
+    }
+
+    /// Drain ART-transfer op handles produced by `node`'s DLA jobs.
+    pub fn take_art_ops_for(&mut self, node: NodeId) -> Vec<OpId> {
+        std::mem::take(&mut self.node_mut(node).art_ops)
+    }
+
+    /// Drain ART-transfer op handles of every node: (producer, op).
+    pub fn take_art_ops_all(&mut self) -> Vec<(NodeId, OpId)> {
+        let mut all = Vec::new();
+        for p in &mut self.parts {
+            for (i, n) in p.nodes.iter_mut().enumerate() {
+                let node = p.first_node + i as u32;
+                for op in std::mem::take(&mut n.art_ops) {
+                    all.push((node, op));
+                }
+            }
+        }
+        all
     }
 }
 
-impl Model for FshmemWorld {
-    type Event = Event;
+impl Wv<'_> {
+    /// The validated configuration.
+    pub(crate) fn cfg(&self) -> &Config {
+        &self.sh.cfg
+    }
 
-    fn handle(
+    /// One of this part's nodes, mutably.
+    pub(crate) fn node_mut(&mut self, n: NodeId) -> &mut Node {
+        self.part.node_mut(n)
+    }
+
+    /// One of this part's nodes.
+    pub(crate) fn node(&self, n: NodeId) -> &Node {
+        self.part.node(n)
+    }
+
+    /// One of this part's links, by global link id.
+    pub(crate) fn link_mut(&mut self, li: usize) -> &mut Link {
+        let (p, i) = self.sh.link_loc[li];
+        debug_assert_eq!(
+            p, self.part.id,
+            "partition invariant violated: link {li} is owned by part {p}"
+        );
+        &mut self.part.links[i as usize]
+    }
+
+    /// Immutable sibling of [`Wv::link_mut`].
+    pub(crate) fn link(&self, li: usize) -> &Link {
+        let (p, i) = self.sh.link_loc[li];
+        debug_assert_eq!(p, self.part.id);
+        &self.part.links[i as usize]
+    }
+
+    /// The installed numerics backend, if any.
+    pub(crate) fn backend(&self) -> Option<&dyn ComputeBackend> {
+        self.sh.backend.as_deref()
+    }
+
+    /// Deliver a remote op observation to its owner: applied inline when
+    /// the observer *is* the owner, otherwise routed as an
+    /// [`Event::OpSignal`] one wire flight (`link.propagation`) later —
+    /// the conservative lookahead, so the event is legal under every
+    /// backend. The decision depends only on node identity, never on the
+    /// partition layout, so all engines behave identically.
+    pub(crate) fn op_signal(
+        &mut self,
+        q: &mut Sched<Event>,
+        now: SimTime,
+        observer: NodeId,
+        token: OpId,
+        sig: OpSig,
+    ) {
+        let owner = op_owner(token);
+        if owner == observer {
+            apply_op_sig(self.node_mut(owner), token, now, now, sig);
+        } else {
+            q.schedule_at(
+                now + self.sh.cfg.link.propagation,
+                Event::OpSignal {
+                    node: owner,
+                    token,
+                    observed: now,
+                    sig,
+                },
+            );
+        }
+    }
+
+    /// Route a header-front observation to the op's owner. `observed` is
+    /// the decoder-side observation time (the recorded latency endpoint);
+    /// the event lands at the owner at `observed` when the owner is the
+    /// observer, else no earlier than one propagation delay from `now`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn route_header(
+        &mut self,
+        q: &mut Sched<Event>,
+        now: SimTime,
+        observer: NodeId,
+        owner: NodeId,
+        observed: SimTime,
+        token: OpId,
+        handler: u8,
+        kind: AmKind,
+        category: AmCategory,
+    ) {
+        let at = if owner == observer {
+            observed
+        } else {
+            observed.max(now + self.sh.cfg.link.propagation)
+        };
+        q.schedule_at(
+            at,
+            Event::HeaderArrive {
+                node: owner,
+                observed,
+                token,
+                handler,
+                kind,
+                category,
+            },
+        );
+    }
+}
+
+/// Apply one op signal to the owner's tracker. `at` is the processing
+/// time (what a completion wait observes), `observed` the remote
+/// observation time (what the record carries).
+fn apply_op_sig(node: &mut Node, token: OpId, at: SimTime, observed: SimTime, sig: OpSig) {
+    match sig {
+        OpSig::Data { bytes } => {
+            node.ops.data_progress(token, observed, bytes);
+        }
+        OpSig::Delivered => node.ops.complete(token, at),
+        OpSig::Parts { parts } => node.ops.set_parts(token, parts),
+    }
+}
+
+/// The node whose component state `event` touches (see the module docs:
+/// every event has exactly one). Links are unidirectional and owned by
+/// their sending side.
+fn event_node_of(shared: &WorldShared, event: &Event) -> u32 {
+    match *event {
+        Event::HostCmd { node, .. }
+        | Event::TxEnqueue { node, .. }
+        | Event::SeqStart { node, .. }
+        | Event::SeqFree { node, .. }
+        | Event::PacketArrive { node, .. }
+        | Event::PacketLocal { node, .. }
+        | Event::HeaderArrive { node, .. }
+        | Event::OpSignal { node, .. }
+        | Event::HandlerStart { node }
+        | Event::HandlerDone { node, .. }
+        | Event::DlaStart { node }
+        | Event::DlaDone { node, .. } => node,
+        // A replayed packet re-enters the wire at the link's sending
+        // side; the sender's shard owns that link's occupancy state.
+        Event::Retransmit { link, .. } => shared.wiring.links[link].0,
+    }
+}
+
+impl Wv<'_> {
+    /// Dispatch one event to its pipeline layer.
+    pub(crate) fn handle(
         &mut self,
         now: SimTime,
         event: Event,
@@ -315,11 +786,20 @@ impl Model for FshmemWorld {
             }
             Event::HeaderArrive {
                 node,
+                observed,
                 token,
                 handler,
                 kind,
                 category,
-            } => self.on_header_arrive(now, node, token, handler, kind, category, c),
+            } => self.on_header_arrive(node, observed, token, handler, kind, category, c),
+            Event::OpSignal {
+                node,
+                token,
+                observed,
+                sig,
+            } => {
+                apply_op_sig(self.node_mut(node), token, now, observed, sig);
+            }
             Event::Retransmit { link, pkt } => self.on_retransmit(now, link, pkt, q, c),
             // -- rx layer ----------------------------------------------
             Event::HandlerStart { node } => self.on_handler_start(now, node, q),
@@ -331,29 +811,51 @@ impl Model for FshmemWorld {
             Event::DlaDone { node, job } => self.on_dla_done(now, node, job, q, c),
         }
     }
+}
 
-    /// Shard routing: every event touches exactly one node's component
-    /// state (queues, sequencers, handler engine, memory, DLA, *outgoing*
-    /// link occupancy — links are unidirectional and owned by their
-    /// sending side). The sharded engine partitions the event set by
-    /// this key; cross-node events always ride a wire, so the link
-    /// propagation delay is a sound conservative lookahead.
-    fn shard_node(&self, event: &Event) -> u32 {
-        match *event {
-            Event::HostCmd { node, .. }
-            | Event::TxEnqueue { node, .. }
-            | Event::SeqStart { node, .. }
-            | Event::SeqFree { node, .. }
-            | Event::PacketArrive { node, .. }
-            | Event::PacketLocal { node, .. }
-            | Event::HeaderArrive { node, .. }
-            | Event::HandlerStart { node }
-            | Event::HandlerDone { node, .. }
-            | Event::DlaStart { node }
-            | Event::DlaDone { node, .. } => node,
-            // A replayed packet re-enters the wire at the link's sending
-            // side; the sender's shard owns that link's occupancy state.
-            Event::Retransmit { link, .. } => self.wiring.links[link].0,
+impl Model for FshmemWorld {
+    type Event = Event;
+
+    fn handle(
+        &mut self,
+        now: SimTime,
+        event: Event,
+        q: &mut Sched<Event>,
+        c: &mut Counters,
+    ) {
+        let p = self.plan.shard_of(event_node_of(&self.shared, &event));
+        Wv {
+            sh: &self.shared,
+            part: &mut self.parts[p],
         }
+        .handle(now, event, q, c)
+    }
+
+    fn shard_node(&self, event: &Event) -> u32 {
+        event_node_of(&self.shared, event)
+    }
+}
+
+impl ParallelModel for FshmemWorld {
+    type Shared = WorldShared;
+    type Part = ShardPart;
+
+    fn split(&mut self) -> (&WorldShared, &mut [ShardPart]) {
+        (&self.shared, &mut self.parts)
+    }
+
+    fn event_node(shared: &WorldShared, event: &Event) -> u32 {
+        event_node_of(shared, event)
+    }
+
+    fn handle_part(
+        shared: &WorldShared,
+        part: &mut ShardPart,
+        now: SimTime,
+        event: Event,
+        sched: &mut Sched<Event>,
+        counters: &mut Counters,
+    ) {
+        Wv { sh: shared, part }.handle(now, event, sched, counters)
     }
 }

@@ -13,20 +13,28 @@
 //! stripe ids in `args[3]` keep their fragment tracking apart) and the
 //! op completes on the last leg's fully-received reply via
 //! `OpState::parts`, exactly how striped PUTs complete on their last ACK.
+//!
+//! Op-state writes here follow the ownership rule (`gasnet::ops`):
+//! completions that arrive *at* the initiator (ACKs, reply legs, barrier
+//! releases) update the local tracker directly; observations made on
+//! behalf of a remote initiator (user-AM delivery, the striped GET's
+//! part count) travel back as `OpSignal` events.
 
 use crate::dla;
 use crate::gasnet::handlers::{
     HandlerKind, H_ACK, H_BARRIER_RELEASE, H_PUT_REPLY,
 };
-use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, Packet, Payload};
+use crate::gasnet::{
+    op_owner, AmCategory, AmKind, AmMessage, MsgClass, Packet, Payload,
+};
 use crate::memory::{GlobalAddr, NodeId};
 use crate::sim::{Counters, Sched, SimTime};
 
-use super::{Event, FshmemWorld, UserAm};
+use super::{Event, OpSig, UserAm, Wv};
 
-impl FshmemWorld {
+impl Wv<'_> {
     fn handler_duration(&self, kind: &HandlerKind) -> SimTime {
-        let t = &self.cfg.timing;
+        let t = &self.cfg().timing;
         match kind {
             HandlerKind::Put | HandlerKind::PutReply | HandlerKind::Ack => {
                 t.handler_put()
@@ -85,19 +93,23 @@ impl FshmemWorld {
     ) -> bool {
         let src_off = (pkt.args[0] as u64) | ((pkt.args[1] as u64) << 32);
         let len = pkt.args[2] as u64;
-        let ports = self.cfg.topology.equal_cost_ports(node, pkt.src);
-        if len < self.cfg.stripe_threshold
-            || len <= self.cfg.packet_payload as u64
+        let ports = self.cfg().topology.equal_cost_ports(node, pkt.src);
+        if len < self.cfg().stripe_threshold
+            || len <= self.cfg().packet_payload as u64
             || pkt.src == node
             || ports.len() <= 1
         {
             return false;
         }
-        let stripe = super::stripe_size(len, self.cfg.packet_payload as u64, ports.len());
+        let stripe =
+            super::stripe_size(len, self.cfg().packet_payload as u64, ports.len());
         let n_legs = len.div_ceil(stripe) as u32;
         debug_assert!(n_legs >= 2, "eligibility admits >= 2 reply legs");
         debug_assert!(n_legs as usize <= ports.len());
-        self.ops.set_parts(pkt.token, n_legs);
+        // The GET's owner is the requester — a remote node here, so the
+        // part count travels back as a signal. It arrives one wire
+        // flight later, strictly before the earliest reply leg's data.
+        self.op_signal(q, now, node, pkt.token, OpSig::Parts { parts: n_legs });
         c.incr("gets_striped");
         let mut off = 0u64;
         for (i, &port) in ports.iter().enumerate() {
@@ -143,7 +155,7 @@ impl FshmemWorld {
         node: NodeId,
         q: &mut Sched<Event>,
     ) {
-        let core = &mut self.nodes[node as usize].core;
+        let core = &mut self.node_mut(node).core;
         if core.handler_busy {
             return;
         }
@@ -166,7 +178,8 @@ impl FshmemWorld {
         q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
-        let kind = self.nodes[node as usize]
+        let kind = self
+            .node(node)
             .core
             .handlers
             .lookup(pkt.handler)
@@ -190,7 +203,7 @@ impl FshmemWorld {
                         args: [0; 4],
                         payload: Payload::None,
                     };
-                    let port = self.cfg.topology.out_port(node, pkt.src, None);
+                    let port = self.cfg().topology.out_port(node, pkt.src, None);
                     q.schedule_at(
                         now,
                         Event::TxEnqueue {
@@ -207,16 +220,20 @@ impl FshmemWorld {
                 // runs once the whole message has arrived). Each reply
                 // leg of a striped GET completes one part; the op
                 // completes on the last leg (`OpState::parts`), mirroring
-                // how striped PUTs complete on their last ACK.
-                self.ops.complete(pkt.token, now);
+                // how striped PUTs complete on their last ACK. The reply
+                // lands at the GET's initiator — the op owner.
+                debug_assert_eq!(op_owner(pkt.token), node);
+                self.node_mut(node).ops.complete(pkt.token, now);
             }
             HandlerKind::Ack => {
-                self.ops.complete(pkt.token, now);
+                // ACKs return to the initiator — the op owner.
+                debug_assert_eq!(op_owner(pkt.token), node);
+                self.node_mut(node).ops.complete(pkt.token, now);
             }
             HandlerKind::Get => {
                 if !self.try_striped_get_reply(now, node, &pkt, q, c) {
                     let reply = self.make_get_reply(&pkt);
-                    let port = self.cfg.topology.out_port(node, pkt.src, None);
+                    let port = self.cfg().topology.out_port(node, pkt.src, None);
                     q.schedule_at(
                         now,
                         Event::TxEnqueue {
@@ -232,15 +249,18 @@ impl FshmemWorld {
                 let job = dla::job::decode_job(pkt.payload())
                     .expect("valid DLA job descriptor");
                 c.incr("dla_jobs_queued");
-                if self.nodes[node as usize].dla.enqueue(job) {
+                if self.node_mut(node).dla.enqueue(job) {
                     q.schedule_at(now, Event::DlaStart { node });
                 }
             }
             HandlerKind::BarrierArrive => {
                 debug_assert_eq!(node, 0, "barrier coordinator is node 0");
-                self.barrier_arrivals.push((pkt.src, pkt.token));
-                if self.barrier_arrivals.len() as u32 == self.cfg.topology.nodes() {
-                    for (src, token) in std::mem::take(&mut self.barrier_arrivals) {
+                let n_nodes = self.cfg().topology.nodes();
+                let coordinator = self.node_mut(node);
+                coordinator.barrier_arrivals.push((pkt.src, pkt.token));
+                if coordinator.barrier_arrivals.len() as u32 == n_nodes {
+                    let arrivals = std::mem::take(&mut coordinator.barrier_arrivals);
+                    for (src, token) in arrivals {
                         let release = AmMessage {
                             kind: AmKind::Reply,
                             category: AmCategory::Short,
@@ -252,7 +272,7 @@ impl FshmemWorld {
                             args: [0; 4],
                             payload: Payload::None,
                         };
-                        let port = self.cfg.topology.out_port(node, src, None);
+                        let port = self.cfg().topology.out_port(node, src, None);
                         q.schedule_at(
                             now,
                             Event::TxEnqueue {
@@ -266,10 +286,12 @@ impl FshmemWorld {
                 }
             }
             HandlerKind::BarrierRelease => {
-                self.ops.complete(pkt.token, now);
+                // The release reaches the entering rank — the op owner.
+                debug_assert_eq!(op_owner(pkt.token), node);
+                self.node_mut(node).ops.complete(pkt.token, now);
             }
             HandlerKind::User(tag) => {
-                self.user_am_log.push(UserAm {
+                self.node_mut(node).user_am_log.push(UserAm {
                     at: now,
                     node,
                     tag,
@@ -278,12 +300,15 @@ impl FshmemWorld {
                 });
                 // AMRequest handles complete on remote delivery (GASNet's
                 // own semantics are fire-and-forget; delivery-completion
-                // makes `wait` usable as a flush in tests/examples).
-                self.ops.complete(pkt.token, now);
+                // makes `wait` usable as a flush in tests/examples). The
+                // sender owns the op; delivery news travels back one wire
+                // flight, so `completed_at` is the time the *initiator*
+                // learns of delivery.
+                self.op_signal(q, now, node, pkt.token, OpSig::Delivered);
             }
         }
         // Handler engine: next in queue.
-        let core = &mut self.nodes[node as usize].core;
+        let core = &mut self.node_mut(node).core;
         core.handler_busy = false;
         if !core.handler_queue.is_empty() {
             q.schedule_at(now, Event::HandlerStart { node });

@@ -22,10 +22,10 @@ fn put(
     dst: GlobalAddr,
     data: Vec<u8>,
 ) -> OpId {
+    let now = eng.now();
     let op = eng
         .model
-        .ops
-        .issue(OpKind::Put, eng.now(), data.len() as u64);
+        .issue_op(src, OpKind::Put, now, data.len() as u64);
     eng.inject_now(Event::HostCmd {
         node: src,
         cmd: HostCmd::Put {
@@ -44,12 +44,12 @@ fn put_delivers_bytes_and_completes() {
     let data: Vec<u8> = (0..=255).collect();
     let op = put(&mut eng, 0, GlobalAddr::new(1, 0x2000), data.clone());
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
+    assert!(eng.model.op_is_complete(op));
     assert_eq!(
-        eng.model.nodes[1].mem.read_shared(0x2000, 256).unwrap(),
+        eng.model.node(1).mem.read_shared(0x2000, 256).unwrap(),
         &data[..]
     );
-    let st = eng.model.ops.get(op).unwrap();
+    let st = eng.model.op(op).unwrap();
     assert!(st.header_at.unwrap() < st.data_done_at.unwrap() || data.len() <= 1024);
     assert!(st.completed_at.unwrap() >= st.data_done_at.unwrap());
 }
@@ -59,7 +59,7 @@ fn put_latency_matches_paper_long_message() {
     let mut eng = engine();
     let op = put(&mut eng, 0, GlobalAddr::new(1, 0), vec![7u8; 64]);
     eng.run_to_quiescence();
-    let st = eng.model.ops.get(op).unwrap();
+    let st = eng.model.op(op).unwrap();
     let lat = st.header_at.unwrap().since(st.issued).as_us();
     assert!(
         (0.30..0.40).contains(&lat),
@@ -72,7 +72,7 @@ fn short_put_latency_near_021us() {
     let mut eng = engine();
     let op = put(&mut eng, 0, GlobalAddr::new(1, 0), vec![]);
     eng.run_to_quiescence();
-    let st = eng.model.ops.get(op).unwrap();
+    let st = eng.model.op(op).unwrap();
     let lat = st.header_at.unwrap().since(st.issued).as_us();
     assert!(
         (0.18..0.24).contains(&lat),
@@ -84,11 +84,13 @@ fn short_put_latency_near_021us() {
 fn get_fetches_remote_bytes() {
     let mut eng = engine();
     let payload: Vec<u8> = (0..128).map(|i| (i * 3) as u8).collect();
-    eng.model.nodes[1]
+    eng.model
+        .node_mut(1)
         .mem
         .write_shared(0x500, &payload)
         .unwrap();
-    let op = eng.model.ops.issue(OpKind::Get, eng.now(), 128);
+    let now = eng.now();
+    let op = eng.model.issue_op(0, OpKind::Get, now, 128);
     eng.inject_now(Event::HostCmd {
         node: 0,
         cmd: HostCmd::Get {
@@ -99,13 +101,13 @@ fn get_fetches_remote_bytes() {
         },
     });
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
+    assert!(eng.model.op_is_complete(op));
     assert_eq!(
-        eng.model.nodes[0].mem.read_shared(0x9000, 128).unwrap(),
+        eng.model.node(0).mem.read_shared(0x9000, 128).unwrap(),
         &payload[..]
     );
     // GET latency: header of reply back at requester, paper 0.59 µs.
-    let st = eng.model.ops.get(op).unwrap();
+    let st = eng.model.op(op).unwrap();
     let lat = st.header_at.unwrap().since(st.issued).as_us();
     assert!(
         (0.50..0.68).contains(&lat),
@@ -119,9 +121,9 @@ fn fragmented_put_reassembles() {
     let data: Vec<u8> = (0..5000u32).map(|i| (i % 251) as u8).collect();
     let op = put(&mut eng, 0, GlobalAddr::new(1, 0x1000), data.clone());
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
+    assert!(eng.model.op_is_complete(op));
     assert_eq!(
-        eng.model.nodes[1].mem.read_shared(0x1000, 5000).unwrap(),
+        eng.model.node(1).mem.read_shared(0x1000, 5000).unwrap(),
         &data[..]
     );
     // 5000 B at 1024 B/packet = 5 packets (+1 ACK back).
@@ -138,18 +140,18 @@ fn striped_put_fans_out_and_completes_on_last_ack() {
     let data: Vec<u8> = (0..len).map(|i| (i % 241) as u8).collect();
     let op = put(&mut eng, 0, GlobalAddr::new(1, 0x4000), data.clone());
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
+    assert!(eng.model.op_is_complete(op));
     assert_eq!(eng.counters.get("puts_striped"), 1);
     assert_eq!(
-        eng.model.nodes[1].mem.read_shared(0x4000, len).unwrap(),
+        eng.model.node(1).mem.read_shared(0x4000, len).unwrap(),
         &data[..]
     );
     // Both directions of the ring carried payload.
-    let tx0 = eng.model.links[0].bytes_sent;
-    let tx1 = eng.model.links[1].bytes_sent;
+    let tx0 = eng.model.link(0).bytes_sent;
+    let tx1 = eng.model.link(1).bytes_sent;
     assert!(tx0 > (len / 3) as u64, "port 0 carried {tx0} B");
     assert!(tx1 > (len / 3) as u64, "port 1 carried {tx1} B");
-    let st = eng.model.ops.get(op).unwrap();
+    let st = eng.model.op(op).unwrap();
     assert_eq!(st.bytes_done, len as u64);
     assert!(st.completed_at.unwrap() >= st.data_done_at.unwrap());
 }
@@ -166,7 +168,7 @@ fn striping_halves_large_put_time() {
             vec![0x5A; 1 << 20],
         );
         eng.run_to_quiescence();
-        let st = eng.model.ops.get(op).unwrap();
+        let st = eng.model.op(op).unwrap();
         st.data_done_at.unwrap().since(st.issued)
     };
     let striped = timed(64 << 10);
@@ -180,7 +182,8 @@ fn striping_halves_large_put_time() {
 #[test]
 fn pinned_port_put_never_stripes() {
     let mut eng = engine();
-    let op = eng.model.ops.issue(OpKind::Put, eng.now(), 1 << 20);
+    let now = eng.now();
+    let op = eng.model.issue_op(0, OpKind::Put, now, 1 << 20);
     eng.inject_now(Event::HostCmd {
         node: 0,
         cmd: HostCmd::Put {
@@ -191,9 +194,9 @@ fn pinned_port_put_never_stripes() {
         },
     });
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
+    assert!(eng.model.op_is_complete(op));
     assert_eq!(eng.counters.get("puts_striped"), 0);
-    assert_eq!(eng.model.links[1].bytes_sent, 0, "port 1 (E->W link) idle");
+    assert_eq!(eng.model.link(1).bytes_sent, 0, "port 1 (E->W link) idle");
 }
 
 #[test]
@@ -201,7 +204,8 @@ fn barrier_releases_all_nodes() {
     let mut eng = engine();
     let mut ops = vec![];
     for node in 0..2 {
-        let op = eng.model.ops.issue(OpKind::Barrier, eng.now(), 0);
+        let now = eng.now();
+        let op = eng.model.issue_op(node, OpKind::Barrier, now, 0);
         eng.inject_now(Event::HostCmd {
             node,
             cmd: HostCmd::Barrier { op },
@@ -210,30 +214,32 @@ fn barrier_releases_all_nodes() {
     }
     eng.run_to_quiescence();
     for op in ops {
-        assert!(eng.model.ops.is_complete(op), "barrier op {op}");
+        assert!(eng.model.op_is_complete(op), "barrier op {op}");
     }
 }
 
 #[test]
 fn barrier_waits_for_stragglers() {
     let mut eng = engine();
-    let op0 = eng.model.ops.issue(OpKind::Barrier, eng.now(), 0);
+    let now = eng.now();
+    let op0 = eng.model.issue_op(0, OpKind::Barrier, now, 0);
     eng.inject_now(Event::HostCmd {
         node: 0,
         cmd: HostCmd::Barrier { op: op0 },
     });
     // Run: node 1 never arrives, so op0 must not complete.
     eng.run_to_quiescence();
-    assert!(!eng.model.ops.is_complete(op0));
+    assert!(!eng.model.op_is_complete(op0));
     // Late arrival releases everyone.
-    let op1 = eng.model.ops.issue(OpKind::Barrier, eng.now(), 0);
+    let now = eng.now();
+    let op1 = eng.model.issue_op(1, OpKind::Barrier, now, 0);
     eng.inject_now(Event::HostCmd {
         node: 1,
         cmd: HostCmd::Barrier { op: op1 },
     });
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op0));
-    assert!(eng.model.ops.is_complete(op1));
+    assert!(eng.model.op_is_complete(op0));
+    assert!(eng.model.op_is_complete(op1));
 }
 
 #[test]
@@ -246,12 +252,14 @@ fn compute_job_runs_and_notifies() {
         a[i * n + i] = 1.0;
     }
     let b: Vec<f32> = (0..n * n).map(|i| i as f32 * 0.5).collect();
-    eng.model.nodes[1].mem.write_shared_f16(0, &a).unwrap();
-    eng.model.nodes[1]
+    eng.model.node_mut(1).mem.write_shared_f16(0, &a).unwrap();
+    eng.model
+        .node_mut(1)
         .mem
         .write_shared_f16(0x4000, &b)
         .unwrap();
-    let op = eng.model.ops.issue(OpKind::Compute, eng.now(), 0);
+    let now = eng.now();
+    let op = eng.model.issue_op(0, OpKind::Compute, now, 0);
     let job = DlaJob {
         op: DlaOp::Matmul {
             m: n as u32,
@@ -274,8 +282,8 @@ fn compute_job_runs_and_notifies() {
         },
     });
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
-    let y = eng.model.nodes[1].mem.read_shared_f16(0x8000, n * n).unwrap();
+    assert!(eng.model.op_is_complete(op));
+    let y = eng.model.node(1).mem.read_shared_f16(0x8000, n * n).unwrap();
     // Values are 0.5-steps <= 127.5: exactly representable in fp16.
     assert_eq!(y, b);
     assert_eq!(eng.counters.get("dla_jobs_done"), 1);
@@ -287,12 +295,14 @@ fn compute_with_art_streams_results_to_peer() {
     let n = 64usize;
     let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32) * 0.25).collect();
     let b: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32) * 0.5).collect();
-    eng.model.nodes[1].mem.write_shared_f16(0, &a).unwrap();
-    eng.model.nodes[1]
+    eng.model.node_mut(1).mem.write_shared_f16(0, &a).unwrap();
+    eng.model
+        .node_mut(1)
         .mem
         .write_shared_f16(0x10000, &b)
         .unwrap();
-    let op = eng.model.ops.issue(OpKind::Compute, eng.now(), 0);
+    let now = eng.now();
+    let op = eng.model.issue_op(0, OpKind::Compute, now, 0);
     let job = DlaJob {
         op: DlaOp::Matmul {
             m: n as u32,
@@ -318,22 +328,27 @@ fn compute_with_art_streams_results_to_peer() {
         },
     });
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
+    assert!(eng.model.op_is_complete(op));
     assert_eq!(eng.counters.get("art_chunks"), 4); // 4096 results / 1024
     // ART delivered the full result into node 0's segment.
-    let y_remote = eng.model.nodes[0]
+    let y_remote = eng
+        .model
+        .node(0)
         .mem
         .read_shared_f16(0x30000, n * n)
         .unwrap();
-    let y_local = eng.model.nodes[1]
+    let y_local = eng
+        .model
+        .node(1)
         .mem
         .read_shared_f16(0x20000, n * n)
         .unwrap();
     assert_eq!(y_remote, y_local, "ART must deliver identical bytes");
+    // The producer's ART op handles were logged for workload waits.
+    assert_eq!(eng.model.take_art_ops_for(1).len(), 4);
     // Spot-check numerics against the software backend (inputs are
     // fp16-exact; the output rounds through fp16 on store).
-    let mut be = SoftwareBackend;
-    let expect = be.matmul(n, n, n, &a, &b, None).unwrap();
+    let expect = SoftwareBackend.matmul(n, n, n, &a, &b, None).unwrap();
     for (idx, (got, want)) in y_local.iter().zip(&expect).enumerate() {
         assert!(
             (got - want).abs() <= 0.25,
@@ -345,12 +360,15 @@ fn compute_with_art_streams_results_to_peer() {
 #[test]
 fn user_am_logged() {
     let mut eng = engine();
-    let tag_opcode = eng.model.nodes[1]
+    let tag_opcode = eng
+        .model
+        .node_mut(1)
         .core
         .handlers
         .register_user(9)
         .unwrap();
-    let op = eng.model.ops.issue(OpKind::AmRequest, eng.now(), 0);
+    let now = eng.now();
+    let op = eng.model.issue_op(0, OpKind::AmRequest, now, 0);
     eng.inject_now(Event::HostCmd {
         node: 0,
         cmd: HostCmd::AmShort {
@@ -361,11 +379,19 @@ fn user_am_logged() {
         },
     });
     eng.run_to_quiescence();
-    assert_eq!(eng.model.user_am_log.len(), 1);
-    let am = &eng.model.user_am_log[0];
+    let ams = eng.model.user_ams();
+    assert_eq!(ams.len(), 1);
+    let am = ams[0];
     assert_eq!(am.node, 1);
     assert_eq!(am.tag, 9);
     assert_eq!(am.args, [11, 22, 33, 44]);
+    // The sender's op completed — news of delivery took one wire flight.
+    assert!(eng.model.op_is_complete(op));
+    let st = eng.model.op(op).unwrap();
+    assert!(
+        st.completed_at.unwrap() >= am.at + eng.model.cfg().link.propagation,
+        "delivery news travels back over the wire"
+    );
 }
 
 #[test]
@@ -374,9 +400,9 @@ fn multihop_ring_forwards() {
     let data = vec![0x5A; 700];
     let op = put(&mut eng, 0, GlobalAddr::new(2, 0x100), data.clone());
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
+    assert!(eng.model.op_is_complete(op));
     assert_eq!(
-        eng.model.nodes[2].mem.read_shared(0x100, 700).unwrap(),
+        eng.model.node(2).mem.read_shared(0x100, 700).unwrap(),
         &data[..]
     );
     assert!(eng.counters.get("pkts_forwarded") >= 1, "2 hops needed");
@@ -388,9 +414,9 @@ fn loopback_put_to_self() {
     let data = vec![3u8; 2048];
     let op = put(&mut eng, 0, GlobalAddr::new(0, 0x7000), data.clone());
     eng.run_to_quiescence();
-    assert!(eng.model.ops.is_complete(op));
+    assert!(eng.model.op_is_complete(op));
     assert_eq!(
-        eng.model.nodes[0].mem.read_shared(0x7000, 2048).unwrap(),
+        eng.model.node(0).mem.read_shared(0x7000, 2048).unwrap(),
         &data[..]
     );
 }

@@ -12,9 +12,9 @@ use crate::gasnet::{AmCategory, AmKind, OpId, OpKind, Packet};
 use crate::memory::NodeId;
 use crate::sim::{Counters, Sched, SimTime};
 
-use super::{Event, FshmemWorld};
+use super::{Event, OpSig, Wv};
 
-impl FshmemWorld {
+impl Wv<'_> {
     /// ARQ: replay a corrupted packet on its link (consumes wire time and
     /// delays subsequent traffic — goodput loss is physical).
     pub(super) fn on_retransmit(
@@ -26,8 +26,8 @@ impl FshmemWorld {
         c: &mut Counters,
     ) {
         c.incr("pkts_retransmitted");
-        let (_, _, peer, peer_port) = self.wiring.links[link];
-        let (_tx, rx_at) = self.links[link].send(now, pkt.wire_bytes());
+        let (_, _, peer, peer_port) = self.sh.wiring.links[link];
+        let (_tx, rx_at) = self.link_mut(link).send(now, pkt.wire_bytes());
         q.schedule_at(
             rx_at,
             Event::PacketArrive {
@@ -51,35 +51,42 @@ impl FshmemWorld {
         // CRC at the PHY; the receiver NACKs and the sender replays it
         // from the retransmit buffer. The replay goes back *through the
         // link* (after a NACK round trip), so it consumes wire time and
-        // delays subsequent traffic — goodput loss is physical.
-        if self.cfg.link_loss_permille > 0
-            && self.fault_rng.below(1000) < self.cfg.link_loss_permille as u64
+        // delays subsequent traffic — goodput loss is physical. The
+        // receiving node's deterministic fault source rolls.
+        let loss_permille = self.cfg().link_loss_permille;
+        if loss_permille > 0
+            && self.node_mut(node).arq_rng.below(1000) < loss_permille as u64
         {
-            if let Some(link) = self.wiring.link_into(node, port) {
+            if let Some(link) = self.sh.wiring.link_into(node, port) {
                 c.incr("pkts_dropped");
-                let p = &self.cfg.link;
+                let p = &self.sh.cfg.link;
                 let nack_rtt = p.propagation
                     + p.serialize(crate::gasnet::WIRE_HEADER_BYTES); // NACK back
                 q.schedule_at(now + nack_rtt, Event::Retransmit { link, pkt });
                 return;
             }
         }
-        match self.router.decide(node, pkt.dst) {
+        match self.sh.router.decide(node, pkt.dst) {
             Route::Local => {
-                let at = now + self.cfg.timing.rx_decode();
+                let at = now + self.cfg().timing.rx_decode();
                 // Multi-hop arrivals: the cut-through header event was
                 // only scheduled for direct neighbors; fire it here at
-                // store-and-forward granularity.
-                if pkt.first && self.cfg.topology.hops(pkt.src, node) > 1 {
-                    q.schedule_at(
+                // store-and-forward granularity, routed to the op owner.
+                if pkt.first && self.cfg().topology.hops(pkt.src, node) > 1 {
+                    let owner = match pkt.kind {
+                        AmKind::Request => pkt.src,
+                        AmKind::Reply => pkt.dst,
+                    };
+                    self.route_header(
+                        q,
+                        now,
+                        node,
+                        owner,
                         at,
-                        Event::HeaderArrive {
-                            node,
-                            token: pkt.token,
-                            handler: pkt.handler,
-                            kind: pkt.kind,
-                            category: pkt.category,
-                        },
+                        pkt.token,
+                        pkt.handler,
+                        pkt.kind,
+                        pkt.category,
                     );
                 }
                 q.schedule_at(at, Event::PacketLocal { node, pkt });
@@ -87,11 +94,12 @@ impl FshmemWorld {
             Route::Forward { port, delay } => {
                 c.incr("pkts_forwarded");
                 let li = self
+                    .sh
                     .wiring
                     .link(node, port)
                     .expect("router chose an unwired port");
-                let (_tx, rx_at) = self.links[li].send(now + delay, pkt.wire_bytes());
-                let (_, _, peer, peer_port) = self.wiring.links[li];
+                let (_tx, rx_at) = self.link_mut(li).send(now + delay, pkt.wire_bytes());
+                let (_, _, peer, peer_port) = self.sh.wiring.links[li];
                 q.schedule_at(
                     rx_at,
                     Event::PacketArrive {
@@ -118,7 +126,7 @@ impl FshmemWorld {
         // Write-DMA the payload (per packet, no reassembly needed: each
         // fragment carries an absolute address).
         if pkt.payload_len() > 0 {
-            let mem = &mut self.nodes[node as usize].mem;
+            let mem = &mut self.node_mut(node).mem;
             match pkt.category {
                 AmCategory::Long => {
                     debug_assert_eq!(pkt.dst_addr.node(), node);
@@ -136,9 +144,20 @@ impl FshmemWorld {
             // PUTs (and striped GET reply legs) share the token, so this
             // accumulates across stripes; completion is the handler
             // engine's job (PUT: ack path; GET: PutReply handler runs
-            // once per fully-received leg — `OpState::parts`).
+            // once per fully-received leg — `OpState::parts`). The PUT
+            // case observes on behalf of a *remote* owner (the
+            // initiator) and routes the observation back as an OpSignal;
+            // the GET-reply case lands at the owner itself.
             if matches!(pkt.handler, H_PUT | H_PUT_REPLY) {
-                self.ops.data_progress(pkt.token, now, pkt.payload_len());
+                self.op_signal(
+                    q,
+                    now,
+                    node,
+                    pkt.token,
+                    OpSig::Data {
+                        bytes: pkt.payload_len(),
+                    },
+                );
             }
         }
 
@@ -153,25 +172,24 @@ impl FshmemWorld {
             true
         } else {
             let stripe = pkt.args[3];
-            let idx = self
-                .rx_progress
+            let progress = &mut self.node_mut(node).rx_progress;
+            let idx = progress
                 .iter()
-                .position(|&(n, t, s, _)| n == node && t == pkt.token && s == stripe);
+                .position(|&(t, s, _)| t == pkt.token && s == stripe);
             let got = match idx {
                 Some(i) => {
-                    self.rx_progress[i].3 += pkt.payload_len();
-                    self.rx_progress[i].3
+                    progress[i].2 += pkt.payload_len();
+                    progress[i].2
                 }
                 None => {
-                    self.rx_progress
-                        .push((node, pkt.token, stripe, pkt.payload_len()));
+                    progress.push((pkt.token, stripe, pkt.payload_len()));
                     pkt.payload_len()
                 }
             };
             debug_assert!(got <= pkt.msg_payload_len, "over-delivery");
             if got >= pkt.msg_payload_len {
                 if let Some(i) = idx {
-                    self.rx_progress.swap_remove(i);
+                    progress.swap_remove(i);
                 }
                 true
             } else {
@@ -179,19 +197,21 @@ impl FshmemWorld {
             }
         };
         if complete {
-            let core = &mut self.nodes[node as usize].core;
+            let core = &mut self.node_mut(node).core;
             if core.handler_enqueue(pkt) {
                 q.schedule_at(now, Event::HandlerStart { node });
             }
         }
     }
 
-    /// Header-front accounting (the paper's latency endpoints).
+    /// Header-front accounting (the paper's latency endpoints). Runs at
+    /// the op *owner* (`node`); `observed` is the decoder-side
+    /// observation time carried by the event.
     #[allow(clippy::too_many_arguments)]
     pub(super) fn on_header_arrive(
         &mut self,
-        now: SimTime,
-        _node: NodeId,
+        node: NodeId,
+        observed: SimTime,
         token: OpId,
         handler: u8,
         kind: AmKind,
@@ -199,16 +219,17 @@ impl FshmemWorld {
         c: &mut Counters,
     ) {
         let Some((issued, op_kind, op_bytes, seen)) = self
+            .node(node)
             .ops
             .get(token)
             .map(|op| (op.issued, op.kind, op.bytes, op.header_at.is_some()))
         else {
             return;
         };
-        let lat = now.since(issued);
+        let lat = observed.since(issued);
         match (handler, kind) {
             (H_PUT, AmKind::Request) => {
-                self.ops.header_arrived(token, now);
+                self.node_mut(node).ops.header_arrived(token, observed);
                 // Striped PUTs fire one HeaderArrive per stripe for the
                 // same op token; sample the latency series once per op
                 // (matching header_at's first-only semantics).
@@ -223,7 +244,7 @@ impl FshmemWorld {
                 }
             }
             (H_PUT_REPLY, AmKind::Reply) => {
-                self.ops.header_arrived(token, now);
+                self.node_mut(node).ops.header_arrived(token, observed);
                 if seen {
                     return;
                 }

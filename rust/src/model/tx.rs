@@ -9,13 +9,13 @@
 use std::sync::Arc;
 
 use crate::fabric::PortId;
-use crate::gasnet::{AmMessage, MsgClass, Payload};
+use crate::gasnet::{AmKind, AmMessage, MsgClass, Payload};
 use crate::memory::NodeId;
 use crate::sim::{Counters, Sched, SimTime};
 
-use super::{Event, FshmemWorld};
+use super::{Event, Wv};
 
-impl FshmemWorld {
+impl Wv<'_> {
     pub(super) fn on_tx_enqueue(
         &mut self,
         now: SimTime,
@@ -26,10 +26,7 @@ impl FshmemWorld {
         q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
-        let kick = self.nodes[node as usize]
-            .core
-            .port_mut(port)
-            .enqueue(class, msg);
+        let kick = self.node_mut(node).core.port_mut(port).enqueue(class, msg);
         c.incr("tx_enqueued");
         if kick {
             q.schedule_at(now, Event::SeqStart { node, port });
@@ -43,7 +40,7 @@ impl FshmemWorld {
         port: PortId,
         q: &mut Sched<Event>,
     ) {
-        let ptx = self.nodes[node as usize].core.port_mut(port);
+        let ptx = self.node_mut(node).core.port_mut(port);
         ptx.seq_busy = false;
         if ptx.pending() > 0 {
             q.schedule_at(now, Event::SeqStart { node, port });
@@ -63,7 +60,7 @@ impl FshmemWorld {
                 offset,
                 len,
             } => {
-                let mem = &self.nodes[node as usize].mem;
+                let mem = &self.node(node).mem;
                 let data = if *shared {
                     mem.read_shared(*offset, *len as usize)
                 } else {
@@ -71,6 +68,15 @@ impl FshmemWorld {
                 };
                 Arc::new(data.expect("sequencer read-DMA out of bounds").to_vec())
             }
+        }
+    }
+
+    /// The op owner a message's header observation belongs to: the
+    /// initiator — the source of a request, the destination of a reply.
+    fn header_owner(msg_kind: AmKind, src: NodeId, dst: NodeId) -> NodeId {
+        match msg_kind {
+            AmKind::Request => src,
+            AmKind::Reply => dst,
         }
     }
 
@@ -85,7 +91,7 @@ impl FshmemWorld {
         q: &mut Sched<Event>,
         c: &mut Counters,
     ) {
-        let ptx = self.nodes[node as usize].core.port_mut(port);
+        let ptx = self.node_mut(node).core.port_mut(port);
         if ptx.seq_busy {
             return;
         }
@@ -98,15 +104,17 @@ impl FshmemWorld {
         let payload_buf = self.resolve_payload(node, &msg.payload);
         let has_payload = !payload_buf.is_empty();
         let pkts =
-            crate::gasnet::wire::packetize(&msg, payload_buf, self.cfg.packet_payload);
-        let timing = self.cfg.timing;
-        let dma = self.cfg.dma.clone();
+            crate::gasnet::wire::packetize(&msg, payload_buf, self.cfg().packet_payload);
+        let timing = self.cfg().timing;
+        let dma = self.cfg().dma.clone();
+        let loss_permille = self.cfg().link_loss_permille;
         let loopback = msg.dst == node;
         let link_idx = if loopback {
             None
         } else {
             Some(
-                self.wiring
+                self.sh
+                    .wiring
                     .link(node, port)
                     .unwrap_or_else(|| panic!("port {port} of node {node} unwired")),
             )
@@ -137,51 +145,54 @@ impl FshmemWorld {
                     // Self-delivery: skip the PHY, straight to rx decode.
                     let at = ready + timing.rx_decode();
                     if pkt.first {
-                        q.schedule_at(
+                        let owner = Self::header_owner(pkt.kind, pkt.src, pkt.dst);
+                        self.route_header(
+                            q,
+                            now,
+                            node,
+                            owner,
                             at,
-                            Event::HeaderArrive {
-                                node,
-                                token: pkt.token,
-                                handler: pkt.handler,
-                                kind: pkt.kind,
-                                category: pkt.category,
-                            },
+                            pkt.token,
+                            pkt.handler,
+                            pkt.kind,
+                            pkt.category,
                         );
                     }
                     q.schedule_at(at, Event::PacketLocal { node, pkt });
                     seq_free = ready;
                 }
                 Some(li) => {
-                    let ser = self.links[li].params.serialize(pkt.wire_bytes());
-                    let ser_hdr = self.links[li]
-                        .params
-                        .serialize(crate::gasnet::WIRE_HEADER_BYTES);
-                    let prop = self.links[li].params.propagation;
-                    let (tx_done, rx_at) =
-                        self.links[li].send(ready, pkt.wire_bytes());
-                    let (_, _, peer, peer_port) = self.wiring.links[li];
+                    let params = self.link(li).params;
+                    let ser = params.serialize(pkt.wire_bytes());
+                    let ser_hdr = params.serialize(crate::gasnet::WIRE_HEADER_BYTES);
+                    let prop = params.propagation;
+                    let (tx_done, rx_at) = self.link_mut(li).send(ready, pkt.wire_bytes());
+                    let (_, _, peer, peer_port) = self.sh.wiring.links[li];
                     if pkt.first && pkt.dst == peer {
                         // Cut-through header observation: the header flit
                         // reaches the peer's decoder one body-serialization
                         // earlier than the full packet.
                         let hdr_at =
                             (tx_done - ser) + ser_hdr + prop + timing.rx_decode();
-                        q.schedule_at(
+                        let owner = Self::header_owner(pkt.kind, pkt.src, pkt.dst);
+                        self.route_header(
+                            q,
+                            now,
+                            node,
+                            owner,
                             hdr_at,
-                            Event::HeaderArrive {
-                                node: peer,
-                                token: pkt.token,
-                                handler: pkt.handler,
-                                kind: pkt.kind,
-                                category: pkt.category,
-                            },
+                            pkt.token,
+                            pkt.handler,
+                            pkt.kind,
+                            pkt.category,
                         );
                     }
                     // ARQ roll at send time (equivalent to the receiver's
-                    // CRC check, one heap event earlier).
-                    let lost = self.cfg.link_loss_permille > 0
-                        && self.fault_rng.below(1000)
-                            < self.cfg.link_loss_permille as u64;
+                    // CRC check, one heap event earlier). The sending
+                    // node's deterministic fault source rolls.
+                    let lost = loss_permille > 0
+                        && self.node_mut(node).arq_rng.below(1000)
+                            < loss_permille as u64;
                     if lost {
                         c.incr("pkts_dropped");
                         q.schedule_at(

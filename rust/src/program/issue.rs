@@ -4,13 +4,22 @@
 //! and turns API-level operations into `HostCmd` events injected at an
 //! explicit issue time. Both front ends sit on top of it:
 //!
-//! * `api::Fshmem` issues everything at the engine's current global time
-//!   (the legacy synchronous single-issuer discipline), and
+//! * `api::Fshmem` issues everything at its single program clock (the
+//!   legacy synchronous single-issuer discipline), and
 //! * `program::Spmd` issues each rank's commands at that rank's local
 //!   virtual clock, which is how independent hosts overlap.
 //!
 //! Nothing here advances time; running the engine (and deciding *when*
 //! it may advance) is the front end's job.
+//!
+//! `Config` picks the execution backend: monolithic (`shards = off`),
+//! sequential sharded (`shards = auto|N`, bit-identical —
+//! `rust/tests/sharded.rs`), or threaded sharded (`engine_threads =
+//! auto|N`, trace-compatible — `rust/tests/parallel.rs`). Front ends
+//! never care: the `IssueCore` surface is backend-agnostic, with one
+//! caveat — the threaded backend advances a whole conservative window
+//! per step, so mid-run observations (`step`, `run_until`) have window
+//! granularity rather than event granularity.
 
 use std::sync::Arc;
 
@@ -21,15 +30,103 @@ use crate::fabric::PortId;
 use crate::gasnet::{OpKind, Payload};
 use crate::memory::{AddressMap, GlobalAddr, NodeId};
 use crate::model::{Event, FshmemWorld, HostCmd, UserAm};
-use crate::sim::{Engine, SimTime};
+use crate::sim::{Counters, Engine, ParEngine, SimTime};
+
+/// The execution backend an [`IssueCore`] drives (see module docs).
+pub(crate) enum EngineKind {
+    /// Monolithic or sequential sharded engine.
+    Seq(Engine<FshmemWorld>),
+    /// Threaded sharded engine.
+    Par(ParEngine<FshmemWorld>),
+}
+
+impl EngineKind {
+    fn now(&self) -> SimTime {
+        match self {
+            EngineKind::Seq(e) => e.now(),
+            EngineKind::Par(e) => e.now(),
+        }
+    }
+
+    fn model(&self) -> &FshmemWorld {
+        match self {
+            EngineKind::Seq(e) => &e.model,
+            EngineKind::Par(e) => &e.model,
+        }
+    }
+
+    fn model_mut(&mut self) -> &mut FshmemWorld {
+        match self {
+            EngineKind::Seq(e) => &mut e.model,
+            EngineKind::Par(e) => &mut e.model,
+        }
+    }
+
+    fn counters(&self) -> &Counters {
+        match self {
+            EngineKind::Seq(e) => &e.counters,
+            EngineKind::Par(e) => &e.counters,
+        }
+    }
+
+    fn counters_mut(&mut self) -> &mut Counters {
+        match self {
+            EngineKind::Seq(e) => &mut e.counters,
+            EngineKind::Par(e) => &mut e.counters,
+        }
+    }
+
+    fn inject_at(&mut self, at: SimTime, event: Event) {
+        match self {
+            EngineKind::Seq(e) => e.inject_at(at, event),
+            EngineKind::Par(e) => e.inject_at(at, event),
+        }
+    }
+
+    fn step(&mut self) -> bool {
+        match self {
+            EngineKind::Seq(e) => e.step(),
+            EngineKind::Par(e) => e.step(),
+        }
+    }
+
+    fn run_to_quiescence(&mut self) -> SimTime {
+        match self {
+            EngineKind::Seq(e) => e.run_to_quiescence(),
+            EngineKind::Par(e) => e.run_to_quiescence(),
+        }
+    }
+
+    fn run_until(&mut self, pred: impl FnMut(&FshmemWorld) -> bool) -> bool {
+        match self {
+            EngineKind::Seq(e) => e.run_until(pred),
+            EngineKind::Par(e) => e.run_until(pred),
+        }
+    }
+
+    fn events_processed(&self) -> u64 {
+        match self {
+            EngineKind::Seq(e) => e.events_processed(),
+            EngineKind::Par(e) => e.events_processed(),
+        }
+    }
+
+    fn sharding(&self) -> Option<crate::sim::ShardingReport> {
+        match self {
+            EngineKind::Seq(e) => e.sharding(),
+            EngineKind::Par(e) => e.sharding(),
+        }
+    }
+}
 
 /// Engine + address map: the shared substrate of every host front end.
 pub struct IssueCore {
-    pub(crate) eng: Engine<FshmemWorld>,
+    pub(crate) eng: EngineKind,
     pub(crate) addr_map: AddressMap,
 }
 
 impl IssueCore {
+    /// Build the fabric and pick the execution backend from `cfg`.
     pub fn new(mut cfg: Config) -> Self {
         cfg.validate().expect("invalid config");
         let addr_map = AddressMap::new(cfg.topology.nodes(), cfg.segment_bytes);
@@ -39,28 +136,84 @@ impl IssueCore {
                 .expect("loading PJRT backend (run `make artifacts` first)");
             world.set_backend(Box::new(backend));
         }
-        // `Config::shards` picks the execution backend; both are
-        // bit-identical (rust/tests/sharded.rs), so front ends never care.
-        let eng = match cfg.shard_plan() {
-            Some(plan) => Engine::new_sharded(world, plan),
-            None => Engine::new(world),
+        // `Config` picks the execution backend; sequential backends are
+        // bit-identical (rust/tests/sharded.rs) and the threaded one is
+        // trace-compatible (rust/tests/parallel.rs), so front ends never
+        // care.
+        let eng = match (cfg.shard_plan(), cfg.engine_thread_count()) {
+            (Some(plan), Some(threads)) => {
+                EngineKind::Par(ParEngine::new(world, plan, threads))
+            }
+            (Some(plan), None) => EngineKind::Seq(Engine::new_sharded(world, plan)),
+            (None, _) => EngineKind::Seq(Engine::new(world)),
         };
         IssueCore { eng, addr_map }
     }
 
-    /// Per-shard advance statistics (sharded engine only).
+    /// Per-shard advance statistics (sharded backends only).
     pub fn sharding(&self) -> Option<crate::sim::ShardingReport> {
         self.eng.sharding()
     }
 
+    /// Number of fabric nodes.
     pub fn nodes(&self) -> u32 {
         self.addr_map.nodes
     }
 
+    /// Current simulated time (window-granular under `engine_threads`).
     pub fn now(&self) -> SimTime {
         self.eng.now()
     }
 
+    /// The simulated world (read access for reports and tests).
+    pub fn world(&self) -> &FshmemWorld {
+        self.eng.model()
+    }
+
+    /// The simulated world, mutably (untimed staging access).
+    pub fn world_mut(&mut self) -> &mut FshmemWorld {
+        self.eng.model_mut()
+    }
+
+    /// The engine's counters.
+    pub fn counters(&self) -> &Counters {
+        self.eng.counters()
+    }
+
+    /// The engine's counters, mutably (reset between sweep phases).
+    pub fn counters_mut(&mut self) -> &mut Counters {
+        self.eng.counters_mut()
+    }
+
+    /// Total events handled so far.
+    pub fn events_processed(&self) -> u64 {
+        self.eng.events_processed()
+    }
+
+    /// The configured host completion-observation latency.
+    pub fn host_wake(&self) -> SimTime {
+        self.eng.model().cfg().host_wake
+    }
+
+    /// Advance the engine minimally: one event (sequential backends) or
+    /// one conservative window (threaded backend). Returns false when
+    /// drained.
+    pub fn step(&mut self) -> bool {
+        self.eng.step()
+    }
+
+    /// Run until the event queues drain; returns the final time.
+    pub fn run_to_quiescence(&mut self) -> SimTime {
+        self.eng.run_to_quiescence()
+    }
+
+    /// Run until `pred(world)` holds or the queues drain. Under the
+    /// threaded backend the predicate is checked at window boundaries.
+    pub fn run_until(&mut self, pred: impl FnMut(&FshmemWorld) -> bool) -> bool {
+        self.eng.run_until(pred)
+    }
+
+    /// Compose a global address from `(node, offset)`.
     pub fn global_addr(&self, node: NodeId, offset: u64) -> GlobalAddr {
         self.addr_map
             .compose(node, offset)
@@ -69,44 +222,62 @@ impl IssueCore {
 
     // ---- untimed host memory staging (PCIe preload path) ----------------
 
+    /// Stage bytes into `node`'s shared segment (untimed preload).
     pub fn write_local(&mut self, node: NodeId, offset: u64, data: &[u8]) {
-        self.eng.model.nodes[node as usize]
+        self.eng
+            .model_mut()
+            .node_mut(node)
             .mem
             .write_shared(offset, data)
             .expect("host preload out of bounds");
     }
 
+    /// Read bytes from `node`'s shared segment (untimed).
     pub fn read_shared(&self, node: NodeId, offset: u64, len: usize) -> Vec<u8> {
-        self.eng.model.nodes[node as usize]
+        self.eng
+            .model()
+            .node(node)
             .mem
             .read_shared(offset, len)
             .expect("host read out of bounds")
             .to_vec()
     }
 
+    /// Stage f32 values into `node`'s shared segment (untimed).
     pub fn write_local_f32(&mut self, node: NodeId, offset: u64, data: &[f32]) {
-        self.eng.model.nodes[node as usize]
+        self.eng
+            .model_mut()
+            .node_mut(node)
             .mem
             .write_shared_f32(offset, data)
             .expect("host preload out of bounds");
     }
 
+    /// Read f32 values from `node`'s shared segment (untimed).
     pub fn read_shared_f32(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
-        self.eng.model.nodes[node as usize]
+        self.eng
+            .model()
+            .node(node)
             .mem
             .read_shared_f32(offset, count)
             .expect("host read out of bounds")
     }
 
+    /// Stage fp16 tensor values into `node`'s shared segment (untimed).
     pub fn write_local_f16(&mut self, node: NodeId, offset: u64, data: &[f32]) {
-        self.eng.model.nodes[node as usize]
+        self.eng
+            .model_mut()
+            .node_mut(node)
             .mem
             .write_shared_f16(offset, data)
             .expect("host preload out of bounds");
     }
 
+    /// Read fp16 tensor values from `node`'s shared segment (untimed).
     pub fn read_shared_f16(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
-        self.eng.model.nodes[node as usize]
+        self.eng
+            .model()
+            .node(node)
             .mem
             .read_shared_f16(offset, count)
             .expect("host read out of bounds")
@@ -140,7 +311,10 @@ impl IssueCore {
         self.addr_map
             .translate(dst, data.len() as u64)
             .expect("put destination out of range");
-        let op = self.eng.model.ops.issue(OpKind::Put, at, data.len() as u64);
+        let op = self
+            .eng
+            .model_mut()
+            .issue_op(src_node, OpKind::Put, at, data.len() as u64);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -174,7 +348,7 @@ impl IssueCore {
         self.addr_map
             .translate(dst, len)
             .expect("put destination out of range");
-        let op = self.eng.model.ops.issue(OpKind::Put, at, len);
+        let op = self.eng.model_mut().issue_op(src_node, OpKind::Put, at, len);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -211,7 +385,7 @@ impl IssueCore {
         self.addr_map
             .translate(src, len)
             .expect("get source out of range");
-        let op = self.eng.model.ops.issue(OpKind::Get, at, len);
+        let op = self.eng.model_mut().issue_op(node, OpKind::Get, at, len);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -229,6 +403,7 @@ impl IssueCore {
 
     // ---- active messages -------------------------------------------------
 
+    /// `gasnet_AMRequestShort` issued at `at` from `src_node`.
     pub fn am_short_at(
         &mut self,
         at: SimTime,
@@ -237,7 +412,10 @@ impl IssueCore {
         handler: u8,
         args: [u32; 4],
     ) -> OpHandle {
-        let op = self.eng.model.ops.issue(OpKind::AmRequest, at, 0);
+        let op = self
+            .eng
+            .model_mut()
+            .issue_op(src_node, OpKind::AmRequest, at, 0);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -253,6 +431,7 @@ impl IssueCore {
         OpHandle(op)
     }
 
+    /// `gasnet_AMRequestMedium` issued at `at` from `src_node`.
     #[allow(clippy::too_many_arguments)]
     pub fn am_medium_at(
         &mut self,
@@ -264,11 +443,12 @@ impl IssueCore {
         data: &[u8],
         private_offset: u64,
     ) -> OpHandle {
-        let op = self
-            .eng
-            .model
-            .ops
-            .issue(OpKind::AmRequest, at, data.len() as u64);
+        let op = self.eng.model_mut().issue_op(
+            src_node,
+            OpKind::AmRequest,
+            at,
+            data.len() as u64,
+        );
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -288,6 +468,7 @@ impl IssueCore {
 
     // ---- compute + synchronization ---------------------------------------
 
+    /// Dispatch a DLA job to `target` from `host_node` at `at`.
     pub fn compute_at(
         &mut self,
         at: SimTime,
@@ -295,7 +476,10 @@ impl IssueCore {
         target: NodeId,
         mut job: DlaJob,
     ) -> OpHandle {
-        let op = self.eng.model.ops.issue(OpKind::Compute, at, 0);
+        let op = self
+            .eng
+            .model_mut()
+            .issue_op(host_node, OpKind::Compute, at, 0);
         job.notify = Some((host_node, op));
         self.eng.inject_at(
             at,
@@ -310,7 +494,7 @@ impl IssueCore {
     /// Enter the barrier from `node` at `at`; the handle completes on the
     /// barrier release reaching `node`.
     pub fn barrier_at(&mut self, at: SimTime, node: NodeId) -> OpHandle {
-        let op = self.eng.model.ops.issue(OpKind::Barrier, at, 0);
+        let op = self.eng.model_mut().issue_op(node, OpKind::Barrier, at, 0);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -323,7 +507,9 @@ impl IssueCore {
 
     /// Register a user handler tag on `node`; returns the AM opcode.
     pub fn register_handler(&mut self, node: NodeId, tag: u8) -> u8 {
-        self.eng.model.nodes[node as usize]
+        self.eng
+            .model_mut()
+            .node_mut(node)
             .core
             .handlers
             .register_user(tag)
@@ -332,13 +518,14 @@ impl IssueCore {
 
     // ---- completion state ------------------------------------------------
 
+    /// True once `h` completed.
     pub fn is_complete(&self, h: OpHandle) -> bool {
-        self.eng.model.ops.is_complete(h.0)
+        self.eng.model().op_is_complete(h.0)
     }
 
     /// Completion time of `h`, if it has completed.
     pub fn completed_at(&self, h: OpHandle) -> Option<SimTime> {
-        self.eng.model.ops.get(h.0).and_then(|st| st.completed_at)
+        self.eng.model().op(h.0).and_then(|st| st.completed_at)
     }
 
     /// Timestamps of an op: (issued, header_at, data_done, completed).
@@ -346,7 +533,7 @@ impl IssueCore {
         &self,
         h: OpHandle,
     ) -> (SimTime, Option<SimTime>, Option<SimTime>, Option<SimTime>) {
-        let st = self.eng.model.ops.get(h.0).expect("unknown op");
+        let st = self.eng.model().op(h.0).expect("unknown op");
         (st.issued, st.header_at, st.data_done_at, st.completed_at)
     }
 
@@ -355,23 +542,16 @@ impl IssueCore {
     /// Remove and return the earliest-delivered user AM matching
     /// `(node, tag)`, if one has been delivered.
     pub fn take_am_for(&mut self, node: NodeId, tag: u8) -> Option<UserAm> {
-        let log = &mut self.eng.model.user_am_log;
-        let idx = log.iter().position(|am| am.node == node && am.tag == tag)?;
-        Some(log.remove(idx))
+        self.eng.model_mut().take_am_for(node, tag)
     }
 
     /// Drain ART-transfer handles produced by `node`'s DLA jobs.
     pub fn take_art_ops_for(&mut self, node: NodeId) -> Vec<OpHandle> {
-        let ops = &mut self.eng.model.art_ops;
-        let mut taken = Vec::new();
-        let mut i = 0;
-        while i < ops.len() {
-            if ops[i].0 == node {
-                taken.push(OpHandle(ops.remove(i).1));
-            } else {
-                i += 1;
-            }
-        }
-        taken
+        self.eng
+            .model_mut()
+            .take_art_ops_for(node)
+            .into_iter()
+            .map(OpHandle)
+            .collect()
     }
 }

@@ -13,8 +13,8 @@
 //! * [`IssueCore`] — the timestamped command-issue core shared by every
 //!   front end: each API call becomes a `HostCmd` event injected at an
 //!   explicit issue time. `Fshmem` is the thin single-issuer special
-//!   case (issue time == global now); the SPMD driver below is the
-//!   general case.
+//!   case (one program clock for the whole fabric); the SPMD driver
+//!   below is the general case.
 //! * [`Rank`] — the per-node host-program handle. A program calls
 //!   `put`/`get`/`compute`/`barrier`/`wait` on its rank exactly like an
 //!   OpenSHMEM PE; each rank carries its own **local virtual clock**
@@ -90,6 +90,8 @@ impl NbiRegion {
 /// wire. Obtained from [`Spmd::register_signal`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AmTag {
+    /// User-level tag programs match on.
     pub tag: u8,
+    /// Wire opcode the handler table assigned.
     pub opcode: u8,
 }

@@ -123,10 +123,12 @@ impl Rank {
         self.id
     }
 
+    /// Number of ranks in the program (the fabric size).
     pub fn nodes(&self) -> u32 {
         self.nodes
     }
 
+    /// Compose a global address from `(node, offset)`.
     pub fn global_addr(&self, node: NodeId, offset: u64) -> GlobalAddr {
         GlobalAddr::new(node, offset)
     }
@@ -208,6 +210,7 @@ impl Rank {
         }
     }
 
+    /// [`Rank::wait`] on every handle, in order.
     pub fn wait_all(&mut self, hs: &[OpHandle]) {
         for &h in hs {
             self.wait(h);
@@ -276,16 +279,19 @@ impl Rank {
         self.wait_all(&hs);
     }
 
+    /// [`Rank::put`] recorded into the open NBI region.
     pub fn put_nbi(&mut self, dst: GlobalAddr, data: &[u8]) -> OpHandle {
         let h = self.put(dst, data);
         self.nbi.record(h)
     }
 
+    /// [`Rank::put_from_mem`] recorded into the open NBI region.
     pub fn put_from_mem_nbi(&mut self, src_offset: u64, len: u64, dst: GlobalAddr) -> OpHandle {
         let h = self.put_from_mem(src_offset, len, dst);
         self.nbi.record(h)
     }
 
+    /// [`Rank::get`] recorded into the open NBI region.
     pub fn get_nbi(&mut self, src: GlobalAddr, local_offset: u64, len: u64) -> OpHandle {
         let h = self.get(src, local_offset, len);
         self.nbi.record(h)
@@ -293,6 +299,7 @@ impl Rank {
 
     // ---- untimed host memory access (own node only) ----------------------
 
+    /// Stage bytes into this node's shared segment (untimed preload).
     pub fn write_local(&mut self, offset: u64, data: &[u8]) {
         match self.request(Req::WriteLocal {
             offset,
@@ -303,6 +310,7 @@ impl Rank {
         }
     }
 
+    /// Stage fp16 tensor values into this node's segment (untimed).
     pub fn write_local_f16(&mut self, offset: u64, data: &[f32]) {
         match self.request(Req::WriteLocalF16 {
             offset,
@@ -313,6 +321,7 @@ impl Rank {
         }
     }
 
+    /// Read bytes from this node's shared segment (untimed).
     pub fn read_shared(&mut self, offset: u64, len: usize) -> Vec<u8> {
         match self.request(Req::ReadShared { offset, len }) {
             Resp::Bytes(b) => b,
@@ -320,6 +329,7 @@ impl Rank {
         }
     }
 
+    /// Read fp16 tensor values from this node's segment (untimed).
     pub fn read_shared_f16(&mut self, offset: u64, count: usize) -> Vec<f32> {
         match self.request(Req::ReadSharedF16 { offset, count }) {
             Resp::Floats(v) => v,

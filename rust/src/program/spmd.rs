@@ -18,8 +18,8 @@
 //! every `HostCmd` it issues lands in the queue's future.
 //!
 //! Under the sharded engine (`Config::shards`), the advance loop is
-//! where the shard barrier lives: each `eng.step()` runs one event under
-//! the conservative-window discipline (`sim::shard`), and window
+//! where the shard barrier lives: each `core.step()` runs one event
+//! under the conservative-window discipline (`sim::shard`), and window
 //! boundaries — channel drains + horizon advances — happen inside the
 //! step, between the driver's condition checks. The invariant above
 //! still holds shard-locally: a rank's conditions resolve on events in
@@ -27,6 +27,17 @@
 //! at the receiver), the engine pauses at that exact event, and the
 //! rank's follow-up commands target its own shard — so they always land
 //! at or after that shard's local clock.
+//!
+//! Under the threaded engine (`Config::engine_threads`), one
+//! `core.step()` runs a whole conservative window, so the driver
+//! observes resolutions at window granularity. Causality is preserved by
+//! the `host_wake >= lookahead` contract (`Config::validate`): a rank
+//! resumes with `clock = resolution time + host_wake`, which is at or
+//! beyond the horizon of the window that resolved it — every follow-up
+//! command lands in the engine's future. Because `host_wake` is applied
+//! by every backend, the issue timeline is *identical* to a sequential
+//! run of the same config (the trace-compatibility contract,
+//! `rust/tests/parallel.rs`).
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::time::Duration;
@@ -44,17 +55,22 @@ use super::AmTag;
 /// virtual time.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TimelineEntry {
+    /// The rank's local virtual time at issue.
     pub at: SimTime,
+    /// Human-readable description of the command.
     pub what: String,
 }
 
 /// Per-rank summary of an SPMD run (the scale-out report's raw material).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RankTimeline {
+    /// Rank id.
     pub rank: u32,
     /// Commands issued (puts, gets, computes, barriers, signals).
     pub cmds: usize,
+    /// Local time of the first issued command.
     pub first_issue: Option<SimTime>,
+    /// Local time of the last issued command.
     pub last_issue: Option<SimTime>,
     /// Local virtual time when the rank's program returned.
     pub finish: SimTime,
@@ -83,6 +99,7 @@ impl<R> SpmdReport<R> {
         self.finish.iter().copied().max().unwrap_or(SimTime::ZERO)
     }
 
+    /// Summarize the per-rank timelines (first/last issue, counts).
     pub fn rank_timelines(&self) -> Vec<RankTimeline> {
         self.timelines
             .iter()
@@ -154,32 +171,39 @@ pub struct Spmd {
 }
 
 impl Spmd {
+    /// Build a fabric + SPMD driver from `cfg`.
     pub fn new(cfg: Config) -> Self {
         Spmd {
             core: IssueCore::new(cfg),
         }
     }
 
+    /// Number of fabric nodes (= ranks per run).
     pub fn nodes(&self) -> u32 {
         self.core.nodes()
     }
 
+    /// Current simulated time.
     pub fn now(&self) -> SimTime {
         self.core.now()
     }
 
+    /// The engine's measurement counters.
     pub fn counters(&self) -> &Counters {
-        &self.core.eng.counters
+        self.core.counters()
     }
 
+    /// Total events handled so far.
     pub fn events_processed(&self) -> u64 {
-        self.core.eng.events_processed()
+        self.core.events_processed()
     }
 
+    /// The simulated world (read access for reports and tests).
     pub fn world(&self) -> &FshmemWorld {
-        &self.core.eng.model
+        self.core.world()
     }
 
+    /// Compose a global address from `(node, offset)`.
     pub fn global_addr(&self, node: NodeId, offset: u64) -> GlobalAddr {
         self.core.global_addr(node, offset)
     }
@@ -194,26 +218,32 @@ impl Spmd {
 
     // ---- untimed staging (outside the measured window) -------------------
 
+    /// Stage bytes into `node`'s shared segment (untimed preload).
     pub fn write_local(&mut self, node: NodeId, offset: u64, data: &[u8]) {
         self.core.write_local(node, offset, data);
     }
 
+    /// Read bytes from `node`'s shared segment (untimed).
     pub fn read_shared(&self, node: NodeId, offset: u64, len: usize) -> Vec<u8> {
         self.core.read_shared(node, offset, len)
     }
 
+    /// Stage f32 values into `node`'s shared segment (untimed).
     pub fn write_local_f32(&mut self, node: NodeId, offset: u64, data: &[f32]) {
         self.core.write_local_f32(node, offset, data);
     }
 
+    /// Read f32 values from `node`'s shared segment (untimed).
     pub fn read_shared_f32(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
         self.core.read_shared_f32(node, offset, count)
     }
 
+    /// Stage fp16 tensor values (the DLA's native format; untimed).
     pub fn write_local_f16(&mut self, node: NodeId, offset: u64, data: &[f32]) {
         self.core.write_local_f16(node, offset, data);
     }
 
+    /// Read fp16 tensor values from `node`'s shared segment (untimed).
     pub fn read_shared_f16(&self, node: NodeId, offset: u64, count: usize) -> Vec<f32> {
         self.core.read_shared_f16(node, offset, count)
     }
@@ -287,7 +317,7 @@ impl Spmd {
                 })
                 .collect()
         });
-        let end = self.core.eng.run_to_quiescence();
+        let end = self.core.run_to_quiescence();
         SpmdReport {
             results,
             finish: ctls.iter().map(|c| c.clock).collect(),
@@ -403,7 +433,7 @@ fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize
         }
         Req::Wait(h) => match core.completed_at(h) {
             Some(t) => {
-                ctls[i].clock = ctls[i].clock.max(t);
+                ctls[i].clock = ctls[i].clock.max(t + core.host_wake());
                 Resp::Done
             }
             None => {
@@ -414,7 +444,7 @@ fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize
         Req::Test(h) => Resp::Bool(core.is_complete(h)),
         Req::WaitAm { tag } => match core.take_am_for(node, tag) {
             Some(am) => {
-                ctls[i].clock = ctls[i].clock.max(am.at);
+                ctls[i].clock = ctls[i].clock.max(am.at + core.host_wake());
                 Resp::Am(am)
             }
             None => {
@@ -445,8 +475,9 @@ fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize
 /// resume every rank whose condition holds, stamping its local clock
 /// with the resolution time.
 fn advance(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>]) {
+    let wake = core.host_wake();
     loop {
-        if !core.eng.step() {
+        if !core.step() {
             let stuck: Vec<String> = ctls
                 .iter()
                 .enumerate()
@@ -471,7 +502,7 @@ fn advance(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>]) {
             match cond {
                 WaitCond::Op(h) => {
                     if let Some(t) = core.completed_at(h) {
-                        ctls[i].clock = ctls[i].clock.max(t);
+                        ctls[i].clock = ctls[i].clock.max(t + wake);
                         ctls[i].state = State::Computing;
                         resp[i].send(Resp::Done).expect("SPMD rank thread died");
                         resumed = true;
@@ -479,7 +510,7 @@ fn advance(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>]) {
                 }
                 WaitCond::Am(tag) => {
                     if let Some(am) = core.take_am_for(i as NodeId, tag) {
-                        ctls[i].clock = ctls[i].clock.max(am.at);
+                        ctls[i].clock = ctls[i].clock.max(am.at + wake);
                         ctls[i].state = State::Computing;
                         resp[i].send(Resp::Am(am)).expect("SPMD rank thread died");
                         resumed = true;

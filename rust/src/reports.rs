@@ -190,27 +190,56 @@ pub fn fig7(matmuls: &[MatmulResult], convs: &[ConvResult]) -> String {
 /// the per-node issue timelines of the largest fabric (the evidence that
 /// ranks issued concurrently rather than in host-call order).
 pub fn scaleout(case: &ScaleoutCase, rows: &[ScaleoutRow]) -> String {
+    let compare = rows.iter().any(|r| r.par.is_some());
     let table_rows: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
-            vec![
+            let mut cols = vec![
                 r.nodes.to_string(),
                 f(r.elapsed.as_us(), 1),
                 f(r.speedup, 2),
                 format!("{:.0}%", 100.0 * r.efficiency),
-            ]
+            ];
+            if compare {
+                match &r.par {
+                    Some(p) => {
+                        cols.push(format!("{:.0}", p.wall_seq.as_secs_f64() * 1e3));
+                        cols.push(format!("{:.0}", p.wall_par.as_secs_f64() * 1e3));
+                        cols.push(format!("{:.2}x ({}t)", p.wall_speedup, p.threads));
+                    }
+                    None => cols.extend(["-".into(), "-".into(), "-".into()]),
+                }
+            }
+            cols
         })
         .collect();
+    let headers: &[&str] = if compare {
+        &[
+            "Nodes",
+            "T (us)",
+            "Speedup",
+            "Efficiency",
+            "wall seq (ms)",
+            "wall par (ms)",
+            "wall speedup",
+        ]
+    } else {
+        &["Nodes", "T (us)", "Speedup", "Efficiency"]
+    };
     let mut out = format!(
         "Scale-out (SPMD concurrent issue): {} x {}^3 matmul jobs, {} KiB ring halo/iter\n{}",
         case.total_jobs,
         case.mm,
         case.exchange_bytes >> 10,
-        table::render(
-            &["Nodes", "T (us)", "Speedup", "Efficiency"],
-            &table_rows
-        )
+        table::render(headers, &table_rows)
     );
+    if compare {
+        out.push_str(
+            "\nwall columns: same simulated run executed on the sequential vs \
+             threaded sharded DES (trace-compatible; host_wake = link \
+             propagation on both)\n",
+        );
+    }
     if let Some(last) = rows.last() {
         out.push_str(&format!(
             "\nper-node issue timelines ({} nodes):\n",
@@ -242,6 +271,22 @@ pub fn scaleout(case: &ScaleoutCase, rows: &[ScaleoutRow]) -> String {
                     s.events,
                     s.sent_cross,
                     s.recv_cross,
+                ));
+            }
+        }
+        if let Some(psh) = last.par.as_ref().and_then(|p| p.shards.as_ref()) {
+            out.push_str(&format!(
+                "\nthreaded run ({} workers, {} windows, {:.1} ms inside \
+                 parallel windows):\n",
+                psh.threads,
+                psh.windows,
+                psh.window_wall_ns as f64 / 1e6,
+            ));
+            for s in &psh.shards {
+                out.push_str(&format!(
+                    "  shard {} (nodes {}-{}): {} events, busy {:.1} ms\n",
+                    s.shard, s.first_node, s.last_node, s.events,
+                    s.busy_ns as f64 / 1e6,
                 ));
             }
         }
@@ -312,7 +357,13 @@ mod tests {
     fn scaleout_report_shows_speedups_and_timelines() {
         use crate::workloads::scaleout as so;
         let case = so::ScaleoutCase::fast();
-        let rows = so::run_sweep(&[1, 2], &case, crate::config::ShardSpec::Off);
+        let rows = so::run_sweep(
+            &[1, 2],
+            &case,
+            crate::config::ShardSpec::Off,
+            crate::config::ThreadSpec::Off,
+            crate::config::Numerics::TimingOnly,
+        );
         let t = scaleout(&case, &rows);
         assert!(t.contains("Speedup"), "{t}");
         assert!(t.contains("per-node issue timelines (2 nodes)"), "{t}");
@@ -324,7 +375,13 @@ mod tests {
     fn scaleout_report_shows_per_shard_advance_stats() {
         use crate::workloads::scaleout as so;
         let case = so::ScaleoutCase::fast();
-        let rows = so::run_sweep(&[2], &case, crate::config::ShardSpec::Auto);
+        let rows = so::run_sweep(
+            &[2],
+            &case,
+            crate::config::ShardSpec::Auto,
+            crate::config::ThreadSpec::Off,
+            crate::config::Numerics::TimingOnly,
+        );
         let t = scaleout(&case, &rows);
         assert!(t.contains("per-shard advance (2 shards"), "{t}");
         assert!(t.contains("shard 0 (nodes 0-0):"), "{t}");

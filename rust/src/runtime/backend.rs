@@ -7,6 +7,8 @@
 //! reference backend and are counted, so benches can assert the hot path
 //! stayed on PJRT.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::Result;
 
 use crate::dla::{ComputeBackend, SoftwareBackend};
@@ -16,8 +18,8 @@ use super::executor::PjrtRuntime;
 pub struct PjrtBackend {
     rt: PjrtRuntime,
     fallback: SoftwareBackend,
-    pub pjrt_calls: u64,
-    pub fallback_calls: u64,
+    pjrt_calls: AtomicU64,
+    fallback_calls: AtomicU64,
 }
 
 impl PjrtBackend {
@@ -25,8 +27,8 @@ impl PjrtBackend {
         Ok(PjrtBackend {
             rt: PjrtRuntime::load(dir)?,
             fallback: SoftwareBackend,
-            pjrt_calls: 0,
-            fallback_calls: 0,
+            pjrt_calls: AtomicU64::new(0),
+            fallback_calls: AtomicU64::new(0),
         })
     }
 
@@ -34,9 +36,19 @@ impl PjrtBackend {
         PjrtBackend {
             rt,
             fallback: SoftwareBackend,
-            pjrt_calls: 0,
-            fallback_calls: 0,
+            pjrt_calls: AtomicU64::new(0),
+            fallback_calls: AtomicU64::new(0),
         }
+    }
+
+    /// Calls served by a compiled PJRT artifact.
+    pub fn pjrt_calls(&self) -> u64 {
+        self.pjrt_calls.load(Ordering::Relaxed)
+    }
+
+    /// Calls that fell back to the software reference backend.
+    pub fn fallback_calls(&self) -> u64 {
+        self.fallback_calls.load(Ordering::Relaxed)
     }
 
     fn matmul_artifact(&self, m: usize, k: usize, n: usize, acc: bool) -> Option<String> {
@@ -72,7 +84,7 @@ impl PjrtBackend {
 
 impl ComputeBackend for PjrtBackend {
     fn matmul(
-        &mut self,
+        &self,
         m: usize,
         k: usize,
         n: usize,
@@ -82,22 +94,22 @@ impl ComputeBackend for PjrtBackend {
     ) -> Result<Vec<f32>> {
         match (self.matmul_artifact(m, k, n, y_in.is_some()), y_in) {
             (Some(name), None) => {
-                self.pjrt_calls += 1;
+                self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
                 Ok(self.rt.execute_f32(&name, &[a, b])?.remove(0))
             }
             (Some(name), Some(seed)) => {
-                self.pjrt_calls += 1;
+                self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
                 Ok(self.rt.execute_f32(&name, &[seed, a, b])?.remove(0))
             }
             (None, _) => {
-                self.fallback_calls += 1;
+                self.fallback_calls.fetch_add(1, Ordering::Relaxed);
                 self.fallback.matmul(m, k, n, a, b, y_in)
             }
         }
     }
 
     fn conv2d(
-        &mut self,
+        &self,
         h: usize,
         w: usize,
         cin: usize,
@@ -108,11 +120,11 @@ impl ComputeBackend for PjrtBackend {
     ) -> Result<Vec<f32>> {
         match self.conv_artifact(h, w, cin, cout, ksize) {
             Some(name) => {
-                self.pjrt_calls += 1;
+                self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
                 Ok(self.rt.execute_f32(&name, &[x, wts])?.remove(0))
             }
             None => {
-                self.fallback_calls += 1;
+                self.fallback_calls.fetch_add(1, Ordering::Relaxed);
                 self.fallback.conv2d(h, w, cin, cout, ksize, x, wts)
             }
         }

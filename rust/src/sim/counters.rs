@@ -13,28 +13,34 @@ use std::collections::BTreeMap;
 
 use super::time::SimTime;
 
+/// A named series of duration samples with order statistics.
 #[derive(Debug, Default, Clone)]
 pub struct LatencySeries {
     samples_ps: Vec<u64>,
 }
 
 impl LatencySeries {
+    /// Append one sample.
     pub fn record(&mut self, d: SimTime) {
         self.samples_ps.push(d.as_ps());
     }
 
+    /// Number of samples recorded.
     pub fn count(&self) -> usize {
         self.samples_ps.len()
     }
 
+    /// Smallest sample (zero when empty).
     pub fn min(&self) -> SimTime {
         SimTime(self.samples_ps.iter().copied().min().unwrap_or(0))
     }
 
+    /// Largest sample (zero when empty).
     pub fn max(&self) -> SimTime {
         SimTime(self.samples_ps.iter().copied().max().unwrap_or(0))
     }
 
+    /// Arithmetic mean (zero when empty).
     pub fn mean(&self) -> SimTime {
         if self.samples_ps.is_empty() {
             return SimTime::ZERO;
@@ -43,7 +49,7 @@ impl LatencySeries {
         SimTime((sum / self.samples_ps.len() as u128) as u64)
     }
 
-    /// p in [0, 100]; nearest-rank percentile.
+    /// `p` in `[0, 100]`; nearest-rank percentile.
     pub fn percentile(&self, p: f64) -> SimTime {
         if self.samples_ps.is_empty() {
             return SimTime::ZERO;
@@ -54,6 +60,7 @@ impl LatencySeries {
         SimTime(sorted[rank.min(sorted.len() - 1)])
     }
 
+    /// The raw samples, in record order, in picoseconds.
     pub fn samples(&self) -> &[u64] {
         &self.samples_ps
     }
@@ -73,14 +80,17 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add 1 to the monotonic counter `key`.
     pub fn incr(&mut self, key: &'static str) {
         self.add(key, 1);
     }
 
+    /// Add `n` to the monotonic counter `key`.
     pub fn add(&mut self, key: &'static str, n: u64) {
         for (k, v) in self.counts.iter_mut() {
             if std::ptr::eq(*k as *const str, key as *const str) || *k == key {
@@ -91,6 +101,7 @@ impl Counters {
         self.counts.push((key, n));
     }
 
+    /// Current value of the monotonic counter `key` (0 if never touched).
     pub fn get(&self, key: &'static str) -> u64 {
         self.counts
             .iter()
@@ -99,10 +110,12 @@ impl Counters {
             .unwrap_or(0)
     }
 
+    /// Append a duration sample to the latency series `key`.
     pub fn record_latency(&mut self, key: &'static str, d: SimTime) {
         self.latencies.entry(key).or_default().record(d);
     }
 
+    /// The latency series recorded under `key`, if any.
     pub fn latency(&self, key: &'static str) -> Option<&LatencySeries> {
         self.latencies.get(key)
     }
@@ -114,12 +127,33 @@ impl Counters {
         v.into_iter()
     }
 
+    /// Latency series in key order.
     pub fn latencies(
         &self,
     ) -> impl Iterator<Item = (&'static str, &LatencySeries)> + '_ {
         self.latencies.iter().map(|(&k, v)| (k, v))
     }
 
+    /// Drain `other` into `self`: monotonic counts add, latency samples
+    /// append in `other`'s record order. Used by the threaded backend to
+    /// fold per-shard scratch counters into the master registry at
+    /// window boundaries — counts merge exactly; sample *order* follows
+    /// the merge order (the trace-compatibility relaxation; the sample
+    /// multiset is exact).
+    pub fn merge_from(&mut self, other: &mut Counters) {
+        for (k, v) in std::mem::take(&mut other.counts) {
+            self.add(k, v);
+        }
+        for (k, series) in std::mem::take(&mut other.latencies) {
+            self.latencies
+                .entry(k)
+                .or_default()
+                .samples_ps
+                .extend(series.samples_ps);
+        }
+    }
+
+    /// Forget everything recorded so far.
     pub fn reset(&mut self) {
         self.counts.clear();
         self.latencies.clear();
@@ -161,6 +195,23 @@ mod tests {
         let s = LatencySeries::default();
         assert_eq!(s.mean(), SimTime::ZERO);
         assert_eq!(s.percentile(50.0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn merge_drains_and_accumulates() {
+        let mut a = Counters::new();
+        a.incr("x");
+        a.record_latency("l", SimTime::from_ns(1));
+        let mut b = Counters::new();
+        b.add("x", 4);
+        b.incr("y");
+        b.record_latency("l", SimTime::from_ns(2));
+        a.merge_from(&mut b);
+        assert_eq!(a.get("x"), 5);
+        assert_eq!(a.get("y"), 1);
+        assert_eq!(a.latency("l").unwrap().samples(), &[1_000, 2_000]);
+        assert_eq!(b.get("x"), 0, "source drained");
+        assert!(b.latency("l").is_none(), "source drained");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The event loop: pops events in time order and hands them to the model.
 //!
-//! Two execution backends behind one `Engine` interface:
+//! Two sequential execution backends behind one `Engine` interface (the
+//! threaded third lives in [`super::parallel`]):
 //!
 //! * **monolithic** — a single fabric-wide [`EventQueue`] (the classic
 //!   sequential DES);
@@ -12,27 +13,41 @@
 //! Handlers never touch a queue directly: they schedule follow-ups
 //! through a [`Sched`], and the engine routes the batch afterwards —
 //! into the single queue, or across shard queues and inter-shard
-//! channels. Scheduling order assigns the deterministic tie-break
-//! sequence either way, so the two backends order same-instant events
-//! identically.
+//! channels.
+//!
+//! ## Causal tie-break streams
+//!
+//! Same-instant ties break by [`SeqKey`]s `(stream, counter)` assigned at
+//! scheduling time. Stream ids are *causal*, not global:
+//!
+//! * events scheduled by a handler use the handling node's **handler
+//!   stream** (`2 * node`), counted in that node's execution order;
+//! * events injected from outside (host commands) use the target node's
+//!   **inject stream** (`2 * node + 1`), counted in the driver's
+//!   per-node issue order.
+//!
+//! A node's execution order and a driver's per-node issue order are the
+//! same under every backend, so all three backends assign identical keys
+//! and pop identical per-node event sequences — this is what lets the
+//! threaded backend ([`super::parallel`]) reproduce the sequential trace
+//! exactly even though it relaxes the global interleaving.
 
 use super::counters::Counters;
-use super::queue::EventQueue;
+use super::queue::{EventQueue, SeqKey};
 use super::shard::{ShardPlan, ShardingReport, Shards};
 use super::time::SimTime;
 
 /// Deferred scheduler handed to [`Model::handle`]: follow-up events are
 /// buffered in call order and routed by the engine once the handler
-/// returns. Call order is commitment order — ties at one instant pop in
-/// the order they were scheduled, exactly like scheduling straight into
-/// the queue.
+/// returns. Call order is commitment order — ties at one instant from
+/// the same handler pop in the order they were scheduled.
 pub struct Sched<E> {
-    now: SimTime,
-    buf: Vec<(SimTime, E)>,
+    pub(crate) now: SimTime,
+    pub(crate) buf: Vec<(SimTime, E)>,
 }
 
 impl<E> Sched<E> {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Sched {
             now: SimTime::ZERO,
             buf: Vec::new(),
@@ -62,14 +77,51 @@ impl<E> Sched<E> {
     }
 }
 
+/// Per-stream tie-break counters (see module docs for the stream id
+/// scheme). Grows on demand; stream ids are small (`2 * nodes + 2`).
+#[derive(Debug, Default)]
+pub(crate) struct StreamCtrs {
+    ctrs: Vec<u64>,
+}
+
+impl StreamCtrs {
+    pub(crate) fn new() -> Self {
+        StreamCtrs::default()
+    }
+
+    /// Next key on `stream`.
+    pub(crate) fn next(&mut self, stream: u64) -> SeqKey {
+        let i = stream as usize;
+        if i >= self.ctrs.len() {
+            self.ctrs.resize(i + 1, 0);
+        }
+        let c = self.ctrs[i];
+        self.ctrs[i] += 1;
+        (stream, c)
+    }
+}
+
+/// Handler stream id of `node` (events scheduled by its handlers).
+pub(crate) fn handler_stream(node: u32) -> u64 {
+    2 * node as u64
+}
+
+/// Inject stream id of `node` (host commands targeting it).
+pub(crate) fn inject_stream(node: u32) -> u64 {
+    2 * node as u64 + 1
+}
+
 /// A simulated system: holds all component state and reacts to events.
 ///
 /// `handle` receives the event plus a [`Sched`] (to schedule follow-ups)
 /// and the counters (to record measurements). The engine owns the loop;
 /// the model owns the semantics.
 pub trait Model {
+    /// The event type driving this model.
     type Event;
 
+    /// React to `event` at time `now`, scheduling follow-ups through
+    /// `sched` and recording measurements in `counters`.
     fn handle(
         &mut self,
         now: SimTime,
@@ -79,8 +131,9 @@ pub trait Model {
     );
 
     /// The node whose component state `event` touches — the sharded
-    /// backend's partition key. Models that only ever run monolithic
-    /// keep the default (everything on one shard).
+    /// backends' partition key and the tie-break stream id source.
+    /// Models that only ever run monolithic keep the default (everything
+    /// on one node).
     fn shard_node(&self, _event: &Self::Event) -> u32 {
         0
     }
@@ -93,10 +146,13 @@ enum Exec<E> {
 
 /// DES engine: an execution backend + a [`Model`] + [`Counters`].
 pub struct Engine<M: Model> {
+    /// The simulated system.
     pub model: M,
+    /// Measurement registry shared by every handler invocation.
     pub counters: Counters,
     exec: Exec<M::Event>,
     sched: Sched<M::Event>,
+    streams: StreamCtrs,
     events_processed: u64,
 }
 
@@ -108,6 +164,7 @@ impl<M: Model> Engine<M> {
             counters: Counters::new(),
             exec: Exec::Mono(EventQueue::new()),
             sched: Sched::new(),
+            streams: StreamCtrs::new(),
             events_processed: 0,
         }
     }
@@ -120,10 +177,12 @@ impl<M: Model> Engine<M> {
             counters: Counters::new(),
             exec: Exec::Sharded(Shards::new(plan)),
             sched: Sched::new(),
+            streams: StreamCtrs::new(),
             events_processed: 0,
         }
     }
 
+    /// Current simulated time (timestamp of the last popped event).
     pub fn now(&self) -> SimTime {
         match &self.exec {
             Exec::Mono(q) => q.now(),
@@ -131,6 +190,7 @@ impl<M: Model> Engine<M> {
         }
     }
 
+    /// Total events handled so far.
     pub fn events_processed(&self) -> u64 {
         self.events_processed
     }
@@ -144,13 +204,17 @@ impl<M: Model> Engine<M> {
     }
 
     /// Inject an event at an absolute time (e.g. a host command arrival).
+    /// Draws from the target node's inject stream.
     pub fn inject_at(&mut self, at: SimTime, event: M::Event) {
+        let node = self.model.shard_node(&event);
+        let key = self.streams.next(inject_stream(node));
         match &mut self.exec {
-            Exec::Mono(q) => q.schedule_at(at, event),
-            Exec::Sharded(s) => s.inject(&self.model, at, event),
+            Exec::Mono(q) => q.schedule_at_key(at, key, event),
+            Exec::Sharded(s) => s.inject(&self.model, at, key, event),
         }
     }
 
+    /// Inject an event at the current simulated time.
     pub fn inject_now(&mut self, event: M::Event) {
         let at = self.now();
         self.inject_at(at, event);
@@ -168,15 +232,21 @@ impl<M: Model> Engine<M> {
         self.events_processed += 1;
         debug_assert!(self.sched.buf.is_empty());
         self.sched.now = now;
+        let src = self.model.shard_node(&event);
         self.model
             .handle(now, event, &mut self.sched, &mut self.counters);
+        let stream = handler_stream(src);
         match &mut self.exec {
             Exec::Mono(q) => {
                 for (at, ev) in self.sched.buf.drain(..) {
-                    q.schedule_at(at, ev);
+                    q.schedule_at_key(at, self.streams.next(stream), ev);
                 }
             }
-            Exec::Sharded(s) => s.route(&self.model, self.sched.buf.drain(..)),
+            Exec::Sharded(s) => {
+                for (at, ev) in self.sched.buf.drain(..) {
+                    s.route(&self.model, at, self.streams.next(stream), ev);
+                }
+            }
         }
         true
     }
@@ -284,8 +354,9 @@ mod tests {
 
     #[test]
     fn sched_orders_same_instant_by_call_order() {
-        // Two follow-ups at the same instant pop in schedule order —
-        // the deterministic-replay contract both backends share.
+        // Two follow-ups at the same instant from one handler pop in
+        // schedule order — the deterministic-replay contract every
+        // backend shares.
         struct Fan {
             fired: Vec<u32>,
         }
@@ -310,5 +381,14 @@ mod tests {
         eng.inject_at(SimTime::ZERO, 0);
         eng.run_to_quiescence();
         assert_eq!(eng.model.fired, vec![0, 10, 11, 12]);
+    }
+
+    #[test]
+    fn stream_ctrs_are_independent() {
+        let mut s = StreamCtrs::new();
+        assert_eq!(s.next(3), (3, 0));
+        assert_eq!(s.next(3), (3, 1));
+        assert_eq!(s.next(0), (0, 0));
+        assert_eq!(s.next(3), (3, 2));
     }
 }

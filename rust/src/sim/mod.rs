@@ -7,25 +7,33 @@
 //!
 //! Determinism contract: given the same initial model state and the same
 //! injected events, the processed event sequence is identical — ties in
-//! time are broken by schedule order (a monotonically increasing sequence
-//! number). The property test suite asserts trace equality across runs.
+//! time are broken by causal `(stream, counter)` keys assigned at
+//! scheduling time (see [`engine`]). The property test suite asserts
+//! trace equality across runs.
 //!
-//! Two execution backends share that contract: the monolithic queue and
-//! the sharded backend (`shard` — per-shard queues synchronized by
-//! conservative time windows), which is bit-identical to the monolith
-//! and pinned so by the cross-engine equivalence suite
-//! (`rust/tests/sharded.rs`).
+//! Three execution backends share that contract:
+//!
+//! * the monolithic queue ([`Engine`]),
+//! * the sequential sharded backend ([`shard`] — per-shard queues
+//!   synchronized by conservative time windows), **bit-identical** to the
+//!   monolith and pinned so by the cross-engine equivalence suite
+//!   (`rust/tests/sharded.rs`),
+//! * the threaded sharded backend ([`parallel`] — each shard free-runs to
+//!   the window horizon on a worker thread), **trace-compatible** with
+//!   the sequential backends and pinned so by `rust/tests/parallel.rs`.
 
 pub mod counters;
 pub mod engine;
+pub mod parallel;
 pub mod queue;
 pub mod rng;
 pub mod shard;
 pub mod time;
 
-pub use counters::Counters;
+pub use counters::{Counters, LatencySeries};
 pub use engine::{Engine, Model, Sched};
-pub use queue::EventQueue;
+pub use parallel::{ParEngine, ParallelModel};
+pub use queue::{EventQueue, SeqKey};
 pub use rng::Rng;
 pub use shard::{ShardAdvance, ShardPlan, ShardingReport};
 pub use time::{ClockDomain, SimTime};

@@ -1,0 +1,605 @@
+//! Threaded shard execution: the opt-in parallel backend of the sharded
+//! DES (`engine_threads = auto|N` in `Config`).
+//!
+//! Structure is identical to the sequential sharded backend
+//! ([`super::shard`]): per-shard event queues, conservative time windows
+//! of one lookahead `L`, cross-shard events buffered in timestamped
+//! channels and drained at window boundaries. The difference is *who
+//! advances the shards inside a window*: here every shard **free-runs to
+//! the window horizon on a worker thread** (scoped threads, no
+//! `unsafe`), instead of a single thread advancing the globally smallest
+//! event.
+//!
+//! ## What is preserved, what is relaxed
+//!
+//! Within a window each shard's event set is fixed (that is what the
+//! conservative lookahead buys), and each shard pops its own queue in
+//! `(time, key)` order — so **per-shard execution order is identical to
+//! the sequential backends**. Only the *interleaving across shards*
+//! inside a window is relaxed; since a shard's handlers touch only that
+//! shard's state (the model's partition invariant, enforced by the
+//! per-part state layout), the relaxation is unobservable. Tie-break
+//! keys come from the causal streams of [`super::engine`] — assigned
+//! from per-node counters, never from the global execution order — so
+//! even cross-shard same-instant ties resolve exactly as the sequential
+//! engines resolve them. The result: counters, op timestamps, latency
+//! samples, and memory bytes are identical to `engine_threads = off`
+//! (`rust/tests/parallel.rs` pins this as the **trace-compatibility
+//! contract**; only internal event-pop interleavings — and therefore the
+//! append order of merged latency-sample buffers — may differ).
+//!
+//! ## The driver contract (`host_wake >= lookahead`)
+//!
+//! The sequential engines pause after *every* event, so a host program
+//! waiting on an op completion at time `t` may issue its next command at
+//! `t` exactly. A window cannot pause mid-flight: the driver regains
+//! control only at window boundaries, so anything it injects must land
+//! at or beyond the horizon of the window that woke it. `Config`
+//! enforces `host_wake >= link.propagation` (= the lookahead) whenever
+//! `engine_threads` is enabled: a resumed program's clock advances to
+//! `t + host_wake >= t_min + L = horizon`, which makes every injection
+//! causal — and, because `host_wake` is part of the *model* (applied by
+//! every backend), timestamps still match the sequential run exactly.
+//!
+//! ## Cost model
+//!
+//! Worker threads are spawned per window (scoped — the borrow checker
+//! proves part disjointness; nothing outlives the window). A window is
+//! therefore worth parallelizing when its events carry real work:
+//! numerics-bearing workloads (`Numerics::Software` DLA jobs) scale near
+//! the shard count, while pure timing-only event streams are dominated
+//! by per-window spawn overhead and usually run *slower* than
+//! `engine_threads = off`. `bench scaleout --engine-threads auto`
+//! measures both and prints the comparison; see the "Sharded engine"
+//! notes in `rust/README.md` for guidance.
+
+use std::time::Instant;
+
+use super::counters::Counters;
+use super::engine::{handler_stream, inject_stream, Model, Sched, StreamCtrs};
+use super::queue::{EventQueue, SeqKey};
+use super::shard::{report_from, ShardPlan, ShardStats, ShardingReport};
+use super::time::SimTime;
+
+/// A [`Model`] whose state is partitioned into per-shard parts plus a
+/// shared read-only context, making it executable by [`ParEngine`].
+///
+/// The contract mirrors the partition invariant the sharded backends
+/// already rely on: handling an event owned by shard *s* touches only
+/// part *s* (plus the immutable shared context). Here the type system
+/// enforces it — `handle_part` receives exactly one part mutably.
+pub trait ParallelModel: Model {
+    /// Immutable context every worker may read (config, wiring, routing
+    /// tables, numerics backend).
+    type Shared: Sync;
+    /// One shard's worth of mutable state.
+    type Part: Send;
+
+    /// Split the model into the shared context and its per-shard parts.
+    /// Part order must match the [`ShardPlan`] shard order.
+    fn split(&mut self) -> (&Self::Shared, &mut [Self::Part]);
+
+    /// The node whose state `event` touches (the partition key), derived
+    /// from the shared context only — workers have no `&self`.
+    fn event_node(shared: &Self::Shared, event: &Self::Event) -> u32;
+
+    /// Handle `event` against its owning part. The semantic twin of
+    /// [`Model::handle`]; the sequential backends route through the same
+    /// per-part code so every backend executes identical semantics.
+    fn handle_part(
+        shared: &Self::Shared,
+        part: &mut Self::Part,
+        now: SimTime,
+        event: Self::Event,
+        sched: &mut Sched<Self::Event>,
+        counters: &mut Counters,
+    );
+}
+
+/// One shard's working set for a window, handed to a worker thread.
+struct Lane<'a, M: ParallelModel> {
+    shard: usize,
+    queue: &'a mut EventQueue<M::Event>,
+    part: &'a mut M::Part,
+    counters: &'a mut Counters,
+    ctrs: &'a mut StreamCtrs,
+    stats: &'a mut ShardStats,
+    /// Cross-shard events produced this window: `(dst shard, at, key, event)`.
+    outbox: Vec<(usize, SimTime, SeqKey, M::Event)>,
+    /// Timestamp of this lane's last pop this window.
+    last_pop: SimTime,
+}
+
+/// Free-run one shard to the window horizon (runs on a worker thread).
+fn run_lane<M: ParallelModel>(
+    shared: &M::Shared,
+    plan: &ShardPlan,
+    lane: &mut Lane<'_, M>,
+    horizon: SimTime,
+) {
+    let t0 = Instant::now();
+    let mut sched: Sched<M::Event> = Sched::new();
+    loop {
+        match lane.queue.peek_key() {
+            Some((at, _)) if at < horizon => {}
+            _ => break,
+        }
+        let (now, event) = lane.queue.pop().expect("peeked head");
+        lane.stats.events += 1;
+        lane.last_pop = now;
+        sched.now = now;
+        let src = M::event_node(shared, &event);
+        M::handle_part(shared, lane.part, now, event, &mut sched, lane.counters);
+        let stream = handler_stream(src);
+        for (at, ev) in sched.buf.drain(..) {
+            let key = lane.ctrs.next(stream);
+            let dst = plan.shard_of(M::event_node(shared, &ev));
+            if dst == lane.shard {
+                lane.queue.schedule_at_key(at, key, ev);
+            } else {
+                assert!(
+                    at >= horizon,
+                    "conservative lookahead violated: cross-shard event for \
+                     shard {dst} at {at:?} lands inside the window ending at \
+                     {horizon:?}"
+                );
+                lane.stats.sent_cross += 1;
+                lane.outbox.push((dst, at, key, ev));
+            }
+        }
+    }
+    lane.stats.busy_ns += t0.elapsed().as_nanos() as u64;
+}
+
+/// The threaded DES engine: a [`ParallelModel`] advanced window-by-window
+/// by a pool of scoped worker threads. API mirrors [`super::Engine`];
+/// `step()` processes one whole window.
+pub struct ParEngine<M: ParallelModel> {
+    /// The simulated system (whole between windows; split during them).
+    pub model: M,
+    /// Merged measurement registry. Monotonic counters are exact;
+    /// latency-sample buffers append in (window, shard) order, which is
+    /// deterministic but may differ from the sequential append order
+    /// (the trace-compatibility relaxation).
+    pub counters: Counters,
+    plan: ShardPlan,
+    threads: u32,
+    queues: Vec<EventQueue<M::Event>>,
+    shard_counters: Vec<Counters>,
+    handler_ctrs: Vec<StreamCtrs>,
+    inject_ctrs: StreamCtrs,
+    stats: Vec<ShardStats>,
+    windows: u64,
+    window_wall_ns: u64,
+    /// Horizon of the last executed window (injections while events are
+    /// pending must land at or beyond it — the driver contract).
+    horizon: SimTime,
+    last_event: SimTime,
+    events_processed: u64,
+}
+
+impl<M: ParallelModel> ParEngine<M>
+where
+    M::Event: Send,
+{
+    /// A threaded engine over `plan` using up to `threads` workers
+    /// (clamped to the shard count; at least 1). The model's part count
+    /// must match the plan's shard count.
+    pub fn new(mut model: M, plan: ShardPlan, threads: u32) -> Self {
+        assert!(
+            plan.lookahead() > SimTime::ZERO,
+            "conservative windows need positive lookahead"
+        );
+        let n = plan.shards() as usize;
+        let parts = model.split().1.len();
+        assert_eq!(parts, n, "model has {parts} parts but the plan wants {n}");
+        ParEngine {
+            model,
+            counters: Counters::new(),
+            plan,
+            threads: threads.clamp(1, n as u32),
+            queues: (0..n).map(|_| EventQueue::new()).collect(),
+            shard_counters: (0..n).map(|_| Counters::new()).collect(),
+            handler_ctrs: (0..n).map(|_| StreamCtrs::new()).collect(),
+            inject_ctrs: StreamCtrs::new(),
+            stats: vec![ShardStats::default(); n],
+            windows: 0,
+            window_wall_ns: 0,
+            horizon: SimTime::ZERO,
+            last_event: SimTime::ZERO,
+            events_processed: 0,
+        }
+    }
+
+    /// Timestamp of the latest event handled so far. Unlike the
+    /// sequential engines this can only be observed at window
+    /// granularity; at quiescence it equals the sequential final time.
+    pub fn now(&self) -> SimTime {
+        self.last_event
+    }
+
+    /// Worker threads in use.
+    pub fn threads(&self) -> u32 {
+        self.threads
+    }
+
+    /// Total events handled so far.
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Per-shard advance statistics (always available — this backend is
+    /// sharded by construction).
+    pub fn sharding(&self) -> Option<ShardingReport> {
+        Some(report_from(
+            &self.plan,
+            self.plan.lookahead(),
+            self.windows,
+            self.threads,
+            self.window_wall_ns,
+            &self.stats,
+        ))
+    }
+
+    /// True when no events are pending anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Inject an event at an absolute time, drawing from the target
+    /// node's inject stream. While events are pending, the injection
+    /// must land at or beyond the last executed window's horizon
+    /// (guaranteed by the `host_wake >= lookahead` driver contract and
+    /// asserted here, so a contract violation fails loudly instead of
+    /// silently diverging from the sequential backends); at quiescence
+    /// anything from the last event time onward restarts the timeline.
+    pub fn inject_at(&mut self, at: SimTime, event: M::Event) {
+        if self.is_empty() {
+            assert!(
+                at >= self.last_event,
+                "event injected in the past: {:?} < {:?}",
+                at,
+                self.last_event
+            );
+            // Restarting from quiescence: the last window's horizon is
+            // stale (strictly beyond every processed event). Lower the
+            // causality bound to what was actually executed so the
+            // driver may keep injecting at its post-quiescence clock —
+            // the next step() re-establishes a real window horizon.
+            self.horizon = self.last_event;
+        } else {
+            assert!(
+                at >= self.horizon,
+                "threaded-engine injection at {:?} lands inside the executed \
+                 window ending at {:?}: the driver must observe completions \
+                 with host_wake >= lookahead",
+                at,
+                self.horizon
+            );
+        }
+        let node = self.model.shard_node(&event);
+        let key = self.inject_ctrs.next(inject_stream(node));
+        let dst = self.plan.shard_of(node);
+        self.queues[dst].schedule_at_key(at, key, event);
+    }
+
+    /// Process one conservative window across all shards in parallel.
+    /// Returns false when every queue is drained.
+    pub fn step(&mut self) -> bool {
+        let t_min = match self
+            .queues
+            .iter()
+            .filter_map(|q| q.peek_key())
+            .map(|(at, _)| at)
+            .min()
+        {
+            Some(t) => t,
+            None => return false,
+        };
+        let horizon = t_min + self.plan.lookahead();
+        self.horizon = horizon;
+        self.windows += 1;
+        let plan = self.plan;
+
+        let (shared, parts) = self.model.split();
+        let mut lanes: Vec<Lane<'_, M>> = self
+            .queues
+            .iter_mut()
+            .zip(parts.iter_mut())
+            .zip(self.shard_counters.iter_mut())
+            .zip(self.handler_ctrs.iter_mut())
+            .zip(self.stats.iter_mut())
+            .enumerate()
+            .map(|(i, ((((queue, part), counters), ctrs), stats))| Lane {
+                shard: i,
+                queue,
+                part,
+                counters,
+                ctrs,
+                stats,
+                outbox: Vec::new(),
+                last_pop: SimTime::ZERO,
+            })
+            .collect();
+
+        let wall = Instant::now();
+        // Distribute lanes over exactly `threads` workers (balanced:
+        // the first `len % threads` workers take one extra lane) —
+        // `chunks_mut(ceil)` would spawn fewer workers than configured
+        // whenever the counts don't divide evenly.
+        let workers = self.threads as usize;
+        let base = lanes.len() / workers;
+        let extra = lanes.len() % workers;
+        std::thread::scope(|s| {
+            let mut rest = lanes.as_mut_slice();
+            for w in 0..workers {
+                let take = base + usize::from(w < extra);
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                s.spawn(move || {
+                    for lane in chunk.iter_mut() {
+                        run_lane::<M>(shared, &plan, lane, horizon);
+                    }
+                });
+            }
+        });
+        self.window_wall_ns += wall.elapsed().as_nanos() as u64;
+
+        // Window barrier: account the window, then drain every outbox
+        // into its destination queue (deterministic: heap order is total
+        // over (time, key), so merge order is irrelevant).
+        let mut outboxes = Vec::with_capacity(lanes.len());
+        for lane in &mut lanes {
+            if lane.last_pop > self.last_event {
+                self.last_event = lane.last_pop;
+            }
+            outboxes.push(std::mem::take(&mut lane.outbox));
+        }
+        drop(lanes);
+        for outbox in outboxes {
+            for (dst, at, key, ev) in outbox {
+                debug_assert!(at >= horizon, "outbox held an in-window event");
+                self.stats[dst].recv_cross += 1;
+                self.queues[dst].schedule_at_key(at, key, ev);
+            }
+        }
+        for sc in self.shard_counters.iter_mut() {
+            self.counters.merge_from(sc);
+        }
+        self.events_processed = self.stats.iter().map(|s| s.events).sum();
+        true
+    }
+
+    /// Run until every queue drains. Returns the final simulated time
+    /// (identical to the sequential backends' final time).
+    pub fn run_to_quiescence(&mut self) -> SimTime {
+        while self.step() {}
+        self.last_event
+    }
+
+    /// Run until `pred(model)` holds or the queues drain, checking the
+    /// predicate at window boundaries. Returns true if the predicate was
+    /// satisfied. Note the granularity: by the time `pred` first holds,
+    /// the window containing the satisfying event has fully executed.
+    pub fn run_until(&mut self, mut pred: impl FnMut(&M) -> bool) -> bool {
+        loop {
+            if pred(&self.model) {
+                return true;
+            }
+            if !self.step() {
+                return pred(&self.model);
+            }
+        }
+    }
+
+    /// Run with an event-count budget, at window granularity (the budget
+    /// may be overshot by at most one window). Returns false if the
+    /// budget was exhausted with events still pending.
+    pub fn run_bounded(&mut self, max_events: u64) -> bool {
+        let start = self.events_processed;
+        loop {
+            if self.events_processed.saturating_sub(start) >= max_events {
+                return self.is_empty();
+            }
+            if !self.step() {
+                return true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Engine, SimTime};
+
+    /// A partitioned relay fabric: per-node hop logs live in per-shard
+    /// parts; handlers forward around the ring after `cross` (the wire)
+    /// and run a sub-lookahead local side chain.
+    struct RelayShared {
+        nodes: u32,
+        cross: SimTime,
+        hops: u32,
+    }
+
+    struct RelayPart {
+        first_node: u32,
+        /// Per owned node: the (time, id) hop log.
+        logs: Vec<Vec<(SimTime, u32)>>,
+    }
+
+    struct PRelay {
+        shared: RelayShared,
+        parts: Vec<RelayPart>,
+        plan: ShardPlan,
+    }
+
+    impl PRelay {
+        fn new(nodes: u32, cross_ns: u64, shards: u32) -> Self {
+            let plan =
+                ShardPlan::partition(shards, nodes, SimTime::from_ns(cross_ns));
+            let parts = (0..shards)
+                .map(|s| {
+                    let (first, last) = plan.node_range(s);
+                    RelayPart {
+                        first_node: first,
+                        logs: (first..=last).map(|_| Vec::new()).collect(),
+                    }
+                })
+                .collect();
+            PRelay {
+                shared: RelayShared {
+                    nodes,
+                    cross: SimTime::from_ns(cross_ns),
+                    hops: 12,
+                },
+                parts,
+                plan,
+            }
+        }
+
+        /// Per-node logs in node order (backend-independent observable).
+        fn logs(&self) -> Vec<Vec<(SimTime, u32)>> {
+            self.parts.iter().flat_map(|p| p.logs.clone()).collect()
+        }
+    }
+
+    impl Model for PRelay {
+        type Event = (u32, u32);
+
+        fn handle(
+            &mut self,
+            now: SimTime,
+            ev: (u32, u32),
+            sched: &mut Sched<(u32, u32)>,
+            c: &mut Counters,
+        ) {
+            let part = self.plan.shard_of(ev.0);
+            Self::handle_part(&self.shared, &mut self.parts[part], now, ev, sched, c);
+        }
+
+        fn shard_node(&self, ev: &(u32, u32)) -> u32 {
+            ev.0
+        }
+    }
+
+    impl ParallelModel for PRelay {
+        type Shared = RelayShared;
+        type Part = RelayPart;
+
+        fn split(&mut self) -> (&RelayShared, &mut [RelayPart]) {
+            (&self.shared, &mut self.parts)
+        }
+
+        fn event_node(_shared: &RelayShared, ev: &(u32, u32)) -> u32 {
+            ev.0
+        }
+
+        fn handle_part(
+            shared: &RelayShared,
+            part: &mut RelayPart,
+            now: SimTime,
+            (node, id): (u32, u32),
+            sched: &mut Sched<(u32, u32)>,
+            c: &mut Counters,
+        ) {
+            part.logs[(node - part.first_node) as usize].push((now, id));
+            c.incr("fired");
+            c.record_latency("hop", SimTime::from_ns(id as u64));
+            if id < shared.hops {
+                let peer = (node + 1) % shared.nodes;
+                sched.schedule_after(shared.cross, (peer, id + 1));
+                sched.schedule_after(SimTime::from_ns(1), (node, id + 1000));
+            }
+        }
+    }
+
+    fn sorted_samples(c: &Counters, key: &'static str) -> Vec<u64> {
+        let mut v = c
+            .latency(key)
+            .map(|s| s.samples().to_vec())
+            .unwrap_or_default();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn parallel_trace_matches_sequential() {
+        let mut mono = Engine::new(PRelay::new(4, 100, 1));
+        mono.inject_at(SimTime::from_ns(3), (0, 0));
+        mono.inject_at(SimTime::from_ns(3), (2, 0));
+        let mono_end = mono.run_to_quiescence();
+
+        for shards in 1..=4u32 {
+            for threads in [1u32, 2, 4] {
+                let model = PRelay::new(4, 100, shards);
+                let plan = ShardPlan::new(shards, 4, SimTime::from_ns(100));
+                let mut par = ParEngine::new(model, plan, threads);
+                par.inject_at(SimTime::from_ns(3), (0, 0));
+                par.inject_at(SimTime::from_ns(3), (2, 0));
+                let end = par.run_to_quiescence();
+                let label = format!("{shards} shards / {threads} threads");
+                assert_eq!(end, mono_end, "{label}: end time");
+                assert_eq!(
+                    par.events_processed(),
+                    mono.events_processed(),
+                    "{label}: events"
+                );
+                assert_eq!(
+                    par.model.logs(),
+                    mono.model.logs(),
+                    "{label}: per-node hop logs"
+                );
+                assert_eq!(
+                    par.counters.get("fired"),
+                    mono.counters.get("fired"),
+                    "{label}: counters"
+                );
+                assert_eq!(
+                    sorted_samples(&par.counters, "hop"),
+                    sorted_samples(&mono.counters, "hop"),
+                    "{label}: latency samples (as multisets)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reports_thread_count_and_busy_stats() {
+        let model = PRelay::new(4, 100, 4);
+        let plan = ShardPlan::new(4, 4, SimTime::from_ns(100));
+        let mut par = ParEngine::new(model, plan, 2);
+        par.inject_at(SimTime::ZERO, (0, 0));
+        par.run_to_quiescence();
+        let rep = par.sharding().expect("threaded backend always reports");
+        assert_eq!(rep.threads, 2);
+        assert!(rep.windows > 0);
+        assert_eq!(rep.shards.len(), 4);
+        let events: u64 = rep.shards.iter().map(|s| s.events).sum();
+        assert_eq!(events, par.events_processed());
+        let sent: u64 = rep.shards.iter().map(|s| s.sent_cross).sum();
+        let recv: u64 = rep.shards.iter().map(|s| s.recv_cross).sum();
+        assert_eq!(sent, recv, "every outbox event is drained");
+        assert!(sent > 0, "the ring crosses shards");
+    }
+
+    #[test]
+    fn thread_count_clamps_to_shards() {
+        let model = PRelay::new(4, 100, 2);
+        let plan = ShardPlan::new(2, 4, SimTime::from_ns(100));
+        let par = ParEngine::new(model, plan, 16);
+        assert_eq!(par.threads(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "conservative lookahead violated")]
+    fn lookahead_violation_fails_loudly() {
+        // Real cross-node delay 10 ns under a claimed 100 ns lookahead:
+        // the first crossing lands inside the open window.
+        let model = PRelay::new(4, 10, 2);
+        let plan = ShardPlan::new(2, 4, SimTime::from_ns(100));
+        let mut par = ParEngine::new(model, plan, 2);
+        par.inject_at(SimTime::from_ns(500), (1, 0));
+        par.run_to_quiescence();
+    }
+}

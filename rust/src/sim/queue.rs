@@ -1,24 +1,42 @@
 //! The pending-event queue: a time-ordered priority queue with
-//! deterministic FIFO tie-breaking.
+//! deterministic tie-breaking.
+//!
+//! Same-instant events are ordered by a [`SeqKey`] — a `(stream,
+//! counter)` pair assigned by the engine at scheduling time. Streams are
+//! *causal*: each scheduling context (a node's handlers, or a node's
+//! injection path) owns one stream and stamps its events with a private
+//! monotonically increasing counter. Because the key depends only on who
+//! scheduled the event and how many events that scheduler produced
+//! before it — never on the global interleaving of the execution — every
+//! backend (monolithic, sharded, threaded) assigns identical keys and
+//! therefore pops identical sequences. See `sim::engine` for the stream
+//! assignment rules.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use super::time::SimTime;
 
+/// Deterministic tie-break key: `(stream id, per-stream counter)`.
+///
+/// Events at the same instant order by stream id, then by the order the
+/// owning stream scheduled them. Keys are unique (a stream never reuses
+/// a counter), so the event order is a total order.
+pub type SeqKey = (u64, u64);
+
 /// An event scheduled for a point in simulated time.
 #[derive(Debug)]
 struct Scheduled<E> {
     at: SimTime,
-    seq: u64,
+    key: SeqKey,
     event: E,
 }
 
-// Order by (time, seq): BinaryHeap is a max-heap, we wrap in Reverse at the
-// call sites. Only `at` and `seq` participate in ordering.
+// Order by (time, key): BinaryHeap is a max-heap, we wrap in Reverse at the
+// call sites. Only `at` and `key` participate in ordering.
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.at == other.at && self.key == other.key
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -29,12 +47,14 @@ impl<E> PartialOrd for Scheduled<E> {
 }
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
+        (self.at, self.key).cmp(&(other.at, other.key))
     }
 }
 
-/// Time-ordered event queue. Events scheduled for the same instant pop in
-/// the order they were scheduled (deterministic replay).
+/// Time-ordered event queue. Events scheduled for the same instant pop
+/// in [`SeqKey`] order; the plain [`EventQueue::schedule_at`] entry point
+/// assigns keys from an internal single-stream counter (FIFO ties), the
+/// engines assign causal keys via the crate-internal `schedule_at_key`.
 pub struct EventQueue<E> {
     heap: BinaryHeap<Reverse<Scheduled<E>>>,
     seq: u64,
@@ -48,6 +68,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue at time zero.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -62,7 +83,9 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `event` at absolute time `at`. Scheduling in the past is a
-    /// model bug; panics (events must be causally ordered).
+    /// model bug; panics (events must be causally ordered). Ties break in
+    /// schedule order (single internal stream) — a queue must not mix
+    /// internal and external keys.
     pub fn schedule_at(&mut self, at: SimTime, event: E) {
         assert!(
             at >= self.now,
@@ -72,7 +95,11 @@ impl<E> EventQueue<E> {
         );
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Reverse(Scheduled { at, seq, event }));
+        self.heap.push(Reverse(Scheduled {
+            at,
+            key: (0, seq),
+            event,
+        }));
     }
 
     /// Schedule `event` after a delay relative to now.
@@ -80,27 +107,27 @@ impl<E> EventQueue<E> {
         self.schedule_at(self.now + delay, event);
     }
 
-    /// Schedule with an externally-assigned tie-break sequence number.
+    /// Schedule with an externally-assigned tie-break key.
     ///
-    /// The sharded engine (`sim::shard`) assigns sequence numbers from
-    /// one fabric-wide counter *at scheduling time* — even for events
-    /// that sit in an inter-shard channel until the next window boundary
-    /// — so same-instant ties across shard queues break exactly as the
-    /// monolithic queue would break them. A queue must not mix internal
-    /// and external sequence numbers (the engine uses one or the other).
-    pub(crate) fn schedule_at_seq(&mut self, at: SimTime, seq: u64, event: E) {
+    /// The engines (`sim::engine`, `sim::shard`, `sim::parallel`) assign
+    /// keys from per-stream counters *at scheduling time* — even for
+    /// events that sit in an inter-shard channel until the next window
+    /// boundary — so same-instant ties break identically across every
+    /// execution backend. A queue must not mix internal and external
+    /// keys (the engines use one or the other).
+    pub(crate) fn schedule_at_key(&mut self, at: SimTime, key: SeqKey, event: E) {
         assert!(
             at >= self.now,
             "event scheduled in the past: {:?} < {:?}",
             at,
             self.now
         );
-        self.heap.push(Reverse(Scheduled { at, seq, event }));
+        self.heap.push(Reverse(Scheduled { at, key, event }));
     }
 
-    /// Ordering key of the next event without popping: `(time, seq)`.
-    pub(crate) fn peek_key(&self) -> Option<(SimTime, u64)> {
-        self.heap.peek().map(|Reverse(s)| (s.at, s.seq))
+    /// Ordering key of the next event without popping: `(time, key)`.
+    pub(crate) fn peek_key(&self) -> Option<(SimTime, SeqKey)> {
+        self.heap.peek().map(|Reverse(s)| (s.at, s.key))
     }
 
     /// Pop the next event, advancing simulated time.
@@ -112,10 +139,12 @@ impl<E> EventQueue<E> {
         })
     }
 
+    /// True when no events are pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -144,6 +173,17 @@ mod tests {
         }
         let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
         assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn external_keys_order_ties_across_streams() {
+        let mut q = EventQueue::new();
+        let t = SimTime::from_ns(5);
+        q.schedule_at_key(t, (2, 0), "late-stream");
+        q.schedule_at_key(t, (1, 7), "early-stream");
+        q.schedule_at_key(t, (1, 3), "early-stream-first");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["early-stream-first", "early-stream", "late-stream"]);
     }
 
     #[test]

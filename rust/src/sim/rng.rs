@@ -4,18 +4,21 @@
 //! SplitMix64 passes BigCrush for these purposes and is trivially seedable
 //! and reproducible across platforms.
 
+/// A seedable SplitMix64 generator.
 #[derive(Debug, Clone)]
 pub struct Rng {
     state: u64,
 }
 
 impl Rng {
+    /// A generator with the given seed.
     pub fn new(seed: u64) -> Self {
         Rng {
             state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15),
         }
     }
 
+    /// Next uniform `u64`.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -24,6 +27,7 @@ impl Rng {
         z ^ (z >> 31)
     }
 
+    /// Next uniform `u32`.
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -52,6 +56,7 @@ impl Rng {
         (0..12).map(|_| self.f64()).sum::<f64>() - 6.0
     }
 
+    /// Fill `buf` with uniform bytes.
     pub fn fill_bytes(&mut self, buf: &mut [u8]) {
         for chunk in buf.chunks_mut(8) {
             let v = self.next_u64().to_le_bytes();
@@ -59,12 +64,14 @@ impl Rng {
         }
     }
 
+    /// Fill `buf` with roughly-normal values (synthetic tensor data).
     pub fn fill_f32(&mut self, buf: &mut [f32]) {
         for v in buf.iter_mut() {
             *v = self.normal() as f32;
         }
     }
 
+    /// A uniformly chosen element of `items`.
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.below(items.len() as u64) as usize]
     }

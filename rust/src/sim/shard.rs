@@ -32,20 +32,20 @@
 //! ## The determinism anchor
 //!
 //! Within a window this implementation advances the shard whose next
-//! event has the smallest `(time, seq)` key, with `seq` drawn from one
-//! fabric-wide counter at *scheduling* time (channel residency does not
-//! reassign it). Scheduling order is execution order, so by induction
-//! the popped event sequence — and therefore every counter, latency
-//! sample, op timestamp, memory byte, and log entry — is **bit-identical
+//! event has the smallest `(time, key)` ordering key, with keys drawn
+//! from the **causal streams** of `sim::engine` at scheduling time
+//! (channel residency does not reassign them). Key assignment depends
+//! only on per-node scheduling orders — never on the global interleaving
+//! — so the popped event sequence, and therefore every counter, latency
+//! sample, op timestamp, memory byte, and log entry, is **bit-identical
 //! to the monolithic engine** (`rust/tests/sharded.rs` pins this across
-//! seeds × topologies × programs). A parallel backend would let each
-//! shard free-run to the horizon on its own thread and give up exact tie
-//! order inside a window; the window/channel structure here is exactly
-//! what such a backend keeps, while the merge rule is what makes the
-//! sharded engine a drop-in, test-pinnable replacement today.
+//! seeds × topologies × programs). The threaded backend
+//! (`sim::parallel`) keeps the queue/channel/window structure and the
+//! same causal keys, letting each shard free-run to the horizon on a
+//! worker thread.
 
 use super::engine::Model;
-use super::queue::EventQueue;
+use super::queue::{EventQueue, SeqKey};
 use super::time::SimTime;
 
 /// How the fabric's nodes are partitioned into shards, plus the
@@ -58,15 +58,25 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
+    /// A plan for windowed execution: `shards` contiguous node groups
+    /// over a `nodes`-node fabric under lookahead windows. Panics on a
+    /// degenerate partition or a non-positive lookahead.
     pub fn new(shards: u32, nodes: u32, lookahead: SimTime) -> Self {
+        assert!(
+            lookahead > SimTime::ZERO,
+            "conservative windows need positive lookahead"
+        );
+        Self::partition(shards, nodes, lookahead)
+    }
+
+    /// A partition without the lookahead requirement — for callers that
+    /// only need the node grouping (e.g. the model's state layout), not
+    /// the window machinery.
+    pub fn partition(shards: u32, nodes: u32, lookahead: SimTime) -> Self {
         assert!(nodes >= 1, "fabric needs at least one node");
         assert!(
             shards >= 1 && shards <= nodes,
             "shard count {shards} must be in 1..={nodes}"
-        );
-        assert!(
-            lookahead > SimTime::ZERO,
-            "conservative windows need positive lookahead"
         );
         ShardPlan {
             shards,
@@ -75,10 +85,17 @@ impl ShardPlan {
         }
     }
 
+    /// Number of shards in the plan.
     pub fn shards(&self) -> u32 {
         self.shards
     }
 
+    /// Number of fabric nodes partitioned by the plan.
+    pub fn nodes(&self) -> u32 {
+        self.nodes
+    }
+
+    /// The conservative window length.
     pub fn lookahead(&self) -> SimTime {
         self.lookahead
     }
@@ -118,9 +135,11 @@ impl ShardPlan {
 /// Cumulative advance statistics for one shard.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardAdvance {
+    /// Shard index.
     pub shard: u32,
-    /// Inclusive node range this shard owns.
+    /// First node of the inclusive node range this shard owns.
     pub first_node: u32,
+    /// Last node of the inclusive node range this shard owns.
     pub last_node: u32,
     /// Events this shard's queue processed.
     pub events: u64,
@@ -128,36 +147,80 @@ pub struct ShardAdvance {
     pub sent_cross: u64,
     /// Channel events drained into this shard at window boundaries.
     pub recv_cross: u64,
+    /// Wall-clock nanoseconds this shard's worker spent handling events
+    /// (threaded backend only; 0 on the sequential backends).
+    pub busy_ns: u64,
 }
 
 /// Advance statistics of a sharded run (the scale-out report's per-shard
 /// table). Cumulative over the engine's lifetime.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardingReport {
+    /// The conservative window length in force.
     pub lookahead: SimTime,
     /// Windows opened (horizon advances).
     pub windows: u64,
+    /// Worker threads driving the shards (0 = sequential backend).
+    pub threads: u32,
+    /// Wall-clock nanoseconds spent inside parallel window regions
+    /// (threaded backend only; 0 on the sequential backends). The gap
+    /// between `threads * window_wall_ns` and the summed per-shard
+    /// `busy_ns` is barrier/imbalance overhead.
+    pub window_wall_ns: u64,
+    /// Per-shard advance statistics.
     pub shards: Vec<ShardAdvance>,
 }
 
 #[derive(Debug, Default, Clone)]
-struct ShardStats {
-    events: u64,
-    sent_cross: u64,
-    recv_cross: u64,
+pub(crate) struct ShardStats {
+    pub(crate) events: u64,
+    pub(crate) sent_cross: u64,
+    pub(crate) recv_cross: u64,
+    pub(crate) busy_ns: u64,
 }
 
-/// The sharded executor: per-shard queues + inter-shard channels + the
-/// window machinery. Owned by [`super::Engine`]; see module docs.
+pub(crate) fn report_from(
+    plan: &ShardPlan,
+    lookahead: SimTime,
+    windows: u64,
+    threads: u32,
+    window_wall_ns: u64,
+    stats: &[ShardStats],
+) -> ShardingReport {
+    ShardingReport {
+        lookahead,
+        windows,
+        threads,
+        window_wall_ns,
+        shards: stats
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let (first_node, last_node) = plan.node_range(i as u32);
+                ShardAdvance {
+                    shard: i as u32,
+                    first_node,
+                    last_node,
+                    events: s.events,
+                    sent_cross: s.sent_cross,
+                    recv_cross: s.recv_cross,
+                    busy_ns: s.busy_ns,
+                }
+            })
+            .collect(),
+    }
+}
+
+/// The sequential sharded executor: per-shard queues + inter-shard
+/// channels + the window machinery. Owned by [`super::Engine`]; see
+/// module docs.
 pub struct Shards<E> {
     plan: ShardPlan,
     queues: Vec<EventQueue<E>>,
     /// `channels[dst]`: cross-shard events awaiting the next boundary,
-    /// carrying the `(time, seq)` assigned when they were scheduled.
-    channels: Vec<Vec<(SimTime, u64, E)>>,
+    /// carrying the `(time, key)` assigned when they were scheduled.
+    channels: Vec<Vec<(SimTime, SeqKey, E)>>,
     stats: Vec<ShardStats>,
-    /// Fabric-wide scheduling counter (the determinism anchor).
-    seq: u64,
     /// Global cursor: timestamp of the last popped event.
     now: SimTime,
     /// End of the current window.
@@ -168,14 +231,17 @@ pub struct Shards<E> {
 }
 
 impl<E> Shards<E> {
-    pub fn new(plan: ShardPlan) -> Self {
+    pub(crate) fn new(plan: ShardPlan) -> Self {
+        assert!(
+            plan.lookahead() > SimTime::ZERO,
+            "conservative windows need positive lookahead"
+        );
         let n = plan.shards as usize;
         Shards {
             plan,
             queues: (0..n).map(|_| EventQueue::new()).collect(),
             channels: (0..n).map(|_| Vec::new()).collect(),
             stats: vec![ShardStats::default(); n],
-            seq: 0,
             now: SimTime::ZERO,
             horizon: SimTime::ZERO,
             windows: 0,
@@ -183,20 +249,26 @@ impl<E> Shards<E> {
         }
     }
 
-    pub fn now(&self) -> SimTime {
+    pub(crate) fn now(&self) -> SimTime {
         self.now
     }
 
-    pub fn is_empty(&self) -> bool {
+    pub(crate) fn is_empty(&self) -> bool {
         self.queues.iter().all(|q| q.is_empty())
             && self.channels.iter().all(|c| c.is_empty())
     }
 
-    /// Externally inject an event (host command arrival). Goes straight
-    /// into the owning shard's queue: the driver is a fabric-global
-    /// agent that only runs between engine steps, so — like every
-    /// schedule — it draws the next fabric-wide seq.
-    pub fn inject<M: Model<Event = E>>(&mut self, model: &M, at: SimTime, event: E) {
+    /// Externally inject an event (host command arrival) with its
+    /// engine-assigned key. Goes straight into the owning shard's queue:
+    /// the driver is a fabric-global agent that only runs between engine
+    /// steps.
+    pub(crate) fn inject<M: Model<Event = E>>(
+        &mut self,
+        model: &M,
+        at: SimTime,
+        key: SeqKey,
+        event: E,
+    ) {
         assert!(
             at >= self.now,
             "event injected in the past: {:?} < {:?}",
@@ -204,43 +276,39 @@ impl<E> Shards<E> {
             self.now
         );
         let dst = self.plan.shard_of(model.shard_node(&event));
-        let seq = self.seq;
-        self.seq += 1;
-        self.queues[dst].schedule_at_seq(at, seq, event);
+        self.queues[dst].schedule_at_key(at, key, event);
     }
 
-    /// Route the events the just-run handler scheduled: own-shard events
+    /// Route one event the just-run handler scheduled: own-shard events
     /// enter the local queue, cross-shard events enter the destination's
-    /// channel (after the lookahead check). Call order assigns seqs.
-    pub fn route<M: Model<Event = E>>(
+    /// channel (after the lookahead check).
+    pub(crate) fn route<M: Model<Event = E>>(
         &mut self,
         model: &M,
-        scheduled: impl Iterator<Item = (SimTime, E)>,
+        at: SimTime,
+        key: SeqKey,
+        event: E,
     ) {
-        for (at, event) in scheduled {
-            let seq = self.seq;
-            self.seq += 1;
-            let dst = self.plan.shard_of(model.shard_node(&event));
-            if dst == self.current {
-                self.queues[dst].schedule_at_seq(at, seq, event);
-            } else {
-                assert!(
-                    at >= self.horizon,
-                    "conservative lookahead violated: cross-shard event for \
-                     shard {dst} at {at:?} lands inside the window ending at {:?}",
-                    self.horizon
-                );
-                self.stats[self.current].sent_cross += 1;
-                self.channels[dst].push((at, seq, event));
-            }
+        let dst = self.plan.shard_of(model.shard_node(&event));
+        if dst == self.current {
+            self.queues[dst].schedule_at_key(at, key, event);
+        } else {
+            assert!(
+                at >= self.horizon,
+                "conservative lookahead violated: cross-shard event for \
+                 shard {dst} at {at:?} lands inside the window ending at {:?}",
+                self.horizon
+            );
+            self.stats[self.current].sent_cross += 1;
+            self.channels[dst].push((at, key, event));
         }
     }
 
     /// Pop the next event under the window discipline (see module docs).
     /// Returns `None` only when queues and channels are fully drained.
-    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+    pub(crate) fn pop(&mut self) -> Option<(SimTime, E)> {
         loop {
-            // The smallest (time, seq) head strictly inside the window.
+            // The smallest (time, key) head strictly inside the window.
             let best = self
                 .queues
                 .iter()
@@ -261,10 +329,10 @@ impl<E> Shards<E> {
             // the earliest pending event.
             for dst in 0..self.channels.len() {
                 let drained = std::mem::take(&mut self.channels[dst]);
-                for (at, seq, event) in drained {
+                for (at, key, event) in drained {
                     debug_assert!(at >= self.horizon, "channel held an in-window event");
                     self.stats[dst].recv_cross += 1;
-                    self.queues[dst].schedule_at_seq(at, seq, event);
+                    self.queues[dst].schedule_at_key(at, key, event);
                 }
             }
             let t_min = self
@@ -278,27 +346,15 @@ impl<E> Shards<E> {
         }
     }
 
-    pub fn report(&self) -> ShardingReport {
-        ShardingReport {
-            lookahead: self.plan.lookahead,
-            windows: self.windows,
-            shards: self
-                .stats
-                .iter()
-                .enumerate()
-                .map(|(i, s)| {
-                    let (first_node, last_node) = self.plan.node_range(i as u32);
-                    ShardAdvance {
-                        shard: i as u32,
-                        first_node,
-                        last_node,
-                        events: s.events,
-                        sent_cross: s.sent_cross,
-                        recv_cross: s.recv_cross,
-                    }
-                })
-                .collect(),
-        }
+    pub(crate) fn report(&self) -> ShardingReport {
+        report_from(
+            &self.plan,
+            self.plan.lookahead,
+            self.windows,
+            0,
+            0,
+            &self.stats,
+        )
     }
 }
 
@@ -379,6 +435,7 @@ mod tests {
         let rep = eng.sharding().expect("sharded engine reports");
         assert!(rep.windows > 0);
         assert_eq!(rep.lookahead, SimTime::from_ns(100));
+        assert_eq!(rep.threads, 0, "sequential backend");
         assert_eq!(rep.shards.len(), 2);
         assert_eq!(rep.shards[0].first_node, 0);
         assert_eq!(rep.shards[0].last_node, 1);

@@ -10,33 +10,42 @@ use std::ops::{Add, AddAssign, Sub};
 
 /// A point in simulated time (picoseconds since simulation start).
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
-pub struct SimTime(pub u64);
+pub struct SimTime(#[doc = "Picoseconds since simulation start."] pub u64);
 
 impl SimTime {
+    /// The simulation epoch.
     pub const ZERO: SimTime = SimTime(0);
 
+    /// From picoseconds.
     pub fn from_ps(ps: u64) -> Self {
         SimTime(ps)
     }
+    /// From nanoseconds.
     pub fn from_ns(ns: u64) -> Self {
         SimTime(ns * 1_000)
     }
+    /// From microseconds.
     pub fn from_us(us: u64) -> Self {
         SimTime(us * 1_000_000)
     }
 
+    /// As picoseconds (exact).
     pub fn as_ps(self) -> u64 {
         self.0
     }
+    /// As nanoseconds.
     pub fn as_ns(self) -> f64 {
         self.0 as f64 / 1e3
     }
+    /// As microseconds.
     pub fn as_us(self) -> f64 {
         self.0 as f64 / 1e6
     }
+    /// As milliseconds.
     pub fn as_ms(self) -> f64 {
         self.0 as f64 / 1e9
     }
+    /// As seconds.
     pub fn as_secs(self) -> f64 {
         self.0 as f64 / 1e12
     }
@@ -46,6 +55,7 @@ impl SimTime {
         SimTime(self.0.saturating_sub(earlier.0))
     }
 
+    /// The later of two instants.
     pub fn max(self, other: SimTime) -> SimTime {
         SimTime(self.0.max(other.0))
     }
@@ -105,10 +115,12 @@ impl ClockDomain {
         }
     }
 
+    /// One clock period.
     pub fn period(&self) -> SimTime {
         SimTime(self.period_ps)
     }
 
+    /// The frequency in MHz.
     pub fn freq_mhz(&self) -> f64 {
         1e6 / self.period_ps as f64
     }

@@ -167,7 +167,11 @@ pub fn run_single_node(cfg: &Config, case: &ConvCase, data: &ConvData) -> SimTim
     };
     let h = f.compute(0, 0, job);
     f.wait(h);
-    f.now().since(t0)
+    // Measure by the op's completion record, not the engine cursor: the
+    // record is identical on every engine backend (the threaded backend
+    // overshoots its cursor to window boundaries).
+    let (_, _, _, done) = f.op_times(h);
+    done.expect("waited op records completion").since(t0)
 }
 
 pub fn run_two_node(
@@ -227,7 +231,7 @@ pub fn run_two_node(
         let round = |v: &[f32]| -> Vec<f32> {
             v.iter().map(|&x| crate::util::f16::round_f16(x)).collect()
         };
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         let full = be.conv2d(
             case.h,
             case.w,

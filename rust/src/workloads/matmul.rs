@@ -95,7 +95,11 @@ pub fn run_single_node(cfg: &Config, case: &MatmulCase, data: &MatmulData) -> Si
     };
     let h = f.compute(0, 0, job);
     f.wait(h);
-    f.now().since(t0)
+    // Measure by the op's completion record, not the engine cursor: the
+    // record is identical on every engine backend (the threaded backend
+    // overshoots its cursor to window boundaries).
+    let (_, _, _, done) = f.op_times(h);
+    done.expect("waited op records completion").since(t0)
 }
 
 /// Input data (row-major n x n).
@@ -261,7 +265,7 @@ pub fn run_two_node(
         let round = |v: &[f32]| -> Vec<f32> {
             v.iter().map(|&x| crate::util::f16::round_f16(x)).collect()
         };
-        let mut be = SoftwareBackend;
+        let be = SoftwareBackend;
         let expect = be.matmul(n, n, n, &round(&data.m), &round(&data.n), None)?;
         let hb = n / 2;
         for p in 0..2usize {

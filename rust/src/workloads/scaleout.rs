@@ -10,13 +10,27 @@
 //! reported speedup includes every exposed synchronization and
 //! communication cost — measured under concurrent issue, not projected
 //! from serialized waits.
+//!
+//! With `engine_threads != off` the sweep doubles as the **threaded-DES
+//! perf harness**: each point runs twice — sequential sharded vs
+//! threaded sharded, same config otherwise (including the `host_wake =
+//! propagation` the threaded backend requires) — asserts the simulated
+//! results are identical (the trace-compatibility contract), and
+//! records both wall-clocks. Numerics-bearing runs (`Numerics::Software`)
+//! are where threads win: every shard's DLA jobs compute concurrently
+//! inside a window. Pure timing-only event streams are dominated by
+//! per-window thread spawns and usually run slower — see the "Sharded
+//! engine" notes in `rust/README.md`.
 
-use crate::config::{Config, Numerics, ShardSpec};
+use std::time::{Duration, Instant};
+
+use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::dla::{DlaJob, DlaOp};
 use crate::memory::GlobalAddr;
 use crate::program::{RankTimeline, Spmd};
 use crate::sim::{ShardingReport, SimTime};
 
+/// One scale-out sweep configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ScaleoutCase {
     /// Total DLA jobs across the fabric (fixed work — strong scaling).
@@ -48,9 +62,29 @@ impl ScaleoutCase {
     }
 }
 
+/// Wall-clock comparison of one sweep point run sequentially and with
+/// worker threads (simulated results asserted identical).
+#[derive(Debug, Clone)]
+pub struct ParallelCompare {
+    /// Worker threads the threaded run used.
+    pub threads: u32,
+    /// Wall-clock of the sequential sharded run.
+    pub wall_seq: Duration,
+    /// Wall-clock of the threaded run.
+    pub wall_par: Duration,
+    /// `wall_seq / wall_par` (> 1 means threads won).
+    pub wall_speedup: f64,
+    /// The threaded run's advance statistics (per-shard busy time,
+    /// window wall time).
+    pub shards: Option<ShardingReport>,
+}
+
+/// One row of the scale-out sweep.
 #[derive(Debug, Clone)]
 pub struct ScaleoutRow {
+    /// Fabric size of this point.
     pub nodes: u32,
+    /// Simulated makespan (slowest rank's finish).
     pub elapsed: SimTime,
     /// T(smallest swept fabric) / T(n), rebased so the 1-node row is 1.0.
     pub speedup: f64,
@@ -59,36 +93,57 @@ pub struct ScaleoutRow {
     /// Per-rank issue timelines (first/last issue, command count,
     /// finish) — the concurrent-issue evidence in the report.
     pub ranks: Vec<RankTimeline>,
-    /// Per-shard advance statistics when the sweep ran on the sharded
+    /// Per-shard advance statistics when the sweep ran on a sharded
     /// engine (`shards != off`).
     pub shards: Option<ShardingReport>,
+    /// Sequential-vs-threaded wall-clock comparison
+    /// (`engine_threads != off` sweeps only).
+    pub par: Option<ParallelCompare>,
 }
 
-/// Run the kernel on an n-node ring under the given engine partitioning;
-/// returns (elapsed, rank timelines, per-shard advance stats).
-pub fn run_one(
+/// Clamp an explicit shard count to the fabric size (the sweep visits
+/// fabrics smaller than the largest; `--shards 4` means "up to 4").
+fn clamp_shards(shards: ShardSpec, n: u32) -> ShardSpec {
+    match shards {
+        ShardSpec::Count(c) => ShardSpec::Count(c.min(n)),
+        s => s,
+    }
+}
+
+/// Build the config of one sweep point.
+fn point_config(
     n: u32,
-    case: &ScaleoutCase,
     shards: ShardSpec,
-) -> (SimTime, Vec<RankTimeline>, Option<ShardingReport>) {
+    threads: ThreadSpec,
+    numerics: Numerics,
+    wake: bool,
+) -> Config {
+    let mut cfg = Config::ring(n)
+        .with_numerics(numerics)
+        .with_shards(clamp_shards(shards, n))
+        .with_engine_threads(threads);
+    if wake {
+        // The threaded backend's driver contract; applied to *both*
+        // sides of a comparison so the simulated timelines match.
+        cfg.host_wake = cfg.link.propagation;
+    }
+    cfg
+}
+
+/// Run the kernel once on `cfg`; returns (makespan, rank timelines,
+/// shard stats, wall-clock).
+fn run_point(
+    cfg: Config,
+    case: &ScaleoutCase,
+) -> (SimTime, Vec<RankTimeline>, Option<ShardingReport>, Duration) {
+    let n = cfg.topology.nodes();
     assert!(
         case.total_jobs % n == 0,
         "total_jobs {} not divisible by {n} nodes",
         case.total_jobs
     );
-    // An explicit shard count is capped by the fabric size, and the
-    // sweep visits fabrics smaller than the largest: clamp per point so
-    // `--shards 4` means "up to 4 shards" instead of panicking on the
-    // 1-node baseline.
-    let shards = match shards {
-        ShardSpec::Count(c) => ShardSpec::Count(c.min(n)),
-        s => s,
-    };
-    let mut spmd = Spmd::new(
-        Config::ring(n)
-            .with_numerics(Numerics::TimingOnly)
-            .with_shards(shards),
-    );
+    let wall = Instant::now();
+    let mut spmd = Spmd::new(cfg);
     let t0 = spmd.now();
     let case = *case;
     let report = spmd.run(move |r| {
@@ -134,20 +189,77 @@ pub fn run_one(
         report.max_finish().since(t0),
         report.rank_timelines(),
         report.shards,
+        wall.elapsed(),
     )
+}
+
+/// Run the kernel on an n-node ring under the given engine partitioning;
+/// returns (elapsed, rank timelines, per-shard advance stats). The plain
+/// sequential path (`bench scaleout` without `--engine-threads`).
+pub fn run_one(
+    n: u32,
+    case: &ScaleoutCase,
+    shards: ShardSpec,
+) -> (SimTime, Vec<RankTimeline>, Option<ShardingReport>) {
+    let cfg = point_config(n, shards, ThreadSpec::Off, Numerics::TimingOnly, false);
+    let (elapsed, ranks, shard_stats, _) = run_point(cfg, case);
+    (elapsed, ranks, shard_stats)
 }
 
 /// Sweep node counts; speedups are relative to the first (smallest)
 /// count, which callers should make 1 for absolute speedup.
+///
+/// With `threads != off`, each point additionally runs the
+/// sequential-vs-threaded wall-clock comparison (see module docs) on
+/// `numerics` (threads pay off when events carry numerics); the
+/// simulated makespan and timelines of the two runs are asserted
+/// identical.
 pub fn run_sweep(
     node_counts: &[u32],
     case: &ScaleoutCase,
     shards: ShardSpec,
+    threads: ThreadSpec,
+    numerics: Numerics,
 ) -> Vec<ScaleoutRow> {
     let mut rows = Vec::new();
     let mut base: Option<f64> = None;
     for &n in node_counts {
-        let (elapsed, ranks, shard_stats) = run_one(n, case, shards);
+        let (elapsed, ranks, shard_stats, par) = if threads == ThreadSpec::Off {
+            let cfg = point_config(n, shards, ThreadSpec::Off, numerics, false);
+            let (elapsed, ranks, stats, _) = run_point(cfg, case);
+            (elapsed, ranks, stats, None)
+        } else {
+            // Threads need sharding; promote `shards = off` to auto so
+            // `--engine-threads` alone does the expected thing.
+            let shards = if shards == ShardSpec::Off {
+                ShardSpec::Auto
+            } else {
+                shards
+            };
+            let seq_cfg = point_config(n, shards, ThreadSpec::Off, numerics, true);
+            let mut par_cfg = point_config(n, shards, threads, numerics, true);
+            par_cfg.validate().expect("threaded sweep config");
+            let par_threads = par_cfg.engine_thread_count().unwrap_or(1);
+            let (e_seq, ranks, seq_stats, wall_seq) = run_point(seq_cfg, case);
+            let (e_par, ranks_par, par_stats, wall_par) = run_point(par_cfg, case);
+            assert_eq!(
+                e_seq, e_par,
+                "{n} nodes: threaded run must be trace-compatible (same makespan)"
+            );
+            assert_eq!(
+                ranks, ranks_par,
+                "{n} nodes: threaded run must reproduce the issue timelines"
+            );
+            let cmp = ParallelCompare {
+                threads: par_threads,
+                wall_seq,
+                wall_par,
+                wall_speedup: wall_seq.as_secs_f64()
+                    / wall_par.as_secs_f64().max(1e-9),
+                shards: par_stats,
+            };
+            (e_seq, ranks, seq_stats, Some(cmp))
+        };
         let t = elapsed.as_ps() as f64;
         let b = *base.get_or_insert(t);
         let speedup = b / t;
@@ -158,6 +270,7 @@ pub fn run_sweep(
             efficiency: speedup / n as f64,
             ranks,
             shards: shard_stats,
+            par,
         });
     }
     rows
@@ -169,7 +282,13 @@ mod tests {
 
     #[test]
     fn strong_scaling_improves_with_nodes() {
-        let rows = run_sweep(&[1, 2, 4], &ScaleoutCase::fast(), ShardSpec::Off);
+        let rows = run_sweep(
+            &[1, 2, 4],
+            &ScaleoutCase::fast(),
+            ShardSpec::Off,
+            ThreadSpec::Off,
+            Numerics::TimingOnly,
+        );
         assert_eq!(rows[0].speedup, 1.0);
         assert!(
             rows[1].speedup > 1.5,
@@ -182,6 +301,7 @@ mod tests {
             rows.iter().map(|r| r.speedup).collect::<Vec<_>>()
         );
         assert!(rows[2].speedup < 4.0, "sync costs must be exposed");
+        assert!(rows.iter().all(|r| r.par.is_none()));
     }
 
     #[test]
@@ -221,11 +341,47 @@ mod tests {
         // `--shards 2` must not panic on the 1-node baseline of the
         // sweep: the count caps at the fabric size per point.
         let case = ScaleoutCase::fast();
-        let rows = run_sweep(&[1, 2], &case, ShardSpec::Count(2));
+        let rows = run_sweep(
+            &[1, 2],
+            &case,
+            ShardSpec::Count(2),
+            ThreadSpec::Off,
+            Numerics::TimingOnly,
+        );
         assert_eq!(rows[0].shards.as_ref().unwrap().shards.len(), 1);
         assert_eq!(rows[1].shards.as_ref().unwrap().shards.len(), 2);
-        let mono = run_sweep(&[1, 2], &case, ShardSpec::Off);
+        let mono = run_sweep(
+            &[1, 2],
+            &case,
+            ShardSpec::Off,
+            ThreadSpec::Off,
+            Numerics::TimingOnly,
+        );
         assert_eq!(rows[0].elapsed, mono[0].elapsed);
         assert_eq!(rows[1].elapsed, mono[1].elapsed);
+    }
+
+    #[test]
+    fn threaded_sweep_compares_and_matches_sequential() {
+        // The perf-harness path: rows carry the wall-clock comparison and
+        // the threaded run's simulated results equal the sequential run's
+        // (asserted inside run_sweep). Timing-only keeps this test fast;
+        // wall-clock *speedup* is only expected for numerics-bearing
+        // runs and is demonstrated by `bench scaleout --engine-threads`.
+        let rows = run_sweep(
+            &[1, 2, 4],
+            &ScaleoutCase::fast(),
+            ShardSpec::Auto,
+            ThreadSpec::Auto,
+            Numerics::TimingOnly,
+        );
+        for row in &rows {
+            let cmp = row.par.as_ref().expect("comparison recorded");
+            assert!(cmp.threads >= 1);
+            assert!(cmp.wall_speedup > 0.0);
+            let sh = cmp.shards.as_ref().expect("threaded run reports stats");
+            assert_eq!(sh.threads, cmp.threads);
+            assert!(sh.windows > 0);
+        }
     }
 }

@@ -1,0 +1,92 @@
+//! The config reference (`rust/docs/config.md`) cannot silently rot:
+//! every key the serializer emits — which is also every key the parser
+//! accepts, pinned by the serializer round-trip tests — must appear in
+//! the document as a "### key" section heading, and every documented
+//! key must still parse.
+
+use fshmem::config::{Config, Numerics, ShardSpec, ThreadSpec};
+
+const DOC: &str = include_str!("../docs/config.md");
+
+/// Keys emitted by `to_cfg_string` across configs covering every
+/// topology branch (ring emits `nodes`; mesh/torus emit `mesh_w/h`).
+fn emitted_keys() -> Vec<String> {
+    let mut ring = Config::ring(4)
+        .with_numerics(Numerics::TimingOnly)
+        .with_shards(ShardSpec::Auto)
+        .with_engine_threads(ThreadSpec::Auto);
+    ring.host_wake = ring.link.propagation;
+    ring.validate().unwrap();
+    let mut mesh = Config::mesh(2, 3);
+    mesh.validate().unwrap();
+    let mut keys: Vec<String> = Vec::new();
+    for text in [ring.to_cfg_string(), mesh.to_cfg_string()] {
+        for line in text.lines() {
+            let Some((k, _)) = line.split_once('=') else {
+                continue;
+            };
+            let k = k.trim().to_string();
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+    }
+    keys
+}
+
+#[test]
+fn every_emitted_key_is_documented() {
+    let keys = emitted_keys();
+    assert!(
+        keys.len() >= 13,
+        "expected the full key set, got {keys:?} — did the serializer \
+         stop emitting defaults?"
+    );
+    for key in &keys {
+        let heading = format!("### `{key}`");
+        assert!(
+            DOC.contains(&heading),
+            "config key '{key}' is emitted by to_cfg_string but has no \
+             '{heading}' section in rust/docs/config.md — document it"
+        );
+    }
+}
+
+#[test]
+fn documented_keys_round_trip_through_the_parser() {
+    // The inverse direction: every `### `key`` heading in the doc names
+    // a key the parser actually accepts (no stale sections).
+    let mut cfg_lines = String::new();
+    for line in DOC.lines() {
+        let Some(rest) = line.strip_prefix("### `") else {
+            continue;
+        };
+        let Some(key) = rest.split('`').next() else {
+            continue;
+        };
+        // Compose a value that parses for each documented key.
+        let value = match key {
+            "topology" => "mesh",
+            "nodes" => continue, // ring-only; exercised below
+            "mesh_w" | "mesh_h" => "2",
+            "packet_payload" => "512",
+            "segment_mb" => "16",
+            "private_kb" => "64",
+            "numerics" => "timing",
+            "artifacts_dir" => "artifacts",
+            "link_loss_permille" => "1",
+            "stripe_threshold" => "auto",
+            "shards" => "auto",
+            "engine_threads" => "off",
+            "host_wake_ns" => "200",
+            "seed" => "7",
+            other => panic!("doc documents unknown key '{other}'"),
+        };
+        cfg_lines.push_str(&format!("{key} = {value}\n"));
+    }
+    let cfg = Config::from_str_cfg(&cfg_lines).expect("documented keys parse");
+    assert_eq!(cfg.seed, 7);
+    // `nodes` separately (ring topology).
+    let ring = Config::from_str_cfg("topology = ring\nnodes = 4\n").unwrap();
+    assert_eq!(ring.topology.nodes(), 4);
+}

@@ -29,7 +29,7 @@ fn gasnet_put_short_medium_long() {
     let am = f.drain_user_ams().pop().unwrap();
     assert_eq!(am.payload.len(), 300);
     assert_eq!(
-        f.world().nodes[1].mem.read_private(0x40, 300).unwrap(),
+        f.world().node(1).mem.read_private(0x40, 300).unwrap(),
         &[0xCC; 300][..]
     );
     // Long: payload to the shared segment.
@@ -332,7 +332,7 @@ fn config_rejects_nonsense() {
 fn coordinator_fast_experiments_run() {
     let opts = RunOptions {
         fast: true,
-        numerics: Numerics::TimingOnly,
+        numerics: Some(Numerics::TimingOnly),
         ..Default::default()
     };
     for name in ["latency", "resources", "comparison"] {

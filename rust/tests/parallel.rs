@@ -1,0 +1,419 @@
+//! Trace compatibility: the threaded DES (`engine_threads = auto|N`)
+//! must produce the **same simulated results** as the sequential sharded
+//! engine (`engine_threads = off`) — identical counters, op timestamps,
+//! latency samples (as multisets), per-rank finish clocks and issue
+//! timelines, end times, event counts, and final memory bytes. Only
+//! internal event-pop interleavings (and therefore the *append order* of
+//! merged latency-sample buffers) may differ; that is the whole
+//! relaxation the parallel backend buys its wall-clock with.
+//!
+//! Both sides of every comparison run with `host_wake = link.propagation`
+//! (the threaded backend's driver contract — `Config::validate` enforces
+//! it) so the configs are identical except for `engine_threads`.
+//!
+//! The CI trace-compatibility matrix re-runs this suite with extra seeds
+//! via the `FSHMEM_EQ_SEED` environment variable.
+
+use fshmem::api::OpHandle;
+use fshmem::collectives;
+use fshmem::config::{Config, Numerics, ShardSpec, ThreadSpec};
+use fshmem::dla::{DlaJob, DlaOp};
+use fshmem::memory::GlobalAddr;
+use fshmem::program::{Rank, Spmd};
+use fshmem::sim::{Rng, SimTime};
+use fshmem::workloads::matmul;
+
+/// Seeds under test: three baked in, plus the CI matrix seed if set.
+fn seeds() -> Vec<u64> {
+    let mut s = vec![0xA11CE, 0x5EED5, 0x7EA7ED];
+    if let Ok(v) = std::env::var("FSHMEM_EQ_SEED") {
+        s.push(v.parse().expect("FSHMEM_EQ_SEED must be a u64"));
+    }
+    s
+}
+
+/// A comparison config: sharded, `host_wake = propagation`, with the
+/// given thread spec.
+fn pcfg(base: Config, shards: ShardSpec, threads: ThreadSpec) -> Config {
+    let mut cfg = base
+        .with_numerics(Numerics::TimingOnly)
+        .with_shards(shards)
+        .with_engine_threads(threads);
+    cfg.host_wake = cfg.link.propagation;
+    cfg
+}
+
+// ---- the trace observable --------------------------------------------------
+
+/// Everything the trace-compatibility contract promises to preserve.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    end: SimTime,
+    events: u64,
+    counts: Vec<(&'static str, u64)>,
+    /// Latency series as sorted multisets (sample *order* is the one
+    /// observable the threaded backend relaxes).
+    latencies: Vec<(&'static str, Vec<u64>)>,
+    finish: Vec<SimTime>,
+    timelines: Vec<Vec<fshmem::program::TimelineEntry>>,
+    /// Per-rank op handles (program order) and their timestamp tuples.
+    ops: Vec<Vec<(OpHandle, [Option<SimTime>; 4])>>,
+    mem: Vec<Vec<u8>>,
+}
+
+fn capture<F>(cfg: Config, program: F) -> Trace
+where
+    F: Fn(&mut Rank) -> Vec<OpHandle> + Sync,
+{
+    let mut s = Spmd::new(cfg);
+    let report = s.run(|r| program(r));
+    let n = s.nodes();
+    let mem = (0..n)
+        .map(|node| {
+            let mut m = s.read_shared(node, 0, 0x48_000);
+            m.extend(s.read_shared(node, 0x100_000, 0x30_000));
+            m
+        })
+        .collect();
+    let ops = report
+        .results
+        .iter()
+        .map(|hs| {
+            hs.iter()
+                .map(|&h| {
+                    let (iss, hdr, data, done) = s.op_times(h);
+                    (h, [Some(iss), hdr, data, done])
+                })
+                .collect()
+        })
+        .collect();
+    let mut latencies: Vec<(&'static str, Vec<u64>)> = s
+        .counters()
+        .latencies()
+        .map(|(k, v)| {
+            let mut samples = v.samples().to_vec();
+            samples.sort_unstable();
+            (k, samples)
+        })
+        .collect();
+    latencies.sort_by_key(|&(k, _)| k);
+    Trace {
+        end: report.end,
+        events: s.events_processed(),
+        counts: s.counters().counts().collect(),
+        latencies,
+        finish: report.finish,
+        timelines: report.timelines,
+        ops,
+        mem,
+    }
+}
+
+fn assert_trace_eq(seq: &Trace, par: &Trace, label: &str) {
+    // Field-by-field first for readable failures, then the whole thing.
+    assert_eq!(seq.end, par.end, "{label}: final simulated time");
+    assert_eq!(seq.events, par.events, "{label}: events processed");
+    assert_eq!(seq.counts, par.counts, "{label}: counters");
+    assert_eq!(
+        seq.latencies, par.latencies,
+        "{label}: latency samples (as multisets)"
+    );
+    assert_eq!(seq.finish, par.finish, "{label}: per-rank finish clocks");
+    assert_eq!(seq.timelines, par.timelines, "{label}: issue timelines");
+    assert_eq!(seq.ops, par.ops, "{label}: op handles + timestamps");
+    assert_eq!(seq.mem, par.mem, "{label}: memory contents");
+    assert_eq!(seq, par, "{label}: full trace");
+}
+
+/// Run `program` under `engine_threads = off`, `auto`, and `2`,
+/// asserting identical traces, over both an auto and a 2-shard layout.
+fn assert_compatible<F>(mk_cfg: impl Fn() -> Config, program: F, label: &str)
+where
+    F: Fn(&mut Rank) -> Vec<OpHandle> + Sync,
+{
+    for shards in [ShardSpec::Auto, ShardSpec::Count(2)] {
+        let seq = capture(pcfg(mk_cfg(), shards, ThreadSpec::Off), &program);
+        for threads in [ThreadSpec::Auto, ThreadSpec::Count(2)] {
+            let par = capture(pcfg(mk_cfg(), shards, threads), &program);
+            assert_trace_eq(
+                &seq,
+                &par,
+                &format!("{label} [{shards:?} / {threads:?}]"),
+            );
+        }
+    }
+}
+
+// ---- randomized SPMD programs ---------------------------------------------
+
+/// A deterministic pseudo-random SPMD program: rounds of mixed one-sided
+/// traffic (puts, zero-copy puts, gets, striping-eligible bulk puts, DLA
+/// jobs, early waits) separated by barriers (lockstep, so random
+/// per-rank op mixes can never deadlock the barrier). Returns every
+/// handle it issued, in program order.
+fn random_program(r: &mut Rank, seed: u64, rounds: u32, ops_per_round: u32) -> Vec<OpHandle> {
+    let me = r.id();
+    let n = r.nodes();
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(me as u64 + 1));
+    let mut issued: Vec<OpHandle> = Vec::new();
+    let mut pending: Vec<OpHandle> = Vec::new();
+    for _ in 0..rounds {
+        for _ in 0..ops_per_round {
+            let peer = rng.below(n as u64) as u32;
+            match rng.below(6) {
+                0 | 1 => {
+                    let len = (64 + rng.below(6 * 1024)) as usize;
+                    let data = vec![(me as u8).wrapping_add(len as u8); len];
+                    let dst = r.global_addr(peer, 0x1000 * (me as u64 + 1) + rng.below(0x800));
+                    pending.push(r.put(dst, &data));
+                }
+                2 => {
+                    let len = 128 + rng.below(2048);
+                    let dst = r.global_addr(peer, 0x2_0000 + rng.below(0x1000));
+                    pending.push(r.put_from_mem(rng.below(0x4000), len, dst));
+                }
+                3 => {
+                    let len = 64 + rng.below(2048);
+                    let src = r.global_addr(peer, rng.below(0x2000));
+                    pending.push(r.get(src, 0x4_0000 + rng.below(0x1000), len));
+                }
+                4 => {
+                    if rng.below(4) == 0 {
+                        // Striping-eligible bulk put (crosses the 64 KiB
+                        // threshold; fans out over equal-cost ports).
+                        let dst = r.global_addr(peer, 0x10_0000);
+                        pending.push(r.put_from_mem(0, 160 << 10, dst));
+                    } else if let Some(h) = pending.pop() {
+                        r.wait(h);
+                    }
+                }
+                5 => {
+                    if rng.below(4) == 0 {
+                        // A DLA job on a (possibly remote) target; the
+                        // completion ack crosses back over the wire.
+                        let job = DlaJob {
+                            op: DlaOp::Matmul {
+                                m: 32,
+                                k: 32,
+                                n: 32,
+                                a: GlobalAddr::new(peer, 0x20_0000),
+                                b: GlobalAddr::new(peer, 0x20_8000),
+                                y: GlobalAddr::new(peer, 0x21_0000),
+                                accumulate: false,
+                            },
+                            art: None,
+                            notify: None,
+                        };
+                        pending.push(r.compute(peer, job));
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        issued.extend(pending.iter().copied());
+        r.wait_all(&pending);
+        pending.clear();
+        r.barrier();
+    }
+    issued
+}
+
+#[test]
+fn compat_ring4_random_traffic() {
+    for seed in seeds() {
+        assert_compatible(
+            || Config::ring(4),
+            |r| random_program(r, seed, 3, 4),
+            &format!("ring(4) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn compat_ring8_random_traffic() {
+    for seed in seeds() {
+        assert_compatible(
+            || Config::ring(8),
+            |r| random_program(r, seed, 2, 3),
+            &format!("ring(8) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn compat_mesh_random_traffic() {
+    for seed in seeds() {
+        assert_compatible(
+            || Config::mesh(2, 3),
+            |r| random_program(r, seed, 2, 3),
+            &format!("mesh(2x3) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn compat_torus_random_traffic() {
+    // Torus routing has wraparound + multihop forwarding: the densest
+    // cross-shard channel traffic of the matrix.
+    for seed in seeds() {
+        let mk = || {
+            let mut cfg = Config::mesh(3, 3);
+            cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
+            cfg
+        };
+        assert_compatible(
+            mk,
+            |r| random_program(r, seed, 2, 3),
+            &format!("torus(3x3) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn compat_under_arq_failure_injection() {
+    // Per-node fault RNGs draw in per-node event order, which the
+    // threaded backend preserves exactly — the retransmission schedule
+    // must reproduce bit-for-bit.
+    for seed in seeds() {
+        assert_compatible(
+            || Config::ring(4).with_link_loss_permille(20),
+            |r| random_program(r, seed, 2, 3),
+            &format!("ring(4)+ARQ seed {seed:#x}"),
+        );
+    }
+}
+
+// ---- structured programs ---------------------------------------------------
+
+#[test]
+fn compat_collectives_broadcast_allreduce() {
+    let run = |threads: ThreadSpec| {
+        let cfg = pcfg(Config::ring(5), ShardSpec::Auto, threads);
+        let mut s = Spmd::new(cfg);
+        let sig = s.register_signal(9);
+        for node in 0..5u32 {
+            let v: Vec<f32> = (0..32).map(|i| (node + i) as f32).collect();
+            s.write_local_f16(node, 0, &v);
+        }
+        let report = s.run(move |r| {
+            collectives::spmd::broadcast(r, sig, 0, 0x100, 999);
+            r.barrier();
+            collectives::spmd::allreduce_sum_f16(r, sig, 0, 32, 0x8000);
+            r.now()
+        });
+        let reduced: Vec<Vec<f32>> = (0..5)
+            .map(|node| s.read_shared_f16(node, 0x8000, 32))
+            .collect();
+        (
+            report.results,
+            report.end,
+            s.events_processed(),
+            s.counters().counts().collect::<Vec<_>>(),
+            reduced,
+        )
+    };
+    let seq = run(ThreadSpec::Off);
+    assert_eq!(seq, run(ThreadSpec::Auto));
+    assert_eq!(seq, run(ThreadSpec::Count(2)));
+}
+
+#[test]
+fn compat_matmul_workload() {
+    let cfg = |threads| {
+        pcfg(Config::two_node_ring(), ShardSpec::Auto, threads)
+    };
+    let case = matmul::MatmulCase::paper(256);
+    let m_seq = matmul::run_case(&cfg(ThreadSpec::Off), &case).unwrap();
+    let m_par = matmul::run_case(&cfg(ThreadSpec::Auto), &case).unwrap();
+    assert_eq!(m_seq.single_node, m_par.single_node, "matmul 1-node time");
+    assert_eq!(m_seq.two_node, m_par.two_node, "matmul 2-node time");
+    assert_eq!(m_seq.speedup.to_bits(), m_par.speedup.to_bits());
+}
+
+// ---- threaded-backend structure --------------------------------------------
+
+#[test]
+fn thread_count_does_not_change_results() {
+    // Worker count is an execution detail: 1, 2, and 4 threads over a
+    // 4-shard fabric must be bit-identical to each other.
+    let seed = 0xC0FFEE;
+    let run = |threads: ThreadSpec| {
+        capture(pcfg(Config::ring(4), ShardSpec::Auto, threads), |r| {
+            random_program(r, seed, 2, 4)
+        })
+    };
+    let one = run(ThreadSpec::Count(1));
+    let two = run(ThreadSpec::Count(2));
+    let four = run(ThreadSpec::Count(4));
+    assert_eq!(one, two, "1 vs 2 workers");
+    assert_eq!(one, four, "1 vs 4 workers");
+}
+
+#[test]
+fn threaded_runs_replay_deterministically() {
+    // OS thread scheduling must never matter: two identical threaded
+    // runs produce identical traces.
+    let seed = 0xDE7E12;
+    let run = || {
+        capture(pcfg(Config::ring(6), ShardSpec::Auto, ThreadSpec::Auto), |r| {
+            random_program(r, seed, 2, 4)
+        })
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn threaded_run_reports_thread_and_busy_stats() {
+    let mut s = Spmd::new(pcfg(Config::ring(4), ShardSpec::Auto, ThreadSpec::Count(2)));
+    let report = s.run(|r| {
+        let peer = (r.id() + 1) % r.nodes();
+        let h = r.put(r.global_addr(peer, 0), &[1u8; 4096]);
+        r.wait(h);
+        r.barrier();
+    });
+    let sh = report.shards.expect("threaded engine reports advance stats");
+    assert_eq!(sh.threads, 2);
+    assert!(sh.windows > 0);
+    assert_eq!(sh.shards.len(), 4);
+    assert_eq!(
+        sh.shards.iter().map(|x| x.events).sum::<u64>(),
+        s.events_processed(),
+        "shard event counts partition the run"
+    );
+    let sent: u64 = sh.shards.iter().map(|x| x.sent_cross).sum();
+    let recv: u64 = sh.shards.iter().map(|x| x.recv_cross).sum();
+    assert_eq!(sent, recv, "every outbox crossing drained");
+    assert!(sent > 0, "neighbor puts + barrier cross shards");
+}
+
+#[test]
+fn synchronous_api_is_trace_compatible_too() {
+    // The legacy single-issuer front end carries its own program clock,
+    // so op timestamp tuples match bit-for-bit across backends,
+    // including the striped fast paths.
+    let run = |threads: ThreadSpec| {
+        let mut f =
+            fshmem::Fshmem::new(pcfg(Config::two_node_ring(), ShardSpec::Auto, threads));
+        let small = f.put(0, f.global_addr(1, 0x100), &[7u8; 512]);
+        f.wait(small);
+        let bulk_data = vec![3u8; 256 << 10];
+        let bulk = f.put(0, f.global_addr(1, 0x1000), &bulk_data);
+        f.wait(bulk);
+        let get = f.get(1, f.global_addr(0, 0x100), 0x8000, 256);
+        f.wait(get);
+        let big_get = f.get(0, f.global_addr(1, 0x1000), 0x10_0000, 256 << 10);
+        f.wait(big_get);
+        let end = f.run_all();
+        (
+            f.op_times(small),
+            f.op_times(bulk),
+            f.op_times(get),
+            f.op_times(big_get),
+            end,
+            f.events_processed(),
+            f.counters().get("puts_striped"),
+            f.counters().get("gets_striped"),
+        )
+    };
+    assert_eq!(run(ThreadSpec::Off), run(ThreadSpec::Auto));
+}

@@ -63,15 +63,15 @@ fn pjrt_matmul_matches_software_backend() {
     if !artifacts_available() {
         return;
     }
-    let mut pjrt = PjrtBackend::load("artifacts").unwrap();
-    let mut sw = SoftwareBackend;
+    let pjrt = PjrtBackend::load("artifacts").unwrap();
+    let sw = SoftwareBackend;
     let a = rand_vec(128 * 128, 1);
     let b = rand_vec(128 * 128, 2);
     let y_pjrt = pjrt.matmul(128, 128, 128, &a, &b, None).unwrap();
     let y_sw = sw.matmul(128, 128, 128, &a, &b, None).unwrap();
     assert_close(&y_pjrt, &y_sw, 1e-3, "matmul_128");
-    assert_eq!(pjrt.pjrt_calls, 1, "must hit the compiled artifact");
-    assert_eq!(pjrt.fallback_calls, 0);
+    assert_eq!(pjrt.pjrt_calls(), 1, "must hit the compiled artifact");
+    assert_eq!(pjrt.fallback_calls(), 0);
 }
 
 #[test]
@@ -79,15 +79,15 @@ fn pjrt_matmul_acc_seeds_accumulator() {
     if !artifacts_available() {
         return;
     }
-    let mut pjrt = PjrtBackend::load("artifacts").unwrap();
-    let mut sw = SoftwareBackend;
+    let pjrt = PjrtBackend::load("artifacts").unwrap();
+    let sw = SoftwareBackend;
     let c = rand_vec(128 * 128, 3);
     let a = rand_vec(128 * 128, 4);
     let b = rand_vec(128 * 128, 5);
     let y_pjrt = pjrt.matmul(128, 128, 128, &a, &b, Some(&c)).unwrap();
     let y_sw = sw.matmul(128, 128, 128, &a, &b, Some(&c)).unwrap();
     assert_close(&y_pjrt, &y_sw, 1e-3, "matmul_acc_128");
-    assert_eq!(pjrt.pjrt_calls, 1);
+    assert_eq!(pjrt.pjrt_calls(), 1);
 }
 
 #[test]
@@ -95,14 +95,14 @@ fn pjrt_conv_matches_software_backend() {
     if !artifacts_available() {
         return;
     }
-    let mut pjrt = PjrtBackend::load("artifacts").unwrap();
-    let mut sw = SoftwareBackend;
+    let pjrt = PjrtBackend::load("artifacts").unwrap();
+    let sw = SoftwareBackend;
     let x = rand_vec(64 * 64 * 32, 6);
     let w = rand_vec(3 * 3 * 32 * 32, 7);
     let y_pjrt = pjrt.conv2d(64, 64, 32, 32, 3, &x, &w).unwrap();
     let y_sw = sw.conv2d(64, 64, 32, 32, 3, &x, &w).unwrap();
     assert_close(&y_pjrt, &y_sw, 1e-3, "conv3");
-    assert_eq!(pjrt.pjrt_calls, 1);
+    assert_eq!(pjrt.pjrt_calls(), 1);
 }
 
 #[test]
@@ -110,12 +110,12 @@ fn pjrt_unmatched_shape_falls_back() {
     if !artifacts_available() {
         return;
     }
-    let mut pjrt = PjrtBackend::load("artifacts").unwrap();
+    let pjrt = PjrtBackend::load("artifacts").unwrap();
     let a = rand_vec(32 * 32, 8);
     let b = rand_vec(32 * 32, 9);
     let _ = pjrt.matmul(32, 32, 32, &a, &b, None).unwrap();
-    assert_eq!(pjrt.pjrt_calls, 0);
-    assert_eq!(pjrt.fallback_calls, 1, "no 32x32 artifact -> software");
+    assert_eq!(pjrt.pjrt_calls(), 0);
+    assert_eq!(pjrt.fallback_calls(), 1, "no 32x32 artifact -> software");
 }
 
 #[test]

@@ -157,8 +157,8 @@ fn nbi_broadcast_overlaps_independent_edges() {
     let mut nbi = Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
     nbi.write_local(0, 0, &data);
     broadcast(&mut nbi, 0, 0, data.len() as u64);
-    let op0 = nbi.world().ops.get(0).expect("first tree edge");
-    let op1 = nbi.world().ops.get(1).expect("second tree edge");
+    let op0 = nbi.world().op(0).expect("first tree edge");
+    let op1 = nbi.world().op(1).expect("second tree edge");
     assert!(
         op1.issued < op0.completed_at.unwrap(),
         "NBI: round-2 edge must be issued while round 1 is in flight \
@@ -170,8 +170,8 @@ fn nbi_broadcast_overlaps_independent_edges() {
     let mut blk = Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
     blk.write_local(0, 0, &data);
     broadcast_blocking(&mut blk, 0, 0, data.len() as u64);
-    let op0 = blk.world().ops.get(0).expect("first tree edge");
-    let op1 = blk.world().ops.get(1).expect("second tree edge");
+    let op0 = blk.world().op(0).expect("first tree edge");
+    let op1 = blk.world().op(1).expect("second tree edge");
     assert!(
         op1.issued >= op0.completed_at.unwrap(),
         "blocking reference serializes rounds"
@@ -199,7 +199,7 @@ fn prop_broadcast_matches_reference_for_random_sizes_and_roots() {
                 "n={n} root={root} len={len} node={node}"
             );
         }
-        assert_eq!(f.world().ops.outstanding(), 0, "region fully drained");
+        assert_eq!(f.world().ops_outstanding(), 0, "region fully drained");
     });
 }
 
