@@ -1,0 +1,221 @@
+//! The selection layer: which algorithm runs a given collective call.
+//!
+//! `auto` decides per (payload size, node count, topology) against the
+//! link/DMA-derived latency/bandwidth crossover
+//! ([`crate::config::Config::collective_cutoff`]); the rules below are
+//! calibrated against the `bench collectives` sweep (each rule names the
+//! regime where its choice measurably wins — see the bench report's
+//! winner column).
+
+use crate::config::CollectiveAlgo;
+use crate::fabric::Topology;
+
+/// A concrete collective schedule (what [`select`] resolves
+/// [`CollectiveAlgo`] to). Applicability: broadcast/reduce/allreduce
+/// support all four; gather/scatter are root-centric data movements with
+/// no reduce-scatter form, so `Ring`/`Rsag` alias their `Tree` schedule
+/// there (documented fallback, not an error — a forced `collectives.algo
+/// = ring` config still runs every collective).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Root fan-out / root gather, one round.
+    Flat,
+    /// Binomial tree on root-relative ranks, `log2(n)` rounds.
+    Tree,
+    /// Pipelined chunk ring / ring reduce-scatter (+ all-gather).
+    Ring,
+    /// Recursive-halving reduce-scatter + recursive-doubling all-gather
+    /// (Rabenseifner); requires a power-of-two fabric, otherwise the
+    /// implementation runs the ring schedule.
+    Rsag,
+}
+
+impl Algo {
+    /// Every concrete algorithm, in report order.
+    pub const ALL: [Algo; 4] = [Algo::Flat, Algo::Tree, Algo::Ring, Algo::Rsag];
+
+    /// Short lowercase name (report/CLI labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Flat => "flat",
+            Algo::Tree => "tree",
+            Algo::Ring => "ring",
+            Algo::Rsag => "rsag",
+        }
+    }
+}
+
+/// Which collective is being selected for (they have different cost
+/// shapes: broadcast moves one payload everywhere, gather/scatter move
+/// per-rank strips through the root).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coll {
+    /// One payload, root to all.
+    Broadcast,
+    /// Element-wise sum onto the root.
+    Reduce,
+    /// Element-wise sum, result everywhere.
+    Allreduce,
+    /// Per-rank strips concatenated on the root.
+    Gather,
+    /// Root strips distributed to ranks.
+    Scatter,
+}
+
+/// Pipelined-ring schedules forward between consecutive node ids; on a
+/// mesh the logical wrap edge (`n-1 -> 0`) crosses the whole fabric, so
+/// rings only pay where consecutive ids stay (mostly) adjacent.
+fn ring_friendly(topology: &Topology) -> bool {
+    !matches!(topology, Topology::Mesh2D { .. })
+}
+
+/// Resolve the configured spec to a concrete algorithm for one call.
+///
+/// `payload_bytes` is the collective's unit payload: the full vector for
+/// broadcast/reduce/allreduce, the per-rank strip for gather/scatter.
+pub fn select(
+    spec: CollectiveAlgo,
+    coll: Coll,
+    payload_bytes: u64,
+    n: u32,
+    topology: &Topology,
+    cutoff: u64,
+) -> Algo {
+    match spec {
+        CollectiveAlgo::Flat => Algo::Flat,
+        CollectiveAlgo::Tree => Algo::Tree,
+        CollectiveAlgo::Ring => Algo::Ring,
+        CollectiveAlgo::Rsag => Algo::Rsag,
+        CollectiveAlgo::Auto => auto(coll, payload_bytes, n, topology, cutoff),
+    }
+}
+
+/// Under this many nodes a single fan-out round beats a tree's
+/// dependency chain even for tiny payloads: the root issues all sends
+/// back-to-back (posted MMIO writes are pipelined) while a tree pays a
+/// put-ack + signal round trip per level. Measured in `bench
+/// collectives` — on the 8/9-node sweep fabrics flat still wins the
+/// small-payload points, so the tree only takes over beyond them.
+const FLAT_MAX_NODES: u32 = 16;
+
+fn auto(coll: Coll, payload_bytes: u64, n: u32, topology: &Topology, cutoff: u64) -> Algo {
+    if n <= 2 {
+        // Every schedule degenerates to the same single transfer; flat
+        // has the least bookkeeping.
+        return Algo::Flat;
+    }
+    let small = payload_bytes < cutoff;
+    match coll {
+        Coll::Broadcast | Coll::Reduce | Coll::Allreduce => {
+            if small {
+                // Latency-bound: rounds dominate. A flat root fan-out is
+                // one round of pipelined issue; trees pay per-level
+                // handshakes and only win once the root's serial sends
+                // outgrow them.
+                if n <= FLAT_MAX_NODES {
+                    Algo::Flat
+                } else {
+                    Algo::Tree
+                }
+            } else if ring_friendly(topology) {
+                // Bandwidth-bound on a ring/torus: neighbor-hop
+                // pipelining keeps every link busy with exactly one
+                // chunk per step. (Rsag's distance-n/2 exchanges stack
+                // n/2 concurrent streams onto each physical ring link —
+                // measurably worse despite the log round count.)
+                Algo::Ring
+            } else if coll == Coll::Allreduce && n.is_power_of_two() {
+                // Bandwidth-bound allreduce on a power-of-two mesh: the
+                // recursive-halving partners (distance n/2, n/4, ...)
+                // map onto short mesh paths, and log rounds with
+                // shrinking payloads beat the tree's full-size hops.
+                Algo::Rsag
+            } else {
+                // Mesh without the power-of-two structure: the ring's
+                // row-wrap edges are full-row detours; the binomial
+                // tree's longest edges still beat them.
+                Algo::Tree
+            }
+        }
+        Coll::Gather | Coll::Scatter => {
+            if small {
+                // Tiny strips: aggregate subtree blocks so the root
+                // receives log2(n) messages instead of n-1 fixed costs.
+                Algo::Tree
+            } else {
+                // Bulk strips: forwarding through a tree doubles bytes
+                // on the wire; the root's links are the bottleneck
+                // either way, so move each strip exactly once.
+                Algo::Flat
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod cases {
+    use super::*;
+
+    const CUT: u64 = 64 << 10;
+
+    #[test]
+    fn forced_specs_pass_through() {
+        for (spec, want) in [
+            (CollectiveAlgo::Flat, Algo::Flat),
+            (CollectiveAlgo::Tree, Algo::Tree),
+            (CollectiveAlgo::Ring, Algo::Ring),
+            (CollectiveAlgo::Rsag, Algo::Rsag),
+        ] {
+            assert_eq!(
+                select(spec, Coll::Broadcast, 1, 8, &Topology::Ring(8), CUT),
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn auto_is_payload_and_topology_aware() {
+        let auto = CollectiveAlgo::Auto;
+        let ring8 = Topology::Ring(8);
+        // Small payloads: latency-bound → flat on these fabric sizes.
+        assert_eq!(select(auto, Coll::Allreduce, 256, 8, &ring8, CUT), Algo::Flat);
+        // Large allreduce on a physical ring → ring schedule (rsag's
+        // long-distance exchanges contend on ring links).
+        assert_eq!(
+            select(auto, Coll::Allreduce, 512 << 10, 8, &ring8, CUT),
+            Algo::Ring
+        );
+        // Large allreduce, 9-node torus (not a power of two) → ring.
+        let torus = Topology::Torus2D { w: 3, h: 3 };
+        assert_eq!(
+            select(auto, Coll::Allreduce, 512 << 10, 9, &torus, CUT),
+            Algo::Ring
+        );
+        // Large allreduce on a power-of-two mesh → rsag (halving
+        // partners map onto short mesh paths; no wrap edges to pay).
+        let mesh8 = Topology::Mesh2D { w: 2, h: 4 };
+        assert_eq!(
+            select(auto, Coll::Allreduce, 512 << 10, 8, &mesh8, CUT),
+            Algo::Rsag
+        );
+        // Large broadcast on a non-power-of-two mesh avoids the ring's
+        // wrap edge via the tree.
+        let mesh = Topology::Mesh2D { w: 2, h: 3 };
+        assert_eq!(
+            select(auto, Coll::Broadcast, 512 << 10, 6, &mesh, CUT),
+            Algo::Tree
+        );
+        // Two nodes: everything is flat.
+        assert_eq!(
+            select(auto, Coll::Allreduce, 512 << 10, 2, &Topology::Ring(2), CUT),
+            Algo::Flat
+        );
+        // Gather: small strips aggregate (tree), bulk strips move once
+        // (flat).
+        assert_eq!(select(auto, Coll::Gather, 256, 8, &ring8, CUT), Algo::Tree);
+        assert_eq!(
+            select(auto, Coll::Scatter, 512 << 10, 8, &ring8, CUT),
+            Algo::Flat
+        );
+    }
+}

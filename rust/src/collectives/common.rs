@@ -1,0 +1,156 @@
+//! Shared plumbing for the SPMD collective algorithms: signal-args
+//! protocol constants, chunk math, and the accumulate step (DLA
+//! accumulate job or untimed host sum).
+
+use crate::api::OpHandle;
+use crate::dla::{DlaJob, DlaOp};
+use crate::memory::GlobalAddr;
+use crate::program::Rank;
+
+/// Signal-AM protocol phases. Every collective signal carries
+/// `[phase, step, sender_rel, epoch]` so
+/// [`Rank::wait_signal_matching`] can attribute out-of-order arrivals
+/// exactly (one registered tag serves every collective).
+pub(super) const PH_BCAST: u32 = 1;
+/// Ring broadcast: chunk `step` landed.
+pub(super) const PH_BCAST_RING: u32 = 2;
+/// Tree scatter: your block landed.
+pub(super) const PH_SCATTER: u32 = 3;
+/// Tree gather: child `sender_rel`'s block landed (round `step`).
+pub(super) const PH_GATHER: u32 = 4;
+/// Tree reduce: child `sender_rel`'s vector landed (round `step`).
+pub(super) const PH_REDUCE: u32 = 5;
+/// Ring reduce-scatter: step `step` chunk landed.
+pub(super) const PH_RS: u32 = 6;
+/// Ring all-gather: step `step` chunk landed.
+pub(super) const PH_AG: u32 = 7;
+/// Reduced-chunk gather to root: chunk `step` landed.
+pub(super) const PH_RG: u32 = 8;
+/// Recursive halving: partner's scratch is free for step `step`.
+pub(super) const PH_READY: u32 = 9;
+/// Recursive halving: step `step` half landed.
+pub(super) const PH_DATA: u32 = 10;
+/// Recursive doubling all-gather: step `step` block landed.
+pub(super) const PH_AGREC: u32 = 11;
+/// Scatter phase of the scatter+all-gather broadcast: chunk landed.
+pub(super) const PH_SC: u32 = 12;
+
+/// Compose the signal args for `(phase, step, sender_rel, epoch)`.
+pub(super) fn sig4(phase: u32, step: u32, from_rel: u32, ep: u32) -> [u32; 4] {
+    [phase, step, from_rel, ep]
+}
+
+/// Even split of `count` elements into `parts` chunks: chunk `i` covers
+/// `[start, start + len)`. The first `count % parts` chunks carry one
+/// extra element; chunks may be empty when `count < parts`.
+pub(super) fn elem_chunk(count: usize, parts: u32, i: u32) -> (usize, usize) {
+    let parts = parts as usize;
+    let i = i as usize;
+    debug_assert!(i < parts);
+    let base = count / parts;
+    let rem = count % parts;
+    let start = i * base + i.min(rem);
+    let len = base + usize::from(i < rem);
+    (start, len)
+}
+
+/// [`elem_chunk`] in bytes over a byte payload.
+pub(super) fn byte_chunk(len: u64, parts: u32, i: u32) -> (u64, u64) {
+    let (s, l) = elem_chunk(len as usize, parts, i);
+    (s as u64, l as u64)
+}
+
+/// How many chunks the pipelined ring broadcast splits `len` bytes into:
+/// one per latency/bandwidth crossover's worth of payload, capped so
+/// per-chunk fixed costs stay amortized.
+pub(super) fn ring_chunks(len: u64, cutoff: u64) -> u32 {
+    (len / cutoff.max(1)).clamp(1, 8) as u32
+}
+
+/// Zero-copy put of `len` bytes unless empty (empty chunks of a ring
+/// schedule skip the wire but still run their signal handshake).
+pub(super) fn put_block(
+    r: &mut Rank,
+    src_off: u64,
+    len: u64,
+    dst_node: u32,
+    dst_off: u64,
+) -> Option<OpHandle> {
+    if len == 0 {
+        return None;
+    }
+    Some(r.put_from_mem(src_off, len, GlobalAddr::new(dst_node, dst_off)))
+}
+
+/// Untimed local copy inside this rank's segment (staging an
+/// accumulation buffer / placing an own strip — the same PCIe-side
+/// idiom the legacy collectives use for root-local strips).
+pub(super) fn copy_local(r: &mut Rank, src_off: u64, dst_off: u64, len: u64) {
+    if len == 0 || src_off == dst_off {
+        return;
+    }
+    let data = r.read_shared(src_off, len as usize);
+    r.write_local(dst_off, &data);
+}
+
+/// One reduction step: `y[0..count] += x[0..count]` (fp16 in memory).
+///
+/// With `dla` set this issues a [`DlaOp::Accum`] job to this rank's own
+/// DLA and waits for its completion ack — the arithmetic costs simulated
+/// compute time and occupies the accelerator (the reduction-offload
+/// path). Otherwise it sums on the host, untimed — the free-math
+/// baseline (`collectives.reduce = host`, and all timing-only runs).
+pub(super) fn accumulate(r: &mut Rank, dla: bool, x_off: u64, y_off: u64, count: usize) {
+    if count == 0 {
+        return;
+    }
+    if dla {
+        let me = r.id();
+        let job = DlaJob {
+            op: DlaOp::Accum {
+                count: count as u32,
+                x: GlobalAddr::new(me, x_off),
+                y: GlobalAddr::new(me, y_off),
+            },
+            art: None,
+            notify: None,
+        };
+        let h = r.compute(me, job);
+        r.wait(h);
+    } else {
+        let x = r.read_shared_f16(x_off, count);
+        let mut y = r.read_shared_f16(y_off, count);
+        for (a, b) in y.iter_mut().zip(&x) {
+            *a += b;
+        }
+        r.write_local_f16(y_off, &y);
+    }
+}
+
+#[cfg(test)]
+mod cases {
+    use super::*;
+
+    #[test]
+    fn chunks_partition_exactly() {
+        for count in [0usize, 1, 5, 64, 100] {
+            for parts in [1u32, 2, 3, 7, 9] {
+                let mut covered = 0;
+                for i in 0..parts {
+                    let (s, l) = elem_chunk(count, parts, i);
+                    assert_eq!(s, covered, "count {count} parts {parts} chunk {i}");
+                    covered += l;
+                }
+                assert_eq!(covered, count);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_chunk_count_scales_with_payload() {
+        let cut = 64 << 10;
+        assert_eq!(ring_chunks(512, cut), 1);
+        assert_eq!(ring_chunks(128 << 10, cut), 2);
+        assert_eq!(ring_chunks(4 << 20, cut), 8, "capped");
+    }
+}

@@ -1,0 +1,106 @@
+//! Flat (single-round, root-centric) collective schedules.
+//!
+//! The root issues every transfer back-to-back — command issue is a
+//! posted MMIO write, so n-1 sends/receives overlap on the fabric as far
+//! as the root's ports allow. One round, no forwarding: the right shape
+//! when rounds (not bytes) dominate, or when strips must cross the
+//! root's links exactly once anyway (bulk gather/scatter).
+
+use crate::memory::{GlobalAddr, NodeId};
+use crate::program::{AmTag, Rank};
+
+use super::common::{accumulate, copy_local, put_block, sig4, PH_BCAST};
+
+/// Flat broadcast: root puts the payload to every other node, then
+/// signals each receiver as its put is acked (data is in memory before
+/// the signal can arrive).
+pub(super) fn broadcast(r: &mut Rank, sig: AmTag, ep: u32, root: NodeId, offset: u64, len: u64) {
+    let n = r.nodes();
+    if r.id() == root {
+        let mut sends = Vec::new();
+        for i in 1..n {
+            let dst = (root + i) % n;
+            sends.push((dst, put_block(r, offset, len, dst, offset)));
+        }
+        for (dst, h) in sends {
+            if let Some(h) = h {
+                r.wait(h);
+            }
+            r.signal_args(dst, sig, sig4(PH_BCAST, 0, 0, ep));
+        }
+    } else {
+        r.wait_signal_matching(sig, sig4(PH_BCAST, 0, 0, ep));
+    }
+}
+
+/// Flat reduce: root gathers every contribution with one-sided GETs
+/// (all in flight simultaneously), then folds them into `dst_offset` in
+/// arrival order — each fold a DLA accumulate job when offload is on.
+/// Scratch: `(n-1) * 2*count` bytes above `dst_offset + 2*count`.
+pub(super) fn reduce(
+    r: &mut Rank,
+    dla: bool,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    let bytes = count as u64 * 2;
+    if r.id() == root {
+        let scratch = dst_offset + bytes;
+        let mut gets = Vec::new();
+        for i in 1..n {
+            let node = (root + i) % n;
+            let slot = scratch + (i - 1) as u64 * bytes;
+            if bytes > 0 {
+                gets.push(r.get(GlobalAddr::new(node, offset), slot, bytes));
+            }
+        }
+        copy_local(r, offset, dst_offset, bytes);
+        for (i, h) in gets.into_iter().enumerate() {
+            r.wait(h);
+            accumulate(r, dla, scratch + i as u64 * bytes, dst_offset, count);
+        }
+    }
+    r.barrier();
+}
+
+/// Flat gather: root pulls every strip with one-sided GETs into its
+/// contiguous destination (its own strip is a local copy). Ends on a
+/// barrier.
+pub(super) fn gather(r: &mut Rank, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
+    let n = r.nodes();
+    if r.id() == root {
+        r.nbi_begin();
+        for node in 0..n {
+            if node == root {
+                copy_local(r, offset, dst_offset + node as u64 * len, len);
+            } else if len > 0 {
+                let src = GlobalAddr::new(node, offset);
+                r.get_nbi(src, dst_offset + node as u64 * len, len);
+            }
+        }
+        r.nbi_sync();
+    }
+    r.barrier();
+}
+
+/// Flat scatter: root pushes strip `i` to node `i` (independent PUTs,
+/// one NBI region). Ends on a barrier.
+pub(super) fn scatter(r: &mut Rank, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
+    let n = r.nodes();
+    if r.id() == root {
+        r.nbi_begin();
+        for node in 0..n {
+            if node == root {
+                copy_local(r, offset + node as u64 * len, dst_offset, len);
+            } else if len > 0 {
+                let addr = GlobalAddr::new(node, dst_offset);
+                r.put_from_mem_nbi(offset + node as u64 * len, len, addr);
+            }
+        }
+        r.nbi_sync();
+    }
+    r.barrier();
+}

@@ -1,0 +1,129 @@
+//! Software-side collective operations: an algorithm library with
+//! topology/size-aware selection and DLA-offloaded reduction.
+//!
+//! The paper implements barriers and job control "on the software side"
+//! (§III-A) — GASNet's collectives are library code over the one-sided
+//! core API. This subsystem provides the set a legacy PGAS/SHMEM
+//! application expects — broadcast, reduce(+ allreduce), gather /
+//! all-gather, scatter — built strictly on `put`/`get`/`barrier`/signal
+//! AMs so every byte and every dependency edge still moves through the
+//! simulated GASNet cores (these are *timed* operations, not host
+//! shortcuts).
+//!
+//! ## The algorithm library
+//!
+//! On FPGA fabrics the collective *algorithm* — not just the
+//! point-to-point core — determines delivered bandwidth (the THeGASNets
+//! line of work makes the same observation). Four schedules are
+//! provided, all expressed over the SPMD [`crate::program::Rank`]
+//! primitives (see [`Algo`] for the applicability matrix):
+//!
+//! * **flat** — root fan-out / root gather in one round; optimal for a
+//!   handful of nodes or when the root's links are the bottleneck
+//!   anyway.
+//! * **tree** — binomial tree, `log2(n)` rounds; bounds the root's
+//!   serial work for latency-bound (small) payloads on larger fabrics.
+//! * **ring** — pipelined chunked neighbor forwarding (broadcast) and
+//!   ring reduce-scatter (+ all-gather for allreduce); bandwidth-optimal
+//!   for large payloads: every link carries each byte at most twice.
+//! * **rsag** — reduce-scatter + all-gather in the Rabenseifner style:
+//!   recursive halving/doubling on power-of-two fabrics (log rounds with
+//!   geometrically shrinking payloads), falling back to the ring
+//!   schedule otherwise.
+//!
+//! ## Selection
+//!
+//! `collectives.algo = auto` (the default, [`crate::config::CollectiveAlgo`])
+//! picks per call from the payload size, node count, and topology. The
+//! latency/bandwidth crossover it uses ([`crate::config::Config::collective_cutoff`])
+//! is derived from the link/DMA/timing parameters exactly the way
+//! `stripe_threshold` is — no magic constants. A fixed setting forces
+//! one algorithm everywhere; the [`spmd`] `*_algo` entry points force
+//! one per call (what the `bench collectives` ablation sweeps).
+//!
+//! ## Reduction offload
+//!
+//! Reductions sum their partial results through the DLA's accumulate
+//! mode ([`crate::dla::DlaOp::Accum`]) as *timed* compute jobs whenever
+//! a numerics backend is configured, so reduction arithmetic occupies
+//! the DLA and shows up in `dla_jobs_*`/GOPS accounting instead of
+//! happening for free on the host. `collectives.reduce = host`
+//! ([`crate::config::ReduceOffload`]) keeps the untimed host-sum
+//! baseline; timing-only runs resolve there automatically (a
+//! timing-only DLA produces no numbers).
+//!
+//! ## Issue disciplines
+//!
+//! * The re-exported synchronous functions ([`sync`]) drive the
+//!   [`crate::api::Fshmem`] front end (one host program controls every
+//!   node — calibration baseline; flat/tree shapes only).
+//! * [`spmd`] holds the primary implementations: each rank calls the
+//!   collective from its own program, per-edge dependencies are carried
+//!   by signal AMs resolved at *simulated* time, and overlap across
+//!   ranks is measured, not assumed.
+//!
+//! ## Memory conventions
+//!
+//! Reduction-flavored collectives treat the caller's destination region
+//! as the accumulation buffer on *every* rank and use scratch directly
+//! above it: `reduce`/`allreduce` of `count` fp16 elements may touch
+//! `[dst_offset, dst_offset + (2 + ceil(log2 n)) * 2*count)`; tree
+//! scatter stages blocks in `[dst_offset + len, dst_offset + len * (1 +
+//! n))`; tree gather aggregates in `[dst_offset, dst_offset + n*len)`
+//! on every rank. Callers size their layouts accordingly (the segment
+//! is 64 MiB per node in the presets).
+
+pub mod algo;
+mod common;
+mod flat;
+mod ring;
+mod rsag;
+pub mod spmd;
+mod sync;
+
+#[cfg(test)]
+mod tests;
+
+pub use algo::{Algo, Coll};
+pub use sync::{
+    all_gather, allreduce_sum_f16, broadcast, gather, reduce_sum_f16, scatter,
+};
+
+use crate::config::{CollectiveAlgo, Config};
+use crate::fabric::Topology;
+
+/// Config-derived context the collective library selects and executes
+/// with; carried by every [`crate::program::Rank`] (see
+/// [`crate::program::Rank::coll_ctx`]).
+#[derive(Debug, Clone, Copy)]
+pub struct CollCtx {
+    /// Algorithm spec (`collectives.algo`): auto or forced.
+    pub algo: CollectiveAlgo,
+    /// Whether reductions route partial sums through DLA accumulate
+    /// jobs (resolved from `collectives.reduce` × `numerics`).
+    pub dla_reduce: bool,
+    /// The fabric topology (feeds auto-selection and the ring
+    /// neighbor maps).
+    pub topology: Topology,
+    /// Latency/bandwidth crossover in bytes
+    /// ([`Config::collective_cutoff`]).
+    pub cutoff: u64,
+}
+
+impl CollCtx {
+    /// Derive the context from a validated [`Config`].
+    pub fn from_config(cfg: &Config) -> Self {
+        CollCtx {
+            algo: cfg.collective_algo,
+            dla_reduce: cfg.reduce_on_dla(),
+            topology: cfg.topology,
+            cutoff: cfg.collective_cutoff(),
+        }
+    }
+
+    /// The algorithm this context selects for `coll` moving
+    /// `payload_bytes` per rank across `n` nodes.
+    pub fn pick(&self, coll: Coll, payload_bytes: u64, n: u32) -> Algo {
+        algo::select(self.algo, coll, payload_bytes, n, &self.topology, self.cutoff)
+    }
+}

@@ -1,0 +1,220 @@
+//! Pipelined ring collective schedules.
+//!
+//! Ranks form a logical ring in root-relative order; payloads move as
+//! chunks between neighbors, so after a fill of `n-2` steps every link
+//! carries a distinct chunk each step — the bandwidth-optimal shape for
+//! large payloads (each byte crosses each link at most twice for
+//! allreduce, once for broadcast).
+
+use crate::memory::NodeId;
+use crate::program::{AmTag, Rank};
+
+use super::common::{
+    accumulate, byte_chunk, copy_local, elem_chunk, put_block, ring_chunks, sig4,
+    PH_AG, PH_BCAST_RING, PH_RG, PH_RS,
+};
+
+/// Pipelined ring broadcast: the payload splits into chunks (one per
+/// latency/bandwidth crossover's worth, see
+/// [`super::common::ring_chunks`]); each rank forwards chunk `c` to its
+/// right neighbor as soon as it holds it, so chunk `c+1` rides the
+/// previous hop's wire while chunk `c` moves on.
+pub(super) fn broadcast(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    cutoff: u64,
+    root: NodeId,
+    offset: u64,
+    len: u64,
+) {
+    let n = r.nodes();
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (r.id() + n - root) % n;
+    let right = unrel(rel + 1); // rel + 1 < n checked before use
+    let chunks = ring_chunks(len, cutoff);
+    for c in 0..chunks {
+        if rel > 0 {
+            r.wait_signal_matching(sig, sig4(PH_BCAST_RING, c, 0, ep));
+        }
+        if rel + 1 < n {
+            let (co, cl) = byte_chunk(len, chunks, c);
+            if let Some(h) = put_block(r, offset + co, cl, right, offset + co) {
+                r.wait(h);
+            }
+            r.signal_args(right, sig, sig4(PH_BCAST_RING, c, 0, ep));
+        }
+    }
+}
+
+/// Ring reduce-scatter over the accumulation buffers at `work` (the
+/// collective's `dst_offset` on every rank): `n-1` steps, each rank
+/// sending one chunk right and folding the chunk arriving from the left
+/// into its running sums. Post-condition: relative rank `rel` holds the
+/// fully reduced chunk `(rel + 1) % n`. Scratch: `2*count` bytes above
+/// `work + 2*count` (each chunk index lands in its own slot exactly
+/// once, so no flow-control credits are needed).
+#[allow(clippy::too_many_arguments)]
+fn reduce_scatter(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    dla: bool,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    work: u64,
+) {
+    let n = r.nodes();
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (r.id() + n - root) % n;
+    let right = unrel((rel + 1) % n);
+    let bytes = count as u64 * 2;
+    let scratch = work + bytes;
+    copy_local(r, offset, work, bytes);
+    for s in 0..n - 1 {
+        let send_c = (rel + n - s) % n;
+        let recv_c = (rel + n - s - 1) % n;
+        let (so, sl) = elem_chunk(count, n, send_c);
+        if let Some(h) = put_block(
+            r,
+            work + so as u64 * 2,
+            sl as u64 * 2,
+            right,
+            scratch + so as u64 * 2,
+        ) {
+            r.wait(h);
+        }
+        r.signal_args(right, sig, sig4(PH_RS, s, 0, ep));
+        r.wait_signal_matching(sig, sig4(PH_RS, s, 0, ep));
+        let (ro, rl) = elem_chunk(count, n, recv_c);
+        accumulate(r, dla, scratch + ro as u64 * 2, work + ro as u64 * 2, rl);
+    }
+}
+
+/// Ring all-gather of the reduced chunks left by [`reduce_scatter`]:
+/// each rank circulates the chunk it owns; after `n-1` steps every rank
+/// holds the full vector at `work`.
+fn all_gather_chunks(r: &mut Rank, sig: AmTag, ep: u32, root: NodeId, work: u64, count: usize) {
+    let n = r.nodes();
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (r.id() + n - root) % n;
+    let right = unrel((rel + 1) % n);
+    for s in 0..n - 1 {
+        let send_c = (rel + 1 + n - s) % n;
+        let (so, sl) = elem_chunk(count, n, send_c);
+        if let Some(h) = put_block(
+            r,
+            work + so as u64 * 2,
+            sl as u64 * 2,
+            right,
+            work + so as u64 * 2,
+        ) {
+            r.wait(h);
+        }
+        r.signal_args(right, sig, sig4(PH_AG, s, 0, ep));
+        r.wait_signal_matching(sig, sig4(PH_AG, s, 0, ep));
+    }
+}
+
+/// Ring reduce: reduce-scatter, then the chunk owners deposit their
+/// reduced chunks on the root. Ends on a barrier.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn reduce(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    dla: bool,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    reduce_scatter(r, sig, ep, dla, root, offset, count, dst_offset);
+    let rel = (r.id() + n - root) % n;
+    let my_c = (rel + 1) % n;
+    let (o, l) = elem_chunk(count, n, my_c);
+    if r.id() != root {
+        if let Some(h) = put_block(
+            r,
+            dst_offset + o as u64 * 2,
+            l as u64 * 2,
+            root,
+            dst_offset + o as u64 * 2,
+        ) {
+            r.wait(h);
+        }
+        r.signal_args(root, sig, sig4(PH_RG, my_c, 0, ep));
+    } else {
+        for c in 0..n {
+            if c != my_c {
+                r.wait_signal_matching(sig, sig4(PH_RG, c, 0, ep));
+            }
+        }
+    }
+    r.barrier();
+}
+
+/// Ring allreduce: reduce-scatter + all-gather — the classic
+/// bandwidth-optimal schedule (2(n-1) steps, each byte crossing each
+/// link at most twice). Ends on a barrier.
+pub(super) fn allreduce(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    dla: bool,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    reduce_scatter(r, sig, ep, dla, 0, offset, count, dst_offset);
+    all_gather_chunks(r, sig, ep, 0, dst_offset, count);
+    r.barrier();
+}
+
+/// Scatter + ring all-gather broadcast (the van de Geijn schedule, used
+/// as the `rsag` broadcast shape): the root scatters `n` chunks to
+/// their owners, then the ring all-gather circulates them — each link
+/// carries `(n-1)/n` of the payload instead of the whole of it.
+pub(super) fn scatter_allgather_broadcast(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    root: NodeId,
+    offset: u64,
+    len: u64,
+) {
+    use super::common::PH_SC;
+    let n = r.nodes();
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (r.id() + n - root) % n;
+    // Scatter: chunk i (at its final position) to relative rank i.
+    if rel == 0 {
+        let mut sends = Vec::new();
+        for i in 1..n {
+            let (co, cl) = byte_chunk(len, n, i);
+            let dst = unrel(i);
+            sends.push((i, dst, put_block(r, offset + co, cl, dst, offset + co)));
+        }
+        for (i, dst, h) in sends {
+            if let Some(h) = h {
+                r.wait(h);
+            }
+            r.signal_args(dst, sig, sig4(PH_SC, i, 0, ep));
+        }
+    } else {
+        r.wait_signal_matching(sig, sig4(PH_SC, rel, 0, ep));
+    }
+    // All-gather the byte chunks around the ring.
+    let right = unrel((rel + 1) % n);
+    for s in 0..n - 1 {
+        let c = (rel + n - s) % n;
+        let (co, cl) = byte_chunk(len, n, c);
+        if let Some(h) = put_block(r, offset + co, cl, right, offset + co) {
+            r.wait(h);
+        }
+        r.signal_args(right, sig, sig4(PH_AG, s, 0, ep));
+        r.wait_signal_matching(sig, sig4(PH_AG, s, 0, ep));
+    }
+}

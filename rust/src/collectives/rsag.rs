@@ -1,0 +1,165 @@
+//! Rabenseifner-style reduce-scatter + all-gather schedules: recursive
+//! halving and doubling on power-of-two fabrics.
+//!
+//! `log2(n)` rounds each way with geometrically shrinking payloads —
+//! total bytes per rank `2 * count * (n-1)/n`, like the ring, but in
+//! `2*log2(n)` latency steps instead of `2(n-1)`. Fabrics that are not
+//! a power of two run the ring schedule instead (the classic
+//! non-power-of-two fold-in costs an extra full exchange; on the fabric
+//! sizes swept here the ring is the honest choice).
+
+use crate::memory::NodeId;
+use crate::program::{AmTag, Rank};
+
+use super::common::{
+    accumulate, copy_local, put_block, sig4, PH_AGREC, PH_DATA, PH_READY, PH_RG,
+};
+use super::ring;
+
+/// Recursive-halving reduce-scatter over the accumulation buffers at
+/// `work`. Pairs exchange the half of their current segment the partner
+/// keeps, MSB distance first, and fold the arriving half in (a DLA
+/// accumulate job under offload). A ready/data signal pair per step
+/// protects the scratch region (each step's receive slot is a subset of
+/// the previous one's). Post: relative rank `rel` owns segment
+/// `segs.last()`; returns the per-level segment stack for the doubling
+/// phase. Scratch: `2*count` bytes above `work + 2*count`.
+#[allow(clippy::too_many_arguments)]
+fn halving_reduce_scatter(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    dla: bool,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    work: u64,
+) -> (Vec<(usize, usize)>, usize, usize) {
+    let n = r.nodes();
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (r.id() + n - root) % n;
+    let bytes = count as u64 * 2;
+    let scratch = work + bytes;
+    copy_local(r, offset, work, bytes);
+    let levels = n.trailing_zeros();
+    let mut segs = Vec::with_capacity(levels as usize);
+    let (mut start, mut len) = (0usize, count);
+    for step in 0..levels {
+        let bit = n >> (step + 1); // n/2, n/4, ..., 1
+        let partner_rel = rel ^ bit;
+        let partner = unrel(partner_rel);
+        let lo_len = len / 2;
+        let (keep_s, keep_l, send_s, send_l) = if rel & bit == 0 {
+            (start, lo_len, start + lo_len, len - lo_len)
+        } else {
+            (start + lo_len, len - lo_len, start, lo_len)
+        };
+        // My scratch slot for this step is free only once my previous
+        // fold consumed it — tell the partner before it may write.
+        r.signal_args(partner, sig, sig4(PH_READY, step, rel, ep));
+        r.wait_signal_matching(sig, sig4(PH_READY, step, partner_rel, ep));
+        if let Some(h) = put_block(
+            r,
+            work + send_s as u64 * 2,
+            send_l as u64 * 2,
+            partner,
+            scratch + send_s as u64 * 2,
+        ) {
+            r.wait(h);
+        }
+        r.signal_args(partner, sig, sig4(PH_DATA, step, rel, ep));
+        r.wait_signal_matching(sig, sig4(PH_DATA, step, partner_rel, ep));
+        accumulate(
+            r,
+            dla,
+            scratch + keep_s as u64 * 2,
+            work + keep_s as u64 * 2,
+            keep_l,
+        );
+        segs.push((start, len));
+        start = keep_s;
+        len = keep_l;
+    }
+    (segs, start, len)
+}
+
+/// Rabenseifner allreduce: recursive-halving reduce-scatter +
+/// recursive-doubling all-gather (power-of-two fabrics; ring schedule
+/// otherwise). Ends on a barrier.
+pub(super) fn allreduce(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    dla: bool,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    if !n.is_power_of_two() {
+        return ring::allreduce(r, sig, ep, dla, offset, count, dst_offset);
+    }
+    let rel = r.id(); // root 0: relative == absolute
+    let (segs, mut start, mut len) =
+        halving_reduce_scatter(r, sig, ep, dla, 0, offset, count, dst_offset);
+    // Recursive doubling: retrace the halvings, exchanging ever larger
+    // blocks. The partner writes the sibling block — disjoint from what
+    // this rank reads — so no ready handshake is needed.
+    for step in (0..segs.len() as u32).rev() {
+        let bit = n >> (step + 1);
+        let partner = rel ^ bit;
+        if let Some(h) = put_block(
+            r,
+            dst_offset + start as u64 * 2,
+            len as u64 * 2,
+            partner,
+            dst_offset + start as u64 * 2,
+        ) {
+            r.wait(h);
+        }
+        r.signal_args(partner, sig, sig4(PH_AGREC, step, rel, ep));
+        r.wait_signal_matching(sig, sig4(PH_AGREC, step, partner, ep));
+        (start, len) = segs[step as usize];
+    }
+    r.barrier();
+}
+
+/// Rsag reduce: recursive-halving reduce-scatter, then the segment
+/// owners deposit their reduced segments on the root (power-of-two
+/// fabrics; ring schedule otherwise). Ends on a barrier.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn reduce(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    dla: bool,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    if !n.is_power_of_two() {
+        return ring::reduce(r, sig, ep, dla, root, offset, count, dst_offset);
+    }
+    let rel = (r.id() + n - root) % n;
+    let (_, start, len) =
+        halving_reduce_scatter(r, sig, ep, dla, root, offset, count, dst_offset);
+    if rel != 0 {
+        if let Some(h) = put_block(
+            r,
+            dst_offset + start as u64 * 2,
+            len as u64 * 2,
+            root,
+            dst_offset + start as u64 * 2,
+        ) {
+            r.wait(h);
+        }
+        r.signal_args(root, sig, sig4(PH_RG, rel, 0, ep));
+    } else {
+        for c in 1..n {
+            r.wait_signal_matching(sig, sig4(PH_RG, c, 0, ep));
+        }
+    }
+    r.barrier();
+}

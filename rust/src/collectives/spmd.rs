@@ -1,0 +1,228 @@
+//! SPMD collectives: every rank calls the same function from its own
+//! program (OpenSHMEM-style collective calls). These are the primary
+//! implementations — cross-rank dependencies travel as matched signal
+//! AMs ([`crate::program::Rank::wait_signal_matching`]) and resolve at
+//! simulated time, so independent edges overlap exactly as far as the
+//! fabric allows.
+//!
+//! Each collective dispatches through the selection layer
+//! ([`crate::collectives::CollCtx::pick`], fed by `collectives.algo`);
+//! the `*_algo` variants force a schedule per call (ablations, the
+//! equivalence suites, `bench collectives`). Every collective ends at a
+//! well-defined local point; reduce/allreduce/gather/scatter end on a
+//! barrier (every rank returns with the result in place), broadcast ends
+//! once this rank holds the payload and has signaled its children —
+//! callers needing global completion barrier themselves, as real PGAS
+//! programs do.
+//!
+//! `sig` is a signal tag registered once via
+//! [`crate::program::Spmd::register_signal`]; one tag serves any number
+//! of collective calls (signals carry `[phase, step, sender, epoch]`
+//! args, so nothing can be mis-attributed across calls or phases).
+
+use crate::memory::NodeId;
+use crate::program::{AmTag, Rank};
+
+use super::algo::{Algo, Coll};
+use super::common::copy_local;
+use super::{flat, ring, rsag, tree};
+
+/// Broadcast `len` bytes at `offset` from `root` to the same offset
+/// everywhere, using the configured/selected algorithm.
+pub fn broadcast(r: &mut Rank, sig: AmTag, root: NodeId, offset: u64, len: u64) {
+    let algo = r.coll_ctx().pick(Coll::Broadcast, len, r.nodes());
+    broadcast_algo(r, algo, sig, root, offset, len);
+}
+
+/// [`broadcast`] with the schedule forced to `algo`.
+pub fn broadcast_algo(
+    r: &mut Rank,
+    algo: Algo,
+    sig: AmTag,
+    root: NodeId,
+    offset: u64,
+    len: u64,
+) {
+    let n = r.nodes();
+    if n == 1 || len == 0 {
+        return;
+    }
+    let ep = r.next_collective_epoch();
+    match algo {
+        Algo::Flat => flat::broadcast(r, sig, ep, root, offset, len),
+        Algo::Tree => tree::broadcast(r, sig, ep, root, offset, len),
+        Algo::Ring => {
+            let cutoff = r.coll_ctx().cutoff;
+            ring::broadcast(r, sig, ep, cutoff, root, offset, len)
+        }
+        Algo::Rsag => ring::scatter_allgather_broadcast(r, sig, ep, root, offset, len),
+    }
+}
+
+/// Sum-reduce fp16 vectors (`count` elements at `offset` on every rank)
+/// onto `root` at `dst_offset`, using the configured/selected algorithm.
+/// Partial sums run as DLA accumulate jobs when reduction offload is on
+/// (see [`crate::config::ReduceOffload`]). Ends on a barrier. Scratch:
+/// see the module docs in [`crate::collectives`].
+pub fn reduce_sum_f16(
+    r: &mut Rank,
+    sig: AmTag,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let algo = r.coll_ctx().pick(Coll::Reduce, count as u64 * 2, r.nodes());
+    reduce_sum_f16_algo(r, algo, sig, root, offset, count, dst_offset);
+}
+
+/// [`reduce_sum_f16`] with the schedule forced to `algo`.
+pub fn reduce_sum_f16_algo(
+    r: &mut Rank,
+    algo: Algo,
+    sig: AmTag,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    let dla = r.coll_ctx().dla_reduce;
+    if n == 1 || count == 0 {
+        if r.id() == root {
+            copy_local(r, offset, dst_offset, count as u64 * 2);
+        }
+        r.barrier();
+        return;
+    }
+    let ep = r.next_collective_epoch();
+    match algo {
+        Algo::Flat => flat::reduce(r, dla, root, offset, count, dst_offset),
+        Algo::Tree => tree::reduce(r, sig, ep, dla, root, offset, count, dst_offset),
+        Algo::Ring => ring::reduce(r, sig, ep, dla, root, offset, count, dst_offset),
+        Algo::Rsag => rsag::reduce(r, sig, ep, dla, root, offset, count, dst_offset),
+    }
+}
+
+/// All-reduce: the sum lands at `dst_offset` on every rank. Flat/tree
+/// compose reduce-to-0 + broadcast; ring runs reduce-scatter +
+/// all-gather; rsag runs recursive halving + doubling (power-of-two
+/// fabrics; ring schedule otherwise). Ends on a barrier (global
+/// completion, like the synchronous version).
+pub fn allreduce_sum_f16(r: &mut Rank, sig: AmTag, offset: u64, count: usize, dst_offset: u64) {
+    let algo = r.coll_ctx().pick(Coll::Allreduce, count as u64 * 2, r.nodes());
+    allreduce_sum_f16_algo(r, algo, sig, offset, count, dst_offset);
+}
+
+/// [`allreduce_sum_f16`] with the schedule forced to `algo`.
+pub fn allreduce_sum_f16_algo(
+    r: &mut Rank,
+    algo: Algo,
+    sig: AmTag,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    if n == 1 || count == 0 {
+        reduce_sum_f16_algo(r, Algo::Flat, sig, 0, offset, count, dst_offset);
+        r.barrier();
+        return;
+    }
+    match algo {
+        Algo::Flat | Algo::Tree => {
+            reduce_sum_f16_algo(r, algo, sig, 0, offset, count, dst_offset);
+            broadcast_algo(r, algo, sig, 0, dst_offset, count as u64 * 2);
+            r.barrier();
+        }
+        Algo::Ring => {
+            let dla = r.coll_ctx().dla_reduce;
+            let ep = r.next_collective_epoch();
+            ring::allreduce(r, sig, ep, dla, offset, count, dst_offset);
+        }
+        Algo::Rsag => {
+            let dla = r.coll_ctx().dla_reduce;
+            let ep = r.next_collective_epoch();
+            rsag::allreduce(r, sig, ep, dla, offset, count, dst_offset);
+        }
+    }
+}
+
+/// Gather `len` bytes at `offset` from every rank into a contiguous
+/// strip (by absolute node id) at `dst_offset` on `root`. Ends on a
+/// barrier. `Ring`/`Rsag` alias the tree schedule (see [`Algo`]).
+pub fn gather(r: &mut Rank, sig: AmTag, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
+    let algo = r.coll_ctx().pick(Coll::Gather, len, r.nodes());
+    gather_algo(r, algo, sig, root, offset, len, dst_offset);
+}
+
+/// [`gather`] with the schedule forced to `algo`.
+pub fn gather_algo(
+    r: &mut Rank,
+    algo: Algo,
+    sig: AmTag,
+    root: NodeId,
+    offset: u64,
+    len: u64,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    if n == 1 || len == 0 {
+        if r.id() == root {
+            copy_local(r, offset, dst_offset, len);
+        }
+        r.barrier();
+        return;
+    }
+    let ep = r.next_collective_epoch();
+    match algo {
+        Algo::Flat => flat::gather(r, root, offset, len, dst_offset),
+        Algo::Tree | Algo::Ring | Algo::Rsag => {
+            tree::gather(r, sig, ep, root, offset, len, dst_offset)
+        }
+    }
+}
+
+/// Scatter: root holds `n` strips of `len` bytes at `offset` (by
+/// absolute node id); strip `i` lands at `dst_offset` on rank `i`. Ends
+/// on a barrier. `Ring`/`Rsag` alias the tree schedule (see [`Algo`]).
+pub fn scatter(r: &mut Rank, sig: AmTag, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
+    let algo = r.coll_ctx().pick(Coll::Scatter, len, r.nodes());
+    scatter_algo(r, algo, sig, root, offset, len, dst_offset);
+}
+
+/// [`scatter`] with the schedule forced to `algo`.
+pub fn scatter_algo(
+    r: &mut Rank,
+    algo: Algo,
+    sig: AmTag,
+    root: NodeId,
+    offset: u64,
+    len: u64,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    if n == 1 || len == 0 {
+        if r.id() == root {
+            copy_local(r, offset, dst_offset, len);
+        }
+        r.barrier();
+        return;
+    }
+    let ep = r.next_collective_epoch();
+    match algo {
+        Algo::Flat => flat::scatter(r, root, offset, len, dst_offset),
+        Algo::Tree | Algo::Ring | Algo::Rsag => {
+            tree::scatter(r, sig, ep, root, offset, len, dst_offset)
+        }
+    }
+}
+
+/// All-gather: every rank ends with every rank's strip, concatenated by
+/// node id at `dst_offset` (gather to rank 0 + broadcast of the strip,
+/// each phase selecting its own schedule). Ends on a barrier.
+pub fn all_gather(r: &mut Rank, sig: AmTag, offset: u64, len: u64, dst_offset: u64) {
+    gather(r, sig, 0, offset, len, dst_offset);
+    broadcast(r, sig, 0, dst_offset, len * r.nodes() as u64);
+    r.barrier();
+}

@@ -1,0 +1,171 @@
+//! Synchronous collectives over the single-issuer [`Fshmem`] front end.
+//!
+//! One host program controls every node, so waits advance *global* time
+//! and independent edges only overlap within one NBI region — fine for
+//! calibration, wrong for measuring concurrency; the SPMD ports
+//! ([`super::spmd`]) are the primary implementations. These keep the
+//! legacy flat/tree shapes (the shapes the paper-figure sweeps were
+//! calibrated with); the one modernization is reduction placement:
+//! [`reduce_sum_f16`] folds partial sums through DLA accumulate jobs
+//! whenever reduction offload is on (see
+//! [`crate::config::ReduceOffload`]), so even the calibration front end
+//! never sums for free on a fabric with a configured backend.
+
+use crate::api::{Fshmem, OpHandle};
+use crate::dla::{DlaJob, DlaOp};
+use crate::memory::{GlobalAddr, NodeId};
+
+/// Broadcast `data` from `root`'s shared segment at `offset` to the same
+/// offset on every node.
+///
+/// Binomial tree on root-relative ranks: relative rank `r` receives from
+/// `r - 2^k` (where `2^k <= r < 2^(k+1)`) and sends to every `r + 2^d`
+/// with `2^d > r`. Each rank's sends wait only on *its own* receive —
+/// independent edges of the tree overlap, and `nbi_sync` drains the
+/// leaves.
+pub fn broadcast(f: &mut Fshmem, root: NodeId, offset: u64, len: u64) {
+    let n = f.nodes();
+    if n == 1 || len == 0 {
+        return;
+    }
+    // Rank-rotate so the tree works for any root: relative rank r lives
+    // on node unrel(r).
+    let unrel = |r: u32| (r + root) % n;
+    let mut recv: Vec<Option<OpHandle>> = vec![None; n as usize];
+    f.nbi_begin();
+    for r in 0..n {
+        if r > 0 {
+            // Dependency edge: this rank must hold the payload before
+            // forwarding it down the tree.
+            let h = recv[r as usize].expect("binomial tree covers every rank");
+            f.wait(h);
+        }
+        // Smallest power of two strictly above r (1 for the root).
+        let mut dist = 1u32;
+        while dist <= r {
+            dist <<= 1;
+        }
+        while r + dist < n {
+            let (src, dst) = (unrel(r), unrel(r + dist));
+            let addr = f.global_addr(dst, offset);
+            recv[(r + dist) as usize] = Some(f.put_from_mem_nbi(src, offset, len, addr));
+            dist <<= 1;
+        }
+    }
+    f.nbi_sync();
+}
+
+/// Sum-reduce fp16 vectors: every node contributes `count` floats at
+/// `offset`; the result lands on `root` at `dst_offset`. Flat
+/// gather-then-fold: the gather GETs are independent and run as one NBI
+/// region; the folds run as DLA accumulate jobs when reduction offload
+/// is on (timed compute, simulated occupancy) and as untimed host sums
+/// under the `collectives.reduce = host` / timing-only baseline.
+pub fn reduce_sum_f16(
+    f: &mut Fshmem,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let n = f.nodes();
+    let bytes = count as u64 * 2;
+    // Gather all contributions into a scratch strip on root, via the
+    // fabric (GETs issued by root — one-sided, no peer involvement).
+    let scratch = dst_offset + bytes;
+    f.nbi_begin();
+    for node in 0..n {
+        if node == root {
+            continue;
+        }
+        let src = f.global_addr(node, offset);
+        f.get_nbi(root, src, scratch + node as u64 * bytes, bytes);
+    }
+    f.nbi_sync();
+    if f.world().cfg().reduce_on_dla() {
+        // Seed the destination with root's own contribution (untimed
+        // staging), then chain one accumulate job per peer through the
+        // DLA — every fold costs simulated compute time.
+        let own = f.read_shared(root, offset, bytes as usize);
+        f.write_local(root, dst_offset, &own);
+        for node in 0..n {
+            if node == root {
+                continue;
+            }
+            let job = DlaJob {
+                op: DlaOp::Accum {
+                    count: count as u32,
+                    x: GlobalAddr::new(root, scratch + node as u64 * bytes),
+                    y: GlobalAddr::new(root, dst_offset),
+                },
+                art: None,
+                notify: None,
+            };
+            let h = f.compute(root, root, job);
+            f.wait(h);
+        }
+    } else {
+        // Host-side add on root's memory (the free-math baseline).
+        let mut acc = f.read_shared_f16(root, offset, count);
+        for node in 0..n {
+            if node == root {
+                continue;
+            }
+            let v = f.read_shared_f16(root, scratch + node as u64 * bytes, count);
+            for (a, b) in acc.iter_mut().zip(&v) {
+                *a += b;
+            }
+        }
+        f.write_local_f16(root, dst_offset, &acc);
+    }
+}
+
+/// All-reduce = reduce to node 0 + broadcast.
+pub fn allreduce_sum_f16(f: &mut Fshmem, offset: u64, count: usize, dst_offset: u64) {
+    reduce_sum_f16(f, 0, offset, count, dst_offset);
+    broadcast(f, 0, dst_offset, count as u64 * 2);
+    let hs = f.barrier_all();
+    f.wait_all(&hs);
+}
+
+/// Gather `len` bytes at `offset` from every node into a contiguous strip
+/// at `dst_offset` on `root` (one-sided GETs, one NBI region).
+pub fn gather(f: &mut Fshmem, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
+    let n = f.nodes();
+    f.nbi_begin();
+    for node in 0..n {
+        if node == root {
+            let data = f.read_shared(root, offset, len as usize);
+            f.write_local(root, dst_offset + node as u64 * len, &data);
+        } else {
+            let src = f.global_addr(node, offset);
+            f.get_nbi(root, src, dst_offset + node as u64 * len, len);
+        }
+    }
+    f.nbi_sync();
+}
+
+/// All-gather: gather at node 0, then broadcast the strip.
+pub fn all_gather(f: &mut Fshmem, offset: u64, len: u64, dst_offset: u64) {
+    gather(f, 0, offset, len, dst_offset);
+    broadcast(f, 0, dst_offset, len * f.nodes() as u64);
+    let hs = f.barrier_all();
+    f.wait_all(&hs);
+}
+
+/// Scatter: root holds `n` strips of `len` bytes at `offset`; strip `i`
+/// lands at `dst_offset` on node `i` (independent PUTs, one NBI region).
+pub fn scatter(f: &mut Fshmem, root: NodeId, offset: u64, len: u64, dst_offset: u64) {
+    let n = f.nodes();
+    f.nbi_begin();
+    for node in 0..n {
+        if node == root {
+            let data = f.read_shared(root, offset + node as u64 * len, len as usize);
+            f.write_local(root, dst_offset, &data);
+        } else {
+            let addr = f.global_addr(node, dst_offset);
+            f.put_from_mem_nbi(root, offset + node as u64 * len, len, addr);
+        }
+    }
+    f.nbi_sync();
+}

@@ -1,0 +1,412 @@
+//! Collectives subsystem tests: legacy sync behavior, per-algorithm SPMD
+//! correctness across topologies and roots, selection dispatch, and the
+//! DLA reduction-offload contract (job counts asserted — offload must
+//! never silently fall back to free host math).
+
+use super::*;
+use crate::config::{Config, Numerics, ReduceOffload};
+use crate::program::Spmd;
+use crate::Fshmem;
+
+fn fabric(n: u32) -> Fshmem {
+    Fshmem::new(Config::ring(n).with_numerics(Numerics::TimingOnly))
+}
+
+// ---- synchronous front end -------------------------------------------------
+
+#[test]
+fn broadcast_reaches_all_nodes() {
+    for n in [2u32, 4, 7] {
+        let mut f = fabric(n);
+        let data: Vec<u8> = (0..999).map(|i| (i % 251) as u8).collect();
+        f.write_local(2 % n, 0x100, &data);
+        broadcast(&mut f, 2 % n, 0x100, 999);
+        for node in 0..n {
+            assert_eq!(f.read_shared(node, 0x100, 999), data, "node {node} of {n}");
+        }
+    }
+}
+
+#[test]
+fn reduce_sums_contributions() {
+    let mut f = fabric(4);
+    for node in 0..4u32 {
+        let v: Vec<f32> = (0..64).map(|i| (node * 100 + i) as f32).collect();
+        f.write_local_f16(node, 0, &v);
+    }
+    reduce_sum_f16(&mut f, 0, 0, 64, 0x10000);
+    let got = f.read_shared_f16(0, 0x10000, 64);
+    for (i, g) in got.iter().enumerate() {
+        let want = (0..4).map(|n| (n * 100 + i) as f32).sum::<f32>();
+        assert!((g - want).abs() < 1.0, "elem {i}: {g} vs {want}");
+    }
+}
+
+#[test]
+fn reduce_works_for_nonzero_root() {
+    let mut f = fabric(5);
+    for node in 0..5u32 {
+        let v: Vec<f32> = (0..16).map(|i| (node + i) as f32).collect();
+        f.write_local_f16(node, 0, &v);
+    }
+    reduce_sum_f16(&mut f, 3, 0, 16, 0x4000);
+    let got = f.read_shared_f16(3, 0x4000, 16);
+    for (i, g) in got.iter().enumerate() {
+        let want = (0..5).map(|n| (n + i) as f32).sum::<f32>();
+        assert!((g - want).abs() < 0.5, "elem {i}: {g} vs {want}");
+    }
+}
+
+#[test]
+fn allreduce_leaves_same_sum_everywhere() {
+    let mut f = fabric(4);
+    for node in 0..4u32 {
+        let v: Vec<f32> = (0..32).map(|i| (i + node) as f32).collect();
+        f.write_local_f16(node, 0, &v);
+    }
+    allreduce_sum_f16(&mut f, 0, 32, 0x8000);
+    let expect = f.read_shared_f16(0, 0x8000, 32);
+    for node in 1..4 {
+        assert_eq!(f.read_shared_f16(node, 0x8000, 32), expect, "node {node}");
+    }
+    assert!((expect[0] - (0 + 1 + 2 + 3) as f32).abs() < 0.1);
+}
+
+#[test]
+fn gather_scatter_roundtrip() {
+    let mut f = fabric(4);
+    for node in 0..4u32 {
+        f.write_local(node, 0, &[node as u8 + 1; 128]);
+    }
+    gather(&mut f, 0, 0, 128, 0x20000);
+    for node in 0..4u64 {
+        assert_eq!(
+            f.read_shared(0, 0x20000 + node * 128, 128),
+            vec![node as u8 + 1; 128]
+        );
+    }
+    scatter(&mut f, 0, 0x20000, 128, 0x40000);
+    for node in 0..4u32 {
+        assert_eq!(f.read_shared(node, 0x40000, 128), vec![node as u8 + 1; 128]);
+    }
+}
+
+#[test]
+fn all_gather_everywhere() {
+    let mut f = fabric(3);
+    for node in 0..3u32 {
+        f.write_local(node, 0, &[0x10 * (node as u8 + 1); 64]);
+    }
+    all_gather(&mut f, 0, 64, 0x30000);
+    for node in 0..3u32 {
+        for src in 0..3u64 {
+            assert_eq!(
+                f.read_shared(node, 0x30000 + src * 64, 64),
+                vec![0x10 * (src as u8 + 1); 64],
+                "node {node} strip {src}"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_node_collectives_are_noops() {
+    let mut f = fabric(1);
+    f.write_local(0, 0, &[9; 16]);
+    broadcast(&mut f, 0, 0, 16);
+    assert_eq!(f.read_shared(0, 0, 16), vec![9; 16]);
+}
+
+#[test]
+fn sync_reduce_offloads_to_dla_when_backend_configured() {
+    // numerics = software → collectives.reduce = auto resolves to DLA:
+    // the folds must run as accumulate jobs (counted), not as free host
+    // math, and still produce the right sums.
+    let mut f = Fshmem::new(Config::ring(4));
+    assert!(f.world().cfg().reduce_on_dla());
+    for node in 0..4u32 {
+        let v: Vec<f32> = (0..64).map(|i| (node * 8 + i % 8) as f32).collect();
+        f.write_local_f16(node, 0, &v);
+    }
+    reduce_sum_f16(&mut f, 0, 0, 64, 0x10000);
+    f.run_all();
+    assert_eq!(
+        f.counters().get("dla_jobs_done"),
+        3,
+        "one accumulate job per peer"
+    );
+    let got = f.read_shared_f16(0, 0x10000, 64);
+    for (i, g) in got.iter().enumerate() {
+        let want = (0..4).map(|n| (n * 8 + i % 8) as f32).sum::<f32>();
+        assert_eq!(*g, want, "elem {i}");
+    }
+}
+
+#[test]
+fn sync_reduce_host_baseline_issues_no_jobs() {
+    let mut f = Fshmem::new(Config::ring(4).with_reduce_offload(ReduceOffload::Host));
+    for node in 0..4u32 {
+        f.write_local_f16(node, 0, &[node as f32; 16]);
+    }
+    reduce_sum_f16(&mut f, 0, 0, 16, 0x4000);
+    f.run_all();
+    assert_eq!(f.counters().get("dla_jobs_done"), 0);
+    assert_eq!(f.read_shared_f16(0, 0x4000, 16), vec![6.0f32; 16]);
+}
+
+// ---- SPMD algorithm matrix -------------------------------------------------
+
+fn spmd_fabric(cfg: Config) -> Spmd {
+    Spmd::new(cfg.with_numerics(Numerics::TimingOnly))
+}
+
+/// The sweep's fabric shapes: ring sizes around the paper's 8-card
+/// server plus 2-D shapes (6- and 9-node, non-power-of-two on purpose).
+fn shapes() -> Vec<Config> {
+    vec![
+        Config::ring(2),
+        Config::ring(4),
+        Config::ring(5),
+        Config::ring(8),
+        Config::mesh(2, 3),
+        {
+            let mut c = Config::mesh(3, 3);
+            c.topology = crate::fabric::Topology::Torus2D { w: 3, h: 3 };
+            c
+        },
+    ]
+}
+
+#[test]
+fn every_algorithm_broadcasts_correctly() {
+    for cfg in shapes() {
+        let n = cfg.topology.nodes();
+        for algo in Algo::ALL {
+            let mut s = spmd_fabric(cfg.clone());
+            let sig = s.register_signal(1);
+            let data: Vec<u8> = (0..777).map(|i| (i % 250) as u8).collect();
+            let root = 2 % n;
+            s.write_local(root, 0x100, &data);
+            s.run(move |r| {
+                spmd::broadcast_algo(r, algo, sig, root, 0x100, 777);
+                r.barrier();
+            });
+            for node in 0..n {
+                assert_eq!(
+                    s.read_shared(node, 0x100, 777),
+                    data,
+                    "{:?} {} node {node}",
+                    cfg.topology,
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_algorithm_reduces_correctly() {
+    let count = 50usize; // not divisible by the node counts — uneven chunks
+    for cfg in shapes() {
+        let n = cfg.topology.nodes();
+        for algo in Algo::ALL {
+            let mut s = spmd_fabric(cfg.clone());
+            let sig = s.register_signal(1);
+            for node in 0..n {
+                let v: Vec<f32> = (0..count).map(|i| (node * 10 + i as u32) as f32).collect();
+                s.write_local_f16(node, 0, &v);
+            }
+            let root = n - 1;
+            s.run(move |r| spmd::reduce_sum_f16_algo(r, algo, sig, root, 0, count, 0x8000));
+            let got = s.read_shared_f16(root, 0x8000, count);
+            for (i, g) in got.iter().enumerate() {
+                let want = (0..n).map(|m| (m * 10 + i as u32) as f32).sum::<f32>();
+                assert_eq!(
+                    *g,
+                    want,
+                    "{:?} {} elem {i}",
+                    cfg.topology,
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_algorithm_allreduces_correctly() {
+    let count = 40usize;
+    for cfg in shapes() {
+        let n = cfg.topology.nodes();
+        for algo in Algo::ALL {
+            let mut s = spmd_fabric(cfg.clone());
+            let sig = s.register_signal(1);
+            for node in 0..n {
+                let v: Vec<f32> = (0..count).map(|i| (node + i as u32) as f32).collect();
+                s.write_local_f16(node, 0, &v);
+            }
+            s.run(move |r| spmd::allreduce_sum_f16_algo(r, algo, sig, 0, count, 0x8000));
+            for node in 0..n {
+                let got = s.read_shared_f16(node, 0x8000, count);
+                for (i, g) in got.iter().enumerate() {
+                    let want = (0..n).map(|m| (m + i as u32) as f32).sum::<f32>();
+                    assert_eq!(
+                        *g,
+                        want,
+                        "{:?} {} node {node} elem {i}",
+                        cfg.topology,
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_algorithm_gathers_and_scatters_correctly() {
+    for cfg in shapes() {
+        let n = cfg.topology.nodes();
+        let root = n / 2; // exercise the non-zero-root rotation paths
+        for algo in Algo::ALL {
+            let mut s = spmd_fabric(cfg.clone());
+            let sig = s.register_signal(1);
+            for node in 0..n {
+                s.write_local(node, 0, &[node as u8 + 1; 96]);
+            }
+            s.run(move |r| {
+                spmd::gather_algo(r, algo, sig, root, 0, 96, 0x20000);
+                spmd::scatter_algo(r, algo, sig, root, 0x20000, 96, 0x40000);
+            });
+            for node in 0..n {
+                assert_eq!(
+                    s.read_shared(root, 0x20000 + node as u64 * 96, 96),
+                    vec![node as u8 + 1; 96],
+                    "{:?} {} gather strip {node}",
+                    cfg.topology,
+                    algo.name()
+                );
+                assert_eq!(
+                    s.read_shared(node, 0x40000, 96),
+                    vec![node as u8 + 1; 96],
+                    "{:?} {} scatter strip {node}",
+                    cfg.topology,
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn back_to_back_collectives_do_not_cross_signals() {
+    // Two allreduces and a broadcast with no user barrier between them:
+    // epoch-tagged signal matching must keep a fast rank's next-call
+    // signals from being mis-attributed to the previous call.
+    let mut s = spmd_fabric(Config::ring(5));
+    let sig = s.register_signal(2);
+    for node in 0..5u32 {
+        s.write_local_f16(node, 0, &[node as f32; 24]);
+        s.write_local(node, 0x600, &[node as u8; 64]);
+    }
+    s.run(move |r| {
+        spmd::allreduce_sum_f16_algo(r, Algo::Ring, sig, 0, 24, 0x8000);
+        spmd::allreduce_sum_f16_algo(r, Algo::Tree, sig, 0x8000, 24, 0x10000);
+        spmd::broadcast_algo(r, Algo::Ring, sig, 3, 0x600, 64);
+        r.barrier();
+    });
+    for node in 0..5u32 {
+        assert_eq!(s.read_shared_f16(node, 0x8000, 24), vec![10.0f32; 24]);
+        assert_eq!(s.read_shared_f16(node, 0x10000, 24), vec![50.0f32; 24]);
+        assert_eq!(s.read_shared(node, 0x600, 64), vec![3u8; 64]);
+    }
+}
+
+#[test]
+fn spmd_allreduce_matches_synchronous() {
+    // Same inputs, exactly-representable values: the SPMD default path
+    // must produce bit-identical results to the synchronous collective.
+    let n = 4u32;
+    let count = 64usize;
+    let mut legacy = fabric(n);
+    let mut s = spmd_fabric(Config::ring(n));
+    let sig = s.register_signal(2);
+    for node in 0..n {
+        let v: Vec<f32> = (0..count)
+            .map(|i| (node as usize * 10 + i) as f32 * 0.25)
+            .collect();
+        legacy.write_local_f16(node, 0, &v);
+        s.write_local_f16(node, 0, &v);
+    }
+    allreduce_sum_f16(&mut legacy, 0, count, 0x8000);
+    s.run(move |r| spmd::allreduce_sum_f16(r, sig, 0, count, 0x8000));
+    for node in 0..n {
+        assert_eq!(
+            s.read_shared_f16(node, 0x8000, count),
+            legacy.read_shared_f16(node, 0x8000, count),
+            "node {node}"
+        );
+    }
+}
+
+#[test]
+fn spmd_broadcast_single_node_is_noop() {
+    let mut s = spmd_fabric(Config::ring(1));
+    let sig = s.register_signal(3);
+    s.write_local(0, 0, &[9; 16]);
+    s.run(move |r| spmd::broadcast(r, sig, 0, 0, 16));
+    assert_eq!(s.read_shared(0, 0, 16), vec![9; 16]);
+}
+
+// ---- reduction offload (SPMD) ----------------------------------------------
+
+#[test]
+fn spmd_reduction_offload_occupies_the_dla() {
+    // With a numerics backend every algorithm must route its folds
+    // through DLA accumulate jobs: total accumulate MACs == (n-1)*count
+    // regardless of schedule (the work is the same; only its placement
+    // differs), and the sums must still be exact.
+    let n = 4u32;
+    let count = 48usize;
+    for algo in Algo::ALL {
+        let mut s = Spmd::new(Config::ring(n)); // numerics = software
+        let sig = s.register_signal(1);
+        for node in 0..n {
+            s.write_local_f16(node, 0, &[(node + 1) as f32; 48]);
+        }
+        s.run(move |r| spmd::allreduce_sum_f16_algo(r, algo, sig, 0, count, 0x8000));
+        let jobs = s.counters().get("dla_jobs_done");
+        assert!(jobs > 0, "{}: reduction must not be free host math", algo.name());
+        let macs: u64 = (0..n).map(|i| s.world().node(i).dla.macs_done).sum();
+        assert_eq!(
+            macs,
+            (n as u64 - 1) * count as u64,
+            "{}: accumulate MACs",
+            algo.name()
+        );
+        for node in 0..n {
+            assert_eq!(
+                s.read_shared_f16(node, 0x8000, count),
+                vec![10.0f32; count],
+                "{} node {node}",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn spmd_host_baseline_issues_no_jobs() {
+    let mut s = Spmd::new(
+        Config::ring(4).with_reduce_offload(ReduceOffload::Host),
+    );
+    let sig = s.register_signal(1);
+    for node in 0..4u32 {
+        s.write_local_f16(node, 0, &[1.0f32; 32]);
+    }
+    s.run(move |r| spmd::allreduce_sum_f16_algo(r, Algo::Ring, sig, 0, 32, 0x8000));
+    assert_eq!(s.counters().get("dla_jobs_done"), 0);
+    for node in 0..4u32 {
+        assert_eq!(s.read_shared_f16(node, 0x8000, 32), vec![4.0f32; 32]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Binomial-tree collective schedules on root-relative ranks.
+//!
+//! Relative rank `r` pairs with `r ± 2^k` per round: `log2(n)` rounds,
+//! every rank sends/receives O(log n) times, and the root handles
+//! `log2(n)` messages instead of `n-1`. Cross-rank dependencies ("my
+//! parent's data landed", "my child's partial sum landed") travel as
+//! matched signal AMs; independent subtrees overlap exactly as far as
+//! the fabric allows.
+
+use crate::memory::NodeId;
+use crate::program::{AmTag, Rank};
+
+use super::common::{
+    accumulate, copy_local, put_block, sig4, PH_BCAST, PH_GATHER, PH_REDUCE, PH_SCATTER,
+};
+
+/// Binomial broadcast: relative rank `r` receives from `r - 2^k` and
+/// forwards to every `r + 2^d` with `2^d > r`; each rank's sends wait
+/// only on *its own* receive, and each child is signaled as its put is
+/// acked.
+pub(super) fn broadcast(r: &mut Rank, sig: AmTag, ep: u32, root: NodeId, offset: u64, len: u64) {
+    let n = r.nodes();
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (r.id() + n - root) % n;
+    if rel > 0 {
+        r.wait_signal_matching(sig, sig4(PH_BCAST, 0, 0, ep));
+    }
+    // Smallest power of two strictly above rel (1 for the root).
+    let mut dist = 1u32;
+    while dist <= rel {
+        dist <<= 1;
+    }
+    let mut sends = Vec::new();
+    let mut d = dist;
+    while rel + d < n {
+        let child = unrel(rel + d);
+        sends.push((child, put_block(r, offset, len, child, offset)));
+        d <<= 1;
+    }
+    for (child, h) in sends {
+        if let Some(h) = h {
+            r.wait(h);
+        }
+        r.signal_args(child, sig, sig4(PH_BCAST, 0, 0, ep));
+    }
+}
+
+/// Binomial reduce: the broadcast tree reversed. Every rank seeds its
+/// accumulation buffer (`dst_offset`) with its own contribution; at
+/// round `k` a rank whose bit `k` is set ships its partial sum to its
+/// parent and is done, while the parent folds the arriving vector in (a
+/// DLA accumulate job under offload). Scratch: one `2*count`-byte slot
+/// per round above `dst_offset + 2*count` (`ceil(log2 n)` slots).
+/// Ends on a barrier.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn reduce(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    dla: bool,
+    root: NodeId,
+    offset: u64,
+    count: usize,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    let bytes = count as u64 * 2;
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (r.id() + n - root) % n;
+    let slot = |k: u32| dst_offset + bytes * (1 + k as u64);
+    copy_local(r, offset, dst_offset, bytes);
+    let mut k = 0u32;
+    loop {
+        let bit = 1u32 << k;
+        if rel & bit != 0 {
+            // Ship my subtree's sum and leave the tree.
+            let parent = unrel(rel - bit);
+            if let Some(h) = put_block(r, dst_offset, bytes, parent, slot(k)) {
+                r.wait(h);
+            }
+            r.signal_args(parent, sig, sig4(PH_REDUCE, k, rel, ep));
+            break;
+        }
+        if bit >= n {
+            break; // rel == 0: every child folded in.
+        }
+        if rel + bit < n {
+            r.wait_signal_matching(sig, sig4(PH_REDUCE, k, rel + bit, ep));
+            accumulate(r, dla, slot(k), dst_offset, count);
+        }
+        k += 1;
+    }
+    r.barrier();
+}
+
+/// Binomial gather: subtree strips aggregate into contiguous
+/// relative-rank blocks on the way up, so the root receives `log2(n)`
+/// block messages instead of `n-1` strips. Every rank stages in its own
+/// `dst_offset` region (`n * len` bytes); a non-zero root rotates the
+/// relative-ordered strips into absolute node order at the end (untimed
+/// local fix-up). Ends on a barrier.
+pub(super) fn gather(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    root: NodeId,
+    offset: u64,
+    len: u64,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    let me = r.id();
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (me + n - root) % n;
+    copy_local(r, offset, dst_offset + rel as u64 * len, len);
+    let mut k = 0u32;
+    loop {
+        let bit = 1u32 << k;
+        if rel & bit != 0 {
+            // My block covers relative ranks [rel, rel + strips).
+            let parent = unrel(rel - bit);
+            let strips = bit.min(n - rel) as u64;
+            let block = dst_offset + rel as u64 * len;
+            if let Some(h) = put_block(r, block, strips * len, parent, block) {
+                r.wait(h);
+            }
+            r.signal_args(parent, sig, sig4(PH_GATHER, k, rel, ep));
+            break;
+        }
+        if bit >= n {
+            break;
+        }
+        if rel + bit < n {
+            r.wait_signal_matching(sig, sig4(PH_GATHER, k, rel + bit, ep));
+        }
+        k += 1;
+    }
+    if me == root && root != 0 && len > 0 {
+        // Strip for node unrel(i) sits at relative position i — rotate
+        // into absolute node order.
+        let all = r.read_shared(dst_offset, (n as u64 * len) as usize);
+        for i in 0..n {
+            let node = unrel(i);
+            let s = &all[(i as u64 * len) as usize..((i as u64 + 1) * len) as usize];
+            r.write_local(dst_offset + node as u64 * len, s);
+        }
+    }
+    r.barrier();
+}
+
+/// Binomial scatter: the gather mirrored top-down — blocks halve at
+/// every level, so each strip crosses `log2(n)` hops as part of ever
+/// smaller aggregates. Non-root ranks stage their incoming block at
+/// `dst_offset + len` (up to `n/2 * len` bytes); a non-zero root stages
+/// a rotated relative-order copy there first (untimed). Ends on a
+/// barrier.
+pub(super) fn scatter(
+    r: &mut Rank,
+    sig: AmTag,
+    ep: u32,
+    root: NodeId,
+    offset: u64,
+    len: u64,
+    dst_offset: u64,
+) {
+    let n = r.nodes();
+    let me = r.id();
+    let unrel = |x: u32| (x + root) % n;
+    let rel = (me + n - root) % n;
+    let scratch = dst_offset + len;
+    // `base` holds my block's strips in relative order: strip for
+    // relative rank rel + j at base + j*len.
+    let (base, span) = if me == root {
+        let base = if root == 0 {
+            offset
+        } else {
+            // Rotate the absolute-ordered strips into relative order.
+            let all = r.read_shared(offset, (n as u64 * len) as usize);
+            for i in 0..n {
+                let node = unrel(i);
+                let s =
+                    &all[(node as u64 * len) as usize..((node as u64 + 1) * len) as usize];
+                r.write_local(scratch + i as u64 * len, s);
+            }
+            scratch
+        };
+        (base, n.next_power_of_two())
+    } else {
+        r.wait_signal_matching(sig, sig4(PH_SCATTER, 0, rel, ep));
+        (scratch, rel & rel.wrapping_neg()) // my block size = lowest set bit
+    };
+    // Forward sub-blocks, farthest child (largest block) first.
+    let mut sends = Vec::new();
+    let mut bit = span >> 1;
+    while bit >= 1 {
+        if rel + bit < n {
+            let child_rel = rel + bit;
+            let child = unrel(child_rel);
+            let strips = bit.min(n - child_rel) as u64;
+            let h = put_block(r, base + bit as u64 * len, strips * len, child, scratch);
+            sends.push((child, child_rel, h));
+        }
+        bit >>= 1;
+    }
+    for (child, child_rel, h) in sends {
+        if let Some(h) = h {
+            r.wait(h);
+        }
+        r.signal_args(child, sig, sig4(PH_SCATTER, 0, child_rel, ep));
+    }
+    // My strip is the first of my block.
+    copy_local(r, base, dst_offset, len);
+    r.barrier();
+}

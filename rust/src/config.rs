@@ -93,6 +93,89 @@ impl ThreadSpec {
     }
 }
 
+/// Collective algorithm selection (`collectives.algo = auto|flat|tree|
+/// ring|rsag` in config files). `Auto` picks per call from the payload
+/// size, node count, and topology using the same link/DMA-derived
+/// latency/bandwidth crossover as `stripe_threshold`; the fixed settings
+/// force one algorithm everywhere (ablation / debugging). See
+/// `collectives::Algo` for what each algorithm does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// Choose per (payload, nodes, topology) — the default.
+    Auto,
+    /// Root-fan-out / root-gather, one round.
+    Flat,
+    /// Binomial tree, log2(n) rounds.
+    Tree,
+    /// Pipelined ring (chunked neighbor forwarding / reduce-scatter).
+    Ring,
+    /// Reduce-scatter + all-gather (Rabenseifner; recursive halving /
+    /// doubling on power-of-two fabrics, ring schedule otherwise).
+    Rsag,
+}
+
+impl CollectiveAlgo {
+    /// Parse the `collectives.algo` config value.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "auto" => CollectiveAlgo::Auto,
+            "flat" => CollectiveAlgo::Flat,
+            "tree" => CollectiveAlgo::Tree,
+            "ring" => CollectiveAlgo::Ring,
+            "rsag" => CollectiveAlgo::Rsag,
+            _ => bail!("collectives.algo must be auto|flat|tree|ring|rsag"),
+        })
+    }
+
+    fn as_cfg_value(&self) -> &'static str {
+        match self {
+            CollectiveAlgo::Auto => "auto",
+            CollectiveAlgo::Flat => "flat",
+            CollectiveAlgo::Tree => "tree",
+            CollectiveAlgo::Ring => "ring",
+            CollectiveAlgo::Rsag => "rsag",
+        }
+    }
+}
+
+/// Where collective reductions sum their partial results
+/// (`collectives.reduce = auto|dla|host` in config files). `Dla` routes
+/// every partial sum through the DLA's accumulate mode as a timed
+/// compute job (occupancy and ordering simulated); `Host` sums on the
+/// host for free — the legacy calibration baseline; `Auto` resolves to
+/// `Dla` whenever a numerics backend is configured (`numerics !=
+/// timing`) so reductions are never silently free on a fabric that has
+/// a DLA to do them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOffload {
+    /// `Dla` when a numerics backend exists, `Host` under timing-only.
+    Auto,
+    /// Always offload (requires `numerics != timing`).
+    Dla,
+    /// Untimed host summation (the free-math baseline).
+    Host,
+}
+
+impl ReduceOffload {
+    /// Parse the `collectives.reduce` config value.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "auto" => ReduceOffload::Auto,
+            "dla" => ReduceOffload::Dla,
+            "host" => ReduceOffload::Host,
+            _ => bail!("collectives.reduce must be auto|dla|host"),
+        })
+    }
+
+    fn as_cfg_value(&self) -> &'static str {
+        match self {
+            ReduceOffload::Auto => "auto",
+            ReduceOffload::Dla => "dla",
+            ReduceOffload::Host => "host",
+        }
+    }
+}
+
 impl ShardSpec {
     /// Parse the `shards = auto|N|off` config value.
     pub fn parse(v: &str) -> Result<Self> {
@@ -200,6 +283,13 @@ pub struct Config {
     /// resumed programs always inject beyond the open window's horizon
     /// (`host_wake_ns` in config files; default 0).
     pub host_wake: SimTime,
+    /// Collective algorithm selection (`collectives.algo`): `auto`
+    /// chooses per (payload, nodes, topology); a fixed value forces one
+    /// algorithm everywhere — see [`CollectiveAlgo`].
+    pub collective_algo: CollectiveAlgo,
+    /// Collective reduction arithmetic placement (`collectives.reduce`):
+    /// DLA accumulate jobs vs untimed host sums — see [`ReduceOffload`].
+    pub collective_reduce: ReduceOffload,
     /// Deterministic seed for every randomized model component.
     pub seed: u64,
 }
@@ -250,6 +340,8 @@ impl Config {
             // requires host_wake >= propagation; see validate).
             engine_threads: ThreadSpec::Off,
             host_wake: SimTime::ZERO,
+            collective_algo: CollectiveAlgo::Auto,
+            collective_reduce: ReduceOffload::Auto,
             seed: 0xF5113,
         }
     }
@@ -309,6 +401,41 @@ impl Config {
     pub fn with_host_wake(mut self, host_wake: SimTime) -> Self {
         self.host_wake = host_wake;
         self
+    }
+
+    /// Force (or re-enable auto-selection of) the collective algorithm.
+    pub fn with_collective_algo(mut self, algo: CollectiveAlgo) -> Self {
+        self.collective_algo = algo;
+        self
+    }
+
+    /// Select where collective reductions sum (see [`ReduceOffload`]).
+    pub fn with_reduce_offload(mut self, reduce: ReduceOffload) -> Self {
+        self.collective_reduce = reduce;
+        self
+    }
+
+    /// Whether collective reductions route partial sums through the DLA's
+    /// accumulate mode (timed compute jobs) on this config. `Auto`
+    /// offloads exactly when a numerics backend exists: timing-only runs
+    /// keep the untimed host-sum baseline (the DLA would produce no
+    /// numbers), every numerics-bearing run pays for its reductions.
+    pub fn reduce_on_dla(&self) -> bool {
+        match self.collective_reduce {
+            ReduceOffload::Host => false,
+            ReduceOffload::Dla => true,
+            ReduceOffload::Auto => self.numerics != Numerics::TimingOnly,
+        }
+    }
+
+    /// The latency/bandwidth crossover the collective auto-selector uses:
+    /// payloads below it are latency-bound (few-round algorithms win),
+    /// payloads above are wire-time-bound (pipelined/bandwidth-optimal
+    /// algorithms win). Derived from the link/DMA/timing parameters
+    /// exactly like the striping threshold — and independent of whether
+    /// striping itself is enabled.
+    pub fn collective_cutoff(&self) -> u64 {
+        self.derived_stripe_threshold()
     }
 
     /// Number of per-shard engines this config resolves to
@@ -440,6 +567,10 @@ impl Config {
                 }
                 "shards" => cfg.shards = ShardSpec::parse(v)?,
                 "engine_threads" => cfg.engine_threads = ThreadSpec::parse(v)?,
+                "collectives.algo" => cfg.collective_algo = CollectiveAlgo::parse(v)?,
+                "collectives.reduce" => {
+                    cfg.collective_reduce = ReduceOffload::parse(v)?
+                }
                 "host_wake_ns" => {
                     cfg.host_wake =
                         SimTime::from_ns(v.parse().context("host_wake_ns")?)
@@ -531,6 +662,16 @@ impl Config {
                  round-trip guarantee)"
             );
         }
+        if self.collective_reduce == ReduceOffload::Dla
+            && self.numerics == Numerics::TimingOnly
+        {
+            bail!(
+                "collectives.reduce = dla requires a numerics backend \
+                 (numerics = software|pjrt): a timing-only DLA produces \
+                 no numbers to accumulate. Use 'auto' (offloads exactly \
+                 when a backend exists) or 'host'"
+            );
+        }
         if self.engine_threads != ThreadSpec::Off {
             if self.shards == ShardSpec::Off {
                 bail!(
@@ -598,6 +739,16 @@ impl Config {
             self.engine_threads.as_cfg_value()
         );
         let _ = writeln!(out, "host_wake_ns = {}", self.host_wake.as_ps() / 1000);
+        let _ = writeln!(
+            out,
+            "collectives.algo = {}",
+            self.collective_algo.as_cfg_value()
+        );
+        let _ = writeln!(
+            out,
+            "collectives.reduce = {}",
+            self.collective_reduce.as_cfg_value()
+        );
         let _ = writeln!(out, "seed = {}", self.seed);
         out
     }
@@ -777,6 +928,62 @@ mod tests {
             Config::from_str_cfg(&text).unwrap().engine_threads,
             ThreadSpec::Auto
         );
+    }
+
+    #[test]
+    fn collectives_keys_parse_validate_and_round_trip() {
+        // Spellings.
+        assert_eq!(CollectiveAlgo::parse("auto").unwrap(), CollectiveAlgo::Auto);
+        assert_eq!(CollectiveAlgo::parse("rsag").unwrap(), CollectiveAlgo::Rsag);
+        assert!(CollectiveAlgo::parse("binomial").is_err());
+        assert_eq!(ReduceOffload::parse("dla").unwrap(), ReduceOffload::Dla);
+        assert!(ReduceOffload::parse("gpu").is_err());
+
+        let cfg = Config::from_str_cfg(
+            "collectives.algo = ring\ncollectives.reduce = host\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.collective_algo, CollectiveAlgo::Ring);
+        assert_eq!(cfg.collective_reduce, ReduceOffload::Host);
+        assert!(!cfg.reduce_on_dla());
+
+        // Explicit DLA offload without a numerics backend is rejected
+        // with an actionable message; auto resolves by backend presence.
+        let err = Config::from_str_cfg(
+            "numerics = timing\ncollectives.reduce = dla\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("numerics backend"), "{err}");
+        let mut timing = Config::ring(4).with_numerics(Numerics::TimingOnly);
+        timing.validate().unwrap();
+        assert!(!timing.reduce_on_dla(), "auto: host baseline under timing");
+        let mut sw = Config::ring(4);
+        sw.validate().unwrap();
+        assert!(sw.reduce_on_dla(), "auto: offload with a backend");
+
+        // Round trip through the serializer.
+        let mut cfg = Config::ring(4)
+            .with_collective_algo(CollectiveAlgo::Rsag)
+            .with_reduce_offload(ReduceOffload::Host);
+        cfg.validate().unwrap();
+        let text = cfg.to_cfg_string();
+        assert!(text.contains("collectives.algo = rsag"), "{text}");
+        assert!(text.contains("collectives.reduce = host"), "{text}");
+        let back = Config::from_str_cfg(&text).unwrap();
+        assert_eq!(back.collective_algo, CollectiveAlgo::Rsag);
+        assert_eq!(back.collective_reduce, ReduceOffload::Host);
+        assert_eq!(back.to_cfg_string(), text);
+    }
+
+    #[test]
+    fn collective_cutoff_tracks_physical_params() {
+        let cfg = Config::two_node_ring();
+        assert_eq!(cfg.collective_cutoff(), cfg.derived_stripe_threshold());
+        // Independent of striping being disabled.
+        let mut off = Config::two_node_ring().with_stripe_threshold(u64::MAX);
+        off.validate().unwrap();
+        assert_eq!(off.collective_cutoff(), cfg.collective_cutoff());
     }
 
     #[test]

@@ -7,7 +7,7 @@ use anyhow::{bail, Result};
 use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::reports;
 use crate::resource;
-use crate::workloads::{conv, matmul, scaleout, sweep};
+use crate::workloads::{collectives, conv, matmul, scaleout, sweep};
 
 /// Registry of named experiments.
 pub const EXPERIMENTS: &[(&str, &str)] = &[
@@ -19,6 +19,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     (
         "scaleout",
         "Speedup vs node count under concurrent SPMD issue (1..8 nodes)",
+    ),
+    (
+        "collectives",
+        "Collective algorithms: allreduce time by algorithm x payload x topology",
     ),
     ("all", "run everything above"),
 ];
@@ -62,6 +66,7 @@ pub fn run_experiment(name: &str, opts: &RunOptions) -> Result<String> {
         "resources" => Ok(resource::render_table2(2)),
         "casestudy" => run_casestudy(opts),
         "scaleout" => run_scaleout(opts),
+        "collectives" => run_collectives(opts),
         "all" => {
             let mut out = String::new();
             for (n, _) in EXPERIMENTS.iter().filter(|(n, _)| *n != "all") {
@@ -153,7 +158,31 @@ fn run_scaleout(opts: &RunOptions) -> Result<String> {
     });
     let rows =
         scaleout::run_sweep(counts, &case, opts.shards, opts.engine_threads, numerics);
-    Ok(reports::scaleout(&case, &rows))
+    let mut out = reports::scaleout(&case, &rows);
+    // Topology sweep (weak scaling) + the communication-bound variant
+    // (halo ≫ compute, exchanged through the collectives library): the
+    // points past the 8-node ring. Both run sequentially — the threaded
+    // perf comparison lives in the node-count sweep above.
+    let topo_rows = scaleout::run_topologies(&case, opts.shards, numerics);
+    out.push_str(&reports::scaleout_topologies(&case, &topo_rows));
+    let cb = scaleout::ScaleoutCase::comm_bound();
+    let cb_rows =
+        scaleout::run_sweep(counts, &cb, opts.shards, ThreadSpec::Off, numerics);
+    out.push_str(&format!(
+        "\ncommunication-bound variant (halo >> compute):\n{}",
+        reports::scaleout(&cb, &cb_rows)
+    ));
+    let cb_topo = scaleout::run_topologies(&cb, opts.shards, numerics);
+    out.push_str(&reports::scaleout_topologies(&cb, &cb_topo));
+    Ok(out)
+}
+
+fn run_collectives(opts: &RunOptions) -> Result<String> {
+    // The sweep fixes software numerics internally (reduction offload on,
+    // accumulates carrying real numbers) and runs every point on all
+    // three engine backends; --fast trims the topology/payload axes.
+    let points = collectives::run_sweep(opts.fast);
+    Ok(reports::collectives(&points))
 }
 
 #[cfg(test)]
@@ -200,5 +229,30 @@ mod tests {
         };
         let out = run_experiment("scaleout", &opts).unwrap();
         assert!(out.contains("per-shard advance"), "{out}");
+    }
+
+    #[test]
+    fn scaleout_includes_topology_and_comm_bound_sections() {
+        let opts = RunOptions {
+            fast: true,
+            ..Default::default()
+        };
+        let out = run_experiment("scaleout", &opts).unwrap();
+        assert!(out.contains("topology sweep"), "{out}");
+        assert!(out.contains("torus(3x3)"), "{out}");
+        assert!(out.contains("communication-bound variant"), "{out}");
+        assert!(out.contains("allreduce/iter"), "{out}");
+    }
+
+    #[test]
+    fn collectives_experiment_is_registered() {
+        // The sweep itself is covered by workloads::collectives tests
+        // (and the CI smoke job runs `bench collectives --fast` end to
+        // end); here, just pin the registry entry.
+        assert!(EXPERIMENTS.iter().any(|(n, _)| *n == "collectives"));
+        let err = run_experiment("nope", &RunOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("collectives"), "{err}");
     }
 }

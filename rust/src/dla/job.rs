@@ -36,6 +36,16 @@ pub enum DlaOp {
         wts: GlobalAddr,
         y: GlobalAddr,
     },
+    /// `y[i] += x[i]` over `count` elements — the DLA's accumulate mode
+    /// driven as a standalone job (a 1x1xN matmul with accumulate on the
+    /// array). This is what the collectives' reduction offload issues for
+    /// every partial sum, so reduction arithmetic occupies the DLA
+    /// instead of happening for free on the host.
+    Accum {
+        count: u32,
+        x: GlobalAddr,
+        y: GlobalAddr,
+    },
 }
 
 impl DlaOp {
@@ -44,6 +54,7 @@ impl DlaOp {
         match *self {
             DlaOp::Matmul { m, n, .. } => m as u64 * n as u64,
             DlaOp::Conv { h, w, cout, .. } => h as u64 * w as u64 * cout as u64,
+            DlaOp::Accum { count, .. } => count as u64,
         }
     }
 
@@ -54,7 +65,7 @@ impl DlaOp {
 
     pub fn output_addr(&self) -> GlobalAddr {
         match *self {
-            DlaOp::Matmul { y, .. } | DlaOp::Conv { y, .. } => y,
+            DlaOp::Matmul { y, .. } | DlaOp::Conv { y, .. } | DlaOp::Accum { y, .. } => y,
         }
     }
 }
@@ -72,6 +83,7 @@ pub struct DlaJob {
 
 const TAG_MATMUL: u8 = 1;
 const TAG_CONV: u8 = 2;
+const TAG_ACCUM: u8 = 3;
 
 /// Descriptor wire encoding: fixed 56 bytes.
 pub fn encode_job(job: &DlaJob) -> Vec<u8> {
@@ -113,6 +125,13 @@ pub fn encode_job(job: &DlaJob) -> Vec<u8> {
             v.extend_from_slice(&cout.to_le_bytes());
             v.extend_from_slice(&x.0.to_le_bytes());
             v.extend_from_slice(&wts.0.to_le_bytes());
+            v.extend_from_slice(&y.0.to_le_bytes());
+        }
+        DlaOp::Accum { count, x, y } => {
+            v.push(TAG_ACCUM);
+            v.push(0);
+            v.extend_from_slice(&count.to_le_bytes());
+            v.extend_from_slice(&x.0.to_le_bytes());
             v.extend_from_slice(&y.0.to_le_bytes());
         }
     }
@@ -182,6 +201,19 @@ pub fn decode_job(bytes: &[u8]) -> Result<DlaJob> {
                     y: GlobalAddr(rd_u64(bytes, 34)),
                 },
                 42,
+            )
+        }
+        TAG_ACCUM => {
+            if bytes.len() < 22 {
+                bail!("accum descriptor truncated");
+            }
+            (
+                DlaOp::Accum {
+                    count: rd_u32(bytes, 2),
+                    x: GlobalAddr(rd_u64(bytes, 6)),
+                    y: GlobalAddr(rd_u64(bytes, 14)),
+                },
+                22,
             )
         }
         t => bail!("unknown DLA op tag {t}"),
@@ -258,6 +290,24 @@ mod tests {
         assert_eq!(d.op, job.op);
         assert_eq!(d.art.unwrap().every_n_results, 4096);
         assert!(d.notify.is_none());
+    }
+
+    #[test]
+    fn accum_roundtrip() {
+        let job = DlaJob {
+            op: DlaOp::Accum {
+                count: 4096,
+                x: GlobalAddr::new(2, 0x4000),
+                y: GlobalAddr::new(2, 0x8000),
+            },
+            art: None,
+            notify: Some((2, 7)),
+        };
+        let d = roundtrip(&job);
+        assert_eq!(d.op, job.op);
+        assert_eq!(d.notify, Some((2, 7)));
+        assert_eq!(job.op.output_elems(), 4096);
+        assert_eq!(job.op.output_addr(), GlobalAddr::new(2, 0x8000));
     }
 
     #[test]

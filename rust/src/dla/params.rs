@@ -65,6 +65,8 @@ impl DlaParams {
                 ksize,
                 ..
             } => h as u64 * w as u64 * ksize as u64 * ksize as u64 * cin as u64 * cout as u64,
+            // Accumulate: one MAC per element (y[i] += 1 * x[i]).
+            DlaOp::Accum { count, .. } => count as u64,
         }
     }
 

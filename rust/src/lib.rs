@@ -40,6 +40,7 @@
 #[warn(missing_docs)]
 pub mod api;
 pub mod baselines;
+#[warn(missing_docs)]
 pub mod collectives;
 pub mod config;
 pub mod coordinator;

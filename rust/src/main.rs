@@ -80,6 +80,8 @@ usage: fshmem <info|list|bench|run> [options]
                [--shards auto|N|off]          (sharded DES for SPMD experiments)
                [--engine-threads auto|N|off]  (scaleout: run the threaded DES
                                                and report seq-vs-par wall-clock)
+               (collectives: allreduce by algorithm x payload x topology,
+                reproduced on all three engine backends)
   run [--config file.cfg]   demo put/get/AM round trip";
 
 fn info() -> Result<()> {

@@ -87,6 +87,19 @@ impl Wv<'_> {
                     .expect("conv numerics");
                 mem.write_shared_f16(y.offset(), &yv).expect("Y write");
             }
+            DlaOp::Accum { count, x, y } => {
+                // The DLA's accumulate mode as a standalone job: a 1x1xN
+                // matmul with the output seeded from memory, so `y += x`
+                // runs through the same ComputeBackend as every other op
+                // (this is the collectives' reduction-offload path).
+                let count = count as usize;
+                let xv = mem.read_shared_f16(x.offset(), count).expect("X tensor");
+                let seed = mem.read_shared_f16(y.offset(), count).expect("Y seed");
+                let yv = backend
+                    .matmul(1, 1, count, &[1.0], &xv, Some(&seed))
+                    .expect("accumulate numerics");
+                mem.write_shared_f16(y.offset(), &yv).expect("Y write");
+            }
         }
     }
 

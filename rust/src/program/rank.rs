@@ -17,6 +17,7 @@
 use std::sync::mpsc::{Receiver, Sender};
 
 use crate::api::OpHandle;
+use crate::collectives::CollCtx;
 use crate::dla::DlaJob;
 use crate::memory::{GlobalAddr, NodeId};
 use crate::model::UserAm;
@@ -100,6 +101,17 @@ pub struct Rank {
     resp_rx: Receiver<Resp>,
     /// Handles issued inside the open NBI access region.
     nbi: NbiRegion,
+    /// Config-derived context for the collective library (algorithm
+    /// spec, reduction placement, topology, selection cutoff).
+    coll: CollCtx,
+    /// Signal AMs consumed while waiting for a *different* match (see
+    /// [`Rank::wait_signal_matching`]); persists across collective calls
+    /// so an early peer's next-collective signal is never lost.
+    sig_stash: Vec<UserAm>,
+    /// Collective-call counter: every rank of an SPMD program makes the
+    /// same sequence of collective calls, so this local counter agrees
+    /// across ranks and stamps each call's signals with a unique epoch.
+    coll_epoch: u32,
 }
 
 impl Rank {
@@ -108,6 +120,7 @@ impl Rank {
         nodes: u32,
         req_tx: Sender<(u32, Req)>,
         resp_rx: Receiver<Resp>,
+        coll: CollCtx,
     ) -> Self {
         Rank {
             id,
@@ -115,6 +128,9 @@ impl Rank {
             req_tx,
             resp_rx,
             nbi: NbiRegion::default(),
+            coll,
+            sig_stash: Vec::new(),
+            coll_epoch: 0,
         }
     }
 
@@ -192,6 +208,13 @@ impl Rank {
         self.am_short(dst, sig.opcode, [0; 4])
     }
 
+    /// [`Rank::signal`] carrying handler arguments — what the collective
+    /// protocols use to distinguish phases/steps/senders on one tag (the
+    /// receiver matches with [`Self::wait_signal_matching`]).
+    pub fn signal_args(&mut self, dst: NodeId, sig: AmTag, args: [u32; 4]) -> OpHandle {
+        self.am_short(dst, sig.opcode, args)
+    }
+
     /// Issue a DLA job to `target` from this node's command path.
     pub fn compute(&mut self, target: NodeId, job: DlaJob) -> OpHandle {
         match self.request(Req::Compute { target, job }) {
@@ -245,6 +268,40 @@ impl Rank {
             Resp::Am(am) => am,
             other => unreachable!("wait_signal: {other:?}"),
         }
+    }
+
+    /// Block until a signal AM with `sig`'s tag **and** exactly these
+    /// handler args is delivered to this node; consumes and returns it.
+    /// Signals with other args consumed along the way are stashed (and
+    /// served to later matching waits, across collective calls), so
+    /// out-of-order arrivals from independent senders can never be
+    /// mis-attributed — the collective protocols' dependency primitive.
+    pub fn wait_signal_matching(&mut self, sig: AmTag, args: [u32; 4]) -> UserAm {
+        if let Some(at) = self
+            .sig_stash
+            .iter()
+            .position(|am| am.tag == sig.tag && am.args == args)
+        {
+            return self.sig_stash.remove(at);
+        }
+        loop {
+            let am = self.wait_signal(sig);
+            if am.args == args {
+                return am;
+            }
+            self.sig_stash.push(am);
+        }
+    }
+
+    /// Next collective-call epoch (see the `coll_epoch` field).
+    pub(crate) fn next_collective_epoch(&mut self) -> u32 {
+        self.coll_epoch = self.coll_epoch.wrapping_add(1);
+        self.coll_epoch
+    }
+
+    /// The collective library's config-derived context.
+    pub fn coll_ctx(&self) -> CollCtx {
+        self.coll
     }
 
     /// Handles for ART transfers issued by this node's DLA jobs since the

@@ -286,6 +286,7 @@ impl Spmd {
                 timeline: Vec::new(),
             })
             .collect();
+        let coll = crate::collectives::CollCtx::from_config(self.core.world().cfg());
         let core = &mut self.core;
         let results: Vec<R> = std::thread::scope(|s| {
             let (req_tx, req_rx) = mpsc::channel::<(u32, Req)>();
@@ -295,7 +296,7 @@ impl Spmd {
             for id in 0..n {
                 let (tx, rx) = mpsc::channel::<Resp>();
                 resp_txs.push(tx);
-                let mut rank = Rank::new(id as u32, n as u32, req_tx.clone(), rx);
+                let mut rank = Rank::new(id as u32, n as u32, req_tx.clone(), rx, coll);
                 let guard = FinishGuard {
                     id: id as u32,
                     tx: rank.finish_sender(),

@@ -3,10 +3,12 @@
 //! compares against prior work).
 
 use crate::baselines;
+use crate::collectives::Algo;
 use crate::util::table::{self, f};
 use crate::workloads::{
-    conv::ConvResult, matmul::MatmulResult, scaleout::ScaleoutCase,
-    scaleout::ScaleoutRow, sweep::LatencyResults, BandwidthSeries,
+    collectives::CollectivesPoint, conv::ConvResult, matmul::MatmulResult,
+    scaleout::Exchange, scaleout::ScaleoutCase, scaleout::ScaleoutRow,
+    scaleout::TopoRow, sweep::LatencyResults, BandwidthSeries,
 };
 
 /// Fig. 5 as CSV (one row per transfer size; PUT/GET column pairs per
@@ -186,6 +188,118 @@ pub fn fig7(matmuls: &[MatmulResult], convs: &[ConvResult]) -> String {
     )
 }
 
+/// `bench collectives`: simulated allreduce time per (topology, payload)
+/// across every algorithm and the auto selector, with the winner per
+/// point, the selector's beats-all analysis, and the DLA occupancy the
+/// reduction offload generated. Each point's numbers were reproduced on
+/// all three engine backends (asserted inside the sweep).
+pub fn collectives(points: &[CollectivesPoint]) -> String {
+    let headers: Vec<String> = ["Topology", "Payload"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain(Algo::ALL.iter().map(|a| format!("{} (us)", a.name())))
+        .chain(
+            ["auto (us)", "auto pick", "winner"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let payload_label = |p: &CollectivesPoint| {
+        if p.bytes() >= 1 << 10 {
+            format!("{} KiB", p.bytes() >> 10)
+        } else {
+            format!("{} B", p.bytes())
+        }
+    };
+    let mut rows = Vec::new();
+    for p in points {
+        let mut cols = vec![p.topo.clone(), payload_label(p)];
+        for t in &p.fixed {
+            cols.push(f(t.as_us(), 2));
+        }
+        cols.push(f(p.auto.as_us(), 2));
+        cols.push(p.auto_pick.name().to_string());
+        let best = p
+            .fixed
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, t)| t.as_ps())
+            .map(|(i, _)| Algo::ALL[i].name())
+            .unwrap_or("-");
+        cols.push(best.to_string());
+        rows.push(cols);
+    }
+    let mut out = format!(
+        "bench collectives: SPMD allreduce, algorithm x payload x topology\n\
+         (every point reproduced on the monolithic, sharded, and threaded engines)\n{}",
+        table::render(&header_refs, &rows)
+    );
+    // Selection quality: for each fixed algorithm, a point where auto's
+    // pick strictly beats it.
+    let mut all_beaten = true;
+    for (i, a) in Algo::ALL.iter().enumerate() {
+        let beaten_at = points
+            .iter()
+            .find(|p| p.auto.as_ps() < p.fixed[i].as_ps());
+        match beaten_at {
+            Some(p) => out.push_str(&format!(
+                "\nauto beats {} at {} x {} ({} vs {} us)",
+                a.name(),
+                p.topo,
+                payload_label(p),
+                f(p.auto.as_us(), 2),
+                f(p.fixed[i].as_us(), 2),
+            )),
+            None => {
+                all_beaten = false;
+                out.push_str(&format!(
+                    "\nauto never strictly beats {} on this sweep",
+                    a.name()
+                ));
+            }
+        }
+    }
+    if all_beaten {
+        out.push_str("\n=> auto beats every fixed algorithm on at least one sweep point\n");
+    } else {
+        out.push_str("\n=> auto selection needs retuning for this sweep\n");
+    }
+    let jobs: u64 = points.iter().map(|p| p.dla_jobs).sum();
+    let macs: u64 = points.iter().map(|p| p.dla_macs).sum();
+    out.push_str(&format!(
+        "reduction offload: {jobs} DLA accumulate jobs, {macs} MACs across the auto runs \
+         (simulated compute occupancy — host-sum baseline: collectives.reduce = host)\n"
+    ));
+    out
+}
+
+/// Topology sweep of the scale-out kernel (weak scaling — see
+/// [`crate::workloads::scaleout::run_topologies`]).
+pub fn scaleout_topologies(case: &ScaleoutCase, rows: &[TopoRow]) -> String {
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.to_string(),
+                r.nodes.to_string(),
+                f(r.elapsed.as_us(), 1),
+                f(r.elapsed.as_us() / r.nodes as f64, 2),
+            ]
+        })
+        .collect();
+    format!(
+        "\ntopology sweep (weak scaling, {} jobs/node, {} KiB {}/iter):\n{}",
+        (case.total_jobs / 8).max(1),
+        case.exchange_bytes >> 10,
+        match case.exchange {
+            Exchange::Halo => "ring halo",
+            Exchange::Allreduce => "allreduce",
+        },
+        table::render(&["Topology", "Nodes", "T (us)", "T/node (us)"], &table_rows)
+    )
+}
+
 /// Scale-out under concurrent SPMD issue: speedup vs node count, plus
 /// the per-node issue timelines of the largest fabric (the evidence that
 /// ranks issued concurrently rather than in host-call order).
@@ -227,10 +341,14 @@ pub fn scaleout(case: &ScaleoutCase, rows: &[ScaleoutRow]) -> String {
         &["Nodes", "T (us)", "Speedup", "Efficiency"]
     };
     let mut out = format!(
-        "Scale-out (SPMD concurrent issue): {} x {}^3 matmul jobs, {} KiB ring halo/iter\n{}",
+        "Scale-out (SPMD concurrent issue): {} x {}^3 matmul jobs, {} KiB {}/iter\n{}",
         case.total_jobs,
         case.mm,
         case.exchange_bytes >> 10,
+        match case.exchange {
+            Exchange::Halo => "ring halo",
+            Exchange::Allreduce => "allreduce",
+        },
         table::render(headers, &table_rows)
     );
     if compare {

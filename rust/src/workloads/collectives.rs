@@ -1,0 +1,204 @@
+//! The `bench collectives` sweep: algorithm × payload × topology, on
+//! all three engine backends.
+//!
+//! Every point runs an SPMD allreduce — the collective the case study's
+//! gradient exchange is made of — once per algorithm (flat / tree /
+//! ring / rsag / the `auto` selector) on the monolithic, sharded, and
+//! threaded engines. The three backends must agree on the simulated
+//! result (asserted here: the sweep doubles as an end-to-end
+//! equivalence check); the report gets one simulated time per point
+//! plus the DLA accumulate occupancy the reduction offload generated.
+//!
+//! `collectives.algo = auto` earns its keep when, for every fixed
+//! algorithm, there is at least one (payload, topology) point where
+//! auto's pick strictly beats it — the report computes exactly that
+//! (see `reports::collectives`).
+
+use crate::collectives::{spmd, Algo};
+use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
+use crate::fabric::Topology;
+use crate::sim::SimTime;
+
+/// One sweep point: a fabric shape and a payload size.
+#[derive(Debug, Clone)]
+pub struct CollectivesPoint {
+    /// Human-readable topology label (`ring(8)`, `mesh(2x4)`, ...).
+    pub topo: String,
+    /// Node count of the fabric.
+    pub nodes: u32,
+    /// Elements per rank in the allreduced vector.
+    pub count: usize,
+    /// Simulated allreduce time per algorithm, in [`Algo::ALL`] order.
+    pub fixed: Vec<SimTime>,
+    /// Simulated time of the `auto` selector.
+    pub auto: SimTime,
+    /// The algorithm `auto` picked at this point.
+    pub auto_pick: Algo,
+    /// DLA accumulate jobs the auto run issued (reduction offload).
+    pub dla_jobs: u64,
+    /// MACs those jobs retired.
+    pub dla_macs: u64,
+}
+
+impl CollectivesPoint {
+    /// Payload bytes per rank (fp16 elements).
+    pub fn bytes(&self) -> u64 {
+        self.count as u64 * 2
+    }
+}
+
+/// The topology axis: ring (the prototype's shape, power-of-two), mesh
+/// (no wraparound — the ring schedules' worst case), torus (the paper's
+/// Fig. 2 infrastructure shape, 9 nodes — not a power of two).
+fn topologies(fast: bool) -> Vec<(String, Topology)> {
+    let mut t = vec![("ring(8)".to_string(), Topology::Ring(8))];
+    if !fast {
+        t.push(("mesh(2x4)".to_string(), Topology::Mesh2D { w: 2, h: 4 }));
+        t.push(("torus(3x3)".to_string(), Topology::Torus2D { w: 3, h: 3 }));
+    }
+    t
+}
+
+/// The payload axis, straddling the latency/bandwidth crossover the
+/// auto-selector decides on (64 KiB on the D5005 preset).
+fn payloads(fast: bool) -> Vec<usize> {
+    if fast {
+        vec![256, 128 << 10] // 512 B, 256 KiB
+    } else {
+        vec![256, 8 << 10, 128 << 10] // 512 B, 16 KiB, 256 KiB
+    }
+}
+
+/// Config of one run: the given shape, software numerics (so reduction
+/// offload is on and accumulates carry real numbers), and `host_wake =
+/// propagation` on every backend so the three engines' timings are
+/// directly comparable (the threaded backend's driver contract).
+fn point_config(topo: Topology, algo_forced: Option<Algo>) -> Config {
+    let mut cfg = Config::two_node_ring().with_numerics(Numerics::Software);
+    cfg.topology = topo;
+    if let Some(a) = algo_forced {
+        cfg.collective_algo = match a {
+            Algo::Flat => crate::config::CollectiveAlgo::Flat,
+            Algo::Tree => crate::config::CollectiveAlgo::Tree,
+            Algo::Ring => crate::config::CollectiveAlgo::Ring,
+            Algo::Rsag => crate::config::CollectiveAlgo::Rsag,
+        };
+    }
+    cfg.host_wake = cfg.link.propagation;
+    cfg
+}
+
+/// Run one allreduce under `cfg` on one engine backend; returns
+/// (simulated time, dla jobs, dla macs).
+fn run_once(
+    mut cfg: Config,
+    count: usize,
+    shards: ShardSpec,
+    threads: ThreadSpec,
+) -> (SimTime, u64, u64) {
+    cfg.shards = shards;
+    cfg.engine_threads = threads;
+    let mut s = crate::program::Spmd::new(cfg);
+    let n = s.nodes();
+    let sig = s.register_signal(21);
+    for node in 0..n {
+        // Deterministic, exactly-representable contributions.
+        let v: Vec<f32> = (0..count).map(|i| ((node + 1) + (i as u32 % 13)) as f32).collect();
+        s.write_local_f16(node, 0, &v);
+    }
+    let t0 = s.now();
+    let report = s.run(move |r| spmd::allreduce_sum_f16(r, sig, 0, count, 0x40_0000));
+    let elapsed = report.max_finish().since(t0);
+    let jobs = s.counters().get("dla_jobs_done");
+    let macs: u64 = (0..n).map(|i| s.world().node(i).dla.macs_done).sum();
+    (elapsed, jobs, macs)
+}
+
+/// Run one (topology, payload, algorithm) point on all three engine
+/// backends, asserting they agree on the simulated time (monolithic vs
+/// sharded is bit-identical; threaded is trace-compatible).
+fn run_point(topo: Topology, count: usize, algo: Option<Algo>) -> (SimTime, u64, u64) {
+    let cfg = point_config(topo, algo);
+    let (t_mono, jobs, macs) = run_once(cfg.clone(), count, ShardSpec::Off, ThreadSpec::Off);
+    let (t_shard, ..) = run_once(cfg.clone(), count, ShardSpec::Auto, ThreadSpec::Off);
+    let (t_par, ..) = run_once(cfg, count, ShardSpec::Auto, ThreadSpec::Auto);
+    assert_eq!(
+        t_mono, t_shard,
+        "{topo:?} x{count}: sharded engine must be bit-identical"
+    );
+    assert_eq!(
+        t_mono, t_par,
+        "{topo:?} x{count}: threaded engine must be trace-compatible"
+    );
+    (t_mono, jobs, macs)
+}
+
+/// The full sweep (`--fast` trims both axes).
+pub fn run_sweep(fast: bool) -> Vec<CollectivesPoint> {
+    let mut out = Vec::new();
+    for (label, topo) in topologies(fast) {
+        for &count in &payloads(fast) {
+            let fixed: Vec<SimTime> = Algo::ALL
+                .iter()
+                .map(|&a| run_point(topo, count, Some(a)).0)
+                .collect();
+            let (auto, dla_jobs, dla_macs) = run_point(topo, count, None);
+            let cfg = point_config(topo, None);
+            let auto_pick = crate::collectives::CollCtx::from_config(&cfg).pick(
+                crate::collectives::Coll::Allreduce,
+                count as u64 * 2,
+                topo.nodes(),
+            );
+            out.push(CollectivesPoint {
+                topo: label.clone(),
+                nodes: topo.nodes(),
+                count,
+                fixed,
+                auto,
+                auto_pick,
+                dla_jobs,
+                dla_macs,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_sweep_engines_agree_and_offload_runs() {
+        let points = run_sweep(true);
+        assert_eq!(points.len(), 2, "ring(8) x two payloads");
+        for p in &points {
+            assert_eq!(p.fixed.len(), Algo::ALL.len());
+            assert!(p.auto > SimTime::ZERO);
+            assert!(
+                p.dla_jobs > 0 && p.dla_macs > 0,
+                "{} x{}: reduction must occupy the DLA",
+                p.topo,
+                p.count
+            );
+            // The auto run executes exactly its pick's schedule, so it
+            // must time exactly like that fixed measurement.
+            let picked = Algo::ALL.iter().position(|a| *a == p.auto_pick).unwrap();
+            assert_eq!(
+                p.auto, p.fixed[picked],
+                "{} x{}: auto must time like its pick",
+                p.topo, p.count
+            );
+        }
+        // The acceptance bar: for every fixed algorithm there is a sweep
+        // point where auto's pick strictly beats it (no single algorithm
+        // dominates the payload axis).
+        for (i, a) in Algo::ALL.iter().enumerate() {
+            assert!(
+                points.iter().any(|p| p.auto < p.fixed[i]),
+                "auto never strictly beats {} — selection rules need retuning",
+                a.name()
+            );
+        }
+    }
+}

@@ -1,11 +1,14 @@
 //! Experiment workloads: the paper's measurement sweeps (Fig. 5,
-//! Table III), case studies (Fig. 6/7), and the SPMD scale-out sweep.
+//! Table III), case studies (Fig. 6/7), the SPMD scale-out sweep, and
+//! the collective-algorithm sweep (`bench collectives`).
 
+pub mod collectives;
 pub mod conv;
 pub mod matmul;
 pub mod scaleout;
 pub mod sweep;
 
+pub use collectives::CollectivesPoint;
 pub use conv::{ConvCase, ConvResult};
 pub use matmul::{MatmulCase, MatmulResult};
 pub use scaleout::{ScaleoutCase, ScaleoutRow};

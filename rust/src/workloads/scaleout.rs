@@ -26,9 +26,22 @@ use std::time::{Duration, Instant};
 
 use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::dla::{DlaJob, DlaOp};
+use crate::fabric::Topology;
 use crate::memory::GlobalAddr;
 use crate::program::{RankTimeline, Spmd};
 use crate::sim::{ShardingReport, SimTime};
+
+/// What moves between ranks at each bulk-synchronous step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exchange {
+    /// One-sided halo push to the right neighbor + barrier (the
+    /// original kernel).
+    Halo,
+    /// A full allreduce of a gradient-sized buffer through the
+    /// collectives library (`collectives.algo` selects the schedule per
+    /// point) — the communication-bound variant.
+    Allreduce,
+}
 
 /// One scale-out sweep configuration.
 #[derive(Debug, Clone, Copy)]
@@ -38,8 +51,11 @@ pub struct ScaleoutCase {
     pub total_jobs: u32,
     /// Matmul dimension of each job (mm x mm x mm).
     pub mm: u32,
-    /// Bytes each rank pushes to its ring neighbor per iteration.
+    /// Bytes each rank exchanges per iteration (halo push or allreduced
+    /// buffer, per [`Exchange`]).
     pub exchange_bytes: u64,
+    /// The per-iteration communication pattern.
+    pub exchange: Exchange,
 }
 
 impl ScaleoutCase {
@@ -49,6 +65,7 @@ impl ScaleoutCase {
             total_jobs: 8,
             mm: 512,
             exchange_bytes: 32 << 10,
+            exchange: Exchange::Halo,
         }
     }
 
@@ -58,6 +75,19 @@ impl ScaleoutCase {
             total_jobs: 4,
             mm: 256,
             exchange_bytes: 16 << 10,
+            exchange: Exchange::Halo,
+        }
+    }
+
+    /// Communication-bound variant: tiny matmuls under a 256 KiB
+    /// per-iteration allreduce (halo ≫ compute) — where the fabric and
+    /// the collective schedule, not the DLA, cap scaling.
+    pub fn comm_bound() -> Self {
+        ScaleoutCase {
+            total_jobs: 8,
+            mm: 128,
+            exchange_bytes: 256 << 10,
+            exchange: Exchange::Allreduce,
         }
     }
 }
@@ -144,15 +174,19 @@ fn run_point(
     );
     let wall = Instant::now();
     let mut spmd = Spmd::new(cfg);
+    let sig = spmd.register_signal(29);
     let t0 = spmd.now();
     let case = *case;
     let report = spmd.run(move |r| {
         let p = r.id();
         let n = r.nodes();
         let jobs_per = case.total_jobs / n;
-        // Per-node tensor strip: A, B, Y, and the neighbor's halo.
+        // Per-node tensor strip: A, B, Y, the neighbor's halo, and (for
+        // the allreduce variant) the gradient buffer + result/scratch.
         let elem = case.mm as u64 * case.mm as u64 * 2; // fp16 bytes
         let (a_off, b_off, y_off, recv_off) = (0, elem, 2 * elem, 3 * elem);
+        let grad_off = 4 * elem;
+        let red_off = grad_off + case.exchange_bytes;
         for _ in 0..jobs_per {
             let job = DlaJob {
                 op: DlaOp::Matmul {
@@ -169,20 +203,34 @@ fn run_point(
             };
             let h = r.compute(p, job);
             r.wait(h);
-            if n > 1 {
-                // Ring halo: push a slab of the result to the right
-                // neighbor (one-sided, overlaps with the peer's own
-                // exchange in the opposite ring direction).
-                let right = (p + 1) % n;
-                let h = r.put_from_mem(
-                    y_off,
-                    case.exchange_bytes,
-                    GlobalAddr::new(right, recv_off),
-                );
-                r.wait(h);
+            match case.exchange {
+                Exchange::Halo => {
+                    if n > 1 {
+                        // Ring halo: push a slab of the result to the
+                        // right neighbor (one-sided, overlaps with the
+                        // peer's own exchange in the opposite ring
+                        // direction).
+                        let right = (p + 1) % n;
+                        let h = r.put_from_mem(
+                            y_off,
+                            case.exchange_bytes,
+                            GlobalAddr::new(right, recv_off),
+                        );
+                        r.wait(h);
+                    }
+                    // Bulk-synchronous step boundary.
+                    r.barrier();
+                }
+                Exchange::Allreduce => {
+                    // Gradient-style exchange through the collectives
+                    // library (algorithm per `collectives.algo`; ends on
+                    // its own barrier).
+                    let count = (case.exchange_bytes / 2) as usize;
+                    crate::collectives::spmd::allreduce_sum_f16(
+                        r, sig, grad_off, count, red_off,
+                    );
+                }
             }
-            // Bulk-synchronous step boundary.
-            r.barrier();
         }
     });
     (
@@ -204,6 +252,58 @@ pub fn run_one(
     let cfg = point_config(n, shards, ThreadSpec::Off, Numerics::TimingOnly, false);
     let (elapsed, ranks, shard_stats, _) = run_point(cfg, case);
     (elapsed, ranks, shard_stats)
+}
+
+/// One row of the topology sweep.
+#[derive(Debug, Clone)]
+pub struct TopoRow {
+    /// Topology label (`ring(8)`, `mesh(2x4)`, `torus(3x3)`).
+    pub label: &'static str,
+    /// Node count.
+    pub nodes: u32,
+    /// Simulated makespan.
+    pub elapsed: SimTime,
+    /// Per-rank issue timelines.
+    pub ranks: Vec<RankTimeline>,
+    /// Per-shard advance statistics (`shards != off`).
+    pub shards: Option<ShardingReport>,
+}
+
+/// Sweep fabric shapes at (roughly) fixed per-node work: ring(8) — the
+/// paper's future 8-card server — against an 8-node mesh and a 9-node
+/// torus (Fig. 2's infrastructure shape). Weak scaling: each node runs
+/// `total_jobs / 8` jobs (at least one), so the rows compare fabric and
+/// collective costs, not work imbalance.
+pub fn run_topologies(
+    case: &ScaleoutCase,
+    shards: ShardSpec,
+    numerics: Numerics,
+) -> Vec<TopoRow> {
+    let topos: [(&'static str, Topology); 3] = [
+        ("ring(8)", Topology::Ring(8)),
+        ("mesh(2x4)", Topology::Mesh2D { w: 2, h: 4 }),
+        ("torus(3x3)", Topology::Torus2D { w: 3, h: 3 }),
+    ];
+    let per_node = (case.total_jobs / 8).max(1);
+    let mut rows = Vec::new();
+    for (label, topo) in topos {
+        let n = topo.nodes();
+        let mut c = *case;
+        c.total_jobs = per_node * n;
+        let mut cfg = Config::two_node_ring()
+            .with_numerics(numerics)
+            .with_shards(clamp_shards(shards, n));
+        cfg.topology = topo;
+        let (elapsed, ranks, shard_stats, _) = run_point(cfg, &c);
+        rows.push(TopoRow {
+            label,
+            nodes: n,
+            elapsed,
+            ranks,
+            shards: shard_stats,
+        });
+    }
+    rows
 }
 
 /// Sweep node counts; speedups are relative to the first (smallest)
@@ -359,6 +459,44 @@ mod tests {
         );
         assert_eq!(rows[0].elapsed, mono[0].elapsed);
         assert_eq!(rows[1].elapsed, mono[1].elapsed);
+    }
+
+    #[test]
+    fn comm_bound_variant_exposes_fabric_costs() {
+        // Halo ≫ compute: the per-iteration allreduce moves a fixed
+        // 256 KiB regardless of n, so strong scaling must fall well
+        // short of ideal — the fabric, not the DLA, caps it.
+        let rows = run_sweep(
+            &[1, 2, 4],
+            &ScaleoutCase::comm_bound(),
+            ShardSpec::Off,
+            ThreadSpec::Off,
+            Numerics::TimingOnly,
+        );
+        assert_eq!(rows[0].speedup, 1.0);
+        assert!(
+            rows[2].speedup < 3.0,
+            "comm-bound 4-node speedup {} should be capped by the exchange",
+            rows[2].speedup
+        );
+    }
+
+    #[test]
+    fn topology_sweep_covers_ring_mesh_torus() {
+        let rows = run_topologies(
+            &ScaleoutCase::fast(),
+            ShardSpec::Off,
+            Numerics::TimingOnly,
+        );
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            rows.iter().map(|r| r.nodes).collect::<Vec<_>>(),
+            vec![8, 8, 9]
+        );
+        for row in &rows {
+            assert!(row.elapsed > SimTime::ZERO, "{}", row.label);
+            assert_eq!(row.ranks.len(), row.nodes as usize);
+        }
     }
 
     #[test]

@@ -79,6 +79,8 @@ fn documented_keys_round_trip_through_the_parser() {
             "shards" => "auto",
             "engine_threads" => "off",
             "host_wake_ns" => "200",
+            "collectives.algo" => "auto",
+            "collectives.reduce" => "auto",
             "seed" => "7",
             other => panic!("doc documents unknown key '{other}'"),
         };

@@ -318,6 +318,104 @@ fn compat_collectives_broadcast_allreduce() {
 }
 
 #[test]
+fn compat_collectives_algorithm_matrix() {
+    // Every collective algorithm × ring/mesh/torus must stay
+    // trace-compatible under worker threads (the schedules' signal
+    // handshakes and chunk pipelines are exactly the cross-shard
+    // traffic the windowed backend relaxes internally).
+    fn algo_program(
+        r: &mut Rank,
+        algo: fshmem::collectives::Algo,
+        sig: fshmem::program::AmTag,
+    ) {
+        use fshmem::collectives::spmd as coll;
+        let me = r.id();
+        let n = r.nodes();
+        let v: Vec<f32> = (0..60).map(|i| (me * 7 + i) as f32).collect();
+        r.write_local_f16(0, &v);
+        r.write_local(0x300, &[me as u8 + 1; 200]);
+        if me == n - 1 {
+            r.write_local(0x600, &[0xB7; 192]);
+        }
+        r.barrier();
+        coll::broadcast_algo(r, algo, sig, n - 1, 0x600, 192);
+        coll::allreduce_sum_f16_algo(r, algo, sig, 0, 60, 0x8000);
+        coll::gather_algo(r, algo, sig, 0, 0x300, 200, 0x20000);
+        coll::scatter_algo(r, algo, sig, 0, 0x20000, 200, 0x40000);
+        r.barrier();
+    }
+    let topos: Vec<(&str, fn() -> Config)> = vec![
+        ("ring(8)", || Config::ring(8)),
+        ("mesh(2x3)", || Config::mesh(2, 3)),
+        ("torus(3x3)", || {
+            let mut cfg = Config::mesh(3, 3);
+            cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
+            cfg
+        }),
+    ];
+    for (label, mk) in topos {
+        for algo in fshmem::collectives::Algo::ALL {
+            let run = |threads: ThreadSpec| {
+                let mut s = Spmd::new(pcfg(mk(), ShardSpec::Auto, threads));
+                let sig = s.register_signal(11);
+                let report = s.run(move |r| algo_program(r, algo, sig));
+                let n = s.nodes();
+                let mem: Vec<Vec<u8>> =
+                    (0..n).map(|node| s.read_shared(node, 0, 0x48_000)).collect();
+                (
+                    report.end,
+                    report.finish,
+                    s.events_processed(),
+                    s.counters().counts().collect::<Vec<_>>(),
+                    mem,
+                )
+            };
+            let seq = run(ThreadSpec::Off);
+            assert_eq!(seq, run(ThreadSpec::Auto), "{label} {algo:?} [auto]");
+            assert_eq!(seq, run(ThreadSpec::Count(2)), "{label} {algo:?} [2t]");
+        }
+    }
+}
+
+#[test]
+fn compat_dla_offloaded_reduction() {
+    // numerics = software → reduction offload on: the DLA accumulate
+    // job stream must replay identically under worker threads, with the
+    // jobs actually issued and the sums exact.
+    let run = |threads: ThreadSpec| {
+        let mut cfg = Config::ring(4)
+            .with_shards(ShardSpec::Auto)
+            .with_engine_threads(threads);
+        cfg.host_wake = cfg.link.propagation;
+        let mut s = Spmd::new(cfg);
+        let sig = s.register_signal(12);
+        for node in 0..4u32 {
+            s.write_local_f16(node, 0, &[(node + 2) as f32; 48]);
+        }
+        let report = s.run(move |r| {
+            use fshmem::collectives::{spmd as coll, Algo};
+            coll::allreduce_sum_f16_algo(r, Algo::Rsag, sig, 0, 48, 0x8000);
+        });
+        let jobs = s.counters().get("dla_jobs_done");
+        assert!(jobs > 0, "offload must issue accumulate jobs");
+        let mem: Vec<Vec<f32>> = (0..4)
+            .map(|node| s.read_shared_f16(node, 0x8000, 48))
+            .collect();
+        (
+            report.end,
+            s.events_processed(),
+            s.counters().counts().collect::<Vec<_>>(),
+            mem,
+            jobs,
+        )
+    };
+    let seq = run(ThreadSpec::Off);
+    assert_eq!(seq, run(ThreadSpec::Auto), "auto threads");
+    assert_eq!(seq, run(ThreadSpec::Count(2)), "2 threads");
+    assert!(seq.3.iter().all(|v| v.iter().all(|&x| x == 14.0)));
+}
+
+#[test]
 fn compat_matmul_workload() {
     let cfg = |threads| {
         pcfg(Config::two_node_ring(), ShardSpec::Auto, threads)

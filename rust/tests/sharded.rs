@@ -340,6 +340,118 @@ fn equivalence_synchronous_api_op_times() {
     assert_eq!(run(ShardSpec::Off), run(ShardSpec::Auto));
 }
 
+// ---- the collectives algorithm library --------------------------------------
+
+/// One SPMD program exercising every collective under a forced
+/// algorithm: per-rank staging, broadcast from the last rank, allreduce,
+/// gather + scatter through rank 0. Signal handshakes, chunked ring
+/// steps, recursive halving, and (host-path) reductions all replay
+/// through it.
+fn algo_program(r: &mut Rank, algo: fshmem::collectives::Algo, sig: fshmem::program::AmTag) {
+    use fshmem::collectives::spmd as coll;
+    let me = r.id();
+    let n = r.nodes();
+    let v: Vec<f32> = (0..60).map(|i| (me * 7 + i) as f32).collect();
+    r.write_local_f16(0, &v);
+    r.write_local(0x300, &[me as u8 + 1; 200]);
+    if me == n - 1 {
+        r.write_local(0x600, &[0xB7; 192]);
+    }
+    r.barrier();
+    coll::broadcast_algo(r, algo, sig, n - 1, 0x600, 192);
+    coll::allreduce_sum_f16_algo(r, algo, sig, 0, 60, 0x8000);
+    coll::gather_algo(r, algo, sig, 0, 0x300, 200, 0x20000);
+    coll::scatter_algo(r, algo, sig, 0, 0x20000, 200, 0x40000);
+    r.barrier();
+}
+
+#[test]
+fn equivalence_collectives_algorithm_matrix() {
+    // Every algorithm × ring/mesh/torus must stay bit-identical across
+    // shards = off | auto | 2 (the collective schedules are pure
+    // put/get/signal/barrier compositions, so this is the library-level
+    // proof that no schedule depends on engine internals).
+    let topos: Vec<(&str, fn() -> Config)> = vec![
+        ("ring(8)", || timing(Config::ring(8))),
+        ("mesh(2x3)", || timing(Config::mesh(2, 3))),
+        ("torus(3x3)", || {
+            let mut cfg = timing(Config::mesh(3, 3));
+            cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
+            cfg
+        }),
+    ];
+    for (label, mk) in topos {
+        for algo in fshmem::collectives::Algo::ALL {
+            let run = |shards: ShardSpec| {
+                let mut s = Spmd::new(mk().with_shards(shards));
+                let sig = s.register_signal(11);
+                let report = s.run(move |r| algo_program(r, algo, sig));
+                let n = s.nodes();
+                let mem: Vec<Vec<u8>> =
+                    (0..n).map(|node| s.read_shared(node, 0, 0x48_000)).collect();
+                (
+                    report.end,
+                    report.finish,
+                    s.events_processed(),
+                    s.counters().counts().collect::<Vec<_>>(),
+                    mem,
+                )
+            };
+            let mono = run(ShardSpec::Off);
+            assert_eq!(
+                mono,
+                run(ShardSpec::Auto),
+                "{label} {algo:?} [auto shards]"
+            );
+            assert_eq!(
+                mono,
+                run(ShardSpec::Count(2)),
+                "{label} {algo:?} [2 shards]"
+            );
+        }
+    }
+}
+
+#[test]
+fn equivalence_dla_offloaded_reduction() {
+    // numerics = software → the collectives route partial sums through
+    // DLA accumulate jobs; the job stream, its completion acks, and the
+    // fp16 results must replay identically on the sharded engine, and
+    // the offload must actually have run (job count asserted).
+    let run = |shards: ShardSpec| {
+        let mut s = Spmd::new(Config::ring(4).with_shards(shards));
+        let sig = s.register_signal(12);
+        for node in 0..4u32 {
+            s.write_local_f16(node, 0, &[(node + 2) as f32; 48]);
+        }
+        let report = s.run(move |r| {
+            use fshmem::collectives::{spmd as coll, Algo};
+            coll::allreduce_sum_f16_algo(r, Algo::Ring, sig, 0, 48, 0x8000);
+            coll::reduce_sum_f16_algo(r, Algo::Tree, sig, 1, 0x8000, 48, 0x10000);
+        });
+        let mem: Vec<Vec<f32>> = (0..4)
+            .map(|node| s.read_shared_f16(node, 0x8000, 48))
+            .collect();
+        let jobs = s.counters().get("dla_jobs_done");
+        assert!(jobs > 0, "offload must issue accumulate jobs");
+        (
+            report.end,
+            s.events_processed(),
+            s.counters().counts().collect::<Vec<_>>(),
+            mem,
+            s.read_shared_f16(1, 0x10000, 48),
+            jobs,
+        )
+    };
+    let mono = run(ShardSpec::Off);
+    assert_eq!(mono, run(ShardSpec::Auto), "auto shards");
+    assert_eq!(mono, run(ShardSpec::Count(2)), "2 shards");
+    // The reduction arithmetic itself: 4 ranks of constant (node+2) =
+    // 2+3+4+5 = 14 everywhere, then a second reduce quadruples it.
+    assert!(mono.3.iter().all(|v| v.iter().all(|&x| x == 14.0)));
+    assert!(mono.4.iter().all(|&x| x == 56.0));
+}
+
 // ---- sharded-engine structure ----------------------------------------------
 
 #[test]
