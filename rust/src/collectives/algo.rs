@@ -62,11 +62,16 @@ pub enum Coll {
     Scatter,
 }
 
-/// Pipelined-ring schedules forward between consecutive node ids; on a
-/// mesh the logical wrap edge (`n-1 -> 0`) crosses the whole fabric, so
-/// rings only pay where consecutive ids stay (mostly) adjacent.
+/// Pipelined-ring schedules forward between consecutive node ids, so
+/// rings only pay where consecutive ids stay (mostly) adjacent: rings
+/// themselves and tori (row-major snaking with wraparound). On a mesh
+/// the logical wrap edge (`n-1 -> 0`) crosses the whole fabric; on a
+/// fat-tree every consecutive-id hop past a subtree boundary climbs
+/// toward the root, and on a dragonfly the group-to-group steps funnel
+/// through the few global cables — the ring's n-1 serial hops stack onto
+/// exactly the links with the least capacity to spare.
 fn ring_friendly(topology: &Topology) -> bool {
-    !matches!(topology, Topology::Mesh2D { .. })
+    matches!(topology, Topology::Ring(_) | Topology::Torus2D { .. })
 }
 
 /// Resolve the configured spec to a concrete algorithm for one call.
@@ -131,9 +136,11 @@ fn auto(coll: Coll, payload_bytes: u64, n: u32, topology: &Topology, cutoff: u64
                 // shrinking payloads beat the tree's full-size hops.
                 Algo::Rsag
             } else {
-                // Mesh without the power-of-two structure: the ring's
-                // row-wrap edges are full-row detours; the binomial
-                // tree's longest edges still beat them.
+                // Mesh or hierarchical fabric without the power-of-two
+                // structure: the ring's consecutive-id hops detour
+                // (row wraps, subtree climbs, global cables) and rsag
+                // would fall back to that same ring schedule; the
+                // binomial tree's longest edges still beat them.
                 Algo::Tree
             }
         }
@@ -215,6 +222,39 @@ mod cases {
         assert_eq!(select(auto, Coll::Gather, 256, 8, &ring8, CUT), Algo::Tree);
         assert_eq!(
             select(auto, Coll::Scatter, 512 << 10, 8, &ring8, CUT),
+            Algo::Flat
+        );
+    }
+
+    #[test]
+    fn hierarchical_topologies_avoid_the_ring() {
+        // Fat-tree / dragonfly: consecutive-id hops climb the tree or
+        // funnel through global cables, so bulk payloads never get the
+        // pipelined ring — tree, or rsag on power-of-two fabrics.
+        let auto = CollectiveAlgo::Auto;
+        let ft7 = Topology::FatTree { arity: 2, levels: 3 }; // 7 nodes
+        assert_eq!(
+            select(auto, Coll::Allreduce, 512 << 10, 7, &ft7, CUT),
+            Algo::Tree
+        );
+        let ft4 = Topology::FatTree { arity: 3, levels: 2 }; // 4 nodes
+        assert_eq!(
+            select(auto, Coll::Allreduce, 512 << 10, 4, &ft4, CUT),
+            Algo::Rsag
+        );
+        let df6 = Topology::Dragonfly { groups: 3, routers: 2, globals: 1 };
+        assert_eq!(
+            select(auto, Coll::Broadcast, 512 << 10, 6, &df6, CUT),
+            Algo::Tree
+        );
+        let df16 = Topology::Dragonfly { groups: 4, routers: 4, globals: 1 };
+        assert_eq!(
+            select(auto, Coll::Allreduce, 512 << 10, 16, &df16, CUT),
+            Algo::Rsag
+        );
+        // Small payloads stay latency-ruled regardless of shape.
+        assert_eq!(
+            select(auto, Coll::Allreduce, 256, 7, &ft7, CUT),
             Algo::Flat
         );
     }

@@ -176,6 +176,61 @@ impl ReduceOffload {
     }
 }
 
+/// How nodes are assigned to shards (`shards.map = contiguous|balanced|
+/// <explicit>` in config files). `Contiguous` keeps the classic equal
+/// node ranges; `Balanced` uses the coordinator-aware weighted
+/// assignment (node 0 — which serializes every barrier round — is
+/// weighted by fabric size, so it splits away from the bulk-transfer
+/// nodes; see `ShardPlan::balanced`); an explicit comma-separated
+/// node→shard list pins the map exactly — the workflow for
+/// traffic-aware maps derived from the per-shard advance stats `bench
+/// scaleout` reports. Any map choice is **bit-identical** to any other:
+/// event ordering is fixed by per-node `(stream, counter)` keys that no
+/// partition can change (`rust/tests/sharded.rs` pins this). Ignored
+/// while `shards = off`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardMapSpec {
+    /// Equal contiguous node ranges (the default).
+    Contiguous,
+    /// Coordinator-aware weighted assignment.
+    Balanced,
+    /// Explicit node→shard table, one entry per node.
+    Explicit(Vec<u32>),
+}
+
+impl ShardMapSpec {
+    /// Parse the `shards.map` config value.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "contiguous" => ShardMapSpec::Contiguous,
+            "balanced" => ShardMapSpec::Balanced,
+            _ => {
+                let table = v
+                    .split(',')
+                    .map(|s| s.trim().parse::<u32>())
+                    .collect::<std::result::Result<Vec<u32>, _>>()
+                    .context(
+                        "shards.map must be 'contiguous', 'balanced', or a \
+                         comma-separated node->shard list",
+                    )?;
+                ShardMapSpec::Explicit(table)
+            }
+        })
+    }
+
+    fn as_cfg_value(&self) -> String {
+        match self {
+            ShardMapSpec::Contiguous => "contiguous".to_string(),
+            ShardMapSpec::Balanced => "balanced".to_string(),
+            ShardMapSpec::Explicit(t) => t
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        }
+    }
+}
+
 impl ShardSpec {
     /// Parse the `shards = auto|N|off` config value.
     pub fn parse(v: &str) -> Result<Self> {
@@ -270,6 +325,10 @@ pub struct Config {
     /// DES engine partitioning: `off` (monolithic), `auto`, or an
     /// explicit shard count — see [`ShardSpec`] and [`Config::shard_plan`].
     pub shards: ShardSpec,
+    /// Node→shard assignment policy for the sharded engines — see
+    /// [`ShardMapSpec`]. Every choice is bit-identical to every other;
+    /// maps only shift *wall-clock* load between workers.
+    pub shard_map: ShardMapSpec,
     /// Worker threads for the sharded DES: `off` (sequential), `auto`,
     /// or an explicit count — see [`ThreadSpec`] and
     /// [`Config::engine_thread_count`]. Requires sharding and
@@ -336,6 +395,7 @@ impl Config {
             // Monolithic by default: experiments opt into the sharded
             // engine (equivalence-pinned) via `with_shards` / config.
             shards: ShardSpec::Off,
+            shard_map: ShardMapSpec::Contiguous,
             // Sequential by default: threaded execution is opt-in (and
             // requires host_wake >= propagation; see validate).
             engine_threads: ThreadSpec::Off,
@@ -356,6 +416,28 @@ impl Config {
     pub fn mesh(w: u32, h: u32) -> Self {
         Config {
             topology: Topology::Mesh2D { w, h },
+            ..Self::two_node_ring()
+        }
+    }
+
+    /// Complete `arity`-ary fat-tree with `levels` levels (every node
+    /// computes and routes; each edge is a parallel cable pair).
+    pub fn fat_tree(arity: u32, levels: u32) -> Self {
+        Config {
+            topology: Topology::FatTree { arity, levels },
+            ..Self::two_node_ring()
+        }
+    }
+
+    /// Dragonfly of `groups` all-to-all groups of `routers` nodes, each
+    /// node owning `globals` inter-group cables.
+    pub fn dragonfly(groups: u32, routers: u32, globals: u32) -> Self {
+        Config {
+            topology: Topology::Dragonfly {
+                groups,
+                routers,
+                globals,
+            },
             ..Self::two_node_ring()
         }
     }
@@ -386,6 +468,12 @@ impl Config {
     /// Select the DES engine partitioning (see [`ShardSpec`]).
     pub fn with_shards(mut self, shards: ShardSpec) -> Self {
         self.shards = shards;
+        self
+    }
+
+    /// Select the node→shard assignment policy (see [`ShardMapSpec`]).
+    pub fn with_shard_map(mut self, map: ShardMapSpec) -> Self {
+        self.shard_map = map;
         self
     }
 
@@ -448,13 +536,22 @@ impl Config {
         }
     }
 
-    /// The sharded engine's execution plan: shard count plus the
-    /// conservative lookahead, which is the link propagation delay — no
-    /// event can cross between nodes faster than the wire's flight time
-    /// (serialization, decode, and handler costs only add to it).
+    /// The sharded engine's execution plan: shard count, node→shard map,
+    /// and the conservative lookahead, which is the link propagation
+    /// delay — no event can cross between nodes faster than the wire's
+    /// flight time (serialization, decode, and handler costs only add to
+    /// it).
     pub fn shard_plan(&self) -> Option<ShardPlan> {
-        self.shard_count()
-            .map(|s| ShardPlan::new(s, self.topology.nodes(), self.link.propagation))
+        let shards = self.shard_count()?;
+        let nodes = self.topology.nodes();
+        let lookahead = self.link.propagation;
+        Some(match &self.shard_map {
+            ShardMapSpec::Contiguous => ShardPlan::new(shards, nodes, lookahead),
+            ShardMapSpec::Balanced => ShardPlan::balanced(shards, nodes, lookahead),
+            ShardMapSpec::Explicit(table) => {
+                ShardPlan::with_table(shards, nodes, lookahead, table.clone())
+            }
+        })
     }
 
     /// Worker threads the threaded backend will use (`None` =
@@ -512,6 +609,8 @@ impl Config {
         let mut cfg = Self::two_node_ring();
         let mut topo_kind = "ring".to_string();
         let (mut nodes, mut mesh_w, mut mesh_h) = (2u32, 0u32, 0u32);
+        let (mut tree_arity, mut tree_levels) = (0u32, 0u32);
+        let (mut df_groups, mut df_routers, mut df_globals) = (0u32, 0u32, 0u32);
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
@@ -526,6 +625,11 @@ impl Config {
                 "nodes" => nodes = v.parse().context("nodes")?,
                 "mesh_w" => mesh_w = v.parse().context("mesh_w")?,
                 "mesh_h" => mesh_h = v.parse().context("mesh_h")?,
+                "tree_arity" => tree_arity = v.parse().context("tree_arity")?,
+                "tree_levels" => tree_levels = v.parse().context("tree_levels")?,
+                "df_groups" => df_groups = v.parse().context("df_groups")?,
+                "df_routers" => df_routers = v.parse().context("df_routers")?,
+                "df_globals" => df_globals = v.parse().context("df_globals")?,
                 "packet_payload" => {
                     cfg.packet_payload = v.parse().context("packet_payload")?
                 }
@@ -566,6 +670,7 @@ impl Config {
                     cfg.stripe_spec = StripeSpec::of(cfg.stripe_threshold);
                 }
                 "shards" => cfg.shards = ShardSpec::parse(v)?,
+                "shards.map" => cfg.shard_map = ShardMapSpec::parse(v)?,
                 "engine_threads" => cfg.engine_threads = ThreadSpec::parse(v)?,
                 "collectives.algo" => cfg.collective_algo = CollectiveAlgo::parse(v)?,
                 "collectives.reduce" => {
@@ -589,7 +694,16 @@ impl Config {
                 w: mesh_w,
                 h: mesh_h,
             },
-            _ => bail!("topology must be ring|mesh|torus"),
+            "fat_tree" => Topology::FatTree {
+                arity: tree_arity,
+                levels: tree_levels,
+            },
+            "dragonfly" => Topology::Dragonfly {
+                groups: df_groups,
+                routers: df_routers,
+                globals: df_globals,
+            },
+            _ => bail!("topology must be ring|mesh|torus|fat_tree|dragonfly"),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -602,6 +716,9 @@ impl Config {
     pub fn validate(&mut self) -> Result<()> {
         if self.topology.nodes() == 0 {
             bail!("fabric needs at least one node");
+        }
+        if let Some(reason) = self.topology.invalid_reason() {
+            bail!("{reason}");
         }
         if self.packet_payload == 0 || self.packet_payload > 8192 {
             bail!("packet_payload must be in (0, 8192]");
@@ -648,10 +765,31 @@ impl Config {
                  (it is the conservative lookahead window)"
             );
         }
-        if self.topology.nodes() > 256 {
+        if let (ShardMapSpec::Explicit(table), Some(shards)) =
+            (&self.shard_map, self.shard_count())
+        {
+            let nodes = self.topology.nodes();
+            if table.len() != nodes as usize {
+                bail!(
+                    "shards.map lists {} nodes but the fabric has {nodes} \
+                     (one node->shard entry per node)",
+                    table.len()
+                );
+            }
+            if let Some(bad) = table.iter().find(|&&s| s >= shards) {
+                bail!("shards.map assigns shard {bad}, but shards = {shards}");
+            }
+            for s in 0..shards {
+                if !table.contains(&s) {
+                    bail!("shards.map leaves shard {s} without any nodes");
+                }
+            }
+        }
+        if self.topology.nodes() > crate::gasnet::ops::MAX_NODES {
             bail!(
-                "fabrics are limited to 256 nodes (op tokens encode the \
-                 owning node in 8 bits)"
+                "fabrics are limited to {} nodes (op tokens encode the \
+                 owning node in 11 bits)",
+                crate::gasnet::ops::MAX_NODES
             );
         }
         if self.host_wake.as_ps() % 1000 != 0 {
@@ -719,6 +857,21 @@ impl Config {
                 out.push_str("topology = torus\n");
                 let _ = writeln!(out, "mesh_w = {w}\nmesh_h = {h}");
             }
+            Topology::FatTree { arity, levels } => {
+                out.push_str("topology = fat_tree\n");
+                let _ = writeln!(out, "tree_arity = {arity}\ntree_levels = {levels}");
+            }
+            Topology::Dragonfly {
+                groups,
+                routers,
+                globals,
+            } => {
+                out.push_str("topology = dragonfly\n");
+                let _ = writeln!(
+                    out,
+                    "df_groups = {groups}\ndf_routers = {routers}\ndf_globals = {globals}"
+                );
+            }
         }
         let _ = writeln!(out, "packet_payload = {}", self.packet_payload);
         let _ = writeln!(out, "segment_mb = {}", self.segment_bytes >> 20);
@@ -733,6 +886,7 @@ impl Config {
         let _ = writeln!(out, "link_loss_permille = {}", self.link_loss_permille);
         let _ = writeln!(out, "stripe_threshold = {}", self.stripe_spec.as_cfg_value());
         let _ = writeln!(out, "shards = {}", self.shards.as_cfg_value());
+        let _ = writeln!(out, "shards.map = {}", self.shard_map.as_cfg_value());
         let _ = writeln!(
             out,
             "engine_threads = {}",
@@ -1031,6 +1185,130 @@ mod tests {
             assert_eq!(back.shards, cfg.shards);
             assert_eq!(back.to_cfg_string(), text);
         }
+    }
+
+    #[test]
+    fn shard_map_parses_validates_and_round_trips() {
+        // Spellings.
+        assert_eq!(
+            ShardMapSpec::parse("contiguous").unwrap(),
+            ShardMapSpec::Contiguous
+        );
+        assert_eq!(
+            ShardMapSpec::parse("balanced").unwrap(),
+            ShardMapSpec::Balanced
+        );
+        assert_eq!(
+            ShardMapSpec::parse("1, 0, 0, 1").unwrap(),
+            ShardMapSpec::Explicit(vec![1, 0, 0, 1])
+        );
+        assert!(ShardMapSpec::parse("zigzag").is_err());
+
+        // Balanced plan resolves through shard_plan.
+        let cfg =
+            Config::from_str_cfg("nodes = 8\nshards = 2\nshards.map = balanced\n")
+                .unwrap();
+        assert_eq!(cfg.shard_map, ShardMapSpec::Balanced);
+        let plan = cfg.shard_plan().unwrap();
+        assert_eq!(plan.shards(), 2);
+        assert!(!plan.is_contiguous(), "coordinator split away from bulk");
+
+        // Explicit tables are validated against the fabric.
+        let err = Config::from_str_cfg(
+            "nodes = 4\nshards = 2\nshards.map = 0,1,0\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("lists 3 nodes"), "{err}");
+        let err = Config::from_str_cfg(
+            "nodes = 4\nshards = 2\nshards.map = 0,1,0,5\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("assigns shard 5"), "{err}");
+        let err = Config::from_str_cfg(
+            "nodes = 4\nshards = 2\nshards.map = 0,0,0,0\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("shard 1 without any nodes"), "{err}");
+
+        // A map with shards = off is ignored (no plan to apply it to).
+        let off = Config::from_str_cfg("shards.map = balanced\n").unwrap();
+        assert!(off.shard_plan().is_none());
+
+        // Round trip: every spelling survives serialize -> parse.
+        for map in [
+            ShardMapSpec::Contiguous,
+            ShardMapSpec::Balanced,
+            ShardMapSpec::Explicit(vec![1, 0, 0, 1]),
+        ] {
+            let mut cfg = Config::ring(4)
+                .with_shards(ShardSpec::Count(2))
+                .with_shard_map(map.clone());
+            cfg.validate().unwrap();
+            let text = cfg.to_cfg_string();
+            let back = Config::from_str_cfg(&text).unwrap();
+            assert_eq!(back.shard_map, map, "{text}");
+            assert_eq!(back.to_cfg_string(), text);
+        }
+    }
+
+    #[test]
+    fn hierarchical_topologies_parse_validate_and_round_trip() {
+        // Presets validate.
+        Config::fat_tree(2, 3).validate().unwrap();
+        Config::dragonfly(3, 2, 1).validate().unwrap();
+
+        // File keys.
+        let cfg = Config::from_str_cfg(
+            "topology = fat_tree\ntree_arity = 2\ntree_levels = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology, Topology::FatTree { arity: 2, levels: 3 });
+        assert_eq!(cfg.topology.nodes(), 7);
+        let cfg = Config::from_str_cfg(
+            "topology = dragonfly\ndf_groups = 3\ndf_routers = 2\ndf_globals = 1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.topology,
+            Topology::Dragonfly { groups: 3, routers: 2, globals: 1 }
+        );
+        assert_eq!(cfg.topology.nodes(), 6);
+
+        // Shape errors surface through validate with the topology's words.
+        let err = Config::from_str_cfg(
+            "topology = fat_tree\ntree_arity = 1\ntree_levels = 3\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("arity"), "{err}");
+        let err = Config::from_str_cfg(
+            "topology = dragonfly\ndf_groups = 9\ndf_routers = 2\ndf_globals = 1\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("global"), "{err}");
+
+        // Round trip through the serializer.
+        for mut cfg in [Config::fat_tree(3, 3), Config::dragonfly(5, 2, 2)] {
+            cfg.validate().unwrap();
+            let text = cfg.to_cfg_string();
+            let back = Config::from_str_cfg(&text).unwrap();
+            assert_eq!(back.topology, cfg.topology);
+            assert_eq!(back.to_cfg_string(), text);
+        }
+    }
+
+    #[test]
+    fn node_limit_matches_op_token_encoding() {
+        // 2048 nodes (the op-token limit) is accepted; 2049 is not.
+        let mut ok = Config::ring(crate::gasnet::ops::MAX_NODES);
+        ok.validate().unwrap();
+        let mut over = Config::ring(crate::gasnet::ops::MAX_NODES + 1);
+        let err = over.validate().unwrap_err().to_string();
+        assert!(err.contains("11 bits"), "{err}");
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
 pub struct RunOptions {
     /// Fast mode: fewer sweep points, timing-only case study.
     pub fast: bool,
+    /// Large mode (`bench scaleout --large`): add the 1024-node torus
+    /// to the kilonode section (the 256-node floor always runs).
+    pub large: bool,
     /// Numerics override (`None` = each experiment's default: timing
     /// for the case study and the sequential scale-out sweep, software
     /// for the threaded scale-out comparison).
@@ -50,6 +53,7 @@ impl Default for RunOptions {
     fn default() -> Self {
         RunOptions {
             fast: false,
+            large: false,
             numerics: None,
             csv_out: None,
             shards: ShardSpec::Off,
@@ -174,6 +178,10 @@ fn run_scaleout(opts: &RunOptions) -> Result<String> {
     ));
     let cb_topo = scaleout::run_topologies(&cb, opts.shards, numerics);
     out.push_str(&reports::scaleout_topologies(&cb, &cb_topo));
+    // Kilonode fabrics: a 256-node torus always (the CI smoke floor,
+    // still present under --fast); --large adds the 1024-node torus.
+    let kilo = scaleout::run_kilonode(&case, opts.shards, opts.engine_threads, opts.large);
+    out.push_str(&reports::scaleout_kilonode(&kilo, opts.large));
     Ok(out)
 }
 
@@ -240,8 +248,17 @@ mod tests {
         let out = run_experiment("scaleout", &opts).unwrap();
         assert!(out.contains("topology sweep"), "{out}");
         assert!(out.contains("torus(3x3)"), "{out}");
+        assert!(out.contains("fat_tree(2,3)"), "{out}");
+        assert!(out.contains("dragonfly(3x2)"), "{out}");
         assert!(out.contains("communication-bound variant"), "{out}");
         assert!(out.contains("allreduce/iter"), "{out}");
+        // The kilonode smoke floor runs even under --fast; the 1024-node
+        // point stays behind --large.
+        assert!(out.contains("kilonode fabrics"), "{out}");
+        assert!(out.contains("torus(16x16)"), "{out}");
+        assert!(!out.contains("torus(32x32)"), "{out}");
+        assert!(out.contains("--large"), "{out}");
+        assert!(out.contains("wall (ms)"), "{out}");
     }
 
     #[test]

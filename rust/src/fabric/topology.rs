@@ -12,6 +12,17 @@
 //! * `Mesh2D { w, h }` / `Torus2D { w, h }` — 4 ports (E, W, N, S) with
 //!   dimension-ordered (X-then-Y) routing; the scale-out projection for
 //!   the paper's future 8-card server.
+//! * `FatTree { arity, levels }` — a complete `arity`-ary tree in which
+//!   every node (internal and leaf) is a compute node that also routes,
+//!   and every tree edge is **two parallel cables** (the same trick the
+//!   2-node ring plays with its QSFP+ pair): up/down routing through the
+//!   lowest common ancestor, with both cables of each hop reported as
+//!   equal-cost ports so striped transfers fan across them.
+//! * `Dragonfly { groups, routers, globals }` — the direct hierarchical
+//!   topology of large deployments: each group is an all-to-all clique of
+//!   `routers` nodes, each node additionally owns `globals` long cables,
+//!   and group pairs are joined by the consecutive global-link
+//!   assignment, giving minimal paths of at most local + global + local.
 
 use crate::memory::NodeId;
 
@@ -22,11 +33,22 @@ pub const PORT_W: PortId = 1;
 pub const PORT_N: PortId = 2;
 pub const PORT_S: PortId = 3;
 
+/// Parallel cables per fat-tree edge (mirrors the prototype's QSFP+
+/// pair): every child↔parent hop offers this many equal-cost ports.
+pub const FAT_TREE_CABLES: u8 = 2;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Topology {
     Ring(u32),
     Mesh2D { w: u32, h: u32 },
     Torus2D { w: u32, h: u32 },
+    /// Complete `arity`-ary tree with `levels` levels (level 0 = the
+    /// root); see the module docs. BFS numbering: node 0 is the root,
+    /// children of `i` are `i*arity + 1 ..= i*arity + arity`.
+    FatTree { arity: u32, levels: u32 },
+    /// `groups` all-to-all cliques of `routers` nodes each, every node
+    /// owning `globals` inter-group cables; see the module docs.
+    Dragonfly { groups: u32, routers: u32, globals: u32 },
 }
 
 impl Topology {
@@ -34,14 +56,75 @@ impl Topology {
         match *self {
             Topology::Ring(n) => n,
             Topology::Mesh2D { w, h } | Topology::Torus2D { w, h } => w * h,
+            Topology::FatTree { arity, levels } => {
+                (0..levels).fold(0, |acc, _| acc * arity + 1)
+            }
+            Topology::Dragonfly {
+                groups, routers, ..
+            } => groups * routers,
         }
     }
 
     pub fn ports_per_node(&self) -> u8 {
-        match self {
+        match *self {
             Topology::Ring(_) => 2,
             Topology::Mesh2D { .. } | Topology::Torus2D { .. } => 4,
+            // FAT_TREE_CABLES uplinks + arity down-edges of
+            // FAT_TREE_CABLES cables each.
+            Topology::FatTree { arity, .. } => {
+                FAT_TREE_CABLES + arity as u8 * FAT_TREE_CABLES
+            }
+            // (routers - 1) clique ports + `globals` long cables.
+            Topology::Dragonfly {
+                routers, globals, ..
+            } => (routers - 1) as u8 + globals as u8,
         }
+    }
+
+    /// Structural validity check (`None` = fine). [`crate::config::Config::validate`]
+    /// surfaces the reason as a config error.
+    pub fn invalid_reason(&self) -> Option<String> {
+        match *self {
+            Topology::Ring(_) | Topology::Mesh2D { .. } | Topology::Torus2D { .. } => None,
+            Topology::FatTree { arity, levels } => {
+                if arity < 2 {
+                    Some("fat_tree needs tree_arity >= 2".into())
+                } else if levels < 1 {
+                    Some("fat_tree needs tree_levels >= 1".into())
+                } else if arity as u64 * FAT_TREE_CABLES as u64 + FAT_TREE_CABLES as u64 > 255 {
+                    Some(format!("tree_arity {arity} needs more than 255 ports per node"))
+                } else {
+                    None
+                }
+            }
+            Topology::Dragonfly {
+                groups,
+                routers,
+                globals,
+            } => {
+                if groups < 1 || routers < 1 || globals < 1 {
+                    Some("dragonfly needs df_groups, df_routers, df_globals >= 1".into())
+                } else if routers as u64 - 1 + globals as u64 > 255 {
+                    Some(format!(
+                        "dragonfly router degree {} exceeds 255 ports per node",
+                        routers - 1 + globals
+                    ))
+                } else if groups > 1 && (groups - 1) as u64 > routers as u64 * globals as u64 {
+                    Some(format!(
+                        "dragonfly with {groups} groups needs df_routers * df_globals >= {} \
+                         so every group pair gets a global cable",
+                        groups - 1
+                    ))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Fat-tree parent in BFS numbering (`None` for the root).
+    fn ft_parent(arity: u32, node: u32) -> Option<u32> {
+        (node > 0).then(|| (node - 1) / arity)
     }
 
     /// The neighbor reached from `(node, port)`, if that port is wired.
@@ -77,6 +160,48 @@ impl Topology {
                     PORT_S => Some((to(x, (y + 1) % h), PORT_N)),
                     PORT_N => Some((to(x, (y + h - 1) % h), PORT_S)),
                     _ => None,
+                }
+            }
+            Topology::FatTree { arity, .. } => {
+                let cables = FAT_TREE_CABLES as u32;
+                let port = port as u32;
+                if port < cables {
+                    // Uplink cable `port` to the parent; its far end is the
+                    // parent's downlink cable for this child.
+                    let parent = Self::ft_parent(arity, node)?;
+                    let child_ix = node - (parent * arity + 1);
+                    Some((parent, (cables + child_ix * cables + port) as PortId))
+                } else {
+                    let child_ix = (port - cables) / cables;
+                    let cable = (port - cables) % cables;
+                    let child = node * arity + 1 + child_ix;
+                    (child < self.nodes()).then_some((child, cable as PortId))
+                }
+            }
+            Topology::Dragonfly {
+                groups,
+                routers,
+                globals,
+            } => {
+                let (grp, r) = (node / routers, node % routers);
+                let port = port as u32;
+                if port < routers - 1 {
+                    // Clique port p reaches router p, skipping self.
+                    let q = if port < r { port } else { port + 1 };
+                    let back = if r < q { r } else { r - 1 };
+                    Some((grp * routers + q, back as PortId))
+                } else {
+                    // Global cable: link index j of this group's
+                    // consecutive assignment; j enumerates the other
+                    // groups in order.
+                    let j = r * globals + (port - (routers - 1));
+                    if j >= groups - 1 {
+                        return None; // spare cable on small fabrics
+                    }
+                    let t = if j < grp { j } else { j + 1 };
+                    let q = if grp < t { grp } else { grp - 1 };
+                    let peer = t * routers + q / globals;
+                    Some((peer, (routers - 1 + q % globals) as PortId))
                 }
             }
         }
@@ -118,6 +243,46 @@ impl Topology {
                     let fwd = (dy + h - sy) % h;
                     let bwd = (sy + h - dy) % h;
                     Some(if fwd <= bwd { PORT_S } else { PORT_N })
+                }
+            }
+            Topology::FatTree { arity, .. } => {
+                // Down if src is an ancestor of dst, else up. Lift dst
+                // ancestor-by-ancestor; the last hop before reaching src's
+                // level names the child subtree to descend into.
+                let cables = FAT_TREE_CABLES as u32;
+                let mut cur = dst;
+                while cur > src {
+                    let parent = Self::ft_parent(arity, cur).expect("cur > src >= root");
+                    if parent == src {
+                        let child_ix = cur - (src * arity + 1);
+                        return Some((cables + child_ix * cables) as PortId);
+                    }
+                    cur = parent;
+                }
+                // dst is not below src (BFS numbering: descendants of src
+                // are all > src, and the lift above would have hit it).
+                Some(0) // first uplink cable
+            }
+            Topology::Dragonfly {
+                routers, globals, ..
+            } => {
+                let (sg, sr) = (src / routers, src % routers);
+                let (dg, dr) = (dst / routers, dst % routers);
+                let local = |to: u32| -> PortId {
+                    (if to < sr { to } else { to - 1 }) as PortId
+                };
+                if sg == dg {
+                    Some(local(dr))
+                } else {
+                    // The global cable to dst's group lives on router
+                    // j / globals of this group; hop there first.
+                    let j = if dg < sg { dg } else { dg - 1 };
+                    let owner = j / globals;
+                    if sr == owner {
+                        Some((routers - 1 + j % globals) as PortId)
+                    } else {
+                        Some(local(owner))
+                    }
                 }
             }
         }
@@ -269,11 +434,118 @@ mod tests {
     }
 
     #[test]
+    fn fat_tree_shape() {
+        let t = Topology::FatTree { arity: 2, levels: 3 };
+        assert_eq!(t.nodes(), 7, "1 + 2 + 4");
+        assert_eq!(t.ports_per_node(), 6, "2 uplinks + 2 children x 2 cables");
+        // Root's uplinks are unwired; its down-cables reach both children.
+        assert_eq!(t.neighbor(0, 0), None);
+        assert_eq!(t.neighbor(0, 2), Some((1, 0)));
+        assert_eq!(t.neighbor(0, 3), Some((1, 1)));
+        assert_eq!(t.neighbor(0, 4), Some((2, 0)));
+        // Leaves have no children.
+        assert_eq!(t.neighbor(3, 2), None);
+        assert_eq!(t.neighbor(3, 0), Some((1, 2)));
+        // Cross-subtree route goes up through the common ancestor.
+        assert_eq!(t.route(3, 4), Some(0), "up first");
+        assert_eq!(t.hops(3, 4), 2, "3 -> 1 -> 4");
+        assert_eq!(t.hops(3, 5), 4, "3 -> 1 -> 0 -> 2 -> 5");
+        // Down-route picks the right child subtree.
+        assert_eq!(t.route(0, 5), Some(4), "toward child 2");
+    }
+
+    #[test]
+    fn fat_tree_edges_are_parallel_cable_pairs() {
+        let t = Topology::FatTree { arity: 2, levels: 3 };
+        // Every hop (up and down) exposes both cables as equal cost.
+        assert_eq!(t.equal_cost_ports(3, 1), vec![0, 1], "both uplinks");
+        assert_eq!(t.equal_cost_ports(0, 2), vec![4, 5], "both downlinks");
+        // Multi-hop: the first hop of an up-then-down path still stripes.
+        assert_eq!(t.equal_cost_ports(3, 4), vec![0, 1]);
+    }
+
+    #[test]
+    fn dragonfly_shape() {
+        let t = Topology::Dragonfly {
+            groups: 3,
+            routers: 2,
+            globals: 1,
+        };
+        assert_eq!(t.nodes(), 6);
+        assert_eq!(t.ports_per_node(), 2, "1 clique port + 1 global");
+        // Node 0 = (g0, r0): clique port to r1, global cable j=0 -> g1.
+        assert_eq!(t.neighbor(0, 0), Some((1, 0)));
+        assert_eq!(t.neighbor(0, 1), Some((2, 1)), "g1 router 0's cable back");
+        // Node 1 = (g0, r1): its global j=1 -> g2.
+        assert_eq!(t.neighbor(1, 1), Some((4, 1)));
+        // Minimal paths: local <= 1, remote <= 3 (local, global, local).
+        for s in 0..t.nodes() {
+            for d in 0..t.nodes() {
+                assert!(t.hops(s, d) <= 3, "{s}->{d}");
+            }
+        }
+        // Remote route hops to the router owning the cable first.
+        assert_eq!(t.route(1, 2), Some(0), "g1's cable lives on router 0");
+        assert_eq!(t.route(0, 2), Some(1), "own cable: go global");
+    }
+
+    #[test]
+    fn dragonfly_spare_globals_are_unwired() {
+        // 2 groups, 2 routers x 1 global each: one cable pair suffices,
+        // the second router's global is a spare.
+        let t = Topology::Dragonfly {
+            groups: 2,
+            routers: 2,
+            globals: 1,
+        };
+        assert_eq!(t.neighbor(0, 1), Some((2, 1)));
+        assert_eq!(t.neighbor(1, 1), None, "j=1 >= groups-1");
+    }
+
+    #[test]
+    fn invalid_reasons() {
+        assert!(Topology::Ring(4).invalid_reason().is_none());
+        assert!(Topology::FatTree { arity: 1, levels: 2 }
+            .invalid_reason()
+            .is_some());
+        assert!(Topology::FatTree { arity: 2, levels: 0 }
+            .invalid_reason()
+            .is_some());
+        // Too many groups for the global cables available.
+        assert!(Topology::Dragonfly {
+            groups: 4,
+            routers: 2,
+            globals: 1
+        }
+        .invalid_reason()
+        .is_some());
+        assert!(Topology::Dragonfly {
+            groups: 3,
+            routers: 2,
+            globals: 1
+        }
+        .invalid_reason()
+        .is_none());
+    }
+
+    #[test]
     fn all_wired_ports_reciprocal() {
         for t in [
             Topology::Ring(4),
             Topology::Mesh2D { w: 3, h: 2 },
             Topology::Torus2D { w: 3, h: 3 },
+            Topology::FatTree { arity: 2, levels: 3 },
+            Topology::FatTree { arity: 3, levels: 3 },
+            Topology::Dragonfly {
+                groups: 3,
+                routers: 2,
+                globals: 1,
+            },
+            Topology::Dragonfly {
+                groups: 5,
+                routers: 2,
+                globals: 2,
+            },
         ] {
             for node in 0..t.nodes() {
                 for port in 0..t.ports_per_node() {
@@ -330,6 +602,18 @@ mod tests {
             Topology::Ring(6),
             Topology::Mesh2D { w: 4, h: 3 },
             Topology::Torus2D { w: 4, h: 4 },
+            Topology::FatTree { arity: 2, levels: 4 },
+            Topology::FatTree { arity: 3, levels: 3 },
+            Topology::Dragonfly {
+                groups: 4,
+                routers: 4,
+                globals: 1,
+            },
+            Topology::Dragonfly {
+                groups: 5,
+                routers: 2,
+                globals: 2,
+            },
         ] {
             for s in 0..t.nodes() {
                 for d in 0..t.nodes() {
@@ -353,6 +637,12 @@ mod tests {
             Topology::Ring(5),
             Topology::Mesh2D { w: 4, h: 3 },
             Topology::Torus2D { w: 3, h: 4 },
+            Topology::FatTree { arity: 2, levels: 4 },
+            Topology::Dragonfly {
+                groups: 6,
+                routers: 3,
+                globals: 2,
+            },
         ] {
             for s in 0..t.nodes() {
                 for d in 0..t.nodes() {

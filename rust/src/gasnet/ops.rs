@@ -22,8 +22,8 @@
 //!   bit 31      origin: 0 = host-issued, 1 = autonomous (handler-issued,
 //!               e.g. ART chunk transfers) — separate counter spaces, so
 //!               driver issue order and handler issue order never race
-//!   bits 30-23  owner node (fabrics up to 256 nodes)
-//!   bits 22-0   per-(node, origin) counter
+//!   bits 30-20  owner node (fabrics up to 2048 nodes)
+//!   bits 19-0   per-(node, origin) counter
 //! ```
 //!
 //! Ids assigned this way are identical across execution backends: the
@@ -38,8 +38,11 @@ use crate::sim::SimTime;
 pub type OpId = u32;
 
 const ORIGIN_BIT: u32 = 1 << 31;
-const NODE_SHIFT: u32 = 23;
+const NODE_SHIFT: u32 = 20;
 const CTR_MASK: u32 = (1 << NODE_SHIFT) - 1;
+
+/// Largest fabric an [`OpId`] can address (11 node bits).
+pub const MAX_NODES: u32 = (1 << (31 - NODE_SHIFT)) as u32;
 
 /// The node that issued (and owns) `id`.
 pub fn op_owner(id: OpId) -> u32 {
@@ -47,7 +50,7 @@ pub fn op_owner(id: OpId) -> u32 {
 }
 
 fn compose(auto: bool, node: u32, ctr: u32) -> OpId {
-    debug_assert!(node < 256, "OpId encodes 8 node bits");
+    debug_assert!(node < MAX_NODES, "OpId encodes 11 node bits");
     assert!(ctr <= CTR_MASK, "node {node} exhausted its op-id space");
     (if auto { ORIGIN_BIT } else { 0 }) | (node << NODE_SHIFT) | ctr
 }
@@ -298,5 +301,25 @@ mod tests {
         // Different nodes never collide.
         let mut t4 = OpTracker::new(4);
         assert_ne!(t4.issue(OpKind::Put, SimTime::ZERO, 0), host);
+    }
+
+    #[test]
+    fn kilonode_owners_do_not_alias() {
+        // Owners past the old 8-bit boundary round-trip through the
+        // token layout without colliding (the >256-node aliasing bug).
+        let mut ids = Vec::new();
+        for node in [0, 255, 256, 257, 1023, 1024, MAX_NODES - 1] {
+            let mut t = OpTracker::new(node);
+            let host = t.issue(OpKind::Put, SimTime::ZERO, 0);
+            let auto = t.issue_auto(OpKind::Put, SimTime::ZERO, 0);
+            assert_eq!(op_owner(host), node);
+            assert_eq!(op_owner(auto), node);
+            ids.push(host);
+            ids.push(auto);
+        }
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "tokens alias across owners");
     }
 }

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! fshmem info                         system + artifact status
-//! fshmem bench <experiment> [--fast] [--numerics timing|software|pjrt]
+//! fshmem bench <experiment> [--fast] [--large]
+//!                           [--numerics timing|software|pjrt]
 //!                           [--csv out.csv] [--shards auto|N|off]
 //!                           [--engine-threads auto|N|off]
 //! fshmem run [--config file.cfg]      demo put/get/AM round trip
@@ -49,6 +50,7 @@ fn main() -> Result<()> {
             };
             let opts = RunOptions {
                 fast: args.flag("fast"),
+                large: args.flag("large"),
                 numerics,
                 csv_out: args.opt("csv").map(String::from),
                 shards,
@@ -80,6 +82,8 @@ usage: fshmem <info|list|bench|run> [options]
                [--shards auto|N|off]          (sharded DES for SPMD experiments)
                [--engine-threads auto|N|off]  (scaleout: run the threaded DES
                                                and report seq-vs-par wall-clock)
+               [--large]                      (scaleout: add the 1024-node
+                                               torus to the kilonode section)
                (collectives: allreduce by algorithm x payload x topology,
                 reproduced on all three engine backends)
   run [--config file.cfg]   demo put/get/AM round trip";

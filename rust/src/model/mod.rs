@@ -356,38 +356,41 @@ pub struct WorldShared {
     backend: Option<Box<dyn ComputeBackend>>,
 }
 
-/// One shard's worth of world state: a contiguous node range plus the
-/// links those nodes send on.
+/// One shard's worth of world state: the nodes the shard plan assigns to
+/// this shard (a contiguous range under the default map, an arbitrary
+/// node set under `shards.map`) plus the links those nodes send on.
 pub struct ShardPart {
     id: u32,
-    first_node: u32,
+    /// The partition this part was built under (cheap to clone: the
+    /// non-contiguous table, if any, sits behind an `Arc`).
+    plan: ShardPlan,
+    /// Global ids of the owned nodes, ascending; parallel to `nodes`.
+    members: Vec<NodeId>,
     nodes: Vec<Node>,
     links: Vec<Link>,
 }
 
 impl ShardPart {
+    fn slot(&self, n: NodeId) -> usize {
+        assert!(
+            self.plan.shard_of(n) as u32 == self.id,
+            "partition invariant violated: node {n} is not owned by part {}",
+            self.id
+        );
+        self.plan.local_of(n) as usize
+    }
+
     /// This part's node, by global id. Panics if `n` belongs to another
     /// part — which would be a partition-invariant violation in the
     /// model, not a user error.
     pub fn node_mut(&mut self, n: NodeId) -> &mut Node {
-        assert!(
-            n >= self.first_node
-                && ((n - self.first_node) as usize) < self.nodes.len(),
-            "partition invariant violated: node {n} is not owned by part {}",
-            self.id
-        );
-        &mut self.nodes[(n - self.first_node) as usize]
+        let s = self.slot(n);
+        &mut self.nodes[s]
     }
 
     /// Immutable sibling of [`ShardPart::node_mut`].
     pub fn node(&self, n: NodeId) -> &Node {
-        assert!(
-            n >= self.first_node
-                && ((n - self.first_node) as usize) < self.nodes.len(),
-            "partition invariant violated: node {n} is not owned by part {}",
-            self.id
-        );
-        &self.nodes[(n - self.first_node) as usize]
+        &self.nodes[self.slot(n)]
     }
 }
 
@@ -396,7 +399,7 @@ impl ShardPart {
 /// off); behavior is identical for every layout — only the threaded
 /// engine exploits it.
 pub struct FshmemWorld {
-    shared: WorldShared,
+    shared: std::sync::Arc<WorldShared>,
     parts: Vec<ShardPart>,
     plan: ShardPlan,
 }
@@ -426,8 +429,10 @@ impl FshmemWorld {
         cfg.validate().expect("invalid config");
         let n_nodes = cfg.topology.nodes();
         let wiring = Wiring::new(cfg.topology);
-        let n_parts = cfg.shard_count().unwrap_or(1);
-        let plan = ShardPlan::partition(n_parts, n_nodes, cfg.link.propagation);
+        let plan = cfg
+            .shard_plan()
+            .unwrap_or_else(|| ShardPlan::partition(1, n_nodes, cfg.link.propagation));
+        let n_parts = plan.shards();
         let backend: Option<Box<dyn ComputeBackend>> = match cfg.numerics {
             Numerics::TimingOnly => None,
             Numerics::Software => Some(Box::new(SoftwareBackend)),
@@ -435,12 +440,13 @@ impl FshmemWorld {
         };
         let mut parts: Vec<ShardPart> = (0..n_parts)
             .map(|p| {
-                let (first, last) = plan.node_range(p);
+                let members = plan.shard_nodes(p);
                 ShardPart {
                     id: p,
-                    first_node: first,
-                    nodes: (first..=last)
-                        .map(|node| Node {
+                    plan: plan.clone(),
+                    nodes: members
+                        .iter()
+                        .map(|&node| Node {
                             core: GasnetCore::new(cfg.topology.ports_per_node()),
                             mem: NodeMemory::new(
                                 cfg.segment_bytes as usize,
@@ -460,6 +466,7 @@ impl FshmemWorld {
                             ),
                         })
                         .collect(),
+                    members,
                     links: Vec::new(),
                 }
             })
@@ -471,21 +478,25 @@ impl FshmemWorld {
             parts[p].links.push(Link::new(cfg.link));
         }
         FshmemWorld {
-            shared: WorldShared {
+            shared: std::sync::Arc::new(WorldShared {
                 router: Router::d5005(cfg.topology),
                 wiring,
                 link_loc,
                 backend,
                 cfg,
-            },
+            }),
             parts,
             plan,
         }
     }
 
-    /// Install a numerics backend (the PJRT path).
+    /// Install a numerics backend (the PJRT path). Must run before the
+    /// world is handed to an engine (the driver does; engines share the
+    /// context read-only afterwards).
     pub fn set_backend(&mut self, backend: Box<dyn ComputeBackend>) {
-        self.shared.backend = Some(backend);
+        std::sync::Arc::get_mut(&mut self.shared)
+            .expect("set_backend must run before the world is shared with an engine")
+            .backend = Some(backend);
     }
 
     /// Name of the installed numerics backend.
@@ -518,7 +529,9 @@ impl FshmemWorld {
         self.parts[p].node_mut(n)
     }
 
-    /// Iterate all nodes in global id order.
+    /// Iterate all nodes, grouped by owning shard (global id order under
+    /// the default contiguous map; an arbitrary-but-fixed order under
+    /// `shards.map`). Callers needing a global order sort explicitly.
     pub fn nodes_iter(&self) -> impl Iterator<Item = &Node> {
         self.parts.iter().flat_map(|p| p.nodes.iter())
     }
@@ -606,7 +619,7 @@ impl FshmemWorld {
         let mut all = Vec::new();
         for p in &mut self.parts {
             for (i, n) in p.nodes.iter_mut().enumerate() {
-                let node = p.first_node + i as u32;
+                let node = p.members[i];
                 for op in std::mem::take(&mut n.art_ops) {
                     all.push((node, op));
                 }
@@ -840,8 +853,16 @@ impl ParallelModel for FshmemWorld {
     type Shared = WorldShared;
     type Part = ShardPart;
 
-    fn split(&mut self) -> (&WorldShared, &mut [ShardPart]) {
-        (&self.shared, &mut self.parts)
+    fn shared(&self) -> std::sync::Arc<WorldShared> {
+        self.shared.clone()
+    }
+
+    fn take_parts(&mut self) -> Vec<ShardPart> {
+        std::mem::take(&mut self.parts)
+    }
+
+    fn restore_parts(&mut self, parts: Vec<ShardPart>) {
+        self.parts = parts;
     }
 
     fn event_node(shared: &WorldShared, event: &Event) -> u32 {

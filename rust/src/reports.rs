@@ -277,17 +277,6 @@ pub fn collectives(points: &[CollectivesPoint]) -> String {
 /// Topology sweep of the scale-out kernel (weak scaling — see
 /// [`crate::workloads::scaleout::run_topologies`]).
 pub fn scaleout_topologies(case: &ScaleoutCase, rows: &[TopoRow]) -> String {
-    let table_rows: Vec<Vec<String>> = rows
-        .iter()
-        .map(|r| {
-            vec![
-                r.label.to_string(),
-                r.nodes.to_string(),
-                f(r.elapsed.as_us(), 1),
-                f(r.elapsed.as_us() / r.nodes as f64, 2),
-            ]
-        })
-        .collect();
     format!(
         "\ntopology sweep (weak scaling, {} jobs/node, {} KiB {}/iter):\n{}",
         (case.total_jobs / 8).max(1),
@@ -296,8 +285,48 @@ pub fn scaleout_topologies(case: &ScaleoutCase, rows: &[TopoRow]) -> String {
             Exchange::Halo => "ring halo",
             Exchange::Allreduce => "allreduce",
         },
-        table::render(&["Topology", "Nodes", "T (us)", "T/node (us)"], &table_rows)
+        topo_table(rows)
     )
+}
+
+/// The shared topology-row table (simulated time + host wall-clock).
+fn topo_table(rows: &[TopoRow]) -> String {
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.to_string(),
+                r.nodes.to_string(),
+                f(r.elapsed.as_us(), 1),
+                f(r.elapsed.as_us() / r.nodes as f64, 2),
+                format!("{:.0}", r.wall.as_secs_f64() * 1e3),
+            ]
+        })
+        .collect();
+    table::render(
+        &["Topology", "Nodes", "T (us)", "T/node (us)", "wall (ms)"],
+        &table_rows,
+    )
+}
+
+/// Kilonode torus points of the scale-out experiment: the 256-node CI
+/// smoke floor, plus the 1024-node torus when `--large` asked for it.
+pub fn scaleout_kilonode(rows: &[TopoRow], large: bool) -> String {
+    let mut out = format!(
+        "\nkilonode fabrics (weak scaling, 1 job/node, timing-only):\n{}",
+        topo_table(rows)
+    );
+    if !large {
+        out.push_str("(run with --large for the 1024-node torus point)\n");
+    }
+    if let Some(sh) = rows.last().and_then(|r| r.shards.as_ref()) {
+        out.push_str(&format!(
+            "largest fabric advanced {} windows across {} shards\n",
+            sh.windows,
+            sh.shards.len()
+        ));
+    }
+    out
 }
 
 /// Scale-out under concurrent SPMD issue: speedup vs node count, plus
@@ -323,6 +352,8 @@ pub fn scaleout(case: &ScaleoutCase, rows: &[ScaleoutRow]) -> String {
                     }
                     None => cols.extend(["-".into(), "-".into(), "-".into()]),
                 }
+            } else {
+                cols.push(format!("{:.0}", r.wall.as_secs_f64() * 1e3));
             }
             cols
         })
@@ -338,7 +369,7 @@ pub fn scaleout(case: &ScaleoutCase, rows: &[ScaleoutRow]) -> String {
             "wall speedup",
         ]
     } else {
-        &["Nodes", "T (us)", "Speedup", "Efficiency"]
+        &["Nodes", "T (us)", "Speedup", "Efficiency", "wall (ms)"]
     };
     let mut out = format!(
         "Scale-out (SPMD concurrent issue): {} x {}^3 matmul jobs, {} KiB {}/iter\n{}",

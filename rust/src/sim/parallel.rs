@@ -3,12 +3,11 @@
 //!
 //! Structure is identical to the sequential sharded backend
 //! ([`super::shard`]): per-shard event queues, conservative time windows
-//! of one lookahead `L`, cross-shard events buffered in timestamped
-//! channels and drained at window boundaries. The difference is *who
-//! advances the shards inside a window*: here every shard **free-runs to
-//! the window horizon on a worker thread** (scoped threads, no
-//! `unsafe`), instead of a single thread advancing the globally smallest
-//! event.
+//! of one lookahead `L`, cross-shard events buffered in per-lane outboxes
+//! and drained at window boundaries. The difference is *who advances the
+//! shards inside a window*: here every shard **free-runs to the window
+//! horizon on a pool worker**, instead of a single thread advancing the
+//! globally smallest event.
 //!
 //! ## What is preserved, what is relaxed
 //!
@@ -41,18 +40,34 @@
 //! causal — and, because `host_wake` is part of the *model* (applied by
 //! every backend), timestamps still match the sequential run exactly.
 //!
-//! ## Cost model
+//! ## Cost model (the persistent pool)
 //!
-//! Worker threads are spawned per window (scoped — the borrow checker
-//! proves part disjointness; nothing outlives the window). A window is
-//! therefore worth parallelizing when its events carry real work:
-//! numerics-bearing workloads (`Numerics::Software` DLA jobs) scale near
-//! the shard count, while pure timing-only event streams are dominated
-//! by per-window spawn overhead and usually run *slower* than
-//! `engine_threads = off`. `bench scaleout --engine-threads auto`
-//! measures both and prints the comparison; see the "Sharded engine"
-//! notes in `rust/README.md` for guidance.
+//! Workers are spawned **once**, at engine construction, and live for
+//! the engine's lifetime; each window hands every worker its lane
+//! packages over a channel and collects them back at the barrier. The
+//! marginal cost of a window is therefore two channel messages per
+//! worker — not a thread spawn — and every per-lane buffer (the event
+//! queue, the scratch counters, the schedule buffer, the cross-shard
+//! outbox) is owned by its lane and keeps its capacity across windows,
+//! so steady-state windows allocate nothing. This is what lets pure
+//! timing-only event streams — whose windows carry thousands of cheap
+//! events — come out ahead of `engine_threads = off` too, where the old
+//! spawn-per-window design only paid off for numerics-bearing workloads
+//! (`Numerics::Software` DLA jobs). `bench scaleout --engine-threads
+//! auto` measures both and prints the comparison; see the "Sharded
+//! engine" notes in `rust/README.md` for guidance.
+//!
+//! Lanes move to workers by value and come back at the barrier, so part
+//! disjointness is proven by ownership — still no locks, no `unsafe`.
+//! Between windows the parts are restored into the model
+//! ([`ParallelModel::restore_parts`]), so drivers observe a whole model
+//! at every boundary. A worker panic (e.g. a conservative-lookahead
+//! violation) is forwarded to the engine thread and re-raised there.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::counters::Counters;
@@ -67,17 +82,25 @@ use super::time::SimTime;
 /// The contract mirrors the partition invariant the sharded backends
 /// already rely on: handling an event owned by shard *s* touches only
 /// part *s* (plus the immutable shared context). Here the type system
-/// enforces it — `handle_part` receives exactly one part mutably.
+/// enforces it — `handle_part` receives exactly one part mutably, and
+/// parts travel to pool workers by value.
 pub trait ParallelModel: Model {
     /// Immutable context every worker may read (config, wiring, routing
-    /// tables, numerics backend).
-    type Shared: Sync;
+    /// tables, numerics backend). Shared with workers behind an [`Arc`].
+    type Shared: Send + Sync + 'static;
     /// One shard's worth of mutable state.
-    type Part: Send;
+    type Part: Send + 'static;
 
-    /// Split the model into the shared context and its per-shard parts.
-    /// Part order must match the [`ShardPlan`] shard order.
-    fn split(&mut self) -> (&Self::Shared, &mut [Self::Part]);
+    /// The shared read-only context (cheap: an `Arc` clone).
+    fn shared(&self) -> Arc<Self::Shared>;
+
+    /// Move the per-shard parts out of the model for a window. Part
+    /// order must match the [`ShardPlan`] shard order.
+    fn take_parts(&mut self) -> Vec<Self::Part>;
+
+    /// Put the parts back after a window, in the same order
+    /// [`ParallelModel::take_parts`] produced them.
+    fn restore_parts(&mut self, parts: Vec<Self::Part>);
 
     /// The node whose state `event` touches (the partition key), derived
     /// from the shared context only — workers have no `&self`.
@@ -96,29 +119,54 @@ pub trait ParallelModel: Model {
     );
 }
 
-/// One shard's working set for a window, handed to a worker thread.
-struct Lane<'a, M: ParallelModel> {
+/// One shard's persistent working set. Owned (not borrowed) so it can
+/// move to a pool worker for the duration of a window and come back at
+/// the barrier; its buffers keep their capacity across windows.
+struct Lane<M: ParallelModel> {
     shard: usize,
-    queue: &'a mut EventQueue<M::Event>,
-    part: &'a mut M::Part,
-    counters: &'a mut Counters,
-    ctrs: &'a mut StreamCtrs,
-    stats: &'a mut ShardStats,
-    /// Cross-shard events produced this window: `(dst shard, at, key, event)`.
+    queue: EventQueue<M::Event>,
+    /// The model's part — present during a window (and in the instant
+    /// between `take_parts` and the barrier), `None` between windows
+    /// when the part lives in the model.
+    part: Option<M::Part>,
+    counters: Counters,
+    ctrs: StreamCtrs,
+    stats: ShardStats,
+    /// Reused schedule buffer for `handle_part` (drained every event).
+    sched: Sched<M::Event>,
+    /// Cross-shard events produced this window: `(dst shard, at, key,
+    /// event)`. Drained — not freed — at the barrier.
     outbox: Vec<(usize, SimTime, SeqKey, M::Event)>,
     /// Timestamp of this lane's last pop this window.
     last_pop: SimTime,
 }
 
-/// Free-run one shard to the window horizon (runs on a worker thread).
+impl<M: ParallelModel> Lane<M> {
+    fn new(shard: usize) -> Self {
+        Lane {
+            shard,
+            queue: EventQueue::new(),
+            part: None,
+            counters: Counters::new(),
+            ctrs: StreamCtrs::new(),
+            stats: ShardStats::default(),
+            sched: Sched::new(),
+            outbox: Vec::new(),
+            last_pop: SimTime::ZERO,
+        }
+    }
+}
+
+/// Free-run one shard to the window horizon (runs on a pool worker, or
+/// inline when the engine is single-threaded).
 fn run_lane<M: ParallelModel>(
     shared: &M::Shared,
     plan: &ShardPlan,
-    lane: &mut Lane<'_, M>,
+    lane: &mut Lane<M>,
     horizon: SimTime,
 ) {
     let t0 = Instant::now();
-    let mut sched: Sched<M::Event> = Sched::new();
+    let mut part = lane.part.take().expect("lane holds its part during a window");
     loop {
         match lane.queue.peek_key() {
             Some((at, _)) if at < horizon => {}
@@ -127,11 +175,11 @@ fn run_lane<M: ParallelModel>(
         let (now, event) = lane.queue.pop().expect("peeked head");
         lane.stats.events += 1;
         lane.last_pop = now;
-        sched.now = now;
+        lane.sched.now = now;
         let src = M::event_node(shared, &event);
-        M::handle_part(shared, lane.part, now, event, &mut sched, lane.counters);
+        M::handle_part(shared, &mut part, now, event, &mut lane.sched, &mut lane.counters);
         let stream = handler_stream(src);
-        for (at, ev) in sched.buf.drain(..) {
+        for (at, ev) in lane.sched.buf.drain(..) {
             let key = lane.ctrs.next(stream);
             let dst = plan.shard_of(M::event_node(shared, &ev));
             if dst == lane.shard {
@@ -148,14 +196,56 @@ fn run_lane<M: ParallelModel>(
             }
         }
     }
+    lane.part = Some(part);
     lane.stats.busy_ns += t0.elapsed().as_nanos() as u64;
 }
 
+/// One window's worth of work for one pool worker.
+struct Job<M: ParallelModel> {
+    shared: Arc<M::Shared>,
+    plan: ShardPlan,
+    horizon: SimTime,
+    lanes: Vec<Lane<M>>,
+}
+
+/// What a worker sends back: its lanes, or the payload of a panic that
+/// interrupted them (re-raised on the engine thread).
+type Reply<M> = Result<Vec<Lane<M>>, Box<dyn std::any::Any + Send + 'static>>;
+
+fn worker_loop<M: ParallelModel>(jobs: Receiver<Job<M>>, replies: Sender<Reply<M>>) {
+    while let Ok(mut job) = jobs.recv() {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            for lane in job.lanes.iter_mut() {
+                run_lane::<M>(&job.shared, &job.plan, lane, job.horizon);
+            }
+        }));
+        match outcome {
+            Ok(()) => {
+                if replies.send(Ok(job.lanes)).is_err() {
+                    return; // engine gone
+                }
+            }
+            Err(payload) => {
+                let _ = replies.send(Err(payload));
+                return;
+            }
+        }
+    }
+}
+
+/// A pool worker: its job channel plus the handle joined on drop.
+struct Worker<M: ParallelModel> {
+    jobs: Sender<Job<M>>,
+    handle: JoinHandle<()>,
+}
+
 /// The threaded DES engine: a [`ParallelModel`] advanced window-by-window
-/// by a pool of scoped worker threads. API mirrors [`super::Engine`];
-/// `step()` processes one whole window.
+/// by a persistent pool of worker threads (spawned once, fed one window
+/// at a time over channels). API mirrors [`super::Engine`]; `step()`
+/// processes one whole window.
 pub struct ParEngine<M: ParallelModel> {
-    /// The simulated system (whole between windows; split during them).
+    /// The simulated system (whole between windows; its parts ride the
+    /// lanes during them).
     pub model: M,
     /// Merged measurement registry. Monotonic counters are exact;
     /// latency-sample buffers append in (window, shard) order, which is
@@ -164,11 +254,10 @@ pub struct ParEngine<M: ParallelModel> {
     pub counters: Counters,
     plan: ShardPlan,
     threads: u32,
-    queues: Vec<EventQueue<M::Event>>,
-    shard_counters: Vec<Counters>,
-    handler_ctrs: Vec<StreamCtrs>,
+    lanes: Vec<Lane<M>>,
+    pool: Vec<Worker<M>>,
+    replies: Receiver<Reply<M>>,
     inject_ctrs: StreamCtrs,
-    stats: Vec<ShardStats>,
     windows: u64,
     window_wall_ns: u64,
     /// Horizon of the last executed window (injections while events are
@@ -178,31 +267,54 @@ pub struct ParEngine<M: ParallelModel> {
     events_processed: u64,
 }
 
-impl<M: ParallelModel> ParEngine<M>
+impl<M> ParEngine<M>
 where
-    M::Event: Send,
+    M: ParallelModel + 'static,
+    M::Event: Send + 'static,
 {
     /// A threaded engine over `plan` using up to `threads` workers
     /// (clamped to the shard count; at least 1). The model's part count
-    /// must match the plan's shard count.
+    /// must match the plan's shard count. Workers are spawned here and
+    /// live until the engine drops; a single-threaded engine spawns none
+    /// and runs its lanes inline.
     pub fn new(mut model: M, plan: ShardPlan, threads: u32) -> Self {
         assert!(
             plan.lookahead() > SimTime::ZERO,
             "conservative windows need positive lookahead"
         );
         let n = plan.shards() as usize;
-        let parts = model.split().1.len();
-        assert_eq!(parts, n, "model has {parts} parts but the plan wants {n}");
+        let parts = model.take_parts();
+        assert_eq!(
+            parts.len(),
+            n,
+            "model has {} parts but the plan wants {n}",
+            parts.len()
+        );
+        model.restore_parts(parts);
+        let threads = threads.clamp(1, n as u32);
+        let (reply_tx, replies) = channel();
+        let pool = if threads > 1 {
+            (0..threads)
+                .map(|_| {
+                    let (jobs, job_rx) = channel();
+                    let tx = reply_tx.clone();
+                    let handle =
+                        std::thread::spawn(move || worker_loop::<M>(job_rx, tx));
+                    Worker { jobs, handle }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         ParEngine {
             model,
             counters: Counters::new(),
             plan,
-            threads: threads.clamp(1, n as u32),
-            queues: (0..n).map(|_| EventQueue::new()).collect(),
-            shard_counters: (0..n).map(|_| Counters::new()).collect(),
-            handler_ctrs: (0..n).map(|_| StreamCtrs::new()).collect(),
+            threads,
+            lanes: (0..n).map(Lane::new).collect(),
+            pool,
+            replies,
             inject_ctrs: StreamCtrs::new(),
-            stats: vec![ShardStats::default(); n],
             windows: 0,
             window_wall_ns: 0,
             horizon: SimTime::ZERO,
@@ -231,19 +343,21 @@ where
     /// Per-shard advance statistics (always available — this backend is
     /// sharded by construction).
     pub fn sharding(&self) -> Option<ShardingReport> {
+        let stats: Vec<ShardStats> =
+            self.lanes.iter().map(|l| l.stats.clone()).collect();
         Some(report_from(
             &self.plan,
             self.plan.lookahead(),
             self.windows,
             self.threads,
             self.window_wall_ns,
-            &self.stats,
+            &stats,
         ))
     }
 
     /// True when no events are pending anywhere.
     pub fn is_empty(&self) -> bool {
-        self.queues.iter().all(|q| q.is_empty())
+        self.lanes.iter().all(|l| l.queue.is_empty())
     }
 
     /// Inject an event at an absolute time, drawing from the target
@@ -280,16 +394,16 @@ where
         let node = self.model.shard_node(&event);
         let key = self.inject_ctrs.next(inject_stream(node));
         let dst = self.plan.shard_of(node);
-        self.queues[dst].schedule_at_key(at, key, event);
+        self.lanes[dst].queue.schedule_at_key(at, key, event);
     }
 
     /// Process one conservative window across all shards in parallel.
     /// Returns false when every queue is drained.
     pub fn step(&mut self) -> bool {
         let t_min = match self
-            .queues
+            .lanes
             .iter()
-            .filter_map(|q| q.peek_key())
+            .filter_map(|l| l.queue.peek_key())
             .map(|(at, _)| at)
             .min()
         {
@@ -299,74 +413,93 @@ where
         let horizon = t_min + self.plan.lookahead();
         self.horizon = horizon;
         self.windows += 1;
-        let plan = self.plan;
 
-        let (shared, parts) = self.model.split();
-        let mut lanes: Vec<Lane<'_, M>> = self
-            .queues
-            .iter_mut()
-            .zip(parts.iter_mut())
-            .zip(self.shard_counters.iter_mut())
-            .zip(self.handler_ctrs.iter_mut())
-            .zip(self.stats.iter_mut())
-            .enumerate()
-            .map(|(i, ((((queue, part), counters), ctrs), stats))| Lane {
-                shard: i,
-                queue,
-                part,
-                counters,
-                ctrs,
-                stats,
-                outbox: Vec::new(),
-                last_pop: SimTime::ZERO,
-            })
-            .collect();
+        // Hand each lane its part for the window.
+        let parts = self.model.take_parts();
+        debug_assert_eq!(parts.len(), self.lanes.len());
+        for (lane, part) in self.lanes.iter_mut().zip(parts) {
+            lane.part = Some(part);
+            lane.last_pop = SimTime::ZERO;
+        }
+        let shared = self.model.shared();
 
         let wall = Instant::now();
-        // Distribute lanes over exactly `threads` workers (balanced:
-        // the first `len % threads` workers take one extra lane) —
-        // `chunks_mut(ceil)` would spawn fewer workers than configured
-        // whenever the counts don't divide evenly.
-        let workers = self.threads as usize;
-        let base = lanes.len() / workers;
-        let extra = lanes.len() % workers;
-        std::thread::scope(|s| {
-            let mut rest = lanes.as_mut_slice();
-            for w in 0..workers {
-                let take = base + usize::from(w < extra);
-                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
-                rest = tail;
-                s.spawn(move || {
-                    for lane in chunk.iter_mut() {
-                        run_lane::<M>(shared, &plan, lane, horizon);
-                    }
-                });
+        if self.pool.is_empty() {
+            for lane in self.lanes.iter_mut() {
+                run_lane::<M>(&shared, &self.plan, lane, horizon);
             }
-        });
+        } else {
+            // Distribute lanes over exactly `threads` workers (balanced:
+            // the first `len % threads` workers take one extra lane).
+            let n = self.lanes.len();
+            let workers = self.pool.len();
+            let base = n / workers;
+            let extra = n % workers;
+            let mut rest = std::mem::take(&mut self.lanes);
+            let mut sent = 0usize;
+            for (w, worker) in self.pool.iter().enumerate() {
+                let take = base + usize::from(w < extra);
+                if take == 0 {
+                    continue;
+                }
+                let tail = rest.split_off(take);
+                let chunk = std::mem::replace(&mut rest, tail);
+                worker
+                    .jobs
+                    .send(Job {
+                        shared: shared.clone(),
+                        plan: self.plan.clone(),
+                        horizon,
+                        lanes: chunk,
+                    })
+                    .expect("pool worker alive");
+                sent += 1;
+            }
+            debug_assert!(rest.is_empty());
+            // Window barrier: collect every chunk back, in whatever
+            // order workers finish; reassemble by shard id.
+            let mut slots: Vec<Option<Lane<M>>> = (0..n).map(|_| None).collect();
+            for _ in 0..sent {
+                match self.replies.recv().expect("pool worker alive") {
+                    Ok(chunk) => {
+                        for lane in chunk {
+                            let s = lane.shard;
+                            slots[s] = Some(lane);
+                        }
+                    }
+                    Err(payload) => resume_unwind(payload),
+                }
+            }
+            self.lanes = slots
+                .into_iter()
+                .map(|s| s.expect("every shard came back from the pool"))
+                .collect();
+        }
         self.window_wall_ns += wall.elapsed().as_nanos() as u64;
 
         // Window barrier: account the window, then drain every outbox
         // into its destination queue (deterministic: heap order is total
-        // over (time, key), so merge order is irrelevant).
-        let mut outboxes = Vec::with_capacity(lanes.len());
-        for lane in &mut lanes {
-            if lane.last_pop > self.last_event {
-                self.last_event = lane.last_pop;
+        // over (time, key), so merge order is irrelevant). `take`/put-back
+        // keeps each outbox's capacity with its lane.
+        for i in 0..self.lanes.len() {
+            if self.lanes[i].last_pop > self.last_event {
+                self.last_event = self.lanes[i].last_pop;
             }
-            outboxes.push(std::mem::take(&mut lane.outbox));
-        }
-        drop(lanes);
-        for outbox in outboxes {
-            for (dst, at, key, ev) in outbox {
+            let mut outbox = std::mem::take(&mut self.lanes[i].outbox);
+            for (dst, at, key, ev) in outbox.drain(..) {
                 debug_assert!(at >= horizon, "outbox held an in-window event");
-                self.stats[dst].recv_cross += 1;
-                self.queues[dst].schedule_at_key(at, key, ev);
+                self.lanes[dst].stats.recv_cross += 1;
+                self.lanes[dst].queue.schedule_at_key(at, key, ev);
             }
+            self.lanes[i].outbox = outbox;
         }
-        for sc in self.shard_counters.iter_mut() {
-            self.counters.merge_from(sc);
+        let mut parts = Vec::with_capacity(self.lanes.len());
+        for lane in self.lanes.iter_mut() {
+            self.counters.merge_from(&mut lane.counters);
+            parts.push(lane.part.take().expect("window returned the part"));
         }
-        self.events_processed = self.stats.iter().map(|s| s.events).sum();
+        self.model.restore_parts(parts);
+        self.events_processed = self.lanes.iter().map(|l| l.stats.events).sum();
         true
     }
 
@@ -408,6 +541,18 @@ where
     }
 }
 
+impl<M: ParallelModel> Drop for ParEngine<M> {
+    /// Close every job channel, then join the workers (idle workers exit
+    /// on the closed channel; a worker that already panicked has sent
+    /// its payload and returned, so joins never themselves panic).
+    fn drop(&mut self) {
+        for w in std::mem::take(&mut self.pool) {
+            drop(w.jobs);
+            let _ = w.handle.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,14 +567,16 @@ mod tests {
         hops: u32,
     }
 
+    #[derive(Default)]
     struct RelayPart {
-        first_node: u32,
+        /// Global ids of the owned nodes; parallel to `logs`.
+        members: Vec<u32>,
         /// Per owned node: the (time, id) hop log.
         logs: Vec<Vec<(SimTime, u32)>>,
     }
 
     struct PRelay {
-        shared: RelayShared,
+        shared: Arc<RelayShared>,
         parts: Vec<RelayPart>,
         plan: ShardPlan,
     }
@@ -438,29 +585,41 @@ mod tests {
         fn new(nodes: u32, cross_ns: u64, shards: u32) -> Self {
             let plan =
                 ShardPlan::partition(shards, nodes, SimTime::from_ns(cross_ns));
-            let parts = (0..shards)
+            Self::with_plan(nodes, cross_ns, plan)
+        }
+
+        fn with_plan(nodes: u32, cross_ns: u64, plan: ShardPlan) -> Self {
+            let parts = (0..plan.shards())
                 .map(|s| {
-                    let (first, last) = plan.node_range(s);
+                    let members = plan.shard_nodes(s);
                     RelayPart {
-                        first_node: first,
-                        logs: (first..=last).map(|_| Vec::new()).collect(),
+                        logs: members.iter().map(|_| Vec::new()).collect(),
+                        members,
                     }
                 })
                 .collect();
             PRelay {
-                shared: RelayShared {
+                shared: Arc::new(RelayShared {
                     nodes,
                     cross: SimTime::from_ns(cross_ns),
                     hops: 12,
-                },
+                }),
                 parts,
                 plan,
             }
         }
 
-        /// Per-node logs in node order (backend-independent observable).
+        /// Per-node logs in global node order (backend-independent
+        /// observable, whatever the shard map).
         fn logs(&self) -> Vec<Vec<(SimTime, u32)>> {
-            self.parts.iter().flat_map(|p| p.logs.clone()).collect()
+            let nodes = self.shared.nodes as usize;
+            let mut out = vec![Vec::new(); nodes];
+            for p in &self.parts {
+                for (i, &n) in p.members.iter().enumerate() {
+                    out[n as usize] = p.logs[i].clone();
+                }
+            }
+            out
         }
     }
 
@@ -487,8 +646,16 @@ mod tests {
         type Shared = RelayShared;
         type Part = RelayPart;
 
-        fn split(&mut self) -> (&RelayShared, &mut [RelayPart]) {
-            (&self.shared, &mut self.parts)
+        fn shared(&self) -> Arc<RelayShared> {
+            self.shared.clone()
+        }
+
+        fn take_parts(&mut self) -> Vec<RelayPart> {
+            std::mem::take(&mut self.parts)
+        }
+
+        fn restore_parts(&mut self, parts: Vec<RelayPart>) {
+            self.parts = parts;
         }
 
         fn event_node(_shared: &RelayShared, ev: &(u32, u32)) -> u32 {
@@ -503,7 +670,12 @@ mod tests {
             sched: &mut Sched<(u32, u32)>,
             c: &mut Counters,
         ) {
-            part.logs[(node - part.first_node) as usize].push((now, id));
+            let slot = part
+                .members
+                .iter()
+                .position(|&m| m == node)
+                .expect("partition invariant");
+            part.logs[slot].push((now, id));
             c.incr("fired");
             c.record_latency("hop", SimTime::from_ns(id as u64));
             if id < shared.hops {
@@ -565,6 +737,44 @@ mod tests {
     }
 
     #[test]
+    fn mapped_plans_match_sequential_too() {
+        let mut mono = Engine::new(PRelay::new(4, 100, 1));
+        mono.inject_at(SimTime::from_ns(3), (0, 0));
+        mono.inject_at(SimTime::from_ns(3), (2, 0));
+        let mono_end = mono.run_to_quiescence();
+
+        let tables: [&[u32]; 3] = [&[0, 1, 0, 1], &[1, 0, 0, 1], &[2, 0, 1, 0]];
+        for table in tables {
+            for threads in [1u32, 2] {
+                let shards = *table.iter().max().unwrap() + 1;
+                let plan = ShardPlan::with_table(
+                    shards,
+                    4,
+                    SimTime::from_ns(100),
+                    table.to_vec(),
+                );
+                let model = PRelay::with_plan(4, 100, plan.clone());
+                let mut par = ParEngine::new(model, plan, threads);
+                par.inject_at(SimTime::from_ns(3), (0, 0));
+                par.inject_at(SimTime::from_ns(3), (2, 0));
+                let end = par.run_to_quiescence();
+                let label = format!("map {table:?} / {threads} threads");
+                assert_eq!(end, mono_end, "{label}: end time");
+                assert_eq!(
+                    par.model.logs(),
+                    mono.model.logs(),
+                    "{label}: per-node hop logs"
+                );
+                assert_eq!(
+                    par.counters.get("fired"),
+                    mono.counters.get("fired"),
+                    "{label}: counters"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn reports_thread_count_and_busy_stats() {
         let model = PRelay::new(4, 100, 4);
         let plan = ShardPlan::new(4, 4, SimTime::from_ns(100));
@@ -592,10 +802,29 @@ mod tests {
     }
 
     #[test]
+    fn pool_survives_many_windows_and_reinjection() {
+        // Drive the same engine through several quiescence/restart
+        // cycles: the pool must stay live and the lanes' buffers must
+        // keep working across timeline restarts.
+        let model = PRelay::new(4, 100, 4);
+        let plan = ShardPlan::new(4, 4, SimTime::from_ns(100));
+        let mut par = ParEngine::new(model, plan, 4);
+        let mut end = SimTime::ZERO;
+        for round in 0..3u64 {
+            par.inject_at(end + SimTime::from_ns(3), (round as u32 % 4, 0));
+            end = par.run_to_quiescence();
+            assert!(par.is_empty());
+        }
+        assert!(par.events_processed() > 0);
+        assert!(par.sharding().unwrap().windows > 0);
+    }
+
+    #[test]
     #[should_panic(expected = "conservative lookahead violated")]
     fn lookahead_violation_fails_loudly() {
         // Real cross-node delay 10 ns under a claimed 100 ns lookahead:
-        // the first crossing lands inside the open window.
+        // the first crossing lands inside the open window. The panic is
+        // raised on a pool worker and re-raised on the engine thread.
         let model = PRelay::new(4, 10, 2);
         let plan = ShardPlan::new(2, 4, SimTime::from_ns(100));
         let mut par = ParEngine::new(model, plan, 2);

@@ -44,17 +44,69 @@
 //! same causal keys, letting each shard free-run to the horizon on a
 //! worker thread.
 
+use std::sync::Arc;
+
 use super::engine::Model;
 use super::queue::{EventQueue, SeqKey};
 use super::time::SimTime;
 
+/// Non-contiguous node→shard assignment, precomputed both ways. Shared
+/// behind an `Arc` because the threaded backend clones the plan per
+/// window.
+#[derive(Debug, PartialEq, Eq)]
+struct ShardMap {
+    /// `shard_of[node]` = owning shard.
+    shard_of: Vec<u32>,
+    /// `local_of[node]` = the node's slot within its shard (nodes of a
+    /// shard are ordered by ascending node id).
+    local_of: Vec<u32>,
+    /// `span[shard]` = (min, max) node owned — the report's range label.
+    span: Vec<(u32, u32)>,
+    /// `owned[shard]` = nodes of the shard in ascending order.
+    owned: Vec<Vec<u32>>,
+}
+
+impl ShardMap {
+    fn from_table(shards: u32, table: Vec<u32>) -> Self {
+        let mut local_of = vec![0u32; table.len()];
+        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); shards as usize];
+        for (node, &s) in table.iter().enumerate() {
+            assert!(s < shards, "shards.map assigns shard {s} of {shards}");
+            local_of[node] = owned[s as usize].len() as u32;
+            owned[s as usize].push(node as u32);
+        }
+        let span = owned
+            .iter()
+            .enumerate()
+            .map(|(s, nodes)| {
+                assert!(!nodes.is_empty(), "shard {s} owns no nodes");
+                (nodes[0], *nodes.last().unwrap())
+            })
+            .collect();
+        ShardMap {
+            shard_of: table,
+            local_of,
+            span,
+            owned,
+        }
+    }
+}
+
 /// How the fabric's nodes are partitioned into shards, plus the
-/// conservative lookahead (see module docs).
-#[derive(Debug, Clone, Copy)]
+/// conservative lookahead (see module docs). The default partition is
+/// contiguous balanced node ranges; [`ShardPlan::with_table`] and
+/// [`ShardPlan::balanced`] generalize to arbitrary node→shard maps.
+/// **Every map yields bit-identical simulation results**: event order is
+/// fixed by `(time, stream, counter)` keys assigned per node at
+/// scheduling time, which no partition can perturb — maps shift only
+/// wall-clock load between shards.
+#[derive(Debug, Clone)]
 pub struct ShardPlan {
     shards: u32,
     nodes: u32,
     lookahead: SimTime,
+    /// `None` = contiguous balanced ranges (pure arithmetic, no table).
+    map: Option<Arc<ShardMap>>,
 }
 
 impl ShardPlan {
@@ -82,7 +134,83 @@ impl ShardPlan {
             shards,
             nodes,
             lookahead,
+            map: None,
         }
+    }
+
+    /// A plan with an explicit node→shard table (`table[node]` = shard).
+    /// Panics unless the table covers every node, references only shards
+    /// below `shards`, and leaves no shard empty.
+    pub fn with_table(shards: u32, nodes: u32, lookahead: SimTime, table: Vec<u32>) -> Self {
+        assert!(nodes >= 1, "fabric needs at least one node");
+        assert!(
+            shards >= 1 && shards <= nodes,
+            "shard count {shards} must be in 1..={nodes}"
+        );
+        assert_eq!(
+            table.len(),
+            nodes as usize,
+            "shard table needs one entry per node"
+        );
+        ShardPlan {
+            shards,
+            nodes,
+            lookahead,
+            map: Some(Arc::new(ShardMap::from_table(shards, table))),
+        }
+    }
+
+    /// The coordinator-aware balanced plan: weighted LPT assignment with
+    /// node 0 — which serializes every barrier round (all arrivals and
+    /// releases pass through it) — weighted by fabric size, so the hot
+    /// coordinator splits away from the bulk-transfer nodes instead of
+    /// dragging its contiguous range's worker. Deterministic in
+    /// `(shards, nodes)`.
+    pub fn balanced(shards: u32, nodes: u32, lookahead: SimTime) -> Self {
+        let weights = Self::coordinator_weights(nodes);
+        Self::balanced_with_weights(shards, nodes, lookahead, &weights)
+    }
+
+    /// Default per-node event-load weights: the barrier coordinator
+    /// (node 0) handles one arrival per peer per round on top of its own
+    /// traffic, every other node is uniform. Callers with measured
+    /// per-node loads (e.g. derived from [`ShardAdvance`] stats) can feed
+    /// their own weights to [`ShardPlan::balanced_with_weights`].
+    pub fn coordinator_weights(nodes: u32) -> Vec<u64> {
+        let mut w = vec![1u64; nodes as usize];
+        if !w.is_empty() {
+            w[0] = (nodes as u64).max(2);
+        }
+        w
+    }
+
+    /// Weighted longest-processing-time assignment: nodes in descending
+    /// weight order (ties broken by ascending node id) each go to the
+    /// least-loaded shard (ties broken by lowest shard index). Every
+    /// shard receives at least one node for any `shards <= nodes`.
+    pub fn balanced_with_weights(
+        shards: u32,
+        nodes: u32,
+        lookahead: SimTime,
+        weights: &[u64],
+    ) -> Self {
+        assert_eq!(weights.len(), nodes as usize, "one weight per node");
+        let mut order: Vec<u32> = (0..nodes).collect();
+        order.sort_by(|&a, &b| {
+            weights[b as usize]
+                .cmp(&weights[a as usize])
+                .then(a.cmp(&b))
+        });
+        let mut load = vec![0u64; shards as usize];
+        let mut table = vec![0u32; nodes as usize];
+        for node in order {
+            let s = (0..shards as usize)
+                .min_by_key(|&s| (load[s], s))
+                .expect("shards >= 1");
+            table[node as usize] = s as u32;
+            load[s] += weights[node as usize].max(1);
+        }
+        Self::with_table(shards, nodes, lookahead, table)
     }
 
     /// Number of shards in the plan.
@@ -100,6 +228,12 @@ impl ShardPlan {
         self.lookahead
     }
 
+    /// True when this plan uses the contiguous balanced ranges (no
+    /// node→shard table).
+    pub fn is_contiguous(&self) -> bool {
+        self.map.is_none()
+    }
+
     /// Balanced contiguous partition: the first `nodes % shards` shards
     /// own `ceil(nodes/shards)` nodes, the rest `floor(nodes/shards)` —
     /// every shard owns at least one node for any `shards <= nodes`.
@@ -107,9 +241,12 @@ impl ShardPlan {
         (self.nodes / self.shards, self.nodes % self.shards)
     }
 
-    /// The shard owning `node` (contiguous balanced node groups).
+    /// The shard owning `node`.
     pub fn shard_of(&self, node: u32) -> usize {
         debug_assert!(node < self.nodes, "node {node} outside fabric");
+        if let Some(map) = &self.map {
+            return map.shard_of[node as usize] as usize;
+        }
         let (small, big_shards) = self.split();
         let in_big = big_shards * (small + 1);
         if node < in_big {
@@ -119,9 +256,45 @@ impl ShardPlan {
         }
     }
 
-    /// Inclusive node range `(first, last)` owned by `shard`.
+    /// The node's slot within its owning shard (shard-local state is laid
+    /// out by ascending node id).
+    pub fn local_of(&self, node: u32) -> u32 {
+        debug_assert!(node < self.nodes, "node {node} outside fabric");
+        if let Some(map) = &self.map {
+            return map.local_of[node as usize];
+        }
+        node - self.node_range(self.shard_of(node) as u32).0
+    }
+
+    /// The nodes `shard` owns, in ascending order.
+    pub fn shard_nodes(&self, shard: u32) -> Vec<u32> {
+        debug_assert!(shard < self.shards);
+        if let Some(map) = &self.map {
+            return map.owned[shard as usize].clone();
+        }
+        let (first, last) = self.node_range(shard);
+        (first..=last).collect()
+    }
+
+    /// Number of nodes `shard` owns.
+    pub fn owned_count(&self, shard: u32) -> u32 {
+        debug_assert!(shard < self.shards);
+        if let Some(map) = &self.map {
+            return map.owned[shard as usize].len() as u32;
+        }
+        let (first, last) = self.node_range(shard);
+        last - first + 1
+    }
+
+    /// Inclusive node span `(first, last)` of `shard`. For contiguous
+    /// plans the span is exactly the owned range; for mapped plans it is
+    /// the (min, max) of the owned set — spans of different shards may
+    /// then overlap.
     pub fn node_range(&self, shard: u32) -> (u32, u32) {
         debug_assert!(shard < self.shards);
+        if let Some(map) = &self.map {
+            return map.span[shard as usize];
+        }
         let (small, big_shards) = self.split();
         let (first, size) = if shard < big_shards {
             (shard * (small + 1), small + 1)
@@ -137,10 +310,15 @@ impl ShardPlan {
 pub struct ShardAdvance {
     /// Shard index.
     pub shard: u32,
-    /// First node of the inclusive node range this shard owns.
+    /// First node of the inclusive node span this shard owns (for
+    /// non-contiguous maps: the smallest owned node).
     pub first_node: u32,
-    /// Last node of the inclusive node range this shard owns.
+    /// Last node of the inclusive node span this shard owns (for
+    /// non-contiguous maps: the largest owned node).
     pub last_node: u32,
+    /// Number of nodes this shard owns (equals the span size only for
+    /// contiguous maps).
+    pub owned: u32,
     /// Events this shard's queue processed.
     pub events: u64,
     /// Events this shard scheduled into another shard's channel.
@@ -201,6 +379,7 @@ pub(crate) fn report_from(
                     shard: i as u32,
                     first_node,
                     last_node,
+                    owned: plan.owned_count(i as u32),
                     events: s.events,
                     sent_cross: s.sent_cross,
                     recv_cross: s.recv_cross,
@@ -468,6 +647,73 @@ mod tests {
         let shards: Vec<usize> = (0..8).map(|n| plan.shard_of(n)).collect();
         assert_eq!(shards, vec![0, 0, 0, 1, 1, 1, 2, 2]);
         assert_eq!(plan.node_range(2), (6, 7));
+    }
+
+    #[test]
+    fn mapped_plans_are_bit_identical_too() {
+        // An arbitrary non-contiguous map produces the exact trace of the
+        // monolithic engine: partition choice cannot perturb (time, key)
+        // order.
+        let mono = run(Engine::new(relay(4, 100)));
+        let la = SimTime::from_ns(100);
+        for table in [vec![0, 1, 0, 1], vec![1, 0, 0, 1], vec![0, 1, 2, 0]] {
+            let shards = *table.iter().max().unwrap() + 1;
+            let plan = ShardPlan::with_table(shards, 4, la, table.clone());
+            let mapped = run(Engine::new_sharded(relay(4, 100), plan));
+            assert_eq!(mono, mapped, "map {table:?}");
+        }
+        let balanced = run(Engine::new_sharded(
+            relay(4, 100),
+            ShardPlan::balanced(2, 4, la),
+        ));
+        assert_eq!(mono, balanced, "balanced map");
+    }
+
+    #[test]
+    fn explicit_table_lookups() {
+        let la = SimTime::from_ns(1);
+        let plan = ShardPlan::with_table(2, 5, la, vec![1, 0, 1, 0, 0]);
+        assert!(!plan.is_contiguous());
+        assert_eq!(
+            (0..5).map(|n| plan.shard_of(n)).collect::<Vec<_>>(),
+            vec![1, 0, 1, 0, 0]
+        );
+        assert_eq!(plan.shard_nodes(0), vec![1, 3, 4]);
+        assert_eq!(plan.shard_nodes(1), vec![0, 2]);
+        assert_eq!(plan.local_of(3), 1, "second node of shard 0");
+        assert_eq!(plan.local_of(2), 1, "second node of shard 1");
+        assert_eq!(plan.node_range(0), (1, 4), "span, may overlap");
+        assert_eq!(plan.node_range(1), (0, 2));
+        assert_eq!(plan.owned_count(0), 3);
+    }
+
+    #[test]
+    fn balanced_map_splits_the_coordinator_out() {
+        // Node 0's barrier-coordination weight sends it to a shard of its
+        // own once there is any contention for workers.
+        let plan = ShardPlan::balanced(4, 16, SimTime::from_ns(1));
+        let coord = plan.shard_of(0);
+        assert_eq!(plan.owned_count(coord as u32), 1, "node 0 rides alone");
+        // Everyone is owned by exactly one shard and no shard is empty.
+        let mut seen = vec![0u32; 16];
+        for s in 0..4 {
+            assert!(plan.owned_count(s) >= 1);
+            for n in plan.shard_nodes(s) {
+                assert_eq!(plan.shard_of(n), s as usize);
+                assert_eq!(
+                    plan.local_of(n),
+                    plan.shard_nodes(s).iter().position(|&m| m == n).unwrap() as u32
+                );
+                seen[n as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "owns no nodes")]
+    fn empty_shard_in_table_panics() {
+        ShardPlan::with_table(3, 4, SimTime::from_ns(1), vec![0, 0, 2, 2]);
     }
 
     #[test]

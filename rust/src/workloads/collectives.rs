@@ -49,12 +49,26 @@ impl CollectivesPoint {
 
 /// The topology axis: ring (the prototype's shape, power-of-two), mesh
 /// (no wraparound — the ring schedules' worst case), torus (the paper's
-/// Fig. 2 infrastructure shape, 9 nodes — not a power of two).
+/// Fig. 2 infrastructure shape, 9 nodes — not a power of two), and the
+/// hierarchical shapes (fat-tree, dragonfly) where consecutive-id hops
+/// detour through the tree root or the global cables.
 fn topologies(fast: bool) -> Vec<(String, Topology)> {
     let mut t = vec![("ring(8)".to_string(), Topology::Ring(8))];
     if !fast {
         t.push(("mesh(2x4)".to_string(), Topology::Mesh2D { w: 2, h: 4 }));
         t.push(("torus(3x3)".to_string(), Topology::Torus2D { w: 3, h: 3 }));
+        t.push((
+            "fat_tree(2,3)".to_string(),
+            Topology::FatTree { arity: 2, levels: 3 },
+        ));
+        t.push((
+            "dragonfly(3x2)".to_string(),
+            Topology::Dragonfly {
+                groups: 3,
+                routers: 2,
+                globals: 1,
+            },
+        ));
     }
     t
 }

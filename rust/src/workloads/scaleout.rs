@@ -17,10 +17,11 @@
 //! propagation` the threaded backend requires) — asserts the simulated
 //! results are identical (the trace-compatibility contract), and
 //! records both wall-clocks. Numerics-bearing runs (`Numerics::Software`)
-//! are where threads win: every shard's DLA jobs compute concurrently
-//! inside a window. Pure timing-only event streams are dominated by
-//! per-window thread spawns and usually run slower — see the "Sharded
-//! engine" notes in `rust/README.md`.
+//! win biggest: every shard's DLA jobs compute concurrently inside a
+//! window. Timing-only streams win too once the fabric is large enough
+//! to fill windows — the persistent worker pool hands lanes to long-
+//! lived workers over channels instead of spawning threads per window —
+//! see the "Sharded engine" notes in `rust/README.md`.
 
 use std::time::{Duration, Instant};
 
@@ -129,6 +130,10 @@ pub struct ScaleoutRow {
     /// Sequential-vs-threaded wall-clock comparison
     /// (`engine_threads != off` sweeps only).
     pub par: Option<ParallelCompare>,
+    /// Wall-clock this point cost the host (the sequential run's when a
+    /// threaded comparison also ran) — printed alongside the simulated
+    /// speedup so sweep cost scales stay visible.
+    pub wall: Duration,
 }
 
 /// Clamp an explicit shard count to the fabric size (the sweep visits
@@ -267,11 +272,14 @@ pub struct TopoRow {
     pub ranks: Vec<RankTimeline>,
     /// Per-shard advance statistics (`shards != off`).
     pub shards: Option<ShardingReport>,
+    /// Wall-clock this point cost the host.
+    pub wall: Duration,
 }
 
 /// Sweep fabric shapes at (roughly) fixed per-node work: ring(8) — the
-/// paper's future 8-card server — against an 8-node mesh and a 9-node
-/// torus (Fig. 2's infrastructure shape). Weak scaling: each node runs
+/// paper's future 8-card server — against an 8-node mesh, a 9-node
+/// torus (Fig. 2's infrastructure shape), and the hierarchical shapes
+/// (7-node fat-tree, 6-node dragonfly). Weak scaling: each node runs
 /// `total_jobs / 8` jobs (at least one), so the rows compare fabric and
 /// collective costs, not work imbalance.
 pub fn run_topologies(
@@ -279,10 +287,19 @@ pub fn run_topologies(
     shards: ShardSpec,
     numerics: Numerics,
 ) -> Vec<TopoRow> {
-    let topos: [(&'static str, Topology); 3] = [
+    let topos: [(&'static str, Topology); 5] = [
         ("ring(8)", Topology::Ring(8)),
         ("mesh(2x4)", Topology::Mesh2D { w: 2, h: 4 }),
         ("torus(3x3)", Topology::Torus2D { w: 3, h: 3 }),
+        ("fat_tree(2,3)", Topology::FatTree { arity: 2, levels: 3 }),
+        (
+            "dragonfly(3x2)",
+            Topology::Dragonfly {
+                groups: 3,
+                routers: 2,
+                globals: 1,
+            },
+        ),
     ];
     let per_node = (case.total_jobs / 8).max(1);
     let mut rows = Vec::new();
@@ -294,13 +311,65 @@ pub fn run_topologies(
             .with_numerics(numerics)
             .with_shards(clamp_shards(shards, n));
         cfg.topology = topo;
-        let (elapsed, ranks, shard_stats, _) = run_point(cfg, &c);
+        let (elapsed, ranks, shard_stats, wall) = run_point(cfg, &c);
         rows.push(TopoRow {
             label,
             nodes: n,
             elapsed,
             ranks,
             shards: shard_stats,
+            wall,
+        });
+    }
+    rows
+}
+
+/// Kilonode torus points — the scaled-up infrastructure direction past
+/// the paper's 8-card server. Weak scaling at one job per node,
+/// timing-only (at this scale the fabric, not the DLA, is under test):
+/// a 256-node torus always (the CI smoke floor), plus the 1024-node
+/// torus under `bench scaleout --large`. Runs on whatever engine
+/// `shards`/`threads` select — `--engine-threads` makes this the
+/// timing-only perf showcase for the persistent worker pool.
+pub fn run_kilonode(
+    case: &ScaleoutCase,
+    shards: ShardSpec,
+    threads: ThreadSpec,
+    large: bool,
+) -> Vec<TopoRow> {
+    let mut topos: Vec<(&'static str, Topology)> =
+        vec![("torus(16x16)", Topology::Torus2D { w: 16, h: 16 })];
+    if large {
+        topos.push(("torus(32x32)", Topology::Torus2D { w: 32, h: 32 }));
+    }
+    // Threads need sharding; promote `shards = off` to auto so
+    // `--engine-threads` alone does the expected thing here too.
+    let shards = if threads != ThreadSpec::Off && shards == ShardSpec::Off {
+        ShardSpec::Auto
+    } else {
+        shards
+    };
+    let mut rows = Vec::new();
+    for (label, topo) in topos {
+        let n = topo.nodes();
+        let mut c = *case;
+        c.total_jobs = n; // one job per node
+        let mut cfg = Config::two_node_ring()
+            .with_numerics(Numerics::TimingOnly)
+            .with_shards(clamp_shards(shards, n))
+            .with_engine_threads(threads);
+        cfg.topology = topo;
+        if threads != ThreadSpec::Off {
+            cfg.host_wake = cfg.link.propagation;
+        }
+        let (elapsed, ranks, shard_stats, wall) = run_point(cfg, &c);
+        rows.push(TopoRow {
+            label,
+            nodes: n,
+            elapsed,
+            ranks,
+            shards: shard_stats,
+            wall,
         });
     }
     rows
@@ -324,10 +393,10 @@ pub fn run_sweep(
     let mut rows = Vec::new();
     let mut base: Option<f64> = None;
     for &n in node_counts {
-        let (elapsed, ranks, shard_stats, par) = if threads == ThreadSpec::Off {
+        let (elapsed, ranks, shard_stats, par, wall) = if threads == ThreadSpec::Off {
             let cfg = point_config(n, shards, ThreadSpec::Off, numerics, false);
-            let (elapsed, ranks, stats, _) = run_point(cfg, case);
-            (elapsed, ranks, stats, None)
+            let (elapsed, ranks, stats, wall) = run_point(cfg, case);
+            (elapsed, ranks, stats, None, wall)
         } else {
             // Threads need sharding; promote `shards = off` to auto so
             // `--engine-threads` alone does the expected thing.
@@ -358,7 +427,7 @@ pub fn run_sweep(
                     / wall_par.as_secs_f64().max(1e-9),
                 shards: par_stats,
             };
-            (e_seq, ranks, seq_stats, Some(cmp))
+            (e_seq, ranks, seq_stats, Some(cmp), wall_seq)
         };
         let t = elapsed.as_ps() as f64;
         let b = *base.get_or_insert(t);
@@ -371,6 +440,7 @@ pub fn run_sweep(
             ranks,
             shards: shard_stats,
             par,
+            wall,
         });
     }
     rows
@@ -482,21 +552,41 @@ mod tests {
     }
 
     #[test]
-    fn topology_sweep_covers_ring_mesh_torus() {
+    fn topology_sweep_covers_all_fabric_shapes() {
         let rows = run_topologies(
             &ScaleoutCase::fast(),
             ShardSpec::Off,
             Numerics::TimingOnly,
         );
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 5);
         assert_eq!(
             rows.iter().map(|r| r.nodes).collect::<Vec<_>>(),
-            vec![8, 8, 9]
+            vec![8, 8, 9, 7, 6],
+            "ring, mesh, torus, fat-tree, dragonfly"
         );
         for row in &rows {
             assert!(row.elapsed > SimTime::ZERO, "{}", row.label);
             assert_eq!(row.ranks.len(), row.nodes as usize);
         }
+    }
+
+    #[test]
+    fn kilonode_smoke_point_runs_256_nodes() {
+        // The CI smoke floor: without --large the kilonode section still
+        // exercises a 256-node torus end to end on the sharded engine.
+        let rows = run_kilonode(
+            &ScaleoutCase::fast(),
+            ShardSpec::Auto,
+            ThreadSpec::Off,
+            false,
+        );
+        assert_eq!(rows.len(), 1, "the 1024-node point is behind --large");
+        assert_eq!(rows[0].nodes, 256);
+        assert_eq!(rows[0].ranks.len(), 256);
+        assert!(rows[0].elapsed > SimTime::ZERO);
+        let sh = rows[0].shards.as_ref().expect("sharded run reports stats");
+        assert_eq!(sh.shards.len(), crate::config::MAX_AUTO_SHARDS as usize);
+        assert!(sh.shards.iter().all(|s| s.events > 0));
     }
 
     #[test]

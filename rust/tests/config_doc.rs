@@ -9,7 +9,8 @@ use fshmem::config::{Config, Numerics, ShardSpec, ThreadSpec};
 const DOC: &str = include_str!("../docs/config.md");
 
 /// Keys emitted by `to_cfg_string` across configs covering every
-/// topology branch (ring emits `nodes`; mesh/torus emit `mesh_w/h`).
+/// topology branch (ring emits `nodes`; mesh/torus emit `mesh_w/h`;
+/// fat-tree emits `tree_*`; dragonfly emits `df_*`).
 fn emitted_keys() -> Vec<String> {
     let mut ring = Config::ring(4)
         .with_numerics(Numerics::TimingOnly)
@@ -19,8 +20,17 @@ fn emitted_keys() -> Vec<String> {
     ring.validate().unwrap();
     let mut mesh = Config::mesh(2, 3);
     mesh.validate().unwrap();
+    let mut tree = Config::fat_tree(2, 3);
+    tree.validate().unwrap();
+    let mut df = Config::dragonfly(3, 2, 1);
+    df.validate().unwrap();
     let mut keys: Vec<String> = Vec::new();
-    for text in [ring.to_cfg_string(), mesh.to_cfg_string()] {
+    for text in [
+        ring.to_cfg_string(),
+        mesh.to_cfg_string(),
+        tree.to_cfg_string(),
+        df.to_cfg_string(),
+    ] {
         for line in text.lines() {
             let Some((k, _)) = line.split_once('=') else {
                 continue;
@@ -69,6 +79,10 @@ fn documented_keys_round_trip_through_the_parser() {
             "topology" => "mesh",
             "nodes" => continue, // ring-only; exercised below
             "mesh_w" | "mesh_h" => "2",
+            // Hierarchical-topology dimensions are ignored under
+            // `topology = mesh`; exercised separately below.
+            "tree_arity" | "tree_levels" => continue,
+            "df_groups" | "df_routers" | "df_globals" => continue,
             "packet_payload" => "512",
             "segment_mb" => "16",
             "private_kb" => "64",
@@ -77,6 +91,7 @@ fn documented_keys_round_trip_through_the_parser() {
             "link_loss_permille" => "1",
             "stripe_threshold" => "auto",
             "shards" => "auto",
+            "shards.map" => "balanced",
             "engine_threads" => "off",
             "host_wake_ns" => "200",
             "collectives.algo" => "auto",
@@ -91,4 +106,15 @@ fn documented_keys_round_trip_through_the_parser() {
     // `nodes` separately (ring topology).
     let ring = Config::from_str_cfg("topology = ring\nnodes = 4\n").unwrap();
     assert_eq!(ring.topology.nodes(), 4);
+    // Topology-specific dimension keys, each under its own topology.
+    let tree = Config::from_str_cfg(
+        "topology = fat_tree\ntree_arity = 2\ntree_levels = 3\n",
+    )
+    .unwrap();
+    assert_eq!(tree.topology.nodes(), 7);
+    let df = Config::from_str_cfg(
+        "topology = dragonfly\ndf_groups = 3\ndf_routers = 2\ndf_globals = 1\n",
+    )
+    .unwrap();
+    assert_eq!(df.topology.nodes(), 6);
 }

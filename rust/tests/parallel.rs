@@ -270,6 +270,90 @@ fn compat_torus_random_traffic() {
 }
 
 #[test]
+fn compat_fat_tree_random_traffic() {
+    // Hierarchical routing concentrates cross-shard traffic on the
+    // shards owning the upper tree levels — skewed outbox volumes are
+    // exactly what the window barrier must absorb.
+    for seed in seeds() {
+        assert_compatible(
+            || Config::fat_tree(2, 3),
+            |r| random_program(r, seed, 2, 3),
+            &format!("fat_tree(2,3) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn compat_dragonfly_random_traffic() {
+    for seed in seeds() {
+        assert_compatible(
+            || Config::dragonfly(3, 2, 1),
+            |r| random_program(r, seed, 2, 3),
+            &format!("dragonfly(3x2) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn compat_across_shard_maps() {
+    // Balanced / explicit maps under worker threads must reproduce the
+    // contiguous sequential trace: lanes travel to workers with their
+    // owned node sets, and the causal keys don't care who owns whom.
+    use fshmem::config::ShardMapSpec;
+    let seed = 0x5EED_60;
+    let seq = capture(
+        pcfg(Config::ring(6), ShardSpec::Count(3), ThreadSpec::Off),
+        |r| random_program(r, seed, 2, 3),
+    );
+    for map in [
+        ShardMapSpec::Balanced,
+        ShardMapSpec::Explicit(vec![2, 0, 1, 0, 1, 2]),
+    ] {
+        for threads in [ThreadSpec::Auto, ThreadSpec::Count(2)] {
+            let par = capture(
+                pcfg(Config::ring(6), ShardSpec::Count(3), threads)
+                    .with_shard_map(map.clone()),
+                |r| random_program(r, seed, 2, 3),
+            );
+            assert_trace_eq(&seq, &par, &format!("{map:?} / {threads:?}"));
+        }
+    }
+}
+
+#[test]
+#[ignore = "wall-clock perf assertion; CI runs it in the scaleout-wallclock job"]
+fn timing_only_pool_wall_clock_smoke() {
+    // The persistent-pool acceptance bar: on a timing-only >= 64-node
+    // run, `engine_threads = auto` must beat (or at worst match, with a
+    // generous noise margin) the sequential sharded engine's wall-clock.
+    // Before the pool, per-window thread spawns made timing-only streams
+    // reliably slower.
+    use fshmem::workloads::scaleout::{run_sweep, Exchange, ScaleoutCase};
+    let case = ScaleoutCase {
+        total_jobs: 256,
+        mm: 128,
+        exchange_bytes: 64 << 10,
+        exchange: Exchange::Halo,
+    };
+    let rows = run_sweep(
+        &[64],
+        &case,
+        ShardSpec::Auto,
+        ThreadSpec::Auto,
+        Numerics::TimingOnly,
+    );
+    let cmp = rows[0].par.as_ref().expect("comparison recorded");
+    assert!(
+        cmp.wall_par <= cmp.wall_seq.mul_f64(1.5),
+        "threaded {:?} vs sequential {:?} ({} workers): timing-only \
+         streams must not pay for the pool",
+        cmp.wall_par,
+        cmp.wall_seq,
+        cmp.threads
+    );
+}
+
+#[test]
 fn compat_under_arq_failure_injection() {
     // Per-node fault RNGs draw in per-node event order, which the
     // threaded backend preserves exactly — the retransmission schedule

@@ -245,6 +245,82 @@ fn equivalence_torus_random_traffic() {
 }
 
 #[test]
+fn equivalence_fat_tree_random_traffic() {
+    // Hierarchical routing: every cross-subtree transfer climbs toward
+    // the root over parallel cable pairs (equal-cost striping on the
+    // bulk puts), then descends — deep multihop chains per event.
+    for seed in seeds() {
+        assert_equivalent(
+            || timing(Config::fat_tree(2, 3)),
+            |r| random_program(r, seed, 2, 3),
+            &format!("fat_tree(2,3) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn equivalence_dragonfly_random_traffic() {
+    // Group-local cliques + single global cables: minimal routes mix
+    // 1-hop local, 1-hop global, and 3-hop local-global-local paths.
+    for seed in seeds() {
+        assert_equivalent(
+            || timing(Config::dragonfly(3, 2, 1)),
+            |r| random_program(r, seed, 2, 3),
+            &format!("dragonfly(3x2) seed {seed:#x}"),
+        );
+    }
+}
+
+#[test]
+fn equivalence_across_shard_maps() {
+    // Any node→shard map is bit-identical to the contiguous default
+    // (and to the monolith): event order is fixed by per-node
+    // (stream, counter) keys no partition can change.
+    use fshmem::config::ShardMapSpec;
+    let seed = 0xB17_1D;
+    let mono = capture(timing(Config::ring(6)).with_shards(ShardSpec::Off), |r| {
+        random_program(r, seed, 2, 4)
+    });
+    for map in [
+        ShardMapSpec::Balanced,
+        ShardMapSpec::Explicit(vec![2, 0, 1, 0, 1, 2]),
+    ] {
+        let mapped = capture(
+            timing(Config::ring(6))
+                .with_shards(ShardSpec::Count(3))
+                .with_shard_map(map.clone()),
+            |r| random_program(r, seed, 2, 4),
+        );
+        assert_trace_eq(&mono, &mapped, &format!("ring(6) {map:?}"));
+    }
+}
+
+#[test]
+fn kilonode_fabric_does_not_alias_op_owners() {
+    // 1024 nodes exceeds the op token's former 8-bit owner field (nodes
+    // 256 apart collided); handles issued by distant nodes must stay
+    // distinct and complete independently.
+    let mut cfg = timing(Config::two_node_ring());
+    cfg.topology = fshmem::fabric::Topology::Torus2D { w: 32, h: 32 };
+    let mut f = Fshmem::new(cfg);
+    assert_eq!(f.nodes(), 1024);
+    let a = f.put(0, f.global_addr(512, 0x100), &[0xAA; 64]);
+    let b = f.put(256, f.global_addr(512, 0x200), &[0xBB; 64]);
+    let c = f.put(1023, f.global_addr(512, 0x300), &[0xCC; 64]);
+    assert!(a != b && b != c && a != c, "op handles must not alias");
+    f.wait(a);
+    f.wait(b);
+    f.wait(c);
+    assert_eq!(f.read_shared(512, 0x100, 64), vec![0xAA; 64]);
+    assert_eq!(f.read_shared(512, 0x200, 64), vec![0xBB; 64]);
+    assert_eq!(f.read_shared(512, 0x300, 64), vec![0xCC; 64]);
+    for h in [a, b, c] {
+        let (iss, _, _, acked) = f.op_times(h);
+        assert!(acked.expect("put acked") > iss);
+    }
+}
+
+#[test]
 fn equivalence_under_arq_failure_injection() {
     // Link loss consumes the fault RNG on the wire paths; identical
     // execution order must reproduce the exact retransmission schedule.
