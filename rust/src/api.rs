@@ -349,6 +349,7 @@ impl Fshmem {
             .core
             .completed_at(h)
             .expect("completed op records its time");
+        self.core.note_host_wake(h, t);
         self.clock = self.clock.max(t + self.core.host_wake());
     }
 

@@ -12,7 +12,7 @@ use crate::dla::DlaParams;
 use crate::fabric::{LinkParams, Topology};
 use crate::gasnet::GasnetTiming;
 use crate::memory::DmaModel;
-use crate::sim::{ShardPlan, SimTime};
+use crate::sim::{ShardPlan, SimTime, TelemetryLevel};
 
 /// How DLA jobs produce numbers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -349,6 +349,11 @@ pub struct Config {
     /// Collective reduction arithmetic placement (`collectives.reduce`):
     /// DLA accumulate jobs vs untimed host sums — see [`ReduceOffload`].
     pub collective_reduce: ReduceOffload,
+    /// Telemetry recording level (`telemetry = off|counters|spans`):
+    /// op-lifecycle spans, per-stage occupancy gauges, and Chrome-trace
+    /// export — see [`TelemetryLevel`]. Pure observation: the level
+    /// provably never changes simulation results.
+    pub telemetry: TelemetryLevel,
     /// Deterministic seed for every randomized model component.
     pub seed: u64,
 }
@@ -402,6 +407,7 @@ impl Config {
             host_wake: SimTime::ZERO,
             collective_algo: CollectiveAlgo::Auto,
             collective_reduce: ReduceOffload::Auto,
+            telemetry: TelemetryLevel::Off,
             seed: 0xF5113,
         }
     }
@@ -500,6 +506,12 @@ impl Config {
     /// Select where collective reductions sum (see [`ReduceOffload`]).
     pub fn with_reduce_offload(mut self, reduce: ReduceOffload) -> Self {
         self.collective_reduce = reduce;
+        self
+    }
+
+    /// Select the telemetry recording level (see [`TelemetryLevel`]).
+    pub fn with_telemetry(mut self, level: TelemetryLevel) -> Self {
+        self.telemetry = level;
         self
     }
 
@@ -680,6 +692,7 @@ impl Config {
                     cfg.host_wake =
                         SimTime::from_ns(v.parse().context("host_wake_ns")?)
                 }
+                "telemetry" => cfg.telemetry = TelemetryLevel::parse(v)?,
                 "seed" => cfg.seed = v.parse().context("seed")?,
                 _ => bail!("line {}: unknown key {k:?}", lineno + 1),
             }
@@ -903,6 +916,7 @@ impl Config {
             "collectives.reduce = {}",
             self.collective_reduce.as_cfg_value()
         );
+        let _ = writeln!(out, "telemetry = {}", self.telemetry.as_cfg_value());
         let _ = writeln!(out, "seed = {}", self.seed);
         out
     }
@@ -1082,6 +1096,32 @@ mod tests {
             Config::from_str_cfg(&text).unwrap().engine_threads,
             ThreadSpec::Auto
         );
+    }
+
+    #[test]
+    fn telemetry_parses_and_round_trips() {
+        assert_eq!(TelemetryLevel::parse("off").unwrap(), TelemetryLevel::Off);
+        assert_eq!(
+            TelemetryLevel::parse("counters").unwrap(),
+            TelemetryLevel::Counters
+        );
+        assert_eq!(
+            TelemetryLevel::parse("spans").unwrap(),
+            TelemetryLevel::Spans
+        );
+        assert!(TelemetryLevel::parse("verbose").is_err());
+
+        let preset = Config::two_node_ring();
+        assert_eq!(preset.telemetry, TelemetryLevel::Off, "off by default");
+        assert!(preset.to_cfg_string().contains("telemetry = off"));
+
+        let mut cfg = Config::ring(4).with_telemetry(TelemetryLevel::Spans);
+        cfg.validate().unwrap();
+        let text = cfg.to_cfg_string();
+        assert!(text.contains("telemetry = spans"), "{text}");
+        let back = Config::from_str_cfg(&text).unwrap();
+        assert_eq!(back.telemetry, TelemetryLevel::Spans);
+        assert_eq!(back.to_cfg_string(), text);
     }
 
     #[test]

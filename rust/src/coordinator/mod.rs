@@ -4,9 +4,11 @@
 
 use anyhow::{bail, Result};
 
+use crate::api::Fshmem;
 use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::reports;
 use crate::resource;
+use crate::sim::{chrome_trace, ShardingReport, SimTime, Telemetry, TelemetryLevel};
 use crate::workloads::{collectives, conv, matmul, scaleout, sweep};
 
 /// Registry of named experiments.
@@ -47,6 +49,10 @@ pub struct RunOptions {
     /// point runs sequential-vs-threaded and reports both wall-clocks
     /// (trace-compatible — simulated results asserted identical).
     pub engine_threads: ThreadSpec,
+    /// Write a Chrome-trace/Perfetto JSON file of the experiment's
+    /// instrumented run here if set (`--trace-out <file>`); also bumps
+    /// that run's telemetry level from `counters` to `spans`.
+    pub trace_out: Option<String>,
 }
 
 impl Default for RunOptions {
@@ -58,14 +64,45 @@ impl Default for RunOptions {
             csv_out: None,
             shards: ShardSpec::Off,
             engine_threads: ThreadSpec::Off,
+            trace_out: None,
         }
     }
+}
+
+/// Telemetry level of a bench's instrumented run: span-retaining when a
+/// trace file was requested, aggregate-only otherwise (the stage tables
+/// need only histograms/gauge integrals, at bounded memory).
+fn bench_telemetry(opts: &RunOptions) -> TelemetryLevel {
+    if opts.trace_out.is_some() {
+        TelemetryLevel::Spans
+    } else {
+        TelemetryLevel::Counters
+    }
+}
+
+/// Append the stage tables to a report and, when `--trace-out` asked
+/// for one, write the Chrome-trace JSON file.
+fn emit_telemetry(
+    out: &mut String,
+    opts: &RunOptions,
+    t: &Telemetry,
+    sharding: Option<&ShardingReport>,
+    end: SimTime,
+) -> Result<()> {
+    out.push_str(&reports::stage_tables(t, end));
+    if let Some(path) = &opts.trace_out {
+        std::fs::write(path, chrome_trace(t, sharding))?;
+        out.push_str(&format!(
+            "\nwrote Chrome trace to {path} (open at https://ui.perfetto.dev)\n"
+        ));
+    }
+    Ok(())
 }
 
 pub fn run_experiment(name: &str, opts: &RunOptions) -> Result<String> {
     match name {
         "bandwidth" => run_bandwidth(opts),
-        "latency" => run_latency(),
+        "latency" => run_latency(opts),
         "comparison" => run_comparison(),
         "resources" => Ok(resource::render_table2(2)),
         "casestudy" => run_casestudy(opts),
@@ -102,8 +139,15 @@ fn run_bandwidth(opts: &RunOptions) -> Result<String> {
     Ok(reports::fig5_summary(&series))
 }
 
-fn run_latency() -> Result<String> {
-    Ok(reports::table3(&sweep::measure_latencies()))
+fn run_latency(opts: &RunOptions) -> Result<String> {
+    // The Table III sweep runs on an instrumented world so the report
+    // can show where each microsecond queued (and `--trace-out` can
+    // export the full span timeline of the measurement).
+    let mut f = Fshmem::new(sweep::latency_config().with_telemetry(bench_telemetry(opts)));
+    let mut out = reports::table3(&sweep::measure_latencies_on(&mut f));
+    let end = f.now();
+    emit_telemetry(&mut out, opts, f.counters().telemetry(), None, end)?;
+    Ok(out)
 }
 
 fn run_comparison() -> Result<String> {
@@ -182,6 +226,13 @@ fn run_scaleout(opts: &RunOptions) -> Result<String> {
     // still present under --fast); --large adds the 1024-node torus.
     let kilo = scaleout::run_kilonode(&case, opts.shards, opts.engine_threads, opts.large);
     out.push_str(&reports::scaleout_kilonode(&kilo, opts.large));
+    // Instrumented representative point: the largest node-count sweep
+    // point rerun with telemetry on, feeding the stage tables and (when
+    // `--trace-out` is set) the exported Chrome trace.
+    let n = *counts.last().expect("sweep has at least one point");
+    let (tel, tel_shards, end) =
+        scaleout::run_instrumented(n, &case, opts.shards, bench_telemetry(opts));
+    emit_telemetry(&mut out, opts, &tel, tel_shards.as_ref(), end)?;
     Ok(out)
 }
 
@@ -190,7 +241,12 @@ fn run_collectives(opts: &RunOptions) -> Result<String> {
     // accumulates carrying real numbers) and runs every point on all
     // three engine backends; --fast trims the topology/payload axes.
     let points = collectives::run_sweep(opts.fast);
-    Ok(reports::collectives(&points))
+    let mut out = reports::collectives(&points);
+    // Instrumented representative point (ring(8), largest payload, auto
+    // selector) for the stage tables and the `--trace-out` export.
+    let (tel, tel_shards, end) = collectives::run_instrumented(opts.fast, bench_telemetry(opts));
+    emit_telemetry(&mut out, opts, &tel, tel_shards.as_ref(), end)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -215,6 +271,24 @@ mod tests {
     fn latency_runs() {
         let out = run_experiment("latency", &RunOptions::default()).unwrap();
         assert!(out.contains("FSHMEM"), "{out}");
+    }
+
+    #[test]
+    fn latency_reports_stage_tables_and_writes_trace() {
+        let path = std::env::temp_dir().join(format!("fshmem-trace-{}.json", std::process::id()));
+        let opts = RunOptions {
+            trace_out: Some(path.to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        let out = run_experiment("latency", &opts).unwrap();
+        assert!(out.contains("stage occupancy"), "{out}");
+        assert!(out.contains("stage durations"), "{out}");
+        assert!(out.contains("wrote Chrome trace"), "{out}");
+        let trace = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
+        assert!(trace.contains("\"ph\":\"X\""), "{trace}");
+        assert!(trace.contains("\"ph\":\"C\""), "{trace}");
     }
 
     #[test]

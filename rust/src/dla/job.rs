@@ -63,6 +63,15 @@ impl DlaOp {
         self.output_elems() * elem_bytes
     }
 
+    /// Short op name used as the telemetry span label for DLA jobs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DlaOp::Matmul { .. } => "matmul",
+            DlaOp::Conv { .. } => "conv",
+            DlaOp::Accum { .. } => "accum",
+        }
+    }
+
     pub fn output_addr(&self) -> GlobalAddr {
         match *self {
             DlaOp::Matmul { y, .. } | DlaOp::Conv { y, .. } | DlaOp::Accum { y, .. } => y,

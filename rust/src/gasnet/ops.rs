@@ -70,6 +70,20 @@ pub enum OpKind {
     Compute,
 }
 
+impl OpKind {
+    /// Telemetry stage label of this kind's issue→completion span (the
+    /// per-kind end-to-end latency track in exported traces).
+    pub fn stage(self) -> &'static str {
+        match self {
+            OpKind::Put => "op:put",
+            OpKind::Get => "op:get",
+            OpKind::AmRequest => "op:am",
+            OpKind::Barrier => "op:barrier",
+            OpKind::Compute => "op:compute",
+        }
+    }
+}
+
 /// Lifecycle record of one operation.
 #[derive(Debug, Clone)]
 pub struct OpState {
@@ -189,18 +203,23 @@ impl OpTracker {
         false
     }
 
-    /// Deliver one completion event for `id` (the last one completes it).
-    pub fn complete(&mut self, id: OpId, now: SimTime) {
+    /// Deliver one completion event for `id` (the last one completes
+    /// it). Returns true exactly when *this* call completed the op —
+    /// the edge telemetry hangs its issue→completion span on.
+    pub fn complete(&mut self, id: OpId, now: SimTime) -> bool {
         if let Some(op) = self.ops.get_mut(&id) {
             if op.parts > 1 {
                 op.parts -= 1;
-                return;
+                return false;
             }
+            let first = op.completed_at.is_none();
             op.completed_at.get_or_insert(now);
             if op.data_done_at.is_none() && op.bytes == 0 {
                 op.data_done_at = Some(now);
             }
+            return first;
         }
+        false
     }
 
     /// True once `id` completed (false for unknown/gc'ed ids).

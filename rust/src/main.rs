@@ -6,6 +6,7 @@
 //!                           [--numerics timing|software|pjrt]
 //!                           [--csv out.csv] [--shards auto|N|off]
 //!                           [--engine-threads auto|N|off]
+//!                           [--trace-out trace.json]
 //! fshmem run [--config file.cfg]      demo put/get/AM round trip
 //! fshmem list                         available experiments
 //! ```
@@ -55,6 +56,7 @@ fn main() -> Result<()> {
                 csv_out: args.opt("csv").map(String::from),
                 shards,
                 engine_threads,
+                trace_out: args.opt("trace-out").map(String::from),
             };
             let report = run_experiment(name, &opts)?;
             println!("{report}");
@@ -84,6 +86,8 @@ usage: fshmem <info|list|bench|run> [options]
                                                and report seq-vs-par wall-clock)
                [--large]                      (scaleout: add the 1024-node
                                                torus to the kilonode section)
+               [--trace-out trace.json]       (write a Chrome-trace/Perfetto
+                                               span timeline of the run)
                (collectives: allreduce by algorithm x payload x topology,
                 reproduced on all three engine backends)
   run [--config file.cfg]   demo put/get/AM round trip";

@@ -15,7 +15,7 @@ use crate::dla::{self, DlaJob, DlaOp};
 use crate::gasnet::handlers::{H_ACK, H_PUT};
 use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, OpKind, Payload};
 use crate::memory::{GlobalAddr, NodeId};
-use crate::sim::{Counters, Sched, SimTime};
+use crate::sim::{Counters, Sched, SimTime, Span};
 
 use super::{Event, Wv};
 
@@ -122,6 +122,7 @@ impl Wv<'_> {
             job
         };
         c.incr("dla_jobs_started");
+        c.gauge("dla_q", node, now, -1);
 
         // Numerics now (see run_numerics doc for why this is safe).
         self.run_numerics(node, &job.op);
@@ -148,6 +149,9 @@ impl Wv<'_> {
                     owner.art_ops.push(op);
                     op
                 };
+                // Autonomous issue: the in-flight gauge entry retires in
+                // `complete_op` on the chunk PUT's ACK, like host ops.
+                c.gauge("ops_inflight", node, now, 1);
                 let msg = AmMessage {
                     kind: AmKind::Request,
                     category: AmCategory::Long,
@@ -196,6 +200,19 @@ impl Wv<'_> {
             dla.macs_done += macs;
         }
         c.incr("dla_jobs_done");
+        // The dla-stage span is the job's core occupancy (start time
+        // reconstructed from the cycle model's fixed duration).
+        c.span(
+            Span::new(
+                "dla",
+                node,
+                job.notify.map_or(0, |(_, token)| token),
+                now - self.cfg().dla.job_time(&job.op),
+                now,
+            )
+            .with_detail(macs)
+            .with_label(job.op.name()),
+        );
         if let Some((notify_node, token)) = job.notify {
             let ack = AmMessage {
                 kind: AmKind::Reply,

@@ -14,7 +14,7 @@ use crate::dla;
 use crate::gasnet::handlers::{H_BARRIER_ARRIVE, H_COMPUTE, H_GET, H_PUT};
 use crate::gasnet::{AmCategory, AmKind, AmMessage, MsgClass, OpId, Payload};
 use crate::memory::{GlobalAddr, NodeId};
-use crate::sim::{Counters, Sched, SimTime};
+use crate::sim::{Counters, Sched, SimTime, Span};
 
 use super::{Event, HostCmd, Wv};
 
@@ -30,6 +30,18 @@ impl Wv<'_> {
         let t = &self.cfg().timing;
         let at = now + t.cmd_ingress() + t.tx_sched();
         c.incr("host_cmds");
+        let (op_token, cmd_bytes) = match &cmd {
+            HostCmd::Put { op, payload, .. } => (*op, payload.len()),
+            HostCmd::Get { op, len, .. } => (*op, *len),
+            HostCmd::AmShort { op, .. } => (*op, 0),
+            HostCmd::AmMedium { op, payload, .. } => (*op, payload.len()),
+            HostCmd::Compute { op, .. } => (*op, 0),
+            HostCmd::Barrier { op } => (*op, 0),
+        };
+        // The host-stage span covers PCIe ingress + scheduler pickup; the
+        // in-flight gauge retires in `complete_op` on the op's last ACK.
+        c.span(Span::new("host", node, op_token, now, at).with_detail(cmd_bytes));
+        c.gauge("ops_inflight", node, now, 1);
         let topo = self.cfg().topology;
         let (port, class, msg) = match cmd {
             HostCmd::Put {

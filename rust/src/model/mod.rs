@@ -92,7 +92,7 @@ use crate::gasnet::{
 };
 use crate::memory::{GlobalAddr, NodeId, NodeMemory};
 use crate::sim::{
-    Counters, Model, ParallelModel, Rng, Sched, ShardPlan, SimTime,
+    Counters, Model, ParallelModel, Rng, Sched, ShardPlan, SimTime, Span,
 };
 
 /// Host-issued commands (the FSHMEM API surface, post-PCIe).
@@ -680,10 +680,11 @@ impl Wv<'_> {
         observer: NodeId,
         token: OpId,
         sig: OpSig,
+        c: &mut Counters,
     ) {
         let owner = op_owner(token);
         if owner == observer {
-            apply_op_sig(self.node_mut(owner), token, now, now, sig);
+            apply_op_sig(self.node_mut(owner), token, now, now, sig, c);
         } else {
             q.schedule_at(
                 now + self.sh.cfg.link.propagation,
@@ -736,13 +737,37 @@ impl Wv<'_> {
 /// Apply one op signal to the owner's tracker. `at` is the processing
 /// time (what a completion wait observes), `observed` the remote
 /// observation time (what the record carries).
-fn apply_op_sig(node: &mut Node, token: OpId, at: SimTime, observed: SimTime, sig: OpSig) {
+fn apply_op_sig(
+    node: &mut Node,
+    token: OpId,
+    at: SimTime,
+    observed: SimTime,
+    sig: OpSig,
+    c: &mut Counters,
+) {
     match sig {
         OpSig::Data { bytes } => {
             node.ops.data_progress(token, observed, bytes);
         }
-        OpSig::Delivered => node.ops.complete(token, at),
+        OpSig::Delivered => complete_op(node, token, at, c),
         OpSig::Parts { parts } => node.ops.set_parts(token, parts),
+    }
+}
+
+/// Complete one delivery event for `token` on its owner's tracker and,
+/// on the edge that actually completes the op (multi-part ops reach it
+/// only on their last event), emit the issue→completion lifecycle span
+/// and retire the owner's in-flight gauge entry.
+pub(crate) fn complete_op(node: &mut Node, token: OpId, at: SimTime, c: &mut Counters) {
+    if node.ops.complete(token, at) {
+        if let Some(st) = node.ops.get(token) {
+            let owner = op_owner(token);
+            c.span(
+                Span::new(st.kind.stage(), owner, token, st.issued, at)
+                    .with_detail(st.bytes),
+            );
+            c.gauge("ops_inflight", owner, at, -1);
+        }
     }
 }
 
@@ -811,11 +836,11 @@ impl Wv<'_> {
                 observed,
                 sig,
             } => {
-                apply_op_sig(self.node_mut(node), token, now, observed, sig);
+                apply_op_sig(self.node_mut(node), token, now, observed, sig, c);
             }
             Event::Retransmit { link, pkt } => self.on_retransmit(now, link, pkt, q, c),
             // -- rx layer ----------------------------------------------
-            Event::HandlerStart { node } => self.on_handler_start(now, node, q),
+            Event::HandlerStart { node } => self.on_handler_start(now, node, q, c),
             Event::HandlerDone { node, pkt } => {
                 self.on_handler_done(now, node, pkt, q, c)
             }

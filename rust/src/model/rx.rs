@@ -28,9 +28,9 @@ use crate::gasnet::{
     op_owner, AmCategory, AmKind, AmMessage, MsgClass, Packet, Payload,
 };
 use crate::memory::{GlobalAddr, NodeId};
-use crate::sim::{Counters, Sched, SimTime};
+use crate::sim::{Counters, Sched, SimTime, Span};
 
-use super::{Event, OpSig, UserAm, Wv};
+use super::{complete_op, Event, OpSig, UserAm, Wv};
 
 impl Wv<'_> {
     fn handler_duration(&self, kind: &HandlerKind) -> SimTime {
@@ -109,7 +109,7 @@ impl Wv<'_> {
         // The GET's owner is the requester — a remote node here, so the
         // part count travels back as a signal. It arrives one wire
         // flight later, strictly before the earliest reply leg's data.
-        self.op_signal(q, now, node, pkt.token, OpSig::Parts { parts: n_legs });
+        self.op_signal(q, now, node, pkt.token, OpSig::Parts { parts: n_legs }, c);
         c.incr("gets_striped");
         let mut off = 0u64;
         for (i, &port) in ports.iter().enumerate() {
@@ -154,6 +154,7 @@ impl Wv<'_> {
         now: SimTime,
         node: NodeId,
         q: &mut Sched<Event>,
+        c: &mut Counters,
     ) {
         let core = &mut self.node_mut(node).core;
         if core.handler_busy {
@@ -161,6 +162,7 @@ impl Wv<'_> {
         }
         if let Some(pkt) = core.handler_queue.pop_front() {
             core.handler_busy = true;
+            c.gauge("handler_q", node, now, -1);
             let kind = core
                 .handlers
                 .lookup(pkt.handler)
@@ -185,6 +187,15 @@ impl Wv<'_> {
             .lookup(pkt.handler)
             .expect("handler opcode valid");
         c.incr("handlers_run");
+        // The rx-stage span is the handler engine's occupancy for this
+        // packet (start time reconstructed from the fixed duration).
+        c.span(Span::new(
+            "rx",
+            node,
+            pkt.token,
+            now - self.handler_duration(&kind),
+            now,
+        ));
         match kind {
             HandlerKind::Put => {
                 // Request fully received: acknowledge to the initiator.
@@ -223,12 +234,12 @@ impl Wv<'_> {
                 // how striped PUTs complete on their last ACK. The reply
                 // lands at the GET's initiator — the op owner.
                 debug_assert_eq!(op_owner(pkt.token), node);
-                self.node_mut(node).ops.complete(pkt.token, now);
+                complete_op(self.node_mut(node), pkt.token, now, c);
             }
             HandlerKind::Ack => {
                 // ACKs return to the initiator — the op owner.
                 debug_assert_eq!(op_owner(pkt.token), node);
-                self.node_mut(node).ops.complete(pkt.token, now);
+                complete_op(self.node_mut(node), pkt.token, now, c);
             }
             HandlerKind::Get => {
                 if !self.try_striped_get_reply(now, node, &pkt, q, c) {
@@ -249,6 +260,7 @@ impl Wv<'_> {
                 let job = dla::job::decode_job(pkt.payload())
                     .expect("valid DLA job descriptor");
                 c.incr("dla_jobs_queued");
+                c.gauge("dla_q", node, now, 1);
                 if self.node_mut(node).dla.enqueue(job) {
                     q.schedule_at(now, Event::DlaStart { node });
                 }
@@ -288,7 +300,7 @@ impl Wv<'_> {
             HandlerKind::BarrierRelease => {
                 // The release reaches the entering rank — the op owner.
                 debug_assert_eq!(op_owner(pkt.token), node);
-                self.node_mut(node).ops.complete(pkt.token, now);
+                complete_op(self.node_mut(node), pkt.token, now, c);
             }
             HandlerKind::User(tag) => {
                 self.node_mut(node).user_am_log.push(UserAm {
@@ -304,7 +316,7 @@ impl Wv<'_> {
                 // sender owns the op; delivery news travels back one wire
                 // flight, so `completed_at` is the time the *initiator*
                 // learns of delivery.
-                self.op_signal(q, now, node, pkt.token, OpSig::Delivered);
+                self.op_signal(q, now, node, pkt.token, OpSig::Delivered, c);
             }
         }
         // Handler engine: next in queue.

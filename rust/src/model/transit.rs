@@ -27,7 +27,9 @@ impl Wv<'_> {
     ) {
         c.incr("pkts_retransmitted");
         let (_, _, peer, peer_port) = self.sh.wiring.links[link];
+        let ser = self.link(link).params.serialize(pkt.wire_bytes());
         let (_tx, rx_at) = self.link_mut(link).send(now, pkt.wire_bytes());
+        c.wire_busy(link as u32, ser);
         q.schedule_at(
             rx_at,
             Event::PacketArrive {
@@ -98,7 +100,9 @@ impl Wv<'_> {
                     .wiring
                     .link(node, port)
                     .expect("router chose an unwired port");
+                let ser = self.link(li).params.serialize(pkt.wire_bytes());
                 let (_tx, rx_at) = self.link_mut(li).send(now + delay, pkt.wire_bytes());
+                c.wire_busy(li as u32, ser);
                 let (_, _, peer, peer_port) = self.sh.wiring.links[li];
                 q.schedule_at(
                     rx_at,
@@ -157,6 +161,7 @@ impl Wv<'_> {
                     OpSig::Data {
                         bytes: pkt.payload_len(),
                     },
+                    c,
                 );
             }
         }
@@ -183,6 +188,10 @@ impl Wv<'_> {
                 }
                 None => {
                     progress.push((pkt.token, stripe, pkt.payload_len()));
+                    // The first fragment of a multi-fragment message can
+                    // never complete it, so this entry always outlives the
+                    // push — the gauge's matching -1 is at swap_remove.
+                    c.gauge("rx_asm", node, now, 1);
                     pkt.payload_len()
                 }
             };
@@ -190,6 +199,7 @@ impl Wv<'_> {
             if got >= pkt.msg_payload_len {
                 if let Some(i) = idx {
                     progress.swap_remove(i);
+                    c.gauge("rx_asm", node, now, -1);
                 }
                 true
             } else {
@@ -197,6 +207,7 @@ impl Wv<'_> {
             }
         };
         if complete {
+            c.gauge("handler_q", node, now, 1);
             let core = &mut self.node_mut(node).core;
             if core.handler_enqueue(pkt) {
                 q.schedule_at(now, Event::HandlerStart { node });

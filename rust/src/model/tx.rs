@@ -11,7 +11,7 @@ use std::sync::Arc;
 use crate::fabric::PortId;
 use crate::gasnet::{AmKind, AmMessage, MsgClass, Payload};
 use crate::memory::NodeId;
-use crate::sim::{Counters, Sched, SimTime};
+use crate::sim::{Counters, Sched, SimTime, Span};
 
 use super::{Event, Wv};
 
@@ -28,6 +28,7 @@ impl Wv<'_> {
     ) {
         let kick = self.node_mut(node).core.port_mut(port).enqueue(class, msg);
         c.incr("tx_enqueued");
+        c.gauge("tx_fifo", node, now, 1);
         if kick {
             q.schedule_at(now, Event::SeqStart { node, port });
         }
@@ -99,10 +100,12 @@ impl Wv<'_> {
             return;
         };
         ptx.seq_busy = true;
+        c.gauge("tx_fifo", node, now, -1);
         msg.validate().expect("malformed AM");
 
         let payload_buf = self.resolve_payload(node, &msg.payload);
         let has_payload = !payload_buf.is_empty();
+        let payload_bytes = payload_buf.len() as u64;
         let pkts =
             crate::gasnet::wire::packetize(&msg, payload_buf, self.cfg().packet_payload);
         let timing = self.cfg().timing;
@@ -129,6 +132,9 @@ impl Wv<'_> {
         let mut dma_avail = if has_payload { now + dma.setup } else { now };
         let n_pkts = pkts.len() as u64;
         let mut wire_bytes = 0u64;
+        let mut wire_t0 = SimTime::ZERO;
+        let mut wire_t1 = SimTime::ZERO;
+        let mut first_pkt = true;
         for pkt in pkts {
             dma_avail = dma_avail + dma.stream_time(pkt.payload_len());
             let start = seq_free.max(dma_avail);
@@ -140,6 +146,10 @@ impl Wv<'_> {
             };
             let ready = start + occupancy;
             wire_bytes += pkt.wire_bytes();
+            if first_pkt {
+                wire_t0 = ready;
+                first_pkt = false;
+            }
             match link_idx {
                 None => {
                     // Self-delivery: skip the PHY, straight to rx decode.
@@ -159,6 +169,7 @@ impl Wv<'_> {
                         );
                     }
                     q.schedule_at(at, Event::PacketLocal { node, pkt });
+                    wire_t1 = wire_t1.max(at);
                     seq_free = ready;
                 }
                 Some(li) => {
@@ -167,6 +178,8 @@ impl Wv<'_> {
                     let ser_hdr = params.serialize(crate::gasnet::WIRE_HEADER_BYTES);
                     let prop = params.propagation;
                     let (tx_done, rx_at) = self.link_mut(li).send(ready, pkt.wire_bytes());
+                    c.wire_busy(li as u32, ser);
+                    wire_t1 = wire_t1.max(rx_at);
                     let (_, _, peer, peer_port) = self.sh.wiring.links[li];
                     if pkt.first && pkt.dst == peer {
                         // Cut-through header observation: the header flit
@@ -225,6 +238,10 @@ impl Wv<'_> {
         }
         c.add("pkts_sent", n_pkts);
         c.add("wire_bytes", wire_bytes);
+        // One tx-stage span per wire message (sequencer occupancy) and one
+        // wire-stage span (first packet on the PHY to last arrival).
+        c.span(Span::new("tx", node, msg.token, now, seq_free).with_detail(payload_bytes));
+        c.span(Span::new("wire", node, msg.token, wire_t0, wire_t1).with_detail(wire_bytes));
         q.schedule_at(seq_free, Event::SeqFree { node, port });
     }
 }

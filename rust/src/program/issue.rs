@@ -30,7 +30,7 @@ use crate::fabric::PortId;
 use crate::gasnet::{OpKind, Payload};
 use crate::memory::{AddressMap, GlobalAddr, NodeId};
 use crate::model::{Event, FshmemWorld, HostCmd, UserAm};
-use crate::sim::{Counters, Engine, ParEngine, SimTime};
+use crate::sim::{Counters, Engine, ParEngine, SimTime, Span};
 
 /// The execution backend an [`IssueCore`] drives (see module docs).
 pub(crate) enum EngineKind {
@@ -117,6 +117,13 @@ impl EngineKind {
             EngineKind::Par(e) => e.sharding(),
         }
     }
+
+    fn set_telemetry_level(&mut self, level: crate::sim::TelemetryLevel) {
+        match self {
+            EngineKind::Seq(e) => e.counters.set_telemetry_level(level),
+            EngineKind::Par(e) => e.set_telemetry_level(level),
+        }
+    }
 }
 
 /// Engine + address map: the shared substrate of every host front end.
@@ -140,13 +147,14 @@ impl IssueCore {
         // bit-identical (rust/tests/sharded.rs) and the threaded one is
         // trace-compatible (rust/tests/parallel.rs), so front ends never
         // care.
-        let eng = match (cfg.shard_plan(), cfg.engine_thread_count()) {
+        let mut eng = match (cfg.shard_plan(), cfg.engine_thread_count()) {
             (Some(plan), Some(threads)) => {
                 EngineKind::Par(ParEngine::new(world, plan, threads))
             }
             (Some(plan), None) => EngineKind::Seq(Engine::new_sharded(world, plan)),
             (None, _) => EngineKind::Seq(Engine::new(world)),
         };
+        eng.set_telemetry_level(cfg.telemetry);
         IssueCore { eng, addr_map }
     }
 
@@ -526,6 +534,19 @@ impl IssueCore {
     /// Completion time of `h`, if it has completed.
     pub fn completed_at(&self, h: OpHandle) -> Option<SimTime> {
         self.eng.model().op(h.0).and_then(|st| st.completed_at)
+    }
+
+    /// Record the host-wake observation span of op `h`: the window
+    /// between the op completing in the fabric and the issuing host
+    /// observing the completion (`Config::host_wake`). Front ends call
+    /// this once per wait resolution, so span counts are a function of
+    /// the program alone — identical on every backend.
+    pub fn note_host_wake(&mut self, h: OpHandle, completed: SimTime) {
+        let wake = self.host_wake();
+        let node = crate::gasnet::op_owner(h.0);
+        self.eng
+            .counters_mut()
+            .span(Span::new("host_wake", node, h.0, completed, completed + wake));
     }
 
     /// Timestamps of an op: (issued, header_at, data_done, completed).

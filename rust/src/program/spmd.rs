@@ -434,6 +434,7 @@ fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize
         }
         Req::Wait(h) => match core.completed_at(h) {
             Some(t) => {
+                core.note_host_wake(h, t);
                 ctls[i].clock = ctls[i].clock.max(t + core.host_wake());
                 Resp::Done
             }
@@ -503,6 +504,7 @@ fn advance(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>]) {
             match cond {
                 WaitCond::Op(h) => {
                     if let Some(t) = core.completed_at(h) {
+                        core.note_host_wake(h, t);
                         ctls[i].clock = ctls[i].clock.max(t + wake);
                         ctls[i].state = State::Computing;
                         resp[i].send(Resp::Done).expect("SPMD rank thread died");

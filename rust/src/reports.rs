@@ -4,6 +4,7 @@
 
 use crate::baselines;
 use crate::collectives::Algo;
+use crate::sim::{duration_summary, occupancy_summary, SimTime, Telemetry};
 use crate::util::table::{self, f};
 use crate::workloads::{
     collectives::CollectivesPoint, conv::ConvResult, matmul::MatmulResult,
@@ -73,6 +74,54 @@ pub fn fig5_summary(series: &[BandwidthSeries]) -> String {
         100.0 * best / theoretical,
         best / prior_best,
     )
+}
+
+/// Telemetry stage tables: per-stage occupancy (time-weighted queue
+/// depth through the run end) and per-stage span-duration distribution
+/// (from the log-bucketed histograms). Empty string when the run
+/// recorded nothing (`telemetry = off`).
+pub fn stage_tables(t: &Telemetry, end: SimTime) -> String {
+    let occ = occupancy_summary(t, end);
+    let dur = duration_summary(t);
+    if occ.is_empty() && dur.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("\nstage occupancy (time-weighted queue depth):\n");
+    let occ_rows: Vec<Vec<String>> = occ
+        .iter()
+        .map(|s| {
+            vec![
+                s.stage.to_string(),
+                s.gauges.to_string(),
+                f(s.mean_depth, 3),
+                s.max_depth.to_string(),
+            ]
+        })
+        .collect();
+    out.push_str(&table::render(
+        &["Stage", "Queues", "mean depth", "max depth"],
+        &occ_rows,
+    ));
+    out.push_str("\nstage durations (simulated; percentiles bucket-resolved):\n");
+    let dur_rows: Vec<Vec<String>> = dur
+        .iter()
+        .map(|s| {
+            vec![
+                s.stage.to_string(),
+                s.count.to_string(),
+                f(s.mean.as_us(), 3),
+                f(s.p50.as_us(), 3),
+                f(s.p95.as_us(), 3),
+                f(s.p99.as_us(), 3),
+                f(s.max.as_us(), 3),
+            ]
+        })
+        .collect();
+    out.push_str(&table::render(
+        &["Stage", "Count", "mean (us)", "p50 (us)", "p95 (us)", "p99 (us)", "max (us)"],
+        &dur_rows,
+    ));
+    out
 }
 
 /// Table III: latency comparison.

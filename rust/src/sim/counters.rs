@@ -8,21 +8,62 @@
 //!   handler invocations, scheduler stalls ...
 //! * named latency series (`record_latency`) — per-operation durations,
 //!   with streaming min/max/mean and retained samples for percentiles.
+//!
+//! A [`Telemetry`] block rides along (spans, occupancy gauges, duration
+//! histograms — see [`super::telemetry`]); it shares the registry's
+//! lifecycle so the threaded backend's scratch-merge channel carries it
+//! for free.
 
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 
+use super::telemetry::{Span, Telemetry, TelemetryLevel};
 use super::time::SimTime;
 
+/// One-instruction fast path for interned `&'static str` keys (the same
+/// literal from the same call site compares by address), falling back to
+/// content equality for keys reaching us through different crates or
+/// codegen units.
+fn key_eq(a: &'static str, b: &'static str) -> bool {
+    std::ptr::eq(a, b) || a == b
+}
+
+/// One-pass order statistics over a [`LatencySeries`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LatencySummary {
+    /// Samples recorded.
+    pub count: usize,
+    /// Smallest sample.
+    pub min: SimTime,
+    /// Arithmetic mean.
+    pub mean: SimTime,
+    /// 50th percentile (nearest rank).
+    pub p50: SimTime,
+    /// 95th percentile (nearest rank).
+    pub p95: SimTime,
+    /// 99th percentile (nearest rank).
+    pub p99: SimTime,
+    /// Largest sample.
+    pub max: SimTime,
+}
+
 /// A named series of duration samples with order statistics.
+///
+/// Percentile queries sort **once** into a cached view that `record`
+/// invalidates — reports ask for several percentiles per key, and the
+/// old sort-per-call behavior was quadratic-ish on large series.
 #[derive(Debug, Default, Clone)]
 pub struct LatencySeries {
     samples_ps: Vec<u64>,
+    sorted: RefCell<Vec<u64>>,
+    dirty: Cell<bool>,
 }
 
 impl LatencySeries {
     /// Append one sample.
     pub fn record(&mut self, d: SimTime) {
         self.samples_ps.push(d.as_ps());
+        self.dirty.set(true);
     }
 
     /// Number of samples recorded.
@@ -49,20 +90,69 @@ impl LatencySeries {
         SimTime((sum / self.samples_ps.len() as u128) as u64)
     }
 
+    /// Run `f` over the sorted sample view, refreshing the cache only if
+    /// a `record`/merge happened since the last sorted query.
+    fn with_sorted<R>(&self, f: impl FnOnce(&[u64]) -> R) -> R {
+        if self.dirty.get() {
+            let mut s = self.sorted.borrow_mut();
+            s.clear();
+            s.extend_from_slice(&self.samples_ps);
+            s.sort_unstable();
+            self.dirty.set(false);
+        }
+        let s = self.sorted.borrow();
+        f(&s)
+    }
+
     /// `p` in `[0, 100]`; nearest-rank percentile.
     pub fn percentile(&self, p: f64) -> SimTime {
         if self.samples_ps.is_empty() {
             return SimTime::ZERO;
         }
-        let mut sorted = self.samples_ps.clone();
-        sorted.sort_unstable();
-        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-        SimTime(sorted[rank.min(sorted.len() - 1)])
+        self.with_sorted(|sorted| {
+            let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+            SimTime(sorted[rank.min(sorted.len() - 1)])
+        })
+    }
+
+    /// min/mean/p50/p95/p99/max in one pass over the sorted view.
+    pub fn summary(&self) -> LatencySummary {
+        if self.samples_ps.is_empty() {
+            return LatencySummary::default();
+        }
+        self.with_sorted(|sorted| {
+            let n = sorted.len();
+            let sum: u128 = sorted.iter().map(|&x| x as u128).sum();
+            let rank = |p: f64| {
+                let r = ((p / 100.0) * (n as f64 - 1.0)).round() as usize;
+                SimTime(sorted[r.min(n - 1)])
+            };
+            LatencySummary {
+                count: n,
+                min: SimTime(sorted[0]),
+                mean: SimTime((sum / n as u128) as u64),
+                p50: rank(50.0),
+                p95: rank(95.0),
+                p99: rank(99.0),
+                max: SimTime(sorted[n - 1]),
+            }
+        })
     }
 
     /// The raw samples, in record order, in picoseconds.
     pub fn samples(&self) -> &[u64] {
         &self.samples_ps
+    }
+
+    /// Drain `other`'s samples onto the end of this series (the scratch
+    /// merge path). Invalidates both sorted caches.
+    fn append_from(&mut self, other: &mut LatencySeries) {
+        if other.samples_ps.is_empty() {
+            return;
+        }
+        self.samples_ps.append(&mut other.samples_ps);
+        self.dirty.set(true);
+        other.dirty.set(true);
     }
 }
 
@@ -77,6 +167,7 @@ impl LatencySeries {
 pub struct Counters {
     counts: Vec<(&'static str, u64)>,
     latencies: BTreeMap<&'static str, LatencySeries>,
+    telemetry: Telemetry,
 }
 
 impl Counters {
@@ -93,7 +184,7 @@ impl Counters {
     /// Add `n` to the monotonic counter `key`.
     pub fn add(&mut self, key: &'static str, n: u64) {
         for (k, v) in self.counts.iter_mut() {
-            if std::ptr::eq(*k as *const str, key as *const str) || *k == key {
+            if key_eq(k, key) {
                 *v += n;
                 return;
             }
@@ -105,7 +196,7 @@ impl Counters {
     pub fn get(&self, key: &'static str) -> u64 {
         self.counts
             .iter()
-            .find(|(k, _)| *k == key)
+            .find(|(k, _)| key_eq(k, key))
             .map(|&(_, v)| v)
             .unwrap_or(0)
     }
@@ -134,33 +225,62 @@ impl Counters {
         self.latencies.iter().map(|(&k, v)| (k, v))
     }
 
+    /// Set the telemetry recording level (see [`TelemetryLevel`]).
+    pub fn set_telemetry_level(&mut self, level: TelemetryLevel) {
+        self.telemetry.set_level(level);
+    }
+
+    /// The telemetry recording level in force.
+    pub fn telemetry_level(&self) -> TelemetryLevel {
+        self.telemetry.level()
+    }
+
+    /// The telemetry block (spans, gauges, histograms).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// Record an op-lifecycle stage span (no-op when telemetry is off).
+    pub fn span(&mut self, s: Span) {
+        self.telemetry.span(s);
+    }
+
+    /// Apply a queue-depth delta to occupancy gauge `(stage, id)`.
+    pub fn gauge(&mut self, stage: &'static str, id: u32, now: SimTime, delta: i64) {
+        self.telemetry.gauge(stage, id, now, delta);
+    }
+
+    /// Accumulate wire-occupancy time on a link.
+    pub fn wire_busy(&mut self, link: u32, busy: SimTime) {
+        self.telemetry.wire_busy(link, busy);
+    }
+
     /// Drain `other` into `self`: monotonic counts add, latency samples
-    /// append in `other`'s record order. Used by the threaded backend to
-    /// fold per-shard scratch counters into the master registry at
-    /// window boundaries — counts merge exactly; sample *order* follows
-    /// the merge order (the trace-compatibility relaxation; the sample
-    /// multiset is exact). `other` keeps its allocations (the count
-    /// table, its series map entries and their sample buffers), so a
-    /// scratch registry merged every window settles into zero-allocation
-    /// steady state.
+    /// append in `other`'s record order, telemetry folds per key. Used by
+    /// the threaded backend to fold per-shard scratch counters into the
+    /// master registry at window boundaries — counts merge exactly;
+    /// sample *order* follows the merge order (the trace-compatibility
+    /// relaxation; the sample multiset is exact). `other` keeps its
+    /// allocations (the count table, its series map entries and their
+    /// sample buffers), so a scratch registry merged every window
+    /// settles into zero-allocation steady state.
     pub fn merge_from(&mut self, other: &mut Counters) {
         for &(k, v) in other.counts.iter() {
             self.add(k, v);
         }
         other.counts.clear();
         for (&k, series) in other.latencies.iter_mut() {
-            self.latencies
-                .entry(k)
-                .or_default()
-                .samples_ps
-                .append(&mut series.samples_ps);
+            self.latencies.entry(k).or_default().append_from(series);
         }
+        self.telemetry.merge_from(&mut other.telemetry);
     }
 
-    /// Forget everything recorded so far.
+    /// Forget everything recorded so far (the telemetry *level* is kept;
+    /// recorded telemetry data is cleared).
     pub fn reset(&mut self) {
         self.counts.clear();
         self.latencies.clear();
+        self.telemetry.reset();
     }
 }
 
@@ -199,6 +319,47 @@ mod tests {
         let s = LatencySeries::default();
         assert_eq!(s.mean(), SimTime::ZERO);
         assert_eq!(s.percentile(50.0), SimTime::ZERO);
+        assert_eq!(s.summary(), LatencySummary::default());
+    }
+
+    #[test]
+    fn percentile_cache_invalidates_on_record() {
+        let mut s = LatencySeries::default();
+        s.record(SimTime::from_ns(10));
+        s.record(SimTime::from_ns(30));
+        assert_eq!(s.percentile(100.0), SimTime::from_ns(30));
+        // A new sample after a sorted query must be observed.
+        s.record(SimTime::from_ns(50));
+        assert_eq!(s.percentile(100.0), SimTime::from_ns(50));
+        assert_eq!(s.percentile(0.0), SimTime::from_ns(10));
+        // Record order is preserved regardless of sorted queries.
+        assert_eq!(s.samples(), &[10_000, 30_000, 50_000]);
+    }
+
+    #[test]
+    fn summary_matches_individual_queries() {
+        let mut s = LatencySeries::default();
+        for ns in [40, 10, 30, 20] {
+            s.record(SimTime::from_ns(ns));
+        }
+        let sum = s.summary();
+        assert_eq!(sum.count, 4);
+        assert_eq!(sum.min, s.min());
+        assert_eq!(sum.mean, s.mean());
+        assert_eq!(sum.p50, s.percentile(50.0));
+        assert_eq!(sum.p95, s.percentile(95.0));
+        assert_eq!(sum.p99, s.percentile(99.0));
+        assert_eq!(sum.max, s.max());
+    }
+
+    #[test]
+    fn get_uses_the_same_lookup_as_add() {
+        let mut c = Counters::new();
+        let key: &'static str = "hot_key";
+        c.add(key, 7);
+        // Same literal content through a different path still resolves.
+        assert_eq!(c.get("hot_key"), 7);
+        assert_eq!(c.get(key), 7);
     }
 
     #[test]
@@ -223,12 +384,55 @@ mod tests {
     }
 
     #[test]
-    fn reset_clears() {
+    fn merge_invalidates_the_sorted_cache() {
+        let mut a = Counters::new();
+        a.record_latency("l", SimTime::from_ns(5));
+        assert_eq!(a.latency("l").unwrap().percentile(100.0), SimTime::from_ns(5));
+        let mut b = Counters::new();
+        b.record_latency("l", SimTime::from_ns(9));
+        a.merge_from(&mut b);
+        assert_eq!(a.latency("l").unwrap().percentile(100.0), SimTime::from_ns(9));
+    }
+
+    #[test]
+    fn merge_carries_telemetry() {
+        let mut a = Counters::new();
+        a.set_telemetry_level(TelemetryLevel::Spans);
+        let mut b = Counters::new();
+        b.set_telemetry_level(TelemetryLevel::Spans);
+        b.span(Span::new("host", 0, 1, SimTime(0), SimTime(10)));
+        b.gauge("tx_fifo", 0, SimTime(0), 1);
+        b.wire_busy(2, SimTime(50));
+        a.merge_from(&mut b);
+        assert_eq!(a.telemetry().spans().len(), 1);
+        assert_eq!(a.telemetry().gauges()[&("tx_fifo", 0)].current(), 1);
+        assert_eq!(a.telemetry().link_busy()[&2], 50);
+        assert!(b.telemetry().spans().is_empty());
+    }
+
+    #[test]
+    fn telemetry_off_records_nothing_through_counters() {
         let mut c = Counters::new();
+        assert_eq!(c.telemetry_level(), TelemetryLevel::Off);
+        c.span(Span::new("host", 0, 1, SimTime(0), SimTime(10)));
+        c.gauge("tx_fifo", 0, SimTime(0), 1);
+        c.wire_busy(0, SimTime(50));
+        assert!(c.telemetry().spans().is_empty());
+        assert!(c.telemetry().gauges().is_empty());
+        assert!(c.telemetry().link_busy().is_empty());
+    }
+
+    #[test]
+    fn reset_clears_data_but_keeps_level() {
+        let mut c = Counters::new();
+        c.set_telemetry_level(TelemetryLevel::Spans);
         c.incr("x");
         c.record_latency("y", SimTime::from_ns(1));
+        c.span(Span::new("host", 0, 1, SimTime(0), SimTime(10)));
         c.reset();
         assert_eq!(c.get("x"), 0);
         assert!(c.latency("y").is_none());
+        assert!(c.telemetry().spans().is_empty());
+        assert_eq!(c.telemetry_level(), TelemetryLevel::Spans);
     }
 }

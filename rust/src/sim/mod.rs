@@ -28,12 +28,17 @@ pub mod parallel;
 pub mod queue;
 pub mod rng;
 pub mod shard;
+pub mod telemetry;
 pub mod time;
 
-pub use counters::{Counters, LatencySeries};
+pub use counters::{Counters, LatencySeries, LatencySummary};
 pub use engine::{Engine, Model, Sched};
 pub use parallel::{ParEngine, ParallelModel};
 pub use queue::{EventQueue, SeqKey};
 pub use rng::Rng;
 pub use shard::{ShardAdvance, ShardPlan, ShardingReport};
+pub use telemetry::{
+    chrome_trace, duration_summary, Gauge, LogHistogram, occupancy_summary, Span, StageDuration,
+    StageOccupancy, Telemetry, TelemetryLevel,
+};
 pub use time::{ClockDomain, SimTime};

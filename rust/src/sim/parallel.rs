@@ -74,6 +74,7 @@ use super::counters::Counters;
 use super::engine::{handler_stream, inject_stream, Model, Sched, StreamCtrs};
 use super::queue::{EventQueue, SeqKey};
 use super::shard::{report_from, ShardPlan, ShardStats, ShardingReport};
+use super::telemetry::TelemetryLevel;
 use super::time::SimTime;
 
 /// A [`Model`] whose state is partitioned into per-shard parts plus a
@@ -333,6 +334,17 @@ where
     /// Worker threads in use.
     pub fn threads(&self) -> u32 {
         self.threads
+    }
+
+    /// Set the telemetry recording level on the master registry and on
+    /// every lane's scratch registry (lane scratches are what handlers
+    /// write during a window; their telemetry folds into the master at
+    /// the window barrier).
+    pub fn set_telemetry_level(&mut self, level: TelemetryLevel) {
+        self.counters.set_telemetry_level(level);
+        for lane in self.lanes.iter_mut() {
+            lane.counters.set_telemetry_level(level);
+        }
     }
 
     /// Total events handled so far.

@@ -1,0 +1,837 @@
+//! Deterministic telemetry: op-lifecycle spans, time-weighted occupancy
+//! gauges, log-bucketed duration histograms, and Chrome-trace export.
+//!
+//! Everything here records **simulated** time, never wall clock, so the
+//! trace a run emits is a pure function of its `Config` — the same
+//! determinism contract the engines themselves honor:
+//!
+//! * `shards = off | auto | N` produce **bit-identical** span/gauge
+//!   series (same recording order, same values);
+//! * `engine_threads = N` is **trace-compatible**: per-key series are
+//!   identical, only the global append order of spans may differ, so the
+//!   canonically sorted view (and therefore every exported trace file)
+//!   is byte-identical.
+//!
+//! The second property holds because spans are sorted before export and
+//! every gauge key `(stage, node)` is owned by exactly one shard: the
+//! threaded backend's per-lane scratch → master merges preserve each
+//! key's event order even though windows interleave keys differently.
+//!
+//! Recording is gated by [`TelemetryLevel`]: `Off` is a provable no-op
+//! (early return before any allocation), `Counters` keeps aggregate
+//! gauges and duration histograms only, `Spans` additionally retains
+//! every span and gauge sample for export.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use super::shard::ShardingReport;
+use super::time::SimTime;
+
+/// How much telemetry the simulation records.
+///
+/// Config key `telemetry = off | counters | spans` (default `off`).
+/// Recording never schedules events or perturbs model state, so the
+/// level provably does not change simulation results — only what is
+/// observed about them.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum TelemetryLevel {
+    /// Record nothing (default). Zero-cost beyond a branch per site.
+    #[default]
+    Off,
+    /// Aggregates only: occupancy gauges (area/max) and log-bucketed
+    /// stage-duration histograms. Bounded memory under sustained load.
+    Counters,
+    /// Everything in `Counters` plus retained spans and gauge samples —
+    /// what `--trace-out` exports as a Chrome trace.
+    Spans,
+}
+
+impl TelemetryLevel {
+    /// Parse the config-file form (`off` / `counters` / `spans`).
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "off" => TelemetryLevel::Off,
+            "counters" => TelemetryLevel::Counters,
+            "spans" => TelemetryLevel::Spans,
+            other => bail!("telemetry must be off|counters|spans, got '{other}'"),
+        })
+    }
+
+    /// The config-file form (inverse of [`TelemetryLevel::parse`]).
+    pub fn as_cfg_value(&self) -> &'static str {
+        match self {
+            TelemetryLevel::Off => "off",
+            TelemetryLevel::Counters => "counters",
+            TelemetryLevel::Spans => "spans",
+        }
+    }
+}
+
+/// One op-lifecycle stage interval in simulated time.
+///
+/// Spans are plain values — no interior IDs, no recording-order
+/// artifacts — so bit-identity across engine backends reduces to
+/// "the same spans in the same order".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Span {
+    /// Node the stage executed on (trace process ID).
+    pub node: u32,
+    /// Stage name: `host`, `tx`, `wire`, `rx`, `dla`, `host_wake`, or a
+    /// completion stage `op:put` / `op:get` / `op:am` / `op:barrier` /
+    /// `op:compute` covering issue → completion.
+    pub stage: &'static str,
+    /// Owner-encoded op token this span belongs to (0 when anonymous),
+    /// the causal link between stages of one operation.
+    pub op: u32,
+    /// Stage start (ps).
+    pub t0: u64,
+    /// Stage end (ps).
+    pub t1: u64,
+    /// Stage-specific payload metric (usually bytes; MACs for `dla`).
+    pub detail: u64,
+    /// Optional static qualifier (e.g. the DLA op name). Empty if unused.
+    pub label: &'static str,
+}
+
+impl Span {
+    /// A span for `stage` on `node` covering `[t0, t1]`.
+    pub fn new(stage: &'static str, node: u32, op: u32, t0: SimTime, t1: SimTime) -> Self {
+        Span {
+            node,
+            stage,
+            op,
+            t0: t0.as_ps(),
+            t1: t1.as_ps(),
+            detail: 0,
+            label: "",
+        }
+    }
+
+    /// Attach the stage-specific payload metric (bytes, MACs, ...).
+    pub fn with_detail(mut self, detail: u64) -> Self {
+        self.detail = detail;
+        self
+    }
+
+    /// Attach a static qualifier label.
+    pub fn with_label(mut self, label: &'static str) -> Self {
+        self.label = label;
+        self
+    }
+
+    /// Span duration.
+    pub fn duration(&self) -> SimTime {
+        SimTime(self.t1.saturating_sub(self.t0))
+    }
+}
+
+/// A time-weighted queue-depth gauge.
+///
+/// Depth changes are recorded at simulated instants; the gauge keeps the
+/// exact time integral (`area`), the running maximum, and — at the
+/// `Spans` level — every `(time, depth)` sample for counter-track
+/// export. Changes for one gauge key always arrive in nondecreasing
+/// time order (they are per-node event-handler side effects).
+#[derive(Debug, Default, Clone)]
+pub struct Gauge {
+    cur: i64,
+    started: bool,
+    first_ts: u64,
+    last_ts: u64,
+    area: i128,
+    max: i64,
+    samples: Vec<(u64, i64)>,
+}
+
+impl Gauge {
+    /// Apply a depth delta at `now`, advancing the time integral first.
+    pub fn change(&mut self, now: SimTime, delta: i64, keep_samples: bool) {
+        let t = now.as_ps();
+        if self.started {
+            debug_assert!(t >= self.last_ts, "gauge time went backwards");
+            self.area += self.cur as i128 * t.saturating_sub(self.last_ts) as i128;
+        } else {
+            self.started = true;
+            self.first_ts = t;
+        }
+        self.last_ts = t;
+        self.cur += delta;
+        if self.cur > self.max {
+            self.max = self.cur;
+        }
+        if keep_samples {
+            self.samples.push((t, self.cur));
+        }
+    }
+
+    /// Current depth.
+    pub fn current(&self) -> i64 {
+        self.cur
+    }
+
+    /// Maximum depth ever observed.
+    pub fn max_depth(&self) -> i64 {
+        self.max
+    }
+
+    /// First instant this gauge changed (ps); 0 if never touched.
+    pub fn first_ts(&self) -> u64 {
+        if self.started { self.first_ts } else { 0 }
+    }
+
+    /// Retained `(time_ps, depth)` samples (`Spans` level only).
+    pub fn samples(&self) -> &[(u64, i64)] {
+        &self.samples
+    }
+
+    /// The depth-time integral from the first change through `end`
+    /// (depth · picoseconds), extending the last known depth to `end`.
+    pub fn area_until(&self, end: SimTime) -> i128 {
+        if !self.started {
+            return 0;
+        }
+        self.area + self.cur as i128 * end.as_ps().saturating_sub(self.last_ts) as i128
+    }
+
+    /// Fold a scratch gauge for the *same key* into this one, draining
+    /// it. The scratch is the live view (the threaded backend mutates
+    /// only lane-local scratches between barriers), so its current depth
+    /// and clock are adopted wholesale; the accumulated area transfers
+    /// additively. Valid only because each key has a single owner shard.
+    pub fn merge_from(&mut self, other: &mut Gauge) {
+        if other.started {
+            if !self.started {
+                self.started = true;
+                self.first_ts = other.first_ts;
+            }
+            self.last_ts = other.last_ts;
+            self.cur = other.cur;
+        }
+        self.area += other.area;
+        other.area = 0;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        self.samples.append(&mut other.samples);
+    }
+}
+
+/// Number of histogram buckets: one per bit position of a `u64` value,
+/// plus the dedicated zero bucket.
+const HIST_BUCKETS: usize = 65;
+
+/// A log-bucketed duration histogram (power-of-two buckets).
+///
+/// Replaces unbounded retained-sample percentile vectors on
+/// sustained-traffic paths: memory is O(1), recording is O(1), and
+/// percentiles resolve to the bucket's upper bound (clamped to the
+/// observed min/max), which is exact at the extremes and within 2x
+/// elsewhere — ample for stage-duration tails.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl LogHistogram {
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Record one duration.
+    pub fn record(&mut self, d: SimTime) {
+        let v = d.as_ps();
+        self.buckets[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Number of recorded durations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Smallest recorded duration (zero when empty).
+    pub fn min(&self) -> SimTime {
+        if self.count == 0 {
+            SimTime::ZERO
+        } else {
+            SimTime(self.min)
+        }
+    }
+
+    /// Largest recorded duration.
+    pub fn max(&self) -> SimTime {
+        SimTime(self.max)
+    }
+
+    /// Mean recorded duration.
+    pub fn mean(&self) -> SimTime {
+        if self.count == 0 {
+            SimTime::ZERO
+        } else {
+            SimTime((self.sum / self.count as u128) as u64)
+        }
+    }
+
+    /// Nearest-rank percentile, resolved to the containing bucket's
+    /// upper bound and clamped to the observed `[min, max]`. `p` in
+    /// `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> SimTime {
+        if self.count == 0 {
+            return SimTime::ZERO;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let upper = match i {
+                    0 => 0,
+                    64 => u64::MAX,
+                    _ => (1u64 << i) - 1,
+                };
+                return SimTime(upper.clamp(self.min, self.max));
+            }
+        }
+        SimTime(self.max)
+    }
+
+    /// Fold `other` into this histogram, draining it.
+    pub fn merge_from(&mut self, other: &mut LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 {
+            if other.min < self.min {
+                self.min = other.min;
+            }
+            if other.max > self.max {
+                self.max = other.max;
+            }
+        }
+        *other = LogHistogram::default();
+    }
+}
+
+/// All telemetry recorded by one `Counters` instance.
+///
+/// The threaded engine gives each lane a scratch `Telemetry` (inside its
+/// scratch `Counters`) and folds it into the master at window barriers
+/// via [`Telemetry::merge_from`] — the same channel latency samples
+/// already ride.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    level: TelemetryLevel,
+    spans: Vec<Span>,
+    gauges: BTreeMap<(&'static str, u32), Gauge>,
+    durations: BTreeMap<&'static str, LogHistogram>,
+    link_busy: BTreeMap<u32, u64>,
+}
+
+impl Telemetry {
+    /// Set the recording level (survives [`Telemetry::reset`]).
+    pub fn set_level(&mut self, level: TelemetryLevel) {
+        self.level = level;
+    }
+
+    /// The current recording level.
+    pub fn level(&self) -> TelemetryLevel {
+        self.level
+    }
+
+    /// Record a stage span: its duration always feeds the per-stage
+    /// histogram; the span itself is retained only at `Spans` level.
+    pub fn span(&mut self, s: Span) {
+        if self.level == TelemetryLevel::Off {
+            return;
+        }
+        self.durations.entry(s.stage).or_default().record(s.duration());
+        if self.level == TelemetryLevel::Spans {
+            self.spans.push(s);
+        }
+    }
+
+    /// Apply a queue-depth delta to gauge `(stage, id)` at `now`.
+    pub fn gauge(&mut self, stage: &'static str, id: u32, now: SimTime, delta: i64) {
+        if self.level == TelemetryLevel::Off {
+            return;
+        }
+        let keep = self.level == TelemetryLevel::Spans;
+        self.gauges.entry((stage, id)).or_default().change(now, delta, keep);
+    }
+
+    /// Accumulate wire-occupancy time on a link (additive, so exact
+    /// under any merge order — per-link ±1 gauges would not be, because
+    /// a link's two endpoints can live on different shards).
+    pub fn wire_busy(&mut self, link: u32, busy: SimTime) {
+        if self.level == TelemetryLevel::Off {
+            return;
+        }
+        *self.link_busy.entry(link).or_insert(0) += busy.as_ps();
+    }
+
+    /// Recorded spans in append order (bit-identical across `shards`
+    /// backends; threaded append order may differ — see
+    /// [`Telemetry::sorted_spans`]).
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Spans under the canonical total order — identical across *all*
+    /// engine backends of one config (the trace-compatibility form).
+    pub fn sorted_spans(&self) -> Vec<Span> {
+        let mut v = self.spans.clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// All gauges, keyed by `(stage, node)`.
+    pub fn gauges(&self) -> &BTreeMap<(&'static str, u32), Gauge> {
+        &self.gauges
+    }
+
+    /// Per-stage duration histograms.
+    pub fn durations(&self) -> &BTreeMap<&'static str, LogHistogram> {
+        &self.durations
+    }
+
+    /// Per-link accumulated wire-busy picoseconds.
+    pub fn link_busy(&self) -> &BTreeMap<u32, u64> {
+        &self.link_busy
+    }
+
+    /// Fold a scratch `Telemetry` into this one, draining it (scratch
+    /// gauges keep their live depth/clock so the next window continues
+    /// seamlessly).
+    pub fn merge_from(&mut self, other: &mut Telemetry) {
+        self.spans.append(&mut other.spans);
+        for (k, g) in other.gauges.iter_mut() {
+            self.gauges.entry(*k).or_default().merge_from(g);
+        }
+        for (k, h) in other.durations.iter_mut() {
+            self.durations.entry(*k).or_default().merge_from(h);
+        }
+        for (k, b) in other.link_busy.iter_mut() {
+            *self.link_busy.entry(*k).or_insert(0) += *b;
+            *b = 0;
+        }
+    }
+
+    /// Clear all recorded data, keeping the level.
+    pub fn reset(&mut self) {
+        self.spans.clear();
+        self.gauges.clear();
+        self.durations.clear();
+        self.link_busy.clear();
+    }
+}
+
+/// Aggregated occupancy of one pipeline stage across all nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageOccupancy {
+    /// Stage name (gauge key prefix).
+    pub stage: &'static str,
+    /// Number of per-node gauges contributing.
+    pub gauges: u32,
+    /// Time-weighted mean depth, summed across nodes, from the stage's
+    /// first activity through the run end.
+    pub mean_depth: f64,
+    /// Maximum depth any single node's queue reached.
+    pub max_depth: i64,
+}
+
+/// Time-weighted occupancy per stage, measured through `end`.
+pub fn occupancy_summary(t: &Telemetry, end: SimTime) -> Vec<StageOccupancy> {
+    let mut stages: BTreeMap<&'static str, (u32, i128, u64, i64)> = BTreeMap::new();
+    for ((stage, _id), g) in t.gauges() {
+        let e = stages.entry(stage).or_insert((0, 0, u64::MAX, 0));
+        e.0 += 1;
+        e.1 += g.area_until(end);
+        e.2 = e.2.min(g.first_ts());
+        e.3 = e.3.max(g.max_depth());
+    }
+    stages
+        .into_iter()
+        .map(|(stage, (n, area, first, max))| {
+            let window = end.as_ps().saturating_sub(first);
+            StageOccupancy {
+                stage,
+                gauges: n,
+                mean_depth: if window == 0 {
+                    0.0
+                } else {
+                    area as f64 / window as f64
+                },
+                max_depth: max,
+            }
+        })
+        .collect()
+}
+
+/// Duration distribution of one stage (from its log histogram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageDuration {
+    /// Stage name.
+    pub stage: &'static str,
+    /// Spans recorded.
+    pub count: u64,
+    /// Mean duration.
+    pub mean: SimTime,
+    /// 50th percentile (bucket-resolved).
+    pub p50: SimTime,
+    /// 95th percentile (bucket-resolved).
+    pub p95: SimTime,
+    /// 99th percentile (bucket-resolved).
+    pub p99: SimTime,
+    /// Largest duration (exact).
+    pub max: SimTime,
+}
+
+/// Per-stage duration summaries from the recorded histograms.
+pub fn duration_summary(t: &Telemetry) -> Vec<StageDuration> {
+    t.durations()
+        .iter()
+        .map(|(stage, h)| StageDuration {
+            stage,
+            count: h.count(),
+            mean: h.mean(),
+            p50: h.percentile(50.0),
+            p95: h.percentile(95.0),
+            p99: h.percentile(99.0),
+            max: h.max(),
+        })
+        .collect()
+}
+
+/// Trace process ID hosting the threaded-engine per-shard profiling
+/// track (chosen far above any valid node ID).
+pub const PROFILE_PID: u32 = 1 << 20;
+
+/// Thread (track) index within a node's process for a stage name.
+fn stage_tid(stage: &'static str) -> (u32, &'static str) {
+    match stage {
+        "host" => (0, "host"),
+        "tx" => (1, "tx"),
+        "wire" => (2, "wire"),
+        "rx" => (3, "rx"),
+        "dla" => (4, "dla"),
+        "host_wake" => (6, "host_wake"),
+        _ => (5, "op"),
+    }
+}
+
+/// Picoseconds rendered as a decimal-microsecond JSON number (exact
+/// fixed point — never a float, so traces are byte-stable).
+fn us(ps: u64) -> String {
+    format!("{}.{:06}", ps / 1_000_000, ps % 1_000_000)
+}
+
+fn push_span_event(out: &mut Vec<String>, s: &Span, tid: u32) {
+    let name = if s.label.is_empty() { s.stage } else { s.label };
+    let mut ev = String::new();
+    let _ = write!(
+        ev,
+        "{{\"name\":\"{name}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+         \"pid\":{},\"tid\":{tid},\"args\":{{\"op\":{},\"detail\":{}}}}}",
+        s.stage,
+        us(s.t0),
+        us(s.t1.saturating_sub(s.t0)),
+        s.node,
+        s.op,
+        s.detail
+    );
+    out.push(ev);
+}
+
+fn push_meta(out: &mut Vec<String>, name: &str, pid: u32, tid: Option<u32>, value: &str) {
+    let mut ev = String::new();
+    let _ = write!(ev, "{{\"name\":\"{name}\",\"ph\":\"M\",\"pid\":{pid}");
+    if let Some(t) = tid {
+        let _ = write!(ev, ",\"tid\":{t}");
+    }
+    let _ = write!(ev, ",\"args\":{{\"name\":\"{value}\"}}}}");
+    out.push(ev);
+}
+
+/// Render a Chrome-trace ("Trace Event Format") JSON document from the
+/// recorded telemetry: one process per node, one thread per stage,
+/// spans as `X` duration events, gauges as `C` counter events, and —
+/// when a threaded-engine [`ShardingReport`] is supplied — a profiling
+/// process showing per-shard busy vs. barrier-wait wall time.
+///
+/// Events are canonically sorted before rendering, so the document is
+/// byte-identical across every engine backend of one config. Open the
+/// file at <https://ui.perfetto.dev> or `chrome://tracing`.
+pub fn chrome_trace(t: &Telemetry, sharding: Option<&ShardingReport>) -> String {
+    let mut events: Vec<String> = Vec::new();
+
+    // Metadata: name every node process and stage thread that appears.
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    let mut tracks: BTreeSet<(u32, u32, &'static str)> = BTreeSet::new();
+    for s in t.spans() {
+        let (tid, tname) = stage_tid(s.stage);
+        pids.insert(s.node);
+        tracks.insert((s.node, tid, tname));
+    }
+    for (_stage, id) in t.gauges().keys() {
+        pids.insert(*id);
+    }
+    for pid in &pids {
+        push_meta(&mut events, "process_name", *pid, None, &format!("node {pid}"));
+    }
+    for (pid, tid, tname) in &tracks {
+        push_meta(&mut events, "thread_name", *pid, Some(*tid), tname);
+    }
+
+    // Spans, canonically ordered: (node, tid, t0, ...) keeps ts
+    // monotone within every (pid, tid) track.
+    let mut spans = t.sorted_spans();
+    spans.sort_by_key(|s| (s.node, stage_tid(s.stage).0, s.t0, s.t1));
+    for s in &spans {
+        push_span_event(&mut events, s, stage_tid(s.stage).0);
+    }
+
+    // Gauges as counter tracks (one per stage per node).
+    for ((stage, id), g) in t.gauges() {
+        for (ts, depth) in g.samples() {
+            let mut ev = String::new();
+            let _ = write!(
+                ev,
+                "{{\"name\":\"{stage}\",\"ph\":\"C\",\"ts\":{},\"pid\":{id},\"tid\":0,\
+                 \"args\":{{\"depth\":{depth}}}}}",
+                us(*ts)
+            );
+            events.push(ev);
+        }
+    }
+
+    // Threaded-engine profiling track: per-shard busy vs. barrier wait.
+    if let Some(sh) = sharding {
+        push_meta(&mut events, "process_name", PROFILE_PID, None, "engine workers");
+        for s in &sh.shards {
+            push_meta(
+                &mut events,
+                "thread_name",
+                PROFILE_PID,
+                Some(s.shard),
+                &format!("shard {}", s.shard),
+            );
+            let busy_us = format!("{}.{:03}", s.busy_ns / 1_000, s.busy_ns % 1_000);
+            let mut ev = String::new();
+            let _ = write!(
+                ev,
+                "{{\"name\":\"busy\",\"cat\":\"engine\",\"ph\":\"X\",\"ts\":0.000,\
+                 \"dur\":{busy_us},\"pid\":{PROFILE_PID},\"tid\":{},\
+                 \"args\":{{\"events\":{},\"sent_cross\":{},\"recv_cross\":{},\
+                 \"nodes\":{}}}}}",
+                s.shard,
+                s.events,
+                s.sent_cross,
+                s.recv_cross,
+                s.owned
+            );
+            events.push(ev);
+            let wait = sh.window_wall_ns.saturating_sub(s.busy_ns);
+            let mut ev = String::new();
+            let _ = write!(
+                ev,
+                "{{\"name\":\"barrier_wait\",\"cat\":\"engine\",\"ph\":\"X\",\
+                 \"ts\":{busy_us},\"dur\":{}.{:03},\"pid\":{PROFILE_PID},\
+                 \"tid\":{},\"args\":{{}}}}",
+                wait / 1_000,
+                wait % 1_000,
+                s.shard
+            );
+            events.push(ev);
+        }
+    }
+
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(&events.join(",\n"));
+    out.push_str("\n],\"displayTimeUnit\":\"ns\"}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parses_and_round_trips() {
+        for v in ["off", "counters", "spans"] {
+            assert_eq!(TelemetryLevel::parse(v).unwrap().as_cfg_value(), v);
+        }
+        assert!(TelemetryLevel::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn off_records_nothing() {
+        let mut t = Telemetry::default();
+        t.span(Span::new("host", 0, 1, SimTime(0), SimTime(10)));
+        t.gauge("tx_fifo", 0, SimTime(5), 1);
+        t.wire_busy(0, SimTime(100));
+        assert!(t.spans().is_empty());
+        assert!(t.gauges().is_empty());
+        assert!(t.durations().is_empty());
+        assert!(t.link_busy().is_empty());
+    }
+
+    #[test]
+    fn counters_level_aggregates_without_retaining() {
+        let mut t = Telemetry::default();
+        t.set_level(TelemetryLevel::Counters);
+        t.span(Span::new("host", 0, 1, SimTime(0), SimTime(10)));
+        t.gauge("tx_fifo", 0, SimTime(5), 1);
+        assert!(t.spans().is_empty(), "spans not retained at counters level");
+        assert_eq!(t.durations()["host"].count(), 1);
+        let g = &t.gauges()[&("tx_fifo", 0)];
+        assert_eq!(g.current(), 1);
+        assert!(g.samples().is_empty(), "samples not retained at counters level");
+    }
+
+    #[test]
+    fn gauge_area_is_the_exact_time_integral() {
+        let mut g = Gauge::default();
+        g.change(SimTime(100), 1, true); // depth 1 from t=100
+        g.change(SimTime(300), 1, true); // depth 2 from t=300
+        g.change(SimTime(400), -2, true); // depth 0 from t=400
+        // 1 * 200 + 2 * 100 = 400 depth-ps so far.
+        assert_eq!(g.area_until(SimTime(400)), 400);
+        // Depth 0 extends for free.
+        assert_eq!(g.area_until(SimTime(1_000)), 400);
+        assert_eq!(g.max_depth(), 2);
+        assert_eq!(g.first_ts(), 100);
+        assert_eq!(g.samples(), &[(100, 1), (300, 2), (400, 0)]);
+    }
+
+    #[test]
+    fn gauge_merge_adopts_live_state_and_drains_area() {
+        let mut master = Gauge::default();
+        let mut scratch = Gauge::default();
+        scratch.change(SimTime(10), 1, false);
+        master.merge_from(&mut scratch);
+        assert_eq!(master.current(), 1);
+        assert_eq!(master.first_ts(), 10);
+        // Scratch keeps its live depth and clock; area continues there.
+        scratch.change(SimTime(30), 1, false);
+        master.merge_from(&mut scratch);
+        assert_eq!(master.current(), 2);
+        assert_eq!(master.area_until(SimTime(30)), 20, "1 * (30 - 10)");
+        assert_eq!(master.max_depth(), 2);
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_the_samples() {
+        let mut h = LogHistogram::default();
+        for v in [100, 200, 400, 800, 100_000] {
+            h.record(SimTime(v));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), SimTime(100));
+        assert_eq!(h.max(), SimTime(100_000));
+        assert_eq!(h.mean(), SimTime(20_300));
+        // p50 -> third sample (400), bucket upper bound 511.
+        assert_eq!(h.percentile(50.0), SimTime(511));
+        // p100 clamps to the exact max.
+        assert_eq!(h.percentile(100.0), SimTime(100_000));
+        // p0 resolves to the lowest non-empty bucket, clamped to min.
+        assert_eq!(h.percentile(0.0), SimTime(127));
+        let empty = LogHistogram::default();
+        assert_eq!(empty.percentile(99.0), SimTime::ZERO);
+        assert_eq!(empty.min(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn histogram_merge_drains() {
+        let mut a = LogHistogram::default();
+        let mut b = LogHistogram::default();
+        a.record(SimTime(10));
+        b.record(SimTime(1_000));
+        a.merge_from(&mut b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), SimTime(10));
+        assert_eq!(a.max(), SimTime(1_000));
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn telemetry_merge_appends_spans_in_order() {
+        let mut master = Telemetry::default();
+        master.set_level(TelemetryLevel::Spans);
+        let mut scratch = Telemetry::default();
+        scratch.set_level(TelemetryLevel::Spans);
+        master.span(Span::new("host", 0, 1, SimTime(0), SimTime(5)));
+        scratch.span(Span::new("rx", 1, 1, SimTime(10), SimTime(20)));
+        scratch.wire_busy(3, SimTime(7));
+        master.merge_from(&mut scratch);
+        assert_eq!(master.spans().len(), 2);
+        assert_eq!(master.spans()[1].stage, "rx");
+        assert_eq!(master.link_busy()[&3], 7);
+        assert!(scratch.spans().is_empty());
+    }
+
+    #[test]
+    fn occupancy_and_duration_summaries() {
+        let mut t = Telemetry::default();
+        t.set_level(TelemetryLevel::Spans);
+        t.gauge("tx_fifo", 0, SimTime(0), 1);
+        t.gauge("tx_fifo", 0, SimTime(100), -1);
+        t.gauge("tx_fifo", 1, SimTime(0), 2);
+        t.span(Span::new("host", 0, 1, SimTime(0), SimTime(64)));
+        let occ = occupancy_summary(&t, SimTime(200));
+        assert_eq!(occ.len(), 1);
+        assert_eq!(occ[0].stage, "tx_fifo");
+        assert_eq!(occ[0].gauges, 2);
+        assert_eq!(occ[0].max_depth, 2);
+        // node 0: 1 * 100; node 1: 2 * 200; window 200 ps.
+        assert!((occ[0].mean_depth - (100.0 + 400.0) / 200.0).abs() < 1e-9);
+        let dur = duration_summary(&t);
+        assert_eq!(dur.len(), 1);
+        assert_eq!(dur[0].stage, "host");
+        assert_eq!(dur[0].count, 1);
+        assert_eq!(dur[0].max, SimTime(64));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_shape() {
+        let mut t = Telemetry::default();
+        t.set_level(TelemetryLevel::Spans);
+        t.span(Span::new("host", 0, 7, SimTime(1_000), SimTime(2_500)));
+        t.gauge("tx_fifo", 0, SimTime(1_000), 1);
+        let json = chrome_trace(&t, None);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"C\""));
+        assert!(json.contains("\"ph\":\"M\""));
+        assert!(json.contains("\"ts\":0.001000"), "ps render as fixed-point us");
+        // Identical telemetry renders byte-identically.
+        assert_eq!(json, chrome_trace(&t, None));
+    }
+}

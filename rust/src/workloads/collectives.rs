@@ -17,7 +17,7 @@
 use crate::collectives::{spmd, Algo};
 use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::fabric::Topology;
-use crate::sim::SimTime;
+use crate::sim::{ShardingReport, SimTime, Telemetry, TelemetryLevel};
 
 /// One sweep point: a fabric shape and a payload size.
 #[derive(Debug, Clone)]
@@ -145,6 +145,28 @@ fn run_point(topo: Topology, count: usize, algo: Option<Algo>) -> (SimTime, u64,
         "{topo:?} x{count}: threaded engine must be trace-compatible"
     );
     (t_mono, jobs, macs)
+}
+
+/// One representative allreduce — ring(8), the largest swept payload,
+/// the `auto` selector — run with telemetry enabled: the raw material
+/// for the report's stage-occupancy tables and `--trace-out`. Returns
+/// the recorded telemetry, the shard advance stats (none: this runs on
+/// the monolithic engine), and the absolute simulated end time.
+pub fn run_instrumented(
+    fast: bool,
+    level: TelemetryLevel,
+) -> (Telemetry, Option<ShardingReport>, SimTime) {
+    let count = *payloads(fast).last().expect("payload axis is non-empty");
+    let cfg = point_config(Topology::Ring(8), None).with_telemetry(level);
+    let mut s = crate::program::Spmd::new(cfg);
+    let n = s.nodes();
+    let sig = s.register_signal(21);
+    for node in 0..n {
+        let v: Vec<f32> = (0..count).map(|i| ((node + 1) + (i as u32 % 13)) as f32).collect();
+        s.write_local_f16(node, 0, &v);
+    }
+    let report = s.run(move |r| spmd::allreduce_sum_f16(r, sig, 0, count, 0x40_0000));
+    (s.counters().telemetry().clone(), report.shards, report.end)
 }
 
 /// The full sweep (`--fast` trims both axes).

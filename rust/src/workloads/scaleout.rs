@@ -30,7 +30,7 @@ use crate::dla::{DlaJob, DlaOp};
 use crate::fabric::Topology;
 use crate::memory::GlobalAddr;
 use crate::program::{RankTimeline, Spmd};
-use crate::sim::{ShardingReport, SimTime};
+use crate::sim::{ShardingReport, SimTime, Telemetry, TelemetryLevel};
 
 /// What moves between ranks at each bulk-synchronous step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -165,12 +165,25 @@ fn point_config(
     cfg
 }
 
-/// Run the kernel once on `cfg`; returns (makespan, rank timelines,
-/// shard stats, wall-clock).
-fn run_point(
-    cfg: Config,
-    case: &ScaleoutCase,
-) -> (SimTime, Vec<RankTimeline>, Option<ShardingReport>, Duration) {
+/// Everything one kernel run produced.
+struct PointRun {
+    /// Simulated makespan (slowest rank's finish).
+    elapsed: SimTime,
+    /// Per-rank issue timelines.
+    ranks: Vec<RankTimeline>,
+    /// Per-shard advance statistics (`shards != off`).
+    shards: Option<ShardingReport>,
+    /// Wall-clock the run cost the host.
+    wall: Duration,
+    /// Telemetry the engine recorded (empty unless `cfg.telemetry` asked
+    /// for it).
+    telemetry: Telemetry,
+    /// Absolute simulated end time (occupancy windows measure to here).
+    end: SimTime,
+}
+
+/// Run the kernel once on `cfg`.
+fn run_point(cfg: Config, case: &ScaleoutCase) -> PointRun {
     let n = cfg.topology.nodes();
     assert!(
         case.total_jobs % n == 0,
@@ -238,12 +251,14 @@ fn run_point(
             }
         }
     });
-    (
-        report.max_finish().since(t0),
-        report.rank_timelines(),
-        report.shards,
-        wall.elapsed(),
-    )
+    PointRun {
+        elapsed: report.max_finish().since(t0),
+        ranks: report.rank_timelines(),
+        shards: report.shards,
+        wall: wall.elapsed(),
+        telemetry: spmd.counters().telemetry().clone(),
+        end: report.end,
+    }
 }
 
 /// Run the kernel on an n-node ring under the given engine partitioning;
@@ -255,8 +270,25 @@ pub fn run_one(
     shards: ShardSpec,
 ) -> (SimTime, Vec<RankTimeline>, Option<ShardingReport>) {
     let cfg = point_config(n, shards, ThreadSpec::Off, Numerics::TimingOnly, false);
-    let (elapsed, ranks, shard_stats, _) = run_point(cfg, case);
-    (elapsed, ranks, shard_stats)
+    let run = run_point(cfg, case);
+    (run.elapsed, run.ranks, run.shards)
+}
+
+/// Run one sweep point with telemetry enabled — the raw material for the
+/// report's stage-occupancy tables and the `--trace-out` Chrome trace
+/// (run on whatever engine `shards` selects, so the exported spans are
+/// the sweep's own). Returns the recorded telemetry, the shard advance
+/// stats, and the absolute simulated end time occupancy is measured to.
+pub fn run_instrumented(
+    n: u32,
+    case: &ScaleoutCase,
+    shards: ShardSpec,
+    level: TelemetryLevel,
+) -> (Telemetry, Option<ShardingReport>, SimTime) {
+    let cfg = point_config(n, shards, ThreadSpec::Off, Numerics::TimingOnly, false)
+        .with_telemetry(level);
+    let run = run_point(cfg, case);
+    (run.telemetry, run.shards, run.end)
 }
 
 /// One row of the topology sweep.
@@ -311,14 +343,14 @@ pub fn run_topologies(
             .with_numerics(numerics)
             .with_shards(clamp_shards(shards, n));
         cfg.topology = topo;
-        let (elapsed, ranks, shard_stats, wall) = run_point(cfg, &c);
+        let run = run_point(cfg, &c);
         rows.push(TopoRow {
             label,
             nodes: n,
-            elapsed,
-            ranks,
-            shards: shard_stats,
-            wall,
+            elapsed: run.elapsed,
+            ranks: run.ranks,
+            shards: run.shards,
+            wall: run.wall,
         });
     }
     rows
@@ -362,14 +394,14 @@ pub fn run_kilonode(
         if threads != ThreadSpec::Off {
             cfg.host_wake = cfg.link.propagation;
         }
-        let (elapsed, ranks, shard_stats, wall) = run_point(cfg, &c);
+        let run = run_point(cfg, &c);
         rows.push(TopoRow {
             label,
             nodes: n,
-            elapsed,
-            ranks,
-            shards: shard_stats,
-            wall,
+            elapsed: run.elapsed,
+            ranks: run.ranks,
+            shards: run.shards,
+            wall: run.wall,
         });
     }
     rows
@@ -395,8 +427,8 @@ pub fn run_sweep(
     for &n in node_counts {
         let (elapsed, ranks, shard_stats, par, wall) = if threads == ThreadSpec::Off {
             let cfg = point_config(n, shards, ThreadSpec::Off, numerics, false);
-            let (elapsed, ranks, stats, wall) = run_point(cfg, case);
-            (elapsed, ranks, stats, None, wall)
+            let run = run_point(cfg, case);
+            (run.elapsed, run.ranks, run.shards, None, run.wall)
         } else {
             // Threads need sharding; promote `shards = off` to auto so
             // `--engine-threads` alone does the expected thing.
@@ -409,25 +441,25 @@ pub fn run_sweep(
             let mut par_cfg = point_config(n, shards, threads, numerics, true);
             par_cfg.validate().expect("threaded sweep config");
             let par_threads = par_cfg.engine_thread_count().unwrap_or(1);
-            let (e_seq, ranks, seq_stats, wall_seq) = run_point(seq_cfg, case);
-            let (e_par, ranks_par, par_stats, wall_par) = run_point(par_cfg, case);
+            let seq = run_point(seq_cfg, case);
+            let par_run = run_point(par_cfg, case);
             assert_eq!(
-                e_seq, e_par,
+                seq.elapsed, par_run.elapsed,
                 "{n} nodes: threaded run must be trace-compatible (same makespan)"
             );
             assert_eq!(
-                ranks, ranks_par,
+                seq.ranks, par_run.ranks,
                 "{n} nodes: threaded run must reproduce the issue timelines"
             );
             let cmp = ParallelCompare {
                 threads: par_threads,
-                wall_seq,
-                wall_par,
-                wall_speedup: wall_seq.as_secs_f64()
-                    / wall_par.as_secs_f64().max(1e-9),
-                shards: par_stats,
+                wall_seq: seq.wall,
+                wall_par: par_run.wall,
+                wall_speedup: seq.wall.as_secs_f64()
+                    / par_run.wall.as_secs_f64().max(1e-9),
+                shards: par_run.shards,
             };
-            (e_seq, ranks, seq_stats, Some(cmp), wall_seq)
+            (seq.elapsed, seq.ranks, seq.shards, Some(cmp), seq.wall)
         };
         let t = elapsed.as_ps() as f64;
         let b = *base.get_or_insert(t);

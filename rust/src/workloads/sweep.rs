@@ -175,11 +175,21 @@ pub struct LatencyResults {
     pub get_long_us: f64,
 }
 
+/// The Table III measurement config (1024 B packets, single-cable
+/// methodology) — public so `bench latency` can layer telemetry on it.
+pub fn latency_config() -> Config {
+    sweep_config(1024)
+}
+
 /// Measure PUT/GET header latencies. Short = no payload; long = averaged
 /// over payloads 4 B..2 MB (the paper's definition).
 pub fn measure_latencies() -> LatencyResults {
-    let mut f = Fshmem::new(sweep_config(1024));
+    measure_latencies_on(&mut Fshmem::new(latency_config()))
+}
 
+/// [`measure_latencies`] against a caller-built world (so the caller can
+/// enable telemetry or otherwise instrument the run).
+pub fn measure_latencies_on(f: &mut Fshmem) -> LatencyResults {
     // Short messages.
     let h = f.put(0, f.global_addr(1, 0), &[]);
     f.wait(h);

@@ -96,6 +96,7 @@ fn documented_keys_round_trip_through_the_parser() {
             "host_wake_ns" => "200",
             "collectives.algo" => "auto",
             "collectives.reduce" => "auto",
+            "telemetry" => "counters",
             "seed" => "7",
             other => panic!("doc documents unknown key '{other}'"),
         };

@@ -321,6 +321,49 @@ fn compat_across_shard_maps() {
 }
 
 #[test]
+fn telemetry_trace_compatible_under_threads() {
+    // `telemetry = spans` under worker threads: the canonically sorted
+    // span multiset, every per-key gauge series, the link-busy
+    // integrals, the duration histograms, and the exported Chrome-trace
+    // document must all be identical to the sequential sharded run's —
+    // only the raw span append order may differ.
+    use fshmem::sim::{chrome_trace, duration_summary, TelemetryLevel};
+    let seed = 0x7E1E;
+    let run = |threads: ThreadSpec| {
+        let mut s = Spmd::new(
+            pcfg(Config::ring(6), ShardSpec::Auto, threads)
+                .with_telemetry(TelemetryLevel::Spans),
+        );
+        let report = s.run(|r| random_program(r, seed, 2, 4));
+        let t = s.counters().telemetry();
+        let gauges: Vec<_> = t
+            .gauges()
+            .iter()
+            .map(|(k, g)| {
+                (
+                    *k,
+                    g.current(),
+                    g.max_depth(),
+                    g.area_until(report.end),
+                    g.samples().to_vec(),
+                )
+            })
+            .collect();
+        (
+            t.sorted_spans(),
+            gauges,
+            t.link_busy().clone(),
+            duration_summary(t),
+            chrome_trace(t, None),
+        )
+    };
+    let seq = run(ThreadSpec::Off);
+    assert!(!seq.0.is_empty(), "spans recorded");
+    assert_eq!(seq, run(ThreadSpec::Auto), "auto threads");
+    assert_eq!(seq, run(ThreadSpec::Count(2)), "2 threads");
+}
+
+#[test]
 #[ignore = "wall-clock perf assertion; CI runs it in the scaleout-wallclock job"]
 fn timing_only_pool_wall_clock_smoke() {
     // The persistent-pool acceptance bar: on a timing-only >= 64-node

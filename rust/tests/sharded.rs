@@ -296,6 +296,73 @@ fn equivalence_across_shard_maps() {
 }
 
 #[test]
+fn telemetry_spans_bit_identical_across_shards() {
+    // `telemetry = spans` under any shard layout must record the *same
+    // spans in the same append order* as the monolith — plus identical
+    // gauge series and link-busy integrals. This is the observability
+    // extension of the bit-identity contract above.
+    use fshmem::config::ShardMapSpec;
+    use fshmem::sim::{duration_summary, TelemetryLevel};
+    let seed = 0x7E1E;
+    let capture = |cfg: Config| {
+        let mut s = Spmd::new(cfg.with_telemetry(TelemetryLevel::Spans));
+        let report = s.run(|r| random_program(r, seed, 2, 4));
+        let t = s.counters().telemetry();
+        let gauges: Vec<_> = t
+            .gauges()
+            .iter()
+            .map(|(k, g)| {
+                (
+                    *k,
+                    g.current(),
+                    g.max_depth(),
+                    g.area_until(report.end),
+                    g.samples().to_vec(),
+                )
+            })
+            .collect();
+        (
+            t.spans().to_vec(),
+            gauges,
+            t.link_busy().clone(),
+            duration_summary(t),
+        )
+    };
+    let mono = capture(timing(Config::ring(6)).with_shards(ShardSpec::Off));
+    assert!(!mono.0.is_empty(), "spans recorded");
+    for stage in ["host", "tx", "wire", "rx", "host_wake", "op:put"] {
+        assert!(
+            mono.0.iter().any(|s| s.stage == stage),
+            "stage {stage} must appear in the span stream"
+        );
+    }
+    assert_eq!(
+        mono,
+        capture(timing(Config::ring(6)).with_shards(ShardSpec::Auto)),
+        "auto shards"
+    );
+    assert_eq!(
+        mono,
+        capture(timing(Config::ring(6)).with_shards(ShardSpec::Count(2))),
+        "2 shards"
+    );
+    for map in [
+        ShardMapSpec::Balanced,
+        ShardMapSpec::Explicit(vec![2, 0, 1, 0, 1, 2]),
+    ] {
+        assert_eq!(
+            mono,
+            capture(
+                timing(Config::ring(6))
+                    .with_shards(ShardSpec::Count(3))
+                    .with_shard_map(map.clone())
+            ),
+            "{map:?}"
+        );
+    }
+}
+
+#[test]
 fn kilonode_fabric_does_not_alias_op_owners() {
     // 1024 nodes exceeds the op token's former 8-bit owner field (nodes
     // 256 apart collided); handles issued by distant nodes must stay
