@@ -131,11 +131,23 @@ impl Fshmem {
 
     // ---- one-sided operations (gasnet_put / gasnet_get) ------------------
 
+    /// Advance the program clock to `h`'s effective issue time. With
+    /// `Config::host_credits` enabled a saturated command FIFO slides
+    /// the issue forward — the stall is the host back-pressure, and
+    /// later commands must issue after it. Under `host_credits = off`
+    /// the effective time equals the clock, so this is a no-op and
+    /// timings stay bit-identical to the unbounded model.
+    fn issued(&mut self, h: OpHandle) -> OpHandle {
+        self.clock = self.clock.max(self.core.op_times(h).0);
+        h
+    }
+
     /// `gasnet_put`: store `data` at `dst`, initiated by `src_node`'s host
     /// command path. Non-blocking; returns a handle.
     pub fn put(&mut self, src_node: NodeId, dst: GlobalAddr, data: &[u8]) -> OpHandle {
         let at = self.clock;
-        self.core.put_at(at, src_node, dst, data, None)
+        let h = self.core.put_at(at, src_node, dst, data, None);
+        self.issued(h)
     }
 
     /// `put` pinned to an egress port (case-study striping across the two
@@ -148,7 +160,8 @@ impl Fshmem {
         port: PortId,
     ) -> OpHandle {
         let at = self.clock;
-        self.core.put_at(at, src_node, dst, data, Some(port))
+        let h = self.core.put_at(at, src_node, dst, data, Some(port));
+        self.issued(h)
     }
 
     /// Bulk `put` striped across every minimal-hop port toward the
@@ -174,13 +187,14 @@ impl Fshmem {
         data.chunks(stripe)
             .enumerate()
             .map(|(i, chunk)| {
-                self.core.put_at(
+                let h = self.core.put_at(
                     at,
                     src_node,
                     dst.add((i * stripe) as u64),
                     chunk,
                     Some(ports[i % ports.len()]),
-                )
+                );
+                self.issued(h)
             })
             .collect()
     }
@@ -195,8 +209,10 @@ impl Fshmem {
         dst: GlobalAddr,
     ) -> OpHandle {
         let at = self.clock;
-        self.core
-            .put_from_mem_at(at, src_node, src_offset, len, dst, None)
+        let h = self
+            .core
+            .put_from_mem_at(at, src_node, src_offset, len, dst, None);
+        self.issued(h)
     }
 
     /// `put_from_mem` pinned to one egress port — exempt from automatic
@@ -211,8 +227,10 @@ impl Fshmem {
         port: PortId,
     ) -> OpHandle {
         let at = self.clock;
-        self.core
-            .put_from_mem_at(at, src_node, src_offset, len, dst, Some(port))
+        let h = self
+            .core
+            .put_from_mem_at(at, src_node, src_offset, len, dst, Some(port));
+        self.issued(h)
     }
 
     /// `gasnet_get`: fetch `len` bytes from remote `src` into the
@@ -225,7 +243,8 @@ impl Fshmem {
         len: u64,
     ) -> OpHandle {
         let at = self.clock;
-        self.core.get_at(at, node, src, local_offset, len)
+        let h = self.core.get_at(at, node, src, local_offset, len);
+        self.issued(h)
     }
 
     // ---- active messages (gasnet_AMRequest*) -----------------------------
@@ -244,7 +263,8 @@ impl Fshmem {
         args: [u32; 4],
     ) -> OpHandle {
         let at = self.clock;
-        self.core.am_short_at(at, src_node, dst, handler, args)
+        let h = self.core.am_short_at(at, src_node, dst, handler, args);
+        self.issued(h)
     }
 
     /// `gasnet_AMRequestMedium`: payload lands in the destination node's
@@ -259,8 +279,10 @@ impl Fshmem {
         private_offset: u64,
     ) -> OpHandle {
         let at = self.clock;
-        self.core
-            .am_medium_at(at, src_node, dst, handler, args, data, private_offset)
+        let h = self
+            .core
+            .am_medium_at(at, src_node, dst, handler, args, data, private_offset);
+        self.issued(h)
     }
 
     /// Drain user AMs delivered so far (API-level handler dispatch), in
@@ -276,7 +298,8 @@ impl Fshmem {
     /// tracked separately).
     pub fn compute(&mut self, host_node: NodeId, target: NodeId, job: DlaJob) -> OpHandle {
         let at = self.clock;
-        self.core.compute_at(at, host_node, target, job)
+        let h = self.core.compute_at(at, host_node, target, job);
+        self.issued(h)
     }
 
     // ---- NBI access regions (gasnet_begin/end_nbi_accessregion) ----------
@@ -335,7 +358,10 @@ impl Fshmem {
     pub fn barrier_all(&mut self) -> Vec<OpHandle> {
         let at = self.clock;
         (0..self.nodes())
-            .map(|node| self.core.barrier_at(at, node))
+            .map(|node| {
+                let h = self.core.barrier_at(at, node);
+                self.issued(h)
+            })
             .collect()
     }
 
@@ -547,6 +573,57 @@ mod tests {
         assert!(f.test(h));
         assert_eq!(f.read_shared(1, 0, data.len()), data);
         assert_eq!(f.counters().get("puts_striped"), 1);
+    }
+
+    #[test]
+    fn host_credits_bound_in_flight_issues() {
+        use crate::config::HostCredits;
+        let cap = 2u32;
+        let cfg = Config::two_node_ring()
+            .with_numerics(Numerics::TimingOnly)
+            .with_host_credits(HostCredits::Count(cap));
+        let drain = cfg.timing.cmd_ingress() + cfg.timing.tx_sched();
+        let mut f = Fshmem::new(cfg);
+        let dst = f.global_addr(1, 0);
+        let hs: Vec<OpHandle> = (0..8).map(|_| f.put(0, dst, &[0u8; 64])).collect();
+        let issued: Vec<SimTime> = hs.iter().map(|&h| f.op_times(h).0).collect();
+        // A zero-gap issue stream admits `cap` commands immediately, then
+        // each further command waits for a FIFO slot: issue i cannot
+        // enter before issue i-cap's slot drained. That spacing *is* the
+        // bounded-in-flight property — at any instant at most `cap`
+        // commands sit between admission and drain.
+        for i in cap as usize..issued.len() {
+            assert!(
+                issued[i] >= issued[i - cap as usize] + drain,
+                "issue {i} at {:?} outran the credit pool ({:?} + {drain:?})",
+                issued[i],
+                issued[i - cap as usize],
+            );
+        }
+        assert!(f.counters().get("host_credit_stalls") > 0);
+        f.wait_all(&hs);
+    }
+
+    #[test]
+    fn host_credits_off_matches_an_unsaturated_pool() {
+        // `off` must be the identity model. Pin it against a pool too
+        // deep to ever stall: both runs must produce identical issue
+        // times, completion times, and final clocks.
+        use crate::config::HostCredits;
+        let run = |credits: HostCredits| {
+            let cfg = Config::two_node_ring()
+                .with_numerics(Numerics::TimingOnly)
+                .with_host_credits(credits);
+            let mut f = Fshmem::new(cfg);
+            let dst = f.global_addr(1, 0);
+            let hs: Vec<OpHandle> = (0..6).map(|_| f.put(0, dst, &[3u8; 512])).collect();
+            let g = f.get(1, f.global_addr(0, 0), 0x100, 64);
+            f.wait_all(&hs);
+            f.wait(g);
+            let times: Vec<_> = hs.iter().chain([&g]).map(|&h| f.op_times(h)).collect();
+            (times, f.now(), f.events_processed())
+        };
+        assert_eq!(run(HostCredits::Off), run(HostCredits::Count(1 << 16)));
     }
 
     #[test]

@@ -176,6 +176,81 @@ impl ReduceOffload {
     }
 }
 
+/// Per-node PCIe write-credit pool for host command issue
+/// (`host_credits = off|N` in config files). Each host command holds one
+/// credit from issue until its command FIFO drains (command ingress +
+/// scheduler handoff, a deterministic drain latency); once every credit
+/// is held, the next issue slides forward to the earliest release — a
+/// saturating issue stream back-pressures the host program's virtual
+/// clock instead of injecting unboundedly. `Off` (the default) models an
+/// infinitely deep posted-write path and preserves historical timings
+/// bit-for-bit (`rust/src/workloads/serving.rs` pins this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostCredits {
+    /// Unbounded issue (the legacy model; the default).
+    Off,
+    /// A pool of this many write credits per node.
+    Count(u32),
+}
+
+impl HostCredits {
+    /// Parse the `host_credits = off|N` config value.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "off" => HostCredits::Off,
+            _ => {
+                let n: u32 = v
+                    .parse()
+                    .context("host_credits must be 'off' or a positive credit count")?;
+                if n == 0 {
+                    bail!(
+                        "host_credits must be positive \
+                         (use 'off' for unbounded issue)"
+                    );
+                }
+                HostCredits::Count(n)
+            }
+        })
+    }
+
+    fn as_cfg_value(&self) -> String {
+        match self {
+            HostCredits::Off => "off".to_string(),
+            HostCredits::Count(n) => n.to_string(),
+        }
+    }
+}
+
+/// Arrival process of the serving workload's open-loop traffic
+/// (`serving.arrival = poisson|bursty` in config files). `Poisson` draws
+/// exponential inter-arrival gaps; `Bursty` groups the same mean offered
+/// load into back-to-back batches, the heavier-tailed arrival pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingArrival {
+    /// Exponential inter-arrival gaps (memoryless open-loop load).
+    Poisson,
+    /// Batched back-to-back arrivals at the same mean rate.
+    Bursty,
+}
+
+impl ServingArrival {
+    /// Parse the `serving.arrival` config value.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "poisson" => ServingArrival::Poisson,
+            "bursty" => ServingArrival::Bursty,
+            _ => bail!("serving.arrival must be poisson|bursty"),
+        })
+    }
+
+    fn as_cfg_value(&self) -> &'static str {
+        match self {
+            ServingArrival::Poisson => "poisson",
+            ServingArrival::Bursty => "bursty",
+        }
+    }
+}
+
 /// How nodes are assigned to shards (`shards.map = contiguous|balanced|
 /// <explicit>` in config files). `Contiguous` keeps the classic equal
 /// node ranges; `Balanced` uses the coordinator-aware weighted
@@ -354,6 +429,18 @@ pub struct Config {
     /// export — see [`TelemetryLevel`]. Pure observation: the level
     /// provably never changes simulation results.
     pub telemetry: TelemetryLevel,
+    /// Per-node PCIe write-credit pool for host command issue
+    /// (`host_credits = off|N`): a saturating issue stream back-pressures
+    /// the host program's virtual clock instead of injecting unboundedly
+    /// — see [`HostCredits`]. `Off` preserves historical timings
+    /// bit-for-bit.
+    pub host_credits: HostCredits,
+    /// Arrival process of `bench serving`'s open-loop tenant traffic
+    /// (`serving.arrival = poisson|bursty`) — see [`ServingArrival`].
+    pub serving_arrival: ServingArrival,
+    /// Ops each tenant offers per `bench serving` sweep point
+    /// (`serving.ops`; default 48, must be positive).
+    pub serving_ops: u32,
     /// Deterministic seed for every randomized model component.
     pub seed: u64,
 }
@@ -408,6 +495,11 @@ impl Config {
             collective_algo: CollectiveAlgo::Auto,
             collective_reduce: ReduceOffload::Auto,
             telemetry: TelemetryLevel::Off,
+            // Unbounded host issue by default: the credit pool is opt-in
+            // and `off` is pinned bit-identical to the legacy model.
+            host_credits: HostCredits::Off,
+            serving_arrival: ServingArrival::Poisson,
+            serving_ops: 48,
             seed: 0xF5113,
         }
     }
@@ -512,6 +604,24 @@ impl Config {
     /// Select the telemetry recording level (see [`TelemetryLevel`]).
     pub fn with_telemetry(mut self, level: TelemetryLevel) -> Self {
         self.telemetry = level;
+        self
+    }
+
+    /// Select the per-node host write-credit pool (see [`HostCredits`]).
+    pub fn with_host_credits(mut self, credits: HostCredits) -> Self {
+        self.host_credits = credits;
+        self
+    }
+
+    /// Select the serving-bench arrival process (see [`ServingArrival`]).
+    pub fn with_serving_arrival(mut self, arrival: ServingArrival) -> Self {
+        self.serving_arrival = arrival;
+        self
+    }
+
+    /// Set the per-tenant op count for `bench serving` sweep points.
+    pub fn with_serving_ops(mut self, ops: u32) -> Self {
+        self.serving_ops = ops;
         self
     }
 
@@ -693,6 +803,13 @@ impl Config {
                         SimTime::from_ns(v.parse().context("host_wake_ns")?)
                 }
                 "telemetry" => cfg.telemetry = TelemetryLevel::parse(v)?,
+                "host_credits" => cfg.host_credits = HostCredits::parse(v)?,
+                "serving.arrival" => {
+                    cfg.serving_arrival = ServingArrival::parse(v)?
+                }
+                "serving.ops" => {
+                    cfg.serving_ops = v.parse().context("serving.ops")?
+                }
                 "seed" => cfg.seed = v.parse().context("seed")?,
                 _ => bail!("line {}: unknown key {k:?}", lineno + 1),
             }
@@ -823,6 +940,9 @@ impl Config {
                  when a backend exists) or 'host'"
             );
         }
+        if self.serving_ops == 0 {
+            bail!("serving.ops must be positive");
+        }
         if self.engine_threads != ThreadSpec::Off {
             if self.shards == ShardSpec::Off {
                 bail!(
@@ -906,6 +1026,7 @@ impl Config {
             self.engine_threads.as_cfg_value()
         );
         let _ = writeln!(out, "host_wake_ns = {}", self.host_wake.as_ps() / 1000);
+        let _ = writeln!(out, "host_credits = {}", self.host_credits.as_cfg_value());
         let _ = writeln!(
             out,
             "collectives.algo = {}",
@@ -917,6 +1038,12 @@ impl Config {
             self.collective_reduce.as_cfg_value()
         );
         let _ = writeln!(out, "telemetry = {}", self.telemetry.as_cfg_value());
+        let _ = writeln!(
+            out,
+            "serving.arrival = {}",
+            self.serving_arrival.as_cfg_value()
+        );
+        let _ = writeln!(out, "serving.ops = {}", self.serving_ops);
         let _ = writeln!(out, "seed = {}", self.seed);
         out
     }
@@ -1121,6 +1248,57 @@ mod tests {
         assert!(text.contains("telemetry = spans"), "{text}");
         let back = Config::from_str_cfg(&text).unwrap();
         assert_eq!(back.telemetry, TelemetryLevel::Spans);
+        assert_eq!(back.to_cfg_string(), text);
+    }
+
+    #[test]
+    fn host_credits_and_serving_keys_parse_validate_and_round_trip() {
+        // Spellings.
+        assert_eq!(HostCredits::parse("off").unwrap(), HostCredits::Off);
+        assert_eq!(HostCredits::parse("16").unwrap(), HostCredits::Count(16));
+        assert!(HostCredits::parse("0").is_err(), "0 credits would deadlock");
+        assert!(HostCredits::parse("infinite").is_err());
+        assert_eq!(
+            ServingArrival::parse("poisson").unwrap(),
+            ServingArrival::Poisson
+        );
+        assert_eq!(
+            ServingArrival::parse("bursty").unwrap(),
+            ServingArrival::Bursty
+        );
+        assert!(ServingArrival::parse("uniform").is_err());
+
+        // Defaults: the credit pool is opt-in.
+        let preset = Config::two_node_ring();
+        assert_eq!(preset.host_credits, HostCredits::Off, "off by default");
+        assert_eq!(preset.serving_arrival, ServingArrival::Poisson);
+        assert_eq!(preset.serving_ops, 48);
+        assert!(preset.to_cfg_string().contains("host_credits = off"));
+
+        // File parsing and validation.
+        let cfg = Config::from_str_cfg(
+            "host_credits = 8\nserving.arrival = bursty\nserving.ops = 96\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.host_credits, HostCredits::Count(8));
+        assert_eq!(cfg.serving_arrival, ServingArrival::Bursty);
+        assert_eq!(cfg.serving_ops, 96);
+        assert!(Config::from_str_cfg("serving.ops = 0\n").is_err());
+
+        // Round trip through the serializer.
+        let mut cfg = Config::ring(4)
+            .with_host_credits(HostCredits::Count(4))
+            .with_serving_arrival(ServingArrival::Bursty)
+            .with_serving_ops(12);
+        cfg.validate().unwrap();
+        let text = cfg.to_cfg_string();
+        assert!(text.contains("host_credits = 4"), "{text}");
+        assert!(text.contains("serving.arrival = bursty"), "{text}");
+        assert!(text.contains("serving.ops = 12"), "{text}");
+        let back = Config::from_str_cfg(&text).unwrap();
+        assert_eq!(back.host_credits, HostCredits::Count(4));
+        assert_eq!(back.serving_arrival, ServingArrival::Bursty);
+        assert_eq!(back.serving_ops, 12);
         assert_eq!(back.to_cfg_string(), text);
     }
 

@@ -9,7 +9,7 @@ use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::reports;
 use crate::resource;
 use crate::sim::{chrome_trace, ShardingReport, SimTime, Telemetry, TelemetryLevel};
-use crate::workloads::{collectives, conv, matmul, scaleout, sweep};
+use crate::workloads::{collectives, conv, matmul, scaleout, serving, sweep};
 
 /// Registry of named experiments.
 pub const EXPERIMENTS: &[(&str, &str)] = &[
@@ -25,6 +25,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     (
         "collectives",
         "Collective algorithms: allreduce time by algorithm x payload x topology",
+    ),
+    (
+        "serving",
+        "Multi-tenant open-loop serving: latency tails vs offered load, with loss injection",
     ),
     ("all", "run everything above"),
 ];
@@ -108,6 +112,7 @@ pub fn run_experiment(name: &str, opts: &RunOptions) -> Result<String> {
         "casestudy" => run_casestudy(opts),
         "scaleout" => run_scaleout(opts),
         "collectives" => run_collectives(opts),
+        "serving" => run_serving(opts),
         "all" => {
             let mut out = String::new();
             for (n, _) in EXPERIMENTS.iter().filter(|(n, _)| *n != "all") {
@@ -249,6 +254,19 @@ fn run_collectives(opts: &RunOptions) -> Result<String> {
     Ok(out)
 }
 
+fn run_serving(opts: &RunOptions) -> Result<String> {
+    // The sweep fixes its own config (4-tenant ring, timing-only, a
+    // shallow write-credit pool) so the offered-load axis is the only
+    // variable; --fast trims the load axis.
+    let points = serving::run_sweep(opts.fast);
+    let mut out = reports::serving(&points);
+    // Instrumented representative point (400% load, clean links) for the
+    // stage tables and the `--trace-out` export.
+    let (tel, tel_shards, end) = serving::run_instrumented(opts.fast, bench_telemetry(opts));
+    emit_telemetry(&mut out, opts, &tel, tel_shards.as_ref(), end)?;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +351,18 @@ mod tests {
         assert!(!out.contains("torus(32x32)"), "{out}");
         assert!(out.contains("--large"), "{out}");
         assert!(out.contains("wall (ms)"), "{out}");
+    }
+
+    #[test]
+    fn serving_experiment_is_registered() {
+        // The sweep itself is covered by workloads::serving tests (and
+        // the CI smoke job runs `bench serving --fast --trace-out` end
+        // to end); here, just pin the registry entry.
+        assert!(EXPERIMENTS.iter().any(|(n, _)| *n == "serving"));
+        let err = run_experiment("nope", &RunOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serving"), "{err}");
     }
 
     #[test]

@@ -29,6 +29,18 @@
 //! Ids assigned this way are identical across execution backends: the
 //! driver issues per node in program order, and handlers issue per node
 //! in that node's (deterministic) event order.
+//!
+//! ## Counter-space exhaustion
+//!
+//! The 20-bit counter gives each `(node, origin)` pair ~1M ids — a
+//! sustained serving run can cross that. Rather than silently aliasing
+//! tokens (which would corrupt completion tracking and telemetry span
+//! keys), [`OpTracker::gc`] recycles the counters of retired ops once a
+//! space is half-consumed, and issue panics loudly if the space is truly
+//! exhausted with every id still tracked. Recycling is deterministic
+//! (gc retires in token order, issue pops LIFO), so backends stay
+//! bit-identical; runs below half-space keep the exact historical id
+//! sequence.
 
 use std::collections::BTreeMap;
 
@@ -40,6 +52,13 @@ pub type OpId = u32;
 const ORIGIN_BIT: u32 = 1 << 31;
 const NODE_SHIFT: u32 = 20;
 const CTR_MASK: u32 = (1 << NODE_SHIFT) - 1;
+
+/// Counter value past which [`OpTracker::gc`] starts banking retired
+/// counters for reuse: half the 20-bit space. Every run below ~512k ops
+/// per (node, origin) keeps its exact historical id sequence (nothing is
+/// ever recycled), while sustained-traffic runs switch to recycled ids
+/// instead of aliasing the counter wrap.
+const RECYCLE_START: u32 = (CTR_MASK + 1) / 2;
 
 /// Largest fabric an [`OpId`] can address (11 node bits).
 pub const MAX_NODES: u32 = (1 << (31 - NODE_SHIFT)) as u32;
@@ -122,6 +141,11 @@ pub struct OpTracker {
     node: u32,
     next_host: u32,
     next_auto: u32,
+    /// Retired host-origin counters available for reuse (populated by
+    /// [`OpTracker::gc`] once the space is half-consumed; LIFO).
+    free_host: Vec<u32>,
+    /// Retired autonomous-origin counters available for reuse.
+    free_auto: Vec<u32>,
     ops: BTreeMap<OpId, OpState>,
 }
 
@@ -151,10 +175,37 @@ impl OpTracker {
         id
     }
 
+    /// The next counter for one origin space: sequential until the
+    /// 20-bit space is exhausted, then recycled retired counters. Panics
+    /// loudly — rather than aliasing a live token — when the space is
+    /// exhausted and no retired op has been gc'ed back.
+    fn next_ctr(&mut self, auto: bool) -> u32 {
+        let (next, free) = if auto {
+            (&mut self.next_auto, &mut self.free_auto)
+        } else {
+            (&mut self.next_host, &mut self.free_host)
+        };
+        if *next <= CTR_MASK {
+            let c = *next;
+            *next += 1;
+            return c;
+        }
+        free.pop().unwrap_or_else(|| {
+            panic!(
+                "node {} exhausted its 20-bit {} op-id space with {} ops \
+                 still tracked (gc_ops() retires completed ops and \
+                 recycles their ids)",
+                self.node,
+                if auto { "autonomous" } else { "host" },
+                self.ops.len()
+            )
+        })
+    }
+
     /// Issue a host-originated op (driver context).
     pub fn issue(&mut self, kind: OpKind, now: SimTime, bytes: u64) -> OpId {
-        let id = compose(false, self.node, self.next_host);
-        self.next_host += 1;
+        let ctr = self.next_ctr(false);
+        let id = compose(false, self.node, ctr);
         self.insert(id, kind, now, bytes)
     }
 
@@ -162,8 +213,8 @@ impl OpTracker {
     /// transfers). A separate counter space from [`OpTracker::issue`], so
     /// driver and handler issue orders never interleave on one counter.
     pub fn issue_auto(&mut self, kind: OpKind, now: SimTime, bytes: u64) -> OpId {
-        let id = compose(true, self.node, self.next_auto);
-        self.next_auto += 1;
+        let ctr = self.next_ctr(true);
+        let id = compose(true, self.node, ctr);
         self.insert(id, kind, now, bytes)
     }
 
@@ -232,9 +283,32 @@ impl OpTracker {
         self.ops.values().filter(|o| !o.is_complete()).count()
     }
 
-    /// Forget finished ops (bandwidth sweeps issue thousands).
+    /// Forget finished ops (bandwidth sweeps issue thousands). Once an
+    /// origin's counter space is half-consumed, retired counters are
+    /// banked for reuse — see the module docs on counter-space
+    /// exhaustion.
     pub fn gc(&mut self) {
-        self.ops.retain(|_, o| !o.is_complete());
+        let Self {
+            ops,
+            next_host,
+            next_auto,
+            free_host,
+            free_auto,
+            ..
+        } = self;
+        ops.retain(|&id, o| {
+            if !o.is_complete() {
+                return true;
+            }
+            if id & ORIGIN_BIT != 0 {
+                if *next_auto > RECYCLE_START {
+                    free_auto.push(id & CTR_MASK);
+                }
+            } else if *next_host > RECYCLE_START {
+                free_host.push(id & CTR_MASK);
+            }
+            false
+        });
     }
 }
 
@@ -320,6 +394,59 @@ mod tests {
         // Different nodes never collide.
         let mut t4 = OpTracker::new(4);
         assert_ne!(t4.issue(OpKind::Put, SimTime::ZERO, 0), host);
+    }
+
+    #[test]
+    fn ids_recycle_across_the_counter_wrap() {
+        // Fast-forward to the edge of the 20-bit space (issuing ~1M real
+        // ops here would just slow the suite down; the counter value is
+        // the only thing that matters).
+        let mut t = OpTracker::new(1);
+        t.next_host = CTR_MASK - 1;
+        let a = t.issue(OpKind::Put, SimTime::ZERO, 1);
+        let b = t.issue(OpKind::Put, SimTime::ZERO, 1);
+        assert_eq!(a & CTR_MASK, CTR_MASK - 1);
+        assert_eq!(b & CTR_MASK, CTR_MASK, "last id of the space");
+        // The space is exhausted; retiring `a` lets its id recycle.
+        t.complete(a, SimTime::from_ns(1));
+        t.gc();
+        let c = t.issue(OpKind::Get, SimTime::from_ns(2), 64);
+        assert_eq!(c, a, "retired counter reused across the wrap");
+        assert_eq!(op_owner(c), 1);
+        assert!(!t.is_complete(c), "recycled token tracks a fresh op");
+        assert_eq!(t.get(c).unwrap().kind, OpKind::Get);
+        assert!(!t.is_complete(b), "the live op is untouched");
+        // The origin spaces recycle independently.
+        t.next_auto = CTR_MASK;
+        let auto = t.issue_auto(OpKind::Put, SimTime::ZERO, 1);
+        t.complete(auto, SimTime::from_ns(3));
+        t.gc();
+        assert_eq!(t.issue_auto(OpKind::Put, SimTime::ZERO, 1), auto);
+    }
+
+    #[test]
+    fn no_recycling_below_half_space() {
+        // Historical runs (< 2^19 ops per origin) must keep their exact
+        // id sequence: gc never banks counters below RECYCLE_START, so
+        // issue stays strictly sequential.
+        let mut t = OpTracker::new(0);
+        let a = t.issue(OpKind::Put, SimTime::ZERO, 1);
+        t.complete(a, SimTime::from_ns(1));
+        t.gc();
+        let b = t.issue(OpKind::Put, SimTime::ZERO, 1);
+        assert_eq!(b, a + 1, "sequential ids, nothing recycled");
+        assert!(t.free_host.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted its 20-bit host op-id space")]
+    fn exhaustion_with_everything_tracked_panics() {
+        let mut t = OpTracker::new(0);
+        t.next_host = CTR_MASK;
+        t.issue(OpKind::Put, SimTime::ZERO, 1);
+        // No op ever retired: the next issue must fail loudly instead of
+        // aliasing a live token.
+        t.issue(OpKind::Put, SimTime::ZERO, 1);
     }
 
     #[test]

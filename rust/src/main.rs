@@ -90,6 +90,8 @@ usage: fshmem <info|list|bench|run> [options]
                                                span timeline of the run)
                (collectives: allreduce by algorithm x payload x topology,
                 reproduced on all three engine backends)
+               (serving: multi-tenant open-loop traffic — latency tails vs
+                offered load, host write-credit back-pressure, loss sweep)
   run [--config file.cfg]   demo put/get/AM round trip";
 
 fn info() -> Result<()> {

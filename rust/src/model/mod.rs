@@ -337,6 +337,19 @@ pub struct Node {
     pub(crate) rx_progress: Vec<(u32, u32, u64)>,
     /// Barrier arrivals collected here (only node 0 coordinates).
     pub(crate) barrier_arrivals: Vec<(NodeId, OpId)>,
+    /// Coordinator-side arrival dedupe: one bit per source node. The
+    /// *bitset* population (not the growable arrival list's length) is
+    /// what gates the release, so a duplicated delivery under ARQ
+    /// retransmit can never release a barrier early.
+    pub(crate) barrier_seen: Vec<u64>,
+    /// Arrivals for a *later* barrier round that raced ahead of the
+    /// current round's release (same source, different token); replayed
+    /// once the current round releases.
+    pub(crate) barrier_pending: Vec<(NodeId, OpId)>,
+    /// Last released barrier token per source node: a retransmitted copy
+    /// of an already-released arrival is dropped instead of being
+    /// mistaken for the next round.
+    pub(crate) barrier_released: Vec<Option<OpId>>,
     /// Deterministic fault source for this node's ARQ rolls (send-side
     /// and receive-side CRC checks both roll on the node doing them).
     pub(crate) arq_rng: Rng,
@@ -458,6 +471,9 @@ impl FshmemWorld {
                             art_ops: Vec::new(),
                             rx_progress: Vec::new(),
                             barrier_arrivals: Vec::new(),
+                            barrier_seen: Vec::new(),
+                            barrier_pending: Vec::new(),
+                            barrier_released: Vec::new(),
                             arq_rng: Rng::new(
                                 cfg.seed
                                     ^ 0xFA01

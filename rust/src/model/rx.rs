@@ -149,6 +149,99 @@ impl Wv<'_> {
         true
     }
 
+    /// Coordinator-side barrier bookkeeping. Release is gated on the
+    /// per-source bitset population — never on the growable arrival
+    /// list's length — so a duplicated delivery under ARQ retransmit can
+    /// neither release a barrier early nor poison the next round. An
+    /// arrival from a source already counted with a *different* token is
+    /// a later round racing ahead of this round's release; it is held
+    /// and replayed once the release clears the bitset.
+    fn on_barrier_arrive(
+        &mut self,
+        now: SimTime,
+        node: NodeId,
+        src: NodeId,
+        token: u32,
+        q: &mut Sched<Event>,
+        c: &mut Counters,
+    ) {
+        let n_nodes = self.cfg().topology.nodes();
+        // FIFO worklist: a release replays held next-round arrivals,
+        // which may themselves complete that next round.
+        let mut work = vec![(src, token)];
+        let mut i = 0;
+        while i < work.len() {
+            let (src, token) = work[i];
+            i += 1;
+            let coordinator = self.node_mut(node);
+            coordinator
+                .barrier_seen
+                .resize((n_nodes as usize).div_ceil(64), 0);
+            coordinator.barrier_released.resize(n_nodes as usize, None);
+            let (word, bit) = (src as usize / 64, 1u64 << (src % 64));
+            if coordinator.barrier_released[src as usize] == Some(token) {
+                // Retransmitted copy of an arrival whose round already
+                // released: dropping it keeps the stale token from
+                // counting toward the next round.
+                c.incr("barrier_dup_arrivals");
+                continue;
+            }
+            if coordinator.barrier_seen[word] & bit != 0 {
+                if coordinator
+                    .barrier_arrivals
+                    .iter()
+                    .any(|&(s, t)| s == src && t == token)
+                {
+                    // Duplicate delivery of an already-counted arrival.
+                    c.incr("barrier_dup_arrivals");
+                } else {
+                    coordinator.barrier_pending.push((src, token));
+                }
+                continue;
+            }
+            coordinator.barrier_seen[word] |= bit;
+            coordinator.barrier_arrivals.push((src, token));
+            let arrived = coordinator
+                .barrier_seen
+                .iter()
+                .map(|w| w.count_ones())
+                .sum::<u32>();
+            if arrived < n_nodes {
+                continue;
+            }
+            // Every source has arrived exactly once: release the round.
+            let arrivals = std::mem::take(&mut coordinator.barrier_arrivals);
+            coordinator.barrier_seen.iter_mut().for_each(|w| *w = 0);
+            for &(src, token) in &arrivals {
+                coordinator.barrier_released[src as usize] = Some(token);
+            }
+            work.extend(std::mem::take(&mut coordinator.barrier_pending));
+            for (src, token) in arrivals {
+                let release = AmMessage {
+                    kind: AmKind::Reply,
+                    category: AmCategory::Short,
+                    handler: H_BARRIER_RELEASE,
+                    src: node,
+                    dst: src,
+                    token,
+                    dst_addr: GlobalAddr::new(src, 0),
+                    args: [0; 4],
+                    payload: Payload::None,
+                };
+                let port = self.cfg().topology.out_port(node, src, None);
+                q.schedule_at(
+                    now,
+                    Event::TxEnqueue {
+                        node,
+                        port,
+                        class: MsgClass::Reply,
+                        msg: release,
+                    },
+                );
+            }
+        }
+    }
+
     pub(super) fn on_handler_start(
         &mut self,
         now: SimTime,
@@ -267,35 +360,7 @@ impl Wv<'_> {
             }
             HandlerKind::BarrierArrive => {
                 debug_assert_eq!(node, 0, "barrier coordinator is node 0");
-                let n_nodes = self.cfg().topology.nodes();
-                let coordinator = self.node_mut(node);
-                coordinator.barrier_arrivals.push((pkt.src, pkt.token));
-                if coordinator.barrier_arrivals.len() as u32 == n_nodes {
-                    let arrivals = std::mem::take(&mut coordinator.barrier_arrivals);
-                    for (src, token) in arrivals {
-                        let release = AmMessage {
-                            kind: AmKind::Reply,
-                            category: AmCategory::Short,
-                            handler: H_BARRIER_RELEASE,
-                            src: node,
-                            dst: src,
-                            token,
-                            dst_addr: GlobalAddr::new(src, 0),
-                            args: [0; 4],
-                            payload: Payload::None,
-                        };
-                        let port = self.cfg().topology.out_port(node, src, None);
-                        q.schedule_at(
-                            now,
-                            Event::TxEnqueue {
-                                node,
-                                port,
-                                class: MsgClass::Reply,
-                                msg: release,
-                            },
-                        );
-                    }
-                }
+                self.on_barrier_arrive(now, node, pkt.src, pkt.token, q, c);
             }
             HandlerKind::BarrierRelease => {
                 // The release reaches the entering rank — the op owner.

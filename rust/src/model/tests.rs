@@ -243,6 +243,88 @@ fn barrier_waits_for_stragglers() {
 }
 
 #[test]
+fn duplicate_barrier_arrival_cannot_release_early() {
+    // Before arrivals were deduped by source bitset, the coordinator
+    // compared the growable arrival list's *length* against n_nodes, so
+    // a duplicated delivery under ARQ retransmit released the barrier
+    // with a straggler still outside it.
+    let mut eng = Engine::new(FshmemWorld::new(Config::ring(3)));
+    let now = eng.now();
+    let op0 = eng.model.issue_op(0, OpKind::Barrier, now, 0);
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::Barrier { op: op0 },
+    });
+    let op1 = eng.model.issue_op(1, OpKind::Barrier, now, 0);
+    eng.inject_now(Event::HostCmd {
+        node: 1,
+        cmd: HostCmd::Barrier { op: op1 },
+    });
+    // Forced duplicate delivery of node 1's arrival (same source, same
+    // token) — the shape an ARQ retransmit produces at the coordinator.
+    eng.inject_now(Event::HostCmd {
+        node: 1,
+        cmd: HostCmd::Barrier { op: op1 },
+    });
+    eng.run_to_quiescence();
+    assert!(!eng.model.op_is_complete(op0), "released without node 2");
+    assert!(!eng.model.op_is_complete(op1), "released without node 2");
+    assert_eq!(eng.counters.get("barrier_dup_arrivals"), 1);
+    // The straggler arrives; the round releases everyone exactly once.
+    let now = eng.now();
+    let op2 = eng.model.issue_op(2, OpKind::Barrier, now, 0);
+    eng.inject_now(Event::HostCmd {
+        node: 2,
+        cmd: HostCmd::Barrier { op: op2 },
+    });
+    eng.run_to_quiescence();
+    for op in [op0, op1, op2] {
+        assert!(eng.model.op_is_complete(op), "barrier op {op}");
+    }
+}
+
+#[test]
+fn next_round_barrier_arrival_is_held_not_dropped() {
+    // A second barrier round issued back-to-back (no wait between them)
+    // can reach the coordinator before the first round's release. The
+    // dedupe must hold that arrival for the next round — dropping it as
+    // a duplicate would deadlock the second round.
+    let mut eng = engine();
+    let now = eng.now();
+    let a0 = eng.model.issue_op(0, OpKind::Barrier, now, 0);
+    let b0 = eng.model.issue_op(0, OpKind::Barrier, now, 0);
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::Barrier { op: a0 },
+    });
+    eng.inject_now(Event::HostCmd {
+        node: 0,
+        cmd: HostCmd::Barrier { op: b0 },
+    });
+    let a1 = eng.model.issue_op(1, OpKind::Barrier, now, 0);
+    eng.inject_now(Event::HostCmd {
+        node: 1,
+        cmd: HostCmd::Barrier { op: a1 },
+    });
+    eng.run_to_quiescence();
+    assert!(eng.model.op_is_complete(a0));
+    assert!(eng.model.op_is_complete(a1));
+    assert!(
+        !eng.model.op_is_complete(b0),
+        "second round still waits on node 1"
+    );
+    let now = eng.now();
+    let b1 = eng.model.issue_op(1, OpKind::Barrier, now, 0);
+    eng.inject_now(Event::HostCmd {
+        node: 1,
+        cmd: HostCmd::Barrier { op: b1 },
+    });
+    eng.run_to_quiescence();
+    assert!(eng.model.op_is_complete(b0));
+    assert!(eng.model.op_is_complete(b1));
+}
+
+#[test]
 fn compute_job_runs_and_notifies() {
     let mut eng = engine();
     // A = I(16), B = arbitrary; Y = A @ B must equal B.

@@ -21,10 +21,11 @@
 //! per step, so mid-run observations (`step`, `run_until`) have window
 //! granularity rather than event granularity.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::api::OpHandle;
-use crate::config::{Config, Numerics};
+use crate::config::{Config, HostCredits, Numerics};
 use crate::dla::DlaJob;
 use crate::fabric::PortId;
 use crate::gasnet::{OpKind, Payload};
@@ -126,10 +127,66 @@ impl EngineKind {
     }
 }
 
+/// Per-node PCIe write-credit pool (`Config::host_credits`): the
+/// per-rank issue-rate model. Each host command holds one credit from
+/// issue until its command FIFO drains; once every credit is held, the
+/// next issue slides forward to the earliest release, so a saturating
+/// issue stream back-pressures the host program's virtual clock instead
+/// of injecting unboundedly.
+///
+/// Pure host-side bookkeeping: a command's FIFO drain time is
+/// deterministically `issue + cmd_ingress + tx_sched` (see
+/// `model/host.rs`), so release times are known at issue time and
+/// back-pressure surfaces as a *later effective issue time* — the
+/// model's event stream keeps its exact shape, and `off` is
+/// bit-identical to the legacy unbounded model (pinned by test).
+struct CreditPool {
+    /// Credits per node (`None` = unbounded, the legacy model).
+    cap: Option<u32>,
+    /// Credit hold time: the command-FIFO drain latency.
+    drain: SimTime,
+    /// Release times (ps) of each node's held credits, ascending —
+    /// per-node issue times are monotone in both front ends.
+    releases: Vec<VecDeque<u64>>,
+}
+
+impl CreditPool {
+    fn new(cfg: &Config) -> Self {
+        CreditPool {
+            cap: match cfg.host_credits {
+                HostCredits::Off => None,
+                HostCredits::Count(n) => Some(n),
+            },
+            drain: cfg.timing.cmd_ingress() + cfg.timing.tx_sched(),
+            releases: vec![VecDeque::new(); cfg.topology.nodes() as usize],
+        }
+    }
+
+    /// Admit one issue from `node` at `at`: the effective issue time
+    /// (`at` itself while a credit is free, else the earliest release).
+    fn admit(&mut self, node: NodeId, at: SimTime) -> SimTime {
+        let Some(cap) = self.cap else { return at };
+        let held = &mut self.releases[node as usize];
+        while held.front().is_some_and(|&r| r <= at.as_ps()) {
+            held.pop_front();
+        }
+        let eff = if (held.len() as u32) < cap {
+            at
+        } else {
+            // Every credit held: the host stalls until the earliest
+            // command FIFO slot drains.
+            SimTime(held.pop_front().expect("cap is positive"))
+        };
+        held.push_back((eff + self.drain).as_ps());
+        eff
+    }
+}
+
 /// Engine + address map: the shared substrate of every host front end.
 pub struct IssueCore {
     pub(crate) eng: EngineKind,
     pub(crate) addr_map: AddressMap,
+    credits: CreditPool,
 }
 
 impl IssueCore {
@@ -155,7 +212,28 @@ impl IssueCore {
             (None, _) => EngineKind::Seq(Engine::new(world)),
         };
         eng.set_telemetry_level(cfg.telemetry);
-        IssueCore { eng, addr_map }
+        let credits = CreditPool::new(&cfg);
+        IssueCore {
+            eng,
+            addr_map,
+            credits,
+        }
+    }
+
+    /// Run `node`'s issue through the write-credit pool: the returned
+    /// time is when the command actually enters the command FIFO (equal
+    /// to `at` under `host_credits = off`, or while a credit is free).
+    /// Front ends advance their virtual clocks to the effective time —
+    /// that is the back-pressure.
+    fn admit(&mut self, node: NodeId, at: SimTime) -> SimTime {
+        let eff = self.credits.admit(node, at);
+        if eff > at {
+            self.eng.counters_mut().incr("host_credit_stalls");
+            self.eng
+                .counters_mut()
+                .record_latency("host_credit_stall", eff.since(at));
+        }
+        eff
     }
 
     /// Per-shard advance statistics (sharded backends only).
@@ -319,6 +397,7 @@ impl IssueCore {
         self.addr_map
             .translate(dst, data.len() as u64)
             .expect("put destination out of range");
+        let at = self.admit(src_node, at);
         let op = self
             .eng
             .model_mut()
@@ -356,6 +435,7 @@ impl IssueCore {
         self.addr_map
             .translate(dst, len)
             .expect("put destination out of range");
+        let at = self.admit(src_node, at);
         let op = self.eng.model_mut().issue_op(src_node, OpKind::Put, at, len);
         self.eng.inject_at(
             at,
@@ -393,6 +473,7 @@ impl IssueCore {
         self.addr_map
             .translate(src, len)
             .expect("get source out of range");
+        let at = self.admit(node, at);
         let op = self.eng.model_mut().issue_op(node, OpKind::Get, at, len);
         self.eng.inject_at(
             at,
@@ -420,6 +501,7 @@ impl IssueCore {
         handler: u8,
         args: [u32; 4],
     ) -> OpHandle {
+        let at = self.admit(src_node, at);
         let op = self
             .eng
             .model_mut()
@@ -451,6 +533,7 @@ impl IssueCore {
         data: &[u8],
         private_offset: u64,
     ) -> OpHandle {
+        let at = self.admit(src_node, at);
         let op = self.eng.model_mut().issue_op(
             src_node,
             OpKind::AmRequest,
@@ -484,6 +567,7 @@ impl IssueCore {
         target: NodeId,
         mut job: DlaJob,
     ) -> OpHandle {
+        let at = self.admit(host_node, at);
         let op = self
             .eng
             .model_mut()
@@ -502,6 +586,7 @@ impl IssueCore {
     /// Enter the barrier from `node` at `at`; the handle completes on the
     /// barrier release reaching `node`.
     pub fn barrier_at(&mut self, at: SimTime, node: NodeId) -> OpHandle {
+        let at = self.admit(node, at);
         let op = self.eng.model_mut().issue_op(node, OpKind::Barrier, at, 0);
         self.eng.inject_at(
             at,

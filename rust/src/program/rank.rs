@@ -75,6 +75,10 @@ pub(crate) enum Req {
         count: usize,
     },
     Now,
+    /// Advance this rank's local virtual clock to at least `t` (an
+    /// open-loop traffic generator's inter-arrival gap — simulated think
+    /// time that blocks nothing).
+    AdvanceTo(SimTime),
     /// The program closure returned; carries no payload (the value
     /// travels back through the thread join).
     Finished,
@@ -318,6 +322,18 @@ impl Rank {
         match self.request(Req::Now) {
             Resp::Time(t) => t,
             other => unreachable!("now: {other:?}"),
+        }
+    }
+
+    /// Advance this rank's local clock to at least `t` — simulated think
+    /// time. The monotone-max discipline of every clock update applies:
+    /// a `t` in this rank's past is a no-op. Open-loop traffic
+    /// generators use this to space arrivals by wall-of-fabric time
+    /// instead of issuing as fast as the driver schedules them.
+    pub fn advance_to(&mut self, t: SimTime) {
+        match self.request(Req::AdvanceTo(t)) {
+            Resp::Done => {}
+            other => unreachable!("advance_to: {other:?}"),
         }
     }
 

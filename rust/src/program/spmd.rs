@@ -387,13 +387,21 @@ fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize
         other => unreachable!("serve on rank in state {other:?}"),
     };
     let at = ctls[i].clock;
+    // Issue arms advance the rank's clock to the op's *effective* issue
+    // time: with `host_credits` enabled a saturated command FIFO slides
+    // the issue forward, and the stall is exactly the host's
+    // back-pressure. Under `host_credits = off` the effective time is
+    // `at` itself, so the max() is a no-op and timings are bit-identical
+    // to the pre-credit model.
     let answer = match req {
         Req::Put { dst, data } => {
             ctls[i].note(
                 at,
                 format!("put {}B -> n{}@{:#x}", data.len(), dst.node(), dst.offset()),
             );
-            Resp::Handle(core.put_vec_at(at, node, dst, data, None))
+            let h = core.put_vec_at(at, node, dst, data, None);
+            ctls[i].clock = ctls[i].clock.max(core.op_times(h).0);
+            Resp::Handle(h)
         }
         Req::PutFromMem {
             src_offset,
@@ -404,7 +412,9 @@ fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize
                 at,
                 format!("put_from_mem {len}B -> n{}@{:#x}", dst.node(), dst.offset()),
             );
-            Resp::Handle(core.put_from_mem_at(at, node, src_offset, len, dst, None))
+            let h = core.put_from_mem_at(at, node, src_offset, len, dst, None);
+            ctls[i].clock = ctls[i].clock.max(core.op_times(h).0);
+            Resp::Handle(h)
         }
         Req::Get {
             src,
@@ -415,15 +425,21 @@ fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize
                 at,
                 format!("get {len}B <- n{}@{:#x}", src.node(), src.offset()),
             );
-            Resp::Handle(core.get_at(at, node, src, local_offset, len))
+            let h = core.get_at(at, node, src, local_offset, len);
+            ctls[i].clock = ctls[i].clock.max(core.op_times(h).0);
+            Resp::Handle(h)
         }
         Req::AmShort { dst, handler, args } => {
             ctls[i].note(at, format!("am_short -> n{dst} op{handler}"));
-            Resp::Handle(core.am_short_at(at, node, dst, handler, args))
+            let h = core.am_short_at(at, node, dst, handler, args);
+            ctls[i].clock = ctls[i].clock.max(core.op_times(h).0);
+            Resp::Handle(h)
         }
         Req::Compute { target, job } => {
             ctls[i].note(at, format!("compute -> n{target}"));
-            Resp::Handle(core.compute_at(at, node, target, job))
+            let h = core.compute_at(at, node, target, job);
+            ctls[i].clock = ctls[i].clock.max(core.op_times(h).0);
+            Resp::Handle(h)
         }
         Req::Barrier => {
             ctls[i].note(at, "barrier".to_string());
@@ -468,6 +484,12 @@ fn serve(core: &mut IssueCore, ctls: &mut [Ctl], resp: &[Sender<Resp>], i: usize
             Resp::Floats(core.read_shared_f16(node, offset, count))
         }
         Req::Now => Resp::Time(ctls[i].clock),
+        Req::AdvanceTo(t) => {
+            // Simulated think time: monotone-max like every clock
+            // update, so a time in the rank's past is a no-op.
+            ctls[i].clock = ctls[i].clock.max(t);
+            Resp::Done
+        }
         Req::Finished => unreachable!("Finished is absorbed by the recv loop"),
     };
     resp[i].send(answer).expect("SPMD rank thread died");
@@ -664,5 +686,73 @@ mod tests {
             r.now()
         });
         assert!(second.results[0] > first.results[0]);
+    }
+
+    #[test]
+    fn advance_to_spaces_issues_and_is_monotone() {
+        let mut spmd = two_node();
+        let gap = SimTime::from_ns(500);
+        let report = spmd.run(move |r| {
+            let peer = 1 - r.id();
+            let mut hs = Vec::new();
+            for k in 1..=3u64 {
+                r.advance_to(SimTime(gap.as_ps() * k));
+                hs.push(r.put(r.global_addr(peer, 0x100 * k), &[k as u8; 16]));
+            }
+            // A time already in the past must not move the clock back.
+            r.advance_to(SimTime::ZERO);
+            let now = r.now();
+            r.wait_all(&hs);
+            (now, hs)
+        });
+        for (i, (now, hs)) in report.results.iter().enumerate() {
+            assert!(*now >= SimTime(gap.as_ps() * 3), "rank {i} clock {now}");
+            for (k, &h) in hs.iter().enumerate() {
+                let issued = spmd.op_times(h).0;
+                assert_eq!(issued, SimTime(gap.as_ps() * (k as u64 + 1)));
+            }
+        }
+    }
+
+    #[test]
+    fn host_credits_back_pressure_ranks_independently() {
+        use crate::config::HostCredits;
+        let cap = 2u32;
+        let cfg = Config::two_node_ring()
+            .with_numerics(Numerics::TimingOnly)
+            .with_host_credits(HostCredits::Count(cap));
+        let drain = cfg.timing.cmd_ingress() + cfg.timing.tx_sched();
+        let mut spmd = Spmd::new(cfg);
+        let report = spmd.run(|r| {
+            let peer = 1 - r.id();
+            // Rank 1 idles past rank 0's burst: its single put must not
+            // be delayed by rank 0 exhausting *rank 0's* credit pool.
+            if r.id() == 1 {
+                r.advance_to(SimTime::from_ns(1));
+                let h = r.put(r.global_addr(peer, 0x9000), &[1u8; 32]);
+                let issued = vec![h];
+                r.wait_all(&issued);
+                return issued;
+            }
+            let hs: Vec<_> = (0..6)
+                .map(|k| r.put(r.global_addr(peer, 0x100 * k), &[2u8; 32]))
+                .collect();
+            r.wait_all(&hs);
+            hs
+        });
+        let issued: Vec<SimTime> = report.results[0]
+            .iter()
+            .map(|&h| spmd.op_times(h).0)
+            .collect();
+        for i in cap as usize..issued.len() {
+            assert!(
+                issued[i] >= issued[i - cap as usize] + drain,
+                "rank 0 issue {i} outran its credit pool"
+            );
+        }
+        // Rank 1's lone issue used a free credit of its own pool.
+        let lone = spmd.op_times(report.results[1][0]).0;
+        assert_eq!(lone, SimTime::from_ns(1));
+        assert!(spmd.counters().get("host_credit_stalls") > 0);
     }
 }

@@ -9,7 +9,8 @@ use crate::util::table::{self, f};
 use crate::workloads::{
     collectives::CollectivesPoint, conv::ConvResult, matmul::MatmulResult,
     scaleout::Exchange, scaleout::ScaleoutCase, scaleout::ScaleoutRow,
-    scaleout::TopoRow, sweep::LatencyResults, BandwidthSeries,
+    scaleout::TopoRow, serving::OpClass, serving::ServingPoint,
+    sweep::LatencyResults, BandwidthSeries,
 };
 
 /// Fig. 5 as CSV (one row per transfer size; PUT/GET column pairs per
@@ -323,6 +324,86 @@ pub fn collectives(points: &[CollectivesPoint]) -> String {
     out
 }
 
+/// `bench serving`: per-class latency tails across the offered-load x
+/// loss sweep, per-tenant goodput with the back-pressure evidence
+/// (credit stalls, busiest stage queues), and the saturation knee.
+pub fn serving(points: &[ServingPoint]) -> String {
+    let mut lat_rows = Vec::new();
+    for p in points {
+        for c in OpClass::ALL {
+            let st = p.class(c);
+            lat_rows.push(vec![
+                format!("{}%", p.load_pct),
+                p.loss_permille.to_string(),
+                c.name().to_string(),
+                st.count.to_string(),
+                f(st.p50.as_us(), 2),
+                f(st.p95.as_us(), 2),
+                f(st.p99.as_us(), 2),
+            ]);
+        }
+    }
+    let mut out = format!(
+        "bench serving: open-loop multi-tenant traffic, offered load x loss sweep\n\
+         (latency = arrival to fabric completion, true nearest-rank percentiles)\n{}",
+        table::render(
+            &["Load", "Loss permille", "Class", "Count", "p50 (us)", "p95 (us)", "p99 (us)"],
+            &lat_rows
+        )
+    );
+    let tenants = points.first().map_or(0, |p| p.goodput_mb_s.len());
+    let headers: Vec<String> = ["Load", "Loss permille"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain((0..tenants).map(|t| format!("tenant{t} MB/s")))
+        .chain(
+            ["credit stalls", "tx_fifo mean/max", "handler_q mean/max"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let depth = |p: &ServingPoint, stage: &str| {
+        p.queues
+            .iter()
+            .find(|q| q.stage == stage)
+            .map_or("-".into(), |q| {
+                format!("{}/{}", f(q.mean_depth, 3), q.max_depth)
+            })
+    };
+    let sys_rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            let mut cols = vec![format!("{}%", p.load_pct), p.loss_permille.to_string()];
+            cols.extend(p.goodput_mb_s.iter().map(|g| f(*g, 1)));
+            cols.push(p.credit_stalls.to_string());
+            cols.push(depth(p, "tx_fifo"));
+            cols.push(depth(p, "handler_q"));
+            cols
+        })
+        .collect();
+    out.push_str("\nper-tenant goodput and back-pressure:\n");
+    out.push_str(&table::render(&header_refs, &sys_rows));
+    match crate::workloads::serving::saturation_knee(points) {
+        Some(k) => {
+            let base = points
+                .iter()
+                .filter(|p| p.loss_permille == 0)
+                .map(|p| p.load_pct)
+                .min()
+                .unwrap_or(0);
+            out.push_str(&format!(
+                "\nsaturation knee at {}% offered load: small-GET p99 {} us \
+                 (> 3x the {base}%-load tail)\n",
+                k.load_pct,
+                f(k.class(OpClass::Get).p99.as_us(), 2),
+            ));
+        }
+        None => out.push_str("\nno saturation knee within the swept loads\n"),
+    }
+    out
+}
+
 /// Topology sweep of the scale-out kernel (weak scaling — see
 /// [`crate::workloads::scaleout::run_topologies`]).
 pub fn scaleout_topologies(case: &ScaleoutCase, rows: &[TopoRow]) -> String {
@@ -549,6 +630,53 @@ mod tests {
         let t = table4(3813.0);
         assert!(t.contains("3813 MB/s"));
         assert!(t.contains("QSFP+"));
+    }
+
+    fn fake_serving_point(load_pct: u32, get_p99_us: u64) -> ServingPoint {
+        use crate::workloads::serving::ClassStats;
+        let stats = |c: OpClass, p99_us: u64| ClassStats {
+            class: c,
+            count: 42,
+            p50: SimTime(p99_us * 1_000_000 / 4),
+            p95: SimTime(p99_us * 1_000_000 / 2),
+            p99: SimTime(p99_us * 1_000_000),
+        };
+        ServingPoint {
+            load_pct,
+            loss_permille: 0,
+            classes: vec![
+                stats(OpClass::Get, get_p99_us),
+                stats(OpClass::Put, 20),
+                stats(OpClass::Dla, 30),
+                stats(OpClass::Allreduce, 40),
+            ],
+            goodput_mb_s: vec![12.5, 13.0],
+            queues: vec![crate::sim::StageOccupancy {
+                stage: "tx_fifo",
+                gauges: 2,
+                mean_depth: 0.25,
+                max_depth: 3,
+            }],
+            credit_stalls: 7,
+            end: SimTime(1_000_000_000),
+        }
+    }
+
+    #[test]
+    fn serving_report_shows_tails_goodput_and_the_knee() {
+        let points = vec![fake_serving_point(50, 2), fake_serving_point(400, 9)];
+        let t = serving(&points);
+        for needle in ["get", "put", "dla", "allreduce"] {
+            assert!(t.contains(needle), "missing class {needle}: {t}");
+        }
+        assert!(t.contains("p99 (us)"), "{t}");
+        assert!(t.contains("tenant0 MB/s") && t.contains("tenant1 MB/s"), "{t}");
+        assert!(t.contains("credit stalls"), "{t}");
+        assert!(t.contains("0.250/3"), "tx_fifo depth column: {t}");
+        assert!(t.contains("saturation knee at 400%"), "{t}");
+
+        let flat = vec![fake_serving_point(50, 2), fake_serving_point(400, 3)];
+        assert!(serving(&flat).contains("no saturation knee"));
     }
 
     #[test]

@@ -28,6 +28,15 @@ fn key_eq(a: &'static str, b: &'static str) -> bool {
     std::ptr::eq(a, b) || a == b
 }
 
+/// Nearest-rank index into `n` sorted samples for percentile `p` in
+/// `[0, 100]`: `ceil(p/100 · n) - 1`, clamped to the valid range (p0 maps
+/// to the minimum, p100 to the maximum). Shared by [`LatencySeries`] and
+/// the telemetry duration histograms so both views of a series agree.
+pub fn nearest_rank(p: f64, n: usize) -> usize {
+    let k = ((p / 100.0) * n as f64).ceil() as usize;
+    k.saturating_sub(1).min(n.saturating_sub(1))
+}
+
 /// One-pass order statistics over a [`LatencySeries`].
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct LatencySummary {
@@ -104,15 +113,15 @@ impl LatencySeries {
         f(&s)
     }
 
-    /// `p` in `[0, 100]`; nearest-rank percentile.
+    /// `p` in `[0, 100]`; true nearest-rank percentile
+    /// (`ceil(p/100 · n) - 1` into the sorted samples — the same
+    /// definition the telemetry histograms use, so `bench` tables and
+    /// trace duration summaries agree on p99 for the same series).
     pub fn percentile(&self, p: f64) -> SimTime {
         if self.samples_ps.is_empty() {
             return SimTime::ZERO;
         }
-        self.with_sorted(|sorted| {
-            let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-            SimTime(sorted[rank.min(sorted.len() - 1)])
-        })
+        self.with_sorted(|sorted| SimTime(sorted[nearest_rank(p, sorted.len())]))
     }
 
     /// min/mean/p50/p95/p99/max in one pass over the sorted view.
@@ -123,10 +132,7 @@ impl LatencySeries {
         self.with_sorted(|sorted| {
             let n = sorted.len();
             let sum: u128 = sorted.iter().map(|&x| x as u128).sum();
-            let rank = |p: f64| {
-                let r = ((p / 100.0) * (n as f64 - 1.0)).round() as usize;
-                SimTime(sorted[r.min(n - 1)])
-            };
+            let rank = |p: f64| SimTime(sorted[nearest_rank(p, n)]);
             LatencySummary {
                 count: n,
                 min: SimTime(sorted[0]),
@@ -312,6 +318,54 @@ mod tests {
         assert_eq!(s.mean(), SimTime::from_ns(25));
         assert_eq!(s.percentile(100.0), SimTime::from_ns(40));
         assert_eq!(s.percentile(0.0), SimTime::from_ns(10));
+    }
+
+    #[test]
+    fn percentiles_use_true_nearest_rank() {
+        // Four samples: rank k = ceil(p/100 * 4), 1-based. The old
+        // round-half-up interpolation over n-1 put p50 at 30 ns; true
+        // nearest rank (the definition the telemetry histograms use)
+        // puts it at the 2nd sample.
+        let mut s = LatencySeries::default();
+        for ns in [10, 20, 30, 40] {
+            s.record(SimTime::from_ns(ns));
+        }
+        assert_eq!(s.percentile(25.0), SimTime::from_ns(10), "rank 1");
+        assert_eq!(s.percentile(50.0), SimTime::from_ns(20), "rank 2");
+        assert_eq!(s.percentile(75.0), SimTime::from_ns(30), "rank 3");
+        assert_eq!(s.percentile(95.0), SimTime::from_ns(40), "rank 4");
+        assert_eq!(nearest_rank(0.0, 4), 0);
+        assert_eq!(nearest_rank(100.0, 4), 3);
+        assert_eq!(nearest_rank(99.0, 100), 98);
+        assert_eq!(nearest_rank(50.0, 0), 0, "empty clamps to 0");
+    }
+
+    #[test]
+    fn series_and_histogram_percentiles_agree_within_bucket_resolution() {
+        // The two latency views — exact retained samples (bench tables)
+        // and log-bucketed histograms (trace duration summaries) — share
+        // the nearest-rank definition, so for any percentile the
+        // histogram resolves the *same* ranked sample to its bucket's
+        // upper bound: series_p <= hist_p <= 2 * series_p.
+        use crate::sim::telemetry::LogHistogram;
+        let mut rng = crate::sim::Rng::new(0x9E12);
+        let mut series = LatencySeries::default();
+        let mut hist = LogHistogram::default();
+        for _ in 0..500 {
+            let d = SimTime(1 + rng.below(5_000_000));
+            series.record(d);
+            hist.record(d);
+        }
+        for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let exact = series.percentile(p).as_ps();
+            let bucketed = hist.percentile(p).as_ps();
+            assert!(
+                exact <= bucketed && bucketed <= 2 * exact,
+                "p{p}: exact {exact} vs bucketed {bucketed}"
+            );
+        }
+        // Exact at the extremes.
+        assert_eq!(hist.percentile(100.0), series.percentile(100.0));
     }
 
     #[test]

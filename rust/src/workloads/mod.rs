@@ -1,17 +1,20 @@
 //! Experiment workloads: the paper's measurement sweeps (Fig. 5,
-//! Table III), case studies (Fig. 6/7), the SPMD scale-out sweep, and
-//! the collective-algorithm sweep (`bench collectives`).
+//! Table III), case studies (Fig. 6/7), the SPMD scale-out sweep, the
+//! collective-algorithm sweep (`bench collectives`), and the
+//! multi-tenant open-loop serving benchmark (`bench serving`).
 
 pub mod collectives;
 pub mod conv;
 pub mod matmul;
 pub mod scaleout;
+pub mod serving;
 pub mod sweep;
 
 pub use collectives::CollectivesPoint;
 pub use conv::{ConvCase, ConvResult};
 pub use matmul::{MatmulCase, MatmulResult};
 pub use scaleout::{ScaleoutCase, ScaleoutRow};
+pub use serving::{ServingPoint, TenantProfile};
 pub use sweep::{BandwidthSeries, LatencyResults};
 
 /// A simple bump allocator over a node's shared segment — how the

@@ -1,0 +1,439 @@
+//! The `bench serving` sweep: seeded open-loop traffic over a
+//! multi-tenant fabric, swept across offered load with and without ARQ
+//! loss injection.
+//!
+//! Each rank is one tenant with its own segment region and a mixed op
+//! profile — small GETs, bulk PUTs, DLA jobs, and a periodic blocking
+//! allreduce — driven by a seeded arrival process (`serving.arrival`:
+//! Poisson or bursty). Tenants issue open-loop: every op is spaced by
+//! the arrival schedule (`Rank::advance_to`), not by completions, so
+//! latency measured from arrival to fabric completion captures the
+//! queueing an offered load actually induces. The host side issues
+//! through the PCIe write-credit pool (`host_credits`), so a saturating
+//! tenant back-pressures its own node's command path without perturbing
+//! the other tenants.
+//!
+//! The report (`reports::serving`) prints p50/p95/p99 per op class,
+//! per-tenant goodput, the busiest stage queue depths (telemetry
+//! gauges), and the saturation knee: the first clean-load point whose
+//! small-GET p99 blows past the lowest load's tail.
+
+use crate::api::OpHandle;
+use crate::config::{Config, HostCredits, Numerics, ServingArrival};
+use crate::dla::{DlaJob, DlaOp};
+use crate::fabric::Topology;
+use crate::memory::GlobalAddr;
+use crate::program::{AmTag, Rank, Spmd};
+use crate::sim::counters::nearest_rank;
+use crate::sim::{
+    occupancy_summary, Rng, ShardingReport, SimTime, StageOccupancy, Telemetry, TelemetryLevel,
+};
+
+/// Mean inter-arrival gap per tenant at 100% offered load.
+const BASE_GAP: SimTime = SimTime(4_000_000); // 4 us
+/// Arrivals per batch under `serving.arrival = bursty` (batch spacing
+/// stretches to keep the offered load equal to Poisson's).
+const BURST: u32 = 4;
+/// Small-GET payload (a KV-style point read).
+const GET_BYTES: u64 = 256;
+/// Bulk-PUT payload (a result/state flush).
+const PUT_BYTES: u64 = 8 << 10;
+/// Side of the square fp16 matmul a tenant's DLA job runs.
+const DLA_MM: u32 = 16;
+/// Fabric-uniform offsets of the periodic allreduce (gradient + result
+/// scratch — identical on every rank, as the collective requires).
+const GRAD_OFF: u64 = 0x80_0000;
+const RED_OFF: u64 = 0x90_0000;
+
+/// Base of tenant `t`'s region, present at the same offset in every
+/// node's segment (64 KiB per tenant: PUT slab, GET source, GET landing
+/// zone, DLA tensors).
+fn region(tenant: u32) -> u64 {
+    0x10_0000 + tenant as u64 * 0x1_0000
+}
+
+/// The op classes a tenant's traffic mixes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// Small one-sided read from the peer's copy of this tenant's region.
+    Get = 0,
+    /// Bulk one-sided write into the peer's copy of this tenant's region.
+    Put = 1,
+    /// DLA matmul job dispatched to the peer node.
+    Dla = 2,
+    /// Periodic blocking collective (every `allreduce_every` arrivals).
+    Allreduce = 3,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 4] = [OpClass::Get, OpClass::Put, OpClass::Dla, OpClass::Allreduce];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::Get => "get",
+            OpClass::Put => "put",
+            OpClass::Dla => "dla",
+            OpClass::Allreduce => "allreduce",
+        }
+    }
+
+    /// Payload bytes the class moves (goodput accounting).
+    fn payload_bytes(&self) -> u64 {
+        match self {
+            OpClass::Get => GET_BYTES,
+            OpClass::Put => PUT_BYTES,
+            OpClass::Dla | OpClass::Allreduce => 0,
+        }
+    }
+}
+
+/// One op a tenant issued: its class, the arrival it was issued at, and
+/// how its completion resolves — a handle for the open-loop classes
+/// (completion read back post-run), or an inline measurement for the
+/// blocking allreduce.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantOp {
+    pub class: OpClass,
+    /// The tenant's local clock when the op became issueable (its
+    /// arrival under the open-loop schedule).
+    pub arrival: SimTime,
+    pub handle: Option<OpHandle>,
+    /// Completion time for ops measured inline (allreduce).
+    pub done: Option<SimTime>,
+}
+
+/// Per-tenant traffic parameters (identical across tenants; each tenant
+/// derives its own arrival stream from `seed` and its rank id).
+#[derive(Debug, Clone, Copy)]
+pub struct TenantProfile {
+    pub seed: u64,
+    /// Arrivals per tenant.
+    pub ops: u32,
+    pub arrival: ServingArrival,
+    /// Mean inter-arrival gap (offered load = `BASE_GAP / mean_gap`).
+    pub mean_gap: SimTime,
+    /// Every this-many arrivals, the arrival is a blocking allreduce
+    /// (fixed position in the arrival count, so every tenant's
+    /// collective calls line up — the collective contract).
+    pub allreduce_every: u32,
+    /// fp16 elements per rank in the allreduce.
+    pub allreduce_count: usize,
+}
+
+impl TenantProfile {
+    /// Profile for `load_pct`% of the base offered load, taking the
+    /// stream shape from `cfg` (`serving.arrival`, `serving.ops`).
+    pub fn from_config(cfg: &Config, load_pct: u32) -> Self {
+        assert!(load_pct > 0, "offered load must be positive");
+        TenantProfile {
+            seed: cfg.seed,
+            ops: cfg.serving_ops,
+            arrival: cfg.serving_arrival,
+            mean_gap: SimTime(BASE_GAP.as_ps() * 100 / load_pct as u64),
+            allreduce_every: 16,
+            allreduce_count: 64,
+        }
+    }
+}
+
+/// The per-tenant SPMD program: the seeded open-loop generator. Shared
+/// verbatim by `bench serving` and the cross-engine equivalence suites
+/// (`rust/tests/sharded.rs`, `rust/tests/parallel.rs`), so the traffic
+/// the equivalence contracts pin is exactly the traffic the bench runs.
+pub fn tenant_program(r: &mut Rank, sig: AmTag, p: &TenantProfile) -> Vec<TenantOp> {
+    let me = r.id();
+    let n = r.nodes();
+    let peer = (me + 1) % n;
+    let base = region(me);
+    let mut rng = Rng::new(
+        p.seed ^ (me as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let mut t = SimTime::ZERO;
+    let mut out = Vec::with_capacity(p.ops as usize);
+    for k in 0..p.ops {
+        let gap = match p.arrival {
+            ServingArrival::Poisson => {
+                // Inverse-CDF exponential inter-arrival.
+                (-(1.0 - rng.f64()).ln() * p.mean_gap.as_ps() as f64) as u64
+            }
+            ServingArrival::Bursty => {
+                if k % BURST == 0 {
+                    p.mean_gap.as_ps() * BURST as u64
+                } else {
+                    0
+                }
+            }
+        };
+        t = SimTime(t.as_ps() + gap);
+        r.advance_to(t);
+        // The effective arrival: the schedule time, or later if the
+        // tenant is still blocked past it (a preceding allreduce or
+        // credit stall) — queueing from *this* op onward is the
+        // system's latency, the tenant's own blocking is not.
+        let arrival = r.now();
+        if p.allreduce_every != 0 && k % p.allreduce_every == p.allreduce_every - 1 {
+            crate::collectives::spmd::allreduce_sum_f16(
+                r,
+                sig,
+                GRAD_OFF,
+                p.allreduce_count,
+                RED_OFF,
+            );
+            out.push(TenantOp {
+                class: OpClass::Allreduce,
+                arrival,
+                handle: None,
+                done: Some(r.now()),
+            });
+            continue;
+        }
+        let (class, handle) = match rng.below(100) {
+            0..=54 => (
+                OpClass::Get,
+                r.get(r.global_addr(peer, base + 0x2000), base + 0x4000, GET_BYTES),
+            ),
+            55..=84 => (
+                OpClass::Put,
+                r.put_from_mem(base, PUT_BYTES, r.global_addr(peer, base)),
+            ),
+            _ => {
+                let elem = DLA_MM as u64 * DLA_MM as u64 * 2;
+                let job = DlaJob {
+                    op: DlaOp::Matmul {
+                        m: DLA_MM,
+                        k: DLA_MM,
+                        n: DLA_MM,
+                        a: GlobalAddr::new(peer, base + 0x6000),
+                        b: GlobalAddr::new(peer, base + 0x6000 + elem),
+                        y: GlobalAddr::new(peer, base + 0x6000 + 2 * elem),
+                        accumulate: false,
+                    },
+                    art: None,
+                    notify: None,
+                };
+                (OpClass::Dla, r.compute(peer, job))
+            }
+        };
+        out.push(TenantOp {
+            class,
+            arrival,
+            handle: Some(handle),
+            done: None,
+        });
+    }
+    out
+}
+
+/// Latency percentiles of one op class at one sweep point
+/// (true nearest-rank over the exact per-op latencies).
+#[derive(Debug, Clone, Copy)]
+pub struct ClassStats {
+    pub class: OpClass,
+    pub count: usize,
+    pub p50: SimTime,
+    pub p95: SimTime,
+    pub p99: SimTime,
+}
+
+/// One sweep point: an offered load and a loss setting, with per-class
+/// tails, per-tenant goodput, stage queue depths, and the credit stalls
+/// the load induced.
+#[derive(Debug, Clone)]
+pub struct ServingPoint {
+    /// Offered load as a percentage of the base rate (1 op / 4 us /
+    /// tenant = 100%).
+    pub load_pct: u32,
+    /// `link_loss_permille` of the run (0 = clean links).
+    pub loss_permille: u32,
+    /// Per-class latency stats, in [`OpClass::ALL`] order.
+    pub classes: Vec<ClassStats>,
+    /// Per-tenant goodput (completed GET+PUT payload), MB/s.
+    pub goodput_mb_s: Vec<f64>,
+    /// Time-weighted per-stage queue depths (telemetry gauges).
+    pub queues: Vec<StageOccupancy>,
+    /// Host write-credit stalls across the run.
+    pub credit_stalls: u64,
+    /// Simulated end of the run (quiescence).
+    pub end: SimTime,
+}
+
+impl ServingPoint {
+    pub fn class(&self, c: OpClass) -> &ClassStats {
+        &self.classes[c as usize]
+    }
+}
+
+/// The bench config: a 4-tenant ring, timing-only numerics, a
+/// deliberately shallow PCIe write-credit pool, and the given loss
+/// injection. The pool is shallow because the command FIFO drains in
+/// `cmd_ingress + tx_sched` (36 ns on the D5005 preset): only
+/// near-coincident issues can contend for credits at all, so a deep
+/// pool would never bind on any offered load this sweep reaches.
+pub fn serving_config(loss_permille: u32) -> Config {
+    let mut cfg = Config::two_node_ring()
+        .with_numerics(Numerics::TimingOnly)
+        .with_host_credits(HostCredits::Count(2))
+        .with_link_loss_permille(loss_permille);
+    cfg.topology = Topology::Ring(4);
+    cfg
+}
+
+/// Run one sweep point under `cfg` at `load_pct`% offered load.
+pub fn run_point(cfg: Config, load_pct: u32) -> ServingPoint {
+    let cfg = cfg.with_telemetry(TelemetryLevel::Counters);
+    let loss_permille = cfg.link_loss_permille;
+    let profile = TenantProfile::from_config(&cfg, load_pct);
+    let mut s = Spmd::new(cfg);
+    let n = s.nodes() as usize;
+    let sig = s.register_signal(23);
+    let report = s.run(move |r| tenant_program(r, sig, &profile));
+
+    let mut lats: Vec<Vec<u64>> = vec![Vec::new(); OpClass::ALL.len()];
+    let mut tenant_bytes = vec![0u64; n];
+    for (tenant, ops) in report.results.iter().enumerate() {
+        for op in ops {
+            let done = match (op.handle, op.done) {
+                (Some(h), _) => s
+                    .op_times(h)
+                    .3
+                    .expect("open-loop op completed by quiescence"),
+                (None, Some(t)) => t,
+                _ => unreachable!("a tenant op resolves one way or the other"),
+            };
+            lats[op.class as usize].push(done.since(op.arrival).as_ps());
+            tenant_bytes[tenant] += op.class.payload_bytes();
+        }
+    }
+    let classes = OpClass::ALL
+        .iter()
+        .map(|&c| {
+            let v = &mut lats[c as usize];
+            v.sort_unstable();
+            let pct = |p: f64| {
+                if v.is_empty() {
+                    SimTime::ZERO
+                } else {
+                    SimTime(v[nearest_rank(p, v.len())])
+                }
+            };
+            ClassStats {
+                class: c,
+                count: v.len(),
+                p50: pct(50.0),
+                p95: pct(95.0),
+                p99: pct(99.0),
+            }
+        })
+        .collect();
+    let end = report.end;
+    let secs = end.as_ps() as f64 * 1e-12;
+    let goodput_mb_s = tenant_bytes
+        .iter()
+        .map(|&b| if secs > 0.0 { b as f64 / secs / 1e6 } else { 0.0 })
+        .collect();
+    ServingPoint {
+        load_pct,
+        loss_permille,
+        classes,
+        goodput_mb_s,
+        queues: occupancy_summary(s.counters().telemetry(), end),
+        credit_stalls: s.counters().get("host_credit_stalls"),
+        end,
+    }
+}
+
+/// The full sweep: offered loads × {clean, lossy} links (`--fast` trims
+/// the load axis).
+pub fn run_sweep(fast: bool) -> Vec<ServingPoint> {
+    let loads: &[u32] = if fast {
+        &[50, 200, 800]
+    } else {
+        &[50, 100, 200, 400, 800]
+    };
+    let mut out = Vec::new();
+    for &loss in &[0u32, 20] {
+        for &load in loads {
+            out.push(run_point(serving_config(loss), load));
+        }
+    }
+    out
+}
+
+/// The saturation knee: the first clean-load point whose small-GET p99
+/// exceeds 3x the lowest clean load's p99. `None` when the sweep never
+/// saturates.
+pub fn saturation_knee(points: &[ServingPoint]) -> Option<&ServingPoint> {
+    let mut clean: Vec<&ServingPoint> = points.iter().filter(|p| p.loss_permille == 0).collect();
+    clean.sort_by_key(|p| p.load_pct);
+    let base = clean.first()?.class(OpClass::Get).p99;
+    clean
+        .into_iter()
+        .find(|p| p.class(OpClass::Get).p99.as_ps() > 3 * base.as_ps())
+}
+
+/// One representative point (400% load, clean links) rerun at the given
+/// telemetry level: raw material for the report's stage tables and the
+/// `--trace-out` export.
+pub fn run_instrumented(
+    fast: bool,
+    level: TelemetryLevel,
+) -> (Telemetry, Option<ShardingReport>, SimTime) {
+    let cfg = serving_config(0).with_telemetry(level);
+    let mut profile = TenantProfile::from_config(&cfg, 400);
+    if fast {
+        profile.ops = profile.ops.min(24);
+    }
+    let mut s = Spmd::new(cfg);
+    let sig = s.register_signal(23);
+    let report = s.run(move |r| tenant_program(r, sig, &profile));
+    (s.counters().telemetry().clone(), report.shards, report.end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_sweep_measures_every_class_and_finds_the_knee() {
+        let points = run_sweep(true);
+        assert_eq!(points.len(), 6, "3 loads x clean/lossy");
+        for p in &points {
+            for c in OpClass::ALL {
+                let st = p.class(c);
+                assert!(st.count > 0, "{} has no samples at {}%", c.name(), p.load_pct);
+                assert!(st.p50 <= st.p95 && st.p95 <= st.p99);
+            }
+            // Every tenant pushed payload.
+            assert!(p.goodput_mb_s.iter().all(|&g| g > 0.0));
+            // The gauges the report surfaces were recorded.
+            assert!(p.queues.iter().any(|q| q.stage == "tx_fifo"));
+            assert!(p.end > SimTime::ZERO);
+        }
+        // The top offered load saturates the fabric: the knee is inside
+        // the default sweep (the bench's headline observable).
+        let knee = saturation_knee(&points).expect("sweep reaches saturation");
+        assert!(knee.load_pct > 50);
+    }
+
+    #[test]
+    fn bursty_arrivals_exhaust_the_credit_pool() {
+        let cfg = serving_config(0).with_serving_arrival(ServingArrival::Bursty);
+        let p = run_point(cfg, 100);
+        for c in OpClass::ALL {
+            assert!(p.class(c).count > 0, "{} missing under bursty", c.name());
+        }
+        // A burst lands `BURST` arrivals at one instant; with 2 credits
+        // and a 36 ns drain, the third coincident issue must stall —
+        // the write-credit pool visibly bounds per-node in-flight issue.
+        assert!(p.credit_stalls > 0);
+    }
+
+    #[test]
+    fn loss_injection_keeps_the_workload_complete() {
+        // ARQ must deliver everything despite forced drops: the lossy
+        // point records exactly as many samples as ops were issued.
+        let p = run_point(serving_config(20), 100);
+        let total: usize = OpClass::ALL.iter().map(|&c| p.class(c).count).sum();
+        assert_eq!(total, 4 * 48, "every issued op completed under loss");
+    }
+}

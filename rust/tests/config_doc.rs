@@ -96,6 +96,9 @@ fn documented_keys_round_trip_through_the_parser() {
             "host_wake_ns" => "200",
             "collectives.algo" => "auto",
             "collectives.reduce" => "auto",
+            "host_credits" => "off",
+            "serving.arrival" => "poisson",
+            "serving.ops" => "48",
             "telemetry" => "counters",
             "seed" => "7",
             other => panic!("doc documents unknown key '{other}'"),

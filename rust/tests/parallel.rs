@@ -413,6 +413,73 @@ fn compat_under_arq_failure_injection() {
 // ---- structured programs ---------------------------------------------------
 
 #[test]
+fn compat_serving_traffic() {
+    // The serving bench's open-loop tenant program under worker threads:
+    // credit-pool effective-issue times, advance_to pacing, and the ARQ
+    // retransmission schedule must all replay trace-compatibly (latency
+    // sample order is the only relaxed observable, compared as sorted
+    // multisets like the rest of this suite).
+    use fshmem::workloads::serving::{serving_config, tenant_program, TenantProfile};
+    for seed in seeds() {
+        let run = |shards: ShardSpec, threads: ThreadSpec| {
+            let mut base = serving_config(20);
+            base.seed = seed;
+            let cfg = pcfg(base, shards, threads);
+            let mut profile = TenantProfile::from_config(&cfg, 400);
+            profile.ops = 24;
+            let mut s = Spmd::new(cfg);
+            let sig = s.register_signal(23);
+            let report = s.run(move |r| tenant_program(r, sig, &profile));
+            let mut latencies: Vec<(&'static str, Vec<u64>)> = s
+                .counters()
+                .latencies()
+                .map(|(k, v)| {
+                    let mut samples = v.samples().to_vec();
+                    samples.sort_unstable();
+                    (k, samples)
+                })
+                .collect();
+            latencies.sort_by_key(|&(k, _)| k);
+            let ops: Vec<Vec<_>> = report
+                .results
+                .iter()
+                .map(|tenant| {
+                    tenant
+                        .iter()
+                        .map(|o| {
+                            (
+                                o.class.name(),
+                                o.arrival,
+                                o.done,
+                                o.handle.map(|h| s.op_times(h)),
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+            (
+                report.end,
+                report.finish,
+                s.events_processed(),
+                s.counters().counts().collect::<Vec<_>>(),
+                latencies,
+                ops,
+            )
+        };
+        for shards in [ShardSpec::Auto, ShardSpec::Count(2)] {
+            let seq = run(shards, ThreadSpec::Off);
+            for threads in [ThreadSpec::Auto, ThreadSpec::Count(2)] {
+                assert_eq!(
+                    seq,
+                    run(shards, threads),
+                    "serving seed {seed:#x} [{shards:?} / {threads:?}]"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn compat_collectives_broadcast_allreduce() {
     let run = |threads: ThreadSpec| {
         let cfg = pcfg(Config::ring(5), ShardSpec::Auto, threads);

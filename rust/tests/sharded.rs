@@ -403,6 +403,69 @@ fn equivalence_under_arq_failure_injection() {
 // ---- structured programs ---------------------------------------------------
 
 #[test]
+fn equivalence_serving_traffic() {
+    // The serving bench's open-loop tenant program (advance_to pacing, a
+    // shallow host write-credit pool, mixed GET/PUT/DLA/allreduce, ARQ
+    // loss on the wire) must stay bit-identical across shard layouts —
+    // the credit pool's effective-issue times are host-side bookkeeping
+    // no partition can observe.
+    use fshmem::config::ServingArrival;
+    use fshmem::workloads::serving::{serving_config, tenant_program, TenantProfile};
+    for seed in seeds() {
+        for arrival in [ServingArrival::Poisson, ServingArrival::Bursty] {
+            let mk = || {
+                let mut cfg = serving_config(20).with_serving_arrival(arrival);
+                cfg.seed = seed;
+                cfg
+            };
+            let run = |shards: ShardSpec| {
+                let cfg = mk().with_shards(shards);
+                let mut profile = TenantProfile::from_config(&cfg, 400);
+                profile.ops = 24;
+                let mut s = Spmd::new(cfg);
+                let sig = s.register_signal(23);
+                let report = s.run(move |r| tenant_program(r, sig, &profile));
+                let ops: Vec<Vec<_>> = report
+                    .results
+                    .iter()
+                    .map(|tenant| {
+                        tenant
+                            .iter()
+                            .map(|o| {
+                                (
+                                    o.class.name(),
+                                    o.arrival,
+                                    o.done,
+                                    o.handle.map(|h| s.op_times(h)),
+                                )
+                            })
+                            .collect()
+                    })
+                    .collect();
+                (
+                    report.end,
+                    report.finish,
+                    s.events_processed(),
+                    s.counters().counts().collect::<Vec<_>>(),
+                    ops,
+                )
+            };
+            let mono = run(ShardSpec::Off);
+            assert_eq!(
+                mono,
+                run(ShardSpec::Auto),
+                "serving {arrival:?} seed {seed:#x} [auto shards]"
+            );
+            assert_eq!(
+                mono,
+                run(ShardSpec::Count(2)),
+                "serving {arrival:?} seed {seed:#x} [2 shards]"
+            );
+        }
+    }
+}
+
+#[test]
 fn equivalence_collectives_broadcast_allreduce() {
     let run = |shards: ShardSpec| {
         let mut s = Spmd::new(timing(Config::ring(5)).with_shards(shards));
