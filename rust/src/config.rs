@@ -221,6 +221,49 @@ impl HostCredits {
     }
 }
 
+/// Per-rank in-flight task window for the task-graph executor
+/// (`taskgraph.inflight = off|N` in config files). Each launched task
+/// occupies a slot until its op handles resolve; at the cap, the next
+/// launch first retires the oldest outstanding task — bounding how much
+/// issued-but-incomplete work a rank accumulates. `Off` (the default)
+/// launches without a window and preserves the hand-scheduled workloads'
+/// timings bit-for-bit (`rust/tests/taskgraph.rs` pins this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskInflight {
+    /// Unbounded launch window (the default).
+    Off,
+    /// At most this many unresolved launched tasks per rank.
+    Count(u32),
+}
+
+impl TaskInflight {
+    /// Parse the `taskgraph.inflight = off|N` config value.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "off" => TaskInflight::Off,
+            _ => {
+                let n: u32 = v
+                    .parse()
+                    .context("taskgraph.inflight must be 'off' or a positive window")?;
+                if n == 0 {
+                    bail!(
+                        "taskgraph.inflight must be positive \
+                         (use 'off' for an unbounded window)"
+                    );
+                }
+                TaskInflight::Count(n)
+            }
+        })
+    }
+
+    fn as_cfg_value(&self) -> String {
+        match self {
+            TaskInflight::Off => "off".to_string(),
+            TaskInflight::Count(n) => n.to_string(),
+        }
+    }
+}
+
 /// Arrival process of the serving workload's open-loop traffic
 /// (`serving.arrival = poisson|bursty` in config files). `Poisson` draws
 /// exponential inter-arrival gaps; `Bursty` groups the same mean offered
@@ -441,6 +484,14 @@ pub struct Config {
     /// Ops each tenant offers per `bench serving` sweep point
     /// (`serving.ops`; default 48, must be positive).
     pub serving_ops: u32,
+    /// Signal-AM tag the task-graph executor registers for cross-rank
+    /// dependency edges (`taskgraph.signal_tag`; default 23). Registered
+    /// lazily — graphs without cross-rank edges never use it.
+    pub taskgraph_tag: u8,
+    /// Per-rank in-flight task window for the task-graph executor
+    /// (`taskgraph.inflight = off|N`) — see [`TaskInflight`]. `Off`
+    /// preserves hand-scheduled timings bit-for-bit.
+    pub taskgraph_inflight: TaskInflight,
     /// Deterministic seed for every randomized model component.
     pub seed: u64,
 }
@@ -500,6 +551,10 @@ impl Config {
             host_credits: HostCredits::Off,
             serving_arrival: ServingArrival::Poisson,
             serving_ops: 48,
+            // A free tag in every preset's handler table; the task-graph
+            // executor only registers it when a graph needs it.
+            taskgraph_tag: 23,
+            taskgraph_inflight: TaskInflight::Off,
             seed: 0xF5113,
         }
     }
@@ -622,6 +677,13 @@ impl Config {
     /// Set the per-tenant op count for `bench serving` sweep points.
     pub fn with_serving_ops(mut self, ops: u32) -> Self {
         self.serving_ops = ops;
+        self
+    }
+
+    /// Select the task-graph executor's per-rank in-flight window (see
+    /// [`TaskInflight`]).
+    pub fn with_taskgraph_inflight(mut self, window: TaskInflight) -> Self {
+        self.taskgraph_inflight = window;
         self
     }
 
@@ -809,6 +871,12 @@ impl Config {
                 }
                 "serving.ops" => {
                     cfg.serving_ops = v.parse().context("serving.ops")?
+                }
+                "taskgraph.signal_tag" => {
+                    cfg.taskgraph_tag = v.parse().context("taskgraph.signal_tag")?
+                }
+                "taskgraph.inflight" => {
+                    cfg.taskgraph_inflight = TaskInflight::parse(v)?
                 }
                 "seed" => cfg.seed = v.parse().context("seed")?,
                 _ => bail!("line {}: unknown key {k:?}", lineno + 1),
@@ -1044,6 +1112,12 @@ impl Config {
             self.serving_arrival.as_cfg_value()
         );
         let _ = writeln!(out, "serving.ops = {}", self.serving_ops);
+        let _ = writeln!(out, "taskgraph.signal_tag = {}", self.taskgraph_tag);
+        let _ = writeln!(
+            out,
+            "taskgraph.inflight = {}",
+            self.taskgraph_inflight.as_cfg_value()
+        );
         let _ = writeln!(out, "seed = {}", self.seed);
         out
     }
@@ -1299,6 +1373,48 @@ mod tests {
         assert_eq!(back.host_credits, HostCredits::Count(4));
         assert_eq!(back.serving_arrival, ServingArrival::Bursty);
         assert_eq!(back.serving_ops, 12);
+        assert_eq!(back.to_cfg_string(), text);
+    }
+
+    #[test]
+    fn taskgraph_keys_parse_validate_and_round_trip() {
+        // Spellings.
+        assert_eq!(TaskInflight::parse("off").unwrap(), TaskInflight::Off);
+        assert_eq!(TaskInflight::parse("4").unwrap(), TaskInflight::Count(4));
+        assert!(
+            TaskInflight::parse("0").is_err(),
+            "a zero window could never launch"
+        );
+        assert!(TaskInflight::parse("deep").is_err());
+
+        // Defaults: the window is opt-in, the tag has a fixed default.
+        let preset = Config::two_node_ring();
+        assert_eq!(preset.taskgraph_inflight, TaskInflight::Off);
+        assert_eq!(preset.taskgraph_tag, 23);
+        assert!(preset.to_cfg_string().contains("taskgraph.inflight = off"));
+        assert!(preset
+            .to_cfg_string()
+            .contains("taskgraph.signal_tag = 23"));
+
+        // File parsing.
+        let cfg = Config::from_str_cfg(
+            "taskgraph.signal_tag = 31\ntaskgraph.inflight = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.taskgraph_tag, 31);
+        assert_eq!(cfg.taskgraph_inflight, TaskInflight::Count(2));
+        assert!(Config::from_str_cfg("taskgraph.inflight = 0\n").is_err());
+
+        // Round trip through the serializer (sentinel and count).
+        let mut cfg = Config::ring(4).with_taskgraph_inflight(TaskInflight::Count(3));
+        cfg.taskgraph_tag = 31;
+        cfg.validate().unwrap();
+        let text = cfg.to_cfg_string();
+        assert!(text.contains("taskgraph.signal_tag = 31"), "{text}");
+        assert!(text.contains("taskgraph.inflight = 3"), "{text}");
+        let back = Config::from_str_cfg(&text).unwrap();
+        assert_eq!(back.taskgraph_tag, 31);
+        assert_eq!(back.taskgraph_inflight, TaskInflight::Count(3));
         assert_eq!(back.to_cfg_string(), text);
     }
 

@@ -9,7 +9,7 @@ use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::reports;
 use crate::resource;
 use crate::sim::{chrome_trace, ShardingReport, SimTime, Telemetry, TelemetryLevel};
-use crate::workloads::{collectives, conv, matmul, scaleout, serving, sweep};
+use crate::workloads::{collectives, conv, matmul, scaleout, serving, sweep, taskgraph};
 
 /// Registry of named experiments.
 pub const EXPERIMENTS: &[(&str, &str)] = &[
@@ -29,6 +29,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     (
         "serving",
         "Multi-tenant open-loop serving: latency tails vs offered load, with loss injection",
+    ),
+    (
+        "taskgraph",
+        "Task-graph executor: pipeline-parallel result-chunk streaming across 4-8 ranks",
     ),
     ("all", "run everything above"),
 ];
@@ -113,6 +117,7 @@ pub fn run_experiment(name: &str, opts: &RunOptions) -> Result<String> {
         "scaleout" => run_scaleout(opts),
         "collectives" => run_collectives(opts),
         "serving" => run_serving(opts),
+        "taskgraph" => run_taskgraph(opts),
         "all" => {
             let mut out = String::new();
             for (n, _) in EXPERIMENTS.iter().filter(|(n, _)| *n != "all") {
@@ -267,6 +272,19 @@ fn run_serving(opts: &RunOptions) -> Result<String> {
     Ok(out)
 }
 
+fn run_taskgraph(opts: &RunOptions) -> Result<String> {
+    // The sweep fixes its own configs (P-node ring, timing-only,
+    // host_wake = propagation) and runs every variant on all three
+    // engine backends; --fast trims the depth axis to 4 stages.
+    let points = taskgraph::run_sweep(opts.fast);
+    let mut out = reports::taskgraph(&points);
+    // Instrumented representative point (the deepest pipeline,
+    // pipelined variant) for the stage tables and `--trace-out`.
+    let (tel, tel_shards, end) = taskgraph::run_instrumented(opts.fast, bench_telemetry(opts));
+    emit_telemetry(&mut out, opts, &tel, tel_shards.as_ref(), end)?;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -363,6 +381,18 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("serving"), "{err}");
+    }
+
+    #[test]
+    fn taskgraph_experiment_is_registered() {
+        // The sweep itself is covered by workloads::taskgraph tests (and
+        // the CI smoke job runs `bench taskgraph --fast --trace-out` end
+        // to end); here, just pin the registry entry.
+        assert!(EXPERIMENTS.iter().any(|(n, _)| *n == "taskgraph"));
+        let err = run_experiment("nope", &RunOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("taskgraph"), "{err}");
     }
 
     #[test]

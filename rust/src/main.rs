@@ -92,6 +92,8 @@ usage: fshmem <info|list|bench|run> [options]
                 reproduced on all three engine backends)
                (serving: multi-tenant open-loop traffic — latency tails vs
                 offered load, host write-credit back-pressure, loss sweep)
+               (taskgraph: pipeline-parallel streaming through the TaskGraph
+                executor — pipelined vs bulk-synchronous at each depth)
   run [--config file.cfg]   demo put/get/AM round trip";
 
 fn info() -> Result<()> {

@@ -25,6 +25,11 @@
 //!   into the shared event queue through `model/host.rs`, and resolves
 //!   cross-node dependencies — barrier releases, AM arrivals
 //!   ([`Rank::wait_signal`]), op completions — at simulated time.
+//! * [`TaskGraph`] — a dataflow executor above `Spmd`: tasks declare
+//!   input/output tokens, placement maps them onto ranks, and the
+//!   per-rank schedule launches each task the moment its dependencies
+//!   resolve (op completions, matched signal AMs, barrier epochs) — the
+//!   layer that replaces hand-rolled wait/signal choreography.
 //!
 //! ```text
 //!  rank 0 program ──┐            issue @ local clock        ┌─ node 0
@@ -44,10 +49,12 @@
 mod issue;
 mod rank;
 mod spmd;
+mod taskgraph;
 
 pub use issue::IssueCore;
 pub use rank::Rank;
 pub use spmd::{RankTimeline, Spmd, SpmdReport, TimelineEntry};
+pub use taskgraph::{TaskGraph, TaskGraphRun, TaskId, TaskTrace, Token};
 
 /// Shared NBI access-region bookkeeping (GASNet
 /// `begin/end_nbi_accessregion` semantics: regions do not nest; every

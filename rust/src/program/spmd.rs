@@ -168,6 +168,10 @@ impl Ctl {
 /// timeline continues.
 pub struct Spmd {
     core: IssueCore,
+    /// The task-graph executor's dependency signal, registered lazily on
+    /// first use (see [`Spmd::taskgraph_signal`]) and cached so repeated
+    /// graph runs share one handler-table entry.
+    graph_sig: Option<AmTag>,
 }
 
 impl Spmd {
@@ -175,6 +179,7 @@ impl Spmd {
     pub fn new(cfg: Config) -> Self {
         Spmd {
             core: IssueCore::new(cfg),
+            graph_sig: None,
         }
     }
 
@@ -265,6 +270,20 @@ impl Spmd {
             tag,
             opcode: opcode.expect("fabric has at least one node"),
         }
+    }
+
+    /// The signal tag the task-graph executor resolves cross-rank edges
+    /// with (`Config::taskgraph_tag`). Registered on every node on first
+    /// call, cached afterwards; graphs without cross-rank edges never
+    /// call this, so they leave the handler tables untouched.
+    pub fn taskgraph_signal(&mut self) -> AmTag {
+        if let Some(sig) = self.graph_sig {
+            return sig;
+        }
+        let tag = self.core.world().cfg().taskgraph_tag;
+        let sig = self.register_signal(tag);
+        self.graph_sig = Some(sig);
+        sig
     }
 
     /// Launch one copy of `program` per node (SPMD: the closure reads its

@@ -1,0 +1,746 @@
+//! A dataflow task-graph executor above [`Spmd`].
+//!
+//! Every workload so far hand-schedules its rank programs: each closure
+//! interleaves issue arms and waits in exactly the order the author
+//! worked out. [`TaskGraph`] lifts that choreography into data: a task
+//! is a closure over a [`Rank`] plus declared input/output *tokens*,
+//! edges are the data dependencies between them, and placement maps
+//! each task onto a rank. The executor resolves every edge with the
+//! primitives that already exist — op completions for same-rank edges,
+//! matched signal AMs ([`Rank::wait_signal_matching`]) for cross-rank
+//! edges, and barrier epochs ([`TaskGraph::barrier`]) for bulk
+//! phase boundaries — so a graph run is an ordinary SPMD program with
+//! the same determinism contract as a hand-written one.
+//!
+//! # Execution model
+//!
+//! * A task's **body** runs on its placed rank and returns the
+//!   [`OpHandle`]s backing its outputs. The executor launches a task as
+//!   soon as its inputs are resolved and does **not** wait for the
+//!   task's own handles at launch — independent tasks on one rank
+//!   interleave their issue streams exactly like hand-pipelined code.
+//! * A **same-rank** edge resolves by `wait_all` on the producer's
+//!   handles (once; later consumers see it already resolved).
+//! * A **cross-rank** edge resolves by a signal AM: the producer waits
+//!   for its own handles, then signals each consuming rank once per
+//!   token; the consumer blocks on the matching signal. The signal tag
+//!   comes from `Config::taskgraph_tag` and is registered lazily —
+//!   graphs without cross-rank edges register nothing and add zero
+//!   simulated traffic.
+//! * [`TaskGraph::barrier`] closes an **epoch**: every rank drains its
+//!   unresolved tasks of the epoch (in insertion order) and enters the
+//!   fabric barrier. Edges that cross an epoch boundary forward are
+//!   resolved by the barrier itself (the producer's handles completed
+//!   before it entered), so they need no signals either.
+//!
+//! # Scheduling order and deadlock freedom
+//!
+//! Within an epoch, every rank launches its tasks in one *global*
+//! topological order (Kahn's algorithm, smallest task id first among
+//! ready tasks). If rank R blocks on a token produced by task P on rank
+//! S, then whatever task currently blocks S sits strictly earlier in
+//! that topological order than P does — so a hypothetical wait cycle
+//! would need a strictly decreasing chain of topological indices, which
+//! cannot close. Arbitrary acyclic graphs with arbitrary placements
+//! therefore never deadlock (`rust/tests/taskgraph.rs` exercises this
+//! with randomized DAGs).
+//!
+//! # Determinism
+//!
+//! A graph run inherits the engine ladder unchanged: bit-identical
+//! across `shards = off|auto|N` and every `shards.map`, and
+//! trace-compatible across `engine_threads` (the equivalence suites pin
+//! both). The recorded per-rank execution [`TaskTrace`]s are part of
+//! that contract — same graph, same seed, same order.
+
+use std::collections::{BinaryHeap, HashSet, VecDeque};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::api::OpHandle;
+use crate::config::TaskInflight;
+use crate::memory::NodeId;
+use crate::sim::SimTime;
+
+use super::rank::Rank;
+use super::spmd::{Spmd, SpmdReport};
+
+/// A data token: the unit of dependency between tasks. Produced by
+/// exactly one task (single assignment) and consumed by any number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Token(u32);
+
+/// Identifies a task within its [`TaskGraph`] (insertion order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskId(usize);
+
+impl TaskId {
+    /// The task's insertion index.
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Last signal-AM argument word: distinguishes task-graph dependency
+/// signals from any other traffic a program might put on the same tag.
+const SIG_MAGIC: u32 = 0x7461_736B; // "task"
+
+type TaskBody = Box<dyn Fn(&mut Rank) -> Vec<OpHandle> + Send + Sync>;
+
+struct Task {
+    name: String,
+    rank: NodeId,
+    epoch: usize,
+    inputs: Vec<Token>,
+    outputs: Vec<Token>,
+    body: TaskBody,
+}
+
+/// One recorded task launch on a rank: which task, and the rank's local
+/// virtual time at launch (after its inputs resolved).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskTrace {
+    /// The launched task.
+    pub task: TaskId,
+    /// The rank's local clock when the body started issuing.
+    pub at: SimTime,
+}
+
+/// Result of one [`TaskGraph::run`].
+#[derive(Debug)]
+pub struct TaskGraphRun {
+    /// The underlying SPMD run (finish times, timelines, shard stats).
+    pub report: SpmdReport<()>,
+    /// Per-rank execution order: the tasks each rank launched, in
+    /// launch order, with their launch times. Deterministic — part of
+    /// the equivalence contract.
+    pub order: Vec<Vec<TaskTrace>>,
+}
+
+/// Executor-side per-task run state (only the owning rank's thread
+/// touches a task's slot; the mutex satisfies `Sync`, never contends).
+#[derive(Default)]
+struct TaskState {
+    resolved: bool,
+    handles: Vec<OpHandle>,
+}
+
+/// A dataflow graph of rank-placed tasks (see the module docs).
+#[derive(Default)]
+pub struct TaskGraph {
+    tasks: Vec<Task>,
+    token_names: Vec<String>,
+    /// Number of `barrier()` calls so far == the epoch new tasks join.
+    barriers: usize,
+}
+
+impl TaskGraph {
+    /// An empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a data token. The name only serves diagnostics.
+    pub fn token(&mut self, name: &str) -> Token {
+        self.token_names.push(name.to_string());
+        Token(self.token_names.len() as u32 - 1)
+    }
+
+    /// Add a task: `body` runs on `rank` once every `inputs` token has
+    /// resolved, and must return the op handles backing `outputs`
+    /// (an empty vector marks the task resolved at launch).
+    pub fn task(
+        &mut self,
+        name: &str,
+        rank: NodeId,
+        inputs: &[Token],
+        outputs: &[Token],
+        body: impl Fn(&mut Rank) -> Vec<OpHandle> + Send + Sync + 'static,
+    ) -> TaskId {
+        self.tasks.push(Task {
+            name: name.to_string(),
+            rank,
+            epoch: self.barriers,
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+            body: Box::new(body),
+        });
+        TaskId(self.tasks.len() - 1)
+    }
+
+    /// Close the current epoch: at run time every rank drains its
+    /// unresolved tasks of the epoch and enters the fabric barrier
+    /// before any later task launches.
+    pub fn barrier(&mut self) {
+        self.barriers += 1;
+    }
+
+    /// Number of tasks in the graph.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Whether the graph has no tasks.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Number of epochs (`barrier()` calls + 1).
+    pub fn epochs(&self) -> usize {
+        self.barriers + 1
+    }
+
+    /// A task's name.
+    pub fn name(&self, t: TaskId) -> &str {
+        &self.tasks[t.0].name
+    }
+
+    /// The rank a task is placed on.
+    pub fn placement(&self, t: TaskId) -> NodeId {
+        self.tasks[t.0].rank
+    }
+
+    /// The epoch a task belongs to.
+    pub fn epoch_of(&self, t: TaskId) -> usize {
+        self.tasks[t.0].epoch
+    }
+
+    /// Every `(producer, consumer)` dependency edge, deduplicated, in
+    /// consumer insertion order (tokens with no producer are skipped —
+    /// [`TaskGraph::validate`] reports those).
+    pub fn dependency_edges(&self) -> Vec<(TaskId, TaskId)> {
+        let producers = self.producer_map();
+        let mut edges = Vec::new();
+        for (ci, c) in self.tasks.iter().enumerate() {
+            for &tok in &c.inputs {
+                if let Some(pi) = producers[tok.0 as usize] {
+                    let e = (TaskId(pi), TaskId(ci));
+                    if !edges.contains(&e) {
+                        edges.push(e);
+                    }
+                }
+            }
+        }
+        edges
+    }
+
+    /// Check the graph is executable: every input token has a producer,
+    /// no token has two producers, no edge flows backwards across a
+    /// barrier, and no epoch contains a dependency cycle. Errors name
+    /// the offending tasks.
+    pub fn validate(&self) -> Result<()> {
+        self.plan().map(|_| ())
+    }
+
+    /// Run the graph on `s` (one SPMD run). Validates first; registers
+    /// the dependency signal tag only if some edge crosses ranks within
+    /// an epoch.
+    pub fn run(&self, s: &mut Spmd) -> Result<TaskGraphRun> {
+        let plan = self.plan()?;
+        let nodes = s.nodes();
+        for t in &self.tasks {
+            if t.rank >= nodes {
+                bail!(
+                    "task '{}' is placed on rank {} but the fabric has {} nodes",
+                    t.name,
+                    t.rank,
+                    nodes
+                );
+            }
+        }
+        let epochs = self.epochs();
+        // Per-(rank, epoch) launch lists, in global topological order.
+        let mut sched: Vec<Vec<Vec<usize>>> = vec![vec![Vec::new(); epochs]; nodes as usize];
+        for &i in &plan {
+            sched[self.tasks[i].rank as usize][self.tasks[i].epoch].push(i);
+        }
+        let producers = self.producer_map();
+        // Producer-side notification lists: one signal per distinct
+        // (token, consuming rank) pair on a same-epoch cross-rank edge.
+        let mut notifies: Vec<Vec<(u32, NodeId)>> = vec![Vec::new(); self.tasks.len()];
+        for c in &self.tasks {
+            for &tok in &c.inputs {
+                let pi = producers[tok.0 as usize].expect("validated");
+                let p = &self.tasks[pi];
+                if p.epoch == c.epoch && p.rank != c.rank {
+                    let entry = (tok.0, c.rank);
+                    if !notifies[pi].contains(&entry) {
+                        notifies[pi].push(entry);
+                    }
+                }
+            }
+        }
+        let sig = if notifies.iter().any(|v| !v.is_empty()) {
+            Some(s.taskgraph_signal())
+        } else {
+            None
+        };
+        let inflight = match s.world().cfg().taskgraph_inflight {
+            TaskInflight::Off => usize::MAX,
+            TaskInflight::Count(n) => n as usize,
+        };
+        let states: Vec<Mutex<TaskState>> = self
+            .tasks
+            .iter()
+            .map(|_| Mutex::new(TaskState::default()))
+            .collect();
+        let orders: Vec<Mutex<Vec<TaskTrace>>> =
+            (0..nodes).map(|_| Mutex::new(Vec::new())).collect();
+        let barriers = self.barriers;
+        let report = s.run(|r| {
+            let me = r.id();
+            let my = &sched[me as usize];
+            // Remote tokens this rank already consumed the signal for.
+            let mut seen_remote: HashSet<u32> = HashSet::new();
+            // Launched-but-possibly-unresolved tasks, oldest first
+            // (the `taskgraph.inflight` window).
+            let mut launched: VecDeque<usize> = VecDeque::new();
+            for (epoch, mine) in my.iter().enumerate() {
+                for &ti in mine {
+                    let task = &self.tasks[ti];
+                    // Resolve inputs in declared order.
+                    for &tok in &task.inputs {
+                        let pi = producers[tok.0 as usize].expect("validated");
+                        let p = &self.tasks[pi];
+                        if p.epoch < epoch {
+                            continue; // settled by the epoch barrier
+                        }
+                        if p.rank == me {
+                            let mut st = states[pi].lock().unwrap();
+                            if !st.resolved {
+                                r.wait_all(&st.handles);
+                                st.resolved = true;
+                            }
+                        } else if seen_remote.insert(tok.0) {
+                            let sig = sig.expect("cross-rank edges register a signal");
+                            r.wait_signal_matching(sig, sig_args(tok.0, p.rank, epoch));
+                        }
+                    }
+                    // Enforce the in-flight window: retire oldest first.
+                    while launched.len() >= inflight {
+                        let old = launched.pop_front().expect("len checked");
+                        let mut st = states[old].lock().unwrap();
+                        if !st.resolved {
+                            r.wait_all(&st.handles);
+                            st.resolved = true;
+                        }
+                    }
+                    let at = r.now();
+                    orders[me as usize]
+                        .lock()
+                        .unwrap()
+                        .push(TaskTrace { task: TaskId(ti), at });
+                    let handles = (task.body)(r);
+                    {
+                        let mut st = states[ti].lock().unwrap();
+                        st.resolved = handles.is_empty();
+                        st.handles = handles;
+                    }
+                    if !notifies[ti].is_empty() {
+                        {
+                            let mut st = states[ti].lock().unwrap();
+                            if !st.resolved {
+                                r.wait_all(&st.handles);
+                                st.resolved = true;
+                            }
+                        }
+                        let sig = sig.expect("cross-rank edges register a signal");
+                        for &(tok, dst) in &notifies[ti] {
+                            r.signal_args(dst, sig, sig_args(tok, me, epoch));
+                        }
+                    }
+                    launched.push_back(ti);
+                }
+                // Epoch drain, in insertion order (ascending task id).
+                let mut drain = mine.clone();
+                drain.sort_unstable();
+                for ti in drain {
+                    let mut st = states[ti].lock().unwrap();
+                    if !st.resolved {
+                        r.wait_all(&st.handles);
+                        st.resolved = true;
+                    }
+                }
+                launched.clear();
+                if epoch < barriers {
+                    r.barrier();
+                }
+            }
+        });
+        Ok(TaskGraphRun {
+            report,
+            order: orders
+                .into_iter()
+                .map(|m| m.into_inner().unwrap())
+                .collect(),
+        })
+    }
+
+    /// Token → producing task index (first writer; duplicate producers
+    /// are rejected by `plan`).
+    fn producer_map(&self) -> Vec<Option<usize>> {
+        let mut p = vec![None; self.token_names.len()];
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &tok in &t.outputs {
+                p[tok.0 as usize].get_or_insert(i);
+            }
+        }
+        p
+    }
+
+    /// Validate and compute the global launch order: epoch-major, and
+    /// within each epoch a Kahn topological order with smallest task id
+    /// first among ready tasks.
+    fn plan(&self) -> Result<Vec<usize>> {
+        // Single assignment: one producer per token.
+        let mut producers: Vec<Option<usize>> = vec![None; self.token_names.len()];
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &tok in &t.outputs {
+                if let Some(prev) = producers[tok.0 as usize] {
+                    bail!(
+                        "token '{}' is produced by both '{}' and '{}' \
+                         (tokens are single-assignment)",
+                        self.token_names[tok.0 as usize],
+                        self.tasks[prev].name,
+                        t.name
+                    );
+                }
+                producers[tok.0 as usize] = Some(i);
+            }
+        }
+        // Every input resolvable, never across a barrier backwards.
+        for c in &self.tasks {
+            for &tok in &c.inputs {
+                let Some(pi) = producers[tok.0 as usize] else {
+                    bail!(
+                        "task '{}' consumes token '{}' which no task produces",
+                        c.name,
+                        self.token_names[tok.0 as usize]
+                    );
+                };
+                let p = &self.tasks[pi];
+                if p.epoch > c.epoch {
+                    bail!(
+                        "task '{}' (epoch {}) consumes token '{}' produced by \
+                         '{}' in epoch {} (tokens cannot flow backwards \
+                         across a barrier)",
+                        c.name,
+                        c.epoch,
+                        self.token_names[tok.0 as usize],
+                        p.name,
+                        p.epoch
+                    );
+                }
+            }
+        }
+        // Same-epoch dependency edges, deduplicated.
+        let n = self.tasks.len();
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (ci, c) in self.tasks.iter().enumerate() {
+            for &tok in &c.inputs {
+                let pi = producers[tok.0 as usize].expect("checked above");
+                if self.tasks[pi].epoch == c.epoch && !succs[pi].contains(&ci) {
+                    succs[pi].push(ci);
+                    preds[ci].push(pi);
+                    indeg[ci] += 1;
+                }
+            }
+        }
+        // Kahn per epoch, min-task-id tie-break.
+        let mut plan = Vec::with_capacity(n);
+        for epoch in 0..self.epochs() {
+            let mut ready: BinaryHeap<std::cmp::Reverse<usize>> = self
+                .tasks
+                .iter()
+                .enumerate()
+                .filter(|(i, t)| t.epoch == epoch && indeg[*i] == 0)
+                .map(|(i, _)| std::cmp::Reverse(i))
+                .collect();
+            let mut emitted = 0usize;
+            let total = self.tasks.iter().filter(|t| t.epoch == epoch).count();
+            while let Some(std::cmp::Reverse(i)) = ready.pop() {
+                plan.push(i);
+                emitted += 1;
+                for &s in &succs[i] {
+                    indeg[s] -= 1;
+                    if indeg[s] == 0 {
+                        ready.push(std::cmp::Reverse(s));
+                    }
+                }
+            }
+            if emitted < total {
+                bail!("{}", self.describe_cycle(epoch, &indeg, &preds));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Name an actual cycle among the epoch's leftover tasks: walk the
+    /// predecessor chain (every leftover task has one) until a task
+    /// repeats, then print the loop in produce → consume order.
+    fn describe_cycle(&self, epoch: usize, indeg: &[usize], preds: &[Vec<usize>]) -> String {
+        let leftover: Vec<usize> = (0..self.tasks.len())
+            .filter(|&i| self.tasks[i].epoch == epoch && indeg[i] > 0)
+            .collect();
+        let start = *leftover.first().expect("cycle reported without leftover");
+        let mut path = vec![start];
+        loop {
+            let cur = *path.last().expect("path is never empty");
+            let prev = preds[cur]
+                .iter()
+                .copied()
+                .find(|p| leftover.contains(p))
+                .expect("leftover tasks keep a leftover predecessor");
+            if let Some(pos) = path.iter().position(|&x| x == prev) {
+                let mut cyc: Vec<usize> = path[pos..].to_vec();
+                cyc.reverse();
+                cyc.push(cyc[0]);
+                let names: Vec<&str> =
+                    cyc.iter().map(|&i| self.tasks[i].name.as_str()).collect();
+                return format!(
+                    "dependency cycle among tasks in epoch {epoch}: '{}'",
+                    names.join("' -> '")
+                );
+            }
+            path.push(prev);
+        }
+    }
+}
+
+/// Signal-AM argument words for a cross-rank edge: the token, the
+/// producing rank, the epoch, and the task-graph magic.
+fn sig_args(token: u32, producer: NodeId, epoch: usize) -> [u32; 4] {
+    [token, producer, epoch as u32, SIG_MAGIC]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, Numerics, TaskInflight};
+
+    fn two_node() -> Spmd {
+        Spmd::new(Config::two_node_ring().with_numerics(Numerics::TimingOnly))
+    }
+
+    #[test]
+    fn same_rank_chain_runs_in_order_and_moves_data() {
+        let mut g = TaskGraph::new();
+        let tok = g.token("block");
+        let a = g.task("produce", 0, &[], &[tok], |r| {
+            vec![r.put(r.global_addr(0, 0x1000), &[7u8; 64])]
+        });
+        let b = g.task("consume", 0, &[tok], &[], |r| {
+            // The producer's put completed before this body runs.
+            assert_eq!(r.read_shared(0x1000, 64), vec![7u8; 64]);
+            Vec::new()
+        });
+        let mut s = Spmd::new(Config::ring(1).with_numerics(Numerics::TimingOnly));
+        let run = g.run(&mut s).unwrap();
+        assert_eq!(
+            run.order[0].iter().map(|t| t.task).collect::<Vec<_>>(),
+            vec![a, b]
+        );
+        assert!(run.order[0][1].at > run.order[0][0].at, "consumer waited");
+    }
+
+    #[test]
+    fn cross_rank_edge_resolves_via_signal() {
+        let mut g = TaskGraph::new();
+        let tok = g.token("halo");
+        g.task("send", 0, &[], &[tok], |r| {
+            vec![r.put(r.global_addr(1, 0x2000), &[9u8; 512])]
+        });
+        g.task("recv", 1, &[tok], &[], |r| {
+            assert_eq!(r.read_shared(0x2000, 512), vec![9u8; 512]);
+            Vec::new()
+        });
+        let mut s = two_node();
+        let run = g.run(&mut s).unwrap();
+        let send_at = run.order[0][0].at;
+        let recv_at = run.order[1][0].at;
+        assert!(recv_at > send_at, "consumer launched after the data landed");
+    }
+
+    #[test]
+    fn independent_tasks_on_one_rank_interleave_their_issue() {
+        // Two independent put tasks on rank 0: both issue before either
+        // completes (the timeline shows back-to-back puts at t=0).
+        let mut g = TaskGraph::new();
+        g.task("a", 0, &[], &[], |r| {
+            vec![r.put(r.global_addr(1, 0x100), &[1u8; 4096])]
+        });
+        g.task("b", 0, &[], &[], |r| {
+            vec![r.put(r.global_addr(1, 0x2100), &[2u8; 4096])]
+        });
+        let mut s = two_node();
+        let run = g.run(&mut s).unwrap();
+        assert_eq!(run.order[0][0].at, run.order[0][1].at, "no wait between");
+        let tl = &run.report.timelines[0];
+        assert_eq!(tl.len(), 2, "two puts, no barrier: {tl:?}");
+    }
+
+    #[test]
+    fn inflight_cap_serializes_launches() {
+        let mut cfg = Config::two_node_ring().with_numerics(Numerics::TimingOnly);
+        cfg.taskgraph_inflight = TaskInflight::Count(1);
+        let mut g = TaskGraph::new();
+        g.task("a", 0, &[], &[], |r| {
+            vec![r.put(r.global_addr(1, 0x100), &[1u8; 4096])]
+        });
+        g.task("b", 0, &[], &[], |r| {
+            vec![r.put(r.global_addr(1, 0x2100), &[2u8; 4096])]
+        });
+        let mut s = Spmd::new(cfg);
+        let run = g.run(&mut s).unwrap();
+        assert!(
+            run.order[0][1].at > run.order[0][0].at,
+            "window of 1: the second launch waits out the first"
+        );
+    }
+
+    #[test]
+    fn epoch_barrier_resolves_cross_epoch_edges_without_signals() {
+        let mut g = TaskGraph::new();
+        let tok = g.token("phase0");
+        g.task("write", 0, &[], &[tok], |r| {
+            vec![r.put(r.global_addr(1, 0x3000), &[5u8; 128])]
+        });
+        g.barrier();
+        g.task("read", 1, &[tok], &[], |r| {
+            assert_eq!(r.read_shared(0x3000, 128), vec![5u8; 128]);
+            Vec::new()
+        });
+        let mut s = two_node();
+        let run = g.run(&mut s).unwrap();
+        // No signal tag was needed: both timelines show only the
+        // expected commands (rank 0: put + barrier; rank 1: barrier).
+        assert_eq!(run.report.timelines[0].len(), 2, "put + barrier");
+        assert_eq!(run.report.timelines[1].len(), 1, "barrier only");
+    }
+
+    #[test]
+    fn trailing_barrier_is_emitted() {
+        let mut g = TaskGraph::new();
+        g.task("only", 0, &[], &[], |r| {
+            vec![r.put(r.global_addr(1, 0x100), &[1u8; 64])]
+        });
+        g.barrier();
+        let mut s = two_node();
+        let run = g.run(&mut s).unwrap();
+        assert_eq!(run.report.timelines[0].len(), 2, "put + barrier");
+        assert_eq!(run.report.timelines[1].len(), 1, "barrier");
+    }
+
+    #[test]
+    fn validate_rejects_self_loop() {
+        let mut g = TaskGraph::new();
+        let tok = g.token("t");
+        g.task("selfish", 0, &[tok], &[tok], |_| Vec::new());
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+        assert!(err.contains("'selfish' -> 'selfish'"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_two_cycle_naming_both_tasks() {
+        let mut g = TaskGraph::new();
+        let ab = g.token("ab");
+        let ba = g.token("ba");
+        g.task("a", 0, &[ba], &[ab], |_| Vec::new());
+        g.task("b", 1, &[ab], &[ba], |_| Vec::new());
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+        assert!(err.contains("'a'") && err.contains("'b'"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_unproduced_token() {
+        let mut g = TaskGraph::new();
+        let tok = g.token("ghost");
+        g.task("waiter", 0, &[tok], &[], |_| Vec::new());
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("'waiter'"), "{err}");
+        assert!(err.contains("'ghost'"), "{err}");
+        assert!(err.contains("no task produces"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_producer() {
+        let mut g = TaskGraph::new();
+        let tok = g.token("twice");
+        g.task("first", 0, &[], &[tok], |_| Vec::new());
+        g.task("second", 1, &[], &[tok], |_| Vec::new());
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("single-assignment"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_backwards_epoch_edge() {
+        let mut g = TaskGraph::new();
+        let tok = g.token("future");
+        g.task("early", 0, &[tok], &[], |_| Vec::new());
+        g.barrier();
+        g.task("late", 0, &[], &[tok], |_| Vec::new());
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("backwards"), "{err}");
+        assert!(err.contains("'early'") && err.contains("'late'"), "{err}");
+    }
+
+    #[test]
+    fn run_rejects_out_of_range_placement() {
+        let mut g = TaskGraph::new();
+        g.task("mars", 5, &[], &[], |_| Vec::new());
+        let mut s = two_node();
+        let err = g.run(&mut s).unwrap_err().to_string();
+        assert!(err.contains("rank 5"), "{err}");
+        assert!(err.contains("2 nodes"), "{err}");
+    }
+
+    #[test]
+    fn diamond_fan_in_waits_for_both_branches() {
+        // a -> {b, c} -> d across two ranks: d sees both writes.
+        let mut g = TaskGraph::new();
+        let seed = g.token("seed");
+        let left = g.token("left");
+        let right = g.token("right");
+        g.task("a", 0, &[], &[seed], |r| {
+            vec![r.put(r.global_addr(1, 0x100), &[1u8; 32])]
+        });
+        g.task("b", 0, &[seed], &[left], |r| {
+            vec![r.put(r.global_addr(1, 0x200), &[2u8; 32])]
+        });
+        g.task("c", 1, &[seed], &[right], |r| {
+            vec![r.put(r.global_addr(0, 0x300), &[3u8; 32])]
+        });
+        g.task("d", 1, &[left, right], &[], |r| {
+            assert_eq!(r.read_shared(0x200, 32), vec![2u8; 32]);
+            Vec::new()
+        });
+        let mut s = two_node();
+        let run = g.run(&mut s).unwrap();
+        assert_eq!(s.read_shared(0, 0x300, 32), vec![3u8; 32]);
+        // d launched last on rank 1, after both producers.
+        let r1: Vec<TaskId> = run.order[1].iter().map(|t| t.task).collect();
+        assert_eq!(r1.last().map(|t| t.index()), Some(3));
+    }
+
+    #[test]
+    fn graph_accessors_expose_structure() {
+        let mut g = TaskGraph::new();
+        let tok = g.token("t");
+        let a = g.task("a", 0, &[], &[tok], |_| Vec::new());
+        g.barrier();
+        let b = g.task("b", 1, &[tok], &[], |_| Vec::new());
+        assert_eq!(g.len(), 2);
+        assert!(!g.is_empty());
+        assert_eq!(g.epochs(), 2);
+        assert_eq!(g.name(a), "a");
+        assert_eq!(g.placement(b), 1);
+        assert_eq!(g.epoch_of(a), 0);
+        assert_eq!(g.epoch_of(b), 1);
+        assert_eq!(g.dependency_edges(), vec![(a, b)]);
+    }
+}

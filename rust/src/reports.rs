@@ -10,7 +10,7 @@ use crate::workloads::{
     collectives::CollectivesPoint, conv::ConvResult, matmul::MatmulResult,
     scaleout::Exchange, scaleout::ScaleoutCase, scaleout::ScaleoutRow,
     scaleout::TopoRow, serving::OpClass, serving::ServingPoint,
-    sweep::LatencyResults, BandwidthSeries,
+    sweep::LatencyResults, taskgraph::TaskgraphPoint, BandwidthSeries,
 };
 
 /// Fig. 5 as CSV (one row per transfer size; PUT/GET column pairs per
@@ -322,6 +322,48 @@ pub fn collectives(points: &[CollectivesPoint]) -> String {
          (simulated compute occupancy — host-sum baseline: collectives.reduce = host)\n"
     ));
     out
+}
+
+/// `bench taskgraph`: pipeline-parallel streaming through the task-graph
+/// executor — pipelined (single-epoch, token edges only) vs barriered
+/// (bulk-synchronous per image) makespan at each pipeline depth, with
+/// the ideal depth bound alongside. Each variant's numbers were
+/// reproduced on all three engine backends (asserted inside the sweep).
+pub fn taskgraph(points: &[TaskgraphPoint]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            let ideal = (p.images * p.stages) as f64 / (p.images + p.stages - 1) as f64;
+            vec![
+                p.stages.to_string(),
+                p.images.to_string(),
+                p.tasks.to_string(),
+                f(p.barriered.as_us(), 1),
+                f(p.pipelined.as_us(), 1),
+                format!("{:.2}x", p.pipeline_speedup),
+                format!("{ideal:.2}x"),
+                f(p.images_per_s, 0),
+            ]
+        })
+        .collect();
+    format!(
+        "bench taskgraph: pipeline-parallel result-chunk streaming (TaskGraph executor)\n\
+         (per point: same task graph run bulk-synchronous vs single-epoch pipelined;\n\
+          every variant reproduced on the monolithic, sharded, and threaded engines)\n{}",
+        table::render(
+            &[
+                "Stages",
+                "Images",
+                "Tasks",
+                "barriered (us)",
+                "pipelined (us)",
+                "speedup",
+                "ideal",
+                "images/s",
+            ],
+            &rows
+        )
+    )
 }
 
 /// `bench serving`: per-class latency tails across the offered-load x
@@ -695,6 +737,25 @@ mod tests {
         assert!(t.contains("per-node issue timelines (2 nodes)"), "{t}");
         assert!(t.contains("rank 0:") && t.contains("rank 1:"), "{t}");
         assert!(!t.contains("per-shard advance"), "{t}");
+    }
+
+    #[test]
+    fn taskgraph_report_shows_speedup_and_depth_bound() {
+        let points = vec![TaskgraphPoint {
+            stages: 4,
+            images: 8,
+            tasks: 56,
+            pipelined: SimTime(4_000_000),
+            barriered: SimTime(10_000_000),
+            pipeline_speedup: 2.5,
+            images_per_s: 2_000_000.0,
+        }];
+        let t = taskgraph(&points);
+        assert!(t.contains("bench taskgraph"), "{t}");
+        assert!(t.contains("2.50x"), "{t}");
+        // ideal bound: 8*4/(8+4-1) = 2.91x
+        assert!(t.contains("2.91x"), "{t}");
+        assert!(t.contains("images/s"), "{t}");
     }
 
     #[test]

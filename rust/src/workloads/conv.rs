@@ -21,7 +21,7 @@ use crate::api::Fshmem;
 use crate::config::{Config, Numerics};
 use crate::dla::{ArtConfig, ComputeBackend, DlaJob, DlaOp, SoftwareBackend};
 use crate::memory::GlobalAddr;
-use crate::program::Spmd;
+use crate::program::{Spmd, TaskGraph};
 use crate::sim::{Rng, SimTime};
 
 use super::SegmentAlloc;
@@ -121,6 +121,7 @@ impl ConvData {
     }
 }
 
+#[derive(Clone, Copy)]
 struct Layout {
     x: u64,
     w: u64,
@@ -191,38 +192,44 @@ pub fn run_two_node(
 
     let t0 = spmd.now();
     let case_c = *case;
-    let lay_ref = &lay;
     // Each rank convolves its kernel group, ART-streaming the half-result
-    // into the peer's y_peer buffer, then synchronizes.
-    let report = spmd.run(move |r| {
-        let p = r.id();
+    // into the peer's y_peer buffer, then synchronizes. The schedule is a
+    // task graph (pinned byte-identical to the hand-scheduled program in
+    // rust/tests/taskgraph.rs): `conv-p` issues the job, `art-p` consumes
+    // its half token (waiting the compute) and hands back the ART
+    // delivery handles for the epoch drain; the trailing barrier is the
+    // end-of-conv synchronization (the exposed latency the paper notes —
+    // measured here under per-rank arrival times).
+    let mut g = TaskGraph::new();
+    for p in 0..2u32 {
         let q = 1 - p;
-        let job = DlaJob {
-            op: DlaOp::Conv {
-                h: case_c.h as u32,
-                w: case_c.w as u32,
-                cin: case_c.cin as u32,
-                cout: (case_c.cout / 2) as u32,
-                ksize: case_c.ksize as u32,
-                x: GlobalAddr::new(p, lay_ref[p as usize].x),
-                wts: GlobalAddr::new(p, lay_ref[p as usize].w),
-                y: GlobalAddr::new(p, lay_ref[p as usize].y_local),
-            },
-            art: Some(ArtConfig {
-                every_n_results: case_c.art_every,
-                dst: GlobalAddr::new(q, lay_ref[q as usize].y_peer),
-            }),
-            notify: None,
-        };
-        let h = r.compute(p, job);
-        r.wait(h);
-        let art = r.take_art_ops();
-        r.wait_all(&art);
-        // End-of-conv synchronization (the exposed latency the paper
-        // notes — measured here under per-rank arrival times).
-        r.barrier();
-    });
-    let elapsed = report.max_finish().since(t0);
+        let lay = lay;
+        let half = g.token(&format!("half-{p}"));
+        g.task(&format!("conv-{p}"), p, &[], &[half], move |r| {
+            let job = DlaJob {
+                op: DlaOp::Conv {
+                    h: case_c.h as u32,
+                    w: case_c.w as u32,
+                    cin: case_c.cin as u32,
+                    cout: (case_c.cout / 2) as u32,
+                    ksize: case_c.ksize as u32,
+                    x: GlobalAddr::new(p, lay[p as usize].x),
+                    wts: GlobalAddr::new(p, lay[p as usize].w),
+                    y: GlobalAddr::new(p, lay[p as usize].y_local),
+                },
+                art: Some(ArtConfig {
+                    every_n_results: case_c.art_every,
+                    dst: GlobalAddr::new(q, lay[q as usize].y_peer),
+                }),
+                notify: None,
+            };
+            vec![r.compute(p, job)]
+        });
+        g.task(&format!("art-{p}"), p, &[half], &[], |r| r.take_art_ops());
+    }
+    g.barrier();
+    let run = g.run(&mut spmd)?;
+    let elapsed = run.report.max_finish().since(t0);
 
     let mut verified = false;
     if case.check && cfg.numerics != Numerics::TimingOnly {

@@ -26,7 +26,7 @@ use crate::api::Fshmem;
 use crate::config::{Config, Numerics};
 use crate::dla::{ArtConfig, DlaJob, DlaOp, SoftwareBackend, ComputeBackend};
 use crate::memory::GlobalAddr;
-use crate::program::Spmd;
+use crate::program::{Spmd, TaskGraph};
 use crate::sim::{Rng, SimTime};
 
 use super::SegmentAlloc;
@@ -131,6 +131,7 @@ impl MatmulData {
 }
 
 /// Per-node tensor layout for the two-node run.
+#[derive(Clone, Copy)]
 struct NodeLayout {
     /// M[i][p] for i in 0..2 (this node's column of M).
     m_blocks: [u64; 2],
@@ -199,62 +200,80 @@ pub fn run_two_node(
 
     let t0 = spmd.now();
     let case = *case;
-    let lay_ref = &lay;
-    let scratch_ref = &scratch;
-    let report = spmd.run(move |r| {
-        let p = r.id();
+    // The schedule, as a task graph (rust/tests/taskgraph.rs pins it
+    // byte-identical to the hand-scheduled SPMD program it replaced):
+    // per rank p, `cross-p` issues the ART-streaming cross partials,
+    // `art-p` consumes them (waits the computes, collects the ART
+    // handles; the epoch drain waits those out), the barrier closes the
+    // exchange epoch, and `accumulate-p` runs the local accumulate.
+    let mut g = TaskGraph::new();
+    for p in 0..2u32 {
         let q = 1 - p; // peer column
-        // Phase 1: cross partials with ART streaming into the peer's C.
-        let mut phase1 = Vec::new();
-        for i in 0..2usize {
-            let job = DlaJob {
-                op: DlaOp::Matmul {
-                    m: h32,
-                    k: h32,
-                    n: h32,
-                    a: GlobalAddr::new(p, lay_ref[p as usize].m_blocks[i]),
-                    b: GlobalAddr::new(p, lay_ref[p as usize].n_blocks[q as usize]),
-                    y: GlobalAddr::new(p, scratch_ref[p as usize].c_blocks[i]),
-                    accumulate: false,
-                },
-                art: Some(ArtConfig {
-                    every_n_results: case.art_every,
-                    dst: GlobalAddr::new(q, lay_ref[q as usize].c_blocks[i]),
-                }),
-                notify: None,
-            };
-            phase1.push(r.compute(p, job));
-        }
-        r.wait_all(&phase1);
-        // "Check if the partial sum is transferred": wait for this
-        // rank's ART deliveries to be acked, then barrier — the release
-        // implies the peer got that far too, so the partials this rank
-        // accumulates onto in phase 2 are in its memory.
-        let art = r.take_art_ops();
-        r.wait_all(&art);
-        r.barrier();
-
-        // Phase 2: local accumulate C[i][p] = recv + M[i][p] @ N[p][p].
-        let mut phase2 = Vec::new();
-        for i in 0..2usize {
-            let job = DlaJob {
-                op: DlaOp::Matmul {
-                    m: h32,
-                    k: h32,
-                    n: h32,
-                    a: GlobalAddr::new(p, lay_ref[p as usize].m_blocks[i]),
-                    b: GlobalAddr::new(p, lay_ref[p as usize].n_blocks[p as usize]),
-                    y: GlobalAddr::new(p, lay_ref[p as usize].c_blocks[i]),
-                    accumulate: true,
-                },
-                art: None,
-                notify: None,
-            };
-            phase2.push(r.compute(p, job));
-        }
-        r.wait_all(&phase2);
-    });
-    let elapsed = report.max_finish().since(t0);
+        let lay = lay;
+        let scratch_p = scratch[p as usize];
+        let partials = g.token(&format!("partials-{p}"));
+        g.task(&format!("cross-{p}"), p, &[], &[partials], move |r| {
+            // Phase 1: cross partials, ART streaming into the peer's C.
+            (0..2usize)
+                .map(|i| {
+                    r.compute(
+                        p,
+                        DlaJob {
+                            op: DlaOp::Matmul {
+                                m: h32,
+                                k: h32,
+                                n: h32,
+                                a: GlobalAddr::new(p, lay[p as usize].m_blocks[i]),
+                                b: GlobalAddr::new(p, lay[p as usize].n_blocks[q as usize]),
+                                y: GlobalAddr::new(p, scratch_p.c_blocks[i]),
+                                accumulate: false,
+                            },
+                            art: Some(ArtConfig {
+                                every_n_results: case.art_every,
+                                dst: GlobalAddr::new(q, lay[q as usize].c_blocks[i]),
+                            }),
+                            notify: None,
+                        },
+                    )
+                })
+                .collect()
+        });
+        // "Check if the partial sum is transferred": hand back this
+        // rank's ART delivery handles; the epoch drain waits them out
+        // before the barrier — the release implies the peer got that
+        // far too, so the partials this rank accumulates onto in the
+        // next epoch are in its memory.
+        g.task(&format!("art-{p}"), p, &[partials], &[], |r| r.take_art_ops());
+    }
+    g.barrier();
+    for p in 0..2u32 {
+        let lay_p = lay[p as usize];
+        g.task(&format!("accumulate-{p}"), p, &[], &[], move |r| {
+            // Phase 2: local accumulate C[i][p] = recv + M[i][p] @ N[p][p].
+            (0..2usize)
+                .map(|i| {
+                    r.compute(
+                        p,
+                        DlaJob {
+                            op: DlaOp::Matmul {
+                                m: h32,
+                                k: h32,
+                                n: h32,
+                                a: GlobalAddr::new(p, lay_p.m_blocks[i]),
+                                b: GlobalAddr::new(p, lay_p.n_blocks[p as usize]),
+                                y: GlobalAddr::new(p, lay_p.c_blocks[i]),
+                                accumulate: true,
+                            },
+                            art: None,
+                            notify: None,
+                        },
+                    )
+                })
+                .collect()
+        });
+    }
+    let run = g.run(&mut spmd)?;
+    let elapsed = run.report.max_finish().since(t0);
 
     // Verification: C[i][p] on node p equals the reference product.
     // Reference inputs are rounded through fp16 (what actually reached

@@ -1,7 +1,8 @@
 //! Experiment workloads: the paper's measurement sweeps (Fig. 5,
 //! Table III), case studies (Fig. 6/7), the SPMD scale-out sweep, the
-//! collective-algorithm sweep (`bench collectives`), and the
-//! multi-tenant open-loop serving benchmark (`bench serving`).
+//! collective-algorithm sweep (`bench collectives`), the multi-tenant
+//! open-loop serving benchmark (`bench serving`), and the
+//! pipeline-parallel task-graph benchmark (`bench taskgraph`).
 
 pub mod collectives;
 pub mod conv;
@@ -9,6 +10,7 @@ pub mod matmul;
 pub mod scaleout;
 pub mod serving;
 pub mod sweep;
+pub mod taskgraph;
 
 pub use collectives::CollectivesPoint;
 pub use conv::{ConvCase, ConvResult};
@@ -16,6 +18,7 @@ pub use matmul::{MatmulCase, MatmulResult};
 pub use scaleout::{ScaleoutCase, ScaleoutRow};
 pub use serving::{ServingPoint, TenantProfile};
 pub use sweep::{BandwidthSeries, LatencyResults};
+pub use taskgraph::{TaskgraphCase, TaskgraphPoint};
 
 /// A simple bump allocator over a node's shared segment — how the
 /// workloads lay out tensors (the real system would use gasnet_attach

@@ -29,7 +29,7 @@ use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::dla::{DlaJob, DlaOp};
 use crate::fabric::Topology;
 use crate::memory::GlobalAddr;
-use crate::program::{RankTimeline, Spmd};
+use crate::program::{RankTimeline, Spmd, TaskGraph};
 use crate::sim::{ShardingReport, SimTime, Telemetry, TelemetryLevel};
 
 /// What moves between ranks at each bulk-synchronous step.
@@ -195,62 +195,89 @@ fn run_point(cfg: Config, case: &ScaleoutCase) -> PointRun {
     let sig = spmd.register_signal(29);
     let t0 = spmd.now();
     let case = *case;
-    let report = spmd.run(move |r| {
-        let p = r.id();
-        let n = r.nodes();
-        let jobs_per = case.total_jobs / n;
-        // Per-node tensor strip: A, B, Y, the neighbor's halo, and (for
-        // the allreduce variant) the gradient buffer + result/scratch.
-        let elem = case.mm as u64 * case.mm as u64 * 2; // fp16 bytes
-        let (a_off, b_off, y_off, recv_off) = (0, elem, 2 * elem, 3 * elem);
-        let grad_off = 4 * elem;
-        let red_off = grad_off + case.exchange_bytes;
-        for _ in 0..jobs_per {
-            let job = DlaJob {
-                op: DlaOp::Matmul {
-                    m: case.mm,
-                    k: case.mm,
-                    n: case.mm,
-                    a: GlobalAddr::new(p, a_off),
-                    b: GlobalAddr::new(p, b_off),
-                    y: GlobalAddr::new(p, y_off),
-                    accumulate: false,
-                },
-                art: None,
-                notify: None,
-            };
-            let h = r.compute(p, job);
-            r.wait(h);
-            match case.exchange {
-                Exchange::Halo => {
+    let jobs_per = case.total_jobs / n;
+    // Per-node tensor strip: A, B, Y, the neighbor's halo, and (for
+    // the allreduce variant) the gradient buffer + result/scratch.
+    let elem = case.mm as u64 * case.mm as u64 * 2; // fp16 bytes
+    let (a_off, b_off, y_off, recv_off) = (0, elem, 2 * elem, 3 * elem);
+    let grad_off = 4 * elem;
+    let red_off = grad_off + case.exchange_bytes;
+    let report = match case.exchange {
+        Exchange::Halo => {
+            // The bulk-synchronous halo kernel as a task graph: each
+            // job is one epoch — per rank, `mm` computes the local
+            // matmul and `halo` (its consumer) pushes the result slab
+            // to the right neighbor (one-sided, overlapping with the
+            // peer's own push in the opposite ring direction); the
+            // epoch barrier is the bulk-synchronous step boundary.
+            // Pinned byte-identical to the hand-scheduled loop it
+            // replaced by rust/tests/taskgraph.rs.
+            let mut g = TaskGraph::new();
+            for j in 0..jobs_per {
+                for p in 0..n {
+                    let y = g.token(&format!("y-{p}-{j}"));
+                    g.task(&format!("mm-{p}-{j}"), p, &[], &[y], move |r| {
+                        vec![r.compute(
+                            p,
+                            DlaJob {
+                                op: DlaOp::Matmul {
+                                    m: case.mm,
+                                    k: case.mm,
+                                    n: case.mm,
+                                    a: GlobalAddr::new(p, a_off),
+                                    b: GlobalAddr::new(p, b_off),
+                                    y: GlobalAddr::new(p, y_off),
+                                    accumulate: false,
+                                },
+                                art: None,
+                                notify: None,
+                            },
+                        )]
+                    });
                     if n > 1 {
-                        // Ring halo: push a slab of the result to the
-                        // right neighbor (one-sided, overlaps with the
-                        // peer's own exchange in the opposite ring
-                        // direction).
                         let right = (p + 1) % n;
-                        let h = r.put_from_mem(
-                            y_off,
-                            case.exchange_bytes,
-                            GlobalAddr::new(right, recv_off),
-                        );
-                        r.wait(h);
+                        g.task(&format!("halo-{p}-{j}"), p, &[y], &[], move |r| {
+                            vec![r.put_from_mem(
+                                y_off,
+                                case.exchange_bytes,
+                                GlobalAddr::new(right, recv_off),
+                            )]
+                        });
                     }
-                    // Bulk-synchronous step boundary.
-                    r.barrier();
                 }
-                Exchange::Allreduce => {
-                    // Gradient-style exchange through the collectives
-                    // library (algorithm per `collectives.algo`; ends on
-                    // its own barrier).
-                    let count = (case.exchange_bytes / 2) as usize;
-                    crate::collectives::spmd::allreduce_sum_f16(
-                        r, sig, grad_off, count, red_off,
-                    );
-                }
+                // Bulk-synchronous step boundary.
+                g.barrier();
             }
+            g.run(&mut spmd).expect("halo task graph is valid").report
         }
-    });
+        Exchange::Allreduce => spmd.run(move |r| {
+            let p = r.id();
+            for _ in 0..jobs_per {
+                let job = DlaJob {
+                    op: DlaOp::Matmul {
+                        m: case.mm,
+                        k: case.mm,
+                        n: case.mm,
+                        a: GlobalAddr::new(p, a_off),
+                        b: GlobalAddr::new(p, b_off),
+                        y: GlobalAddr::new(p, y_off),
+                        accumulate: false,
+                    },
+                    art: None,
+                    notify: None,
+                };
+                let h = r.compute(p, job);
+                r.wait(h);
+                // Gradient-style exchange through the collectives
+                // library (algorithm per `collectives.algo`; ends on
+                // its own barrier).
+                let count = (case.exchange_bytes / 2) as usize;
+                crate::collectives::spmd::allreduce_sum_f16(
+                    r, sig, grad_off, count, red_off,
+                );
+            }
+        }),
+    };
     PointRun {
         elapsed: report.max_finish().since(t0),
         ranks: report.rank_timelines(),

@@ -1,0 +1,284 @@
+//! `bench taskgraph`: pipeline-parallel result-chunk streaming through
+//! the [`TaskGraph`] executor.
+//!
+//! A P-stage inference-style pipeline runs on a P-node ring: stage k
+//! multiplies the incoming activation by its resident weight block and
+//! ART-streams the result chunks into stage k+1's input buffer *during*
+//! the compute; a per-stage `art` task waits the deliveries out and then
+//! signals the downstream rank (the executor's cross-rank token edge).
+//! Because every image's chain is an independent sub-graph, the per-rank
+//! scheduler overlaps image i+1's stage-k work with image i's stage-k+1
+//! work — software pipelining falls out of the dataflow declaration, with
+//! no hand-rolled wait/signal choreography.
+//!
+//! Each sweep point runs the same graph twice: **pipelined** (one epoch,
+//! tokens only) and **barriered** (a fabric barrier after every image —
+//! the bulk-synchronous ablation). The speedup between them is the
+//! pipelining the executor recovered; with S images and P stages the
+//! ideal bound is `S*P / (S + P - 1)`. Both variants run on all three
+//! engine backends and must agree on the simulated makespan (the sweep
+//! doubles as an end-to-end equivalence check, like `bench collectives`).
+
+use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
+use crate::dla::{ArtConfig, DlaJob, DlaOp};
+use crate::memory::GlobalAddr;
+use crate::program::{Spmd, TaskGraph};
+use crate::sim::{ShardingReport, SimTime, Telemetry, TelemetryLevel};
+
+/// One pipeline configuration (the stage count is the sweep axis).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskgraphCase {
+    /// Images streamed through the pipeline.
+    pub images: u32,
+    /// Matmul dimension of each stage's job (mm x mm x mm).
+    pub mm: u32,
+    /// ART chunk size in f32 results.
+    pub art_every: u32,
+}
+
+impl TaskgraphCase {
+    /// Full sweep: 16 images of 256^3 per-stage work.
+    pub fn paper() -> Self {
+        TaskgraphCase {
+            images: 16,
+            mm: 256,
+            art_every: 4096,
+        }
+    }
+
+    /// Reduced variant for `--fast` runs.
+    pub fn fast() -> Self {
+        TaskgraphCase {
+            images: 8,
+            mm: 256,
+            art_every: 4096,
+        }
+    }
+}
+
+/// The pipeline-depth axis (also the fabric size per point).
+fn stage_counts(fast: bool) -> Vec<u32> {
+    if fast {
+        vec![4]
+    } else {
+        vec![4, 6, 8]
+    }
+}
+
+/// One row of the sweep.
+#[derive(Debug, Clone)]
+pub struct TaskgraphPoint {
+    /// Pipeline depth = node count of this point.
+    pub stages: u32,
+    /// Images streamed through it.
+    pub images: u32,
+    /// Tasks in the graph (mm + art tasks across all images).
+    pub tasks: usize,
+    /// Simulated makespan of the single-epoch (pipelined) graph.
+    pub pipelined: SimTime,
+    /// Simulated makespan with a fabric barrier after every image.
+    pub barriered: SimTime,
+    /// `barriered / pipelined` — the recovered pipelining.
+    pub pipeline_speedup: f64,
+    /// Simulated throughput of the pipelined run.
+    pub images_per_s: f64,
+}
+
+/// Per-node tensor strip: weights, result, and a double-buffered
+/// activation inbox (ART destination of the upstream stage).
+fn offsets(case: &TaskgraphCase) -> (u64, u64, u64, [u64; 2]) {
+    let elem = case.mm as u64 * case.mm as u64 * 2; // fp16 bytes
+    (0, elem, 2 * elem, [3 * elem, 4 * elem])
+}
+
+/// Build the P-stage pipeline over `images` images. `barriered` inserts
+/// the bulk-synchronous per-image barrier (the ablation baseline);
+/// without it the whole graph is one epoch and only token edges order
+/// the work.
+fn build_graph(case: &TaskgraphCase, stages: u32, barriered: bool) -> TaskGraph {
+    let case = *case;
+    let mm = case.mm;
+    let (a_off, b_off, y_off, in_off) = offsets(&case);
+    let mut g = TaskGraph::new();
+    for i in 0..case.images {
+        // Chain the image through the stages via activation tokens;
+        // images alternate inbox slots so in-flight deliveries of
+        // consecutive images never share a buffer.
+        let inbox = in_off[(i % 2) as usize];
+        let mut act: Option<crate::program::Token> = None;
+        for k in 0..stages {
+            let inputs: Vec<crate::program::Token> = act.iter().copied().collect();
+            let done = g.token(&format!("done-{k}-{i}"));
+            let src = if k == 0 { a_off } else { inbox };
+            let next = (k + 1 < stages).then_some(k + 1);
+            g.task(&format!("mm-{k}-{i}"), k, &inputs, &[done], move |r| {
+                vec![r.compute(
+                    k,
+                    DlaJob {
+                        op: DlaOp::Matmul {
+                            m: mm,
+                            k: mm,
+                            n: mm,
+                            a: GlobalAddr::new(k, src),
+                            b: GlobalAddr::new(k, b_off),
+                            y: GlobalAddr::new(k, y_off),
+                            accumulate: false,
+                        },
+                        art: next.map(|nk| ArtConfig {
+                            every_n_results: case.art_every,
+                            dst: GlobalAddr::new(nk, inbox),
+                        }),
+                        notify: None,
+                    },
+                )]
+            });
+            act = None;
+            if k + 1 < stages {
+                let a = g.token(&format!("act-{k}-{i}"));
+                g.task(&format!("art-{k}-{i}"), k, &[done], &[a], |r| r.take_art_ops());
+                act = Some(a);
+            }
+        }
+        if barriered {
+            g.barrier();
+        }
+    }
+    g
+}
+
+/// Config of one run: a P-node ring, timing-only, `host_wake =
+/// propagation` on every backend so the three engines' timings are
+/// directly comparable (the threaded backend's driver contract).
+fn point_config(stages: u32, shards: ShardSpec, threads: ThreadSpec) -> Config {
+    let mut cfg = Config::ring(stages)
+        .with_numerics(Numerics::TimingOnly)
+        .with_shards(shards)
+        .with_engine_threads(threads);
+    cfg.host_wake = cfg.link.propagation;
+    cfg
+}
+
+/// Run one graph variant on one engine backend.
+fn run_once(
+    case: &TaskgraphCase,
+    stages: u32,
+    barriered: bool,
+    shards: ShardSpec,
+    threads: ThreadSpec,
+) -> SimTime {
+    let mut s = Spmd::new(point_config(stages, shards, threads));
+    let g = build_graph(case, stages, barriered);
+    let t0 = s.now();
+    let run = g.run(&mut s).expect("pipeline graph is valid");
+    run.report.max_finish().since(t0)
+}
+
+/// Run one graph variant on all three engine backends, asserting they
+/// agree on the simulated makespan (monolithic vs sharded is
+/// bit-identical; threaded is trace-compatible).
+fn run_variant(case: &TaskgraphCase, stages: u32, barriered: bool) -> SimTime {
+    let t_mono = run_once(case, stages, barriered, ShardSpec::Off, ThreadSpec::Off);
+    let t_shard = run_once(case, stages, barriered, ShardSpec::Auto, ThreadSpec::Off);
+    let t_par = run_once(case, stages, barriered, ShardSpec::Auto, ThreadSpec::Auto);
+    assert_eq!(
+        t_mono, t_shard,
+        "{stages} stages (barriered={barriered}): sharded engine must be bit-identical"
+    );
+    assert_eq!(
+        t_mono, t_par,
+        "{stages} stages (barriered={barriered}): threaded engine must be trace-compatible"
+    );
+    t_mono
+}
+
+/// One sweep point: pipelined vs barriered at the given depth.
+fn run_point(case: &TaskgraphCase, stages: u32) -> TaskgraphPoint {
+    let pipelined = run_variant(case, stages, false);
+    let barriered = run_variant(case, stages, true);
+    let tasks = build_graph(case, stages, false).len();
+    TaskgraphPoint {
+        stages,
+        images: case.images,
+        tasks,
+        pipelined,
+        barriered,
+        pipeline_speedup: barriered.as_ps() as f64 / pipelined.as_ps() as f64,
+        images_per_s: case.images as f64 * 1e12 / pipelined.as_ps() as f64,
+    }
+}
+
+/// The full sweep (`--fast` trims the depth axis to the 4-stage point).
+pub fn run_sweep(fast: bool) -> Vec<TaskgraphPoint> {
+    let case = if fast {
+        TaskgraphCase::fast()
+    } else {
+        TaskgraphCase::paper()
+    };
+    stage_counts(fast)
+        .into_iter()
+        .map(|stages| run_point(&case, stages))
+        .collect()
+}
+
+/// The deepest swept pipeline rerun with telemetry enabled — the raw
+/// material for the report's stage-occupancy tables and the
+/// `--trace-out` Chrome trace. Returns the recorded telemetry, the
+/// shard advance stats (none: this runs on the monolithic engine), and
+/// the absolute simulated end time.
+pub fn run_instrumented(
+    fast: bool,
+    level: TelemetryLevel,
+) -> (Telemetry, Option<ShardingReport>, SimTime) {
+    let case = if fast {
+        TaskgraphCase::fast()
+    } else {
+        TaskgraphCase::paper()
+    };
+    let stages = *stage_counts(fast).last().expect("depth axis is non-empty");
+    let cfg = point_config(stages, ShardSpec::Off, ThreadSpec::Off).with_telemetry(level);
+    let mut s = Spmd::new(cfg);
+    let g = build_graph(&case, stages, false);
+    let run = g.run(&mut s).expect("pipeline graph is valid");
+    (
+        s.counters().telemetry().clone(),
+        run.report.shards,
+        run.report.end,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_sweep_recovers_pipelining_on_all_backends() {
+        let points = run_sweep(true);
+        assert_eq!(points.len(), 1, "--fast sweeps the 4-stage point only");
+        let p = &points[0];
+        assert_eq!(p.stages, 4);
+        // mm task per (stage, image) + art task per non-final stage.
+        assert_eq!(p.tasks, (p.images * (2 * p.stages - 1)) as usize);
+        assert!(
+            p.pipeline_speedup > 1.3,
+            "pipelining must beat the per-image barrier: {:.2}x",
+            p.pipeline_speedup
+        );
+        assert!(
+            p.pipeline_speedup < p.stages as f64,
+            "speedup {:.2}x cannot exceed the depth bound",
+            p.pipeline_speedup
+        );
+        assert!(p.images_per_s > 0.0);
+    }
+
+    #[test]
+    fn instrumented_run_records_stages() {
+        let (tel, shards, end) = run_instrumented(true, TelemetryLevel::Counters);
+        assert!(shards.is_none(), "monolithic run has no shard stats");
+        assert!(end > SimTime::ZERO);
+        assert!(
+            !crate::sim::occupancy_summary(&tel, end).is_empty(),
+            "telemetry must record stage gauges"
+        );
+    }
+}

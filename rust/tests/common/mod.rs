@@ -1,0 +1,282 @@
+//! Shared scenario generators for the cross-engine suites
+//! (`tests/sharded.rs`, `tests/parallel.rs`) and the task-graph
+//! conformance suite (`tests/taskgraph.rs`): seed handling (the CI
+//! matrix seed via `FSHMEM_EQ_SEED`), the topology matrix, the
+//! randomized one-sided traffic mix, the collectives algorithm program,
+//! and the randomized-DAG task-graph generator.
+//!
+//! Everything here is deterministic in its seed arguments: the suites'
+//! equivalence claims compare *runs of the same program*, so the
+//! generators must replay exactly.
+
+// Each test binary compiles this module and uses its own subset.
+#![allow(dead_code)]
+
+use fshmem::api::OpHandle;
+use fshmem::config::Config;
+use fshmem::dla::{DlaJob, DlaOp};
+use fshmem::memory::GlobalAddr;
+use fshmem::program::{AmTag, Rank, TaskGraph, Token};
+use fshmem::sim::Rng;
+
+/// Seeds under test: the baked-in pair, plus the CI matrix seed when
+/// `FSHMEM_EQ_SEED` is set.
+pub fn seeds() -> Vec<u64> {
+    seeds_with(&[])
+}
+
+/// [`seeds`] plus a suite's extra baked-in seeds.
+pub fn seeds_with(extra: &[u64]) -> Vec<u64> {
+    let mut s = vec![0xA11CE, 0x5EED5];
+    s.extend_from_slice(extra);
+    if let Ok(v) = std::env::var("FSHMEM_EQ_SEED") {
+        s.push(v.parse().expect("FSHMEM_EQ_SEED must be a u64"));
+    }
+    s
+}
+
+/// A 3x3 torus config (no builder shortcut exists for it).
+pub fn torus3x3() -> Config {
+    let mut cfg = Config::mesh(3, 3);
+    cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
+    cfg
+}
+
+/// The topology matrix the randomized suites sweep: ring (the
+/// prototype's shape), mesh (no wraparound), torus (wraparound +
+/// multihop forwarding), and the hierarchical shapes (fat-tree,
+/// dragonfly) with their root/global-cable detours.
+pub fn topology_matrix() -> Vec<(&'static str, fn() -> Config)> {
+    vec![
+        ("ring(4)", || Config::ring(4)),
+        ("ring(8)", || Config::ring(8)),
+        ("mesh(2x3)", || Config::mesh(2, 3)),
+        ("torus(3x3)", torus3x3),
+        ("fat_tree(2,3)", || Config::fat_tree(2, 3)),
+        ("dragonfly(3x2)", || Config::dragonfly(3, 2, 1)),
+    ]
+}
+
+/// A deterministic pseudo-random SPMD program: rounds of mixed one-sided
+/// traffic (puts, zero-copy puts, gets, striping-eligible bulk puts, DLA
+/// jobs, early waits, non-advancing test probes) separated by barriers
+/// (lockstep, so random per-rank op mixes can never deadlock the
+/// barrier). Returns every handle it issued, in program order.
+pub fn random_program(
+    r: &mut Rank,
+    seed: u64,
+    rounds: u32,
+    ops_per_round: u32,
+) -> Vec<OpHandle> {
+    let me = r.id();
+    let n = r.nodes();
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(me as u64 + 1));
+    let mut issued: Vec<OpHandle> = Vec::new();
+    let mut pending: Vec<OpHandle> = Vec::new();
+    for _ in 0..rounds {
+        for _ in 0..ops_per_round {
+            let peer = rng.below(n as u64) as u32;
+            match rng.below(6) {
+                0 | 1 => {
+                    // Small-to-medium put into a rank-flavored region
+                    // (overlaps between ranks are fine: bit-identical
+                    // execution implies bit-identical write order).
+                    let len = (64 + rng.below(6 * 1024)) as usize;
+                    let data = vec![(me as u8).wrapping_add(len as u8); len];
+                    let dst = r.global_addr(peer, 0x1000 * (me as u64 + 1) + rng.below(0x800));
+                    pending.push(r.put(dst, &data));
+                }
+                2 => {
+                    // Zero-copy put out of this rank's own segment.
+                    let len = 128 + rng.below(2048);
+                    let dst = r.global_addr(peer, 0x2_0000 + rng.below(0x1000));
+                    pending.push(r.put_from_mem(rng.below(0x4000), len, dst));
+                }
+                3 => {
+                    let len = 64 + rng.below(2048);
+                    let src = r.global_addr(peer, rng.below(0x2000));
+                    pending.push(r.get(src, 0x4_0000 + rng.below(0x1000), len));
+                }
+                4 => {
+                    if rng.below(4) == 0 {
+                        // Striping-eligible bulk put (crosses the 64 KiB
+                        // threshold; fans out over equal-cost ports).
+                        let dst = r.global_addr(peer, 0x10_0000);
+                        pending.push(r.put_from_mem(0, 160 << 10, dst));
+                    } else if let Some(h) = pending.pop() {
+                        r.wait(h);
+                    }
+                }
+                5 => {
+                    if rng.below(4) == 0 {
+                        // A DLA job on a (possibly remote) target; the
+                        // completion ack crosses back over the wire.
+                        let job = DlaJob {
+                            op: DlaOp::Matmul {
+                                m: 32,
+                                k: 32,
+                                n: 32,
+                                a: GlobalAddr::new(peer, 0x20_0000),
+                                b: GlobalAddr::new(peer, 0x20_8000),
+                                y: GlobalAddr::new(peer, 0x21_0000),
+                                accumulate: false,
+                            },
+                            art: None,
+                            notify: None,
+                        };
+                        pending.push(r.compute(peer, job));
+                    } else if let Some(&h) = pending.first() {
+                        r.test(h);
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        issued.extend(pending.iter().copied());
+        r.wait_all(&pending);
+        pending.clear();
+        r.barrier();
+    }
+    issued
+}
+
+/// One SPMD program exercising every collective under a forced
+/// algorithm: per-rank staging, broadcast from the last rank, allreduce,
+/// gather + scatter through rank 0. Signal handshakes, chunked ring
+/// steps, recursive halving, and (host-path) reductions all replay
+/// through it.
+pub fn algo_program(r: &mut Rank, algo: fshmem::collectives::Algo, sig: AmTag) {
+    use fshmem::collectives::spmd as coll;
+    let me = r.id();
+    let n = r.nodes();
+    let v: Vec<f32> = (0..60).map(|i| (me * 7 + i) as f32).collect();
+    r.write_local_f16(0, &v);
+    r.write_local(0x300, &[me as u8 + 1; 200]);
+    if me == n - 1 {
+        r.write_local(0x600, &[0xB7; 192]);
+    }
+    r.barrier();
+    coll::broadcast_algo(r, algo, sig, n - 1, 0x600, 192);
+    coll::allreduce_sum_f16_algo(r, algo, sig, 0, 60, 0x8000);
+    coll::gather_algo(r, algo, sig, 0, 0x300, 200, 0x20000);
+    coll::scatter_algo(r, algo, sig, 0, 0x20000, 200, 0x40000);
+    r.barrier();
+}
+
+/// One op of a generated task body — plain data so the body closure is
+/// `Fn` + `Send` + `Sync` and replays identically every run.
+enum GenOp {
+    Put { peer: u32, dst: u64, len: usize },
+    PutMem { src: u64, len: u64, peer: u32, dst: u64 },
+    Get { peer: u32, src: u64, dst: u64, len: u64 },
+    Compute { peer: u32 },
+}
+
+impl GenOp {
+    fn issue(&self, r: &mut Rank, me: u32) -> OpHandle {
+        match *self {
+            GenOp::Put { peer, dst, len } => {
+                let data = vec![me as u8; len];
+                let addr = r.global_addr(peer, dst);
+                r.put(addr, &data)
+            }
+            GenOp::PutMem { src, len, peer, dst } => {
+                let addr = r.global_addr(peer, dst);
+                r.put_from_mem(src, len, addr)
+            }
+            GenOp::Get { peer, src, dst, len } => {
+                let addr = r.global_addr(peer, src);
+                r.get(addr, dst, len)
+            }
+            GenOp::Compute { peer } => r.compute(
+                peer,
+                DlaJob {
+                    op: DlaOp::Matmul {
+                        m: 32,
+                        k: 32,
+                        n: 32,
+                        a: GlobalAddr::new(peer, 0x20_0000),
+                        b: GlobalAddr::new(peer, 0x20_8000),
+                        y: GlobalAddr::new(peer, 0x21_0000),
+                        accumulate: false,
+                    },
+                    art: None,
+                    notify: None,
+                },
+            ),
+        }
+    }
+}
+
+/// A seeded generator of arbitrary acyclic task graphs: 1-3 epochs of
+/// 3-7 tasks each, random multi-rank placements, random fan-in (up to
+/// two token inputs per task, drawn from everything produced so far —
+/// chains, diamonds, and cross-epoch edges all arise) and fan-out
+/// (tokens with any number of downstream consumers, including none).
+/// Bodies issue 0-2 ops from the one-sided traffic mix; an empty body
+/// exercises the resolved-at-launch path. Acyclicity holds by
+/// construction (tasks only consume tokens that already exist), so
+/// every generated graph passes `TaskGraph::validate`.
+pub fn random_taskgraph(nodes: u32, seed: u64) -> TaskGraph {
+    let mut rng = Rng::new(seed ^ 0xDA6_0F_7A5C5);
+    let mut g = TaskGraph::new();
+    let mut produced: Vec<Token> = Vec::new();
+    let epochs = 1 + rng.below(3);
+    let mut tid = 0u32;
+    for epoch in 0..epochs {
+        let tasks = 3 + rng.below(5);
+        for _ in 0..tasks {
+            let rank = rng.below(nodes as u64) as u32;
+            let mut inputs: Vec<Token> = Vec::new();
+            for _ in 0..rng.below(3) {
+                if produced.is_empty() {
+                    break;
+                }
+                let tok = produced[rng.below(produced.len() as u64) as usize];
+                if !inputs.contains(&tok) {
+                    inputs.push(tok);
+                }
+            }
+            let mut ops: Vec<GenOp> = Vec::new();
+            for _ in 0..rng.below(3) {
+                let peer = rng.below(nodes as u64) as u32;
+                ops.push(match rng.below(4) {
+                    0 => GenOp::Put {
+                        peer,
+                        dst: 0x1000 * (rank as u64 + 1) + rng.below(0x800),
+                        len: (64 + rng.below(1024)) as usize,
+                    },
+                    1 => GenOp::PutMem {
+                        src: rng.below(0x2000),
+                        len: 128 + rng.below(1024),
+                        peer,
+                        dst: 0x2_0000 + rng.below(0x1000),
+                    },
+                    2 => GenOp::Get {
+                        peer,
+                        src: rng.below(0x2000),
+                        dst: 0x4_0000 + rng.below(0x1000),
+                        len: 64 + rng.below(1024),
+                    },
+                    _ => GenOp::Compute { peer },
+                });
+            }
+            let name = format!("t{tid}");
+            tid += 1;
+            let outputs = if rng.below(4) < 3 {
+                let tok = g.token(&format!("{name}-out"));
+                produced.push(tok);
+                vec![tok]
+            } else {
+                Vec::new()
+            };
+            g.task(&name, rank, &inputs, &outputs, move |r| {
+                ops.iter().map(|op| op.issue(r, rank)).collect()
+            });
+        }
+        if epoch + 1 < epochs {
+            g.barrier();
+        }
+    }
+    g
+}

@@ -99,6 +99,8 @@ fn documented_keys_round_trip_through_the_parser() {
             "host_credits" => "off",
             "serving.arrival" => "poisson",
             "serving.ops" => "48",
+            "taskgraph.signal_tag" => "23",
+            "taskgraph.inflight" => "off",
             "telemetry" => "counters",
             "seed" => "7",
             other => panic!("doc documents unknown key '{other}'"),

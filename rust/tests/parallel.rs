@@ -14,22 +14,19 @@
 //! The CI trace-compatibility matrix re-runs this suite with extra seeds
 //! via the `FSHMEM_EQ_SEED` environment variable.
 
+mod common;
+
+use common::random_program;
 use fshmem::api::OpHandle;
 use fshmem::collectives;
 use fshmem::config::{Config, Numerics, ShardSpec, ThreadSpec};
-use fshmem::dla::{DlaJob, DlaOp};
-use fshmem::memory::GlobalAddr;
 use fshmem::program::{Rank, Spmd};
-use fshmem::sim::{Rng, SimTime};
+use fshmem::sim::SimTime;
 use fshmem::workloads::matmul;
 
 /// Seeds under test: three baked in, plus the CI matrix seed if set.
 fn seeds() -> Vec<u64> {
-    let mut s = vec![0xA11CE, 0x5EED5, 0x7EA7ED];
-    if let Ok(v) = std::env::var("FSHMEM_EQ_SEED") {
-        s.push(v.parse().expect("FSHMEM_EQ_SEED must be a u64"));
-    }
-    s
+    common::seeds_with(&[0x7EA7ED])
 }
 
 /// A comparison config: sharded, `host_wake = propagation`, with the
@@ -145,78 +142,8 @@ where
 }
 
 // ---- randomized SPMD programs ---------------------------------------------
-
-/// A deterministic pseudo-random SPMD program: rounds of mixed one-sided
-/// traffic (puts, zero-copy puts, gets, striping-eligible bulk puts, DLA
-/// jobs, early waits) separated by barriers (lockstep, so random
-/// per-rank op mixes can never deadlock the barrier). Returns every
-/// handle it issued, in program order.
-fn random_program(r: &mut Rank, seed: u64, rounds: u32, ops_per_round: u32) -> Vec<OpHandle> {
-    let me = r.id();
-    let n = r.nodes();
-    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(me as u64 + 1));
-    let mut issued: Vec<OpHandle> = Vec::new();
-    let mut pending: Vec<OpHandle> = Vec::new();
-    for _ in 0..rounds {
-        for _ in 0..ops_per_round {
-            let peer = rng.below(n as u64) as u32;
-            match rng.below(6) {
-                0 | 1 => {
-                    let len = (64 + rng.below(6 * 1024)) as usize;
-                    let data = vec![(me as u8).wrapping_add(len as u8); len];
-                    let dst = r.global_addr(peer, 0x1000 * (me as u64 + 1) + rng.below(0x800));
-                    pending.push(r.put(dst, &data));
-                }
-                2 => {
-                    let len = 128 + rng.below(2048);
-                    let dst = r.global_addr(peer, 0x2_0000 + rng.below(0x1000));
-                    pending.push(r.put_from_mem(rng.below(0x4000), len, dst));
-                }
-                3 => {
-                    let len = 64 + rng.below(2048);
-                    let src = r.global_addr(peer, rng.below(0x2000));
-                    pending.push(r.get(src, 0x4_0000 + rng.below(0x1000), len));
-                }
-                4 => {
-                    if rng.below(4) == 0 {
-                        // Striping-eligible bulk put (crosses the 64 KiB
-                        // threshold; fans out over equal-cost ports).
-                        let dst = r.global_addr(peer, 0x10_0000);
-                        pending.push(r.put_from_mem(0, 160 << 10, dst));
-                    } else if let Some(h) = pending.pop() {
-                        r.wait(h);
-                    }
-                }
-                5 => {
-                    if rng.below(4) == 0 {
-                        // A DLA job on a (possibly remote) target; the
-                        // completion ack crosses back over the wire.
-                        let job = DlaJob {
-                            op: DlaOp::Matmul {
-                                m: 32,
-                                k: 32,
-                                n: 32,
-                                a: GlobalAddr::new(peer, 0x20_0000),
-                                b: GlobalAddr::new(peer, 0x20_8000),
-                                y: GlobalAddr::new(peer, 0x21_0000),
-                                accumulate: false,
-                            },
-                            art: None,
-                            notify: None,
-                        };
-                        pending.push(r.compute(peer, job));
-                    }
-                }
-                _ => unreachable!(),
-            }
-        }
-        issued.extend(pending.iter().copied());
-        r.wait_all(&pending);
-        pending.clear();
-        r.barrier();
-    }
-    issued
-}
+// (the generator itself lives in tests/common/mod.rs, shared with the
+// bit-identity and task-graph suites)
 
 #[test]
 fn compat_ring4_random_traffic() {
@@ -256,11 +183,7 @@ fn compat_torus_random_traffic() {
     // Torus routing has wraparound + multihop forwarding: the densest
     // cross-shard channel traffic of the matrix.
     for seed in seeds() {
-        let mk = || {
-            let mut cfg = Config::mesh(3, 3);
-            cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
-            cfg
-        };
+        let mk = common::torus3x3;
         assert_compatible(
             mk,
             |r| random_program(r, seed, 2, 3),
@@ -517,35 +440,11 @@ fn compat_collectives_algorithm_matrix() {
     // trace-compatible under worker threads (the schedules' signal
     // handshakes and chunk pipelines are exactly the cross-shard
     // traffic the windowed backend relaxes internally).
-    fn algo_program(
-        r: &mut Rank,
-        algo: fshmem::collectives::Algo,
-        sig: fshmem::program::AmTag,
-    ) {
-        use fshmem::collectives::spmd as coll;
-        let me = r.id();
-        let n = r.nodes();
-        let v: Vec<f32> = (0..60).map(|i| (me * 7 + i) as f32).collect();
-        r.write_local_f16(0, &v);
-        r.write_local(0x300, &[me as u8 + 1; 200]);
-        if me == n - 1 {
-            r.write_local(0x600, &[0xB7; 192]);
-        }
-        r.barrier();
-        coll::broadcast_algo(r, algo, sig, n - 1, 0x600, 192);
-        coll::allreduce_sum_f16_algo(r, algo, sig, 0, 60, 0x8000);
-        coll::gather_algo(r, algo, sig, 0, 0x300, 200, 0x20000);
-        coll::scatter_algo(r, algo, sig, 0, 0x20000, 200, 0x40000);
-        r.barrier();
-    }
+    use common::algo_program;
     let topos: Vec<(&str, fn() -> Config)> = vec![
         ("ring(8)", || Config::ring(8)),
         ("mesh(2x3)", || Config::mesh(2, 3)),
-        ("torus(3x3)", || {
-            let mut cfg = Config::mesh(3, 3);
-            cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
-            cfg
-        }),
+        ("torus(3x3)", common::torus3x3),
     ];
     for (label, mk) in topos {
         for algo in fshmem::collectives::Algo::ALL {
@@ -620,6 +519,60 @@ fn compat_matmul_workload() {
     assert_eq!(m_seq.single_node, m_par.single_node, "matmul 1-node time");
     assert_eq!(m_seq.two_node, m_par.two_node, "matmul 2-node time");
     assert_eq!(m_seq.speedup.to_bits(), m_par.speedup.to_bits());
+}
+
+// ---- the task-graph executor ------------------------------------------------
+
+#[test]
+fn compat_random_task_graphs() {
+    // Arbitrary generated DAGs through the TaskGraph executor must stay
+    // trace-compatible under worker threads: identical launch order and
+    // launch clocks per rank (the recorded `TaskGraphRun::order`),
+    // identical timelines, finish clocks, counters, event counts, and
+    // memory — over both an auto and a 2-shard layout.
+    for seed in seeds() {
+        for (label, mk) in common::topology_matrix() {
+            for shards in [ShardSpec::Auto, ShardSpec::Count(2)] {
+                let run = |threads: ThreadSpec| {
+                    let mut s = Spmd::new(pcfg(mk(), shards, threads));
+                    let n = s.nodes();
+                    let g = common::random_taskgraph(n, seed);
+                    let run = g.run(&mut s).expect("generated graphs are valid");
+                    let mut latencies: Vec<(&'static str, Vec<u64>)> = s
+                        .counters()
+                        .latencies()
+                        .map(|(k, v)| {
+                            let mut samples = v.samples().to_vec();
+                            samples.sort_unstable();
+                            (k, samples)
+                        })
+                        .collect();
+                    latencies.sort_by_key(|&(k, _)| k);
+                    let mem: Vec<Vec<u8>> = (0..n)
+                        .map(|node| s.read_shared(node, 0, 0x48_000))
+                        .collect();
+                    (
+                        run.report.end,
+                        run.report.finish,
+                        run.report.timelines,
+                        run.order,
+                        s.events_processed(),
+                        s.counters().counts().collect::<Vec<_>>(),
+                        latencies,
+                        mem,
+                    )
+                };
+                let seq = run(ThreadSpec::Off);
+                for threads in [ThreadSpec::Auto, ThreadSpec::Count(2)] {
+                    assert_eq!(
+                        seq,
+                        run(threads),
+                        "{label} seed {seed:#x} [{shards:?} / {threads:?}]"
+                    );
+                }
+            }
+        }
+    }
 }
 
 // ---- threaded-backend structure --------------------------------------------

@@ -16,24 +16,15 @@
 //! The CI seed matrix re-runs this suite with extra seeds via the
 //! `FSHMEM_EQ_SEED` environment variable.
 
-use fshmem::api::OpHandle;
+mod common;
+
+use common::{algo_program, random_program, seeds};
 use fshmem::collectives;
 use fshmem::config::{Config, Numerics, ShardSpec};
-use fshmem::dla::{DlaJob, DlaOp};
-use fshmem::memory::GlobalAddr;
 use fshmem::program::{Rank, Spmd, TimelineEntry};
-use fshmem::sim::{Rng, SimTime};
+use fshmem::sim::SimTime;
 use fshmem::workloads::{conv, matmul};
 use fshmem::Fshmem;
-
-/// Seeds under test: two baked in, plus the CI matrix seed if set.
-fn seeds() -> Vec<u64> {
-    let mut s = vec![0xA11CE, 0x5EED5];
-    if let Ok(v) = std::env::var("FSHMEM_EQ_SEED") {
-        s.push(v.parse().expect("FSHMEM_EQ_SEED must be a u64"));
-    }
-    s
-}
 
 fn timing(cfg: Config) -> Config {
     cfg.with_numerics(Numerics::TimingOnly)
@@ -118,87 +109,17 @@ where
 }
 
 // ---- randomized SPMD programs ---------------------------------------------
-
-/// A deterministic pseudo-random SPMD program: rounds of mixed one-sided
-/// traffic (puts, zero-copy puts, gets, striping-eligible bulk puts, DLA
-/// jobs, early waits) separated by barriers (lockstep, so random
-/// per-rank op mixes can never deadlock the barrier).
-fn random_program(r: &mut Rank, seed: u64, rounds: u32, ops_per_round: u32) {
-    let me = r.id();
-    let n = r.nodes();
-    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(me as u64 + 1));
-    let mut pending: Vec<OpHandle> = Vec::new();
-    for _ in 0..rounds {
-        for _ in 0..ops_per_round {
-            let peer = rng.below(n as u64) as u32;
-            match rng.below(6) {
-                0 | 1 => {
-                    // Small-to-medium put into a rank-flavored region
-                    // (overlaps between ranks are fine: bit-identical
-                    // execution implies bit-identical write order).
-                    let len = (64 + rng.below(6 * 1024)) as usize;
-                    let data = vec![(me as u8).wrapping_add(len as u8); len];
-                    let dst = r.global_addr(peer, 0x1000 * (me as u64 + 1) + rng.below(0x800));
-                    pending.push(r.put(dst, &data));
-                }
-                2 => {
-                    // Zero-copy put out of this rank's own segment.
-                    let len = 128 + rng.below(2048);
-                    let dst = r.global_addr(peer, 0x2_0000 + rng.below(0x1000));
-                    pending.push(r.put_from_mem(rng.below(0x4000), len, dst));
-                }
-                3 => {
-                    let len = 64 + rng.below(2048);
-                    let src = r.global_addr(peer, rng.below(0x2000));
-                    pending.push(r.get(src, 0x4_0000 + rng.below(0x1000), len));
-                }
-                4 => {
-                    if rng.below(4) == 0 {
-                        // Striping-eligible bulk put (crosses the 64 KiB
-                        // threshold; fans out over equal-cost ports).
-                        let dst = r.global_addr(peer, 0x10_0000);
-                        pending.push(r.put_from_mem(0, 160 << 10, dst));
-                    } else if let Some(h) = pending.pop() {
-                        r.wait(h);
-                    }
-                }
-                5 => {
-                    if rng.below(4) == 0 {
-                        // A DLA job on a (possibly remote) target; the
-                        // completion ack crosses back over the wire.
-                        let job = DlaJob {
-                            op: DlaOp::Matmul {
-                                m: 32,
-                                k: 32,
-                                n: 32,
-                                a: GlobalAddr::new(peer, 0x20_0000),
-                                b: GlobalAddr::new(peer, 0x20_8000),
-                                y: GlobalAddr::new(peer, 0x21_0000),
-                                accumulate: false,
-                            },
-                            art: None,
-                            notify: None,
-                        };
-                        pending.push(r.compute(peer, job));
-                    } else if let Some(&h) = pending.first() {
-                        r.test(h);
-                    }
-                }
-                _ => unreachable!(),
-            }
-        }
-        r.wait_all(&pending);
-        pending.clear();
-        r.barrier();
-    }
-}
+// (the generator itself lives in tests/common/mod.rs, shared with the
+// trace-compatibility and task-graph suites)
 
 #[test]
 fn equivalence_ring4_random_traffic() {
     for seed in seeds() {
         assert_equivalent(
             || timing(Config::ring(4)),
-            |r| random_program(r, seed, 3, 5),
+            |r| {
+                random_program(r, seed, 3, 5);
+            },
             &format!("ring(4) seed {seed:#x}"),
         );
     }
@@ -209,7 +130,9 @@ fn equivalence_ring8_random_traffic() {
     for seed in seeds() {
         assert_equivalent(
             || timing(Config::ring(8)),
-            |r| random_program(r, seed, 2, 4),
+            |r| {
+                random_program(r, seed, 2, 4);
+            },
             &format!("ring(8) seed {seed:#x}"),
         );
     }
@@ -220,7 +143,9 @@ fn equivalence_mesh_random_traffic() {
     for seed in seeds() {
         assert_equivalent(
             || timing(Config::mesh(2, 3)),
-            |r| random_program(r, seed, 2, 4),
+            |r| {
+                random_program(r, seed, 2, 4);
+            },
             &format!("mesh(2x3) seed {seed:#x}"),
         );
     }
@@ -231,14 +156,12 @@ fn equivalence_torus_random_traffic() {
     // Torus routing has wraparound + multihop forwarding: the densest
     // cross-shard channel traffic of the matrix.
     for seed in seeds() {
-        let mk = || {
-            let mut cfg = timing(Config::mesh(3, 3));
-            cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
-            cfg
-        };
+        let mk = || timing(common::torus3x3());
         assert_equivalent(
             mk,
-            |r| random_program(r, seed, 2, 3),
+            |r| {
+                random_program(r, seed, 2, 3);
+            },
             &format!("torus(3x3) seed {seed:#x}"),
         );
     }
@@ -252,7 +175,9 @@ fn equivalence_fat_tree_random_traffic() {
     for seed in seeds() {
         assert_equivalent(
             || timing(Config::fat_tree(2, 3)),
-            |r| random_program(r, seed, 2, 3),
+            |r| {
+                random_program(r, seed, 2, 3);
+            },
             &format!("fat_tree(2,3) seed {seed:#x}"),
         );
     }
@@ -265,7 +190,9 @@ fn equivalence_dragonfly_random_traffic() {
     for seed in seeds() {
         assert_equivalent(
             || timing(Config::dragonfly(3, 2, 1)),
-            |r| random_program(r, seed, 2, 3),
+            |r| {
+                random_program(r, seed, 2, 3);
+            },
             &format!("dragonfly(3x2) seed {seed:#x}"),
         );
     }
@@ -279,7 +206,7 @@ fn equivalence_across_shard_maps() {
     use fshmem::config::ShardMapSpec;
     let seed = 0xB17_1D;
     let mono = capture(timing(Config::ring(6)).with_shards(ShardSpec::Off), |r| {
-        random_program(r, seed, 2, 4)
+        random_program(r, seed, 2, 4);
     });
     for map in [
         ShardMapSpec::Balanced,
@@ -289,7 +216,9 @@ fn equivalence_across_shard_maps() {
             timing(Config::ring(6))
                 .with_shards(ShardSpec::Count(3))
                 .with_shard_map(map.clone()),
-            |r| random_program(r, seed, 2, 4),
+            |r| {
+                random_program(r, seed, 2, 4);
+            },
         );
         assert_trace_eq(&mono, &mapped, &format!("ring(6) {map:?}"));
     }
@@ -306,7 +235,9 @@ fn telemetry_spans_bit_identical_across_shards() {
     let seed = 0x7E1E;
     let capture = |cfg: Config| {
         let mut s = Spmd::new(cfg.with_telemetry(TelemetryLevel::Spans));
-        let report = s.run(|r| random_program(r, seed, 2, 4));
+        let report = s.run(|r| {
+            random_program(r, seed, 2, 4);
+        });
         let t = s.counters().telemetry();
         let gauges: Vec<_> = t
             .gauges()
@@ -394,7 +325,9 @@ fn equivalence_under_arq_failure_injection() {
     for seed in seeds() {
         assert_equivalent(
             || timing(Config::ring(4)).with_link_loss_permille(20),
-            |r| random_program(r, seed, 2, 4),
+            |r| {
+                random_program(r, seed, 2, 4);
+            },
             &format!("ring(4)+ARQ seed {seed:#x}"),
         );
     }
@@ -547,29 +480,8 @@ fn equivalence_synchronous_api_op_times() {
 }
 
 // ---- the collectives algorithm library --------------------------------------
-
-/// One SPMD program exercising every collective under a forced
-/// algorithm: per-rank staging, broadcast from the last rank, allreduce,
-/// gather + scatter through rank 0. Signal handshakes, chunked ring
-/// steps, recursive halving, and (host-path) reductions all replay
-/// through it.
-fn algo_program(r: &mut Rank, algo: fshmem::collectives::Algo, sig: fshmem::program::AmTag) {
-    use fshmem::collectives::spmd as coll;
-    let me = r.id();
-    let n = r.nodes();
-    let v: Vec<f32> = (0..60).map(|i| (me * 7 + i) as f32).collect();
-    r.write_local_f16(0, &v);
-    r.write_local(0x300, &[me as u8 + 1; 200]);
-    if me == n - 1 {
-        r.write_local(0x600, &[0xB7; 192]);
-    }
-    r.barrier();
-    coll::broadcast_algo(r, algo, sig, n - 1, 0x600, 192);
-    coll::allreduce_sum_f16_algo(r, algo, sig, 0, 60, 0x8000);
-    coll::gather_algo(r, algo, sig, 0, 0x300, 200, 0x20000);
-    coll::scatter_algo(r, algo, sig, 0, 0x20000, 200, 0x40000);
-    r.barrier();
-}
+// (`algo_program` lives in tests/common/mod.rs, shared with the
+// trace-compatibility suite)
 
 #[test]
 fn equivalence_collectives_algorithm_matrix() {
@@ -580,11 +492,7 @@ fn equivalence_collectives_algorithm_matrix() {
     let topos: Vec<(&str, fn() -> Config)> = vec![
         ("ring(8)", || timing(Config::ring(8))),
         ("mesh(2x3)", || timing(Config::mesh(2, 3))),
-        ("torus(3x3)", || {
-            let mut cfg = timing(Config::mesh(3, 3));
-            cfg.topology = fshmem::fabric::Topology::Torus2D { w: 3, h: 3 };
-            cfg
-        }),
+        ("torus(3x3)", || timing(common::torus3x3())),
     ];
     for (label, mk) in topos {
         for algo in fshmem::collectives::Algo::ALL {
@@ -593,8 +501,9 @@ fn equivalence_collectives_algorithm_matrix() {
                 let sig = s.register_signal(11);
                 let report = s.run(move |r| algo_program(r, algo, sig));
                 let n = s.nodes();
-                let mem: Vec<Vec<u8>> =
-                    (0..n).map(|node| s.read_shared(node, 0, 0x48_000)).collect();
+                let mem: Vec<Vec<u8>> = (0..n)
+                    .map(|node| s.read_shared(node, 0, 0x48_000))
+                    .collect();
                 (
                     report.end,
                     report.finish,
@@ -658,18 +567,66 @@ fn equivalence_dla_offloaded_reduction() {
     assert!(mono.4.iter().all(|&x| x == 56.0));
 }
 
+// ---- the task-graph executor ------------------------------------------------
+
+#[test]
+fn equivalence_random_task_graphs() {
+    // The TaskGraph executor lowers dependency edges onto primitives the
+    // bit-identity contract already covers (same-rank waits, matched
+    // signal AMs, barrier epochs). This pins the composition: arbitrary
+    // generated DAGs — fan-in/fan-out, diamonds, cross-rank and
+    // cross-epoch edges, empty bodies — run bit-identically across
+    // shards = off | auto | 2, including the recorded per-rank task
+    // launch order and launch clocks.
+    for seed in seeds() {
+        for (label, mk) in common::topology_matrix() {
+            let run = |shards: ShardSpec| {
+                let mut s = Spmd::new(timing(mk()).with_shards(shards));
+                let n = s.nodes();
+                let g = common::random_taskgraph(n, seed);
+                let run = g.run(&mut s).expect("generated graphs are valid");
+                let mem: Vec<Vec<u8>> = (0..n)
+                    .map(|node| s.read_shared(node, 0, 0x48_000))
+                    .collect();
+                (
+                    run.report.end,
+                    run.report.finish,
+                    run.report.timelines,
+                    run.order,
+                    s.events_processed(),
+                    s.counters().counts().collect::<Vec<_>>(),
+                    mem,
+                )
+            };
+            let mono = run(ShardSpec::Off);
+            assert_eq!(
+                mono,
+                run(ShardSpec::Auto),
+                "{label} seed {seed:#x} [auto shards]"
+            );
+            assert_eq!(
+                mono,
+                run(ShardSpec::Count(2)),
+                "{label} seed {seed:#x} [2 shards]"
+            );
+        }
+    }
+}
+
 // ---- sharded-engine structure ----------------------------------------------
 
 #[test]
 fn every_shard_count_is_equivalent() {
     let seed = 0xC0FFEE;
     let mono = capture(timing(Config::ring(6)).with_shards(ShardSpec::Off), |r| {
-        random_program(r, seed, 2, 4)
+        random_program(r, seed, 2, 4);
     });
     for count in 1..=6 {
         let sharded = capture(
             timing(Config::ring(6)).with_shards(ShardSpec::Count(count)),
-            |r| random_program(r, seed, 2, 4),
+            |r| {
+                random_program(r, seed, 2, 4);
+            },
         );
         assert_trace_eq(&mono, &sharded, &format!("ring(6) {count} shards"));
     }

@@ -1,0 +1,485 @@
+//! TaskGraph executor conformance.
+//!
+//! Two pins, both against observables the rest of the repo already
+//! trusts:
+//!
+//! 1. **Randomized-DAG topological consistency** — seeded arbitrary
+//!    acyclic graphs (fan-in/fan-out, chains, diamonds, multi-rank
+//!    placements, multiple barrier epochs; generator in
+//!    `tests/common/mod.rs`) must validate, run to completion, and
+//!    launch every task exactly once, on its declared rank, in an order
+//!    consistent with every dependency edge. The cross-engine halves of
+//!    the same property (bit-identity across `shards`, trace
+//!    compatibility across `engine_threads`) live in `tests/sharded.rs`
+//!    and `tests/parallel.rs`.
+//!
+//! 2. **Hand-schedule regression** — the task-graph-expressed matmul,
+//!    conv, and scale-out halo workloads must reproduce the *exact*
+//!    traces (end time, per-rank finish clocks, issue timelines, event
+//!    counts, counters, latency samples) of the hand-scheduled SPMD
+//!    programs they replaced, on all three engine backends. The executor
+//!    promises its bookkeeping (task launch recording via `now()`,
+//!    resolved-flag wait elision) is invisible to the simulation; these
+//!    tests are that promise, checked byte for byte.
+
+mod common;
+
+use fshmem::config::{Config, Numerics, ShardSpec, ThreadSpec};
+use fshmem::dla::{ArtConfig, DlaJob, DlaOp};
+use fshmem::memory::GlobalAddr;
+use fshmem::program::{Rank, Spmd, TaskGraph, TimelineEntry};
+use fshmem::sim::SimTime;
+use fshmem::workloads::{matmul, scaleout, SegmentAlloc};
+
+// ---- randomized-DAG topological consistency ---------------------------------
+
+#[test]
+fn random_dags_execute_in_topological_order() {
+    for seed in common::seeds_with(&[0xDA6]) {
+        for variant in 0..4u64 {
+            let seed = seed ^ (variant.wrapping_mul(0x9E37_79B9));
+            let cfg = Config::ring(4).with_numerics(Numerics::TimingOnly);
+            let mut s = Spmd::new(cfg);
+            let g = common::random_taskgraph(4, seed);
+            g.validate().expect("generated graphs are valid");
+            let run = g.run(&mut s).expect("valid graphs run to completion");
+
+            // Every task launched exactly once, on its declared rank.
+            let mut launched = vec![false; g.len()];
+            let mut at = vec![SimTime::ZERO; g.len()];
+            let mut pos = vec![0usize; g.len()];
+            for (rank, traces) in run.order.iter().enumerate() {
+                for (idx, tr) in traces.iter().enumerate() {
+                    assert_eq!(
+                        g.placement(tr.task),
+                        rank as u32,
+                        "seed {seed:#x}: task '{}' launched off its rank",
+                        g.name(tr.task)
+                    );
+                    assert!(
+                        !launched[tr.task.index()],
+                        "seed {seed:#x}: task '{}' launched twice",
+                        g.name(tr.task)
+                    );
+                    launched[tr.task.index()] = true;
+                    at[tr.task.index()] = tr.at;
+                    pos[tr.task.index()] = idx;
+                }
+            }
+            assert!(
+                launched.iter().all(|&l| l),
+                "seed {seed:#x}: every task must launch"
+            );
+
+            // Every dependency edge is respected in the executed order.
+            for (p, c) in g.dependency_edges() {
+                assert!(
+                    at[c.index()] >= at[p.index()],
+                    "seed {seed:#x}: '{}' launched at {:?}, before its \
+                     producer '{}' at {:?}",
+                    g.name(c),
+                    at[c.index()],
+                    g.name(p),
+                    at[p.index()],
+                );
+                if g.placement(p) == g.placement(c) {
+                    assert!(
+                        pos[p.index()] < pos[c.index()],
+                        "seed {seed:#x}: same-rank edge '{}' -> '{}' out of \
+                         order in the rank's launch sequence",
+                        g.name(p),
+                        g.name(c),
+                    );
+                } else if g.epoch_of(p) == g.epoch_of(c) {
+                    // Same-epoch cross-rank edges resolve through a
+                    // matched signal AM, which costs wire time: the
+                    // consumer launches strictly later.
+                    assert!(
+                        at[c.index()] > at[p.index()],
+                        "seed {seed:#x}: signal edge '{}' -> '{}' must put \
+                         the consumer strictly after the producer",
+                        g.name(p),
+                        g.name(c),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn validate_names_offending_tasks_in_cycle_errors() {
+    // Integration-level negative: a two-task cycle across epochs of a
+    // bigger graph still names the offenders.
+    let mut g = TaskGraph::new();
+    let ta = g.token("a-out");
+    let tb = g.token("b-out");
+    g.task("root", 0, &[], &[], |_| Vec::new());
+    g.task("a", 0, &[tb], &[ta], |_| Vec::new());
+    g.task("b", 1, &[ta], &[tb], |_| Vec::new());
+    let err = g.validate().expect_err("cycle must be rejected").to_string();
+    assert!(
+        err.contains("'a'") && err.contains("'b'"),
+        "cycle error must name the offending tasks: {err}"
+    );
+}
+
+// ---- hand-schedule regression pins ------------------------------------------
+
+/// The three engine backends every pin runs on: monolithic, sharded,
+/// threaded (the last with `host_wake = link.propagation`, its driver
+/// contract).
+fn backends(base: fn() -> Config) -> Vec<(&'static str, Config)> {
+    let mono = base().with_numerics(Numerics::TimingOnly);
+    let sharded = mono.clone().with_shards(ShardSpec::Auto);
+    let mut threaded = sharded.clone().with_engine_threads(ThreadSpec::Auto);
+    threaded.host_wake = threaded.link.propagation;
+    vec![
+        ("monolithic", mono),
+        ("sharded", sharded),
+        ("threaded", threaded),
+    ]
+}
+
+/// The full observable of a run, for hand-vs-graph comparison. Latency
+/// series are sorted (the threaded backend's one relaxed observable);
+/// everything else is compared in recorded order.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    elapsed: SimTime,
+    end: SimTime,
+    events: u64,
+    counts: Vec<(&'static str, u64)>,
+    latencies: Vec<(&'static str, Vec<u64>)>,
+    finish: Vec<SimTime>,
+    timelines: Vec<Vec<TimelineEntry>>,
+}
+
+fn trace_of(
+    s: &mut Spmd,
+    t0: SimTime,
+    end: SimTime,
+    max_finish: SimTime,
+    finish: Vec<SimTime>,
+    timelines: Vec<Vec<TimelineEntry>>,
+) -> Trace {
+    let mut latencies: Vec<(&'static str, Vec<u64>)> = s
+        .counters()
+        .latencies()
+        .map(|(k, v)| {
+            let mut samples = v.samples().to_vec();
+            samples.sort_unstable();
+            (k, samples)
+        })
+        .collect();
+    latencies.sort_by_key(|&(k, _)| k);
+    Trace {
+        elapsed: max_finish.since(t0),
+        end,
+        events: s.events_processed(),
+        counts: s.counters().counts().collect(),
+        latencies,
+        finish,
+        timelines,
+    }
+}
+
+fn hand_trace<F>(cfg: &Config, program: F) -> Trace
+where
+    F: Fn(&mut Rank) + Sync,
+{
+    let mut s = Spmd::new(cfg.clone());
+    let t0 = s.now();
+    let report = s.run(|r| program(r));
+    let max = report.max_finish();
+    trace_of(&mut s, t0, report.end, max, report.finish, report.timelines)
+}
+
+fn graph_trace(cfg: &Config, g: &TaskGraph) -> Trace {
+    let mut s = Spmd::new(cfg.clone());
+    let t0 = s.now();
+    let run = g.run(&mut s).expect("workload graphs are valid");
+    let max = run.report.max_finish();
+    trace_of(
+        &mut s,
+        t0,
+        run.report.end,
+        max,
+        run.report.finish,
+        run.report.timelines,
+    )
+}
+
+// ---- matmul ----
+
+/// The two-node matmul tensor layout, recomputed exactly as
+/// `workloads::matmul` lays it out (both nodes are identical).
+#[derive(Clone, Copy)]
+struct MmLayout {
+    m: [u64; 2],
+    n: [u64; 2],
+    c: [u64; 2],
+    scratch_c: [u64; 2],
+}
+
+fn mm_layout(cfg: &Config, n: usize) -> MmLayout {
+    let h = n / 2;
+    let mut a = SegmentAlloc::new(cfg.segment_bytes);
+    let m = [a.alloc_f16(h * h), a.alloc_f16(h * h)];
+    let nb = [a.alloc_f16(h * h), a.alloc_f16(h * h)];
+    let c = [a.alloc_f16(h * h), a.alloc_f16(h * h)];
+    let mut s = SegmentAlloc::new(cfg.segment_bytes);
+    s.alloc((6 * h * h * 4) as u64);
+    MmLayout {
+        m,
+        n: nb,
+        c,
+        scratch_c: [s.alloc_f16(h * h), s.alloc_f16(h * h)],
+    }
+}
+
+fn mm_cross_job(lay: &MmLayout, p: u32, q: u32, i: usize, h32: u32, every: u32) -> DlaJob {
+    DlaJob {
+        op: DlaOp::Matmul {
+            m: h32,
+            k: h32,
+            n: h32,
+            a: GlobalAddr::new(p, lay.m[i]),
+            b: GlobalAddr::new(p, lay.n[q as usize]),
+            y: GlobalAddr::new(p, lay.scratch_c[i]),
+            accumulate: false,
+        },
+        art: Some(ArtConfig {
+            every_n_results: every,
+            dst: GlobalAddr::new(q, lay.c[i]),
+        }),
+        notify: None,
+    }
+}
+
+fn mm_acc_job(lay: &MmLayout, p: u32, i: usize, h32: u32) -> DlaJob {
+    DlaJob {
+        op: DlaOp::Matmul {
+            m: h32,
+            k: h32,
+            n: h32,
+            a: GlobalAddr::new(p, lay.m[i]),
+            b: GlobalAddr::new(p, lay.n[p as usize]),
+            y: GlobalAddr::new(p, lay.c[i]),
+            accumulate: true,
+        },
+        art: None,
+        notify: None,
+    }
+}
+
+/// The matmul schedule as `workloads::matmul` expresses it today — a
+/// task graph mirroring the production construction.
+fn mm_graph(lay: MmLayout, h32: u32, every: u32) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    for p in 0..2u32 {
+        let q = 1 - p;
+        let partials = g.token(&format!("partials-{p}"));
+        g.task(&format!("cross-{p}"), p, &[], &[partials], move |r| {
+            (0..2usize)
+                .map(|i| r.compute(p, mm_cross_job(&lay, p, q, i, h32, every)))
+                .collect()
+        });
+        g.task(&format!("art-{p}"), p, &[partials], &[], |r| r.take_art_ops());
+    }
+    g.barrier();
+    for p in 0..2u32 {
+        g.task(&format!("accumulate-{p}"), p, &[], &[], move |r| {
+            (0..2usize)
+                .map(|i| r.compute(p, mm_acc_job(&lay, p, i, h32)))
+                .collect()
+        });
+    }
+    g
+}
+
+#[test]
+fn taskgraph_matmul_matches_hand_scheduled_spmd() {
+    let case = matmul::MatmulCase::paper(256);
+    let h32 = (case.n / 2) as u32;
+    let every = case.art_every;
+    for (label, cfg) in backends(Config::two_node_ring) {
+        let lay = mm_layout(&cfg, case.n);
+        // The schedule the graph replaced, hand-choreographed: issue the
+        // ART-streaming cross partials, wait them, wait the ART
+        // deliveries, barrier, then the local accumulates.
+        let hand = hand_trace(&cfg, move |r| {
+            let p = r.id();
+            let q = 1 - p;
+            let hs: Vec<_> = (0..2usize)
+                .map(|i| r.compute(p, mm_cross_job(&lay, p, q, i, h32, every)))
+                .collect();
+            r.wait_all(&hs);
+            let art = r.take_art_ops();
+            r.wait_all(&art);
+            r.barrier();
+            let hs: Vec<_> = (0..2usize)
+                .map(|i| r.compute(p, mm_acc_job(&lay, p, i, h32)))
+                .collect();
+            r.wait_all(&hs);
+        });
+        let graph = graph_trace(&cfg, &mm_graph(lay, h32, every));
+        assert_eq!(hand, graph, "{label}: matmul graph vs hand schedule");
+
+        // And the production workload reproduces the same makespan.
+        let data = matmul::MatmulData {
+            m: Vec::new(),
+            n: Vec::new(),
+        };
+        let (elapsed, _) = matmul::run_two_node(&cfg, &case, &data).unwrap();
+        assert_eq!(elapsed, hand.elapsed, "{label}: workload makespan");
+    }
+}
+
+// ---- conv ----
+
+#[derive(Clone, Copy)]
+struct ConvLayout {
+    x: u64,
+    w: u64,
+    y_local: u64,
+    y_peer: u64,
+}
+
+fn conv_layout(cfg: &Config, case: &fshmem::workloads::ConvCase) -> ConvLayout {
+    let mut alloc = SegmentAlloc::new(cfg.segment_bytes);
+    ConvLayout {
+        x: alloc.alloc_f16(case.h * case.w * case.cin),
+        w: alloc.alloc_f16(case.ksize * case.ksize * case.cin * case.cout / 2),
+        y_local: alloc.alloc_f16(case.h * case.w * case.cout / 2),
+        y_peer: alloc.alloc_f16(case.h * case.w * case.cout / 2),
+    }
+}
+
+fn conv_job(lay: &ConvLayout, case: &fshmem::workloads::ConvCase, p: u32, q: u32) -> DlaJob {
+    DlaJob {
+        op: DlaOp::Conv {
+            h: case.h as u32,
+            w: case.w as u32,
+            cin: case.cin as u32,
+            cout: (case.cout / 2) as u32,
+            ksize: case.ksize as u32,
+            x: GlobalAddr::new(p, lay.x),
+            wts: GlobalAddr::new(p, lay.w),
+            y: GlobalAddr::new(p, lay.y_local),
+        },
+        art: Some(ArtConfig {
+            every_n_results: case.art_every,
+            dst: GlobalAddr::new(q, lay.y_peer),
+        }),
+        notify: None,
+    }
+}
+
+#[test]
+fn taskgraph_conv_matches_hand_scheduled_spmd() {
+    use fshmem::workloads::{conv, ConvCase};
+    let case = ConvCase::paper(3);
+    for (label, cfg) in backends(Config::two_node_ring) {
+        let lay = conv_layout(&cfg, &case);
+        let hand = hand_trace(&cfg, move |r| {
+            let p = r.id();
+            let q = 1 - p;
+            let h = r.compute(p, conv_job(&lay, &case, p, q));
+            r.wait(h);
+            let art = r.take_art_ops();
+            r.wait_all(&art);
+            r.barrier();
+        });
+        let mut g = TaskGraph::new();
+        for p in 0..2u32 {
+            let q = 1 - p;
+            let half = g.token(&format!("half-{p}"));
+            g.task(&format!("conv-{p}"), p, &[], &[half], move |r| {
+                vec![r.compute(p, conv_job(&lay, &case, p, q))]
+            });
+            g.task(&format!("art-{p}"), p, &[half], &[], |r| r.take_art_ops());
+        }
+        g.barrier();
+        let graph = graph_trace(&cfg, &g);
+        assert_eq!(hand, graph, "{label}: conv graph vs hand schedule");
+
+        let data = conv::ConvData {
+            x: Vec::new(),
+            w: Vec::new(),
+        };
+        let (elapsed, _) = conv::run_two_node(&cfg, &case, &data).unwrap();
+        assert_eq!(elapsed, hand.elapsed, "{label}: workload makespan");
+    }
+}
+
+// ---- scale-out halo ----
+
+#[test]
+fn taskgraph_halo_matches_hand_scheduled_loop() {
+    use fshmem::workloads::scaleout::Exchange;
+    use fshmem::workloads::ScaleoutCase;
+    let case = ScaleoutCase {
+        total_jobs: 8,
+        mm: 128,
+        exchange_bytes: 32 << 10,
+        exchange: Exchange::Halo,
+    };
+    for n in [1u32, 4] {
+        let (elapsed, ranks, _) = scaleout::run_one(n, &case, ShardSpec::Off);
+        // The bulk-synchronous loop the per-job task-graph epochs
+        // replaced: compute, wait, push the halo slab right, wait,
+        // barrier — per job.
+        let mut s = Spmd::new(Config::ring(n).with_numerics(Numerics::TimingOnly));
+        // `run_point` registers its allreduce signal up front even on
+        // the halo path; mirror it so the runs are identical.
+        let _sig = s.register_signal(29);
+        let t0 = s.now();
+        let jobs_per = case.total_jobs / n;
+        let elem = case.mm as u64 * case.mm as u64 * 2;
+        let (a_off, b_off, y_off, recv_off) = (0, elem, 2 * elem, 3 * elem);
+        let mm = case.mm;
+        let exchange_bytes = case.exchange_bytes;
+        let report = s.run(move |r| {
+            let p = r.id();
+            for _ in 0..jobs_per {
+                let h = r.compute(
+                    p,
+                    DlaJob {
+                        op: DlaOp::Matmul {
+                            m: mm,
+                            k: mm,
+                            n: mm,
+                            a: GlobalAddr::new(p, a_off),
+                            b: GlobalAddr::new(p, b_off),
+                            y: GlobalAddr::new(p, y_off),
+                            accumulate: false,
+                        },
+                        art: None,
+                        notify: None,
+                    },
+                );
+                r.wait(h);
+                if n > 1 {
+                    let h = r.put_from_mem(
+                        y_off,
+                        exchange_bytes,
+                        GlobalAddr::new((p + 1) % n, recv_off),
+                    );
+                    r.wait(h);
+                }
+                r.barrier();
+            }
+        });
+        assert_eq!(
+            report.max_finish().since(t0),
+            elapsed,
+            "n={n}: halo graph vs hand-scheduled loop makespan"
+        );
+        assert_eq!(
+            report.rank_timelines(),
+            ranks,
+            "n={n}: halo graph vs hand-scheduled loop timelines"
+        );
+    }
+}
