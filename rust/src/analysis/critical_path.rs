@@ -1,0 +1,222 @@
+//! Critical-path representation and attribution.
+//!
+//! A [`CriticalPath`] is the chain of binding dependencies from a
+//! terminal span back to the first span with no predecessor, produced by
+//! [`super::SpanGraph::critical_path`]. Its segments tile the interval
+//! `[start_ps, end_ps]` exactly — each segment covers the time between
+//! its binding predecessor's end and its own end — so the per-stage
+//! attribution always sums to the path total, by construction. Each
+//! covered interval splits into **wait** (before the span's own start:
+//! queueing behind the dependency) and **service** (the span executing).
+
+use std::collections::BTreeMap;
+
+/// One span's contribution to the critical path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    /// Stage name of the span on the path.
+    pub stage: &'static str,
+    /// Node the stage executed on.
+    pub node: u32,
+    /// Op token (0 when anonymous).
+    pub op: u32,
+    /// Op-class attribution key: the op's terminal stage (`op:put`,
+    /// `op:get`, ...), or `-` when unknown.
+    pub class: &'static str,
+    /// Interval start: the binding predecessor's end (ps).
+    pub from_ps: u64,
+    /// Interval end: this span's end (ps).
+    pub to_ps: u64,
+    /// Queueing share of the interval: time before the span's own start.
+    pub wait_ps: u64,
+    /// Executing share of the interval.
+    pub service_ps: u64,
+}
+
+impl Segment {
+    /// Total time this segment contributes to the path.
+    pub fn total_ps(&self) -> u64 {
+        self.wait_ps + self.service_ps
+    }
+}
+
+/// Aggregated path share of one attribution key (stage, node, or
+/// op-class).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PathShare {
+    /// Attribution key (`wire`, `node3`, `op:put`, ...).
+    pub key: String,
+    /// Executing time attributed to the key (ps).
+    pub service_ps: u64,
+    /// Queueing time attributed to the key (ps).
+    pub wait_ps: u64,
+    /// Number of path segments aggregated.
+    pub segments: u64,
+}
+
+impl PathShare {
+    /// Combined wait + service attribution (ps).
+    pub fn total_ps(&self) -> u64 {
+        self.service_ps + self.wait_ps
+    }
+}
+
+/// What-if estimate: the modeled makespan with one stage sped up.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WhatIf {
+    /// Stage that was sped up.
+    pub stage: String,
+    /// The speedup factor applied to every span of the stage.
+    pub speedup: u64,
+    /// Modeled makespan after the speedup (ps); compare against the
+    /// `k = 1` baseline of [`super::SpanGraph::what_if`].
+    pub makespan_ps: u64,
+}
+
+/// The critical path of a run (or of one op's completion): binding
+/// dependency segments in time order, tiling `[start_ps, end_ps]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CriticalPath {
+    /// Path origin: the first segment's interval start (ps).
+    pub start_ps: u64,
+    /// Path end: the terminal span's end (ps).
+    pub end_ps: u64,
+    /// Segments in time order (first issue → terminal completion).
+    pub segments: Vec<Segment>,
+}
+
+impl CriticalPath {
+    /// Path duration (ps). Equal to the sum of every segment's
+    /// `wait_ps + service_ps` — the attribution identity the analysis
+    /// tests pin.
+    pub fn total_ps(&self) -> u64 {
+        self.end_ps.saturating_sub(self.start_ps)
+    }
+
+    fn aggregate<K: FnMut(&Segment) -> String>(&self, mut key: K) -> Vec<PathShare> {
+        let mut m: BTreeMap<String, PathShare> = BTreeMap::new();
+        for s in &self.segments {
+            let k = key(s);
+            let e = m.entry(k.clone()).or_insert_with(|| PathShare {
+                key: k,
+                service_ps: 0,
+                wait_ps: 0,
+                segments: 0,
+            });
+            e.service_ps += s.service_ps;
+            e.wait_ps += s.wait_ps;
+            e.segments += 1;
+        }
+        let mut v: Vec<PathShare> = m.into_values().collect();
+        // Largest share first; ties resolve by key for determinism.
+        v.sort_by(|a, b| {
+            b.total_ps()
+                .cmp(&a.total_ps())
+                .then_with(|| a.key.cmp(&b.key))
+        });
+        v
+    }
+
+    /// Attribution per stage, largest share first.
+    pub fn by_stage(&self) -> Vec<PathShare> {
+        self.aggregate(|s| s.stage.to_string())
+    }
+
+    /// Attribution per node, largest share first.
+    pub fn by_node(&self) -> Vec<PathShare> {
+        self.aggregate(|s| format!("node{}", s.node))
+    }
+
+    /// Attribution per op class (terminal stage), largest share first.
+    pub fn by_class(&self) -> Vec<PathShare> {
+        self.aggregate(|s| s.class.to_string())
+    }
+
+    /// The `k` individually largest segments — the top-k bottleneck
+    /// table. Ties resolve by `(from_ps, stage, node, op)`.
+    pub fn top_segments(&self, k: usize) -> Vec<Segment> {
+        let mut v = self.segments.clone();
+        v.sort_by(|a, b| {
+            b.total_ps().cmp(&a.total_ps()).then_with(|| {
+                (a.from_ps, a.stage, a.node, a.op).cmp(&(b.from_ps, b.stage, b.node, b.op))
+            })
+        });
+        v.truncate(k);
+        v
+    }
+
+    /// Per-mille share of the path held by `share` (0 when the path is
+    /// empty). Integer arithmetic, so byte-stable in exports.
+    pub fn share_permille(&self, share: &PathShare) -> u64 {
+        let total = self.total_ps();
+        if total == 0 {
+            0
+        } else {
+            share.total_ps().saturating_mul(1000) / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(stage: &'static str, node: u32, from: u64, to: u64, wait: u64) -> Segment {
+        Segment {
+            stage,
+            node,
+            op: 1,
+            class: "op:put",
+            from_ps: from,
+            to_ps: to,
+            wait_ps: wait,
+            service_ps: (to - from) - wait,
+        }
+    }
+
+    fn path() -> CriticalPath {
+        CriticalPath {
+            start_ps: 0,
+            end_ps: 100,
+            segments: vec![
+                seg("host", 0, 0, 10, 0),
+                seg("wire", 0, 10, 80, 20),
+                seg("rx", 1, 80, 100, 0),
+            ],
+        }
+    }
+
+    #[test]
+    fn attribution_sums_to_total() {
+        let p = path();
+        assert_eq!(p.total_ps(), 100);
+        let sum: u64 = p.by_stage().iter().map(|s| s.total_ps()).sum();
+        assert_eq!(sum, 100);
+        let sum: u64 = p.by_node().iter().map(|s| s.total_ps()).sum();
+        assert_eq!(sum, 100);
+        let sum: u64 = p.by_class().iter().map(|s| s.total_ps()).sum();
+        assert_eq!(sum, 100);
+    }
+
+    #[test]
+    fn shares_sort_largest_first_with_permille() {
+        let p = path();
+        let stages = p.by_stage();
+        assert_eq!(stages[0].key, "wire");
+        assert_eq!(p.share_permille(&stages[0]), 700);
+        assert_eq!(stages[0].wait_ps, 20);
+        let nodes = p.by_node();
+        assert_eq!(nodes[0].key, "node0");
+        assert_eq!(nodes[0].total_ps(), 80);
+    }
+
+    #[test]
+    fn top_segments_rank_by_contribution() {
+        let p = path();
+        let top = p.top_segments(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].stage, "wire");
+        assert!(top[0].total_ps() >= top[1].total_ps());
+        assert_eq!(p.top_segments(10).len(), 3);
+    }
+}

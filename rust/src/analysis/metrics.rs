@@ -1,0 +1,443 @@
+//! Machine-readable metrics export and the regression-diff guard.
+//!
+//! [`metrics_document`] renders one bench run as a canonical JSON
+//! document (`schema = fshmem-metrics-v1`): the bench's headline
+//! metrics, the critical-path breakdown, and the queueing decomposition.
+//! Rendering is **byte-stable**: times are exact fixed-point
+//! microseconds (like `chrome_trace` — never floats of picoseconds),
+//! floats use six fixed decimals, keys are sorted, and every analysis
+//! input is consumed through canonical views. Two runs of the same
+//! config on any engine backend produce identical bytes (pinned in
+//! `rust/tests/parallel.rs` and `rust/tests/analysis.rs`).
+//!
+//! [`diff_metrics`] compares two documents' `metrics` sections with a
+//! relative tolerance — the `fshmem metrics diff` CLI subcommand and the
+//! CI regression guard (`BENCH_BASELINE.json`) are thin wrappers over
+//! it. A metric moving beyond tolerance in *either* direction is flagged
+//! (a latency regressing, a speedup collapsing — or an improvement large
+//! enough that the baseline should be re-seeded).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use crate::sim::{SimTime, Telemetry};
+use crate::util::Json;
+
+use super::queueing::queueing;
+use super::SpanGraph;
+
+/// Schema identifier stamped into every metrics document.
+pub const METRICS_SCHEMA: &str = "fshmem-metrics-v1";
+
+/// How many top-k bottleneck segments the export keeps.
+const TOP_SEGMENTS: usize = 8;
+
+/// The what-if speedup factor the export models per stage.
+const WHAT_IF_SPEEDUP: u64 = 2;
+
+/// One headline metric value, rendered byte-stably.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricValue {
+    /// Dimensionless or unit-carrying float (speedups, MB/s, µs figures
+    /// already computed as floats); six fixed decimals.
+    F64(f64),
+    /// A simulated duration; exact fixed-point µs.
+    Us(SimTime),
+    /// An integer count.
+    Count(u64),
+}
+
+impl MetricValue {
+    /// Render as a JSON number literal. Non-finite floats (which a
+    /// deterministic bench never produces) render as 0.
+    pub fn render(&self) -> String {
+        match *self {
+            MetricValue::F64(v) if v.is_finite() => format!("{v:.6}"),
+            MetricValue::F64(_) => "0.000000".to_string(),
+            MetricValue::Us(t) => us(t.as_ps()),
+            MetricValue::Count(n) => n.to_string(),
+        }
+    }
+}
+
+/// Picoseconds as a fixed-point decimal-microsecond JSON number — the
+/// same byte-stable rendering `chrome_trace` uses.
+fn us(ps: u64) -> String {
+    format!("{}.{:06}", ps / 1_000_000, ps % 1_000_000)
+}
+
+/// `us` for the u128 accumulators (saturating; depth-time integrals can
+/// exceed u64 only on absurdly long runs).
+fn us128(ps: u128) -> String {
+    us(ps.min(u64::MAX as u128) as u64)
+}
+
+/// Minimal JSON string escape for keys and labels we control.
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render one bench run as the canonical metrics document.
+///
+/// `metrics` is the bench's headline `(name, value)` list (sorted and
+/// de-duplicated here). `tel` adds the analysis sections: queueing
+/// needs the `counters` telemetry level, the critical path needs
+/// `spans`; absent data simply omits its section.
+pub fn metrics_document(
+    bench: &str,
+    fast: bool,
+    metrics: &[(String, MetricValue)],
+    tel: Option<(&Telemetry, SimTime)>,
+) -> String {
+    let mut named: Vec<(String, MetricValue)> = metrics.to_vec();
+    named.sort_by(|a, b| a.0.cmp(&b.0));
+    named.dedup_by(|a, b| a.0 == b.0);
+
+    let mut out = String::from("{\n");
+    let _ = writeln!(out, "  \"schema\": \"{METRICS_SCHEMA}\",");
+    let _ = writeln!(out, "  \"bench\": \"{}\",", esc(bench));
+    let _ = writeln!(out, "  \"fast\": {fast},");
+    out.push_str("  \"metrics\": {");
+    for (i, (k, v)) in named.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\n    \"{}\": {}", esc(k), v.render());
+    }
+    if named.is_empty() {
+        out.push('}');
+    } else {
+        out.push_str("\n  }");
+    }
+
+    if let Some((t, end)) = tel {
+        let spans = t.sorted_spans();
+        let unfinished = spans.iter().filter(|s| s.label == "unfinished").count();
+        out.push_str(",\n  \"spans\": {");
+        let _ = write!(
+            out,
+            "\"recorded\": {}, \"unfinished\": {unfinished}}}",
+            spans.len()
+        );
+
+        let q = queueing(t, end);
+        out.push_str(",\n  \"queueing\": [");
+        for (i, s) in q.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\n    {{\"stage\": \"{}\", \"spans\": {}, \"service_us\": {}, \
+                 \"queued_depth_us\": {}, \"wait_share_permille\": {}}}",
+                esc(s.stage),
+                s.spans,
+                us128(s.service_ps),
+                us128(s.queued_ps),
+                s.wait_share_permille
+            );
+        }
+        out.push_str(if q.is_empty() { "]" } else { "\n  ]" });
+
+        let graph = SpanGraph::build(t);
+        if let Some(cp) = graph.critical_path() {
+            out.push_str(",\n  \"critical_path\": {\n");
+            let _ = writeln!(out, "    \"start_us\": {},", us(cp.start_ps));
+            let _ = writeln!(out, "    \"end_us\": {},", us(cp.end_ps));
+            let _ = writeln!(out, "    \"total_us\": {},", us(cp.total_ps()));
+            for (name, shares) in [
+                ("stages", cp.by_stage()),
+                ("nodes", cp.by_node()),
+                ("classes", cp.by_class()),
+            ] {
+                let _ = write!(out, "    \"{name}\": [");
+                for (i, sh) in shares.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(
+                        out,
+                        "\n      {{\"key\": \"{}\", \"service_us\": {}, \"wait_us\": {}, \
+                         \"segments\": {}, \"share_permille\": {}}}",
+                        esc(&sh.key),
+                        us(sh.service_ps),
+                        us(sh.wait_ps),
+                        sh.segments,
+                        cp.share_permille(sh)
+                    );
+                }
+                out.push_str(if shares.is_empty() { "],\n" } else { "\n    ],\n" });
+            }
+            out.push_str("    \"top_segments\": [");
+            let top = cp.top_segments(TOP_SEGMENTS);
+            for (i, s) in top.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(
+                    out,
+                    "\n      {{\"stage\": \"{}\", \"node\": {}, \"op\": {}, \"class\": \"{}\", \
+                     \"from_us\": {}, \"to_us\": {}, \"wait_us\": {}, \"service_us\": {}}}",
+                    esc(s.stage),
+                    s.node,
+                    s.op,
+                    esc(s.class),
+                    us(s.from_ps),
+                    us(s.to_ps),
+                    us(s.wait_ps),
+                    us(s.service_ps)
+                );
+            }
+            out.push_str(if top.is_empty() { "],\n" } else { "\n    ],\n" });
+            let baseline = graph.what_if("", 1);
+            let _ = write!(
+                out,
+                "    \"what_if\": {{\"baseline_us\": {}, \"speedup\": {WHAT_IF_SPEEDUP}, \
+                 \"stages\": [",
+                us(baseline)
+            );
+            let rows = graph.what_if_table(&cp, WHAT_IF_SPEEDUP);
+            for (i, r) in rows.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(
+                    out,
+                    "\n      {{\"key\": \"{}\", \"makespan_us\": {}}}",
+                    esc(&r.stage),
+                    us(r.makespan_ps)
+                );
+            }
+            out.push_str(if rows.is_empty() { "]}\n" } else { "\n    ]}\n" });
+            out.push_str("  }");
+        }
+    }
+    out.push_str("\n}\n");
+    out
+}
+
+/// One compared metric in a [`MetricsDiff`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricDelta {
+    /// Metric name.
+    pub name: String,
+    /// Value in the old (baseline) document.
+    pub old: f64,
+    /// Value in the new document.
+    pub new: f64,
+    /// Relative delta in percent (`(new - old) / |old| * 100`; a change
+    /// from exactly 0 counts as ±100%).
+    pub delta_pct: f64,
+    /// True when `|delta_pct|` exceeds the tolerance.
+    pub regressed: bool,
+}
+
+/// Result of diffing two metrics documents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsDiff {
+    /// Metrics present in both documents, in name order.
+    pub compared: Vec<MetricDelta>,
+    /// Metric names only in the old document.
+    pub only_old: Vec<String>,
+    /// Metric names only in the new document.
+    pub only_new: Vec<String>,
+    /// The relative tolerance applied (percent).
+    pub tol_pct: f64,
+}
+
+impl MetricsDiff {
+    /// Number of metrics beyond tolerance.
+    pub fn regressions(&self) -> usize {
+        self.compared.iter().filter(|d| d.regressed).count()
+    }
+
+    /// True when the diff passes as a regression guard: at least one
+    /// metric was comparable and none moved beyond tolerance.
+    pub fn ok(&self) -> bool {
+        !self.compared.is_empty() && self.regressions() == 0
+    }
+
+    /// Human-readable report, one line per metric.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "metrics diff (tolerance ±{:.1}%): {} compared, {} beyond tolerance\n",
+            self.tol_pct,
+            self.compared.len(),
+            self.regressions()
+        );
+        for d in &self.compared {
+            let _ = writeln!(
+                out,
+                "  {} {}: {:.6} -> {:.6} ({:+.2}%)",
+                if d.regressed { "FAIL" } else { "  ok" },
+                d.name,
+                d.old,
+                d.new,
+                d.delta_pct
+            );
+        }
+        for n in &self.only_old {
+            let _ = writeln!(out, "  note: '{n}' only in old document");
+        }
+        for n in &self.only_new {
+            let _ = writeln!(out, "  note: '{n}' only in new document");
+        }
+        if self.compared.is_empty() {
+            out.push_str("  FAIL: no comparable metrics between the documents\n");
+        }
+        out
+    }
+}
+
+/// Extract the `metrics` object of a parsed document as `name -> f64`.
+fn metric_map(doc: &Json) -> Result<BTreeMap<String, f64>> {
+    let Some(obj) = doc.req("metrics")?.as_obj() else {
+        bail!("'metrics' is not an object");
+    };
+    let mut m = BTreeMap::new();
+    for (k, v) in obj {
+        let Some(x) = v.as_f64() else {
+            bail!("metric '{k}' is not a number");
+        };
+        m.insert(k.clone(), x);
+    }
+    Ok(m)
+}
+
+/// Diff two parsed metrics documents with a relative tolerance (in
+/// percent). See [`MetricsDiff::ok`] for the guard condition.
+pub fn diff_metrics(old: &Json, new: &Json, tol_pct: f64) -> Result<MetricsDiff> {
+    let old_m = metric_map(old)?;
+    let new_m = metric_map(new)?;
+    let mut compared = Vec::new();
+    let mut only_old = Vec::new();
+    for (name, &o) in &old_m {
+        match new_m.get(name) {
+            Some(&n) => {
+                let delta_pct = if o == 0.0 {
+                    if n == 0.0 {
+                        0.0
+                    } else {
+                        100.0 * n.signum()
+                    }
+                } else {
+                    (n - o) / o.abs() * 100.0
+                };
+                compared.push(MetricDelta {
+                    name: name.clone(),
+                    old: o,
+                    new: n,
+                    delta_pct,
+                    regressed: delta_pct.abs() > tol_pct,
+                });
+            }
+            None => only_old.push(name.clone()),
+        }
+    }
+    let only_new = new_m
+        .keys()
+        .filter(|k| !old_m.contains_key(*k))
+        .cloned()
+        .collect();
+    Ok(MetricsDiff {
+        compared,
+        only_old,
+        only_new,
+        tol_pct,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Span, TelemetryLevel};
+
+    #[test]
+    fn metric_values_render_byte_stably() {
+        assert_eq!(MetricValue::F64(0.35).render(), "0.350000");
+        assert_eq!(MetricValue::F64(f64::NAN).render(), "0.000000");
+        assert_eq!(MetricValue::Us(SimTime(1_234_567)).render(), "1.234567");
+        assert_eq!(MetricValue::Count(42).render(), "42");
+    }
+
+    fn doc_with_telemetry() -> String {
+        let mut t = Telemetry::default();
+        t.set_level(TelemetryLevel::Spans);
+        t.span(Span::new("host", 0, 7, SimTime(0), SimTime(10)));
+        t.span(Span::new("wire", 0, 7, SimTime(10), SimTime(80)));
+        t.span(Span::new("op:put", 0, 7, SimTime(0), SimTime(100)));
+        metrics_document(
+            "unit",
+            true,
+            &[
+                ("b_metric".into(), MetricValue::F64(2.0)),
+                ("a_metric".into(), MetricValue::Count(3)),
+            ],
+            Some((&t, SimTime(100))),
+        )
+    }
+
+    #[test]
+    fn document_parses_and_has_sections() {
+        let text = doc_with_telemetry();
+        let doc = Json::parse(&text).expect("canonical document parses");
+        assert_eq!(doc.req("schema").unwrap().as_str(), Some(METRICS_SCHEMA));
+        assert_eq!(doc.req("bench").unwrap().as_str(), Some("unit"));
+        let m = doc.req("metrics").unwrap().as_obj().unwrap();
+        assert_eq!(m["a_metric"].as_f64(), Some(3.0));
+        let cp = doc.req("critical_path").unwrap();
+        assert!(cp.req("total_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!cp.req("stages").unwrap().as_arr().unwrap().is_empty());
+        assert!(doc.req("queueing").unwrap().as_arr().is_some());
+        // Identical inputs render identical bytes.
+        assert_eq!(text, doc_with_telemetry());
+    }
+
+    #[test]
+    fn document_without_telemetry_omits_analysis() {
+        let peak = [("peak".into(), MetricValue::F64(3813.0))];
+        let text = metrics_document("bw", false, &peak, None);
+        let doc = Json::parse(&text).unwrap();
+        assert!(doc.get("critical_path").is_none());
+        assert!(doc.get("spans").is_none());
+        assert_eq!(
+            doc.req("metrics").unwrap().as_obj().unwrap()["peak"].as_f64(),
+            Some(3813.0)
+        );
+    }
+
+    #[test]
+    fn diff_flags_only_out_of_tolerance_moves() {
+        let old = Json::parse(
+            "{\"metrics\": {\"lat_us\": 0.35, \"peak\": 3813.0, \"gone\": 1.0}}",
+        )
+        .unwrap();
+        let new = Json::parse(
+            "{\"metrics\": {\"lat_us\": 0.36, \"peak\": 3000.0, \"fresh\": 2.0}}",
+        )
+        .unwrap();
+        let d = diff_metrics(&old, &new, 5.0).unwrap();
+        assert_eq!(d.compared.len(), 2);
+        assert_eq!(d.regressions(), 1, "peak fell 21%, lat moved < 3%");
+        assert!(!d.ok());
+        assert_eq!(d.only_old, vec!["gone".to_string()]);
+        assert_eq!(d.only_new, vec!["fresh".to_string()]);
+        let report = d.render();
+        assert!(report.contains("FAIL peak"), "{report}");
+        assert!(report.contains("  ok lat_us"), "{report}");
+
+        let lenient = diff_metrics(&old, &new, 50.0).unwrap();
+        assert!(lenient.ok());
+    }
+
+    #[test]
+    fn diff_with_no_overlap_fails_the_guard() {
+        let old = Json::parse("{\"metrics\": {\"a\": 1.0}}").unwrap();
+        let new = Json::parse("{\"metrics\": {\"b\": 1.0}}").unwrap();
+        let d = diff_metrics(&old, &new, 5.0).unwrap();
+        assert!(!d.ok());
+        assert!(d.render().contains("no comparable metrics"));
+    }
+}

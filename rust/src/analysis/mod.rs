@@ -1,0 +1,459 @@
+//! Performance introspection over recorded telemetry: the causal span
+//! graph, critical-path extraction ([`critical_path`]), queueing
+//! decomposition ([`queueing`]), and machine-readable metrics export
+//! ([`metrics`]).
+//!
+//! Everything in this module is a **pure function of recorded spans and
+//! gauges** — it schedules nothing, reads no clocks, and never touches
+//! the model — so it inherits the engine determinism ladder verbatim:
+//! sharded runs (`shards = off | auto | N`) produce bit-identical
+//! analyses, and threaded runs (`engine_threads`) produce byte-identical
+//! analyses because every input is consumed through the canonical
+//! sorted-span view ([`crate::sim::Telemetry::sorted_spans`]). Both
+//! claims are pinned in the equivalence suites (`rust/tests/sharded.rs`,
+//! `rust/tests/parallel.rs`).
+//!
+//! # The causal span graph
+//!
+//! A run's spans form a DAG. Nodes are the recorded spans; edges point
+//! from cause to effect and are reconstructed from three relations that
+//! are implicit in the span fields:
+//!
+//! * **Lifecycle** — spans sharing an op token (`Span::op`) chain in
+//!   completion order: `credit_wait → host → tx → wire → rx → op:* →
+//!   host_wake`. This is the op's own pipeline, including the
+//!   credit-release dependency recorded by the `credit_wait` span
+//!   (`program/issue.rs`'s `CreditPool` back-pressure).
+//! * **Resource** — consecutive spans of one `(node, stage)` pair
+//!   serialize: a span whose start is at or after a predecessor's end on
+//!   the same stage queue was (potentially) held back by it. This is
+//!   where FIFO queueing becomes visible on the path.
+//! * **Wake** — a `host`/`credit_wait` span is preceded by the latest
+//!   completion-like span on the same node (`host_wake`, an `op:*`
+//!   terminal, or an `rx` delivery). This encodes program order across
+//!   ops: "the rank observed a completion or a signal-AM delivery, then
+//!   issued its next command". Collectives' and the task-graph
+//!   executor's signal AMs are ordinary AM ops, so their `rx` spans on
+//!   the waiting rank's node carry the cross-rank dependency edge.
+//!
+//! Every edge goes strictly backwards in the topological order
+//! `(t1, t0, canonical index)`, so the graph is acyclic by construction
+//! and a single forward pass suffices for what-if re-simulation.
+//!
+//! The *binding* predecessor of a span — the dependency that actually
+//! gated it — is the candidate with the latest end time. Walking binding
+//! predecessors from the last completion back to the first host issue
+//! yields the critical path; see [`critical_path::CriticalPath`].
+
+pub mod critical_path;
+pub mod metrics;
+pub mod queueing;
+
+pub use critical_path::{CriticalPath, PathShare, Segment, WhatIf};
+pub use metrics::{
+    diff_metrics, metrics_document, MetricDelta, MetricValue, MetricsDiff,
+};
+pub use queueing::{queueing, StageQueueing};
+
+use std::collections::BTreeMap;
+
+use crate::sim::{Span, Telemetry};
+
+/// How a causal edge between two spans was inferred.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Same op token: one operation's pipeline stages.
+    Lifecycle,
+    /// Same `(node, stage)` queue: FIFO serialization.
+    Resource,
+    /// Completion/delivery observed on the node before the next host
+    /// issue: program order across ops (op waits, signal AMs, credit
+    /// releases).
+    Wake,
+}
+
+/// The causal DAG over one run's recorded spans (see module docs).
+///
+/// Built from [`Telemetry::sorted_spans`], so two telemetries with the
+/// same canonical span set produce identical graphs — regardless of
+/// which engine backend recorded them.
+#[derive(Debug, Clone)]
+pub struct SpanGraph {
+    /// Spans in topological order `(t1, t0, canonical index)`.
+    spans: Vec<Span>,
+    /// Candidate predecessor edges per span (indices into `spans`; every
+    /// predecessor index is strictly smaller than the span's own).
+    edges: Vec<Vec<(usize, EdgeKind)>>,
+    /// The binding predecessor per span: the candidate with the latest
+    /// end time (ties resolved toward the later topological index).
+    binding: Vec<Option<usize>>,
+}
+
+impl SpanGraph {
+    /// Build the causal graph from `t`'s recorded spans. Requires the
+    /// `spans` telemetry level — at lower levels the graph is empty.
+    pub fn build(t: &Telemetry) -> SpanGraph {
+        let canon = t.sorted_spans();
+        let mut order: Vec<usize> = (0..canon.len()).collect();
+        order.sort_by_key(|&i| (canon[i].t1, canon[i].t0, i));
+        let spans: Vec<Span> = order.into_iter().map(|i| canon[i]).collect();
+
+        let mut edges: Vec<Vec<(usize, EdgeKind)>> = vec![Vec::new(); spans.len()];
+        let mut binding: Vec<Option<usize>> = vec![None; spans.len()];
+        // Lookup state, all keyed deterministically. Each index list is
+        // pushed in topological order, so end times are nondecreasing
+        // within a list and `partition_point` finds the latest
+        // predecessor ending at or before a bound.
+        let mut last_of_op: BTreeMap<u32, usize> = BTreeMap::new();
+        let mut queues: BTreeMap<(&'static str, u32), Vec<usize>> = BTreeMap::new();
+        let mut wakes: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+
+        for i in 0..spans.len() {
+            let s = spans[i];
+            if s.op != 0 {
+                if let Some(&p) = last_of_op.get(&s.op) {
+                    edges[i].push((p, EdgeKind::Lifecycle));
+                }
+                last_of_op.insert(s.op, i);
+            }
+            if let Some(v) = queues.get(&(s.stage, s.node)) {
+                let k = v.partition_point(|&j| spans[j].t1 <= s.t0);
+                if k > 0 {
+                    edges[i].push((v[k - 1], EdgeKind::Resource));
+                }
+            }
+            if s.stage == "host" || s.stage == "credit_wait" {
+                if let Some(v) = wakes.get(&s.node) {
+                    let k = v.partition_point(|&j| spans[j].t1 <= s.t0);
+                    if k > 0 {
+                        edges[i].push((v[k - 1], EdgeKind::Wake));
+                    }
+                }
+            }
+            queues.entry((s.stage, s.node)).or_default().push(i);
+            if s.stage == "host_wake" || s.stage == "rx" || s.stage.starts_with("op:") {
+                wakes.entry(s.node).or_default().push(i);
+            }
+            binding[i] = edges[i]
+                .iter()
+                .max_by_key(|&&(p, _)| (spans[p].t1, p))
+                .map(|&(p, _)| p);
+        }
+        SpanGraph {
+            spans,
+            edges,
+            binding,
+        }
+    }
+
+    /// Number of spans in the graph.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when the run recorded no spans (telemetry below `spans`).
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// The spans in topological order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Map each op token to the stage name of its terminal span
+    /// (`op:put`, `op:get`, ...) — the op-class attribution key.
+    pub fn op_classes(&self) -> BTreeMap<u32, &'static str> {
+        let mut m = BTreeMap::new();
+        for s in &self.spans {
+            if s.stage.starts_with("op:") {
+                m.insert(s.op, s.stage);
+            }
+        }
+        m
+    }
+
+    /// The critical path ending at the last-finishing span: the chain of
+    /// binding dependencies from the run's makespan end back to its
+    /// first unforced span. `None` when no spans were recorded.
+    pub fn critical_path(&self) -> Option<CriticalPath> {
+        if self.spans.is_empty() {
+            return None;
+        }
+        Some(self.walk(self.spans.len() - 1))
+    }
+
+    /// The critical path ending at op `op`'s terminal (`op:*`) span —
+    /// the causal history of one operation's completion. `None` when the
+    /// op has no terminal span.
+    pub fn critical_path_to_op(&self, op: u32) -> Option<CriticalPath> {
+        let end = self
+            .spans
+            .iter()
+            .rposition(|s| s.op == op && s.stage.starts_with("op:"))?;
+        Some(self.walk(end))
+    }
+
+    /// Walk binding predecessors from `end`, attributing each covered
+    /// interval to its span's stage (see [`critical_path`] docs for the
+    /// wait/service split).
+    fn walk(&self, end: usize) -> CriticalPath {
+        let classes = self.op_classes();
+        let class_of = |op: u32| -> &'static str {
+            if op == 0 {
+                "-"
+            } else {
+                classes.get(&op).copied().unwrap_or("-")
+            }
+        };
+        let mut segments = Vec::new();
+        let mut cur = end;
+        loop {
+            let s = self.spans[cur];
+            match self.binding[cur] {
+                Some(p) => {
+                    // The binding predecessor ends no later than this
+                    // span (topological order), so the covered interval
+                    // [pred end, s.t1] telescopes exactly.
+                    let lo = self.spans[p].t1.min(s.t1);
+                    let svc_start = s.t0.clamp(lo, s.t1);
+                    segments.push(Segment {
+                        stage: s.stage,
+                        node: s.node,
+                        op: s.op,
+                        class: class_of(s.op),
+                        from_ps: lo,
+                        to_ps: s.t1,
+                        wait_ps: svc_start - lo,
+                        service_ps: s.t1 - svc_start,
+                    });
+                    cur = p;
+                }
+                None => {
+                    segments.push(Segment {
+                        stage: s.stage,
+                        node: s.node,
+                        op: s.op,
+                        class: class_of(s.op),
+                        from_ps: s.t0,
+                        to_ps: s.t1,
+                        wait_ps: 0,
+                        service_ps: s.t1.saturating_sub(s.t0),
+                    });
+                    break;
+                }
+            }
+        }
+        segments.reverse();
+        CriticalPath {
+            start_ps: segments.first().map_or(0, |s| s.from_ps),
+            end_ps: segments.last().map_or(0, |s| s.to_ps),
+            segments,
+        }
+    }
+
+    /// Re-simulate the DAG with every span of `stage` sped up `k`×:
+    /// a forward pass where each span finishes at
+    /// `max(predecessor finishes, anchored start) + scaled duration`.
+    /// Spans without predecessors keep their original start (external
+    /// arrivals); everything else launches as soon as its dependencies
+    /// allow (work-conserving). Returns the modeled makespan in ps.
+    ///
+    /// `k = 1` yields the model's *baseline* makespan — compare scaled
+    /// runs against that, not against the measured makespan, since the
+    /// model drops think-time gaps the edge relations cannot see.
+    pub fn what_if(&self, stage: &str, k: u64) -> u64 {
+        let k = k.max(1);
+        let mut finish = vec![0u64; self.spans.len()];
+        let mut min_start = u64::MAX;
+        let mut max_finish = 0u64;
+        for (i, s) in self.spans.iter().enumerate() {
+            let mut dur = s.t1.saturating_sub(s.t0);
+            if s.stage == stage {
+                dur /= k;
+            }
+            let base = if self.edges[i].is_empty() {
+                min_start = min_start.min(s.t0);
+                s.t0
+            } else {
+                self.edges[i]
+                    .iter()
+                    .map(|&(p, _)| finish[p])
+                    .max()
+                    .unwrap_or(0)
+            };
+            finish[i] = base + dur;
+            max_finish = max_finish.max(finish[i]);
+        }
+        if min_start == u64::MAX {
+            min_start = 0;
+        }
+        max_finish.saturating_sub(min_start)
+    }
+
+    /// [`SpanGraph::what_if`] for every stage on `path`, each sped up
+    /// `k`×, sorted by modeled makespan (best first, ties by stage
+    /// name). Pair with `what_if(stage, 1)` (any stage) as the baseline.
+    pub fn what_if_table(&self, path: &CriticalPath, k: u64) -> Vec<WhatIf> {
+        let mut rows: Vec<WhatIf> = path
+            .by_stage()
+            .iter()
+            .map(|share| WhatIf {
+                stage: share.key.clone(),
+                speedup: k,
+                makespan_ps: self.what_if(&share.key, k),
+            })
+            .collect();
+        rows.sort_by(|a, b| {
+            a.makespan_ps
+                .cmp(&b.makespan_ps)
+                .then_with(|| a.stage.cmp(&b.stage))
+        });
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{SimTime, TelemetryLevel};
+
+    fn t(spans: &[Span]) -> Telemetry {
+        let mut tel = Telemetry::default();
+        tel.set_level(TelemetryLevel::Spans);
+        for &s in spans {
+            tel.span(s);
+        }
+        tel
+    }
+
+    fn span(stage: &'static str, node: u32, op: u32, t0: u64, t1: u64) -> Span {
+        Span::new(stage, node, op, SimTime(t0), SimTime(t1))
+    }
+
+    #[test]
+    fn empty_telemetry_has_no_path() {
+        let g = SpanGraph::build(&Telemetry::default());
+        assert!(g.is_empty());
+        assert!(g.critical_path().is_none());
+    }
+
+    #[test]
+    fn single_op_pipeline_chains_and_telescopes() {
+        let tel = t(&[
+            span("host", 0, 7, 0, 10),
+            span("tx", 0, 7, 10, 30),
+            span("wire", 0, 7, 30, 80),
+            span("rx", 1, 7, 80, 95),
+            span("op:put", 0, 7, 0, 120),
+        ]);
+        let g = SpanGraph::build(&tel);
+        let cp = g.critical_path().unwrap();
+        assert_eq!(cp.start_ps, 0);
+        assert_eq!(cp.end_ps, 120);
+        assert_eq!(cp.total_ps(), 120);
+        // Attribution telescopes exactly to the path total.
+        let sum: u64 = cp.segments.iter().map(|s| s.wait_ps + s.service_ps).sum();
+        assert_eq!(sum, cp.total_ps());
+        // Every lifecycle stage appears on the path.
+        let stages: Vec<&str> = cp.segments.iter().map(|s| s.stage).collect();
+        assert_eq!(stages, ["host", "tx", "wire", "rx", "op:put"]);
+        // The ack return leg [95, 120] lands on the terminal span.
+        assert_eq!(cp.segments.last().unwrap().service_ps, 25);
+    }
+
+    #[test]
+    fn resource_edges_capture_queueing_as_wait() {
+        // Two ops serialize on node 0's tx queue: op 9's tx span starts
+        // exactly when op 7's ends, so its queueing delay shows as wait.
+        let tel = t(&[
+            span("host", 0, 7, 0, 5),
+            span("host", 0, 9, 5, 8),
+            span("tx", 0, 7, 8, 50),
+            span("tx", 0, 9, 50, 90),
+            span("op:put", 0, 7, 0, 60),
+            span("op:put", 0, 9, 5, 100),
+        ]);
+        let g = SpanGraph::build(&tel);
+        let cp = g.critical_path().unwrap();
+        assert_eq!(cp.end_ps, 100);
+        let tx9 = cp
+            .segments
+            .iter()
+            .find(|s| s.stage == "tx" && s.op == 9)
+            .expect("op 9's tx span is on the path");
+        // Covered from op 7's tx end (50) with t0 == 50: pure service.
+        assert_eq!(tx9.from_ps, 50);
+        assert_eq!(tx9.wait_ps + tx9.service_ps, 40);
+    }
+
+    #[test]
+    fn wake_edges_link_program_order_across_ops() {
+        // host issue of op 9 at t=70 follows op 7's host_wake end t=65.
+        let tel = t(&[
+            span("host", 0, 7, 0, 5),
+            span("op:put", 0, 7, 0, 60),
+            span("host_wake", 0, 7, 60, 65),
+            span("host", 0, 9, 70, 75),
+            span("op:put", 0, 9, 70, 130),
+        ]);
+        let g = SpanGraph::build(&tel);
+        let cp = g.critical_path().unwrap();
+        let stages: Vec<&str> = cp.segments.iter().map(|s| s.stage).collect();
+        assert!(
+            stages.contains(&"host_wake"),
+            "wake edge must pull op 7's completion onto the path: {stages:?}"
+        );
+        assert_eq!(cp.start_ps, 0);
+        assert_eq!(cp.end_ps, 130);
+    }
+
+    #[test]
+    fn per_op_path_ends_at_that_op() {
+        let tel = t(&[
+            span("host", 0, 7, 0, 5),
+            span("op:put", 0, 7, 0, 60),
+            span("host", 0, 9, 61, 66),
+            span("op:put", 0, 9, 61, 200),
+        ]);
+        let g = SpanGraph::build(&tel);
+        let cp = g.critical_path_to_op(7).unwrap();
+        assert_eq!(cp.end_ps, 60);
+        assert!(g.critical_path_to_op(1234).is_none());
+    }
+
+    #[test]
+    fn what_if_scales_only_the_chosen_stage() {
+        let tel = t(&[
+            span("host", 0, 7, 0, 10),
+            span("wire", 0, 7, 10, 110),
+            span("op:put", 0, 7, 0, 120),
+        ]);
+        let g = SpanGraph::build(&tel);
+        let base = g.what_if("none-such", 1);
+        let faster = g.what_if("wire", 2);
+        assert!(faster < base, "wire 2x must shrink the modeled makespan");
+        let cp = g.critical_path().unwrap();
+        let rows = g.what_if_table(&cp, 2);
+        assert!(rows.iter().any(|r| r.stage == "wire"));
+        assert!(rows.windows(2).all(|w| w[0].makespan_ps <= w[1].makespan_ps));
+    }
+
+    #[test]
+    fn graph_is_identical_for_permuted_append_orders() {
+        let a = t(&[
+            span("host", 0, 7, 0, 10),
+            span("tx", 0, 7, 10, 30),
+            span("op:put", 0, 7, 0, 50),
+        ]);
+        let b = t(&[
+            span("op:put", 0, 7, 0, 50),
+            span("host", 0, 7, 0, 10),
+            span("tx", 0, 7, 10, 30),
+        ]);
+        let ga = SpanGraph::build(&a);
+        let gb = SpanGraph::build(&b);
+        assert_eq!(format!("{:?}", ga.critical_path()), format!("{:?}", gb.critical_path()));
+        assert_eq!(ga.spans(), gb.spans());
+    }
+}

@@ -1,0 +1,115 @@
+//! Queueing decomposition: per-stage wait vs. service from the
+//! occupancy gauges and duration histograms PR 7 already records.
+//!
+//! For every stage with a duration histogram, **service** is the total
+//! executing time (the histogram's sum) and **queued** is the
+//! depth-time integral of the stage's feeder queues (`tx` ← `tx_fifo`,
+//! `rx` ← `rx_asm` + `handler_q`, `dla` ← `dla_q`) through the run end.
+//! The wait share `queued / (queued + service)` turns saturation into a
+//! number: an overloaded stage shows a growing queueing share, not just
+//! longer spans. Works at the `counters` telemetry level — no retained
+//! spans required.
+
+use crate::sim::{SimTime, Telemetry};
+
+/// Per-stage wait-vs-service split.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageQueueing {
+    /// Stage name (duration-histogram key).
+    pub stage: &'static str,
+    /// Spans recorded for the stage.
+    pub spans: u64,
+    /// Total executing time (ps): the duration histogram's sum.
+    pub service_ps: u128,
+    /// Queue-resident item-time (depth · ps) of the stage's feeder
+    /// gauges through the run end; 0 for stages without a queue gauge.
+    pub queued_ps: u128,
+    /// `queued / (queued + service)` in per-mille (integer arithmetic,
+    /// byte-stable in exports). 0 when the stage never queued.
+    pub wait_share_permille: u32,
+}
+
+/// Gauges feeding each pipeline stage.
+fn feeder_gauges(stage: &str) -> &'static [&'static str] {
+    match stage {
+        "tx" => &["tx_fifo"],
+        "rx" => &["rx_asm", "handler_q"],
+        "dla" => &["dla_q"],
+        _ => &[],
+    }
+}
+
+/// Decompose every recorded stage into wait vs. service, measured
+/// through `end`. Ordered by the stage key (deterministic).
+pub fn queueing(t: &Telemetry, end: SimTime) -> Vec<StageQueueing> {
+    t.durations()
+        .iter()
+        .map(|(&stage, h)| {
+            let service_ps = h.total_ps();
+            let queued_ps: u128 = t
+                .gauges()
+                .iter()
+                .filter(|((g, _node), _)| feeder_gauges(stage).contains(g))
+                .map(|(_, g)| g.area_until(end).max(0) as u128)
+                .sum();
+            let denom = queued_ps + service_ps;
+            StageQueueing {
+                stage,
+                spans: h.count(),
+                service_ps,
+                queued_ps,
+                wait_share_permille: if denom == 0 {
+                    0
+                } else {
+                    (queued_ps * 1000 / denom) as u32
+                },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Span, TelemetryLevel};
+
+    #[test]
+    fn service_without_gauges_has_zero_wait_share() {
+        let mut t = Telemetry::default();
+        t.set_level(TelemetryLevel::Counters);
+        t.span(Span::new("host", 0, 1, SimTime(0), SimTime(100)));
+        let q = queueing(&t, SimTime(100));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].stage, "host");
+        assert_eq!(q[0].service_ps, 100);
+        assert_eq!(q[0].queued_ps, 0);
+        assert_eq!(q[0].wait_share_permille, 0);
+    }
+
+    #[test]
+    fn feeder_gauge_area_becomes_queueing_share() {
+        let mut t = Telemetry::default();
+        t.set_level(TelemetryLevel::Counters);
+        // 100 ps of tx service; one entry queued at depth 1 for 300 ps.
+        t.span(Span::new("tx", 0, 1, SimTime(0), SimTime(100)));
+        t.gauge("tx_fifo", 0, SimTime(0), 1);
+        t.gauge("tx_fifo", 0, SimTime(300), -1);
+        let q = queueing(&t, SimTime(400));
+        let tx = q.iter().find(|s| s.stage == "tx").unwrap();
+        assert_eq!(tx.queued_ps, 300);
+        assert_eq!(tx.service_ps, 100);
+        assert_eq!(tx.wait_share_permille, 750, "300 / (300 + 100)");
+    }
+
+    #[test]
+    fn counters_level_is_sufficient() {
+        let mut t = Telemetry::default();
+        t.set_level(TelemetryLevel::Counters);
+        t.span(Span::new("rx", 2, 9, SimTime(10), SimTime(20)));
+        t.gauge("handler_q", 2, SimTime(10), 1);
+        t.gauge("handler_q", 2, SimTime(15), -1);
+        assert!(t.spans().is_empty());
+        let q = queueing(&t, SimTime(20));
+        assert_eq!(q[0].queued_ps, 5);
+    }
+}

@@ -399,6 +399,18 @@ impl Fshmem {
         end
     }
 
+    /// Close the terminal spans of ops that never completed (dropped by
+    /// ARQ exhaustion or failed validation) at the current simulated
+    /// time, labeled `unfinished`, so span counts reconcile with the
+    /// issued-op counters. Call at the true end of a run — after a final
+    /// [`Fshmem::run_all`] — not mid-program: an op that is merely
+    /// incomplete *now* (say a barrier other ranks have yet to enter)
+    /// would be closed even though later commands could still complete
+    /// it. Each op is closed at most once. Returns how many were closed.
+    pub fn close_unfinished_ops(&mut self) -> usize {
+        self.core.close_unfinished_ops()
+    }
+
     // ---- introspection ----------------------------------------------------
 
     /// Current simulated time (the engine's cursor; see `run_all`).

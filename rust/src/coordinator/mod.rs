@@ -4,6 +4,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::analysis::{metrics_document, MetricValue};
 use crate::api::Fshmem;
 use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::reports;
@@ -61,6 +62,13 @@ pub struct RunOptions {
     /// instrumented run here if set (`--trace-out <file>`); also bumps
     /// that run's telemetry level from `counters` to `spans`.
     pub trace_out: Option<String>,
+    /// Write the bench's canonical machine-readable metrics document
+    /// here if set (`--metrics-out <file>`): headline metrics plus the
+    /// critical-path breakdown, byte-stable for regression diffing with
+    /// `fshmem metrics diff`. Like `trace_out`, bumps the instrumented
+    /// run to `spans`. Applies per-bench; `bench all` ignores it (each
+    /// child bench would overwrite the file).
+    pub metrics_out: Option<String>,
 }
 
 impl Default for RunOptions {
@@ -73,15 +81,17 @@ impl Default for RunOptions {
             shards: ShardSpec::Off,
             engine_threads: ThreadSpec::Off,
             trace_out: None,
+            metrics_out: None,
         }
     }
 }
 
 /// Telemetry level of a bench's instrumented run: span-retaining when a
-/// trace file was requested, aggregate-only otherwise (the stage tables
+/// trace file or metrics document was requested (the critical-path
+/// analysis consumes spans), aggregate-only otherwise (the stage tables
 /// need only histograms/gauge integrals, at bounded memory).
 fn bench_telemetry(opts: &RunOptions) -> TelemetryLevel {
-    if opts.trace_out.is_some() {
+    if opts.trace_out.is_some() || opts.metrics_out.is_some() {
         TelemetryLevel::Spans
     } else {
         TelemetryLevel::Counters
@@ -98,10 +108,31 @@ fn emit_telemetry(
     end: SimTime,
 ) -> Result<()> {
     out.push_str(&reports::stage_tables(t, end));
+    out.push_str(&reports::critical_path(t, end));
     if let Some(path) = &opts.trace_out {
         std::fs::write(path, chrome_trace(t, sharding))?;
         out.push_str(&format!(
             "\nwrote Chrome trace to {path} (open at https://ui.perfetto.dev)\n"
+        ));
+    }
+    Ok(())
+}
+
+/// Write the bench's canonical metrics document to `--metrics-out`, if
+/// requested, and note the path in the report. `tel` feeds the
+/// analysis sections (queueing + critical path); benches without an
+/// instrumented run pass `None` and export headline metrics only.
+fn write_metrics(
+    out: &mut String,
+    opts: &RunOptions,
+    bench: &str,
+    metrics: &[(String, MetricValue)],
+    tel: Option<(&Telemetry, SimTime)>,
+) -> Result<()> {
+    if let Some(path) = &opts.metrics_out {
+        std::fs::write(path, metrics_document(bench, opts.fast, metrics, tel))?;
+        out.push_str(&format!(
+            "\nwrote metrics JSON to {path} (diff with `fshmem metrics diff`)\n"
         ));
     }
     Ok(())
@@ -119,9 +150,22 @@ pub fn run_experiment(name: &str, opts: &RunOptions) -> Result<String> {
         "serving" => run_serving(opts),
         "taskgraph" => run_taskgraph(opts),
         "all" => {
+            // Each child bench would overwrite the single metrics file,
+            // leaving whichever ran last — silently wrong for diffing.
+            // Drop the option for children instead.
+            let child = RunOptions {
+                fast: opts.fast,
+                large: opts.large,
+                numerics: opts.numerics,
+                csv_out: opts.csv_out.clone(),
+                shards: opts.shards,
+                engine_threads: opts.engine_threads,
+                trace_out: opts.trace_out.clone(),
+                metrics_out: None,
+            };
             let mut out = String::new();
             for (n, _) in EXPERIMENTS.iter().filter(|(n, _)| *n != "all") {
-                out.push_str(&run_experiment(n, opts)?);
+                out.push_str(&run_experiment(n, &child)?);
                 out.push('\n');
             }
             Ok(out)
@@ -146,7 +190,11 @@ fn run_bandwidth(opts: &RunOptions) -> Result<String> {
     if let Some(path) = &opts.csv_out {
         std::fs::write(path, reports::fig5_csv(&series))?;
     }
-    Ok(reports::fig5_summary(&series))
+    let mut out = reports::fig5_summary(&series);
+    // The sweep aggregates many runs, so there is no single telemetry
+    // stream to analyze — headline metrics only.
+    write_metrics(&mut out, opts, "bandwidth", &sweep::bandwidth_metrics(&series), None)?;
+    Ok(out)
 }
 
 fn run_latency(opts: &RunOptions) -> Result<String> {
@@ -154,9 +202,20 @@ fn run_latency(opts: &RunOptions) -> Result<String> {
     // can show where each microsecond queued (and `--trace-out` can
     // export the full span timeline of the measurement).
     let mut f = Fshmem::new(sweep::latency_config().with_telemetry(bench_telemetry(opts)));
-    let mut out = reports::table3(&sweep::measure_latencies_on(&mut f));
+    let lat = sweep::measure_latencies_on(&mut f);
+    let mut out = reports::table3(&lat);
     let end = f.now();
+    // The measurement is over: force-close any op that never completed
+    // so span counts reconcile with the issued-op counters.
+    f.close_unfinished_ops();
     emit_telemetry(&mut out, opts, f.counters().telemetry(), None, end)?;
+    write_metrics(
+        &mut out,
+        opts,
+        "latency",
+        &sweep::latency_metrics(&lat),
+        Some((f.counters().telemetry(), end)),
+    )?;
     Ok(out)
 }
 
@@ -243,6 +302,7 @@ fn run_scaleout(opts: &RunOptions) -> Result<String> {
     let (tel, tel_shards, end) =
         scaleout::run_instrumented(n, &case, opts.shards, bench_telemetry(opts));
     emit_telemetry(&mut out, opts, &tel, tel_shards.as_ref(), end)?;
+    write_metrics(&mut out, opts, "scaleout", &scaleout::metrics(&rows), Some((&tel, end)))?;
     Ok(out)
 }
 
@@ -256,6 +316,13 @@ fn run_collectives(opts: &RunOptions) -> Result<String> {
     // selector) for the stage tables and the `--trace-out` export.
     let (tel, tel_shards, end) = collectives::run_instrumented(opts.fast, bench_telemetry(opts));
     emit_telemetry(&mut out, opts, &tel, tel_shards.as_ref(), end)?;
+    write_metrics(
+        &mut out,
+        opts,
+        "collectives",
+        &collectives::metrics(&points),
+        Some((&tel, end)),
+    )?;
     Ok(out)
 }
 
@@ -269,6 +336,7 @@ fn run_serving(opts: &RunOptions) -> Result<String> {
     // stage tables and the `--trace-out` export.
     let (tel, tel_shards, end) = serving::run_instrumented(opts.fast, bench_telemetry(opts));
     emit_telemetry(&mut out, opts, &tel, tel_shards.as_ref(), end)?;
+    write_metrics(&mut out, opts, "serving", &serving::metrics(&points), Some((&tel, end)))?;
     Ok(out)
 }
 
@@ -282,6 +350,13 @@ fn run_taskgraph(opts: &RunOptions) -> Result<String> {
     // pipelined variant) for the stage tables and `--trace-out`.
     let (tel, tel_shards, end) = taskgraph::run_instrumented(opts.fast, bench_telemetry(opts));
     emit_telemetry(&mut out, opts, &tel, tel_shards.as_ref(), end)?;
+    write_metrics(
+        &mut out,
+        opts,
+        "taskgraph",
+        &taskgraph::metrics(&points),
+        Some((&tel, end)),
+    )?;
     Ok(out)
 }
 
@@ -325,6 +400,26 @@ mod tests {
         assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
         assert!(trace.contains("\"ph\":\"X\""), "{trace}");
         assert!(trace.contains("\"ph\":\"C\""), "{trace}");
+    }
+
+    #[test]
+    fn latency_writes_metrics_document() {
+        let path = std::env::temp_dir().join(format!("fshmem-metrics-{}.json", std::process::id()));
+        let opts = RunOptions {
+            metrics_out: Some(path.to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        let out = run_experiment("latency", &opts).unwrap();
+        assert!(out.contains("wrote metrics JSON"), "{out}");
+        assert!(out.contains("critical path"), "{out}");
+        let doc = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let json = crate::util::Json::parse(&doc).unwrap();
+        assert_eq!(json.req("schema").unwrap().as_str(), Some("fshmem-metrics-v1"));
+        assert_eq!(json.req("bench").unwrap().as_str(), Some("latency"));
+        let metrics = json.req("metrics").unwrap().as_obj().unwrap();
+        assert!(metrics.contains_key("put_short_us"), "{doc}");
+        assert!(json.req("critical_path").unwrap().get("stages").is_some(), "{doc}");
     }
 
     #[test]

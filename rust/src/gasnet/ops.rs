@@ -126,6 +126,12 @@ pub struct OpState {
     /// striped over k ports carries k wire messages sharing this token
     /// and completes on its k-th ACK.
     pub parts: u32,
+    /// The run ended with this op still incomplete (dropped by ARQ
+    /// exhaustion, failed graph validation, ...) and its terminal span
+    /// was force-closed by [`OpTracker::close_unfinished`]. The op never
+    /// becomes complete — `wait` on it would still block forever — but
+    /// its span count reconciles with the issued-op counters.
+    pub unfinished: bool,
 }
 
 impl OpState {
@@ -170,6 +176,7 @@ impl OpTracker {
                 data_done_at: None,
                 completed_at: None,
                 parts: 1,
+                unfinished: false,
             },
         );
         id
@@ -283,6 +290,22 @@ impl OpTracker {
         self.ops.values().filter(|o| !o.is_complete()).count()
     }
 
+    /// Mark every tracked-but-incomplete op as unfinished and return
+    /// `(id, kind, issued, bytes)` for each, in token order, so the
+    /// caller can close their terminal spans at run end. Ops already
+    /// marked are skipped — calling this twice (e.g. across repeated
+    /// `run_all` fences) emits each op's closing span at most once.
+    pub fn close_unfinished(&mut self) -> Vec<(OpId, OpKind, SimTime, u64)> {
+        let mut closed = Vec::new();
+        for (&id, op) in self.ops.iter_mut() {
+            if !op.is_complete() && !op.unfinished {
+                op.unfinished = true;
+                closed.push((id, op.kind, op.issued, op.bytes));
+            }
+        }
+        closed
+    }
+
     /// Forget finished ops (bandwidth sweeps issue thousands). Once an
     /// origin's counter space is half-consumed, retired counters are
     /// banked for reuse — see the module docs on counter-space
@@ -372,6 +395,19 @@ mod tests {
         t.complete(id, SimTime::from_ns(30));
         assert!(t.is_complete(id));
         assert_eq!(t.get(id).unwrap().completed_at, Some(SimTime::from_ns(30)));
+    }
+
+    #[test]
+    fn close_unfinished_marks_each_incomplete_op_once() {
+        let mut t = OpTracker::new(0);
+        let a = t.issue(OpKind::Put, SimTime::from_ns(1), 64);
+        let b = t.issue(OpKind::Get, SimTime::from_ns(2), 128);
+        t.complete(a, SimTime::from_ns(9));
+        let closed = t.close_unfinished();
+        assert_eq!(closed, vec![(b, OpKind::Get, SimTime::from_ns(2), 128)]);
+        assert!(t.get(b).unwrap().unfinished);
+        assert!(!t.is_complete(b), "unfinished is not completion");
+        assert!(t.close_unfinished().is_empty(), "second close is a no-op");
     }
 
     #[test]

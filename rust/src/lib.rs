@@ -38,6 +38,8 @@
 // `cargo doc --no-deps` with warnings denied to keep it that way (see
 // rust/docs/config.md for the configuration reference).
 #[warn(missing_docs)]
+pub mod analysis;
+#[warn(missing_docs)]
 pub mod api;
 pub mod baselines;
 #[warn(missing_docs)]

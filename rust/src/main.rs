@@ -7,6 +7,8 @@
 //!                           [--csv out.csv] [--shards auto|N|off]
 //!                           [--engine-threads auto|N|off]
 //!                           [--trace-out trace.json]
+//!                           [--metrics-out metrics.json]
+//! fshmem metrics diff <old.json> <new.json> [--tol-pct N]
 //! fshmem run [--config file.cfg]      demo put/get/AM round trip
 //! fshmem list                         available experiments
 //! ```
@@ -57,11 +59,29 @@ fn main() -> Result<()> {
                 shards,
                 engine_threads,
                 trace_out: args.opt("trace-out").map(String::from),
+                metrics_out: args.opt("metrics-out").map(String::from),
             };
             let report = run_experiment(name, &opts)?;
             println!("{report}");
             Ok(())
         }
+        Some("metrics") => match args.positional.first().map(|s| s.as_str()) {
+            Some("diff") => {
+                let usage = "usage: fshmem metrics diff <old.json> <new.json> [--tol-pct N]";
+                let old_path = args.positional.get(1).context(usage)?;
+                let new_path = args.positional.get(2).context(usage)?;
+                let tol_pct = match args.opt("tol-pct") {
+                    None => 5.0,
+                    Some(v) => v
+                        .parse::<f64>()
+                        .with_context(|| format!("--tol-pct expects a number, got '{v}'"))?,
+                };
+                metrics_diff(old_path, new_path, tol_pct)
+            }
+            other => anyhow::bail!(
+                "unknown metrics subcommand {other:?}; available: diff <old.json> <new.json>"
+            ),
+        },
         Some("run") => {
             let cfg = match args.opt("config") {
                 Some(path) => Config::from_file(path).context("loading config")?,
@@ -77,7 +97,7 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "fshmem — PGAS on (simulated) FPGAs
-usage: fshmem <info|list|bench|run> [options]
+usage: fshmem <info|list|bench|metrics|run> [options]
   info                      system + artifact status
   list                      available experiments
   bench <name> [--fast] [--numerics timing|software|pjrt] [--csv f.csv]
@@ -88,12 +108,19 @@ usage: fshmem <info|list|bench|run> [options]
                                                torus to the kilonode section)
                [--trace-out trace.json]       (write a Chrome-trace/Perfetto
                                                span timeline of the run)
+               [--metrics-out metrics.json]   (write the bench's canonical
+                                               metrics document: headline
+                                               numbers + critical-path
+                                               breakdown, byte-stable)
                (collectives: allreduce by algorithm x payload x topology,
                 reproduced on all three engine backends)
                (serving: multi-tenant open-loop traffic — latency tails vs
                 offered load, host write-credit back-pressure, loss sweep)
                (taskgraph: pipeline-parallel streaming through the TaskGraph
                 executor — pipelined vs bulk-synchronous at each depth)
+  metrics diff <old.json> <new.json> [--tol-pct N]
+               compare two --metrics-out documents; exits non-zero when any
+               shared metric moved beyond the tolerance (default 5%)
   run [--config file.cfg]   demo put/get/AM round trip";
 
 fn info() -> Result<()> {
@@ -116,6 +143,32 @@ fn info() -> Result<()> {
             println!("  artifacts: {} compiled kernels: {}", names.len(), names.join(", "));
         }
         Err(e) => println!("  artifacts: not built ({e:#})"),
+    }
+    Ok(())
+}
+
+/// `fshmem metrics diff`: compare two `--metrics-out` documents and
+/// exit non-zero when any metric present in both moved beyond the
+/// relative tolerance (the CI regression guard).
+fn metrics_diff(old_path: &str, new_path: &str, tol_pct: f64) -> Result<()> {
+    let read_doc = |path: &str| -> Result<fshmem::util::Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        fshmem::util::Json::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+    let old = read_doc(old_path)?;
+    let new = read_doc(new_path)?;
+    let diff = fshmem::analysis::diff_metrics(&old, &new, tol_pct)?;
+    print!("{}", diff.render());
+    if diff.compared.is_empty() {
+        anyhow::bail!("no comparable metrics between {old_path} and {new_path}");
+    }
+    if !diff.ok() {
+        anyhow::bail!(
+            "{} of {} shared metrics moved beyond ±{:.1}%",
+            diff.regressions(),
+            diff.compared.len(),
+            tol_pct
+        );
     }
     Ok(())
 }

@@ -182,6 +182,15 @@ impl CreditPool {
     }
 }
 
+/// Outcome of running one issue through the credit pool: the requested
+/// issue time and the (possibly later) effective one. A gap between the
+/// two is a host credit stall, recorded as a `credit_wait` span once the
+/// admitted op's token exists.
+struct Admission {
+    requested: SimTime,
+    effective: SimTime,
+}
+
 /// Engine + address map: the shared substrate of every host front end.
 pub struct IssueCore {
     pub(crate) eng: EngineKind,
@@ -220,12 +229,12 @@ impl IssueCore {
         }
     }
 
-    /// Run `node`'s issue through the write-credit pool: the returned
-    /// time is when the command actually enters the command FIFO (equal
-    /// to `at` under `host_credits = off`, or while a credit is free).
-    /// Front ends advance their virtual clocks to the effective time —
-    /// that is the back-pressure.
-    fn admit(&mut self, node: NodeId, at: SimTime) -> SimTime {
+    /// Run `node`'s issue through the write-credit pool: the admission's
+    /// effective time is when the command actually enters the command
+    /// FIFO (equal to the requested time under `host_credits = off`, or
+    /// while a credit is free). Front ends advance their virtual clocks
+    /// to the effective time — that is the back-pressure.
+    fn admit(&mut self, node: NodeId, at: SimTime) -> Admission {
         let eff = self.credits.admit(node, at);
         if eff > at {
             self.eng.counters_mut().incr("host_credit_stalls");
@@ -233,7 +242,26 @@ impl IssueCore {
                 .counters_mut()
                 .record_latency("host_credit_stall", eff.since(at));
         }
-        eff
+        Admission {
+            requested: at,
+            effective: eff,
+        }
+    }
+
+    /// Record the `credit_wait` stage span of a stalled admission once
+    /// the op token exists, making PCIe write-credit back-pressure
+    /// visible in traces and attributable on the critical path.
+    /// Admissions that did not stall record nothing.
+    fn credit_span(&mut self, node: NodeId, op: crate::gasnet::OpId, adm: &Admission) {
+        if adm.effective > adm.requested {
+            self.eng.counters_mut().span(Span::new(
+                "credit_wait",
+                node,
+                op,
+                adm.requested,
+                adm.effective,
+            ));
+        }
     }
 
     /// Per-shard advance statistics (sharded backends only).
@@ -397,11 +425,13 @@ impl IssueCore {
         self.addr_map
             .translate(dst, data.len() as u64)
             .expect("put destination out of range");
-        let at = self.admit(src_node, at);
+        let adm = self.admit(src_node, at);
+        let at = adm.effective;
         let op = self
             .eng
             .model_mut()
             .issue_op(src_node, OpKind::Put, at, data.len() as u64);
+        self.credit_span(src_node, op, &adm);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -435,8 +465,10 @@ impl IssueCore {
         self.addr_map
             .translate(dst, len)
             .expect("put destination out of range");
-        let at = self.admit(src_node, at);
+        let adm = self.admit(src_node, at);
+        let at = adm.effective;
         let op = self.eng.model_mut().issue_op(src_node, OpKind::Put, at, len);
+        self.credit_span(src_node, op, &adm);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -473,8 +505,10 @@ impl IssueCore {
         self.addr_map
             .translate(src, len)
             .expect("get source out of range");
-        let at = self.admit(node, at);
+        let adm = self.admit(node, at);
+        let at = adm.effective;
         let op = self.eng.model_mut().issue_op(node, OpKind::Get, at, len);
+        self.credit_span(node, op, &adm);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -501,11 +535,13 @@ impl IssueCore {
         handler: u8,
         args: [u32; 4],
     ) -> OpHandle {
-        let at = self.admit(src_node, at);
+        let adm = self.admit(src_node, at);
+        let at = adm.effective;
         let op = self
             .eng
             .model_mut()
             .issue_op(src_node, OpKind::AmRequest, at, 0);
+        self.credit_span(src_node, op, &adm);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -533,13 +569,15 @@ impl IssueCore {
         data: &[u8],
         private_offset: u64,
     ) -> OpHandle {
-        let at = self.admit(src_node, at);
+        let adm = self.admit(src_node, at);
+        let at = adm.effective;
         let op = self.eng.model_mut().issue_op(
             src_node,
             OpKind::AmRequest,
             at,
             data.len() as u64,
         );
+        self.credit_span(src_node, op, &adm);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -567,11 +605,13 @@ impl IssueCore {
         target: NodeId,
         mut job: DlaJob,
     ) -> OpHandle {
-        let at = self.admit(host_node, at);
+        let adm = self.admit(host_node, at);
+        let at = adm.effective;
         let op = self
             .eng
             .model_mut()
             .issue_op(host_node, OpKind::Compute, at, 0);
+        self.credit_span(host_node, op, &adm);
         job.notify = Some((host_node, op));
         self.eng.inject_at(
             at,
@@ -586,8 +626,10 @@ impl IssueCore {
     /// Enter the barrier from `node` at `at`; the handle completes on the
     /// barrier release reaching `node`.
     pub fn barrier_at(&mut self, at: SimTime, node: NodeId) -> OpHandle {
-        let at = self.admit(node, at);
+        let adm = self.admit(node, at);
+        let at = adm.effective;
         let op = self.eng.model_mut().issue_op(node, OpKind::Barrier, at, 0);
+        self.credit_span(node, op, &adm);
         self.eng.inject_at(
             at,
             Event::HostCmd {
@@ -632,6 +674,38 @@ impl IssueCore {
         self.eng
             .counters_mut()
             .span(Span::new("host_wake", node, h.0, completed, completed + wake));
+    }
+
+    /// Close the terminal spans of every op that never completed
+    /// (dropped by ARQ exhaustion, failed validation, ...) at the
+    /// current simulated time, labeled `unfinished`, so exported span
+    /// counts reconcile with the issued-op counters. Each op is closed
+    /// at most once, even across repeated run fences; the ops themselves
+    /// stay incomplete (a `wait` on one still blocks). Nodes are visited
+    /// in global id order, so the emission is identical on every engine
+    /// backend. Returns how many ops were closed.
+    pub fn close_unfinished_ops(&mut self) -> usize {
+        let end = self.eng.now();
+        let mut closed = Vec::new();
+        for node in 0..self.addr_map.nodes {
+            closed.extend(self.eng.model_mut().node_mut(node).ops.close_unfinished());
+        }
+        let c = self.eng.counters_mut();
+        for &(op, kind, issued, bytes) in &closed {
+            let owner = crate::gasnet::op_owner(op);
+            // The host clock can run ahead of the engine cursor (issue
+            // after a wait, before any further event): never close a
+            // span before it opened.
+            let t1 = end.max(issued);
+            c.incr("ops_unfinished");
+            c.span(
+                Span::new(kind.stage(), owner, op, issued, t1)
+                    .with_detail(bytes)
+                    .with_label("unfinished"),
+            );
+            c.gauge("ops_inflight", owner, t1, -1);
+        }
+        closed.len()
     }
 
     /// Timestamps of an op: (issued, header_at, data_done, completed).

@@ -338,6 +338,11 @@ impl Spmd {
                 .collect()
         });
         let end = self.core.run_to_quiescence();
+        // The event queue is drained and every rank program has
+        // returned, so any still-incomplete op can never complete: close
+        // its terminal span as `unfinished` so span counts reconcile
+        // with the issued-op counters.
+        self.core.close_unfinished_ops();
         SpmdReport {
             results,
             finish: ctls.iter().map(|c| c.clock).collect(),

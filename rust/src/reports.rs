@@ -2,6 +2,7 @@
 //! simulation measurements (plus the baseline models where the paper
 //! compares against prior work).
 
+use crate::analysis::SpanGraph;
 use crate::baselines;
 use crate::collectives::Algo;
 use crate::sim::{duration_summary, occupancy_summary, SimTime, Telemetry};
@@ -121,6 +122,102 @@ pub fn stage_tables(t: &Telemetry, end: SimTime) -> String {
     out.push_str(&table::render(
         &["Stage", "Count", "mean (us)", "p50 (us)", "p95 (us)", "p99 (us)", "max (us)"],
         &dur_rows,
+    ));
+    out
+}
+
+/// Performance-introspection report: the per-stage queueing
+/// decomposition (wait vs. service, available from the `counters`
+/// level), then — when the run retained spans — the critical path's
+/// per-stage attribution, the top-k bottleneck segments, and the
+/// per-stage what-if table.
+pub fn critical_path(t: &Telemetry, queue_end: SimTime) -> String {
+    let mut out = String::new();
+    let q = crate::analysis::queueing(t, queue_end);
+    if !q.is_empty() {
+        out.push_str("\nqueueing decomposition (wait vs service):\n");
+        let q_rows: Vec<Vec<String>> = q
+            .iter()
+            .map(|s| {
+                vec![
+                    s.stage.to_string(),
+                    s.spans.to_string(),
+                    f(s.service_ps as f64 / 1e6, 3),
+                    f(s.queued_ps as f64 / 1e6, 3),
+                    format!("{:.1}%", s.wait_share_permille as f64 / 10.0),
+                ]
+            })
+            .collect();
+        out.push_str(&table::render(
+            &["Stage", "Spans", "service (us)", "queued depth-us", "wait share"],
+            &q_rows,
+        ));
+    }
+    let graph = SpanGraph::build(t);
+    let Some(cp) = graph.critical_path() else {
+        return out;
+    };
+    let total = cp.total_ps().max(1);
+    out.push_str(&format!(
+        "\ncritical path ({} segments, {} us of makespan):\n",
+        cp.segments.len(),
+        f(SimTime(cp.total_ps()).as_us(), 3),
+    ));
+    let stage_rows: Vec<Vec<String>> = cp
+        .by_stage()
+        .iter()
+        .map(|s| {
+            vec![
+                s.key.clone(),
+                f(SimTime(s.service_ps).as_us(), 3),
+                f(SimTime(s.wait_ps).as_us(), 3),
+                s.segments.to_string(),
+                format!("{:.1}%", cp.share_permille(s) as f64 / 10.0),
+            ]
+        })
+        .collect();
+    out.push_str(&table::render(
+        &["Stage", "service (us)", "wait (us)", "segments", "share"],
+        &stage_rows,
+    ));
+    out.push_str("\ntop bottleneck segments:\n");
+    let top_rows: Vec<Vec<String>> = cp
+        .top_segments(8)
+        .iter()
+        .map(|s| {
+            vec![
+                s.stage.to_string(),
+                format!("node{}", s.node),
+                s.class.to_string(),
+                f(SimTime(s.from_ps).as_us(), 3),
+                f(SimTime(s.total_ps()).as_us(), 3),
+                format!("{:.1}%", s.total_ps() as f64 * 100.0 / total as f64),
+            ]
+        })
+        .collect();
+    out.push_str(&table::render(
+        &["Stage", "Node", "Class", "at (us)", "contributes (us)", "share"],
+        &top_rows,
+    ));
+    let baseline = graph.what_if("", 1);
+    out.push_str(&format!(
+        "\nwhat-if (each stage 2x faster; modeled baseline {} us):\n",
+        f(SimTime(baseline).as_us(), 3)
+    ));
+    let what_rows: Vec<Vec<String>> = graph
+        .what_if_table(&cp, 2)
+        .iter()
+        .map(|w| {
+            vec![
+                w.stage.clone(),
+                f(SimTime(w.makespan_ps).as_us(), 3),
+                format!("{:.2}x", baseline as f64 / w.makespan_ps.max(1) as f64),
+            ]
+        })
+        .collect();
+    out.push_str(&table::render(
+        &["Stage 2x", "modeled makespan (us)", "modeled gain"],
+        &what_rows,
     ));
     out
 }

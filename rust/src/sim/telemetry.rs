@@ -289,6 +289,12 @@ impl LogHistogram {
         SimTime(self.max)
     }
 
+    /// Exact sum of all recorded durations (ps) — service time for the
+    /// queueing decomposition in `analysis`.
+    pub fn total_ps(&self) -> u128 {
+        self.sum
+    }
+
     /// Mean recorded duration.
     pub fn mean(&self) -> SimTime {
         if self.count == 0 {
@@ -301,6 +307,18 @@ impl LogHistogram {
     /// Nearest-rank percentile, resolved to the containing bucket's
     /// upper bound and clamped to the observed `[min, max]`. `p` in
     /// `[0, 100]`.
+    ///
+    /// # Error bound
+    ///
+    /// Buckets are powers of two, so for any positive sample value `x`
+    /// the containing bucket's upper bound `2^⌈log2(x+1)⌉ - 1` satisfies
+    /// `x ≤ upper < 2x`: the bucketed percentile is **never below** the
+    /// exact nearest-rank percentile of the same samples and **less than
+    /// 2× above** it. The clamp makes the extremes exact — `p0` resolves
+    /// to at most the observed minimum's bucket (clamped to `min`) and
+    /// `p100` to exactly `max`. A property test in
+    /// `rust/tests/properties.rs` cross-checks this bound against the
+    /// exact percentiles of retained latency series.
     pub fn percentile(&self, p: f64) -> SimTime {
         if self.count == 0 {
             return SimTime::ZERO;
@@ -543,6 +561,7 @@ fn stage_tid(stage: &'static str) -> (u32, &'static str) {
         "rx" => (3, "rx"),
         "dla" => (4, "dla"),
         "host_wake" => (6, "host_wake"),
+        "credit_wait" => (7, "credit_wait"),
         _ => (5, "op"),
     }
 }

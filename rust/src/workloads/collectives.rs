@@ -14,6 +14,7 @@
 //! auto's pick strictly beats it — the report computes exactly that
 //! (see `reports::collectives`).
 
+use crate::analysis::MetricValue;
 use crate::collectives::{spmd, Algo};
 use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::fabric::Topology;
@@ -198,6 +199,20 @@ pub fn run_sweep(fast: bool) -> Vec<CollectivesPoint> {
         }
     }
     out
+}
+
+/// Headline metrics of the collectives bench for `--metrics-out`: the
+/// `auto` selector's allreduce time at every swept point.
+pub fn metrics(points: &[CollectivesPoint]) -> Vec<(String, MetricValue)> {
+    points
+        .iter()
+        .map(|p| {
+            (
+                format!("allreduce_auto_{}_{}f16_us", p.topo, p.count),
+                MetricValue::Us(p.auto),
+            )
+        })
+        .collect()
 }
 
 #[cfg(test)]

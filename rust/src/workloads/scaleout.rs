@@ -25,6 +25,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::analysis::MetricValue;
 use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::dla::{DlaJob, DlaOp};
 use crate::fabric::Topology;
@@ -503,6 +504,22 @@ pub fn run_sweep(
         });
     }
     rows
+}
+
+/// Headline metrics of the scale-out bench for `--metrics-out`: one
+/// speedup + makespan pair per swept node count.
+pub fn metrics(rows: &[ScaleoutRow]) -> Vec<(String, MetricValue)> {
+    rows.iter()
+        .flat_map(|r| {
+            [
+                (format!("speedup_{}n", r.nodes), MetricValue::F64(r.speedup)),
+                (
+                    format!("elapsed_{}n_us", r.nodes),
+                    MetricValue::Us(r.elapsed),
+                ),
+            ]
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -18,6 +18,7 @@
 //! gauges), and the saturation knee: the first clean-load point whose
 //! small-GET p99 blows past the lowest load's tail.
 
+use crate::analysis::MetricValue;
 use crate::api::OpHandle;
 use crate::config::{Config, HostCredits, Numerics, ServingArrival};
 use crate::dla::{DlaJob, DlaOp};
@@ -369,6 +370,32 @@ pub fn saturation_knee(points: &[ServingPoint]) -> Option<&ServingPoint> {
     clean
         .into_iter()
         .find(|p| p.class(OpClass::Get).p99.as_ps() > 3 * base.as_ps())
+}
+
+/// Headline metrics of the serving bench for `--metrics-out`: the
+/// saturation knee (when the sweep reaches one) and the per-class p99
+/// at the highest clean-link offered load.
+pub fn metrics(points: &[ServingPoint]) -> Vec<(String, MetricValue)> {
+    let mut m = Vec::new();
+    if let Some(k) = saturation_knee(points) {
+        m.push((
+            "knee_load_pct".to_string(),
+            MetricValue::Count(k.load_pct as u64),
+        ));
+    }
+    if let Some(p) = points
+        .iter()
+        .filter(|p| p.loss_permille == 0)
+        .max_by_key(|p| p.load_pct)
+    {
+        for c in &p.classes {
+            m.push((
+                format!("p99_{}_at_{}pct_us", c.class.name(), p.load_pct),
+                MetricValue::Us(c.p99),
+            ));
+        }
+    }
+    m
 }
 
 /// One representative point (400% load, clean links) rerun at the given

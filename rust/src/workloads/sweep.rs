@@ -8,6 +8,7 @@
 //! (command issue → last byte landed at the requester); latency = command
 //! issue → message header at the far end (PUT) / reply header back (GET).
 
+use crate::analysis::MetricValue;
 use crate::api::Fshmem;
 use crate::config::{Config, Numerics};
 
@@ -222,6 +223,37 @@ pub fn measure_latencies_on(f: &mut Fshmem) -> LatencyResults {
         put_long_us: put_acc / n as f64,
         get_long_us: get_acc / n as f64,
     }
+}
+
+/// Headline metrics of the latency bench for `--metrics-out` (the
+/// Table III figures, paper-pinned in `BENCH_BASELINE.json`).
+pub fn latency_metrics(lat: &LatencyResults) -> Vec<(String, MetricValue)> {
+    vec![
+        ("put_short_us".into(), MetricValue::F64(lat.put_short_us)),
+        ("get_short_us".into(), MetricValue::F64(lat.get_short_us)),
+        ("put_long_us".into(), MetricValue::F64(lat.put_long_us)),
+        ("get_long_us".into(), MetricValue::F64(lat.get_long_us)),
+    ]
+}
+
+/// Headline metrics of the bandwidth bench for `--metrics-out` (the
+/// Fig. 5 peaks, one pair per measured packet size).
+pub fn bandwidth_metrics(series: &[BandwidthSeries]) -> Vec<(String, MetricValue)> {
+    series
+        .iter()
+        .flat_map(|s| {
+            [
+                (
+                    format!("peak_put_mb_s_pkt{}", s.packet_size),
+                    MetricValue::F64(s.peak_put()),
+                ),
+                (
+                    format!("peak_get_mb_s_pkt{}", s.packet_size),
+                    MetricValue::F64(s.peak_get()),
+                ),
+            ]
+        })
+        .collect()
 }
 
 #[cfg(test)]

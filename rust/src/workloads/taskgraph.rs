@@ -19,6 +19,7 @@
 //! engine backends and must agree on the simulated makespan (the sweep
 //! doubles as an end-to-end equivalence check, like `bench collectives`).
 
+use crate::analysis::MetricValue;
 use crate::config::{Config, Numerics, ShardSpec, ThreadSpec};
 use crate::dla::{ArtConfig, DlaJob, DlaOp};
 use crate::memory::GlobalAddr;
@@ -217,6 +218,26 @@ pub fn run_sweep(fast: bool) -> Vec<TaskgraphPoint> {
     stage_counts(fast)
         .into_iter()
         .map(|stages| run_point(&case, stages))
+        .collect()
+}
+
+/// Headline metrics of the taskgraph bench for `--metrics-out`: the
+/// pipelined makespan and recovered pipelining speedup per swept depth.
+pub fn metrics(points: &[TaskgraphPoint]) -> Vec<(String, MetricValue)> {
+    points
+        .iter()
+        .flat_map(|p| {
+            [
+                (
+                    format!("makespan_pipelined_{}st_us", p.stages),
+                    MetricValue::Us(p.pipelined),
+                ),
+                (
+                    format!("pipeline_speedup_{}st", p.stages),
+                    MetricValue::F64(p.pipeline_speedup),
+                ),
+            ]
+        })
         .collect()
 }
 

@@ -1,0 +1,149 @@
+//! Integration suite for the `analysis` layer: metrics-document schema
+//! and byte stability, the critical-path attribution bound the PR's
+//! acceptance criterion pins (stage shares sum to the measured remote
+//! write latency), regression diffing, and unfinished-op span
+//! reconciliation.
+
+use fshmem::analysis::{diff_metrics, metrics_document, MetricValue, SpanGraph};
+use fshmem::config::{Config, Numerics};
+use fshmem::program::Spmd;
+use fshmem::sim::TelemetryLevel;
+use fshmem::util::Json;
+use fshmem::Fshmem;
+
+/// One fixed SPMD traffic run exported as a metrics document.
+fn traffic_document() -> String {
+    let mut s = Spmd::new(
+        Config::ring(4).with_numerics(Numerics::TimingOnly).with_telemetry(TelemetryLevel::Spans),
+    );
+    let report = s.run(|r| {
+        let peer = (r.id() + 1) % r.nodes();
+        let h = r.put(r.global_addr(peer, 0x100), &[r.id() as u8; 4096]);
+        r.wait(h);
+        let h = r.get(r.global_addr(peer, 0x100), 0x8000, 512);
+        r.wait(h);
+        r.barrier();
+    });
+    let metrics = vec![
+        ("end_us".to_string(), MetricValue::Us(report.end)),
+        ("events".to_string(), MetricValue::Count(s.events_processed())),
+    ];
+    metrics_document("traffic", true, &metrics, Some((s.counters().telemetry(), report.end)))
+}
+
+#[test]
+fn metrics_document_is_byte_stable_with_required_schema() {
+    let a = traffic_document();
+    let b = traffic_document();
+    assert_eq!(a, b, "two identical runs must export identical bytes");
+
+    let doc = Json::parse(&a).expect("document is valid JSON");
+    assert_eq!(doc.req("schema").unwrap().as_str(), Some("fshmem-metrics-v1"));
+    assert_eq!(doc.req("bench").unwrap().as_str(), Some("traffic"));
+    assert_eq!(doc.req("fast").unwrap().as_bool(), Some(true));
+    let metrics = doc.req("metrics").unwrap().as_obj().expect("metrics object");
+    assert!(metrics.contains_key("end_us"), "{a}");
+    assert!(metrics.contains_key("events"), "{a}");
+
+    let spans = doc.req("spans").unwrap();
+    assert!(spans.req("recorded").unwrap().as_f64().unwrap() > 0.0, "{a}");
+    assert_eq!(spans.req("unfinished").unwrap().as_f64(), Some(0.0), "{a}");
+    assert!(!doc.req("queueing").unwrap().as_arr().unwrap().is_empty(), "{a}");
+    let cp = doc.req("critical_path").unwrap();
+    for key in [
+        "start_us",
+        "end_us",
+        "total_us",
+        "stages",
+        "nodes",
+        "classes",
+        "top_segments",
+        "what_if",
+    ] {
+        assert!(cp.get(key).is_some(), "critical_path.{key} missing:\n{a}");
+    }
+}
+
+#[test]
+fn critical_path_attribution_sums_to_remote_write_latency() {
+    // The PR's acceptance bound: the critical path to a remote write's
+    // completion must attribute the measured latency to stages within
+    // 1%. (The segments telescope by construction, so it is exact.)
+    let mut f = Fshmem::new(
+        Config::two_node_ring()
+            .with_numerics(Numerics::TimingOnly)
+            .with_telemetry(TelemetryLevel::Spans),
+    );
+    let data = vec![0x5Au8; 4096];
+    let h = f.put(0, f.global_addr(1, 0x1000), &data);
+    f.wait(h);
+    let (issued, _, _, completed) = f.op_times(h);
+    let lat_ps = completed.expect("put completed").since(issued).as_ps();
+    assert!(lat_ps > 0);
+
+    let t = f.counters().telemetry();
+    let graph = SpanGraph::build(t);
+    let op =
+        t.sorted_spans().iter().find(|s| s.stage == "op:put").expect("terminal put span").op;
+    let cp = graph.critical_path_to_op(op).expect("path to the put");
+    assert_eq!(cp.end_ps, completed.unwrap().as_ps(), "path ends at completion");
+
+    let total = cp.total_ps();
+    let seg_sum: u64 = cp.segments.iter().map(|s| s.total_ps()).sum();
+    assert_eq!(seg_sum, total, "segments tile the path exactly");
+    let stage_sum: u64 = cp.by_stage().iter().map(|s| s.total_ps()).sum();
+    assert_eq!(stage_sum, total, "stage attribution sums to the path");
+    assert!(
+        total.abs_diff(lat_ps) * 100 <= lat_ps,
+        "path total {total} ps vs measured latency {lat_ps} ps is beyond 1%"
+    );
+}
+
+#[test]
+fn metrics_diff_flags_regressions_beyond_tolerance() {
+    let mk = |v: f64| {
+        let m = vec![("put_short_us".to_string(), MetricValue::F64(v))];
+        metrics_document("latency", true, &m, None)
+    };
+    let old = Json::parse(&mk(0.21)).unwrap();
+    // +4.8% stays inside a 5% tolerance; +43% must fail it.
+    let drifted = Json::parse(&mk(0.22)).unwrap();
+    let regressed = Json::parse(&mk(0.30)).unwrap();
+
+    let d = diff_metrics(&old, &drifted, 5.0).unwrap();
+    assert!(d.ok() && d.regressions() == 0, "{}", d.render());
+    let d = diff_metrics(&old, &regressed, 5.0).unwrap();
+    assert!(!d.ok() && d.regressions() == 1, "{}", d.render());
+    assert!(d.render().contains("FAIL"), "{}", d.render());
+}
+
+#[test]
+fn unfinished_ops_get_terminal_spans_that_reconcile_counters() {
+    let mut f = Fshmem::new(
+        Config::two_node_ring()
+            .with_numerics(Numerics::TimingOnly)
+            .with_telemetry(TelemetryLevel::Spans),
+    );
+    let done = f.put(0, f.global_addr(1, 0), &[1u8; 256]);
+    f.wait(done);
+    let h = f.put(0, f.global_addr(1, 0x100), &[2u8; 256]);
+    assert!(!f.test(h), "second put still in flight");
+
+    assert_eq!(f.close_unfinished_ops(), 1);
+    assert_eq!(f.close_unfinished_ops(), 0, "each op closes at most once");
+    assert_eq!(f.counters().get("ops_unfinished"), 1);
+
+    let t = f.counters().telemetry();
+    let terminal: Vec<_> =
+        t.sorted_spans().into_iter().filter(|s| s.stage == "op:put").collect();
+    assert_eq!(terminal.len(), 2, "every issued op has a terminal span");
+    assert_eq!(terminal.iter().filter(|s| s.label == "unfinished").count(), 1);
+    for s in &terminal {
+        assert!(s.t1 >= s.t0, "terminal spans never end before they start");
+    }
+
+    // The export surfaces the reconciliation.
+    let doc = metrics_document("x", true, &[], Some((t, f.now())));
+    let json = Json::parse(&doc).unwrap();
+    assert_eq!(json.req("spans").unwrap().req("unfinished").unwrap().as_f64(), Some(1.0), "{doc}");
+}

@@ -287,6 +287,29 @@ fn telemetry_trace_compatible_under_threads() {
 }
 
 #[test]
+fn metrics_document_byte_equal_under_threads() {
+    // The `--metrics-out` document is rendered from the canonically
+    // sorted span view, so the threaded backend must export the exact
+    // same bytes as the sequential sharded engine — the regression-diff
+    // workflow depends on it.
+    use fshmem::analysis::{metrics_document, MetricValue};
+    use fshmem::sim::TelemetryLevel;
+    let seed = 0x3EC5;
+    let run = |threads: ThreadSpec| {
+        let mut s = Spmd::new(
+            pcfg(Config::ring(6), ShardSpec::Auto, threads).with_telemetry(TelemetryLevel::Spans),
+        );
+        let report = s.run(|r| random_program(r, seed, 2, 4));
+        let metrics = vec![("end_us".to_string(), MetricValue::Us(report.end))];
+        metrics_document("traffic", true, &metrics, Some((s.counters().telemetry(), report.end)))
+    };
+    let seq = run(ThreadSpec::Off);
+    assert!(seq.contains("critical_path"), "{seq}");
+    assert_eq!(seq, run(ThreadSpec::Auto), "auto threads");
+    assert_eq!(seq, run(ThreadSpec::Count(2)), "2 threads");
+}
+
+#[test]
 #[ignore = "wall-clock perf assertion; CI runs it in the scaleout-wallclock job"]
 fn timing_only_pool_wall_clock_smoke() {
     // The persistent-pool acceptance bar: on a timing-only >= 64-node

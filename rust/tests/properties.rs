@@ -223,6 +223,65 @@ fn prop_art_chunking_invariant() {
 }
 
 #[test]
+fn prop_histogram_percentiles_bound_exact_nearest_rank() {
+    // The log-bucket percentile's documented resolution bound (see
+    // `LogHistogram::percentile`): never below the exact nearest-rank
+    // percentile of the same samples, less than 2x above it, and exact
+    // at the extremes. Checked both on a raw histogram and through the
+    // `duration_summary` reporting path.
+    use fshmem::sim::{duration_summary, LogHistogram, SimTime, Span, Telemetry, TelemetryLevel};
+    forall("hist-percentile-bound", 0x9C7, 32, |rng| {
+        let n = rng.range(1, 300) as usize;
+        let mut h = LogHistogram::default();
+        let mut t = Telemetry::default();
+        t.set_level(TelemetryLevel::Counters);
+        let mut samples: Vec<u64> = Vec::with_capacity(n);
+        let mut at = 0u64;
+        for i in 0..n {
+            // Log-uniform magnitudes: sub-ps to ~1 us-scale spans.
+            let v = rng.below(1u64 << rng.range(1, 40));
+            samples.push(v);
+            h.record(SimTime::from_ps(v));
+            t.span(Span::new(
+                "stage",
+                0,
+                i as u32,
+                SimTime::from_ps(at),
+                SimTime::from_ps(at + v),
+            ));
+            at += v + 1;
+        }
+        samples.sort_unstable();
+        let exact = |p: f64| {
+            let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+            samples[rank - 1]
+        };
+        let check_bound = |b: u64, p: f64| {
+            let e = exact(p);
+            assert!(b >= e, "p{p}: bucketed {b} below exact {e}");
+            if e == 0 {
+                assert_eq!(b, 0, "p{p}: zero samples resolve exactly");
+            } else {
+                assert!(b < 2 * e, "p{p}: bucketed {b} not within 2x of exact {e}");
+            }
+        };
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            check_bound(h.percentile(p).as_ps(), p);
+        }
+        assert_eq!(h.percentile(100.0).as_ps(), *samples.last().unwrap(), "p100 is the exact max");
+        assert_eq!(h.count(), n as u64);
+
+        let summary = duration_summary(&t);
+        let s = summary.iter().find(|s| s.stage == "stage").unwrap();
+        assert_eq!(s.count, n as u64);
+        assert_eq!(s.max.as_ps(), *samples.last().unwrap());
+        for (b, p) in [(s.p50, 50.0), (s.p95, 95.0), (s.p99, 99.0)] {
+            check_bound(b.as_ps(), p);
+        }
+    });
+}
+
+#[test]
 fn prop_f16_roundtrip_and_order() {
     check("f16-order", 0xF16, |rng| {
         let a = (rng.f64() as f32 - 0.5) * 2e4;

@@ -294,6 +294,32 @@ fn telemetry_spans_bit_identical_across_shards() {
 }
 
 #[test]
+fn critical_path_bit_identical_across_shards() {
+    // The analysis layer is a pure function of the recorded spans, so
+    // the critical path — segments, attribution, what-if estimates —
+    // must be bit-identical under any shard layout.
+    use fshmem::analysis::SpanGraph;
+    use fshmem::sim::TelemetryLevel;
+    let seed = 0xCA5A1;
+    let capture = |shards: ShardSpec| {
+        let mut s = Spmd::new(
+            timing(Config::ring(6)).with_shards(shards).with_telemetry(TelemetryLevel::Spans),
+        );
+        s.run(|r| {
+            random_program(r, seed, 2, 4);
+        });
+        let g = SpanGraph::build(s.counters().telemetry());
+        let cp = g.critical_path().expect("spans recorded");
+        assert!(!cp.segments.is_empty());
+        (format!("{cp:?}"), format!("{:?}", cp.by_stage()), g.what_if("wire", 2), g.len())
+    };
+    let mono = capture(ShardSpec::Off);
+    assert!(mono.3 > 0, "graph has spans");
+    assert_eq!(mono, capture(ShardSpec::Auto), "auto shards");
+    assert_eq!(mono, capture(ShardSpec::Count(2)), "2 shards");
+}
+
+#[test]
 fn kilonode_fabric_does_not_alias_op_owners() {
     // 1024 nodes exceeds the op token's former 8-bit owner field (nodes
     // 256 apart collided); handles issued by distant nodes must stay
